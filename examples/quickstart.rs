@@ -1,0 +1,33 @@
+//! Quickstart: three GRPO iterations on the tiny model, auto-scheduled.
+//!
+//! ```text
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+//!
+//! Demonstrates the whole public API surface in ~30 lines: build a config,
+//! pick a placement mode, run, inspect the report.
+
+use rlinf::config::{PlacementMode, RunConfig};
+use rlinf::util::fmt;
+use rlinf::workflow::reasoning::{run_grpo, RunnerOpts};
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = RunConfig::default();
+    cfg.model = "tiny".into();
+    cfg.artifacts_dir = "artifacts".into();
+    cfg.iters = 3;
+    cfg.cluster.devices_per_node = 2;
+    cfg.rollout.batch = 8;
+    cfg.rollout.group_size = 4;
+    cfg.rollout.max_new = 16;
+    cfg.sched.mode = PlacementMode::Hybrid;
+    cfg.sched.gen_devices = 1;
+
+    let report = run_grpo(&cfg, &RunnerOpts { verbose: true, ..Default::default() })?;
+
+    println!("\nmode={} mean throughput: {} tokens/s", report.mode, fmt::count(report.mean_throughput()));
+    for (phase, secs) in &report.breakdown {
+        println!("  {phase:<12} {}", fmt::secs(*secs));
+    }
+    Ok(())
+}

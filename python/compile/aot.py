@@ -1,0 +1,296 @@
+"""AOT compiler: lower every L2 computation to HLO *text* artifacts.
+
+Python's only runtime role ends here. Each jitted function is lowered to
+StableHLO, converted to an XlaComputation, and dumped as HLO **text** (not a
+serialized ``HloModuleProto``: jax ≥ 0.5 emits 64-bit instruction ids that
+the runtime's xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly — see /opt/xla-example/README.md).
+
+Outputs land in ``artifacts/``:
+  * ``<model>_<phase>[_b<B>|_mb<MB>].hlo.txt`` — one module per (model,
+    phase, batch-granularity) variant. Multiple batch variants are what the
+    coordinator's *elastic pipelining* switches between at runtime.
+  * ``manifest.json`` — machine-readable contract: model configs, flat
+    parameter layout, and per-artifact input/output signatures. The Rust
+    runtime is driven entirely by this file.
+
+Incremental: artifacts are re-lowered only when the hash of the compile
+package changes (stored alongside as ``.src_hash``).
+
+Usage: ``python -m compile.aot [--out-dir ../artifacts] [--models tiny,...]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import embodied, model
+
+# Batch-size variants offered to the elastic pipeliner. Generation/inference
+# can run any of these granularities; the scheduler picks per plan.
+GEN_BATCHES = [4, 8, 16, 32]
+LOGPROB_BATCHES = [4, 8, 16, 32]
+TRAIN_MICRO_BATCHES = [4, 8]
+ACT_BATCHES = [64, 256, 512]
+EMB_TRAIN_N = [2048]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sig(args) -> list[dict]:
+    out = []
+    for name, a in args:
+        out.append({"name": name, "dtype": str(a.dtype), "shape": list(a.shape)})
+    return out
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _src_hash() -> str:
+    h = hashlib.sha256()
+    pkg = os.path.dirname(os.path.abspath(__file__))
+    for root, _, files in sorted(os.walk(pkg)):
+        for f in sorted(files):
+            if f.endswith(".py"):
+                with open(os.path.join(root, f), "rb") as fh:
+                    h.update(fh.read())
+    return h.hexdigest()[:16]
+
+
+class Emitter:
+    def __init__(self, out_dir: str, src_hash: str):
+        self.out_dir = out_dir
+        self.src_hash = src_hash
+        self.n_lowered = 0
+        self.n_cached = 0
+
+    def emit(self, fname: str, fn, named_args: list[tuple[str, jax.ShapeDtypeStruct]],
+             outputs: list[tuple[str, tuple, str]]) -> dict:
+        """Lower ``fn(*specs)`` to ``<fname>.hlo.txt`` unless cached."""
+        path = os.path.join(self.out_dir, fname + ".hlo.txt")
+        hpath = path + ".src_hash"
+        entry = {
+            "file": fname + ".hlo.txt",
+            "inputs": _sig(named_args),
+            "outputs": [{"name": n, "shape": list(s), "dtype": d} for n, s, d in outputs],
+        }
+        if os.path.exists(path) and os.path.exists(hpath):
+            if open(hpath).read().strip() == self.src_hash:
+                self.n_cached += 1
+                return entry
+        specs = [a for _, a in named_args]
+        text = to_hlo_text(jax.jit(fn).lower(*specs))
+        with open(path, "w") as f:
+            f.write(text)
+        with open(hpath, "w") as f:
+            f.write(self.src_hash)
+        self.n_lowered += 1
+        print(f"  lowered {fname} ({len(text) // 1024} KiB)", flush=True)
+        return entry
+
+
+def emit_transformer(em: Emitter, cfg: model.ModelConfig) -> dict:
+    specs = cfg.param_specs()
+    n = len(specs)
+    pspecs = [(name, _spec(shape)) for name, shape in specs]
+    pshapes = [s for _, s in specs]
+    l, h, dh, s_max = cfg.n_layers, cfg.n_heads, cfg.d_head, cfg.max_seq
+    p_len, t_max, v = cfg.prompt_len, cfg.max_seq, cfg.vocab
+
+    arts: dict = {}
+    arts["init"] = em.emit(
+        f"{cfg.name}_init",
+        lambda seed: model.init(cfg, seed),
+        [("seed", _spec((), jnp.uint32))],
+        [(name, shape, "float32") for name, shape in specs],
+    )
+
+    arts["prefill"] = []
+    for b in GEN_BATCHES:
+        cache = (l, b, h, s_max, dh)
+        arts["prefill"].append({"batch": b, **em.emit(
+            f"{cfg.name}_prefill_b{b}",
+            lambda *a: model.prefill(cfg, a[:n], a[n]),
+            pspecs + [("tokens", _spec((b, p_len), jnp.int32))],
+            [("last_logits", (b, v), "float32"),
+             ("kc", cache, "float32"), ("vc", cache, "float32")],
+        )})
+
+    arts["decode"] = []
+    for b in GEN_BATCHES:
+        cache = (l, b, h, s_max, dh)
+        arts["decode"].append({"batch": b, **em.emit(
+            f"{cfg.name}_decode_b{b}",
+            lambda *a: model.decode_step(cfg, a[:n], a[n], a[n + 1], a[n + 2], a[n + 3]),
+            pspecs + [("kc", _spec(cache)), ("vc", _spec(cache)),
+                      ("token", _spec((b,), jnp.int32)), ("pos", _spec((), jnp.int32))],
+            [("logits", (b, v), "float32"),
+             ("kc", cache, "float32"), ("vc", cache, "float32")],
+        )})
+
+    arts["logprob"] = []
+    for b in LOGPROB_BATCHES:
+        arts["logprob"].append({"batch": b, **em.emit(
+            f"{cfg.name}_logprob_b{b}",
+            lambda *a: model.logprob(cfg, a[:n], a[n]),
+            pspecs + [("tokens", _spec((b, t_max), jnp.int32))],
+            [("logprob", (b, t_max), "float32")],
+        )})
+
+    arts["sft"] = []
+    for mb in TRAIN_MICRO_BATCHES:
+        def sfn(*a, mb=mb):
+            return model.sft_step(cfg, a[:n], a[n:2 * n], a[2 * n:3 * n], a[3 * n],
+                                  a[3 * n + 1], a[3 * n + 2], a[3 * n + 3])
+        named = (pspecs
+                 + [("m." + name, _spec(shape)) for name, shape in specs]
+                 + [("v." + name, _spec(shape)) for name, shape in specs]
+                 + [("step", _spec((), jnp.int32)),
+                    ("tokens", _spec((mb, t_max), jnp.int32)),
+                    ("mask", _spec((mb, t_max))),
+                    ("lr", _spec(()))])
+        outs = ([(name, shape, "float32") for name, shape in specs]
+                + [("m." + name, shape, "float32") for name, shape in specs]
+                + [("v." + name, shape, "float32") for name, shape in specs]
+                + [("loss", (), "float32"), ("token_acc", (), "float32")])
+        arts["sft"].append({"mb": mb, **em.emit(f"{cfg.name}_sft_mb{mb}", sfn, named, outs)})
+
+    arts["train"] = []
+    for mb in TRAIN_MICRO_BATCHES:
+        def tfn(*a, mb=mb):
+            return model.train_step(
+                cfg, a[:n], a[n:2 * n], a[2 * n:3 * n], a[3 * n],
+                a[3 * n + 1], a[3 * n + 2], a[3 * n + 3], a[3 * n + 4], a[3 * n + 5])
+        named = (pspecs
+                 + [("m." + name, _spec(shape)) for name, shape in specs]
+                 + [("v." + name, _spec(shape)) for name, shape in specs]
+                 + [("step", _spec((), jnp.int32)),
+                    ("tokens", _spec((mb, t_max), jnp.int32)),
+                    ("logp_old", _spec((mb, t_max))),
+                    ("adv", _spec((mb,))),
+                    ("mask", _spec((mb, t_max))),
+                    ("lr", _spec(()))])
+        outs = ([(name, shape, "float32") for name, shape in specs]
+                + [("m." + name, shape, "float32") for name, shape in specs]
+                + [("v." + name, shape, "float32") for name, shape in specs]
+                + [("loss", (), "float32"), ("mean_ratio", (), "float32"),
+                   ("clip_frac", (), "float32"), ("grad_norm", (), "float32")])
+        arts["train"].append({"mb": mb, **em.emit(f"{cfg.name}_train_mb{mb}", tfn, named, outs)})
+
+    return {
+        "kind": "transformer",
+        "vocab": v, "d_model": cfg.d_model, "n_layers": l, "n_heads": h,
+        "prompt_len": p_len, "max_new": cfg.max_new, "max_seq": s_max,
+        "params": [{"name": nm, "shape": list(sh)} for nm, sh in specs],
+        "artifacts": arts,
+    }
+
+
+def emit_policy(em: Emitter, cfg: embodied.PolicyConfig) -> dict:
+    specs = cfg.param_specs()
+    n = len(specs)
+    pspecs = [(name, _spec(shape)) for name, shape in specs]
+
+    arts: dict = {}
+    arts["init"] = em.emit(
+        f"{cfg.name}_init",
+        lambda seed: embodied.init(cfg, seed),
+        [("seed", _spec((), jnp.uint32))],
+        [(name, shape, "float32") for name, shape in specs],
+    )
+
+    arts["act"] = []
+    for b in ACT_BATCHES:
+        arts["act"].append({"batch": b, **em.emit(
+            f"{cfg.name}_act_b{b}",
+            lambda *a: embodied.act(cfg, a[:n], a[n]),
+            pspecs + [("obs", _spec((b, cfg.obs_dim)))],
+            [("logits", (b, cfg.n_actions), "float32"), ("value", (b,), "float32"),
+             ("logp", (b, cfg.n_actions), "float32")],
+        )})
+
+    arts["train"] = []
+    for nt in EMB_TRAIN_N:
+        def tfn(*a, nt=nt):
+            return embodied.train_step(
+                cfg, a[:n], a[n:2 * n], a[2 * n:3 * n], a[3 * n],
+                a[3 * n + 1], a[3 * n + 2], a[3 * n + 3], a[3 * n + 4],
+                a[3 * n + 5], a[3 * n + 6])
+        named = (pspecs
+                 + [("m." + name, _spec(shape)) for name, shape in specs]
+                 + [("v." + name, _spec(shape)) for name, shape in specs]
+                 + [("step", _spec((), jnp.int32)), ("obs", _spec((nt, cfg.obs_dim))),
+                    ("actions", _spec((nt,), jnp.int32)), ("logp_old", _spec((nt,))),
+                    ("adv", _spec((nt,))), ("returns", _spec((nt,))), ("lr", _spec(()))])
+        outs = ([(name, shape, "float32") for name, shape in specs]
+                + [("m." + name, shape, "float32") for name, shape in specs]
+                + [("v." + name, shape, "float32") for name, shape in specs]
+                + [("loss", (), "float32"), ("pg_loss", (), "float32"),
+                   ("vf_loss", (), "float32"), ("entropy", (), "float32"),
+                   ("clip_frac", (), "float32")])
+        arts["train"].append({"n": nt, **em.emit(f"{cfg.name}_train_n{nt}", tfn, named, outs)})
+
+    return {
+        "kind": "policy",
+        "obs_dim": cfg.obs_dim, "n_actions": cfg.n_actions,
+        "hidden": cfg.hidden, "n_hidden": cfg.n_hidden,
+        "params": [{"name": nm, "shape": list(sh)} for nm, sh in specs],
+        "artifacts": arts,
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--models", default="tiny,pickplace",
+                    help="comma list from: " + ",".join(list(model.CONFIGS) + list(embodied.CONFIGS)))
+    args = ap.parse_args()
+
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+    em = Emitter(out_dir, _src_hash())
+    wanted = [m.strip() for m in args.models.split(",") if m.strip()]
+
+    manifest_path = os.path.join(out_dir, "manifest.json")
+    manifest = {"version": 1, "models": {}}
+    if os.path.exists(manifest_path):
+        try:
+            manifest = json.load(open(manifest_path))
+        except Exception:
+            pass
+
+    for name in wanted:
+        print(f"[aot] {name}", flush=True)
+        if name in model.CONFIGS:
+            manifest["models"][name] = emit_transformer(em, model.CONFIGS[name])
+        elif name in embodied.CONFIGS:
+            manifest["models"][name] = emit_policy(em, embodied.CONFIGS[name])
+        else:
+            print(f"unknown model {name!r}", file=sys.stderr)
+            return 2
+
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"[aot] done: {em.n_lowered} lowered, {em.n_cached} cached → {out_dir}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

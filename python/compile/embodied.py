@@ -1,0 +1,132 @@
+"""L2: the embodied policy — an actor-critic MLP over simulator observations.
+
+The paper's embodied RL workloads (OpenVLA on ManiSkill / OpenVLA-OFT on
+LIBERO) pair a policy network with a vectorized physics simulator. Our
+simulator substrate lives in Rust (``rust/src/embodied``); this module
+defines the policy compute the coordinator schedules:
+
+* ``act``        — one policy step: observations → (action logits, value,
+                   per-action log-probs). A *single* forward produces both
+                   the action distribution and the log-prob — the fused-
+                   forward optimization §5.3 credits for the LIBERO speedup
+                   (the unfused baseline calls ``act`` twice).
+* ``train_step`` — PPO clipped update with value loss, entropy bonus and
+                   Adam, fused into one HLO module.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicyConfig:
+    """Actor-critic MLP hyper-parameters."""
+
+    name: str
+    obs_dim: int
+    n_actions: int
+    hidden: int
+    n_hidden: int = 2
+
+    def param_specs(self) -> list[tuple[str, tuple[int, ...]]]:
+        specs: list[tuple[str, tuple[int, ...]]] = []
+        d = self.obs_dim
+        for i in range(self.n_hidden):
+            specs += [(f"h{i}.w", (d, self.hidden)), (f"h{i}.b", (self.hidden,))]
+            d = self.hidden
+        specs += [
+            ("pi.w", (d, self.n_actions)), ("pi.b", (self.n_actions,)),
+            ("vf.w", (d, 1)), ("vf.b", (1,)),
+        ]
+        return specs
+
+    @property
+    def n_params_tensors(self) -> int:
+        return len(self.param_specs())
+
+
+CONFIGS: dict[str, PolicyConfig] = {
+    # ManiSkill-like pick-and-place: 18-dim proprio+object obs, 10 discrete
+    # actions (8 planar moves, lift/lower, grip toggle folded in).
+    "pickplace": PolicyConfig("pickplace", obs_dim=18, n_actions=10, hidden=256),
+}
+
+
+def init(cfg: PolicyConfig, seed: jax.Array) -> tuple[jax.Array, ...]:
+    """Orthogonal-ish init: scaled normal for weights, zero biases."""
+    key = jax.random.PRNGKey(seed)
+    out = []
+    for i, (name, shape) in enumerate(cfg.param_specs()):
+        if name.endswith(".b"):
+            out.append(jnp.zeros(shape, jnp.float32))
+        else:
+            fan_in = shape[0]
+            scale = 0.01 if name.startswith(("pi", "vf")) else (2.0 / fan_in) ** 0.5
+            out.append(jax.random.normal(jax.random.fold_in(key, i), shape) * scale)
+    return tuple(out)
+
+
+def _unflatten(cfg: PolicyConfig, params: Iterable[jax.Array]) -> dict:
+    return dict(zip([n for n, _ in cfg.param_specs()], list(params)))
+
+
+def _trunk(cfg: PolicyConfig, p: dict, obs: jax.Array) -> jax.Array:
+    x = obs
+    for i in range(cfg.n_hidden):
+        x = jnp.tanh(x @ p[f"h{i}.w"] + p[f"h{i}.b"])
+    return x
+
+
+def act(cfg: PolicyConfig, params: Iterable[jax.Array], obs: jax.Array):
+    """Policy step over ``obs [B, O]`` → ``(logits [B, A], value [B],
+    logp [B, A])``; logits and log-probs from ONE forward (fused path)."""
+    p = _unflatten(cfg, params)
+    x = _trunk(cfg, p, obs)
+    logits = x @ p["pi.w"] + p["pi.b"]
+    value = (x @ p["vf.w"] + p["vf.b"])[:, 0]
+    return logits, value, jax.nn.log_softmax(logits, axis=-1)
+
+
+def train_step(cfg: PolicyConfig, params: tuple, m: tuple, v: tuple, step: jax.Array,
+               obs: jax.Array, actions: jax.Array, logp_old: jax.Array,
+               adv: jax.Array, returns: jax.Array, lr: jax.Array,
+               eps_clip: float = 0.2, vf_coef: float = 0.5, ent_coef: float = 0.01):
+    """One PPO micro-batch update over flattened transitions.
+
+    ``obs [N, O]``, ``actions [N]`` i32, ``logp_old [N]``, ``adv [N]``,
+    ``returns [N]``. Returns ``(*new_params, *new_m, *new_v, loss, pg_loss,
+    vf_loss, entropy, clip_frac)``.
+    """
+    params = tuple(params)
+
+    def loss_fn(ps):
+        logits, value, logp_all = act(cfg, ps, obs)
+        lp = jnp.take_along_axis(logp_all, actions[:, None], axis=-1)[:, 0]
+        ratio = jnp.exp(lp - logp_old)
+        s1 = ratio * adv
+        s2 = jnp.clip(ratio, 1.0 - eps_clip, 1.0 + eps_clip) * adv
+        pg = -jnp.mean(jnp.minimum(s1, s2))
+        vf = 0.5 * jnp.mean((value - returns) ** 2)
+        ent = -jnp.mean(jnp.sum(jnp.exp(logp_all) * logp_all, axis=-1))
+        clip_frac = jnp.mean((s1 > s2).astype(jnp.float32))
+        total = pg + vf_coef * vf - ent_coef * ent
+        return total, (pg, vf, ent, clip_frac)
+
+    (loss, (pg, vf, ent, clip_frac)), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    t_ = step.astype(jnp.float32) + 1.0
+    bc1, bc2 = 1.0 - b1 ** t_, 1.0 - b2 ** t_
+    new_p, new_m, new_v = [], [], []
+    for pi, mi, vi, gi in zip(params, m, v, grads):
+        mi = b1 * mi + (1.0 - b1) * gi
+        vi = b2 * vi + (1.0 - b2) * gi * gi
+        new_p.append(pi - lr * (mi / bc1) / (jnp.sqrt(vi / bc2) + eps))
+        new_m.append(mi)
+        new_v.append(vi)
+    return (*new_p, *new_m, *new_v, loss, pg, vf, ent, clip_frac)

@@ -1,0 +1,8 @@
+"""L1 Pallas kernels (build-time only) and their pure-jnp oracles.
+
+``attention.attention``       — tiled causal flash attention (custom VJP).
+``grpo_loss.grpo_token_loss`` — fused GRPO token loss fwd+bwd.
+``ref``                       — exact reference implementations for both.
+"""
+
+from . import attention, grpo_loss, ref  # noqa: F401

@@ -1,0 +1,121 @@
+"""L1 Pallas kernel: tiled causal flash attention.
+
+The paper's compute hot-spot on the rollout/inference/training path is the
+transformer forward; its densest primitive is attention. This kernel is
+written for the TPU mental model (DESIGN.md §Hardware-Adaptation):
+
+* The grid iterates over ``(batch*heads, q-blocks)``; each step pulls one
+  ``[BQ, D]`` query tile and the full ``[T, D]`` K/V stripe for that head
+  from HBM into VMEM via ``BlockSpec`` — the analog of the CUDA flash-attn
+  threadblock schedule, expressed as an HBM↔VMEM block schedule instead.
+* K/V are consumed in MXU-friendly ``[BK, D]`` sub-tiles with an online
+  (one-pass) softmax: running max ``m``, normalizer ``l`` and accumulator
+  kept in f32 registers/VMEM, so the ``[T, T]`` score matrix never
+  materializes.
+* Must run ``interpret=True`` on this image: real TPU lowering emits a
+  Mosaic custom-call the CPU PJRT plugin cannot execute.
+
+The backward pass is a ``custom_vjp`` that rematerializes through the exact
+``ref.attention`` math (same softmax, same scaling), so gradients are
+bit-comparable to the reference while the forward stays fused.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+NEG_INF = -1e30
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, *, block_q: int, block_k: int, causal: bool):
+    """One (batch*head, q-block) grid step of the online-softmax attention."""
+    iq = pl.program_id(1)
+    d = q_ref.shape[-1]
+    scale = 1.0 / (d ** 0.5)
+    q = q_ref[0, :, :].astype(jnp.float32) * scale  # [BQ, D] VMEM tile
+    t = k_ref.shape[1]
+    n_kb = t // block_k
+
+    m = jnp.full((block_q,), NEG_INF, dtype=jnp.float32)
+    l = jnp.zeros((block_q,), dtype=jnp.float32)
+    acc = jnp.zeros((block_q, d), dtype=jnp.float32)
+
+    q_pos = iq * block_q + jax.lax.iota(jnp.int32, block_q)
+    # Static unroll over K/V sub-tiles; on real TPU the tail blocks past the
+    # causal frontier would be skipped with pl.when — under interpret we mask.
+    for j in range(n_kb):
+        k = k_ref[0, j * block_k : (j + 1) * block_k, :].astype(jnp.float32)
+        v = v_ref[0, j * block_k : (j + 1) * block_k, :].astype(jnp.float32)
+        s = q @ k.T  # [BQ, BK] — MXU matmul
+        if causal:
+            k_pos = j * block_k + jax.lax.iota(jnp.int32, block_k)
+            s = jnp.where(q_pos[:, None] >= k_pos[None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + p @ v
+        m = m_new
+
+    o_ref[0, :, :] = acc / l[:, None]
+
+
+def _attention_pallas(q, k, v, *, block_q: int, block_k: int, causal: bool):
+    b, h, t, d = q.shape
+    qf = q.reshape(b * h, t, d)
+    kf = k.reshape(b * h, t, d)
+    vf = v.reshape(b * h, t, d)
+    grid = (b * h, t // block_q)
+    kernel = functools.partial(_fwd_kernel, block_q=block_q, block_k=block_k, causal=causal)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda bh, iq: (bh, iq, 0)),
+            pl.BlockSpec((1, t, d), lambda bh, iq: (bh, 0, 0)),
+            pl.BlockSpec((1, t, d), lambda bh, iq: (bh, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda bh, iq: (bh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, t, d), jnp.float32),
+        interpret=True,  # CPU-PJRT execution path; see module docstring.
+    )(qf, kf, vf)
+    return out.reshape(b, h, t, d)
+
+
+def pick_blocks(t: int) -> tuple[int, int]:
+    """Choose (block_q, block_k) for sequence length ``t``.
+
+    Prefers 32-wide tiles (VMEM-frugal, still MXU-aligned after the head-dim
+    matmul) and falls back to any exact divisor so odd test shapes work.
+    """
+    for bq in (32, 16, 8, 4, 2, 1):
+        if t % bq == 0:
+            break
+    return bq, bq
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def attention(q, k, v, causal: bool = True):
+    """Fused causal attention over ``[B, H, T, D]``; flash-style forward."""
+    bq, bk = pick_blocks(q.shape[2])
+    return _attention_pallas(q, k, v, block_q=bq, block_k=bk, causal=causal)
+
+
+def _attention_fwd(q, k, v, causal):
+    return attention(q, k, v, causal), (q, k, v)
+
+
+def _attention_bwd(causal, res, g):
+    q, k, v = res
+    # Rematerialized backward through the exact reference math.
+    _, vjp = jax.vjp(lambda q_, k_, v_: ref.attention(q_, k_, v_, causal=causal), q, k, v)
+    return vjp(g)
+
+
+attention.defvjp(_attention_fwd, _attention_bwd)

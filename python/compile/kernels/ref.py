@@ -1,0 +1,92 @@
+"""Pure-jnp reference oracles for the L1 Pallas kernels.
+
+Every Pallas kernel in this package has an exact (same-math, same-dtype)
+reference implementation here. ``python/tests`` asserts allclose between the
+kernel (interpret=True) and these oracles across shape/dtype sweeps; the
+custom-VJP backward passes are validated against ``jax.grad`` of these
+references.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True) -> jax.Array:
+    """Reference scaled-dot-product attention.
+
+    Args:
+      q, k, v: ``[B, H, T, D]`` arrays (same T for q and k/v).
+      causal: apply a lower-triangular mask.
+
+    Returns:
+      ``[B, H, T, D]`` attention output in f32.
+    """
+    *_, t, d = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=jnp.float32))
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+        s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+
+
+def grpo_token_loss(
+    logp_new: jax.Array,
+    logp_old: jax.Array,
+    adv: jax.Array,
+    mask: jax.Array,
+    *,
+    eps_clip: float = 0.2,
+    kl_coef: float = 0.0,
+) -> tuple[jax.Array, jax.Array]:
+    """Reference GRPO/DAPO token-level clipped surrogate loss.
+
+    Args:
+      logp_new: ``[B, T]`` log-probs under the current policy.
+      logp_old: ``[B, T]`` log-probs under the behaviour policy.
+      adv:      ``[B]`` group-normalized advantages (per response).
+      mask:     ``[B, T]`` 1.0 on response tokens, 0.0 elsewhere.
+      eps_clip: PPO clip range.
+      kl_coef:  weight of the k3 KL estimator toward the behaviour policy.
+
+    Returns:
+      ``(loss_tok, clip_ind)`` both ``[B, T]``: per-token masked loss
+      contributions and the clip indicator (1.0 where the clipped branch
+      was active on a response token).
+    """
+    a = adv[:, None]
+    ratio = jnp.exp(logp_new - logp_old)
+    s1 = ratio * a
+    s2 = jnp.clip(ratio, 1.0 - eps_clip, 1.0 + eps_clip) * a
+    pg = -jnp.minimum(s1, s2)
+    # k3 estimator of KL(new || old): E[r_inv - log r_inv - 1], r_inv = old/new.
+    log_rinv = logp_old - logp_new
+    kl = jnp.exp(log_rinv) - log_rinv - 1.0
+    loss_tok = (pg + kl_coef * kl) * mask
+    clip_ind = ((s1 > s2).astype(jnp.float32)) * mask
+    return loss_tok, clip_ind
+
+
+def grpo_token_loss_grad(
+    logp_new: jax.Array,
+    logp_old: jax.Array,
+    adv: jax.Array,
+    mask: jax.Array,
+    *,
+    eps_clip: float = 0.2,
+    kl_coef: float = 0.0,
+) -> jax.Array:
+    """Analytic d(loss_tok)/d(logp_new), the oracle for the backward kernel."""
+    a = adv[:, None]
+    ratio = jnp.exp(logp_new - logp_old)
+    s1 = ratio * a
+    s2 = jnp.clip(ratio, 1.0 - eps_clip, 1.0 + eps_clip) * a
+    # -min(s1, s2): if s1 selected, d/dlogp = -a * ratio; clipped branch is flat.
+    dpg = jnp.where(s1 <= s2, -a * ratio, 0.0)
+    dkl = 1.0 - jnp.exp(logp_old - logp_new)
+    return (dpg + kl_coef * dkl) * mask

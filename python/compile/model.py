@@ -1,0 +1,335 @@
+"""L2: the RL policy model — a GPT-style causal transformer in functional JAX.
+
+This module defines every computation the Rust coordinator executes at
+runtime, each lowered once by ``aot.py`` into a standalone HLO artifact:
+
+* ``init``        — parameter initialization from a scalar seed (so weights
+                    are materialized *inside* the runtime; no ad-hoc weight
+                    file format crosses the language boundary).
+* ``prefill``     — prompt forward pass: fills the KV cache, returns the
+                    last-position logits (generation phase, step 0).
+* ``decode_step`` — one autoregressive step over the KV cache (generation
+                    phase, steps 1..R).
+* ``logprob``     — full-sequence per-token log-probs (the paper's
+                    *Inference* phase: prefill-only recompute under the
+                    current weights).
+* ``train_step``  — GRPO/DAPO token-level loss, backward, and a fused Adam
+                    update, all inside one HLO module (the *Training* phase).
+
+Attention uses the L1 Pallas flash kernel (``kernels.attention``) on every
+forward; the training loss uses the fused Pallas GRPO loss kernel. Parameters
+travel as a flat, deterministically-ordered list of arrays — the ordering
+contract is ``param_specs`` and is exported to Rust via the artifact
+manifest.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import attention as attn_k
+from .kernels import grpo_loss as loss_k
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Transformer hyper-parameters. ``max_seq = prompt_len + max_new``."""
+
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    prompt_len: int
+    max_new: int
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def d_ff(self) -> int:
+        return 4 * self.d_model
+
+    @property
+    def max_seq(self) -> int:
+        return self.prompt_len + self.max_new
+
+    def param_specs(self) -> list[tuple[str, tuple[int, ...]]]:
+        """Flat parameter layout: the cross-language ordering contract."""
+        specs: list[tuple[str, tuple[int, ...]]] = [
+            ("wte", (self.vocab, self.d_model)),
+            ("wpe", (self.max_seq, self.d_model)),
+        ]
+        for i in range(self.n_layers):
+            p = f"l{i}."
+            specs += [
+                (p + "ln1", (self.d_model,)),
+                (p + "wq", (self.d_model, self.d_model)),
+                (p + "wk", (self.d_model, self.d_model)),
+                (p + "wv", (self.d_model, self.d_model)),
+                (p + "wo", (self.d_model, self.d_model)),
+                (p + "ln2", (self.d_model,)),
+                (p + "w1", (self.d_model, self.d_ff)),
+                (p + "w2", (self.d_ff, self.d_model)),
+            ]
+        specs.append(("lnf", (self.d_model,)))
+        return specs
+
+    @property
+    def n_params_tensors(self) -> int:
+        return len(self.param_specs())
+
+    @property
+    def n_params(self) -> int:
+        return sum(int(jnp.prod(jnp.array(s))) for _, s in self.param_specs())
+
+
+# Named configurations. ``tiny`` is the default E2E/training target on the
+# CPU testbed; ``small`` exercises the ~27M class; ``base`` is the ~100M-class
+# smoke target (see DESIGN.md §4 — the paper's 1.5B/7B/32B enter through the
+# large-scale cost-model simulator instead).
+CONFIGS: dict[str, ModelConfig] = {
+    "tiny": ModelConfig("tiny", vocab=64, d_model=192, n_layers=4, n_heads=6,
+                        prompt_len=16, max_new=48),
+    "small": ModelConfig("small", vocab=64, d_model=512, n_layers=8, n_heads=8,
+                         prompt_len=16, max_new=112),
+    "base": ModelConfig("base", vocab=64, d_model=768, n_layers=12, n_heads=12,
+                        prompt_len=16, max_new=112),
+}
+
+
+# --------------------------------------------------------------------------
+# Parameters
+# --------------------------------------------------------------------------
+
+def init(cfg: ModelConfig, seed: jax.Array) -> tuple[jax.Array, ...]:
+    """Initialize parameters from a scalar uint32 seed (GPT-2-style scales)."""
+    key = jax.random.PRNGKey(seed)
+    params: list[jax.Array] = []
+    std = 0.02
+    resid_std = 0.02 / (2.0 * cfg.n_layers) ** 0.5
+    for i, (name, shape) in enumerate(cfg.param_specs()):
+        sub = jax.random.fold_in(key, i)
+        base = name.split(".")[-1]
+        if base.startswith("ln"):
+            params.append(jnp.ones(shape, jnp.float32))
+        elif base in ("wo", "w2"):  # residual-path projections
+            params.append(jax.random.normal(sub, shape, jnp.float32) * resid_std)
+        else:
+            params.append(jax.random.normal(sub, shape, jnp.float32) * std)
+    return tuple(params)
+
+
+def _unflatten(cfg: ModelConfig, params: Iterable[jax.Array]) -> dict:
+    flat = list(params)
+    names = [n for n, _ in cfg.param_specs()]
+    return dict(zip(names, flat))
+
+
+def _rmsnorm(x: jax.Array, g: jax.Array) -> jax.Array:
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + 1e-6) * g
+
+
+def _split_heads(x: jax.Array, n_heads: int) -> jax.Array:
+    b, t, d = x.shape
+    return x.reshape(b, t, n_heads, d // n_heads).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x: jax.Array) -> jax.Array:
+    b, h, t, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, t, h * dh)
+
+
+# --------------------------------------------------------------------------
+# Dense forward (prefill / logprob / training)
+# --------------------------------------------------------------------------
+
+def forward(cfg: ModelConfig, params: Iterable[jax.Array], tokens: jax.Array,
+            *, return_kv: bool = False):
+    """Causal forward over ``tokens [B, T]`` → logits ``[B, T, V]``.
+
+    With ``return_kv``, also returns per-layer K/V stacked as
+    ``[L, B, H, max_seq, Dh]`` (zero-padded to the cache length) for prefill.
+    """
+    p = _unflatten(cfg, params)
+    b, t = tokens.shape
+    x = p["wte"][tokens] + p["wpe"][:t][None, :, :]
+    kcs, vcs = [], []
+    for i in range(cfg.n_layers):
+        l = f"l{i}."
+        h = _rmsnorm(x, p[l + "ln1"])
+        q = _split_heads(h @ p[l + "wq"], cfg.n_heads)
+        k = _split_heads(h @ p[l + "wk"], cfg.n_heads)
+        v = _split_heads(h @ p[l + "wv"], cfg.n_heads)
+        o = attn_k.attention(q, k, v, True)  # L1 Pallas flash kernel
+        x = x + _merge_heads(o) @ p[l + "wo"]
+        h = _rmsnorm(x, p[l + "ln2"])
+        x = x + jax.nn.gelu(h @ p[l + "w1"]) @ p[l + "w2"]
+        if return_kv:
+            pad = cfg.max_seq - t
+            kcs.append(jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0))))
+            vcs.append(jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0))))
+    x = _rmsnorm(x, p["lnf"])
+    logits = x @ p["wte"].T
+    if return_kv:
+        return logits, jnp.stack(kcs), jnp.stack(vcs)
+    return logits
+
+
+def prefill(cfg: ModelConfig, params: Iterable[jax.Array], tokens: jax.Array):
+    """Prompt pass: returns ``(last_logits [B, V], kc, vc)`` with caches
+    shaped ``[L, B, H, max_seq, Dh]``."""
+    logits, kc, vc = forward(cfg, params, tokens, return_kv=True)
+    return logits[:, -1, :], kc, vc
+
+
+def logprob(cfg: ModelConfig, params: Iterable[jax.Array], tokens: jax.Array) -> jax.Array:
+    """Per-token log-probs ``[B, T]``: entry ``t`` is logP(tok_t | tok_<t);
+    entry 0 is defined as 0 (no conditioning context)."""
+    logits = forward(cfg, params, tokens)
+    logp = jax.nn.log_softmax(logits[:, :-1, :], axis=-1)
+    tgt = tokens[:, 1:]
+    gathered = jnp.take_along_axis(logp, tgt[:, :, None], axis=-1)[:, :, 0]
+    return jnp.pad(gathered, ((0, 0), (1, 0)))
+
+
+# --------------------------------------------------------------------------
+# Decode step (generation phase, KV-cached)
+# --------------------------------------------------------------------------
+
+def decode_step(cfg: ModelConfig, params: Iterable[jax.Array], kc: jax.Array,
+                vc: jax.Array, token: jax.Array, pos: jax.Array):
+    """One decode step.
+
+    Args:
+      kc, vc: ``[L, B, H, S, Dh]`` caches (S = max_seq).
+      token:  ``[B]`` int32 current tokens.
+      pos:    scalar int32 position of ``token`` in the sequence.
+
+    Returns ``(logits [B, V], kc, vc)`` with caches updated at ``pos``.
+
+    Decode attention is a per-token matvec over the cache — memory-bound, so
+    it stays in plain XLA ops (the flash kernel targets the dense prefill /
+    training matmuls; see DESIGN.md §Hardware-Adaptation).
+    """
+    p = _unflatten(cfg, params)
+    b = token.shape[0]
+    s = cfg.max_seq
+    x = p["wte"][token] + p["wpe"][pos]  # [B, D]
+    scale = 1.0 / (cfg.d_head ** 0.5)
+    valid = (jax.lax.iota(jnp.int32, s) <= pos)[None, None, :]  # [1,1,S]
+    for i in range(cfg.n_layers):
+        l = f"l{i}."
+        h = _rmsnorm(x, p[l + "ln1"])
+        q = (h @ p[l + "wq"]).reshape(b, cfg.n_heads, cfg.d_head)
+        k = (h @ p[l + "wk"]).reshape(b, cfg.n_heads, cfg.d_head)
+        v = (h @ p[l + "wv"]).reshape(b, cfg.n_heads, cfg.d_head)
+        kc = jax.lax.dynamic_update_slice(kc, k[None, :, :, None, :], (i, 0, 0, pos, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v[None, :, :, None, :], (i, 0, 0, pos, 0))
+        sc = jnp.einsum("bhd,bhsd->bhs", q, kc[i]) * scale
+        sc = jnp.where(valid, sc, -1e30)
+        w = jax.nn.softmax(sc, axis=-1)
+        o = jnp.einsum("bhs,bhsd->bhd", w, vc[i]).reshape(b, cfg.d_model)
+        x = x + o @ p[l + "wo"]
+        h = _rmsnorm(x, p[l + "ln2"])
+        x = x + jax.nn.gelu(h @ p[l + "w1"]) @ p[l + "w2"]
+    x = _rmsnorm(x, p["lnf"])
+    return x @ p["wte"].T, kc, vc
+
+
+# --------------------------------------------------------------------------
+# Supervised fine-tuning step (warm start, like the paper's SFT'd bases)
+# --------------------------------------------------------------------------
+
+def sft_step(cfg: ModelConfig, params: tuple, m: tuple, v: tuple, step: jax.Array,
+             tokens: jax.Array, mask: jax.Array, lr: jax.Array):
+    """One supervised step: masked next-token cross-entropy + Adam.
+
+    The paper RL-trains *pretrained/SFT'd* checkpoints; this step provides
+    the equivalent warm start for the from-scratch model (teacher-forced on
+    (prompt, answer) pairs generated by the task substrate).
+
+    Returns ``(*new_params, *new_m, *new_v, loss, token_acc)``.
+    """
+    params = tuple(params)
+
+    def loss_fn(ps):
+        lp = logprob(cfg, ps, tokens)  # [B, T] log P(tok_t | tok_<t)
+        denom = jnp.maximum(jnp.sum(mask), 1.0)
+        loss = -jnp.sum(lp * mask) / denom
+        # Greedy accuracy on supervised positions (diagnostic).
+        logits = forward(cfg, ps, tokens)
+        pred = jnp.argmax(logits[:, :-1, :], axis=-1)
+        hit = (pred == tokens[:, 1:]).astype(jnp.float32) * mask[:, 1:]
+        acc = jnp.sum(hit) / jnp.maximum(jnp.sum(mask[:, 1:]), 1.0)
+        return loss, acc
+
+    (loss, acc), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+    b1, b2, eps = 0.9, 0.95, 1e-8
+    t_ = step.astype(jnp.float32) + 1.0
+    bc1, bc2 = 1.0 - b1 ** t_, 1.0 - b2 ** t_
+    new_p, new_m, new_v = [], [], []
+    for pi, mi, vi, gi in zip(params, m, v, grads):
+        mi = b1 * mi + (1.0 - b1) * gi
+        vi = b2 * vi + (1.0 - b2) * gi * gi
+        new_p.append(pi - lr * (mi / bc1) / (jnp.sqrt(vi / bc2) + eps))
+        new_m.append(mi)
+        new_v.append(vi)
+    return (*new_p, *new_m, *new_v, loss, acc)
+
+
+# --------------------------------------------------------------------------
+# Training step (GRPO + Adam, fused into one module)
+# --------------------------------------------------------------------------
+
+def train_step(cfg: ModelConfig, params: tuple, m: tuple, v: tuple, step: jax.Array,
+               tokens: jax.Array, logp_old: jax.Array, adv: jax.Array,
+               mask: jax.Array, lr: jax.Array, eps_clip: float = 0.2,
+               kl_coef: float = 0.0, max_grad_norm: float = 1.0):
+    """One GRPO micro-batch update.
+
+    Inputs: flat params + Adam ``m``/``v`` states, global ``step`` (i32),
+    ``tokens [B, T]``, behaviour log-probs ``[B, T]``, group-normalized
+    advantages ``[B]``, response mask ``[B, T]``, scalar learning rate.
+
+    Returns ``(*new_params, *new_m, *new_v, loss, mean_ratio, clip_frac,
+    grad_norm)``. Everything — forward, Pallas loss kernel, backward, global
+    gradient clipping, Adam with bias correction — is one HLO module so the
+    coordinator sees training as a single executable invocation.
+    """
+    params = tuple(params)
+
+    def loss_fn(ps):
+        lp = logprob(cfg, ps, tokens)
+        loss_tok, clip_ind = loss_k.grpo_token_loss(lp, logp_old, adv, mask,
+                                                    eps_clip, kl_coef)
+        denom = jnp.maximum(jnp.sum(mask), 1.0)
+        loss = jnp.sum(loss_tok) / denom  # DAPO-style token-level mean
+        ratio = jnp.exp(lp - logp_old)
+        mean_ratio = jnp.sum(ratio * mask) / denom
+        clip_frac = jnp.sum(clip_ind) / denom
+        return loss, (mean_ratio, clip_frac)
+
+    (loss, (mean_ratio, clip_frac)), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+
+    gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in grads))
+    clip_scale = jnp.minimum(1.0, max_grad_norm / (gnorm + 1e-6))
+    b1, b2, eps = 0.9, 0.95, 1e-8
+    t_ = step.astype(jnp.float32) + 1.0
+    bc1 = 1.0 - b1 ** t_
+    bc2 = 1.0 - b2 ** t_
+    new_p, new_m, new_v = [], [], []
+    for pi, mi, vi, gi in zip(params, m, v, grads):
+        g = gi * clip_scale
+        mi = b1 * mi + (1.0 - b1) * g
+        vi = b2 * vi + (1.0 - b2) * g * g
+        upd = (mi / bc1) / (jnp.sqrt(vi / bc2) + eps)
+        new_p.append(pi - lr * upd)
+        new_m.append(mi)
+        new_v.append(vi)
+    return (*new_p, *new_m, *new_v, loss, mean_ratio, clip_frac, gnorm)

@@ -1,0 +1,90 @@
+"""AOT contract tests: manifest consistency and HLO artifact well-formedness."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, embodied, model
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+MANIFEST = os.path.join(ART, "manifest.json")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(MANIFEST), reason="run `make artifacts` first"
+)
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    return json.load(open(MANIFEST))
+
+
+def test_manifest_has_default_models(manifest):
+    assert "tiny" in manifest["models"]
+    assert "pickplace" in manifest["models"]
+
+
+def test_param_layout_matches_configs(manifest):
+    cfg = model.CONFIGS["tiny"]
+    got = manifest["models"]["tiny"]["params"]
+    want = [{"name": n, "shape": list(s)} for n, s in cfg.param_specs()]
+    assert got == want
+    ecfg = embodied.CONFIGS["pickplace"]
+    got = manifest["models"]["pickplace"]["params"]
+    want = [{"name": n, "shape": list(s)} for n, s in ecfg.param_specs()]
+    assert got == want
+
+
+def _iter_artifacts(entry):
+    for phase, val in entry["artifacts"].items():
+        if isinstance(val, list):
+            for item in val:
+                yield phase, item
+        else:
+            yield phase, val
+
+
+def test_all_artifact_files_exist_and_parse(manifest):
+    for mname, entry in manifest["models"].items():
+        for phase, item in _iter_artifacts(entry):
+            path = os.path.join(ART, item["file"])
+            assert os.path.exists(path), f"{mname}/{phase}: {item['file']}"
+            head = open(path).read(4096)
+            # HLO text modules start with `HloModule`.
+            assert head.startswith("HloModule"), item["file"]
+            assert "ENTRY" in open(path).read()
+
+
+def test_train_artifact_io_counts(manifest):
+    """train_step signature: 3N params-likes + 6 data inputs; 3N + 4 outputs."""
+    cfg = model.CONFIGS["tiny"]
+    n = cfg.n_params_tensors
+    for item in manifest["models"]["tiny"]["artifacts"]["train"]:
+        assert len(item["inputs"]) == 3 * n + 6
+        assert len(item["outputs"]) == 3 * n + 4
+        mb = item["mb"]
+        tok = [i for i in item["inputs"] if i["name"] == "tokens"][0]
+        assert tok["shape"] == [mb, cfg.max_seq]
+        assert tok["dtype"] == "int32"
+
+
+def test_decode_artifact_signatures(manifest):
+    cfg = model.CONFIGS["tiny"]
+    n = cfg.n_params_tensors
+    for item in manifest["models"]["tiny"]["artifacts"]["decode"]:
+        b = item["batch"]
+        assert len(item["inputs"]) == n + 4
+        cache = [cfg.n_layers, b, cfg.n_heads, cfg.max_seq, cfg.d_head]
+        assert item["inputs"][n]["shape"] == cache
+        assert item["outputs"][0]["shape"] == [b, cfg.vocab]
+
+
+def test_src_hash_is_stable():
+    assert aot._src_hash() == aot._src_hash()
+    assert len(aot._src_hash()) == 16
+
+
+def test_batch_variants_cover_elastic_granularities(manifest):
+    decode = manifest["models"]["tiny"]["artifacts"]["decode"]
+    assert sorted(d["batch"] for d in decode) == sorted(aot.GEN_BATCHES)

@@ -1,0 +1,173 @@
+"""L1 kernel correctness: Pallas (interpret=True) vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and input regimes; forward outputs and custom-VJP
+gradients must match ``ref`` to tight tolerances.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import attention, grpo_loss, ref
+
+SETTINGS = dict(max_examples=25, deadline=None,
+                suppress_health_check=[hypothesis.HealthCheck.too_slow])
+
+
+def _rand(key, shape, scale=1.0):
+    return jax.random.normal(key, shape, jnp.float32) * scale
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+@hypothesis.given(
+    b=st.integers(1, 3),
+    h=st.integers(1, 4),
+    t=st.sampled_from([8, 16, 32, 48, 64, 96, 128]),
+    d=st.sampled_from([8, 16, 32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.sampled_from([0.1, 1.0, 4.0]),
+)
+@hypothesis.settings(**SETTINGS)
+def test_attention_forward_matches_ref(b, h, t, d, seed, scale):
+    key = jax.random.PRNGKey(seed)
+    q, k, v = [_rand(jax.random.fold_in(key, i), (b, h, t, d), scale) for i in range(3)]
+    out = attention.attention(q, k, v, True)
+    expect = ref.attention(q, k, v, causal=True)
+    np.testing.assert_allclose(out, expect, rtol=1e-4, atol=5e-5)
+
+
+@pytest.mark.parametrize("t", [16, 32, 64])
+def test_attention_non_causal(t):
+    key = jax.random.PRNGKey(t)
+    q, k, v = [_rand(jax.random.fold_in(key, i), (2, 2, t, 16)) for i in range(3)]
+    out = attention.attention(q, k, v, False)
+    expect = ref.attention(q, k, v, causal=False)
+    np.testing.assert_allclose(out, expect, rtol=1e-4, atol=5e-5)
+
+
+def test_attention_causality_property():
+    """Perturbing future positions must not change earlier outputs."""
+    key = jax.random.PRNGKey(7)
+    b, h, t, d = 1, 2, 32, 16
+    q, k, v = [_rand(jax.random.fold_in(key, i), (b, h, t, d)) for i in range(3)]
+    out1 = attention.attention(q, k, v, True)
+    k2 = k.at[:, :, t // 2:, :].set(99.0)
+    v2 = v.at[:, :, t // 2:, :].set(-99.0)
+    out2 = attention.attention(q, k2, v2, True)
+    np.testing.assert_allclose(out1[:, :, : t // 2], out2[:, :, : t // 2], rtol=1e-6, atol=1e-6)
+
+
+def test_attention_softmax_rowsum_property():
+    """With v = ones, attention output must be exactly ones (softmax sums to 1)."""
+    key = jax.random.PRNGKey(3)
+    q = _rand(key, (2, 2, 64, 32))
+    k = _rand(jax.random.fold_in(key, 1), (2, 2, 64, 32))
+    v = jnp.ones((2, 2, 64, 32), jnp.float32)
+    out = attention.attention(q, k, v, True)
+    np.testing.assert_allclose(out, jnp.ones_like(out), rtol=1e-5, atol=1e-5)
+
+
+@hypothesis.given(
+    t=st.sampled_from([16, 32, 64]),
+    d=st.sampled_from([8, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@hypothesis.settings(max_examples=8, deadline=None)
+def test_attention_grad_matches_ref(t, d, seed):
+    key = jax.random.PRNGKey(seed)
+    q, k, v = [_rand(jax.random.fold_in(key, i), (1, 2, t, d)) for i in range(3)]
+
+    def f_kernel(q, k, v):
+        return jnp.sum(jnp.sin(attention.attention(q, k, v, True)))
+
+    def f_ref(q, k, v):
+        return jnp.sum(jnp.sin(ref.attention(q, k, v, causal=True)))
+
+    gk = jax.grad(f_kernel, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b_ in zip(gk, gr):
+        np.testing.assert_allclose(a, b_, rtol=5e-5, atol=5e-5)
+
+
+def test_attention_numerical_stability_large_logits():
+    """Online softmax must survive large score magnitudes without NaN/inf."""
+    key = jax.random.PRNGKey(11)
+    q, k, v = [_rand(jax.random.fold_in(key, i), (1, 1, 32, 16), scale=30.0) for i in range(3)]
+    out = attention.attention(q, k, v, True)
+    assert bool(jnp.all(jnp.isfinite(out)))
+    expect = ref.attention(q, k, v, causal=True)
+    np.testing.assert_allclose(out, expect, rtol=1e-4, atol=1e-4)
+
+
+def test_pick_blocks_divides():
+    for t in (1, 2, 4, 8, 12, 16, 24, 32, 64, 96, 128):
+        bq, bk = attention.pick_blocks(t)
+        assert t % bq == 0 and t % bk == 0
+
+
+# ---------------------------------------------------------------------------
+# GRPO token loss
+# ---------------------------------------------------------------------------
+
+@hypothesis.given(
+    b=st.sampled_from([1, 2, 4, 8, 16]),
+    t=st.sampled_from([8, 16, 64, 128]),
+    eps=st.sampled_from([0.1, 0.2, 0.3]),
+    kl=st.sampled_from([0.0, 0.05, 0.2]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@hypothesis.settings(**SETTINGS)
+def test_grpo_loss_matches_ref(b, t, eps, kl, seed):
+    key = jax.random.PRNGKey(seed)
+    lpn = -jnp.abs(_rand(key, (b, t)))
+    lpo = -jnp.abs(_rand(jax.random.fold_in(key, 1), (b, t)))
+    adv = _rand(jax.random.fold_in(key, 2), (b,))
+    mask = (jax.random.uniform(jax.random.fold_in(key, 3), (b, t)) > 0.3).astype(jnp.float32)
+    lt, ci = grpo_loss.grpo_token_loss(lpn, lpo, adv, mask, eps, kl)
+    rlt, rci = ref.grpo_token_loss(lpn, lpo, adv, mask, eps_clip=eps, kl_coef=kl)
+    np.testing.assert_allclose(lt, rlt, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(ci, rci, rtol=0, atol=0)
+
+
+@hypothesis.given(
+    b=st.sampled_from([2, 4]),
+    t=st.sampled_from([16, 64]),
+    kl=st.sampled_from([0.0, 0.1]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@hypothesis.settings(max_examples=12, deadline=None)
+def test_grpo_loss_grad_matches_autodiff_of_ref(b, t, kl, seed):
+    key = jax.random.PRNGKey(seed)
+    lpn = -jnp.abs(_rand(key, (b, t)))
+    lpo = -jnp.abs(_rand(jax.random.fold_in(key, 1), (b, t)))
+    adv = _rand(jax.random.fold_in(key, 2), (b,))
+    mask = (jax.random.uniform(jax.random.fold_in(key, 3), (b, t)) > 0.2).astype(jnp.float32)
+
+    gk = jax.grad(lambda l: jnp.sum(grpo_loss.grpo_token_loss(l, lpo, adv, mask, 0.2, kl)[0]))(lpn)
+    gr = jax.grad(lambda l: jnp.sum(ref.grpo_token_loss(l, lpo, adv, mask, eps_clip=0.2, kl_coef=kl)[0]))(lpn)
+    np.testing.assert_allclose(gk, gr, rtol=1e-5, atol=1e-5)
+    # And against the hand-derived analytic oracle.
+    ga = ref.grpo_token_loss_grad(lpn, lpo, adv, mask, eps_clip=0.2, kl_coef=kl)
+    np.testing.assert_allclose(gk, ga, rtol=1e-5, atol=1e-5)
+
+
+def test_grpo_loss_zero_at_behaviour_policy():
+    """At lpn == lpo the ratio is 1: pg loss = -adv per token, KL = 0."""
+    lp = -jnp.ones((2, 8))
+    adv = jnp.array([0.5, -1.0])
+    mask = jnp.ones((2, 8))
+    lt, ci = grpo_loss.grpo_token_loss(lp, lp, adv, mask, 0.2, 0.7)
+    np.testing.assert_allclose(lt, -adv[:, None] * mask, rtol=1e-6, atol=1e-6)
+    assert float(jnp.sum(ci)) == 0.0
+
+
+def test_grpo_loss_mask_zeroes_everything():
+    lpn = -jnp.abs(jax.random.normal(jax.random.PRNGKey(0), (4, 16)))
+    lt, ci = grpo_loss.grpo_token_loss(lpn, lpn * 0.9, jnp.ones(4), jnp.zeros((4, 16)), 0.2, 0.1)
+    assert float(jnp.sum(jnp.abs(lt))) == 0.0 and float(jnp.sum(ci)) == 0.0

@@ -1,0 +1,55 @@
+//! Shared bench harness (criterion is unavailable offline; this provides
+//! timed runs, warmup, and table/JSON reporting with the same shape as the
+//! paper's figures).
+
+use std::time::Instant;
+
+use rlinf::util::fmt;
+use rlinf::util::json::Value;
+
+/// Time a closure `reps` times after `warmup` runs; returns mean seconds.
+#[allow(dead_code)]
+pub fn time_mean<T>(warmup: usize, reps: usize, mut f: impl FnMut() -> T) -> f64 {
+    for _ in 0..warmup {
+        f();
+    }
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / reps as f64
+}
+
+/// Print a figure-style table and persist raw rows to results/<name>.json.
+pub fn report(name: &str, headers: &[&str], rows: Vec<Vec<String>>) {
+    println!("\n=== {name} ===");
+    print!("{}", fmt::table(headers, &rows));
+    let mut v = Value::obj();
+    v.set("bench", name);
+    let hdr: Vec<Value> = headers.iter().map(|h| Value::Str(h.to_string())).collect();
+    v.set("headers", Value::Arr(hdr));
+    let data: Vec<Value> = rows
+        .iter()
+        .map(|r| Value::Arr(r.iter().map(|c| Value::Str(c.clone())).collect()))
+        .collect();
+    v.set("rows", Value::Arr(data));
+    let _ = std::fs::create_dir_all("results");
+    let _ = std::fs::write(format!("results/{name}.json"), v.to_json_pretty());
+    println!("(saved results/{name}.json)");
+}
+
+/// Artifacts present? (benches no-op cleanly in artifact-less environments)
+pub fn artifacts() -> Option<String> {
+    let dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    std::path::Path::new(&dir).join("manifest.json").exists().then_some(dir)
+}
+
+#[allow(dead_code)]
+pub fn f(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+#[allow(dead_code)]
+pub fn f3(x: f64) -> String {
+    format!("{x:.3}")
+}

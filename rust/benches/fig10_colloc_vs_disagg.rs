@@ -1,0 +1,89 @@
+//! Figure 10 reproduction: collocated vs disaggregated mode under a
+//! long-context reasoning workload (paper: disaggregated wins 1.17×–1.21×
+//! at 28k context, group size 8).
+//!
+//! Measured tier uses the tiny model at its full context with a long
+//! generation budget (maximizing the long tail); the simulated tier runs
+//! the paper's 7B/28k point through the cost model.
+
+mod common;
+
+use rlinf::config::{PlacementMode, RunConfig};
+use rlinf::flow::pipeline::{pipeline_time, sequential_time};
+use rlinf::simulator::costdb::{synthetic_profile, ModelScale};
+use rlinf::workflow::reasoning::{run_grpo, RunnerOpts};
+
+fn main() -> anyhow::Result<()> {
+    let mut rows = Vec::new();
+    if let Some(dir) = common::artifacts() {
+        for devices in [4usize] {
+            let mut cfg = RunConfig::default();
+            cfg.model = "tiny".into();
+            cfg.artifacts_dir = dir.clone();
+            cfg.iters = 3; // warm-up excluded
+            cfg.cluster.devices_per_node = devices;
+            cfg.rollout.batch = 8;
+            cfg.rollout.group_size = 8; // paper's Figure-10 group size
+            cfg.rollout.max_new = 32; // long-ish context within bench budget
+            cfg.seed = 9;
+
+            cfg.sched.mode = PlacementMode::Collocated;
+            let col = run_grpo(&cfg, &RunnerOpts::default())?;
+            cfg.sched.mode = PlacementMode::Disaggregated;
+            cfg.sched.gen_devices = (devices * 5 / 8).max(1); // paper: 40/64
+            let dis = run_grpo(&cfg, &RunnerOpts::default())?;
+            let (c, d) = (col.steady_throughput(), dis.steady_throughput());
+            rows.push(vec![
+                "tiny(measured)".into(),
+                devices.to_string(),
+                format!("{c:.0}"),
+                format!("{d:.0}"),
+                format!("{:.2}x", d / c),
+            ]);
+        }
+    }
+
+    // Simulated 7B/28k point (the exact Figure-10 configuration).
+    //
+    // Generation is *tail-bound*: the longest response must be decoded
+    // serially no matter how many devices generate (Figure 2), so
+    //   T_rollout(n) = T_compute / n + T_tail,
+    // with T_tail = (long_tail − 1) × the serial decode latency of one
+    // full-length response. This is why giving rollout only 40 of 64 GPUs
+    // lengthens it by merely ~14% (Figure 12) while the freed 24 GPUs run
+    // inference+training concurrently.
+    let db = synthetic_profile(ModelScale::B7, 28_672.0, 1.0, &[8, 16, 32]);
+    let resp = 512.0 * 8.0 / 16.0; // batch 512, group 8 (paper fig10)
+    let long_tail = 1.5;
+    // Serial decode of one response is HBM-bandwidth-bound: every token
+    // streams the full weights (2 bytes/param at bf16, ~3.35 TB/s H100).
+    let per_seq_serial = 28_672.0 * (2.0 * 7e9) / 3.35e12;
+    let t_tail = (long_tail - 1.0) * per_seq_serial;
+    let compute = |w: &str, dev: f64| db.time(w, 32).unwrap() * (resp / 32.0) / dev;
+    let rollout = |dev: f64| compute("rollout", dev) + t_tail;
+    // Collocated: all 64 devices per phase, sequential + 2 switches.
+    let col = sequential_time(&[rollout(64.0), compute("infer", 64.0), compute("train", 64.0)], 0.6);
+    // Disaggregated: rollout on 40, infer+train on 24, pipelined chunks.
+    let dis = pipeline_time(&[rollout(40.0), compute("infer", 24.0) + compute("train", 24.0)], 16);
+    rows.push(vec![
+        "7B@28k(sim)".into(),
+        "64".into(),
+        format!("{:.0}", resp * 28672.0 / col),
+        format!("{:.0}", resp * 28672.0 / dis),
+        format!("{:.2}x", col / dis),
+    ]);
+    println!(
+        "rollout lengthening under disagg: {:.1}% (paper Figure 12: ~14%)",
+        100.0 * (rollout(40.0) / rollout(64.0) - 1.0)
+    );
+
+    common::report(
+        "fig10_colloc_vs_disagg",
+        &["model", "devices", "collocated_tok_s", "disagg_tok_s", "disagg_speedup"],
+        rows,
+    );
+    println!("\nNOTE: the measured tier runs on a 1-CPU-core testbed — no physical\n\
+         parallelism, so pipelined modes cannot win wall-clock there; the\n\
+         simulated tier carries the scale shape. paper reference: disaggregated 1.17x–1.21x over collocated at 28k context.");
+    Ok(())
+}

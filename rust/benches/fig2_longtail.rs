@@ -1,0 +1,82 @@
+//! Figure 2 reproduction: (a) CDF of response completion time, (b) number
+//! of unfinished responses over decode steps — the long-tail problem.
+//!
+//! Real generation on the tiny model: a batch of prompts is decoded with
+//! per-row EOS exit; we record each response's completion step and the
+//! live-row count per step. The paper's observation to reproduce: the
+//! unfinished count collapses quickly (<5% tail dominates the tail time).
+
+mod common;
+
+use std::rc::Rc;
+
+use rlinf::data::Tensor;
+use rlinf::model::{TaskGen, Tokenizer};
+use rlinf::rollout::RolloutEngine;
+use rlinf::runtime::{Engine, Manifest};
+use rlinf::util::stats::ecdf;
+
+fn main() -> anyhow::Result<()> {
+    let Some(dir) = common::artifacts() else {
+        println!("fig2: artifacts missing; run `make artifacts`");
+        return Ok(());
+    };
+    let engine = Rc::new(Engine::new(Rc::new(Manifest::load(&dir)?))?);
+    let model = engine.manifest().model("tiny")?.clone();
+    let init = &model.phase("init")?[0];
+    let params = engine.run(init, &[Tensor::scalar_u32(0)])?;
+
+    let mut ro = RolloutEngine::new(engine.clone(), "tiny", 1.0, 42)?;
+    ro.set_weights(&params, 1)?;
+
+    let tok = Tokenizer::new();
+    let mut gen = TaskGen::new(0);
+    let max_new = 48;
+    let batch = 32;
+    let prompts: Vec<Vec<i32>> =
+        (0..batch).map(|_| tok.encode_prompt(&gen.next_task().prompt, 16).unwrap()).collect();
+
+    let mut curve = Vec::new();
+    let t0 = std::time::Instant::now();
+    let results = ro.generate(&prompts, max_new, Some(&mut curve))?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    // (a) completion-time CDF (completion step as the time proxy; each
+    // decode step costs ~constant wall time at fixed batch).
+    let lens: Vec<f64> = results.iter().map(|r| r.gen_len as f64).collect();
+    let cdf = ecdf(&lens);
+    let pick = |q: f64| cdf[(q * (cdf.len() - 1) as f64) as usize].0;
+    common::report(
+        "fig2a_response_cdf",
+        &["quantile", "completion_step"],
+        vec![
+            vec!["p10".into(), format!("{:.0}", pick(0.10))],
+            vec!["p50".into(), format!("{:.0}", pick(0.50))],
+            vec!["p90".into(), format!("{:.0}", pick(0.90))],
+            vec!["p99".into(), format!("{:.0}", pick(0.99))],
+            vec!["max".into(), format!("{:.0}", pick(1.0))],
+        ],
+    );
+
+    // (b) unfinished responses over steps.
+    let rows: Vec<Vec<String>> = curve
+        .iter()
+        .enumerate()
+        .step_by((curve.len() / 12).max(1))
+        .map(|(s, &live)| {
+            vec![s.to_string(), live.to_string(), format!("{:.1}%", 100.0 * live as f64 / batch as f64)]
+        })
+        .collect();
+    common::report("fig2b_unfinished", &["step", "unfinished", "fraction"], rows);
+
+    // Long-tail shape assertions (the paper's qualitative claim).
+    let half = curve[curve.len() / 2] as f64 / batch as f64;
+    println!(
+        "\nwall {wall:.2}s; at 50% of steps only {:.0}% of responses still running \
+         (long tail: {} of {} steps spent on <25% of the batch)",
+        100.0 * half,
+        curve.iter().filter(|&&l| (l as f64) < 0.25 * batch as f64).count(),
+        curve.len()
+    );
+    Ok(())
+}

@@ -1,0 +1,76 @@
+//! Figure 8 reproduction: end-to-end RLHF throughput (tokens/s), RLinf vs
+//! the veRL-like baseline, across model sizes and cluster scales.
+//!
+//! Two tiers (DESIGN.md §4):
+//! * **measured** — real tiny-model training on 2/4/8 simulated devices,
+//!   RLinf best-mode vs the veRL-like collocated baseline;
+//! * **simulated** — paper scales (1.5B/7B/32B × 16–256 GPUs) through the
+//!   calibrated cost-model simulator (Algorithm-1 plan vs phase barriers).
+//!
+//! The claim to reproduce is the *shape*: RLinf ≥ baseline everywhere,
+//! speedups in the 1.1×–1.6× band, growing with scale/context.
+
+mod common;
+
+use rlinf::config::{PlacementMode, RunConfig};
+use rlinf::simulator::costdb::ModelScale;
+use rlinf::simulator::{simulate_reasoning, SimScenario};
+use rlinf::workflow::reasoning::{run_grpo, RunnerOpts};
+
+fn measured_tier() -> anyhow::Result<Vec<Vec<String>>> {
+    let mut rows = Vec::new();
+    let Some(dir) = common::artifacts() else { return Ok(rows) };
+    for devices in [2usize] { // 1-core testbed: one measured point
+        let mut cfg = RunConfig::default();
+        cfg.model = "tiny".into();
+        cfg.artifacts_dir = dir.clone();
+        cfg.iters = 3; // first iteration = warm-up (XLA compile), excluded
+        cfg.cluster.devices_per_node = devices;
+        cfg.rollout.batch = 8;
+        cfg.rollout.group_size = 4;
+        cfg.rollout.max_new = 24;
+        cfg.seed = 5;
+
+        cfg.sched.mode = PlacementMode::Hybrid;
+        cfg.sched.gen_devices = (devices * 2 / 3).max(1);
+        let rlinf = run_grpo(&cfg, &RunnerOpts::default())?;
+
+        let base_cfg = rlinf::baseline::verl_config(cfg.clone());
+        let verl = run_grpo(&base_cfg, &rlinf::baseline::verl_opts())?;
+
+        let (a, b) = (rlinf.steady_throughput(), verl.steady_throughput());
+        rows.push(vec![
+            "tiny(measured)".into(),
+            devices.to_string(),
+            format!("{a:.0}"),
+            format!("{b:.0}"),
+            format!("{:.2}x", a / b),
+        ]);
+    }
+    Ok(rows)
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut rows = measured_tier()?;
+    for scale in [ModelScale::B1_5, ModelScale::B7, ModelScale::B32] {
+        for devices in [16usize, 32, 64, 128, 256] {
+            let p = simulate_reasoning(&SimScenario::paper_default(scale, devices))?;
+            rows.push(vec![
+                format!("{}(sim)", p.scale_name),
+                devices.to_string(),
+                format!("{:.0}", p.rlinf_tokens_per_sec),
+                format!("{:.0}", p.baseline_tokens_per_sec),
+                format!("{:.2}x", p.speedup),
+            ]);
+        }
+    }
+    common::report(
+        "fig8_throughput",
+        &["model", "devices", "rlinf_tok_s", "verl_tok_s", "speedup"],
+        rows,
+    );
+    println!("\nNOTE: the measured tier runs on a 1-CPU-core testbed — no physical\n\
+         parallelism, so pipelined modes cannot win wall-clock there; the\n\
+         simulated tier carries the scale shape. paper reference: RLinf 1.10x–1.58x over veRL across 1.5B/7B/32B (Figure 8).");
+    Ok(())
+}

@@ -1,0 +1,46 @@
+//! Baseline systems the paper compares against, reconstructed from their
+//! described behaviours (§5.1, §5.3).
+//!
+//! * **veRL-like** (reasoning): strictly collocated phase-level execution
+//!   with the two §5.3 inefficiencies — a halved rollout KV budget
+//!   (smaller decode batches) and unfused double-forward log-prob
+//!   inference. Built by layering [`verl_opts`] onto the standard runner.
+//! * **SimpleVLA-RL / RL4VLA-like** (embodied): per-rollout environment
+//!   re-initialization and separate action/log-prob forwards, via
+//!   [`EmbodiedOpts::baseline`].
+
+use crate::config::{PlacementMode, RunConfig};
+use crate::workflow::embodied::EmbodiedOpts;
+use crate::workflow::reasoning::RunnerOpts;
+
+/// Runner options that reproduce veRL's execution profile.
+pub fn verl_opts() -> RunnerOpts {
+    RunnerOpts { verl_like: true, verbose: false }
+}
+
+/// Force a config into veRL's collocated-only execution mode.
+pub fn verl_config(mut cfg: RunConfig) -> RunConfig {
+    cfg.sched.mode = PlacementMode::Collocated;
+    cfg
+}
+
+/// Embodied baseline options (see [`EmbodiedOpts::baseline`]).
+pub fn embodied_baseline_opts() -> EmbodiedOpts {
+    EmbodiedOpts::baseline()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RunConfig;
+
+    #[test]
+    fn verl_forces_collocated_and_inefficiencies() {
+        let cfg = verl_config(RunConfig::default());
+        assert_eq!(cfg.sched.mode, PlacementMode::Collocated);
+        let opts = verl_opts();
+        assert!(opts.verl_like);
+        let e = embodied_baseline_opts();
+        assert!(e.reinit_per_rollout && e.double_forward);
+    }
+}

@@ -1,0 +1,253 @@
+//! The distributed device lock (§3.3): the temporal-scheduling primitive.
+//!
+//! Workers that share accelerators acquire the lock over their device set
+//! before computing. Properties mirroring the paper:
+//!
+//! * **Globally consistent, atomic state** — one manager guards all
+//!   devices; an acquire either claims every requested device or blocks.
+//! * **Dependency-ordered priority** — waiters are served by ascending
+//!   priority (the workflow stage depth), so a child that depends on a
+//!   parent's channel output cannot starve the parent: the parent's lower
+//!   priority wins the next grant. Together with "children block on the
+//!   channel until parents enqueue data", this prevents the contention /
+//!   deadlock cases the paper describes.
+//! * **Placement-aware skip** — acquiring a device set that no other
+//!   registered worker touches is free, and release-time offload can be
+//!   skipped when nobody is waiting (`was_contended`).
+
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::cluster::DeviceSet;
+
+#[derive(Default)]
+struct LockState {
+    /// device -> holder name.
+    holders: HashMap<usize, String>,
+    /// Waiting (holder, priority, devices) triples.
+    waiters: Vec<(String, u64, DeviceSet)>,
+    /// Grant counter for fairness diagnostics.
+    grants: u64,
+}
+
+/// Shared device-lock manager.
+#[derive(Clone, Default)]
+pub struct DeviceLockMgr {
+    inner: Arc<(Mutex<LockState>, Condvar)>,
+}
+
+impl DeviceLockMgr {
+    pub fn new() -> DeviceLockMgr {
+        DeviceLockMgr::default()
+    }
+
+    /// Pre-register an acquisition intent without blocking. The controller
+    /// calls this in *program order* when dispatching lock-taking
+    /// invocations, so a downstream (higher-priority-number) worker can
+    /// never slip in front of an upstream one whose acquire request is
+    /// still in flight — the data-dependency ordering of §3.3 that
+    /// prevents the classic consumer-grabs-device-then-waits-for-producer
+    /// deadlock.
+    pub fn register_intent(&self, holder: &str, set: &DeviceSet, priority: u64) {
+        if set.is_empty() {
+            return;
+        }
+        let (lock, cv) = &*self.inner;
+        let mut st = lock.lock().unwrap();
+        let exists = st.waiters.iter().any(|(w, p, _)| w == holder && *p == priority);
+        if !exists {
+            st.waiters.push((holder.to_string(), priority, set.clone()));
+        }
+        drop(st);
+        cv.notify_all();
+    }
+
+    /// Block until every device in `set` is free *and* no intersecting
+    /// waiter has strictly lower priority, then claim them. Re-entrant for
+    /// the same holder (a worker re-acquiring its own devices is a no-op).
+    pub fn acquire(&self, holder: &str, set: &DeviceSet, priority: u64) {
+        if set.is_empty() {
+            return;
+        }
+        let (lock, cv) = &*self.inner;
+        let mut st = lock.lock().unwrap();
+        // Re-entrancy: if we already hold all requested devices, done
+        // (drop any pre-registered intent so it cannot block juniors).
+        if set.ids().iter().all(|d| st.holders.get(&d.0).map(|h| h == holder).unwrap_or(false)) {
+            st.waiters.retain(|(w, p, _)| !(w == holder && *p == priority));
+            drop(st);
+            cv.notify_all();
+            return;
+        }
+        let exists = st.waiters.iter().any(|(w, p, _)| w == holder && *p == priority);
+        if !exists {
+            st.waiters.push((holder.to_string(), priority, set.clone()));
+        }
+        loop {
+            let free = set
+                .ids()
+                .iter()
+                .all(|d| st.holders.get(&d.0).map(|h| h == holder).unwrap_or(true));
+            let has_senior_waiter = st.waiters.iter().any(|(w, p, ws)| {
+                w != holder && *p < priority && ws.intersects(set)
+            });
+            if free && !has_senior_waiter {
+                break;
+            }
+            st = cv.wait(st).unwrap();
+        }
+        st.waiters.retain(|(w, p, _)| !(w == holder && *p == priority));
+        for d in set.ids() {
+            st.holders.insert(d.0, holder.to_string());
+        }
+        st.grants += 1;
+        drop(st);
+        cv.notify_all();
+    }
+
+    /// Try to claim without blocking; true on success.
+    pub fn try_acquire(&self, holder: &str, set: &DeviceSet) -> bool {
+        let (lock, cv) = &*self.inner;
+        let mut st = lock.lock().unwrap();
+        let free = set
+            .ids()
+            .iter()
+            .all(|d| st.holders.get(&d.0).map(|h| h == holder).unwrap_or(true));
+        if !free {
+            return false;
+        }
+        for d in set.ids() {
+            st.holders.insert(d.0, holder.to_string());
+        }
+        st.grants += 1;
+        drop(st);
+        cv.notify_all();
+        true
+    }
+
+    /// Release every device `holder` owns within `set`.
+    pub fn release(&self, holder: &str, set: &DeviceSet) {
+        let (lock, cv) = &*self.inner;
+        let mut st = lock.lock().unwrap();
+        for d in set.ids() {
+            if st.holders.get(&d.0).map(|h| h == holder).unwrap_or(false) {
+                st.holders.remove(&d.0);
+            }
+        }
+        drop(st);
+        cv.notify_all();
+    }
+
+    /// Is anyone (else) currently waiting on devices intersecting `set`?
+    /// Drives the release-time offload decision: no waiter → stay resident.
+    pub fn was_contended(&self, holder: &str, set: &DeviceSet) -> bool {
+        let (lock, _) = &*self.inner;
+        let st = lock.lock().unwrap();
+        st.waiters.iter().any(|(w, _, ws)| w != holder && ws.intersects(set))
+    }
+
+    pub fn holder_of(&self, device: usize) -> Option<String> {
+        self.inner.0.lock().unwrap().holders.get(&device).cloned()
+    }
+
+    pub fn grants(&self) -> u64 {
+        self.inner.0.lock().unwrap().grants
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::thread;
+    use std::time::Duration;
+
+    #[test]
+    fn exclusive_acquire_release() {
+        let m = DeviceLockMgr::new();
+        let s = DeviceSet::range(0, 2);
+        m.acquire("a", &s, 0);
+        assert_eq!(m.holder_of(0), Some("a".into()));
+        assert!(!m.try_acquire("b", &s));
+        m.release("a", &s);
+        assert!(m.try_acquire("b", &s));
+    }
+
+    #[test]
+    fn reentrant_for_same_holder() {
+        let m = DeviceLockMgr::new();
+        let s = DeviceSet::range(0, 1);
+        m.acquire("a", &s, 0);
+        m.acquire("a", &s, 0); // must not deadlock
+        m.release("a", &s);
+        assert_eq!(m.holder_of(0), None);
+    }
+
+    #[test]
+    fn disjoint_sets_do_not_block() {
+        let m = DeviceLockMgr::new();
+        m.acquire("a", &DeviceSet::range(0, 2), 0);
+        assert!(m.try_acquire("b", &DeviceSet::range(2, 2)), "disjoint devices are free");
+    }
+
+    #[test]
+    fn blocking_waiter_gets_lock_on_release() {
+        let m = DeviceLockMgr::new();
+        let s = DeviceSet::range(0, 1);
+        m.acquire("a", &s, 0);
+        let m2 = m.clone();
+        let s2 = s.clone();
+        let done = Arc::new(AtomicUsize::new(0));
+        let d2 = done.clone();
+        let h = thread::spawn(move || {
+            m2.acquire("b", &s2, 1);
+            d2.store(1, Ordering::SeqCst);
+            m2.release("b", &s2);
+        });
+        thread::sleep(Duration::from_millis(20));
+        assert_eq!(done.load(Ordering::SeqCst), 0, "b must block while a holds");
+        assert!(m.was_contended("a", &s), "a sees the waiter -> must offload");
+        m.release("a", &s);
+        h.join().unwrap();
+        assert_eq!(done.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn priority_orders_competing_waiters() {
+        // Holder releases; two waiters contend; the lower-priority number
+        // (upstream stage) must win.
+        let m = DeviceLockMgr::new();
+        let s = DeviceSet::range(0, 1);
+        m.acquire("holder", &s, 0);
+        let order = Arc::new(Mutex::new(Vec::new()));
+
+        let spawn_waiter = |name: &'static str, prio: u64| {
+            let m = m.clone();
+            let s = s.clone();
+            let order = order.clone();
+            thread::spawn(move || {
+                m.acquire(name, &s, prio);
+                order.lock().unwrap().push(name);
+                thread::sleep(Duration::from_millis(5));
+                m.release(name, &s);
+            })
+        };
+        let h_late = spawn_waiter("late_stage", 5);
+        thread::sleep(Duration::from_millis(20)); // late registers first
+        let h_early = spawn_waiter("early_stage", 1);
+        thread::sleep(Duration::from_millis(20));
+        m.release("holder", &s);
+        h_late.join().unwrap();
+        h_early.join().unwrap();
+        let got = order.lock().unwrap().clone();
+        assert_eq!(got, vec!["early_stage", "late_stage"], "priority beats arrival order");
+    }
+
+    #[test]
+    fn no_waiters_means_uncontended() {
+        let m = DeviceLockMgr::new();
+        let s = DeviceSet::range(0, 1);
+        m.acquire("a", &s, 0);
+        assert!(!m.was_contended("a", &s), "no waiter -> keep weights resident");
+    }
+}

@@ -1,0 +1,20 @@
+//! Load-balancing data channels and the distributed device lock (§3.3/§3.5).
+//!
+//! A [`Channel`] is the FIFO, queue-like facility connecting producer and
+//! consumer worker groups; it decouples control flow from data flow, which
+//! is what makes elastic pipelining possible. Items carry a *weight* used
+//! by the balanced dequeue policy, and consumers may install custom
+//! selection policies. The channel records producer/consumer identities so
+//! the workflow graph can be traced just-in-time (§3.4).
+//!
+//! The [`DeviceLockMgr`] is the context-switching primitive: workers that
+//! share devices take the lock before using them; acquisition priority
+//! follows data-flow order so parents always run before children
+//! (deadlock avoidance), and placement information lets disjoint workers
+//! skip locking entirely.
+
+pub mod device_lock;
+pub mod queue;
+
+pub use device_lock::DeviceLockMgr;
+pub use queue::{Channel, ChannelRegistry, Item};

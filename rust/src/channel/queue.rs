@@ -1,0 +1,388 @@
+//! The FIFO data channel with weights, load balancing and tracing.
+
+use std::collections::{BTreeSet, HashMap, VecDeque};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::data::Payload;
+
+/// One enqueued element.
+#[derive(Debug)]
+pub struct Item {
+    pub payload: Payload,
+    /// Load weight (e.g. token count of a response) for balanced dequeue.
+    pub weight: f64,
+}
+
+#[derive(Default)]
+struct State {
+    items: VecDeque<Item>,
+    open_producers: usize,
+    closed: bool,
+    /// Cumulative dequeued weight per consumer (balanced policy).
+    consumer_load: HashMap<String, f64>,
+    /// Observed producer/consumer group names (workflow-graph tracing).
+    producers: BTreeSet<String>,
+    consumers: BTreeSet<String>,
+    total_put: u64,
+    total_got: u64,
+}
+
+struct Inner {
+    name: String,
+    state: Mutex<State>,
+    cv: Condvar,
+}
+
+/// Shared handle to a named data channel.
+#[derive(Clone)]
+pub struct Channel {
+    inner: Arc<Inner>,
+}
+
+impl Channel {
+    pub fn new(name: &str) -> Channel {
+        Channel {
+            inner: Arc::new(Inner {
+                name: name.to_string(),
+                state: Mutex::new(State::default()),
+                cv: Condvar::new(),
+            }),
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.inner.name
+    }
+
+    /// Declare a producer; the channel auto-closes when all producers have
+    /// called [`Channel::producer_done`].
+    pub fn register_producer(&self, who: &str) {
+        let mut s = self.inner.state.lock().unwrap();
+        s.open_producers += 1;
+        s.producers.insert(who.to_string());
+    }
+
+    pub fn producer_done(&self, _who: &str) {
+        let mut s = self.inner.state.lock().unwrap();
+        s.open_producers = s.open_producers.saturating_sub(1);
+        if s.open_producers == 0 {
+            s.closed = true;
+        }
+        drop(s);
+        self.inner.cv.notify_all();
+    }
+
+    /// Force-close (tests / teardown).
+    pub fn close(&self) {
+        self.inner.state.lock().unwrap().closed = true;
+        self.inner.cv.notify_all();
+    }
+
+    /// Enqueue with unit weight.
+    pub fn put(&self, who: &str, payload: Payload) -> Result<()> {
+        self.put_weighted(who, payload, 1.0)
+    }
+
+    pub fn put_weighted(&self, who: &str, payload: Payload, weight: f64) -> Result<()> {
+        let mut s = self.inner.state.lock().unwrap();
+        if s.closed {
+            bail!("channel {}: put after close", self.inner.name);
+        }
+        s.producers.insert(who.to_string());
+        s.items.push_back(Item { payload, weight });
+        s.total_put += 1;
+        drop(s);
+        self.inner.cv.notify_all();
+        Ok(())
+    }
+
+    /// Blocking FIFO dequeue; `None` once closed and drained.
+    pub fn get(&self, who: &str) -> Option<Item> {
+        self.get_with(who, |_| 0)
+    }
+
+    /// Like [`Channel::get`] but returns `None` after `timeout` even if the
+    /// channel is still open — lets controllers poll failure monitors
+    /// instead of blocking forever behind a dead producer.
+    pub fn get_timeout(&self, who: &str, timeout: Duration) -> Option<Item> {
+        let mut s = self.inner.state.lock().unwrap();
+        s.consumers.insert(who.to_string());
+        let deadline = std::time::Instant::now() + timeout;
+        loop {
+            if let Some(item) = s.items.pop_front() {
+                s.total_got += 1;
+                *s.consumer_load.entry(who.to_string()).or_insert(0.0) += item.weight;
+                return Some(item);
+            }
+            if s.closed {
+                return None;
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (st, _) = self.inner.cv.wait_timeout(s, deadline - now).unwrap();
+            s = st;
+        }
+    }
+
+    /// Blocking dequeue with a custom selection policy: the closure sees
+    /// the current queue and returns the index to take (§3.5 custom
+    /// load-balancing policies).
+    pub fn get_with(&self, who: &str, pick: impl Fn(&VecDeque<Item>) -> usize) -> Option<Item> {
+        let mut s = self.inner.state.lock().unwrap();
+        s.consumers.insert(who.to_string());
+        loop {
+            if !s.items.is_empty() {
+                let idx = pick(&s.items).min(s.items.len() - 1);
+                let item = s.items.remove(idx).unwrap();
+                s.total_got += 1;
+                *s.consumer_load.entry(who.to_string()).or_insert(0.0) += item.weight;
+                return Some(item);
+            }
+            if s.closed {
+                return None;
+            }
+            s = self.inner.cv.wait(s).unwrap();
+        }
+    }
+
+    /// Balanced dequeue: hand this consumer the *heaviest* queued item
+    /// (greedy LPT), so cumulative weights equalize across consumers.
+    pub fn get_balanced(&self, who: &str) -> Option<Item> {
+        self.get_with(who, |items| {
+            items
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.weight.total_cmp(&b.1.weight))
+                .map(|(i, _)| i)
+                .unwrap_or(0)
+        })
+    }
+
+    /// Blocking batch dequeue: wait until `n` items (or close), return up
+    /// to `n` in FIFO order. This is the elastic-pipelining entry point —
+    /// the granularity `n` is what the scheduler tunes.
+    pub fn get_batch(&self, who: &str, n: usize) -> Vec<Item> {
+        let mut s = self.inner.state.lock().unwrap();
+        s.consumers.insert(who.to_string());
+        loop {
+            if s.items.len() >= n || (s.closed && !s.items.is_empty()) {
+                let take = n.min(s.items.len());
+                let mut out = Vec::with_capacity(take);
+                let mut w = 0.0;
+                for _ in 0..take {
+                    let it = s.items.pop_front().unwrap();
+                    w += it.weight;
+                    out.push(it);
+                }
+                s.total_got += out.len() as u64;
+                *s.consumer_load.entry(who.to_string()).or_insert(0.0) += w;
+                return out;
+            }
+            if s.closed {
+                return Vec::new();
+            }
+            s = self.inner.cv.wait(s).unwrap();
+        }
+    }
+
+    /// Non-blocking size probe.
+    pub fn len(&self) -> usize {
+        self.inner.state.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.state.lock().unwrap().closed
+    }
+
+    pub fn consumer_load(&self, who: &str) -> f64 {
+        self.inner.state.lock().unwrap().consumer_load.get(who).copied().unwrap_or(0.0)
+    }
+
+    /// Traced (producers, consumers) — the JIT workflow-graph edges.
+    pub fn traced_endpoints(&self) -> (Vec<String>, Vec<String>) {
+        let s = self.inner.state.lock().unwrap();
+        (s.producers.iter().cloned().collect(), s.consumers.iter().cloned().collect())
+    }
+
+    pub fn stats(&self) -> (u64, u64) {
+        let s = self.inner.state.lock().unwrap();
+        (s.total_put, s.total_got)
+    }
+
+    /// Wait (with timeout) until the queue is empty — barrier helper.
+    pub fn wait_drained(&self, timeout: Duration) -> bool {
+        let deadline = std::time::Instant::now() + timeout;
+        loop {
+            if self.is_empty() {
+                return true;
+            }
+            if std::time::Instant::now() > deadline {
+                return false;
+            }
+            std::thread::yield_now();
+        }
+    }
+}
+
+/// Global registry of named channels (the `Channel.create("Data")` API).
+#[derive(Clone, Default)]
+pub struct ChannelRegistry {
+    inner: Arc<Mutex<HashMap<String, Channel>>>,
+}
+
+impl ChannelRegistry {
+    pub fn new() -> ChannelRegistry {
+        ChannelRegistry::default()
+    }
+
+    pub fn create(&self, name: &str) -> Channel {
+        let mut m = self.inner.lock().unwrap();
+        m.entry(name.to_string()).or_insert_with(|| Channel::new(name)).clone()
+    }
+
+    pub fn get(&self, name: &str) -> Option<Channel> {
+        self.inner.lock().unwrap().get(name).cloned()
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.inner.lock().unwrap().keys().cloned().collect()
+    }
+
+    /// Collect traced edges from every channel: (producer, consumer, channel).
+    pub fn traced_edges(&self) -> Vec<(String, String, String)> {
+        let m = self.inner.lock().unwrap();
+        let mut edges = Vec::new();
+        for (name, ch) in m.iter() {
+            let (ps, cs) = ch.traced_endpoints();
+            for p in &ps {
+                for c in &cs {
+                    if p != c {
+                        edges.push((p.clone(), c.clone(), name.clone()));
+                    }
+                }
+            }
+        }
+        edges.sort();
+        edges
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn fifo_order_and_close() {
+        let ch = Channel::new("t");
+        ch.register_producer("p");
+        for i in 0..3i64 {
+            ch.put("p", Payload::new().set_meta("i", i)).unwrap();
+        }
+        ch.producer_done("p");
+        let got: Vec<i64> =
+            std::iter::from_fn(|| ch.get("c").map(|it| it.payload.meta_i64("i").unwrap())).collect();
+        assert_eq!(got, vec![0, 1, 2]);
+        assert!(ch.get("c").is_none(), "closed + drained returns None");
+        assert!(ch.put("p", Payload::new()).is_err(), "put after close fails");
+    }
+
+    #[test]
+    fn get_blocks_until_put() {
+        let ch = Channel::new("t");
+        ch.register_producer("p");
+        let ch2 = ch.clone();
+        let h = thread::spawn(move || ch2.get("c").map(|it| it.payload.meta_i64("x").unwrap()));
+        thread::sleep(Duration::from_millis(20));
+        ch.put("p", Payload::new().set_meta("x", 42i64)).unwrap();
+        assert_eq!(h.join().unwrap(), Some(42));
+    }
+
+    #[test]
+    fn balanced_dequeue_equalizes_load() {
+        let ch = Channel::new("t");
+        ch.register_producer("p");
+        for w in [10.0, 1.0, 9.0, 2.0, 8.0, 3.0] {
+            ch.put_weighted("p", Payload::new(), w).unwrap();
+        }
+        ch.producer_done("p");
+        // Two consumers alternate balanced gets.
+        for _ in 0..3 {
+            ch.get_balanced("a");
+            ch.get_balanced("b");
+        }
+        let (la, lb) = (ch.consumer_load("a"), ch.consumer_load("b"));
+        assert_eq!(la + lb, 33.0);
+        // LPT alternation: a gets 10+9+8? No — strict alternation: a:10,9,8? a gets max each
+        // turn it plays; interleaved a,b,a,b,a,b -> a: 10,9,8=27? b: 1.. actually after a
+        // takes 10, b takes 9, etc. Loads: a=10+8+3=21? Verify only the invariant: the gap
+        // is far smaller than worst-case (33 vs 0) and both consumed 3 items.
+        assert!((la - lb).abs() <= 11.0, "a={la} b={lb}");
+    }
+
+    #[test]
+    fn batch_get_waits_for_granularity() {
+        let ch = Channel::new("t");
+        ch.register_producer("p");
+        let ch2 = ch.clone();
+        let h = thread::spawn(move || ch2.get_batch("c", 3).len());
+        thread::sleep(Duration::from_millis(10));
+        ch.put("p", Payload::new()).unwrap();
+        ch.put("p", Payload::new()).unwrap();
+        thread::sleep(Duration::from_millis(10));
+        ch.put("p", Payload::new()).unwrap();
+        assert_eq!(h.join().unwrap(), 3);
+    }
+
+    #[test]
+    fn batch_get_returns_partial_at_close() {
+        let ch = Channel::new("t");
+        ch.register_producer("p");
+        ch.put("p", Payload::new()).unwrap();
+        ch.producer_done("p");
+        assert_eq!(ch.get_batch("c", 8).len(), 1);
+        assert!(ch.get_batch("c", 8).is_empty());
+    }
+
+    #[test]
+    fn multi_producer_autoclose() {
+        let ch = Channel::new("t");
+        ch.register_producer("p1");
+        ch.register_producer("p2");
+        ch.producer_done("p1");
+        assert!(!ch.is_closed());
+        ch.producer_done("p2");
+        assert!(ch.is_closed());
+    }
+
+    #[test]
+    fn tracing_records_endpoints() {
+        let reg = ChannelRegistry::new();
+        let ch = reg.create("rollout");
+        ch.register_producer("gen");
+        ch.put("gen", Payload::new()).unwrap();
+        ch.close();
+        ch.get("trainer");
+        let edges = reg.traced_edges();
+        assert_eq!(edges, vec![("gen".into(), "trainer".into(), "rollout".into())]);
+    }
+
+    #[test]
+    fn registry_dedups_by_name() {
+        let reg = ChannelRegistry::new();
+        let a = reg.create("x");
+        let b = reg.create("x");
+        a.register_producer("p");
+        a.put("p", Payload::new()).unwrap();
+        assert_eq!(b.len(), 1, "same underlying channel");
+    }
+}

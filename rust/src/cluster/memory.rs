@@ -1,0 +1,113 @@
+//! Per-device memory ledger.
+//!
+//! Tracks tagged reservations ("weights", "kv_cache", "opt_state", ...) per
+//! simulated device. Context switching (§3.3) is driven by this ledger: a
+//! worker that cannot reserve must wait for the current holder to offload.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use super::{DeviceId, DeviceSet};
+
+#[derive(Debug)]
+pub struct MemoryBook {
+    capacity: u64,
+    /// used[device] = sum of reservations.
+    used: Vec<u64>,
+    /// (device, tag) -> bytes.
+    tags: BTreeMap<(usize, String), u64>,
+    peak: u64,
+}
+
+impl MemoryBook {
+    pub fn new(n_devices: usize, capacity: u64) -> MemoryBook {
+        MemoryBook { capacity, used: vec![0; n_devices], tags: BTreeMap::new(), peak: 0 }
+    }
+
+    /// Reserve `bytes` on each device in `set` under `tag`. Atomic: either
+    /// all devices fit or nothing is reserved.
+    pub fn reserve(&mut self, set: &DeviceSet, bytes: u64, tag: &str) -> Result<()> {
+        for d in set.ids() {
+            if self.used[d.0] + bytes > self.capacity {
+                bail!(
+                    "OOM on device {}: {} used + {} requested ({tag}) > {} capacity",
+                    d.0,
+                    self.used[d.0],
+                    bytes,
+                    self.capacity
+                );
+            }
+        }
+        for d in set.ids() {
+            self.used[d.0] += bytes;
+            self.peak = self.peak.max(self.used[d.0]);
+            *self.tags.entry((d.0, tag.to_string())).or_insert(0) += bytes;
+        }
+        Ok(())
+    }
+
+    /// Free everything reserved under `tag` on `set`; returns bytes freed
+    /// on the first device (all devices are symmetric per tag).
+    pub fn free(&mut self, set: &DeviceSet, tag: &str) -> u64 {
+        let mut freed_first = 0;
+        for (i, d) in set.ids().iter().enumerate() {
+            if let Some(b) = self.tags.remove(&(d.0, tag.to_string())) {
+                self.used[d.0] = self.used[d.0].saturating_sub(b);
+                if i == 0 {
+                    freed_first = b;
+                }
+            }
+        }
+        freed_first
+    }
+
+    pub fn used(&self, d: DeviceId) -> u64 {
+        self.used[d.0]
+    }
+
+    pub fn peak(&self) -> u64 {
+        self.peak
+    }
+
+    /// Would `bytes` fit on every device of `set` right now?
+    pub fn fits(&self, set: &DeviceSet, bytes: u64) -> bool {
+        set.ids().iter().all(|d| self.used[d.0] + bytes <= self.capacity)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn atomic_reserve() {
+        let mut m = MemoryBook::new(2, 100);
+        // Pre-load device 1 so a joint reservation must fail atomically.
+        m.reserve(&DeviceSet::range(1, 1), 80, "x").unwrap();
+        let both = DeviceSet::range(0, 2);
+        assert!(m.reserve(&both, 30, "y").is_err());
+        assert_eq!(m.used(DeviceId(0)), 0, "failed reserve must not leak");
+    }
+
+    #[test]
+    fn tags_freed_independently() {
+        let mut m = MemoryBook::new(1, 100);
+        let s = DeviceSet::range(0, 1);
+        m.reserve(&s, 40, "weights").unwrap();
+        m.reserve(&s, 30, "kv").unwrap();
+        assert_eq!(m.free(&s, "weights"), 40);
+        assert_eq!(m.used(DeviceId(0)), 30);
+        assert_eq!(m.free(&s, "weights"), 0, "double free is a no-op");
+        assert_eq!(m.peak(), 70);
+    }
+
+    #[test]
+    fn repeated_same_tag_accumulates() {
+        let mut m = MemoryBook::new(1, 100);
+        let s = DeviceSet::range(0, 1);
+        m.reserve(&s, 10, "kv").unwrap();
+        m.reserve(&s, 15, "kv").unwrap();
+        assert_eq!(m.free(&s, "kv"), 25);
+    }
+}

@@ -1,0 +1,21 @@
+//! Adaptive communication (§3.5): placement-aware backend selection,
+//! transparent connection lifecycle, and structure-aware payload transport.
+//!
+//! Any registered worker can message any other regardless of placement.
+//! The manager picks the cheapest backend from the two endpoints' device
+//! placement:
+//!
+//! | placement                    | backend     | analog in the paper |
+//! |------------------------------|-------------|---------------------|
+//! | overlapping device sets      | `IntraProc` | zero-copy cudaIPC   |
+//! | same node, disjoint devices  | `Shm`       | NVLink / NCCL       |
+//! | different nodes              | `Sock`      | RDMA / Gloo         |
+//!
+//! `IntraProc` moves the `Arc`-backed tensors (no copy); `Shm` deep-copies
+//! once; `Sock` deep-copies and pays the configured inter-node latency.
+//! Connections are established lazily on first send and torn down when an
+//! endpoint unregisters (the connection-manager protocol of §3.5).
+
+pub mod p2p;
+
+pub use p2p::{BackendKind, CommManager, Mailbox, Message};

@@ -1,0 +1,271 @@
+//! Point-to-point + collective primitives over in-process mailboxes.
+
+use std::collections::{BTreeSet, HashMap};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::cluster::{Cluster, DeviceSet};
+use crate::data::Payload;
+use crate::metrics::Metrics;
+
+/// Transport chosen for a (src, dst) pair.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Overlapping device sets: zero-copy Arc move (≙ cudaIPC).
+    IntraProc,
+    /// Same simulated node: one buffer copy (≙ NVLink NCCL).
+    Shm,
+    /// Cross-node: buffer copy plus per-message latency (≙ RoCE/Gloo).
+    Sock,
+}
+
+impl BackendKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendKind::IntraProc => "intraproc",
+            BackendKind::Shm => "shm",
+            BackendKind::Sock => "sock",
+        }
+    }
+}
+
+/// A delivered message.
+#[derive(Debug)]
+pub struct Message {
+    pub src: String,
+    pub payload: Payload,
+    pub backend: BackendKind,
+}
+
+struct Endpoint {
+    tx: Sender<Message>,
+    devices: DeviceSet,
+    node: usize,
+}
+
+struct Inner {
+    cluster: Cluster,
+    metrics: Metrics,
+    endpoints: Mutex<HashMap<String, Endpoint>>,
+    /// Lazily-established logical connections (the connection manager).
+    connections: Mutex<BTreeSet<(String, String)>>,
+}
+
+/// Shared communication manager; the "data plane" handle every worker gets.
+#[derive(Clone)]
+pub struct CommManager {
+    inner: Arc<Inner>,
+}
+
+/// Receiving side of a worker's registration.
+pub struct Mailbox {
+    pub name: String,
+    rx: Receiver<Message>,
+}
+
+impl Mailbox {
+    /// Blocking receive.
+    pub fn recv(&self) -> Result<Message> {
+        self.rx.recv().map_err(|_| anyhow!("mailbox {}: all senders dropped", self.name))
+    }
+
+    pub fn recv_timeout(&self, d: Duration) -> Result<Message> {
+        self.rx
+            .recv_timeout(d)
+            .map_err(|e| anyhow!("mailbox {}: {e}", self.name))
+    }
+
+    pub fn try_recv(&self) -> Option<Message> {
+        self.rx.try_recv().ok()
+    }
+}
+
+impl CommManager {
+    pub fn new(cluster: Cluster, metrics: Metrics) -> CommManager {
+        CommManager {
+            inner: Arc::new(Inner {
+                cluster,
+                metrics,
+                endpoints: Mutex::new(HashMap::new()),
+                connections: Mutex::new(BTreeSet::new()),
+            }),
+        }
+    }
+
+    /// Register a worker endpoint; placement drives backend selection.
+    pub fn register(&self, name: &str, devices: DeviceSet) -> Result<Mailbox> {
+        let (tx, rx) = channel();
+        let node = devices.ids().first().map(|d| self.inner.cluster.node_of(*d)).unwrap_or(0);
+        let mut eps = self.inner.endpoints.lock().unwrap();
+        if eps.contains_key(name) {
+            bail!("endpoint {name:?} already registered");
+        }
+        eps.insert(name.to_string(), Endpoint { tx, devices, node });
+        Ok(Mailbox { name: name.to_string(), rx })
+    }
+
+    /// Unregister and tear down all of this endpoint's connections.
+    pub fn unregister(&self, name: &str) {
+        self.inner.endpoints.lock().unwrap().remove(name);
+        let mut conns = self.inner.connections.lock().unwrap();
+        let before = conns.len();
+        conns.retain(|(a, b)| a != name && b != name);
+        let torn = before - conns.len();
+        if torn > 0 {
+            self.inner.metrics.record_value("comm.teardown", torn as f64);
+        }
+    }
+
+    /// Decide the transport for a pair of registered endpoints.
+    pub fn backend_between(&self, src: &str, dst: &str) -> Result<BackendKind> {
+        let eps = self.inner.endpoints.lock().unwrap();
+        let s = eps.get(src).ok_or_else(|| anyhow!("unknown src {src:?}"))?;
+        let d = eps.get(dst).ok_or_else(|| anyhow!("unknown dst {dst:?}"))?;
+        Ok(if s.devices.intersects(&d.devices) {
+            BackendKind::IntraProc
+        } else if s.node == d.node {
+            BackendKind::Shm
+        } else {
+            BackendKind::Sock
+        })
+    }
+
+    /// Point-to-point send. Synchronous variant: the payload is handed to
+    /// the transport before returning (the async variant is just this plus
+    /// the caller not waiting on a reply channel — sends never block on the
+    /// receiver here, mirroring eager RDMA writes).
+    pub fn send(&self, src: &str, dst: &str, payload: Payload) -> Result<BackendKind> {
+        let backend = self.backend_between(src, dst)?;
+        // Lazy connection establishment.
+        {
+            let key = (src.to_string(), dst.to_string());
+            let mut conns = self.inner.connections.lock().unwrap();
+            if conns.insert(key) {
+                self.inner.metrics.record_value("comm.connect", 1.0);
+            }
+        }
+        let t0 = Instant::now();
+        let bytes = payload.wire_bytes();
+        let delivered = match backend {
+            BackendKind::IntraProc => payload, // Arc move, zero copy
+            BackendKind::Shm => payload.deep_copy(),
+            BackendKind::Sock => {
+                let p = payload.deep_copy();
+                spin_for(self.inner.cluster.config().internode_latency);
+                p
+            }
+        };
+        let tx = {
+            let eps = self.inner.endpoints.lock().unwrap();
+            eps.get(dst).ok_or_else(|| anyhow!("unknown dst {dst:?}"))?.tx.clone()
+        };
+        tx.send(Message { src: src.to_string(), payload: delivered, backend })
+            .map_err(|_| anyhow!("endpoint {dst:?} hung up"))?;
+        let m = &self.inner.metrics;
+        m.record(&format!("comm.send.{}", backend.name()), t0.elapsed().as_secs_f64());
+        m.record_value("comm.bytes", bytes as f64);
+        Ok(backend)
+    }
+
+    /// Collective broadcast from `src` to every destination.
+    pub fn broadcast(&self, src: &str, dsts: &[&str], payload: &Payload) -> Result<()> {
+        for d in dsts {
+            self.send(src, d, payload.clone())?;
+        }
+        Ok(())
+    }
+
+    pub fn connection_count(&self) -> usize {
+        self.inner.connections.lock().unwrap().len()
+    }
+
+    pub fn endpoints(&self) -> Vec<String> {
+        self.inner.endpoints.lock().unwrap().keys().cloned().collect()
+    }
+}
+
+/// Busy-wait for a short simulated latency (sleep has ~50µs granularity,
+/// too coarse for 25µs NIC latencies).
+fn spin_for(secs: f64) {
+    let t0 = Instant::now();
+    while t0.elapsed().as_secs_f64() < secs {
+        std::hint::spin_loop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+    use crate::data::Tensor;
+
+    fn mgr(nodes: usize, dpn: usize) -> CommManager {
+        let cluster = Cluster::new(ClusterConfig {
+            nodes,
+            devices_per_node: dpn,
+            internode_latency: 1e-5,
+            ..Default::default()
+        });
+        CommManager::new(cluster, Metrics::new())
+    }
+
+    #[test]
+    fn backend_selection_by_placement() {
+        let c = mgr(2, 2);
+        let _a = c.register("a", DeviceSet::range(0, 1)).unwrap();
+        let _b = c.register("b", DeviceSet::range(0, 2)).unwrap(); // overlaps a
+        let _c2 = c.register("c", DeviceSet::range(1, 1)).unwrap(); // same node as a
+        let _d = c.register("d", DeviceSet::range(2, 1)).unwrap(); // other node
+        assert_eq!(c.backend_between("a", "b").unwrap(), BackendKind::IntraProc);
+        assert_eq!(c.backend_between("a", "c").unwrap(), BackendKind::Shm);
+        assert_eq!(c.backend_between("a", "d").unwrap(), BackendKind::Sock);
+    }
+
+    #[test]
+    fn send_receive_roundtrip() {
+        let c = mgr(1, 2);
+        let _a = c.register("a", DeviceSet::range(0, 1)).unwrap();
+        let b = c.register("b", DeviceSet::range(1, 1)).unwrap();
+        let p = Payload::from_named(vec![("x", Tensor::from_f32(vec![2], &[1.0, 2.0]).unwrap())]);
+        c.send("a", "b", p).unwrap();
+        let msg = b.recv().unwrap();
+        assert_eq!(msg.src, "a");
+        assert_eq!(msg.backend, BackendKind::Shm);
+        assert_eq!(msg.payload.tensor("x").unwrap().to_f32().unwrap(), vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn lazy_connections_and_teardown() {
+        let c = mgr(1, 2);
+        let _a = c.register("a", DeviceSet::range(0, 1)).unwrap();
+        let _b = c.register("b", DeviceSet::range(1, 1)).unwrap();
+        assert_eq!(c.connection_count(), 0);
+        c.send("a", "b", Payload::new()).unwrap();
+        c.send("a", "b", Payload::new()).unwrap();
+        assert_eq!(c.connection_count(), 1, "connection reused");
+        c.unregister("b");
+        assert_eq!(c.connection_count(), 0, "teardown on unregister");
+        assert!(c.send("a", "b", Payload::new()).is_err());
+    }
+
+    #[test]
+    fn duplicate_registration_rejected() {
+        let c = mgr(1, 1);
+        let _a = c.register("a", DeviceSet::range(0, 1)).unwrap();
+        assert!(c.register("a", DeviceSet::range(0, 1)).is_err());
+    }
+
+    #[test]
+    fn broadcast_reaches_all() {
+        let c = mgr(1, 4);
+        let _s = c.register("s", DeviceSet::range(0, 1)).unwrap();
+        let r1 = c.register("r1", DeviceSet::range(1, 1)).unwrap();
+        let r2 = c.register("r2", DeviceSet::range(2, 1)).unwrap();
+        c.broadcast("s", &["r1", "r2"], &Payload::new().set_meta("k", 1i64)).unwrap();
+        assert_eq!(r1.recv().unwrap().payload.meta_i64("k"), Some(1));
+        assert_eq!(r2.recv().unwrap().payload.meta_i64("k"), Some(1));
+    }
+}

@@ -1,0 +1,176 @@
+//! TOML-subset configuration loader.
+//!
+//! Supports the subset real launcher configs use: `[section]` and
+//! `[nested.section]` headers, `key = value` pairs with strings, integers,
+//! floats, booleans, and flat arrays, plus `#` comments. Parsed into the
+//! same [`Value`] tree as JSON so the typed config layer has one input
+//! format, and CLI `--set a.b.c=v` overrides can be applied uniformly.
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Value;
+
+/// Parse TOML-subset text into a [`Value::Obj`] tree.
+pub fn parse_toml(text: &str) -> Result<Value> {
+    let mut root = Value::obj();
+    let mut section: Vec<String> = Vec::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(h) = line.strip_prefix('[') {
+            let h = h.strip_suffix(']').with_context(|| format!("line {}: bad section", lineno + 1))?;
+            section = h.split('.').map(|s| s.trim().to_string()).collect();
+            ensure_path(&mut root, &section);
+        } else if let Some((k, v)) = line.split_once('=') {
+            let key = k.trim();
+            let val = parse_value(v.trim()).with_context(|| format!("line {}: bad value", lineno + 1))?;
+            let obj = navigate(&mut root, &section);
+            if let Value::Obj(m) = obj {
+                m.insert(key.to_string(), val);
+            }
+        } else {
+            bail!("line {}: expected `key = value` or `[section]`", lineno + 1);
+        }
+    }
+    Ok(root)
+}
+
+pub fn load_toml_file(path: &str) -> Result<Value> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    parse_toml(&text).with_context(|| format!("parsing {path}"))
+}
+
+/// Apply a `a.b.c=value` override (CLI `--set`) onto a config tree.
+pub fn apply_override(root: &mut Value, spec: &str) -> Result<()> {
+    let (path, raw) = spec.split_once('=').context("override must be path=value")?;
+    let parts: Vec<String> = path.split('.').map(|s| s.trim().to_string()).collect();
+    if parts.is_empty() {
+        bail!("empty override path");
+    }
+    let val = parse_value(raw.trim())?;
+    let (last, dirs) = parts.split_last().unwrap();
+    ensure_path(root, dirs);
+    if let Value::Obj(m) = navigate(root, dirs) {
+        m.insert(last.clone(), val);
+    }
+    Ok(())
+}
+
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn ensure_path(root: &mut Value, path: &[String]) {
+    let mut cur = root;
+    for p in path {
+        if let Value::Obj(m) = cur {
+            cur = m.entry(p.clone()).or_insert_with(Value::obj);
+        } else {
+            return;
+        }
+    }
+}
+
+fn navigate<'a>(root: &'a mut Value, path: &[String]) -> &'a mut Value {
+    let mut cur = root;
+    for p in path {
+        cur = match cur {
+            Value::Obj(m) => m.get_mut(p).expect("ensure_path called first"),
+            _ => unreachable!("path through non-object"),
+        };
+    }
+    cur
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    if s.starts_with('"') && s.ends_with('"') && s.len() >= 2 {
+        return Ok(Value::Str(s[1..s.len() - 1].to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if s.starts_with('[') && s.ends_with(']') {
+        let inner = &s[1..s.len() - 1];
+        let mut items = Vec::new();
+        if !inner.trim().is_empty() {
+            for part in inner.split(',') {
+                items.push(parse_value(part.trim())?);
+            }
+        }
+        return Ok(Value::Arr(items));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    // Bare words are accepted as strings (model names etc.).
+    if s.chars().all(|c| c.is_alphanumeric() || c == '_' || c == '-' || c == '.') {
+        return Ok(Value::Str(s.to_string()));
+    }
+    bail!("cannot parse value {s:?}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let v = parse_toml(
+            r#"
+# top comment
+title = "run1"
+[rollout]
+batch = 32            # trailing comment
+temperature = 0.8
+greedy = false
+sizes = [4, 8, 16]
+[sched.policy]
+mode = auto
+"#,
+        )
+        .unwrap();
+        assert_eq!(v.get_path("title").unwrap().as_str(), Some("run1"));
+        assert_eq!(v.get_path("rollout.batch").unwrap().as_i64(), Some(32));
+        assert_eq!(v.get_path("rollout.temperature").unwrap().as_f64(), Some(0.8));
+        assert_eq!(v.get_path("rollout.greedy").unwrap().as_bool(), Some(false));
+        assert_eq!(v.get_path("rollout.sizes").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(v.get_path("sched.policy.mode").unwrap().as_str(), Some("auto"));
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let v = parse_toml("name = \"a#b\"").unwrap();
+        assert_eq!(v.get_path("name").unwrap().as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn overrides() {
+        let mut v = parse_toml("[a]\nx = 1").unwrap();
+        apply_override(&mut v, "a.x=5").unwrap();
+        apply_override(&mut v, "b.new=\"s\"").unwrap();
+        assert_eq!(v.get_path("a.x").unwrap().as_i64(), Some(5));
+        assert_eq!(v.get_path("b.new").unwrap().as_str(), Some("s"));
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(parse_toml("just words").is_err());
+        assert!(parse_toml("[unclosed").is_err());
+    }
+}

@@ -1,0 +1,314 @@
+//! Typed configuration system for the launcher (Megatron/MaxText-style).
+//!
+//! A run is fully described by a [`RunConfig`]: cluster shape, model
+//! choice, rollout/training hyper-parameters, and scheduler policy. Configs are
+//! loaded from TOML-subset files (`configs/*.toml`), overridden with CLI
+//! `--set path=value`, and validated before launch.
+
+pub mod loader;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Value;
+
+/// Execution placement policy requested by the user (the scheduler refines
+/// `Auto` into a concrete plan via Algorithm 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlacementMode {
+    /// Every phase owns all devices sequentially (veRL-style).
+    Collocated,
+    /// Phases own disjoint device sets and pipeline (AReaL-style).
+    Disaggregated,
+    /// Mixed spatial + temporal (the paper's hybrid mode).
+    Hybrid,
+    /// Profiling-guided Algorithm-1 search.
+    Auto,
+}
+
+impl PlacementMode {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "collocated" => PlacementMode::Collocated,
+            "disaggregated" => PlacementMode::Disaggregated,
+            "hybrid" => PlacementMode::Hybrid,
+            "auto" => PlacementMode::Auto,
+            other => bail!("unknown placement mode {other:?}"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PlacementMode::Collocated => "collocated",
+            PlacementMode::Disaggregated => "disaggregated",
+            PlacementMode::Hybrid => "hybrid",
+            PlacementMode::Auto => "auto",
+        }
+    }
+}
+
+/// Simulated cluster shape (DESIGN.md §Hardware-Adaptation).
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    pub nodes: usize,
+    pub devices_per_node: usize,
+    /// Per-device memory capacity in bytes (default 8 GiB-sim).
+    pub device_mem: u64,
+    /// Simulated inter-node per-message latency (seconds).
+    pub internode_latency: f64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            nodes: 1,
+            devices_per_node: 4,
+            device_mem: 8 << 30,
+            internode_latency: 25e-6,
+        }
+    }
+}
+
+impl ClusterConfig {
+    pub fn total_devices(&self) -> usize {
+        self.nodes * self.devices_per_node
+    }
+}
+
+/// Rollout (generation) phase configuration.
+#[derive(Debug, Clone)]
+pub struct RolloutConfig {
+    /// Prompts per training iteration (paper: "rollout batch size").
+    pub batch: usize,
+    /// Responses per prompt (GRPO group size).
+    pub group_size: usize,
+    pub temperature: f32,
+    /// Hard cap on generated tokens (model's max_new bounds this).
+    pub max_new: usize,
+    /// Use the easy single-digit task tier (tiny-model E2E demos).
+    pub easy_tasks: bool,
+}
+
+impl Default for RolloutConfig {
+    fn default() -> Self {
+        RolloutConfig { batch: 32, group_size: 4, temperature: 1.0, max_new: 48, easy_tasks: false }
+    }
+}
+
+/// Training phase configuration.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub micro_batch: usize,
+    pub lr: f32,
+    pub eps_clip: f32,
+    pub kl_coef: f32,
+    /// Skip micro-batches whose mean importance ratio exceeds this bound
+    /// (the paper's minibatch early-stop stabilizer).
+    pub ratio_early_stop: f32,
+    /// Supervised warm-start steps before RL (the paper RL-trains SFT'd
+    /// base checkpoints; 0 = start from random init).
+    pub sft_steps: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig { micro_batch: 8, lr: 3e-4, eps_clip: 0.2, kl_coef: 0.0, ratio_early_stop: 4.0, sft_steps: 0 }
+    }
+}
+
+/// Scheduler configuration.
+#[derive(Debug, Clone)]
+pub struct SchedConfig {
+    pub mode: PlacementMode,
+    /// Devices granted to generation under a manual disaggregated split
+    /// (remaining devices go to inference+training).
+    pub gen_devices: usize,
+    /// Elastic pipelining granularity hint (0 = let the scheduler pick).
+    pub granularity: usize,
+    /// Profile steps per phase when profiling is enabled.
+    pub profile_iters: usize,
+}
+
+impl Default for SchedConfig {
+    fn default() -> Self {
+        SchedConfig { mode: PlacementMode::Auto, gen_devices: 0, granularity: 0, profile_iters: 2 }
+    }
+}
+
+/// Embodied-workload configuration (ManiSkill-like / LIBERO-like).
+#[derive(Debug, Clone)]
+pub struct EmbodiedConfig {
+    /// Parallel environments (paper Table 3: 256 / 512).
+    pub num_envs: usize,
+    /// Steps per rollout (paper Table 3: 80 / 64).
+    pub horizon: usize,
+    /// "maniskill" (GPU-profile sim) or "libero" (CPU-bound sim).
+    pub env_kind: String,
+    pub gamma: f32,
+    pub gae_lambda: f32,
+}
+
+impl Default for EmbodiedConfig {
+    fn default() -> Self {
+        EmbodiedConfig {
+            num_envs: 256,
+            horizon: 80,
+            env_kind: "maniskill".to_string(),
+            gamma: 0.99,
+            gae_lambda: 0.95,
+        }
+    }
+}
+
+/// Full run description.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// Model name in the artifact manifest ("tiny", "small", "pickplace").
+    pub model: String,
+    pub artifacts_dir: String,
+    pub seed: u64,
+    pub iters: usize,
+    pub cluster: ClusterConfig,
+    pub rollout: RolloutConfig,
+    pub train: TrainConfig,
+    pub sched: SchedConfig,
+    pub embodied: EmbodiedConfig,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            model: "tiny".to_string(),
+            artifacts_dir: "artifacts".to_string(),
+            seed: 0,
+            iters: 10,
+            cluster: ClusterConfig::default(),
+            rollout: RolloutConfig::default(),
+            train: TrainConfig::default(),
+            sched: SchedConfig::default(),
+            embodied: EmbodiedConfig::default(),
+        }
+    }
+}
+
+macro_rules! get_num {
+    ($v:expr, $path:expr, $field:expr, $conv:ident) => {
+        if let Some(x) = $v.get_path($path).and_then(Value::$conv) {
+            $field = x as _;
+        }
+    };
+}
+
+impl RunConfig {
+    /// Build from a parsed TOML/JSON tree, keeping defaults for absent keys.
+    pub fn from_value(v: &Value) -> Result<RunConfig> {
+        let mut c = RunConfig::default();
+        if let Some(s) = v.get_path("model").and_then(Value::as_str) {
+            c.model = s.to_string();
+        }
+        if let Some(s) = v.get_path("artifacts_dir").and_then(Value::as_str) {
+            c.artifacts_dir = s.to_string();
+        }
+        get_num!(v, "seed", c.seed, as_i64);
+        get_num!(v, "iters", c.iters, as_usize);
+
+        get_num!(v, "cluster.nodes", c.cluster.nodes, as_usize);
+        get_num!(v, "cluster.devices_per_node", c.cluster.devices_per_node, as_usize);
+        get_num!(v, "cluster.device_mem", c.cluster.device_mem, as_i64);
+        get_num!(v, "cluster.internode_latency", c.cluster.internode_latency, as_f64);
+
+        get_num!(v, "rollout.batch", c.rollout.batch, as_usize);
+        get_num!(v, "rollout.group_size", c.rollout.group_size, as_usize);
+        get_num!(v, "rollout.temperature", c.rollout.temperature, as_f64);
+        get_num!(v, "rollout.max_new", c.rollout.max_new, as_usize);
+
+        get_num!(v, "train.micro_batch", c.train.micro_batch, as_usize);
+        get_num!(v, "train.lr", c.train.lr, as_f64);
+        get_num!(v, "train.eps_clip", c.train.eps_clip, as_f64);
+        get_num!(v, "train.kl_coef", c.train.kl_coef, as_f64);
+        get_num!(v, "train.ratio_early_stop", c.train.ratio_early_stop, as_f64);
+        get_num!(v, "train.sft_steps", c.train.sft_steps, as_usize);
+
+        if let Some(s) = v.get_path("sched.mode").and_then(Value::as_str) {
+            c.sched.mode = PlacementMode::parse(s)?;
+        }
+        get_num!(v, "sched.gen_devices", c.sched.gen_devices, as_usize);
+        get_num!(v, "sched.granularity", c.sched.granularity, as_usize);
+        get_num!(v, "sched.profile_iters", c.sched.profile_iters, as_usize);
+
+        get_num!(v, "embodied.num_envs", c.embodied.num_envs, as_usize);
+        get_num!(v, "embodied.horizon", c.embodied.horizon, as_usize);
+        if let Some(s) = v.get_path("embodied.env_kind").and_then(Value::as_str) {
+            c.embodied.env_kind = s.to_string();
+        }
+        get_num!(v, "embodied.gamma", c.embodied.gamma, as_f64);
+        get_num!(v, "embodied.gae_lambda", c.embodied.gae_lambda, as_f64);
+
+        c.validate()?;
+        Ok(c)
+    }
+
+    pub fn load(path: &str, overrides: &[String]) -> Result<RunConfig> {
+        let mut tree = loader::load_toml_file(path)?;
+        for o in overrides {
+            loader::apply_override(&mut tree, o).with_context(|| format!("--set {o}"))?;
+        }
+        RunConfig::from_value(&tree)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.cluster.total_devices() == 0 {
+            bail!("cluster has zero devices");
+        }
+        if self.rollout.batch == 0 || self.rollout.group_size == 0 {
+            bail!("rollout.batch and rollout.group_size must be positive");
+        }
+        if self.train.micro_batch == 0 {
+            bail!("train.micro_batch must be positive");
+        }
+        if !(self.train.eps_clip > 0.0 && self.train.eps_clip < 1.0) {
+            bail!("train.eps_clip must be in (0, 1)");
+        }
+        if self.sched.gen_devices > self.cluster.total_devices() {
+            bail!("sched.gen_devices exceeds the cluster size");
+        }
+        Ok(())
+    }
+
+    /// Total responses per iteration (batch × group size).
+    pub fn responses_per_iter(&self) -> usize {
+        self.rollout.batch * self.rollout.group_size
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::loader::parse_toml;
+
+    #[test]
+    fn defaults_validate() {
+        RunConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn from_toml_tree() {
+        let v = parse_toml(
+            "model = small\niters = 3\n[cluster]\nnodes = 2\ndevices_per_node = 8\n\
+             [rollout]\nbatch = 64\ngroup_size = 8\n[sched]\nmode = hybrid\n",
+        )
+        .unwrap();
+        let c = RunConfig::from_value(&v).unwrap();
+        assert_eq!(c.model, "small");
+        assert_eq!(c.cluster.total_devices(), 16);
+        assert_eq!(c.responses_per_iter(), 512);
+        assert_eq!(c.sched.mode, PlacementMode::Hybrid);
+    }
+
+    #[test]
+    fn invalid_rejected() {
+        let v = parse_toml("[rollout]\nbatch = 0").unwrap();
+        assert!(RunConfig::from_value(&v).is_err());
+        let v = parse_toml("[sched]\nmode = wat").unwrap();
+        assert!(RunConfig::from_value(&v).is_err());
+    }
+}

@@ -1,0 +1,13 @@
+//! Cross-worker data representation: host tensors and structured payloads.
+//!
+//! Workers on different threads (≙ processes on different nodes in the
+//! paper) exchange [`Payload`]s: a JSON-like metadata tree plus a flat list
+//! of binary tensors. This mirrors RLinf's structure-aware serialization —
+//! tensor bytes are moved/copied as raw buffers and never pass through the
+//! metadata encoder (§3.5).
+
+pub mod payload;
+pub mod tensor;
+
+pub use payload::Payload;
+pub use tensor::{DType, Tensor};

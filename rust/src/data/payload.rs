@@ -1,0 +1,152 @@
+//! Structured communication payload: metadata tree + tensor list.
+//!
+//! The paper's adaptive primitives carry "arbitrary Python objects" whose
+//! embedded buffers are extracted and sent raw, with structure information
+//! piggybacked in metadata (§3.5). [`Payload`] is the Rust equivalent:
+//! `meta` is a JSON-like tree (cheap, structure-aware encode/decode) and
+//! `tensors` are the extracted buffers, transported by the backend without
+//! re-encoding.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+use super::tensor::Tensor;
+use crate::util::json::Value;
+
+#[derive(Debug, Clone, Default)]
+pub struct Payload {
+    pub meta: Value,
+    pub tensors: Vec<Tensor>,
+}
+
+impl Default for Value {
+    fn default() -> Self {
+        Value::Null
+    }
+}
+
+impl Payload {
+    pub fn new() -> Payload {
+        Payload { meta: Value::obj(), tensors: Vec::new() }
+    }
+
+    pub fn with_meta(meta: Value) -> Payload {
+        Payload { meta, tensors: Vec::new() }
+    }
+
+    /// Build from named tensors; names land in `meta.tensor_names` so the
+    /// receiver can address them positionally or by name.
+    pub fn from_named(pairs: Vec<(&str, Tensor)>) -> Payload {
+        let mut meta = Value::obj();
+        let mut names = Vec::new();
+        let mut tensors = Vec::new();
+        for (name, t) in pairs {
+            names.push(Value::Str(name.to_string()));
+            tensors.push(t);
+        }
+        meta.set("tensor_names", Value::Arr(names));
+        Payload { meta, tensors }
+    }
+
+    pub fn set_meta(mut self, key: &str, v: impl Into<Value>) -> Payload {
+        self.meta.set(key, v);
+        self
+    }
+
+    pub fn push(mut self, t: Tensor) -> Payload {
+        self.tensors.push(t);
+        self
+    }
+
+    pub fn meta_str(&self, key: &str) -> Option<&str> {
+        self.meta.get(key).and_then(Value::as_str)
+    }
+
+    pub fn meta_i64(&self, key: &str) -> Option<i64> {
+        self.meta.get(key).and_then(Value::as_i64)
+    }
+
+    pub fn meta_f64(&self, key: &str) -> Option<f64> {
+        self.meta.get(key).and_then(Value::as_f64)
+    }
+
+    /// Look up a tensor by its `tensor_names` entry.
+    pub fn tensor(&self, name: &str) -> Result<&Tensor> {
+        let names = self
+            .meta
+            .get("tensor_names")
+            .and_then(Value::as_arr)
+            .ok_or_else(|| anyhow!("payload has no tensor_names"))?;
+        let idx = names
+            .iter()
+            .position(|v| v.as_str() == Some(name))
+            .ok_or_else(|| anyhow!("payload has no tensor {name:?}"))?;
+        self.tensors.get(idx).ok_or_else(|| anyhow!("tensor index {idx} out of range"))
+    }
+
+    /// Total tensor bytes (what a transport would put on the wire).
+    pub fn wire_bytes(&self) -> usize {
+        self.tensors.iter().map(Tensor::byte_len).sum::<usize>() + self.meta.to_json().len()
+    }
+
+    /// Deep copy (memcpy transports); `clone()` shares tensor storage.
+    pub fn deep_copy(&self) -> Payload {
+        Payload {
+            meta: self.meta.clone(),
+            tensors: self.tensors.iter().map(Tensor::deep_copy).collect(),
+        }
+    }
+
+    /// Number of "items" this payload represents in a data channel —
+    /// defaults to meta.batch, else the axis-0 extent of the first tensor,
+    /// else 1. This is the granularity unit of elastic pipelining.
+    pub fn batch_size(&self) -> usize {
+        if let Some(b) = self.meta_i64("batch") {
+            return b.max(0) as usize;
+        }
+        self.tensors.first().and_then(|t| t.shape.first().copied()).unwrap_or(1)
+    }
+}
+
+/// Helper to assemble object metadata inline.
+pub fn meta(pairs: &[(&str, Value)]) -> Value {
+    let mut m = BTreeMap::new();
+    for (k, v) in pairs {
+        m.insert(k.to_string(), v.clone());
+    }
+    Value::Obj(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::tensor::Tensor;
+
+    #[test]
+    fn named_lookup() {
+        let p = Payload::from_named(vec![
+            ("a", Tensor::scalar_f32(1.0)),
+            ("b", Tensor::scalar_f32(2.0)),
+        ]);
+        assert_eq!(p.tensor("b").unwrap().scalar_as_f32(), 2.0);
+        assert!(p.tensor("c").is_err());
+    }
+
+    #[test]
+    fn batch_size_fallbacks() {
+        let t = Tensor::from_f32(vec![8, 2], &[0.0; 16]).unwrap();
+        let p = Payload::new().push(t);
+        assert_eq!(p.batch_size(), 8);
+        let p2 = p.set_meta("batch", 3i64);
+        assert_eq!(p2.batch_size(), 3);
+        assert_eq!(Payload::new().batch_size(), 1);
+    }
+
+    #[test]
+    fn deep_copy_detaches() {
+        let p = Payload::from_named(vec![("x", Tensor::from_f32(vec![2], &[1.0, 2.0]).unwrap())]);
+        let d = p.deep_copy();
+        assert_eq!(d.tensor("x").unwrap().to_f32().unwrap(), vec![1.0, 2.0]);
+    }
+}

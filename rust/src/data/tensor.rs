@@ -1,0 +1,226 @@
+//! Host-side tensor: dtype + shape + shared byte buffer.
+//!
+//! `Arc<Vec<u8>>` backing makes intra-process "communication" a pointer
+//! move (the cudaIPC-analog fast path) while copies remain explicit for the
+//! memcpy-backed backends.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+/// Element type of the tensors crossing the runtime boundary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    I32,
+    U32,
+}
+
+impl DType {
+    pub fn size(self) -> usize {
+        4
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::F32 => "float32",
+            DType::I32 => "int32",
+            DType::U32 => "uint32",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Result<DType> {
+        Ok(match s {
+            "float32" | "f32" => DType::F32,
+            "int32" | "i32" => DType::I32,
+            "uint32" | "u32" => DType::U32,
+            other => bail!("unsupported dtype {other:?}"),
+        })
+    }
+}
+
+/// An n-dimensional host tensor with shared storage.
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+    data: Arc<Vec<u8>>,
+}
+
+impl Tensor {
+    pub fn from_bytes(dtype: DType, shape: Vec<usize>, data: Vec<u8>) -> Result<Tensor> {
+        let want = shape.iter().product::<usize>() * dtype.size();
+        if data.len() != want {
+            bail!("tensor bytes {} != shape {:?} * {}", data.len(), shape, dtype.size());
+        }
+        Ok(Tensor { dtype, shape, data: Arc::new(data) })
+    }
+
+    pub fn from_f32(shape: Vec<usize>, vals: &[f32]) -> Result<Tensor> {
+        let mut bytes = Vec::with_capacity(vals.len() * 4);
+        for v in vals {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        Tensor::from_bytes(DType::F32, shape, bytes)
+    }
+
+    pub fn from_i32(shape: Vec<usize>, vals: &[i32]) -> Result<Tensor> {
+        let mut bytes = Vec::with_capacity(vals.len() * 4);
+        for v in vals {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        Tensor::from_bytes(DType::I32, shape, bytes)
+    }
+
+    pub fn scalar_f32(v: f32) -> Tensor {
+        Tensor::from_f32(vec![], &[v]).unwrap()
+    }
+
+    pub fn scalar_i32(v: i32) -> Tensor {
+        Tensor::from_i32(vec![], &[v]).unwrap()
+    }
+
+    pub fn scalar_u32(v: u32) -> Tensor {
+        Tensor::from_bytes(DType::U32, vec![], v.to_le_bytes().to_vec()).unwrap()
+    }
+
+    pub fn zeros(dtype: DType, shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product::<usize>() * dtype.size();
+        Tensor { dtype, shape, data: Arc::new(vec![0u8; n]) }
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn byte_len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn bytes(&self) -> &[u8] {
+        &self.data
+    }
+
+    /// Deep copy of the backing storage (used by the memcpy comm backends).
+    pub fn deep_copy(&self) -> Tensor {
+        Tensor { dtype: self.dtype, shape: self.shape.clone(), data: Arc::new((*self.data).clone()) }
+    }
+
+    pub fn to_f32(&self) -> Result<Vec<f32>> {
+        if self.dtype != DType::F32 {
+            bail!("tensor is {:?}, not F32", self.dtype);
+        }
+        Ok(self.data.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+    }
+
+    pub fn to_i32(&self) -> Result<Vec<i32>> {
+        if self.dtype != DType::I32 {
+            bail!("tensor is {:?}, not I32", self.dtype);
+        }
+        Ok(self.data.chunks_exact(4).map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+    }
+
+    pub fn f32_at(&self, idx: usize) -> f32 {
+        let o = idx * 4;
+        f32::from_le_bytes([self.data[o], self.data[o + 1], self.data[o + 2], self.data[o + 3]])
+    }
+
+    pub fn i32_at(&self, idx: usize) -> i32 {
+        let o = idx * 4;
+        i32::from_le_bytes([self.data[o], self.data[o + 1], self.data[o + 2], self.data[o + 3]])
+    }
+
+    /// Scalar convenience (shape [] or [1]).
+    pub fn scalar_as_f32(&self) -> f32 {
+        self.f32_at(0)
+    }
+
+    /// Concatenate along axis 0. All tensors must share trailing dims/dtype.
+    pub fn concat0(parts: &[Tensor]) -> Result<Tensor> {
+        let first = parts.first().ok_or_else(|| anyhow::anyhow!("concat0 of nothing"))?;
+        let mut rows = 0usize;
+        let tail: Vec<usize> = first.shape.iter().skip(1).copied().collect();
+        let mut bytes = Vec::new();
+        for p in parts {
+            if p.dtype != first.dtype || p.shape.len() != first.shape.len()
+                || p.shape[1..] != first.shape[1..]
+            {
+                bail!("concat0 shape mismatch: {:?} vs {:?}", p.shape, first.shape);
+            }
+            rows += p.shape[0];
+            bytes.extend_from_slice(p.bytes());
+        }
+        let mut shape = vec![rows];
+        shape.extend(tail);
+        Tensor::from_bytes(first.dtype, shape, bytes)
+    }
+
+    /// View a rank-1 tensor as a single-row rank-2 tensor `[1, n]`.
+    pub fn into_row(self) -> Tensor {
+        let n = self.element_count();
+        Tensor { dtype: self.dtype, shape: vec![1, n], data: self.data }
+    }
+
+    /// Flatten to rank-1.
+    pub fn flatten(self) -> Tensor {
+        let n = self.element_count();
+        Tensor { dtype: self.dtype, shape: vec![n], data: self.data }
+    }
+
+    /// Slice rows `[start, start+len)` along axis 0 (copies).
+    pub fn slice0(&self, start: usize, len: usize) -> Result<Tensor> {
+        if self.shape.is_empty() || start + len > self.shape[0] {
+            bail!("slice0 [{start}, {}) out of bounds for {:?}", start + len, self.shape);
+        }
+        let row = self.shape[1..].iter().product::<usize>() * self.dtype.size();
+        let bytes = self.data[start * row..(start + len) * row].to_vec();
+        let mut shape = vec![len];
+        shape.extend_from_slice(&self.shape[1..]);
+        Tensor::from_bytes(self.dtype, shape, bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_f32() {
+        let t = Tensor::from_f32(vec![2, 2], &[1.0, 2.0, 3.0, 4.0]).unwrap();
+        assert_eq!(t.to_f32().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(t.element_count(), 4);
+        assert_eq!(t.byte_len(), 16);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(Tensor::from_f32(vec![3], &[1.0]).is_err());
+    }
+
+    #[test]
+    fn clone_shares_copy_does_not() {
+        let t = Tensor::from_f32(vec![1], &[5.0]).unwrap();
+        let c = t.clone();
+        assert!(Arc::ptr_eq(&t.data, &c.data));
+        let d = t.deep_copy();
+        assert!(!Arc::ptr_eq(&t.data, &d.data));
+    }
+
+    #[test]
+    fn concat_and_slice_roundtrip() {
+        let a = Tensor::from_i32(vec![2, 3], &[1, 2, 3, 4, 5, 6]).unwrap();
+        let b = Tensor::from_i32(vec![1, 3], &[7, 8, 9]).unwrap();
+        let c = Tensor::concat0(&[a.clone(), b]).unwrap();
+        assert_eq!(c.shape, vec![3, 3]);
+        let s = c.slice0(1, 2).unwrap();
+        assert_eq!(s.to_i32().unwrap(), vec![4, 5, 6, 7, 8, 9]);
+        let back = c.slice0(0, 2).unwrap();
+        assert_eq!(back.to_i32().unwrap(), a.to_i32().unwrap());
+    }
+
+    #[test]
+    fn scalars() {
+        assert_eq!(Tensor::scalar_f32(2.5).scalar_as_f32(), 2.5);
+        assert_eq!(Tensor::scalar_i32(-3).i32_at(0), -3);
+    }
+}

@@ -1,0 +1,18 @@
+//! Embodied RL substrate: a vectorized 2.5-D pick-and-place simulator
+//! standing in for ManiSkill/LIBERO (DESIGN.md §4), plus the worker
+//! wrappers for the simulator and the actor-critic policy.
+//!
+//! Two computational profiles mirror the paper's Figure 3 analysis:
+//! * [`EnvKind::ManiSkill`] — "GPU" simulator: batched fixed-cost render
+//!   blocks (time grows only mildly with env count, low core utilization)
+//!   with memory linear in the number of environments.
+//! * [`EnvKind::Libero`] — CPU-bound: heavy per-env physics substeps, time
+//!   linear in env count, negligible device memory.
+
+pub mod env;
+pub mod ood;
+pub mod worker;
+
+pub use env::{EnvKind, PickPlaceEnv, StepOut};
+pub use ood::OodMode;
+pub use worker::{PolicyCfg, PolicyWorker, SimCfg, SimWorker};

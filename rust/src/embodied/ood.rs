@@ -1,0 +1,52 @@
+//! Out-of-distribution evaluation modes (Table 6's vision / semantic /
+//! position challenges, adapted to the simulator substrate).
+
+/// How evaluation perturbs the environment relative to training.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum OodMode {
+    #[default]
+    None,
+    /// Additive observation noise (unseen camera/texture analog).
+    Vision,
+    /// Object/target feature channels swapped (unseen instruction analog).
+    Semantic,
+    /// Wider spawn region than training (unseen poses).
+    Position,
+}
+
+impl OodMode {
+    pub fn parse(s: &str) -> OodMode {
+        match s.to_ascii_lowercase().as_str() {
+            "vision" => OodMode::Vision,
+            "semantic" => OodMode::Semantic,
+            "position" => OodMode::Position,
+            _ => OodMode::None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            OodMode::None => "none",
+            OodMode::Vision => "vision",
+            OodMode::Semantic => "semantic",
+            OodMode::Position => "position",
+        }
+    }
+
+    pub fn all_eval() -> [OodMode; 3] {
+        [OodMode::Vision, OodMode::Semantic, OodMode::Position]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for m in [OodMode::None, OodMode::Vision, OodMode::Semantic, OodMode::Position] {
+            assert_eq!(OodMode::parse(m.name()), m);
+        }
+        assert_eq!(OodMode::parse("whatever"), OodMode::None);
+    }
+}

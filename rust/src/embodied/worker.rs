@@ -1,0 +1,506 @@
+//! Worker wrappers for the embodied workflow: the simulator worker, the
+//! acting policy worker, and the PPO policy trainer.
+//!
+//! The generator ⇄ simulator loop is a *cyclic* data flow (Figure 1): the
+//! simulator serves observations on one channel and consumes actions from
+//! another; the policy worker does the reverse, accumulating the
+//! trajectory. This is the workflow whose cycle the scheduler collapses
+//! into one node before running Algorithm 1.
+
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::env::{EnvKind, PickPlaceEnv, N_ACTIONS, OBS_DIM};
+use super::ood::OodMode;
+use crate::data::{Payload, Tensor};
+use crate::model::sampler::logprob_of;
+use crate::runtime::{Engine, Manifest, ModelManifest};
+use crate::train::advantage::{gae, normalize};
+use crate::util::json::Value;
+use crate::util::prng::Pcg64;
+use crate::worker::{WorkerCtx, WorkerLogic};
+
+// ---------------------------------------------------------------------------
+// Simulator worker
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct SimCfg {
+    pub num_envs: usize,
+    pub horizon: u16,
+    pub kind: EnvKind,
+    pub ood: OodMode,
+    pub seed: u64,
+    /// Baseline toggle: pay the full env re-initialization cost at the
+    /// start of every rollout (§5.3's eliminated redundancy).
+    pub reinit_per_rollout: bool,
+}
+
+pub struct SimWorker {
+    cfg: SimCfg,
+    env: Option<PickPlaceEnv>,
+}
+
+impl SimWorker {
+    pub fn new(cfg: SimCfg) -> SimWorker {
+        SimWorker { cfg, env: None }
+    }
+
+    fn env_mut(&mut self) -> Result<&mut PickPlaceEnv> {
+        self.env.as_mut().ok_or_else(|| anyhow!("simulator not onloaded"))
+    }
+}
+
+impl WorkerLogic for SimWorker {
+    fn onload(&mut self, ctx: &WorkerCtx) -> Result<()> {
+        if self.env.is_none() {
+            let t0 = std::time::Instant::now();
+            self.env = Some(PickPlaceEnv::new(
+                self.cfg.num_envs,
+                self.cfg.kind,
+                self.cfg.horizon,
+                self.cfg.ood,
+                self.cfg.seed,
+            ));
+            ctx.metrics.record("sim.env_init", t0.elapsed().as_secs_f64());
+        }
+        let bytes = self.env.as_ref().unwrap().device_mem_bytes();
+        ctx.reserve_mem(bytes, "sim").context("sim onload OOM")?;
+        Ok(())
+    }
+
+    fn offload(&mut self, ctx: &WorkerCtx) -> Result<()> {
+        ctx.free_mem("sim");
+        Ok(())
+    }
+
+    fn call(&mut self, ctx: &WorkerCtx, method: &str, arg: Payload) -> Result<Payload> {
+        match method {
+            // Serve one rollout: emit obs, consume actions, `horizon` times.
+            "serve_rollout" => {
+                if self.cfg.reinit_per_rollout {
+                    let t0 = std::time::Instant::now();
+                    self.env_mut()?.reset_all();
+                    ctx.metrics.record("sim.env_reinit", t0.elapsed().as_secs_f64());
+                }
+                let horizon = self.cfg.horizon as usize;
+                let n = self.cfg.num_envs;
+                let obs_ch = ctx
+                    .channels
+                    .get(arg.meta_str("obs_channel").unwrap_or("obs"))
+                    .ok_or_else(|| anyhow!("missing obs channel"))?;
+                let act_ch = ctx
+                    .channels
+                    .get(arg.meta_str("act_channel").unwrap_or("actions"))
+                    .ok_or_else(|| anyhow!("missing act channel"))?;
+                let me = ctx.endpoint();
+
+                let obs0 = self.env_mut()?.observe_all();
+                obs_ch.put(
+                    &me,
+                    Payload::from_named(vec![("obs", Tensor::from_f32(vec![n, OBS_DIM], &obs0)?)])
+                        .set_meta("step", 0i64),
+                )?;
+                let mut successes = 0usize;
+                for step in 0..horizon {
+                    let item = act_ch
+                        .get(&me)
+                        .ok_or_else(|| anyhow!("action channel closed mid-rollout"))?;
+                    let actions = item.payload.tensor("actions")?.to_i32()?;
+                    let t0 = std::time::Instant::now();
+                    let out = self.env_mut()?.step(&actions);
+                    ctx.metrics.record("sim.step", t0.elapsed().as_secs_f64());
+                    successes += out.successes;
+                    let dones: Vec<f32> =
+                        out.dones.iter().map(|&d| if d { 1.0 } else { 0.0 }).collect();
+                    obs_ch.put(
+                        &me,
+                        Payload::from_named(vec![
+                            ("obs", Tensor::from_f32(vec![n, OBS_DIM], &out.obs)?),
+                            ("rewards", Tensor::from_f32(vec![n], &out.rewards)?),
+                            ("dones", Tensor::from_f32(vec![n], &dones)?),
+                        ])
+                        .set_meta("step", (step + 1) as i64),
+                    )?;
+                }
+                obs_ch.producer_done(&me);
+                let env = self.env_mut()?;
+                Ok(Payload::new()
+                    .set_meta("successes", successes)
+                    .set_meta("episodes", env.episodes_done)
+                    .set_meta("success_rate", env.success_rate()))
+            }
+            "success_rate" => {
+                let env = self.env_mut()?;
+                Ok(Payload::new()
+                    .set_meta("success_rate", env.success_rate())
+                    .set_meta("episodes", env.episodes_done))
+            }
+            other => bail!("sim has no method {other:?}"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Policy workers (act + PPO train) over the `pickplace` artifacts
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct PolicyCfg {
+    pub artifacts_dir: String,
+    pub model: String,
+    pub gamma: f32,
+    pub gae_lambda: f32,
+    pub lr: f32,
+    pub seed: u64,
+    /// Baseline toggle: run a second forward to get log-probs (the unfused
+    /// act/log-prob path of §5.3).
+    pub double_forward: bool,
+}
+
+pub struct PolicyWorker {
+    cfg: PolicyCfg,
+    engine: Option<Rc<Engine>>,
+    model: Option<ModelManifest>,
+    params: Vec<xla::Literal>,
+    m: Vec<xla::Literal>,
+    v: Vec<xla::Literal>,
+    host_params: Vec<Tensor>,
+    weight_version: u64,
+    step: i32,
+    rng: Pcg64,
+}
+
+impl PolicyWorker {
+    pub fn new(cfg: PolicyCfg) -> PolicyWorker {
+        let seed = cfg.seed;
+        PolicyWorker {
+            cfg,
+            engine: None,
+            model: None,
+            params: Vec::new(),
+            m: Vec::new(),
+            v: Vec::new(),
+            host_params: Vec::new(),
+            weight_version: 0,
+            step: 0,
+            rng: Pcg64::new_stream(seed, 0xac7),
+        }
+    }
+
+    fn model(&self) -> Result<&ModelManifest> {
+        self.model.as_ref().ok_or_else(|| anyhow!("policy not onloaded"))
+    }
+
+    fn zeros_like_params(&self) -> Result<Vec<xla::Literal>> {
+        self.model()?
+            .params
+            .iter()
+            .map(|p| crate::runtime::engine::literal_of(&Tensor::zeros(p.dtype, p.shape.clone())))
+            .collect()
+    }
+
+    fn act(&mut self, obs: &Tensor, ctx: &WorkerCtx) -> Result<(Vec<i32>, Vec<f32>, Vec<f32>)> {
+        if self.params.is_empty() {
+            bail!("policy has no weights");
+        }
+        let model = self.model()?.clone();
+        let n = obs.shape[0];
+        let sig = model.variant("act", n)?.clone();
+        let bv = sig.batch;
+        if n > bv {
+            bail!("act batch {n} exceeds variant {bv}");
+        }
+        // Pad rows to the variant size.
+        let mut flat = obs.to_f32()?;
+        flat.resize(bv * OBS_DIM, 0.0);
+        let obs_l = crate::runtime::engine::literal_of(&Tensor::from_f32(vec![bv, OBS_DIM], &flat)?)?;
+        let engine = self.engine.as_ref().unwrap().clone();
+        let mut args: Vec<&xla::Literal> = self.params.iter().collect();
+        args.push(&obs_l);
+        let runs = if self.cfg.double_forward { 2 } else { 1 };
+        let mut outs = None;
+        let t0 = std::time::Instant::now();
+        for _ in 0..runs {
+            outs = Some(engine.run_literals(&sig, &args)?);
+        }
+        ctx.metrics.record("policy.act_call", t0.elapsed().as_secs_f64());
+        let mut outs = outs.unwrap();
+        let _logp_all = outs.pop().unwrap();
+        let value = crate::runtime::engine::tensor_of(&outs.pop().unwrap())?;
+        let logits = crate::runtime::engine::tensor_of(&outs.pop().unwrap())?;
+
+        let mut actions = Vec::with_capacity(n);
+        let mut logps = Vec::with_capacity(n);
+        let mut values = Vec::with_capacity(n);
+        let mut row = vec![0f32; N_ACTIONS];
+        for i in 0..n {
+            for j in 0..N_ACTIONS {
+                row[j] = logits.f32_at(i * N_ACTIONS + j);
+            }
+            let a = self.rng.sample_logits(&row, 1.0);
+            actions.push(a as i32);
+            logps.push(logprob_of(&row, a));
+            values.push(value.f32_at(i));
+        }
+        Ok((actions, logps, values))
+    }
+
+    fn train_flat(
+        &mut self,
+        obs: &[f32],
+        actions: &[i32],
+        logp_old: &[f32],
+        adv: &[f32],
+        returns: &[f32],
+        ctx: &WorkerCtx,
+    ) -> Result<(f32, f32)> {
+        let model = self.model()?.clone();
+        let sig = model.phase("train")?[0].clone();
+        let nt = sig.batch;
+        let n_tensors = model.n_param_tensors();
+        let total = actions.len();
+        let mut loss_sum = 0.0f32;
+        let mut ent_sum = 0.0f32;
+        let mut batches = 0f32;
+        let mut idx = 0;
+        while idx < total {
+            let take = nt.min(total - idx);
+            // Pad the ragged tail by repeating the first row of the slice.
+            let mut o = vec![0f32; nt * OBS_DIM];
+            let mut a = vec![0i32; nt];
+            let mut lp = vec![0f32; nt];
+            let mut ad = vec![0f32; nt];
+            let mut rt = vec![0f32; nt];
+            for j in 0..nt {
+                let s = idx + (j % take);
+                o[j * OBS_DIM..(j + 1) * OBS_DIM]
+                    .copy_from_slice(&obs[s * OBS_DIM..(s + 1) * OBS_DIM]);
+                a[j] = actions[s];
+                lp[j] = logp_old[s];
+                ad[j] = if j < take { adv[s] } else { 0.0 };
+                rt[j] = returns[s];
+            }
+            let step_l = crate::runtime::engine::literal_of(&Tensor::scalar_i32(self.step))?;
+            let o_l = crate::runtime::engine::literal_of(&Tensor::from_f32(vec![nt, OBS_DIM], &o)?)?;
+            let a_l = crate::runtime::engine::literal_of(&Tensor::from_i32(vec![nt], &a)?)?;
+            let lp_l = crate::runtime::engine::literal_of(&Tensor::from_f32(vec![nt], &lp)?)?;
+            let ad_l = crate::runtime::engine::literal_of(&Tensor::from_f32(vec![nt], &ad)?)?;
+            let rt_l = crate::runtime::engine::literal_of(&Tensor::from_f32(vec![nt], &rt)?)?;
+            let lr_l = crate::runtime::engine::literal_of(&Tensor::scalar_f32(self.cfg.lr))?;
+            let engine = self.engine.as_ref().unwrap().clone();
+            let mut args: Vec<&xla::Literal> = Vec::with_capacity(3 * n_tensors + 7);
+            args.extend(self.params.iter());
+            args.extend(self.m.iter());
+            args.extend(self.v.iter());
+            args.push(&step_l);
+            args.push(&o_l);
+            args.push(&a_l);
+            args.push(&lp_l);
+            args.push(&ad_l);
+            args.push(&rt_l);
+            args.push(&lr_l);
+            let t0 = std::time::Instant::now();
+            let mut outs = engine.run_literals(&sig, &args)?;
+            ctx.metrics.record("policy.train_call", t0.elapsed().as_secs_f64());
+            let _clip = outs.pop().unwrap();
+            let ent = crate::runtime::engine::tensor_of(&outs.pop().unwrap())?.scalar_as_f32();
+            let _vf = outs.pop().unwrap();
+            let _pg = outs.pop().unwrap();
+            let loss = crate::runtime::engine::tensor_of(&outs.pop().unwrap())?.scalar_as_f32();
+            let v = outs.split_off(2 * n_tensors);
+            let m = outs.split_off(n_tensors);
+            self.params = outs;
+            self.m = m;
+            self.v = v;
+            self.step += 1;
+            loss_sum += loss;
+            ent_sum += ent;
+            batches += 1.0;
+            idx += take;
+        }
+        Ok((loss_sum / batches.max(1.0), ent_sum / batches.max(1.0)))
+    }
+}
+
+impl WorkerLogic for PolicyWorker {
+    fn onload(&mut self, ctx: &WorkerCtx) -> Result<()> {
+        if self.engine.is_none() {
+            let manifest = Rc::new(Manifest::load(&self.cfg.artifacts_dir)?);
+            let engine = Rc::new(Engine::new(manifest)?.with_metrics(ctx.metrics.clone()));
+            self.model = Some(engine.manifest().model(&self.cfg.model)?.clone());
+            self.engine = Some(engine);
+        }
+        if self.params.is_empty() && !self.host_params.is_empty() {
+            self.params = self
+                .host_params
+                .iter()
+                .map(crate::runtime::engine::literal_of)
+                .collect::<Result<Vec<_>>>()?;
+            self.m = self.zeros_like_params()?;
+            self.v = self.zeros_like_params()?;
+        }
+        let bytes = self.model.as_ref().map(|m| m.param_bytes() * 4).unwrap_or(0);
+        ctx.reserve_mem(bytes, "policy").context("policy onload OOM")?;
+        Ok(())
+    }
+
+    fn offload(&mut self, ctx: &WorkerCtx) -> Result<()> {
+        if !self.params.is_empty() {
+            self.host_params = self
+                .params
+                .iter()
+                .map(crate::runtime::engine::tensor_of)
+                .collect::<Result<Vec<_>>>()?;
+        }
+        self.params.clear();
+        self.m.clear();
+        self.v.clear();
+        ctx.free_mem("policy");
+        Ok(())
+    }
+
+    fn call(&mut self, ctx: &WorkerCtx, method: &str, arg: Payload) -> Result<Payload> {
+        match method {
+            "init_weights" => {
+                let seed = arg.meta_i64("seed").unwrap_or(0) as u32;
+                let engine = self.engine.as_ref().ok_or_else(|| anyhow!("not onloaded"))?.clone();
+                let model = self.model()?.clone();
+                let init = &model.phase("init")?[0];
+                let seed_l = crate::runtime::engine::literal_of(&Tensor::scalar_u32(seed))?;
+                self.params = engine.run_literals(init, &[seed_l])?;
+                self.m = self.zeros_like_params()?;
+                self.v = self.zeros_like_params()?;
+                self.step = 0;
+                self.weight_version = 1;
+                Ok(Payload::new().set_meta("version", self.weight_version))
+            }
+            "get_weights" => {
+                if self.params.is_empty() {
+                    bail!("no weights");
+                }
+                let mut p = Payload::new().set_meta("version", self.weight_version);
+                p.tensors = self
+                    .params
+                    .iter()
+                    .map(crate::runtime::engine::tensor_of)
+                    .collect::<Result<Vec<_>>>()?;
+                Ok(p)
+            }
+            "set_weights" => {
+                self.weight_version = arg.meta_i64("version").unwrap_or(0) as u64;
+                self.host_params = arg.tensors;
+                self.params = self
+                    .host_params
+                    .iter()
+                    .map(crate::runtime::engine::literal_of)
+                    .collect::<Result<Vec<_>>>()?;
+                if self.m.is_empty() {
+                    self.m = self.zeros_like_params()?;
+                    self.v = self.zeros_like_params()?;
+                }
+                Ok(Payload::new().set_meta("version", self.weight_version))
+            }
+            // Drive one rollout against the simulator channels, accumulate
+            // the trajectory, compute GAE, then run PPO updates.
+            "collect_and_train" => {
+                let obs_ch = ctx
+                    .channels
+                    .get(arg.meta_str("obs_channel").unwrap_or("obs"))
+                    .ok_or_else(|| anyhow!("missing obs channel"))?;
+                let act_ch = ctx
+                    .channels
+                    .get(arg.meta_str("act_channel").unwrap_or("actions"))
+                    .ok_or_else(|| anyhow!("missing act channel"))?;
+                let train = arg.meta_i64("train").unwrap_or(1) == 1;
+                let me = ctx.endpoint();
+
+                let mut all_obs: Vec<Vec<f32>> = Vec::new();
+                let mut all_act: Vec<Vec<i32>> = Vec::new();
+                let mut all_logp: Vec<Vec<f32>> = Vec::new();
+                let mut all_val: Vec<Vec<f32>> = Vec::new();
+                let mut all_rew: Vec<Vec<f32>> = Vec::new();
+                let mut all_done: Vec<Vec<bool>> = Vec::new();
+                let mut n_envs = 0usize;
+
+                while let Some(item) = obs_ch.get(&me) {
+                    let obs = item.payload.tensor("obs")?.clone();
+                    n_envs = obs.shape[0];
+                    if let Ok(r) = item.payload.tensor("rewards") {
+                        all_rew.push(r.to_f32()?);
+                        let d = item.payload.tensor("dones")?.to_f32()?;
+                        all_done.push(d.iter().map(|&x| x > 0.5).collect());
+                    }
+                    let is_last = all_rew.len() >= arg.meta_i64("horizon").unwrap_or(i64::MAX) as usize;
+                    let (actions, logps, values) = self.act(&obs, ctx)?;
+                    if !is_last {
+                        // Feed actions back unless the rollout just ended.
+                        act_ch.put(
+                            &me,
+                            Payload::from_named(vec![(
+                                "actions",
+                                Tensor::from_i32(vec![n_envs], &actions)?,
+                            )]),
+                        )?;
+                    }
+                    all_obs.push(obs.to_f32()?);
+                    all_act.push(actions);
+                    all_logp.push(logps);
+                    all_val.push(values);
+                }
+                act_ch.producer_done(&me);
+
+                // T transitions: steps with a successor reward.
+                let t_max = all_rew.len();
+                if t_max == 0 || n_envs == 0 {
+                    bail!("empty rollout");
+                }
+                // GAE per env over the trajectory.
+                let mut flat_obs = Vec::with_capacity(t_max * n_envs * OBS_DIM);
+                let mut flat_act = Vec::with_capacity(t_max * n_envs);
+                let mut flat_lp = Vec::with_capacity(t_max * n_envs);
+                let mut flat_adv = Vec::with_capacity(t_max * n_envs);
+                let mut flat_ret = Vec::with_capacity(t_max * n_envs);
+                for e in 0..n_envs {
+                    let rewards: Vec<f32> = (0..t_max).map(|t| all_rew[t][e]).collect();
+                    let mut values: Vec<f32> = (0..t_max).map(|t| all_val[t][e]).collect();
+                    values.push(all_val[t_max][e]); // bootstrap from last obs
+                    let dones: Vec<bool> = (0..t_max).map(|t| all_done[t][e]).collect();
+                    let (adv, ret) = gae(&rewards, &values, &dones, self.cfg.gamma, self.cfg.gae_lambda);
+                    for t in 0..t_max {
+                        flat_obs.extend_from_slice(
+                            &all_obs[t][e * OBS_DIM..(e + 1) * OBS_DIM],
+                        );
+                        flat_act.push(all_act[t][e]);
+                        flat_lp.push(all_logp[t][e]);
+                        flat_adv.push(adv[t]);
+                        flat_ret.push(ret[t]);
+                    }
+                }
+                let flat_adv = normalize(&flat_adv);
+                let mean_reward: f32 = all_rew.iter().flatten().sum::<f32>()
+                    / (t_max * n_envs) as f32;
+
+                let mut reply = Payload::new()
+                    .set_meta("transitions", flat_act.len())
+                    .set_meta("mean_reward", mean_reward as f64);
+                if train {
+                    let (loss, ent) =
+                        self.train_flat(&flat_obs, &flat_act, &flat_lp, &flat_adv, &flat_ret, ctx)?;
+                    self.weight_version += 1;
+                    reply.meta.set("loss", loss as f64);
+                    reply.meta.set("entropy", ent as f64);
+                    reply.meta.set("version", self.weight_version);
+                }
+                Ok(reply)
+            }
+            other => bail!("policy has no method {other:?}"),
+        }
+    }
+}
+
+/// Meta helper: count tensor bytes for a value (used in tests).
+pub fn value_len(v: &Value) -> usize {
+    v.as_arr().map(|a| a.len()).unwrap_or(0)
+}

@@ -1,0 +1,288 @@
+//! Workflow graph: nodes are worker groups, edges are traced data flows.
+//!
+//! Built just-in-time from channel traces during a profiling run (§3.4).
+//! Cycles (embodied/agentic loops like generator ⇄ simulator) are collapsed
+//! into single nodes via SCC condensation before Algorithm 1 runs —
+//! `ConvertCircleToNode` in the paper's pseudocode.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// A directed workflow graph over named worker groups.
+#[derive(Debug, Clone, Default)]
+pub struct WorkflowGraph {
+    pub nodes: Vec<String>,
+    /// Edges as (src_index, dst_index).
+    pub edges: Vec<(usize, usize)>,
+}
+
+impl WorkflowGraph {
+    pub fn new() -> WorkflowGraph {
+        WorkflowGraph::default()
+    }
+
+    pub fn add_node(&mut self, name: &str) -> usize {
+        if let Some(i) = self.index_of(name) {
+            return i;
+        }
+        self.nodes.push(name.to_string());
+        self.nodes.len() - 1
+    }
+
+    pub fn add_edge(&mut self, src: &str, dst: &str) {
+        let s = self.add_node(src);
+        let d = self.add_node(dst);
+        if !self.edges.contains(&(s, d)) {
+            self.edges.push((s, d));
+        }
+    }
+
+    pub fn index_of(&self, name: &str) -> Option<usize> {
+        self.nodes.iter().position(|n| n == name)
+    }
+
+    pub fn n(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Build from channel-trace edges (producer, consumer, channel).
+    pub fn from_traced_edges(edges: &[(String, String, String)]) -> WorkflowGraph {
+        let mut g = WorkflowGraph::new();
+        for (p, c, _) in edges {
+            g.add_edge(p, c);
+        }
+        g
+    }
+
+    /// Collapse strongly-connected components into single nodes; the
+    /// resulting DAG's node names join members with `+`. Returns the
+    /// condensed graph and the member lists.
+    pub fn condense(&self) -> (WorkflowGraph, Vec<Vec<String>>) {
+        let sccs = self.tarjan_sccs();
+        let mut comp_of = vec![0usize; self.n()];
+        for (ci, comp) in sccs.iter().enumerate() {
+            for &v in comp {
+                comp_of[v] = ci;
+            }
+        }
+        let mut g = WorkflowGraph::new();
+        let mut members = Vec::new();
+        for comp in &sccs {
+            let name =
+                comp.iter().map(|&v| self.nodes[v].clone()).collect::<Vec<_>>().join("+");
+            g.add_node(&name);
+            members.push(comp.iter().map(|&v| self.nodes[v].clone()).collect());
+        }
+        for &(s, d) in &self.edges {
+            if comp_of[s] != comp_of[d] {
+                let (a, b) = (comp_of[s], comp_of[d]);
+                if !g.edges.contains(&(a, b)) {
+                    g.edges.push((a, b));
+                }
+            }
+        }
+        (g, members)
+    }
+
+    /// Tarjan SCCs, returned in reverse topological order of the
+    /// condensation (then reversed to topological).
+    fn tarjan_sccs(&self) -> Vec<Vec<usize>> {
+        struct T {
+            index: Vec<Option<usize>>,
+            low: Vec<usize>,
+            on_stack: Vec<bool>,
+            stack: Vec<usize>,
+            next: usize,
+            out: Vec<Vec<usize>>,
+        }
+        let n = self.n();
+        let mut adj = vec![Vec::new(); n];
+        for &(s, d) in &self.edges {
+            adj[s].push(d);
+        }
+        let mut t = T {
+            index: vec![None; n],
+            low: vec![0; n],
+            on_stack: vec![false; n],
+            stack: Vec::new(),
+            next: 0,
+            out: Vec::new(),
+        };
+
+        fn strongconnect(v: usize, adj: &[Vec<usize>], t: &mut T) {
+            t.index[v] = Some(t.next);
+            t.low[v] = t.next;
+            t.next += 1;
+            t.stack.push(v);
+            t.on_stack[v] = true;
+            for &w in &adj[v] {
+                if t.index[w].is_none() {
+                    strongconnect(w, adj, t);
+                    t.low[v] = t.low[v].min(t.low[w]);
+                } else if t.on_stack[w] {
+                    t.low[v] = t.low[v].min(t.index[w].unwrap());
+                }
+            }
+            if t.low[v] == t.index[v].unwrap() {
+                let mut comp = Vec::new();
+                loop {
+                    let w = t.stack.pop().unwrap();
+                    t.on_stack[w] = false;
+                    comp.push(w);
+                    if w == v {
+                        break;
+                    }
+                }
+                comp.sort();
+                t.out.push(comp);
+            }
+        }
+
+        for v in 0..n {
+            if t.index[v].is_none() {
+                strongconnect(v, &adj, &mut t);
+            }
+        }
+        t.out.reverse(); // topological order of the condensation
+        t.out
+    }
+
+    /// Topological order; errors if the graph has cycles (condense first).
+    pub fn topo_order(&self) -> Result<Vec<usize>> {
+        let n = self.n();
+        let mut indeg = vec![0usize; n];
+        for &(_, d) in &self.edges {
+            indeg[d] += 1;
+        }
+        let mut q: Vec<usize> = (0..n).filter(|&v| indeg[v] == 0).collect();
+        let mut out = Vec::with_capacity(n);
+        while let Some(v) = q.pop() {
+            out.push(v);
+            for &(s, d) in &self.edges {
+                if s == v {
+                    indeg[d] -= 1;
+                    if indeg[d] == 0 {
+                        q.push(d);
+                    }
+                }
+            }
+        }
+        if out.len() != n {
+            bail!("graph has a cycle");
+        }
+        Ok(out)
+    }
+
+    /// Enumerate non-trivial *downsets* (closed prefixes) of the DAG as
+    /// bitmasks over nodes: every edge crossing the cut goes downset →
+    /// complement. These are exactly the s-t cuts Algorithm 1 traverses.
+    pub fn downsets(&self) -> Vec<u64> {
+        let n = self.n();
+        assert!(n <= 24, "downset enumeration limited to small condensed graphs");
+        let full = (1u64 << n) - 1;
+        let mut out = Vec::new();
+        'mask: for mask in 1..full {
+            for &(s, d) in &self.edges {
+                // Closed: if a destination is in the set, its source must be.
+                let s_in = mask >> s & 1 == 1;
+                let d_in = mask >> d & 1 == 1;
+                if d_in && !s_in {
+                    continue 'mask;
+                }
+            }
+            out.push(mask);
+        }
+        out
+    }
+
+    /// Pretty print for logs / DESIGN dumps.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        for &(a, b) in &self.edges {
+            s.push_str(&format!("{} -> {}\n", self.nodes[a], self.nodes[b]));
+        }
+        s
+    }
+}
+
+/// Edge-annotated helper: per-node metadata map (batch multipliers etc.).
+pub type NodeMeta = BTreeMap<String, f64>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn linear3() -> WorkflowGraph {
+        let mut g = WorkflowGraph::new();
+        g.add_edge("rollout", "inference");
+        g.add_edge("inference", "train");
+        g
+    }
+
+    #[test]
+    fn build_and_topo() {
+        let g = linear3();
+        assert_eq!(g.n(), 3);
+        let order = g.topo_order().unwrap();
+        assert_eq!(order.len(), 3);
+        assert_eq!(g.nodes[order[0]], "rollout");
+    }
+
+    #[test]
+    fn condense_collapses_cycle() {
+        let mut g = WorkflowGraph::new();
+        g.add_edge("gen", "sim"); // embodied loop
+        g.add_edge("sim", "gen");
+        g.add_edge("gen", "train");
+        let (dag, members) = g.condense();
+        assert_eq!(dag.n(), 2);
+        assert!(dag.nodes.iter().any(|n| n.contains('+')), "{:?}", dag.nodes);
+        assert!(dag.topo_order().is_ok());
+        assert!(members.iter().any(|m| m.len() == 2));
+    }
+
+    #[test]
+    fn downsets_of_chain() {
+        let g = linear3();
+        let r = g.index_of("rollout").unwrap();
+        let i = g.index_of("inference").unwrap();
+        let t = g.index_of("train").unwrap();
+        let ds = g.downsets();
+        // For a 3-chain exactly two nontrivial downsets: {r}, {r,i}.
+        assert_eq!(ds.len(), 2, "{ds:?}");
+        assert!(ds.contains(&(1 << r)));
+        assert!(ds.contains(&((1 << r) | (1 << i))));
+        assert!(!ds.contains(&(1 << t)));
+    }
+
+    #[test]
+    fn downsets_of_diamond() {
+        let mut g = WorkflowGraph::new();
+        g.add_edge("a", "b");
+        g.add_edge("a", "c");
+        g.add_edge("b", "d");
+        g.add_edge("c", "d");
+        // Downsets: {a}, {a,b}, {a,c}, {a,b,c} -> 4.
+        assert_eq!(g.downsets().len(), 4);
+    }
+
+    #[test]
+    fn from_traces() {
+        let edges = vec![
+            ("rollout".to_string(), "train".to_string(), "ch1".to_string()),
+            ("rollout".to_string(), "train".to_string(), "ch2".to_string()),
+        ];
+        let g = WorkflowGraph::from_traced_edges(&edges);
+        assert_eq!(g.n(), 2);
+        assert_eq!(g.edges.len(), 1, "deduplicated");
+    }
+
+    #[test]
+    fn cycle_topo_fails() {
+        let mut g = WorkflowGraph::new();
+        g.add_edge("a", "b");
+        g.add_edge("b", "a");
+        assert!(g.topo_order().is_err());
+    }
+}

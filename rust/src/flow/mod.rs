@@ -1,0 +1,14 @@
+//! M2Flow transformation machinery (§3.3): the workflow graph, JIT trace
+//! extraction, elastic chunking, and execution-plan application.
+//!
+//! The *macro* flow is whatever the workflow runner wrote imperatively;
+//! these utilities extract its graph from channel traces, and transform
+//! worker tasks into the *micro* execution flow the scheduler chose —
+//! re-chunking data granularity (elastic pipelining) and inserting device
+//! lock / onload / offload steps (context switching).
+
+pub mod graph;
+pub mod pipeline;
+
+pub use graph::WorkflowGraph;
+pub use pipeline::{chunk_sizes, Chunk};

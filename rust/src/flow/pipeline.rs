@@ -1,0 +1,98 @@
+//! Elastic pipelining utilities: granularity re-chunking.
+//!
+//! The Execution Flow Manager may divide a worker task over `total` items
+//! into sub-tasks of granularity `m` (or coalesce into fewer, larger
+//! chunks), without changing the programmed workflow (§3.3). These helpers
+//! compute the chunk layout; the data plane is the channel's `get_batch`.
+
+/// One sub-task over rows `[start, start+len)` of the phase batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Chunk {
+    pub index: usize,
+    pub start: usize,
+    pub len: usize,
+}
+
+/// Split `total` items into chunks of granularity `m` (last chunk ragged).
+pub fn chunk_sizes(total: usize, m: usize) -> Vec<Chunk> {
+    let m = m.max(1);
+    let mut out = Vec::with_capacity(total.div_ceil(m));
+    let mut start = 0;
+    let mut index = 0;
+    while start < total {
+        let len = m.min(total - start);
+        out.push(Chunk { index, start, len });
+        start += len;
+        index += 1;
+    }
+    out
+}
+
+/// The paper's pipeline-time estimate:
+/// `T_critical + (M/m - 1) * T_bottleneck`, where stage times are given for
+/// the *full* batch and chunks flow through `stages` in order.
+pub fn pipeline_time(stage_totals: &[f64], n_chunks: usize) -> f64 {
+    if stage_totals.is_empty() || n_chunks == 0 {
+        return 0.0;
+    }
+    let c = n_chunks as f64;
+    let warm: f64 = stage_totals.iter().map(|t| t / c).sum(); // one chunk through all stages
+    let bottleneck = stage_totals.iter().cloned().fold(0.0f64, f64::max) / c;
+    warm + (c - 1.0) * bottleneck
+}
+
+/// Sequential (temporal) time for comparison: sum of stage totals plus a
+/// context-switch overhead per boundary.
+pub fn sequential_time(stage_totals: &[f64], switch_overhead: f64) -> f64 {
+    let sum: f64 = stage_totals.iter().sum();
+    sum + switch_overhead * stage_totals.len().saturating_sub(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunks_cover_exactly() {
+        let cs = chunk_sizes(10, 4);
+        assert_eq!(cs.len(), 3);
+        assert_eq!(cs[2], Chunk { index: 2, start: 8, len: 2 });
+        assert_eq!(cs.iter().map(|c| c.len).sum::<usize>(), 10);
+        assert_eq!(chunk_sizes(0, 4).len(), 0);
+        assert_eq!(chunk_sizes(3, 100).len(), 1);
+    }
+
+    #[test]
+    fn pipeline_beats_sequential_when_balanced() {
+        // Two equal stages of 10s each, 10 chunks: pipeline ≈ 11s vs 20s.
+        let p = pipeline_time(&[10.0, 10.0], 10);
+        let s = sequential_time(&[10.0, 10.0], 0.0);
+        assert!((p - 11.0).abs() < 1e-9, "{p}");
+        assert_eq!(s, 20.0);
+    }
+
+    #[test]
+    fn pipeline_approaches_bottleneck() {
+        let p = pipeline_time(&[30.0, 10.0], 100);
+        assert!(p < 31.0 && p > 30.0, "{p}");
+    }
+
+    #[test]
+    fn single_chunk_equals_sequential() {
+        let p = pipeline_time(&[5.0, 7.0], 1);
+        assert!((p - 12.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn property_more_chunks_never_hurts() {
+        use crate::util::proptest_mini::*;
+        check("pipeline time is non-increasing in chunk count", 100, |g| {
+            let stages = g.vec_f64(1..5, 0.1..50.0);
+            let c1 = g.usize_in(1..20);
+            let c2 = c1 + g.usize_in(1..20);
+            let t1 = pipeline_time(&stages, c1);
+            let t2 = pipeline_time(&stages, c2);
+            prop_assert(t2 <= t1 + 1e-9, &format!("{t2} > {t1}"))
+        });
+    }
+}

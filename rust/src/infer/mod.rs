@@ -1,0 +1,190 @@
+//! Inference: the prefill-only log-prob recompute phase.
+//!
+//! GRPO needs behaviour log-probs for every response token under the
+//! iteration's weights; generation-engine log-probs are not trusted, so a
+//! dedicated inference pass recomputes them in dense batches (this is the
+//! phase whose slowness bottlenecks veRL in §5.3). The worker consumes
+//! response items from the rollout channel at the scheduled granularity and
+//! forwards them, augmented with `logp_old`, to the training channel.
+
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::data::{Payload, Tensor};
+use crate::runtime::{Engine, Manifest, ModelManifest};
+use crate::worker::{WorkerCtx, WorkerLogic};
+
+#[derive(Debug, Clone)]
+pub struct InferCfg {
+    pub artifacts_dir: String,
+    pub model: String,
+    /// Baseline inefficiency toggle: recompute the forward twice (the
+    /// unfused log-prob path §5.3 attributes to veRL).
+    pub double_forward: bool,
+}
+
+pub struct InferWorker {
+    cfg: InferCfg,
+    engine: Option<Rc<Engine>>,
+    model: Option<ModelManifest>,
+    params: Vec<xla::Literal>,
+    weights: Vec<Tensor>,
+    weight_version: u64,
+}
+
+impl InferWorker {
+    pub fn new(cfg: InferCfg) -> InferWorker {
+        InferWorker {
+            cfg,
+            engine: None,
+            model: None,
+            params: Vec::new(),
+            weights: Vec::new(),
+            weight_version: 0,
+        }
+    }
+
+    fn push_weights(&mut self) -> Result<()> {
+        if self.engine.is_some() && !self.weights.is_empty() {
+            self.params = self
+                .weights
+                .iter()
+                .map(crate::runtime::engine::literal_of)
+                .collect::<Result<Vec<_>>>()?;
+        }
+        Ok(())
+    }
+
+    /// Compute `logp_old [b, T]` for a batch of response items.
+    fn logprob_batch(&mut self, items: &[Payload]) -> Result<Vec<Tensor>> {
+        let model = self.model.clone().ok_or_else(|| anyhow!("not onloaded"))?;
+        if self.params.is_empty() {
+            bail!("inference has no weights; sync first");
+        }
+        let t_max = model.meta_usize("max_seq")?;
+        let b = items.len();
+        let sig = model.variant("logprob", b)?.clone();
+        let bv = sig.batch;
+        if b > bv {
+            bail!("logprob batch {b} exceeds largest variant {bv}; chunk upstream");
+        }
+        let mut flat = Vec::with_capacity(bv * t_max);
+        for i in 0..bv {
+            let toks = items[i.min(b - 1)].tensor("tokens")?.to_i32()?;
+            flat.extend_from_slice(&toks);
+        }
+        let tok_l =
+            crate::runtime::engine::literal_of(&Tensor::from_i32(vec![bv, t_max], &flat)?)?;
+        let engine = self.engine.as_ref().unwrap();
+        let mut args: Vec<&xla::Literal> = self.params.iter().collect();
+        args.push(&tok_l);
+        let runs = if self.cfg.double_forward { 2 } else { 1 };
+        let mut outs = None;
+        for _ in 0..runs {
+            outs = Some(engine.run_literals(&sig, &args)?);
+        }
+        let lp = crate::runtime::engine::tensor_of(&outs.unwrap().pop().unwrap())?;
+        (0..b).map(|i| lp.slice0(i, 1).map(Tensor::flatten)).collect()
+    }
+}
+
+impl WorkerLogic for InferWorker {
+    fn onload(&mut self, ctx: &WorkerCtx) -> Result<()> {
+        if self.engine.is_none() {
+            let manifest = Rc::new(Manifest::load(&self.cfg.artifacts_dir)?);
+            let engine = Rc::new(Engine::new(manifest)?.with_metrics(ctx.metrics.clone()));
+            self.model = Some(engine.manifest().model(&self.cfg.model)?.clone());
+            self.engine = Some(engine);
+        }
+        self.push_weights()?;
+        let bytes = self.model.as_ref().map(|m| m.param_bytes()).unwrap_or(0);
+        ctx.reserve_mem(bytes, "infer").context("infer onload OOM")?;
+        Ok(())
+    }
+
+    fn offload(&mut self, ctx: &WorkerCtx) -> Result<()> {
+        self.params.clear();
+        ctx.free_mem("infer");
+        Ok(())
+    }
+
+    fn call(&mut self, ctx: &WorkerCtx, method: &str, arg: Payload) -> Result<Payload> {
+        match method {
+            "set_weights" => {
+                self.weight_version = arg.meta_i64("version").unwrap_or(0) as u64;
+                self.weights = arg.tensors;
+                // Push straight to the engine whenever it is resident
+                // (pipelined modes onload before the first sync).
+                if self.engine.is_some() {
+                    self.push_weights()?;
+                }
+                Ok(Payload::new().set_meta("version", self.weight_version))
+            }
+            "logprob_batch" => {
+                // Synchronous API over a packed payload (baseline path).
+                let tokens = arg.tensor("tokens")?.clone();
+                let b = tokens.shape[0];
+                let items: Vec<Payload> = (0..b)
+                    .map(|i| {
+                        Payload::from_named(vec![(
+                            "tokens",
+                            tokens.slice0(i, 1).unwrap().flatten(),
+                        )])
+                    })
+                    .collect();
+                let lps = self.logprob_batch(&items)?;
+                let rows: Vec<Tensor> = lps.into_iter().map(Tensor::into_row).collect();
+                Ok(Payload::from_named(vec![("logp_old", Tensor::concat0(&rows)?)]))
+            }
+            "logprob_stream" => {
+                let in_ch = ctx
+                    .channels
+                    .get(arg.meta_str("in_channel").unwrap_or("rollout"))
+                    .ok_or_else(|| anyhow!("missing in channel"))?;
+                let out_ch = ctx
+                    .channels
+                    .get(arg.meta_str("out_channel").unwrap_or("scored"))
+                    .ok_or_else(|| anyhow!("missing out channel"))?;
+                let gran = arg.meta_i64("granularity").unwrap_or(8).max(1) as usize;
+                let me = ctx.endpoint();
+                let mut processed = 0usize;
+                let result = (|| -> Result<()> {
+                loop {
+                    let items = in_ch.get_batch(&me, gran);
+                    if items.is_empty() {
+                        break;
+                    }
+                    let payloads: Vec<Payload> = items.into_iter().map(|i| i.payload).collect();
+                    let t0 = std::time::Instant::now();
+                    let lps = self.logprob_batch(&payloads)?;
+                    ctx.metrics.record("infer.logprob_call", t0.elapsed().as_secs_f64());
+                    for (mut p, lp) in payloads.into_iter().zip(lps) {
+                        // Structure-aware append: add the tensor + its name.
+                        if let Some(crate::util::json::Value::Arr(names)) =
+                            p.meta.get("tensor_names").cloned().map(|mut v| {
+                                if let crate::util::json::Value::Arr(a) = &mut v {
+                                    a.push(crate::util::json::Value::Str("logp_old".into()));
+                                }
+                                v
+                            })
+                        {
+                            p.meta.set("tensor_names", crate::util::json::Value::Arr(names));
+                        }
+                        p.tensors.push(lp);
+                        let w = p.meta_i64("gen_len").unwrap_or(1) as f64;
+                        out_ch.put_weighted(&me, p, w)?;
+                        processed += 1;
+                    }
+                }
+                Ok(())
+                })();
+                // Always close our producer slot (fail-fast propagation).
+                out_ch.producer_done(&me);
+                result?;
+                Ok(Payload::new().set_meta("processed", processed))
+            }
+            other => bail!("infer has no method {other:?}"),
+        }
+    }
+}

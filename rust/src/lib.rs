@@ -1,0 +1,36 @@
+//! RLinf reproduction: flexible & efficient large-scale RL training via
+//! macro-to-micro flow transformation (M2Flow), as a three-layer
+//! Rust + JAX + Pallas stack.
+//!
+//! Layer map (see DESIGN.md):
+//! * **L3 (this crate)** — the paper's contribution: worker abstraction,
+//!   adaptive communication, load-balancing data channels with device
+//!   locks, context switching, elastic pipelining, and the
+//!   profiling-guided Algorithm-1 scheduler, plus every substrate the
+//!   paper depends on (cluster model, embodied simulator, baselines,
+//!   large-scale discrete-event simulator).
+//! * **L2/L1 (build-time Python)** — JAX transformer / Pallas kernels,
+//!   AOT-lowered to `artifacts/*.hlo.txt`, loaded and executed here via
+//!   PJRT (`runtime`). Python never runs on the training path.
+
+pub mod util;
+pub mod data;
+pub mod config;
+pub mod cluster;
+pub mod metrics;
+pub mod comm;
+pub mod channel;
+pub mod worker;
+pub mod runtime;
+pub mod flow;
+pub mod sched;
+pub mod model;
+pub mod rollout;
+pub mod infer;
+pub mod train;
+pub mod embodied;
+pub mod baseline;
+pub mod workflow;
+pub mod simulator;
+
+pub use anyhow::{anyhow, bail, Context, Result};

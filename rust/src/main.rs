@@ -1,0 +1,177 @@
+//! `rlinf` — launcher CLI for the RLinf reproduction.
+//!
+//! Subcommands:
+//!
+//! * `train`    — reasoning GRPO training (`--config`, `--set k=v`, or flags)
+//! * `embodied` — embodied PPO training on the pick-and-place simulator
+//! * `simulate` — large-scale Figure-8-style simulation (RLinf vs veRL-like)
+//! * `schedule` — print the Algorithm-1 plan for a config without running
+//! * `info`     — artifact manifest summary
+//!
+//! Examples:
+//! ```text
+//! rlinf train --model tiny --iters 5 --mode hybrid --devices 4
+//! rlinf embodied --env libero --iters 3 --mode collocated
+//! rlinf simulate --scale 7B --devices 64
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+use rlinf::config::{PlacementMode, RunConfig};
+use rlinf::simulator::costdb::ModelScale;
+use rlinf::simulator::{simulate_reasoning, SimScenario};
+use rlinf::util::cli::Args;
+use rlinf::util::fmt;
+use rlinf::workflow::embodied::{run_embodied, EmbodiedOpts};
+use rlinf::workflow::reasoning::{run_grpo, RunnerOpts};
+
+const USAGE: &str = "usage: rlinf <train|embodied|simulate|schedule|info> [options]
+  common: --config FILE  --set path=value  --artifacts DIR  --iters N
+          --devices N  --nodes N  --mode collocated|disaggregated|hybrid|auto
+  train:    --model tiny --batch 8 --group 4 --max-new 24 --verl-baseline
+  embodied: --env maniskill|libero --envs 64 --horizon 40
+  simulate: --scale 1.5B|7B|32B --devices N";
+
+fn build_config(args: &Args) -> Result<RunConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => {
+            let overrides: Vec<String> = args
+                .options
+                .iter()
+                .filter(|(k, _)| k.as_str() == "set")
+                .map(|(_, v)| v.clone())
+                .collect();
+            RunConfig::load(path, &overrides)?
+        }
+        None => RunConfig::default(),
+    };
+    if let Some(m) = args.get("model") {
+        cfg.model = m.to_string();
+    }
+    if let Some(a) = args.get("artifacts") {
+        cfg.artifacts_dir = a.to_string();
+    }
+    cfg.iters = args.get_usize("iters", cfg.iters)?;
+    cfg.seed = args.get_u64("seed", cfg.seed)?;
+    cfg.cluster.devices_per_node = args.get_usize("devices", cfg.cluster.devices_per_node)?;
+    cfg.cluster.nodes = args.get_usize("nodes", cfg.cluster.nodes)?;
+    if let Some(m) = args.get("mode") {
+        cfg.sched.mode = PlacementMode::parse(m)?;
+    }
+    cfg.sched.gen_devices = args.get_usize("gen-devices", cfg.sched.gen_devices)?;
+    cfg.rollout.batch = args.get_usize("batch", cfg.rollout.batch)?;
+    cfg.rollout.group_size = args.get_usize("group", cfg.rollout.group_size)?;
+    cfg.rollout.max_new = args.get_usize("max-new", cfg.rollout.max_new)?;
+    cfg.train.micro_batch = args.get_usize("micro-batch", cfg.train.micro_batch)?;
+    if let Some(e) = args.get("env") {
+        cfg.embodied.env_kind = e.to_string();
+    }
+    cfg.embodied.num_envs = args.get_usize("envs", cfg.embodied.num_envs)?;
+    cfg.embodied.horizon = args.get_usize("horizon", cfg.embodied.horizon)?;
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = build_config(args)?;
+    let opts = RunnerOpts { verl_like: args.has_flag("verl-baseline"), verbose: true };
+    let report = run_grpo(&cfg, &opts).context("GRPO run failed")?;
+    if let Some(plan) = &report.plan_rendered {
+        println!("--- scheduler plan ---\n{plan}");
+    }
+    println!("--- breakdown ---");
+    for (phase, secs) in &report.breakdown {
+        println!("  {phase:<10} {}", fmt::secs(*secs));
+    }
+    println!(
+        "mean throughput: {} tokens/s over {} iters ({})",
+        fmt::count(report.mean_throughput()),
+        report.iters.len(),
+        report.mode
+    );
+    Ok(())
+}
+
+fn cmd_embodied(args: &Args) -> Result<()> {
+    let cfg = build_config(args)?;
+    let opts = EmbodiedOpts {
+        reinit_per_rollout: args.has_flag("baseline"),
+        double_forward: args.has_flag("baseline"),
+        verbose: true,
+        ..Default::default()
+    };
+    let report = run_embodied(&cfg, &opts).context("embodied run failed")?;
+    println!("--- breakdown ---");
+    for (phase, secs) in &report.breakdown {
+        println!("  {phase:<10} {}", fmt::secs(*secs));
+    }
+    println!(
+        "mean {:.2} batches/s, final success rate {:.2} ({})",
+        report.mean_batches_per_sec(),
+        report.final_success_rate(),
+        report.mode
+    );
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let scale = match args.get_or("scale", "7B").as_str() {
+        "1.5B" | "1.5b" => ModelScale::B1_5,
+        "7B" | "7b" => ModelScale::B7,
+        "32B" | "32b" => ModelScale::B32,
+        other => bail!("unknown scale {other:?}"),
+    };
+    let devices = args.get_usize("devices", 64)?;
+    let p = simulate_reasoning(&SimScenario::paper_default(scale, devices))?;
+    println!("scale {} on {} devices:", p.scale_name, p.n_devices);
+    println!("  RLinf    {:>10.1}s/iter  {} tok/s", p.rlinf_secs, fmt::count(p.rlinf_tokens_per_sec));
+    println!("  veRL-like{:>10.1}s/iter  {} tok/s", p.baseline_secs, fmt::count(p.baseline_tokens_per_sec));
+    println!("  speedup  {:.2}x", p.speedup);
+    println!("--- RLinf plan ---\n{}", p.plan);
+    Ok(())
+}
+
+fn cmd_schedule(args: &Args) -> Result<()> {
+    // Print the Algorithm-1 plan for the paper-scale scenario (no training).
+    cmd_simulate(args)
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let dir = args.get_or("artifacts", "artifacts");
+    let manifest = rlinf::runtime::Manifest::load(&dir)?;
+    for (name, m) in &manifest.models {
+        println!("{name} ({}):", m.kind);
+        println!("  params: {} tensors, {}", m.n_param_tensors(), fmt::bytes(m.param_bytes()));
+        for (phase, arts) in &m.phases {
+            let batches: Vec<String> = arts.iter().map(|a| a.batch.to_string()).collect();
+            println!("  {phase:<8} variants: [{}]", batches.join(", "));
+        }
+    }
+    Ok(())
+}
+
+fn main() {
+    let args = match Args::from_env(&["verl-baseline", "baseline", "verbose"]) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    let result = match cmd {
+        "train" => cmd_train(&args),
+        "embodied" => cmd_embodied(&args),
+        "simulate" => cmd_simulate(&args),
+        "schedule" => cmd_schedule(&args),
+        "info" => cmd_info(&args),
+        _ => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,166 @@
+//! Metrics: worker-group-level timers and phase breakdowns.
+//!
+//! The paper (§4 "Performance Profiling") attaches a timer to every public
+//! worker function invoked remotely, reducible across ranks (mean/max/min),
+//! and lets developers add custom timers for finer regions. Both feed the
+//! profiling-guided scheduler and the Figure 11–13 latency breakdowns.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::util::json::Value;
+use crate::util::stats::Stream;
+
+/// Reduction applied across worker ranks / repeated calls.
+#[derive(Debug, Clone, Copy)]
+pub enum Reduce {
+    Mean,
+    Max,
+    Min,
+    Sum,
+}
+
+/// Thread-safe metrics registry shared by all workers of a run.
+#[derive(Clone, Default)]
+pub struct Metrics {
+    inner: Arc<Mutex<BTreeMap<String, Stream>>>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    /// Record a duration (seconds) under `name`.
+    pub fn record(&self, name: &str, secs: f64) {
+        let mut m = self.inner.lock().unwrap();
+        m.entry(name.to_string()).or_insert_with(Stream::new).add(secs);
+    }
+
+    /// Record an arbitrary scalar sample (loss, reward, bytes...).
+    pub fn record_value(&self, name: &str, v: f64) {
+        self.record(name, v);
+    }
+
+    /// Time a closure and record it.
+    pub fn time<T>(&self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.record(name, t0.elapsed().as_secs_f64());
+        out
+    }
+
+    /// RAII-style scope timer.
+    pub fn scope(&self, name: &str) -> ScopeTimer {
+        ScopeTimer { metrics: self.clone(), name: name.to_string(), start: Instant::now() }
+    }
+
+    pub fn get(&self, name: &str, r: Reduce) -> Option<f64> {
+        let m = self.inner.lock().unwrap();
+        let s = m.get(name)?;
+        Some(match r {
+            Reduce::Mean => s.mean(),
+            Reduce::Max => s.max,
+            Reduce::Min => s.min,
+            Reduce::Sum => s.sum,
+        })
+    }
+
+    pub fn count(&self, name: &str) -> u64 {
+        self.inner.lock().unwrap().get(name).map(|s| s.n).unwrap_or(0)
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.inner.lock().unwrap().keys().cloned().collect()
+    }
+
+    pub fn reset(&self) {
+        self.inner.lock().unwrap().clear();
+    }
+
+    /// Snapshot as a JSON tree (EXPERIMENTS.md dumps).
+    pub fn snapshot(&self) -> Value {
+        let m = self.inner.lock().unwrap();
+        let mut out = Value::obj();
+        for (k, s) in m.iter() {
+            let mut e = Value::obj();
+            e.set("n", s.n).set("mean", s.mean()).set("sum", s.sum).set("min", s.min).set("max", s.max);
+            out.set(k, e);
+        }
+        out
+    }
+
+    /// Phase breakdown: total seconds per top-level phase prefix
+    /// (`"rollout.generate" -> "rollout"`), as used by Figures 11–13.
+    pub fn breakdown(&self) -> Vec<(String, f64)> {
+        let m = self.inner.lock().unwrap();
+        let mut agg: BTreeMap<String, f64> = BTreeMap::new();
+        for (k, s) in m.iter() {
+            let phase = k.split('.').next().unwrap_or(k).to_string();
+            *agg.entry(phase).or_insert(0.0) += s.sum;
+        }
+        let mut v: Vec<_> = agg.into_iter().collect();
+        v.sort_by(|a, b| b.1.total_cmp(&a.1));
+        v
+    }
+}
+
+pub struct ScopeTimer {
+    metrics: Metrics,
+    name: String,
+    start: Instant,
+}
+
+impl Drop for ScopeTimer {
+    fn drop(&mut self) {
+        self.metrics.record(&self.name, self.start.elapsed().as_secs_f64());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_reduce() {
+        let m = Metrics::new();
+        m.record("x", 1.0);
+        m.record("x", 3.0);
+        assert_eq!(m.get("x", Reduce::Mean), Some(2.0));
+        assert_eq!(m.get("x", Reduce::Max), Some(3.0));
+        assert_eq!(m.get("x", Reduce::Sum), Some(4.0));
+        assert_eq!(m.count("x"), 2);
+        assert_eq!(m.get("y", Reduce::Mean), None);
+    }
+
+    #[test]
+    fn scope_timer_records() {
+        let m = Metrics::new();
+        {
+            let _t = m.scope("s");
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        assert!(m.get("s", Reduce::Max).unwrap() >= 0.002);
+    }
+
+    #[test]
+    fn breakdown_groups_by_prefix() {
+        let m = Metrics::new();
+        m.record("rollout.generate", 2.0);
+        m.record("rollout.sample", 1.0);
+        m.record("train.step", 1.5);
+        let b = m.breakdown();
+        assert_eq!(b[0], ("rollout".to_string(), 3.0));
+        assert_eq!(b[1], ("train".to_string(), 1.5));
+    }
+
+    #[test]
+    fn snapshot_is_json() {
+        let m = Metrics::new();
+        m.record("a.b", 0.5);
+        let v = m.snapshot();
+        assert_eq!(v.get_path("a.b").is_some(), false); // flat keys, not nested
+        assert!(v.get("a.b").is_some());
+    }
+}

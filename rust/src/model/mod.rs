@@ -1,0 +1,12 @@
+//! Model-side substrates that live in Rust: the tokenizer, the synthetic
+//! reasoning-task generator (AReaL-boba-Data substitute), the rule-based
+//! reward function, and token sampling.
+
+pub mod reward;
+pub mod sampler;
+pub mod tasks;
+pub mod tokenizer;
+
+pub use reward::rule_based_reward;
+pub use tasks::{Task, TaskGen};
+pub use tokenizer::Tokenizer;

@@ -1,0 +1,70 @@
+//! Rule-based reward (§5.1): +5 if the final numeric answer is correct,
+//! −5 otherwise — exactly the paper's reward function for reasoning RL.
+
+/// Extract the final numeric answer from a generated response: the last
+/// maximal digit-run (with optional leading minus) in the text.
+pub fn extract_answer(response: &str) -> Option<String> {
+    let bytes = response.as_bytes();
+    let mut end = None;
+    let mut i = bytes.len();
+    while i > 0 {
+        i -= 1;
+        if bytes[i].is_ascii_digit() {
+            if end.is_none() {
+                end = Some(i + 1);
+            }
+        } else if let Some(e) = end {
+            let start = if bytes[i] == b'-' { i } else { i + 1 };
+            return Some(response[start..e].to_string());
+        }
+    }
+    end.map(|e| response[..e].to_string())
+}
+
+/// The paper's reward: +5 correct, −5 incorrect.
+pub fn rule_based_reward(response: &str, answer: &str) -> f32 {
+    match extract_answer(response) {
+        Some(a) if canonical(&a) == canonical(answer) => 5.0,
+        _ => -5.0,
+    }
+}
+
+/// Strip leading zeros / normalize "-0".
+fn canonical(s: &str) -> String {
+    let neg = s.starts_with('-');
+    let digits = s.trim_start_matches('-').trim_start_matches('0');
+    let digits = if digits.is_empty() { "0" } else { digits };
+    if neg && digits != "0" {
+        format!("-{digits}")
+    } else {
+        digits.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn extracts_last_number() {
+        assert_eq!(extract_answer("the answer is 42"), Some("42".into()));
+        assert_eq!(extract_answer("12+34=46"), Some("46".into()));
+        assert_eq!(extract_answer("result: -7."), Some("-7".into()));
+        assert_eq!(extract_answer("no digits"), None);
+        assert_eq!(extract_answer("007"), Some("007".into()));
+    }
+
+    #[test]
+    fn reward_values_match_paper() {
+        assert_eq!(rule_based_reward("46", "46"), 5.0);
+        assert_eq!(rule_based_reward("i think 46 maybe", "46"), 5.0);
+        assert_eq!(rule_based_reward("45", "46"), -5.0);
+        assert_eq!(rule_based_reward("", "46"), -5.0);
+    }
+
+    #[test]
+    fn leading_zeros_canonicalized() {
+        assert_eq!(rule_based_reward("046", "46"), 5.0);
+        assert_eq!(rule_based_reward("0", "0"), 5.0);
+    }
+}

@@ -1,0 +1,118 @@
+//! Character-level tokenizer with a fixed 64-symbol vocabulary.
+//!
+//! The vocabulary is the cross-language contract with the L2 model
+//! (`vocab=64` in `python/compile/model.py`). IDs 0–3 are special tokens;
+//! the rest cover digits, operators, and the lowercase letters the task
+//! generator uses. Prompts are padded to the model's fixed prompt length
+//! (left-padding with PAD), which keeps every generation batch dense — the
+//! choice that lets the decode artifacts use static shapes.
+
+use anyhow::{bail, Result};
+
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+pub const UNK: i32 = 3;
+
+const ALPHABET: &str = "0123456789+-*/=() .,?!abcdefghijklmnopqrstuvwxyz:#<>[]";
+
+/// Char-level tokenizer (stateless; cheap to clone).
+#[derive(Debug, Clone, Default)]
+pub struct Tokenizer;
+
+impl Tokenizer {
+    pub fn new() -> Tokenizer {
+        Tokenizer
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        64
+    }
+
+    pub fn encode_char(&self, c: char) -> i32 {
+        match ALPHABET.find(c) {
+            Some(i) => 4 + i as i32,
+            None => UNK,
+        }
+    }
+
+    pub fn decode_char(&self, id: i32) -> char {
+        match id {
+            PAD => '∅',
+            BOS => '^',
+            EOS => '$',
+            UNK => '?',
+            i if (4..4 + ALPHABET.len() as i32).contains(&i) => {
+                ALPHABET.as_bytes()[(i - 4) as usize] as char
+            }
+            _ => '?',
+        }
+    }
+
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        text.chars().map(|c| self.encode_char(c)).collect()
+    }
+
+    pub fn decode(&self, ids: &[i32]) -> String {
+        ids.iter()
+            .take_while(|&&i| i != EOS)
+            .filter(|&&i| i != PAD && i != BOS)
+            .map(|&i| self.decode_char(i))
+            .collect()
+    }
+
+    /// Encode a prompt to exactly `len` tokens: `[PAD…, BOS, text…]`.
+    /// Errors if the text (plus BOS) exceeds `len`.
+    pub fn encode_prompt(&self, text: &str, len: usize) -> Result<Vec<i32>> {
+        let body = self.encode(text);
+        if body.len() + 1 > len {
+            bail!("prompt {text:?} ({} tokens + BOS) exceeds prompt_len {len}", body.len());
+        }
+        let mut out = vec![PAD; len - body.len() - 1];
+        out.push(BOS);
+        out.extend(body);
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_text() {
+        let t = Tokenizer::new();
+        let s = "12+34=46 ok?";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn vocab_bounds() {
+        let t = Tokenizer::new();
+        for c in ALPHABET.chars() {
+            let id = t.encode_char(c);
+            assert!((4..64).contains(&id), "{c} -> {id}");
+        }
+        assert_eq!(t.encode_char('€'), UNK);
+        assert!(4 + ALPHABET.len() <= 64, "alphabet must fit the model vocab");
+    }
+
+    #[test]
+    fn prompt_padding_fixed_length() {
+        let t = Tokenizer::new();
+        let p = t.encode_prompt("1+2=", 16).unwrap();
+        assert_eq!(p.len(), 16);
+        assert_eq!(p[11], BOS);
+        assert!(p[..11].iter().all(|&x| x == PAD));
+        assert!(t.encode_prompt("123456789012345+", 16).is_err());
+    }
+
+    #[test]
+    fn decode_stops_at_eos() {
+        let t = Tokenizer::new();
+        let mut ids = t.encode("42");
+        ids.push(EOS);
+        ids.extend(t.encode("junk"));
+        assert_eq!(t.decode(&ids), "42");
+    }
+}

@@ -1,0 +1,279 @@
+//! Batched autoregressive generation over the prefill/decode artifacts.
+
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::data::Tensor;
+use crate::model::sampler;
+use crate::model::tokenizer::{EOS, PAD};
+use crate::runtime::{Engine, ModelManifest};
+use crate::util::prng::Pcg64;
+
+/// One generated response.
+#[derive(Debug, Clone)]
+pub struct GenResult {
+    /// Full sequence: prompt (padded to prompt_len) + generated tokens,
+    /// padded with PAD to `prompt_len + max_new`.
+    pub tokens: Vec<i32>,
+    /// Generated tokens (≤ max_new), EOS inclusive if emitted.
+    pub gen_len: usize,
+    /// Sampling log-probs of the generated tokens.
+    pub gen_logprobs: Vec<f32>,
+}
+
+/// Thread-affine generation engine; weights are set once per sync and kept
+/// as XLA literals.
+pub struct RolloutEngine {
+    engine: Rc<Engine>,
+    pub model: ModelManifest,
+    params: Option<Vec<xla::Literal>>,
+    pub weight_version: u64,
+    pub temperature: f32,
+    rng: Pcg64,
+    /// Cap on the decode-batch variant (the veRL baseline's reduced
+    /// KV-cache budget is modelled by lowering this).
+    pub max_batch: usize,
+}
+
+impl RolloutEngine {
+    pub fn new(engine: Rc<Engine>, model_name: &str, temperature: f32, seed: u64) -> Result<Self> {
+        let model = engine.manifest().model(model_name)?.clone();
+        if model.kind != "transformer" {
+            bail!("rollout needs a transformer model, got {}", model.kind);
+        }
+        let max_batch = model.granularities("decode").into_iter().max().unwrap_or(1);
+        Ok(RolloutEngine {
+            engine,
+            model,
+            params: None,
+            weight_version: 0,
+            temperature,
+            rng: Pcg64::new_stream(seed, 0x9e11),
+            max_batch,
+        })
+    }
+
+    /// Install weights (host tensors from the trainer), replacing literals.
+    pub fn set_weights(&mut self, params: &[Tensor], version: u64) -> Result<()> {
+        if params.len() != self.model.n_param_tensors() {
+            bail!("set_weights: {} tensors, model wants {}", params.len(), self.model.n_param_tensors());
+        }
+        let lits = params
+            .iter()
+            .map(crate::runtime::engine::literal_of)
+            .collect::<Result<Vec<_>>>()?;
+        self.params = Some(lits);
+        self.weight_version = version;
+        Ok(())
+    }
+
+    pub fn has_weights(&self) -> bool {
+        self.params.is_some()
+    }
+
+    pub fn drop_weights(&mut self) {
+        self.params = None;
+    }
+
+    /// Bytes of KV cache one response occupies at full sequence length.
+    pub fn kv_bytes_per_seq(&self) -> u64 {
+        let l = self.model.meta_usize("n_layers").unwrap_or(1) as u64;
+        let h = self.model.meta_usize("n_heads").unwrap_or(1) as u64;
+        let s = self.model.meta_usize("max_seq").unwrap_or(1) as u64;
+        let d = self.model.meta_usize("d_model").unwrap_or(1) as u64 / h.max(1);
+        l * h * s * d * 2 * 4
+    }
+
+    /// Generate responses for a batch of fixed-length prompts.
+    ///
+    /// `unfinished_curve`, when provided, receives the number of still-
+    /// running responses after each decode step (Figure 2b data).
+    pub fn generate(
+        &mut self,
+        prompts: &[Vec<i32>],
+        max_new: usize,
+        mut unfinished_curve: Option<&mut Vec<usize>>,
+    ) -> Result<Vec<GenResult>> {
+        let params =
+            self.params.as_ref().ok_or_else(|| anyhow!("rollout has no weights; sync first"))?;
+        let b = prompts.len();
+        if b == 0 {
+            return Ok(Vec::new());
+        }
+        let p_len = self.model.meta_usize("prompt_len")?;
+        let max_seq = self.model.meta_usize("max_seq")?;
+        let vocab = self.model.meta_usize("vocab")?;
+        let max_new = max_new.min(max_seq - p_len);
+        for (i, p) in prompts.iter().enumerate() {
+            if p.len() != p_len {
+                bail!("prompt {i} has {} tokens, model wants {p_len}", p.len());
+            }
+        }
+
+        // Pick the smallest batch variant that fits (elastic granularity),
+        // bounded by the engine's KV budget; pad rows up to the variant.
+        let want = b.min(self.max_batch);
+        let prefill = self.model.variant("prefill", want)?.clone();
+        let bv = prefill.batch;
+        if b > bv {
+            bail!("generate: batch {b} exceeds variant capacity {bv}; chunk upstream");
+        }
+        let decode = self
+            .model
+            .phase("decode")?
+            .iter()
+            .find(|a| a.batch == bv)
+            .ok_or_else(|| anyhow!("no decode variant at batch {bv}"))?
+            .clone();
+
+        // Prompt tensor [bv, P] (rows >= b replicate row 0, ignored later).
+        let mut flat = Vec::with_capacity(bv * p_len);
+        for i in 0..bv {
+            flat.extend_from_slice(&prompts[i.min(b - 1)]);
+        }
+        let tok_t = Tensor::from_i32(vec![bv, p_len], &flat)?;
+
+        // Prefill: params + tokens -> (last_logits, kc, vc).
+        let mut args: Vec<&xla::Literal> = params.iter().collect();
+        let tok_l = crate::runtime::engine::literal_of(&tok_t)?;
+        args.push(&tok_l);
+        let mut outs = self.engine.run_literals(&prefill, &args)?;
+        let mut vc = outs.pop().unwrap();
+        let mut kc = outs.pop().unwrap();
+        let logits_l = outs.pop().unwrap();
+
+        let mut results: Vec<GenResult> = prompts
+            .iter()
+            .map(|p| GenResult { tokens: p.clone(), gen_len: 0, gen_logprobs: Vec::new() })
+            .collect();
+        let mut finished = vec![false; b];
+        let mut logits = crate::runtime::engine::tensor_of(&logits_l)?; // [bv, V]
+
+        for step in 0..max_new {
+            // Host sampling per live row.
+            let sampled = sampler::sample_batch(&logits, self.temperature, &mut self.rng);
+            let mut next = vec![PAD; bv];
+            let mut live = 0;
+            for i in 0..b {
+                if finished[i] {
+                    continue;
+                }
+                let s = sampled[i];
+                results[i].tokens.push(s.token);
+                results[i].gen_logprobs.push(s.logprob);
+                results[i].gen_len += 1;
+                if s.token == EOS || results[i].gen_len >= max_new {
+                    finished[i] = true;
+                } else {
+                    live += 1;
+                }
+                next[i] = s.token;
+            }
+            if let Some(curve) = unfinished_curve.as_deref_mut() {
+                curve.push(live);
+            }
+            if live == 0 {
+                break;
+            }
+            if step + 1 >= max_new {
+                break;
+            }
+            // Decode one step: params + kc + vc + token + pos.
+            let tok_l = crate::runtime::engine::literal_of(&Tensor::from_i32(vec![bv], &next)?)?;
+            let pos_l = crate::runtime::engine::literal_of(&Tensor::scalar_i32((p_len + step) as i32))?;
+            let mut args: Vec<&xla::Literal> = params.iter().collect();
+            args.push(&kc);
+            args.push(&vc);
+            args.push(&tok_l);
+            args.push(&pos_l);
+            let mut outs = self.engine.run_literals(&decode, &args)?;
+            vc = outs.pop().unwrap();
+            kc = outs.pop().unwrap();
+            let logits_l = outs.pop().unwrap();
+            logits = crate::runtime::engine::tensor_of(&logits_l)?;
+            debug_assert_eq!(logits.shape, vec![bv, vocab]);
+        }
+
+        // Pad sequences to fixed max_seq for downstream dense batching.
+        for r in &mut results {
+            r.tokens.resize(max_seq, PAD);
+        }
+        Ok(results)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+    use std::path::PathBuf;
+
+    fn engine() -> Option<(Rc<Engine>, Vec<Tensor>)> {
+        let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !d.join("manifest.json").exists() {
+            return None;
+        }
+        let e = Rc::new(Engine::new(Rc::new(Manifest::load(d).unwrap())).unwrap());
+        let model = e.manifest().model("tiny").unwrap().clone();
+        let init = &model.phase("init").unwrap()[0];
+        let params = e.run(init, &[Tensor::scalar_u32(0)]).unwrap();
+        Some((e, params))
+    }
+
+    fn prompts(n: usize) -> Vec<Vec<i32>> {
+        let tok = crate::model::Tokenizer::new();
+        let mut gen = crate::model::TaskGen::new(0);
+        (0..n).map(|_| tok.encode_prompt(&gen.next_task().prompt, 16).unwrap()).collect()
+    }
+
+    #[test]
+    fn generates_and_pads_to_max_seq() {
+        let Some((e, params)) = engine() else { return };
+        let mut ro = RolloutEngine::new(e, "tiny", 1.0, 0).unwrap();
+        assert!(!ro.has_weights());
+        ro.set_weights(&params, 1).unwrap();
+        let mut curve = Vec::new();
+        let out = ro.generate(&prompts(3), 20, Some(&mut curve)).unwrap();
+        assert_eq!(out.len(), 3);
+        for r in &out {
+            assert_eq!(r.tokens.len(), 64);
+            assert!(r.gen_len >= 1 && r.gen_len <= 20);
+            assert_eq!(r.gen_logprobs.len(), r.gen_len);
+            assert!(r.gen_logprobs.iter().all(|&l| l <= 0.0));
+        }
+        // The unfinished curve is non-increasing (long-tail shape).
+        for w in curve.windows(2) {
+            assert!(w[1] <= w[0], "{curve:?}");
+        }
+    }
+
+    #[test]
+    fn greedy_generation_is_deterministic() {
+        let Some((e, params)) = engine() else { return };
+        let mut ro = RolloutEngine::new(e.clone(), "tiny", 0.0, 0).unwrap();
+        ro.set_weights(&params, 1).unwrap();
+        let a = ro.generate(&prompts(2), 8, None).unwrap();
+        let b = ro.generate(&prompts(2), 8, None).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.tokens, y.tokens);
+        }
+    }
+
+    #[test]
+    fn no_weights_is_an_error() {
+        let Some((e, _)) = engine() else { return };
+        let mut ro = RolloutEngine::new(e, "tiny", 1.0, 0).unwrap();
+        assert!(ro.generate(&prompts(1), 4, None).is_err());
+    }
+
+    #[test]
+    fn kv_budget_reduction_limits_batch() {
+        let Some((e, params)) = engine() else { return };
+        let mut ro = RolloutEngine::new(e, "tiny", 1.0, 0).unwrap();
+        ro.set_weights(&params, 1).unwrap();
+        ro.max_batch = 4; // veRL-style reduced KV budget
+        assert!(ro.generate(&prompts(8), 4, None).is_err(), "exceeding capacity must error");
+        assert_eq!(ro.generate(&prompts(4), 4, None).unwrap().len(), 4);
+    }
+}

@@ -1,0 +1,12 @@
+//! Rollout: the in-house generation engine (SGLang/vLLM substitute) and its
+//! worker wrapper.
+//!
+//! Generation is the paper's dominant, dynamic phase: responses exit at
+//! per-row EOS while the batch keeps stepping for the stragglers, so the
+//! long-tail idleness of Figure 2 is reproduced mechanically, not modelled.
+
+pub mod engine;
+pub mod worker;
+
+pub use engine::{GenResult, RolloutEngine};
+pub use worker::RolloutWorker;

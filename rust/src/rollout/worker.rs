@@ -1,0 +1,220 @@
+//! The rollout worker: wraps [`RolloutEngine`] behind the Worker API.
+//!
+//! Public functions (dispatched via `WorkerGroup::invoke`):
+//! * `set_weights`     — install trainer weights (payload = param tensors).
+//! * `generate_batch`  — synchronous generation over a prompt tensor.
+//! * `generate_stream` — the Figure-5a loop: pull prompt items from the
+//!   in-channel at the scheduled granularity, generate, score with the
+//!   rule-based reward, and push per-response items (weight = length) to
+//!   the out-channel until the in-channel closes.
+
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::engine::RolloutEngine;
+use crate::data::{Payload, Tensor};
+use crate::model::{rule_based_reward, Tokenizer};
+use crate::runtime::{Engine, Manifest};
+use crate::util::json::Value;
+use crate::worker::{WorkerCtx, WorkerLogic};
+
+/// Construction-time configuration (Send; the engine itself is built on
+/// the worker thread at first onload).
+#[derive(Debug, Clone)]
+pub struct RolloutCfg {
+    pub artifacts_dir: String,
+    pub model: String,
+    pub temperature: f32,
+    pub max_new: usize,
+    /// Optional decode-batch cap (veRL-style reduced KV budget when Some).
+    pub max_batch: Option<usize>,
+}
+
+pub struct RolloutWorker {
+    cfg: RolloutCfg,
+    engine: Option<RolloutEngine>,
+    /// Host copy of weights (survives offload).
+    weights: Vec<Tensor>,
+    weight_version: u64,
+    tokenizer: Tokenizer,
+}
+
+impl RolloutWorker {
+    pub fn new(cfg: RolloutCfg) -> RolloutWorker {
+        RolloutWorker {
+            cfg,
+            engine: None,
+            weights: Vec::new(),
+            weight_version: 0,
+            tokenizer: Tokenizer::new(),
+        }
+    }
+
+    fn mem_bytes(&self) -> u64 {
+        let Some(e) = &self.engine else { return 0 };
+        e.model.param_bytes() + e.kv_bytes_per_seq() * e.max_batch as u64
+    }
+
+    fn push_weights(&mut self) -> Result<()> {
+        if let (Some(e), false) = (self.engine.as_mut(), self.weights.is_empty()) {
+            e.set_weights(&self.weights, self.weight_version)?;
+        }
+        Ok(())
+    }
+
+    fn generate_payloads(&mut self, items: Vec<Payload>, ctx: &WorkerCtx) -> Result<Vec<Payload>> {
+        let eng = self.engine.as_mut().ok_or_else(|| anyhow!("not onloaded"))?;
+        let p_len = eng.model.meta_usize("prompt_len")?;
+        let max_seq = eng.model.meta_usize("max_seq")?;
+        let prompts: Vec<Vec<i32>> = items
+            .iter()
+            .map(|p| p.tensor("prompt").and_then(|t| t.to_i32()))
+            .collect::<Result<_>>()?;
+        let mut curve = Vec::new();
+        let t0 = std::time::Instant::now();
+        let results = eng.generate(&prompts, self.cfg.max_new, Some(&mut curve))?;
+        ctx.metrics.record("rollout.gen_call", t0.elapsed().as_secs_f64());
+        for &live in &curve {
+            ctx.metrics.record_value("rollout.unfinished", live as f64);
+        }
+
+        let version = eng.weight_version;
+        let mut out = Vec::with_capacity(items.len());
+        for (item, r) in items.into_iter().zip(results) {
+            let text = self.tokenizer.decode(&r.tokens[p_len..]);
+            let answer = item.meta_str("answer").unwrap_or("").to_string();
+            let reward = rule_based_reward(&text, &answer);
+            let mut mask = vec![0f32; max_seq];
+            for t in p_len..(p_len + r.gen_len).min(max_seq) {
+                mask[t] = 1.0;
+            }
+            let mut p = Payload::from_named(vec![
+                ("tokens", Tensor::from_i32(vec![max_seq], &r.tokens)?),
+                ("mask", Tensor::from_f32(vec![max_seq], &mask)?),
+            ]);
+            p.meta.set("reward", reward as f64);
+            p.meta.set("gen_len", r.gen_len);
+            p.meta.set("weight_version", version);
+            p.meta.set("response", text);
+            for key in ["prompt_id", "sample_idx", "answer"] {
+                if let Some(v) = item.meta.get(key) {
+                    p.meta.set(key, v.clone());
+                }
+            }
+            out.push(p);
+        }
+        Ok(out)
+    }
+}
+
+impl WorkerLogic for RolloutWorker {
+    fn onload(&mut self, ctx: &WorkerCtx) -> Result<()> {
+        if self.engine.is_none() {
+            let manifest = Rc::new(Manifest::load(&self.cfg.artifacts_dir)?);
+            let engine = Rc::new(Engine::new(manifest)?.with_metrics(ctx.metrics.clone()));
+            let seed = 0x520 + ctx.rank as u64;
+            let mut e = RolloutEngine::new(engine, &self.cfg.model, self.cfg.temperature, seed)?;
+            if let Some(mb) = self.cfg.max_batch {
+                e.max_batch = mb;
+            }
+            self.engine = Some(e);
+        }
+        self.push_weights()?;
+        ctx.reserve_mem(self.mem_bytes(), "rollout").context("rollout onload OOM")?;
+        Ok(())
+    }
+
+    fn offload(&mut self, ctx: &WorkerCtx) -> Result<()> {
+        if let Some(e) = &mut self.engine {
+            e.drop_weights();
+        }
+        ctx.free_mem("rollout");
+        Ok(())
+    }
+
+    fn call(&mut self, ctx: &WorkerCtx, method: &str, arg: Payload) -> Result<Payload> {
+        match method {
+            "set_weights" => {
+                self.weight_version = arg.meta_i64("version").unwrap_or(0) as u64;
+                self.weights = arg.tensors;
+                // Push straight to the engine whenever it is resident
+                // (pipelined modes onload before the first sync).
+                if self.engine.is_some() {
+                    self.push_weights()?;
+                }
+                Ok(Payload::new().set_meta("version", self.weight_version))
+            }
+            "generate_batch" => {
+                let prompts = arg.tensor("prompts")?.clone();
+                let b = prompts.shape[0];
+                let answers =
+                    arg.meta.get("answers").and_then(Value::as_arr).map(<[Value]>::to_vec).unwrap_or_default();
+                let items: Vec<Payload> = (0..b)
+                    .map(|i| {
+                        let row = prompts.slice0(i, 1).unwrap().flatten();
+                        let mut p = Payload::from_named(vec![("prompt", row)]);
+                        p.meta.set("prompt_id", i);
+                        if let Some(a) = answers.get(i) {
+                            p.meta.set("answer", a.clone());
+                        }
+                        p
+                    })
+                    .collect();
+                let outs = self.generate_payloads(items, ctx)?;
+                let toks: Vec<Tensor> =
+                    outs.iter().map(|p| p.tensor("tokens").unwrap().clone().into_row()).collect();
+                let masks: Vec<Tensor> =
+                    outs.iter().map(|p| p.tensor("mask").unwrap().clone().into_row()).collect();
+                let rewards: Vec<Value> = outs
+                    .iter()
+                    .map(|p| Value::Float(p.meta_f64("reward").unwrap_or(0.0)))
+                    .collect();
+                let lens: Vec<Value> =
+                    outs.iter().map(|p| Value::Int(p.meta_i64("gen_len").unwrap_or(0))).collect();
+                let mut reply = Payload::from_named(vec![
+                    ("tokens", Tensor::concat0(&toks)?),
+                    ("mask", Tensor::concat0(&masks)?),
+                ]);
+                reply.meta.set("rewards", Value::Arr(rewards));
+                reply.meta.set("gen_lens", Value::Arr(lens));
+                reply.meta.set("batch", b);
+                Ok(reply)
+            }
+            "generate_stream" => {
+                let in_ch = ctx
+                    .channels
+                    .get(arg.meta_str("in_channel").unwrap_or("prompts"))
+                    .ok_or_else(|| anyhow!("missing in channel"))?;
+                let out_ch = ctx
+                    .channels
+                    .get(arg.meta_str("out_channel").unwrap_or("rollout"))
+                    .ok_or_else(|| anyhow!("missing out channel"))?;
+                let gran = arg.meta_i64("granularity").unwrap_or(8).max(1) as usize;
+                let me = ctx.endpoint();
+                let mut produced = 0usize;
+                let result = (|| -> Result<()> {
+                    loop {
+                        let items = in_ch.get_batch(&me, gran);
+                        if items.is_empty() {
+                            return Ok(());
+                        }
+                        let payloads: Vec<Payload> = items.into_iter().map(|i| i.payload).collect();
+                        let outs = self.generate_payloads(payloads, ctx)?;
+                        for o in outs {
+                            let w = o.meta_i64("gen_len").unwrap_or(1) as f64;
+                            out_ch.put_weighted(&me, o, w)?;
+                            produced += 1;
+                        }
+                    }
+                })();
+                // Always close our producer slot — a dying producer must
+                // not wedge downstream consumers (fail-fast, §4).
+                out_ch.producer_done(&me);
+                result?;
+                Ok(Payload::new().set_meta("produced", produced))
+            }
+            other => bail!("rollout has no method {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,254 @@
+//! Per-thread PJRT execution engine.
+//!
+//! `Engine` wraps a PJRT CPU client and a compile-on-demand executable
+//! cache keyed by artifact file. It converts between host [`Tensor`]s and
+//! XLA `Literal`s at the boundary; workers keep hot state (weights, KV
+//! caches) as `Literal`s to avoid repeated conversion inside loops.
+//!
+//! All lowered modules return a single tuple (lowered with
+//! `return_tuple=True`), which `run`/`run_literals` decompose into the flat
+//! output list described by the manifest.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::manifest::{ArtifactSig, Manifest};
+use crate::data::{DType, Tensor};
+use crate::metrics::Metrics;
+
+fn dtype_to_xla(d: DType) -> xla::ElementType {
+    match d {
+        DType::F32 => xla::ElementType::F32,
+        DType::I32 => xla::ElementType::S32,
+        DType::U32 => xla::ElementType::U32,
+    }
+}
+
+fn xla_to_dtype(t: xla::ElementType) -> Result<DType> {
+    Ok(match t {
+        xla::ElementType::F32 => DType::F32,
+        xla::ElementType::S32 => DType::I32,
+        xla::ElementType::U32 => DType::U32,
+        other => bail!("unsupported element type {other:?}"),
+    })
+}
+
+/// Convert a host tensor into an XLA literal (one memcpy).
+pub fn literal_of(t: &Tensor) -> Result<xla::Literal> {
+    xla::Literal::create_from_shape_and_untyped_data(dtype_to_xla(t.dtype), &t.shape, t.bytes())
+        .map_err(|e| anyhow!("literal_of: {e:?}"))
+}
+
+/// Convert an XLA literal back into a host tensor (one memcpy).
+pub fn tensor_of(l: &xla::Literal) -> Result<Tensor> {
+    let shape = l.shape().map_err(|e| anyhow!("literal shape: {e:?}"))?;
+    let arr = match &shape {
+        xla::Shape::Array(a) => a,
+        other => bail!("tensor_of on non-array literal {other:?}"),
+    };
+    let dims: Vec<usize> = arr.dims().iter().map(|d| *d as usize).collect();
+    let dtype = xla_to_dtype(arr.element_type())?;
+    let n = arr.element_count();
+    let mut bytes = vec![0u8; n * dtype.size()];
+    match dtype {
+        DType::F32 => {
+            let mut buf = vec![0f32; n];
+            l.copy_raw_to(&mut buf).map_err(|e| anyhow!("copy_raw_to: {e:?}"))?;
+            for (i, v) in buf.iter().enumerate() {
+                bytes[i * 4..i * 4 + 4].copy_from_slice(&v.to_le_bytes());
+            }
+        }
+        DType::I32 => {
+            let mut buf = vec![0i32; n];
+            l.copy_raw_to(&mut buf).map_err(|e| anyhow!("copy_raw_to: {e:?}"))?;
+            for (i, v) in buf.iter().enumerate() {
+                bytes[i * 4..i * 4 + 4].copy_from_slice(&v.to_le_bytes());
+            }
+        }
+        DType::U32 => {
+            let mut buf = vec![0u32; n];
+            l.copy_raw_to(&mut buf).map_err(|e| anyhow!("copy_raw_to: {e:?}"))?;
+            for (i, v) in buf.iter().enumerate() {
+                bytes[i * 4..i * 4 + 4].copy_from_slice(&v.to_le_bytes());
+            }
+        }
+    }
+    Tensor::from_bytes(dtype, dims, bytes)
+}
+
+/// Thread-affine PJRT engine (not `Send`: PJRT client handles are `Rc`).
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Rc<Manifest>,
+    exes: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    metrics: Option<Metrics>,
+}
+
+impl Engine {
+    pub fn new(manifest: Rc<Manifest>) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PjRtClient::cpu: {e:?}"))?;
+        Ok(Engine { client, manifest, exes: RefCell::new(HashMap::new()), metrics: None })
+    }
+
+    pub fn with_metrics(mut self, m: Metrics) -> Engine {
+        self.metrics = Some(m);
+        self
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (or fetch from cache) the executable for an artifact.
+    pub fn executable(&self, sig: &ArtifactSig) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.exes.borrow().get(&sig.file) {
+            return Ok(e.clone());
+        }
+        let path = self.manifest.artifact_path(sig);
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("loading {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", sig.file))?;
+        if let Some(m) = &self.metrics {
+            m.record("runtime.compile", t0.elapsed().as_secs_f64());
+        }
+        let exe = Rc::new(exe);
+        self.exes.borrow_mut().insert(sig.file.clone(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Pre-compile a set of artifacts (worker onload path).
+    pub fn warmup(&self, sigs: &[&ArtifactSig]) -> Result<()> {
+        for s in sigs {
+            self.executable(s)?;
+        }
+        Ok(())
+    }
+
+    /// Execute on literal inputs, returning decomposed tuple outputs.
+    /// Accepts owned or borrowed literals (`&[Literal]` or `&[&Literal]`).
+    pub fn run_literals<L: std::borrow::Borrow<xla::Literal>>(
+        &self,
+        sig: &ArtifactSig,
+        args: &[L],
+    ) -> Result<Vec<xla::Literal>> {
+        if args.len() != sig.inputs.len() {
+            bail!("{}: got {} args, signature wants {}", sig.file, args.len(), sig.inputs.len());
+        }
+        let exe = self.executable(sig)?;
+        let t0 = std::time::Instant::now();
+        let out = exe.execute::<L>(args).map_err(|e| anyhow!("execute {}: {e:?}", sig.file))?;
+        let lit = out
+            .into_iter()
+            .next()
+            .and_then(|r| r.into_iter().next())
+            .ok_or_else(|| anyhow!("execute {} returned no output", sig.file))?
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal_sync: {e:?}"))?;
+        let parts = lit.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))?;
+        if parts.len() != sig.outputs.len() {
+            bail!("{}: got {} outputs, signature says {}", sig.file, parts.len(), sig.outputs.len());
+        }
+        if let Some(m) = &self.metrics {
+            m.record(&format!("runtime.exec.{}", sig.file), t0.elapsed().as_secs_f64());
+        }
+        Ok(parts)
+    }
+
+    /// Execute on host tensors (converting at the boundary).
+    pub fn run(&self, sig: &ArtifactSig, args: &[Tensor]) -> Result<Vec<Tensor>> {
+        let lits = args.iter().map(literal_of).collect::<Result<Vec<_>>>()?;
+        let outs = self.run_literals(sig, &lits)?;
+        outs.iter().map(tensor_of).collect()
+    }
+
+    /// Validate that host tensors match an artifact's input signature
+    /// (shape and dtype) — cheap defense at the workflow boundary.
+    pub fn check_args(&self, sig: &ArtifactSig, args: &[Tensor]) -> Result<()> {
+        if args.len() != sig.inputs.len() {
+            bail!("{}: arg count {} != {}", sig.file, args.len(), sig.inputs.len());
+        }
+        for (a, s) in args.iter().zip(&sig.inputs) {
+            if a.shape != s.shape || a.dtype.name() != s.dtype.name() {
+                bail!(
+                    "{}: arg {:?} has {:?}/{:?}, wants {:?}/{}",
+                    sig.file, s.name, a.shape, a.dtype, s.shape, s.dtype.name()
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn engine() -> Option<Engine> {
+        let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !d.join("manifest.json").exists() {
+            return None;
+        }
+        Some(Engine::new(Rc::new(Manifest::load(d).unwrap())).unwrap())
+    }
+
+    #[test]
+    fn literal_tensor_roundtrip() {
+        let t = Tensor::from_f32(vec![2, 3], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap();
+        let l = literal_of(&t).unwrap();
+        let back = tensor_of(&l).unwrap();
+        assert_eq!(back.shape, t.shape);
+        assert_eq!(back.to_f32().unwrap(), t.to_f32().unwrap());
+
+        let ti = Tensor::from_i32(vec![4], &[-1, 0, 7, 42]).unwrap();
+        let back = tensor_of(&literal_of(&ti).unwrap()).unwrap();
+        assert_eq!(back.to_i32().unwrap(), vec![-1, 0, 7, 42]);
+    }
+
+    #[test]
+    fn init_artifact_materializes_params() {
+        let Some(e) = engine() else { return };
+        let model = e.manifest().model("tiny").unwrap().clone();
+        let init = &model.phase("init").unwrap()[0];
+        let outs = e.run(init, &[Tensor::scalar_u32(0)]).unwrap();
+        assert_eq!(outs.len(), model.n_param_tensors());
+        for (o, p) in outs.iter().zip(&model.params) {
+            assert_eq!(o.shape, p.shape, "{}", p.name);
+        }
+        // Weights should be non-degenerate.
+        let wte = outs[0].to_f32().unwrap();
+        let mean: f32 = wte.iter().sum::<f32>() / wte.len() as f32;
+        assert!(mean.abs() < 0.01);
+        assert!(wte.iter().any(|v| v.abs() > 1e-4));
+    }
+
+    #[test]
+    fn init_is_deterministic_per_seed() {
+        let Some(e) = engine() else { return };
+        let model = e.manifest().model("tiny").unwrap().clone();
+        let init = &model.phase("init").unwrap()[0];
+        let a = e.run(init, &[Tensor::scalar_u32(7)]).unwrap();
+        let b = e.run(init, &[Tensor::scalar_u32(7)]).unwrap();
+        let c = e.run(init, &[Tensor::scalar_u32(8)]).unwrap();
+        assert_eq!(a[0].to_f32().unwrap(), b[0].to_f32().unwrap());
+        assert_ne!(a[0].to_f32().unwrap(), c[0].to_f32().unwrap());
+    }
+
+    #[test]
+    fn arg_checking_rejects_mismatches() {
+        let Some(e) = engine() else { return };
+        let model = e.manifest().model("tiny").unwrap().clone();
+        let init = &model.phase("init").unwrap()[0];
+        assert!(e.check_args(init, &[]).is_err());
+        assert!(e.check_args(init, &[Tensor::scalar_f32(0.0)]).is_err());
+        assert!(e.check_args(init, &[Tensor::scalar_u32(0)]).is_ok());
+    }
+}

@@ -1,0 +1,228 @@
+//! Artifact manifest: the cross-language contract written by `aot.py`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::data::DType;
+use crate::util::json::{self, Value};
+
+/// Signature of one tensor in an artifact's input or output list.
+#[derive(Debug, Clone)]
+pub struct TensorSig {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSig {
+    pub fn byte_len(&self) -> usize {
+        self.shape.iter().product::<usize>() * self.dtype.size()
+    }
+
+    fn from_value(v: &Value) -> Result<TensorSig> {
+        Ok(TensorSig {
+            name: v.get("name").and_then(Value::as_str).unwrap_or("").to_string(),
+            dtype: DType::from_name(v.get("dtype").and_then(Value::as_str).unwrap_or("float32"))?,
+            shape: v
+                .get("shape")
+                .and_then(Value::as_arr)
+                .map(|a| a.iter().filter_map(Value::as_usize).collect())
+                .unwrap_or_default(),
+        })
+    }
+}
+
+/// One compiled HLO module (a model phase at a fixed batch granularity).
+#[derive(Debug, Clone)]
+pub struct ArtifactSig {
+    pub file: String,
+    /// Batch granularity of this variant (prompts for prefill/decode,
+    /// sequences for logprob/train, observations for act); 0 for init.
+    pub batch: usize,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+}
+
+impl ArtifactSig {
+    fn from_value(v: &Value) -> Result<ArtifactSig> {
+        let batch = v
+            .get("batch")
+            .or_else(|| v.get("mb"))
+            .or_else(|| v.get("n"))
+            .and_then(Value::as_usize)
+            .unwrap_or(0);
+        Ok(ArtifactSig {
+            file: v.get("file").and_then(Value::as_str).context("artifact.file")?.to_string(),
+            batch,
+            inputs: sig_list(v.get("inputs"))?,
+            outputs: sig_list(v.get("outputs"))?,
+        })
+    }
+
+    /// Total input bytes — the profiler's proxy for transfer cost.
+    pub fn input_bytes(&self) -> usize {
+        self.inputs.iter().map(TensorSig::byte_len).sum()
+    }
+}
+
+fn sig_list(v: Option<&Value>) -> Result<Vec<TensorSig>> {
+    v.and_then(Value::as_arr)
+        .map(|a| a.iter().map(TensorSig::from_value).collect())
+        .unwrap_or_else(|| Ok(Vec::new()))
+}
+
+/// All artifacts of one model.
+#[derive(Debug, Clone)]
+pub struct ModelManifest {
+    pub name: String,
+    /// "transformer" or "policy".
+    pub kind: String,
+    pub meta: Value,
+    /// Flat parameter layout (ordering contract with `param_specs()`).
+    pub params: Vec<TensorSig>,
+    /// phase -> batch variants, sorted by ascending batch.
+    pub phases: BTreeMap<String, Vec<ArtifactSig>>,
+}
+
+impl ModelManifest {
+    pub fn meta_usize(&self, key: &str) -> Result<usize> {
+        self.meta.get(key).and_then(Value::as_usize).ok_or_else(|| anyhow!("meta {key} missing"))
+    }
+
+    /// Parameter count in tensors.
+    pub fn n_param_tensors(&self) -> usize {
+        self.params.len()
+    }
+
+    /// Total parameter bytes (weights-resident memory of one replica).
+    pub fn param_bytes(&self) -> u64 {
+        self.params.iter().map(|p| p.byte_len() as u64).sum()
+    }
+
+    pub fn phase(&self, phase: &str) -> Result<&[ArtifactSig]> {
+        self.phases
+            .get(phase)
+            .map(|v| v.as_slice())
+            .ok_or_else(|| anyhow!("model {} has no phase {phase:?}", self.name))
+    }
+
+    /// The variant with the smallest batch ≥ `want` (elastic pipelining
+    /// granularity selection); falls back to the largest available.
+    pub fn variant(&self, phase: &str, want: usize) -> Result<&ArtifactSig> {
+        let vs = self.phase(phase)?;
+        vs.iter()
+            .find(|a| a.batch >= want)
+            .or_else(|| vs.last())
+            .ok_or_else(|| anyhow!("model {} phase {phase} has no variants", self.name))
+    }
+
+    /// All batch granularities available for a phase.
+    pub fn granularities(&self, phase: &str) -> Vec<usize> {
+        self.phases.get(phase).map(|v| v.iter().map(|a| a.batch).collect()).unwrap_or_default()
+    }
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelManifest>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?}; run `make artifacts` first"))?;
+        let root = json::parse(&text).context("parsing manifest.json")?;
+        let mut models = BTreeMap::new();
+        let model_objs = root
+            .get("models")
+            .and_then(Value::as_obj)
+            .ok_or_else(|| anyhow!("manifest has no models"))?;
+        for (name, mv) in model_objs {
+            models.insert(name.clone(), parse_model(name, mv)?);
+        }
+        Ok(Manifest { dir, models })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelManifest> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("model {name:?} not in manifest (have: {:?})",
+                                    self.models.keys().collect::<Vec<_>>()))
+    }
+
+    pub fn artifact_path(&self, sig: &ArtifactSig) -> PathBuf {
+        self.dir.join(&sig.file)
+    }
+}
+
+fn parse_model(name: &str, v: &Value) -> Result<ModelManifest> {
+    let kind = v.get("kind").and_then(Value::as_str).unwrap_or("transformer").to_string();
+    let params = sig_list(v.get("params"))?;
+    let mut phases = BTreeMap::new();
+    let arts = v.get("artifacts").and_then(Value::as_obj).ok_or_else(|| anyhow!("no artifacts"))?;
+    for (phase, pv) in arts {
+        let mut list = match pv {
+            Value::Arr(a) => a.iter().map(ArtifactSig::from_value).collect::<Result<Vec<_>>>()?,
+            obj @ Value::Obj(_) => vec![ArtifactSig::from_value(obj)?],
+            _ => bail!("phase {phase} malformed"),
+        };
+        list.sort_by_key(|a| a.batch);
+        phases.insert(phase.clone(), list);
+    }
+    let mut meta = v.clone();
+    if let Value::Obj(m) = &mut meta {
+        m.remove("artifacts");
+        m.remove("params");
+    }
+    Ok(ModelManifest { name: name.to_string(), kind, meta, params, phases })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest_dir() -> Option<PathBuf> {
+        let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        d.join("manifest.json").exists().then_some(d)
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let Some(dir) = manifest_dir() else { return };
+        let m = Manifest::load(dir).unwrap();
+        let tiny = m.model("tiny").unwrap();
+        assert_eq!(tiny.kind, "transformer");
+        assert_eq!(tiny.meta_usize("vocab").unwrap(), 64);
+        assert!(tiny.n_param_tensors() > 10);
+        assert!(tiny.param_bytes() > 1_000_000);
+        // init + 4 phase families
+        for phase in ["init", "prefill", "decode", "logprob", "train"] {
+            assert!(!tiny.phase(phase).unwrap().is_empty(), "{phase}");
+        }
+    }
+
+    #[test]
+    fn variant_selection_picks_smallest_fitting() {
+        let Some(dir) = manifest_dir() else { return };
+        let m = Manifest::load(dir).unwrap();
+        let tiny = m.model("tiny").unwrap();
+        assert_eq!(tiny.variant("decode", 5).unwrap().batch, 8);
+        assert_eq!(tiny.variant("decode", 8).unwrap().batch, 8);
+        assert_eq!(tiny.variant("decode", 1).unwrap().batch, 4);
+        // Larger than any variant -> largest.
+        assert_eq!(tiny.variant("decode", 999).unwrap().batch, 32);
+    }
+
+    #[test]
+    fn missing_model_errors() {
+        let Some(dir) = manifest_dir() else { return };
+        let m = Manifest::load(dir).unwrap();
+        assert!(m.model("nope").is_err());
+    }
+}

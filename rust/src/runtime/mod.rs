@@ -1,0 +1,17 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them.
+//!
+//! The Python side (`python/compile/aot.py`) lowers every L2 computation to
+//! `artifacts/*.hlo.txt` plus a `manifest.json` signature index. This module
+//! is the only place that touches the `xla` crate:
+//!
+//! * [`Manifest`] — parsed artifact index (pure data, `Send`).
+//! * [`Engine`]   — a PJRT CPU client plus a compile-on-demand executable
+//!   cache. **Thread-affine**: `PjRtClient` is `Rc`-based, so each worker
+//!   thread owns its own `Engine` (mirroring one runtime per GPU-process in
+//!   the paper) and tensors cross workers as host [`crate::data::Tensor`]s.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::Engine;
+pub use manifest::{ArtifactSig, Manifest, ModelManifest, TensorSig};

@@ -1,0 +1,10 @@
+//! Profiling-guided scheduling (§3.4): the profiler, the cost model, and
+//! Algorithm 1 — recursive s-t-cut search over the workflow DAG.
+
+pub mod algorithm1;
+pub mod plan;
+pub mod profile;
+
+pub use algorithm1::{SchedProblem, Scheduler};
+pub use plan::Plan;
+pub use profile::ProfileDb;

@@ -1,0 +1,190 @@
+//! Execution plans: the output of Algorithm 1.
+//!
+//! A plan is a binary tree over workflow subgraphs: leaves bind one worker
+//! (group) to a device count and a data granularity; `Temporal` nodes share
+//! devices sequentially (context switching); `Spatial` nodes split devices
+//! and pipeline. `assignments()` flattens the tree into per-worker
+//! directives the workflow runner applies.
+
+use crate::util::json::Value;
+
+#[derive(Debug, Clone)]
+pub enum Plan {
+    Leaf {
+        worker: String,
+        devices: usize,
+        granularity: usize,
+        time: f64,
+    },
+    /// first then second on the *same* devices (temporal scheduling).
+    Temporal { first: Box<Plan>, second: Box<Plan>, time: f64 },
+    /// left ∥ right on disjoint device sets, pipelined over `chunks`.
+    Spatial { left: Box<Plan>, right: Box<Plan>, chunks: usize, time: f64 },
+}
+
+/// Flattened directive for one worker group.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Assignment {
+    pub worker: String,
+    /// Devices granted (count; the runner maps counts to concrete IDs).
+    pub devices: usize,
+    pub granularity: usize,
+    /// true if the worker time-shares its devices with another phase and
+    /// must take the device lock (context switching).
+    pub shares_devices: bool,
+    /// Depth-first stage index — doubles as the device-lock priority.
+    pub stage: u64,
+}
+
+impl Plan {
+    pub fn time(&self) -> f64 {
+        match self {
+            Plan::Leaf { time, .. } | Plan::Temporal { time, .. } | Plan::Spatial { time, .. } => {
+                *time
+            }
+        }
+    }
+
+    /// Flatten into per-worker assignments.
+    pub fn assignments(&self) -> Vec<Assignment> {
+        let mut out = Vec::new();
+        let mut stage = 0u64;
+        self.walk(false, &mut stage, &mut out);
+        out
+    }
+
+    fn walk(&self, shared: bool, stage: &mut u64, out: &mut Vec<Assignment>) {
+        match self {
+            Plan::Leaf { worker, devices, granularity, .. } => {
+                out.push(Assignment {
+                    worker: worker.clone(),
+                    devices: *devices,
+                    granularity: *granularity,
+                    shares_devices: shared,
+                    stage: *stage,
+                });
+                *stage += 1;
+            }
+            Plan::Temporal { first, second, .. } => {
+                first.walk(true, stage, out);
+                second.walk(true, stage, out);
+            }
+            Plan::Spatial { left, right, .. } => {
+                left.walk(shared, stage, out);
+                right.walk(shared, stage, out);
+            }
+        }
+    }
+
+    /// Human-readable rendering (logged by the launcher).
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        self.render_into(&mut s, 0);
+        s
+    }
+
+    fn render_into(&self, out: &mut String, depth: usize) {
+        let pad = "  ".repeat(depth);
+        match self {
+            Plan::Leaf { worker, devices, granularity, time } => {
+                out.push_str(&format!(
+                    "{pad}{worker}: {devices} dev, granularity {granularity}, {:.3}s\n",
+                    time
+                ));
+            }
+            Plan::Temporal { first, second, time } => {
+                out.push_str(&format!("{pad}temporal ({:.3}s):\n", time));
+                first.render_into(out, depth + 1);
+                second.render_into(out, depth + 1);
+            }
+            Plan::Spatial { left, right, chunks, time } => {
+                out.push_str(&format!("{pad}spatial ∥ pipeline x{chunks} ({:.3}s):\n", time));
+                left.render_into(out, depth + 1);
+                right.render_into(out, depth + 1);
+            }
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        match self {
+            Plan::Leaf { worker, devices, granularity, time } => {
+                let mut v = Value::obj();
+                v.set("kind", "leaf")
+                    .set("worker", worker.as_str())
+                    .set("devices", *devices)
+                    .set("granularity", *granularity)
+                    .set("time", *time);
+                v
+            }
+            Plan::Temporal { first, second, time } => {
+                let mut v = Value::obj();
+                v.set("kind", "temporal")
+                    .set("first", first.to_json())
+                    .set("second", second.to_json())
+                    .set("time", *time);
+                v
+            }
+            Plan::Spatial { left, right, chunks, time } => {
+                let mut v = Value::obj();
+                v.set("kind", "spatial")
+                    .set("left", left.to_json())
+                    .set("right", right.to_json())
+                    .set("chunks", *chunks)
+                    .set("time", *time);
+                v
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn leaf(w: &str, d: usize, t: f64) -> Plan {
+        Plan::Leaf { worker: w.into(), devices: d, granularity: 8, time: t }
+    }
+
+    #[test]
+    fn assignments_mark_sharing_and_stage_order() {
+        // temporal(rollout, spatial(infer, train))
+        let p = Plan::Temporal {
+            first: Box::new(leaf("rollout", 4, 10.0)),
+            second: Box::new(Plan::Spatial {
+                left: Box::new(leaf("infer", 2, 3.0)),
+                right: Box::new(leaf("train", 2, 4.0)),
+                chunks: 4,
+                time: 5.0,
+            }),
+            time: 15.0,
+        };
+        let a = p.assignments();
+        assert_eq!(a.len(), 3);
+        assert!(a.iter().all(|x| x.shares_devices), "temporal root -> all share");
+        assert_eq!(a[0].worker, "rollout");
+        assert!(a[0].stage < a[1].stage && a[1].stage < a[2].stage);
+    }
+
+    #[test]
+    fn pure_spatial_plan_needs_no_lock() {
+        let p = Plan::Spatial {
+            left: Box::new(leaf("a", 2, 1.0)),
+            right: Box::new(leaf("b", 2, 1.0)),
+            chunks: 8,
+            time: 1.2,
+        };
+        assert!(p.assignments().iter().all(|x| !x.shares_devices));
+    }
+
+    #[test]
+    fn render_and_json() {
+        let p = Plan::Temporal {
+            first: Box::new(leaf("x", 1, 1.0)),
+            second: Box::new(leaf("y", 1, 2.0)),
+            time: 3.0,
+        };
+        assert!(p.render().contains("temporal"));
+        let j = p.to_json();
+        assert_eq!(j.get_path("first.worker").unwrap().as_str(), Some("x"));
+    }
+}

@@ -1,0 +1,177 @@
+//! Profile database: measured (time, memory) per worker per granularity.
+//!
+//! The profiler runs each component at a few batch sizes (§3.4); the
+//! scheduler interpolates/extrapolates between measured points with a
+//! linear fit — which matches the measured behaviour of both generation
+//! (linear in batch) and the simulator (near-flat time, linear memory) in
+//! the paper's Figure 3.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Value;
+use crate::util::stats::linfit;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Sample {
+    pub secs: f64,
+    pub mem_bytes: u64,
+}
+
+/// worker -> batch -> sample.
+#[derive(Debug, Clone, Default)]
+pub struct ProfileDb {
+    map: BTreeMap<String, BTreeMap<usize, Sample>>,
+}
+
+impl ProfileDb {
+    pub fn new() -> ProfileDb {
+        ProfileDb::default()
+    }
+
+    pub fn add(&mut self, worker: &str, batch: usize, secs: f64, mem_bytes: u64) {
+        self.map
+            .entry(worker.to_string())
+            .or_default()
+            .insert(batch, Sample { secs, mem_bytes });
+    }
+
+    pub fn workers(&self) -> Vec<String> {
+        self.map.keys().cloned().collect()
+    }
+
+    pub fn batches(&self, worker: &str) -> Vec<usize> {
+        self.map.get(worker).map(|m| m.keys().copied().collect()).unwrap_or_default()
+    }
+
+    pub fn exact(&self, worker: &str, batch: usize) -> Option<Sample> {
+        self.map.get(worker)?.get(&batch).copied()
+    }
+
+    /// Per-call execution time at `batch`, interpolated from measurements.
+    pub fn time(&self, worker: &str, batch: usize) -> Option<f64> {
+        let m = self.map.get(worker)?;
+        if let Some(s) = m.get(&batch) {
+            return Some(s.secs);
+        }
+        let (xs, ys): (Vec<f64>, Vec<f64>) =
+            m.iter().map(|(b, s)| (*b as f64, s.secs)).unzip();
+        if xs.is_empty() {
+            return None;
+        }
+        if xs.len() == 1 {
+            // One point: scale linearly through the origin (per-item cost).
+            return Some(ys[0] / xs[0] * batch as f64);
+        }
+        let (a, b) = linfit(&xs, &ys);
+        Some((a + b * batch as f64).max(1e-9))
+    }
+
+    /// Device-memory footprint at `batch` (same interpolation).
+    pub fn mem(&self, worker: &str, batch: usize) -> Option<u64> {
+        let m = self.map.get(worker)?;
+        if let Some(s) = m.get(&batch) {
+            return Some(s.mem_bytes);
+        }
+        let (xs, ys): (Vec<f64>, Vec<f64>) =
+            m.iter().map(|(b, s)| (*b as f64, s.mem_bytes as f64)).unzip();
+        if xs.is_empty() {
+            return None;
+        }
+        if xs.len() == 1 {
+            return Some((ys[0] / xs[0] * batch as f64) as u64);
+        }
+        let (a, b) = linfit(&xs, &ys);
+        Some((a + b * batch as f64).max(0.0) as u64)
+    }
+
+    /// Fixed per-invocation overhead estimate (the linear fit's intercept);
+    /// bounds how fine elastic pipelining should chop batches.
+    pub fn call_overhead(&self, worker: &str) -> f64 {
+        let Some(m) = self.map.get(worker) else { return 0.0 };
+        if m.len() < 2 {
+            return 0.0;
+        }
+        let (xs, ys): (Vec<f64>, Vec<f64>) =
+            m.iter().map(|(b, s)| (*b as f64, s.secs)).unzip();
+        linfit(&xs, &ys).0.max(0.0)
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut root = Value::obj();
+        for (w, m) in &self.map {
+            let mut wv = Value::obj();
+            for (b, s) in m {
+                let mut e = Value::obj();
+                e.set("secs", s.secs).set("mem", s.mem_bytes);
+                wv.set(&b.to_string(), e);
+            }
+            root.set(w, wv);
+        }
+        root
+    }
+
+    pub fn from_json(v: &Value) -> ProfileDb {
+        let mut db = ProfileDb::new();
+        if let Some(obj) = v.as_obj() {
+            for (w, wv) in obj {
+                if let Some(m) = wv.as_obj() {
+                    for (b, e) in m {
+                        if let (Ok(batch), Some(secs), Some(mem)) = (
+                            b.parse::<usize>(),
+                            e.get("secs").and_then(Value::as_f64),
+                            e.get("mem").and_then(Value::as_i64),
+                        ) {
+                            db.add(w, batch, secs, mem as u64);
+                        }
+                    }
+                }
+            }
+        }
+        db
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_and_interpolated() {
+        let mut db = ProfileDb::new();
+        db.add("gen", 8, 1.0, 100);
+        db.add("gen", 16, 2.0, 200);
+        assert_eq!(db.time("gen", 8), Some(1.0));
+        // Linear through the two points: t(12) = 1.5.
+        assert!((db.time("gen", 12).unwrap() - 1.5).abs() < 1e-9);
+        // Extrapolation: t(32) = 4.0.
+        assert!((db.time("gen", 32).unwrap() - 4.0).abs() < 1e-9);
+        assert_eq!(db.mem("gen", 12), Some(150));
+        assert_eq!(db.time("nope", 8), None);
+    }
+
+    #[test]
+    fn single_point_scales_through_origin() {
+        let mut db = ProfileDb::new();
+        db.add("sim", 10, 2.0, 50);
+        assert!((db.time("sim", 20).unwrap() - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn overhead_is_intercept() {
+        let mut db = ProfileDb::new();
+        // t(b) = 0.5 + 0.1 b
+        db.add("w", 10, 1.5, 0);
+        db.add("w", 20, 2.5, 0);
+        assert!((db.call_overhead("w") - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut db = ProfileDb::new();
+        db.add("a", 4, 0.25, 1024);
+        db.add("b", 8, 1.5, 2048);
+        let back = ProfileDb::from_json(&db.to_json());
+        assert_eq!(back.exact("a", 4), Some(Sample { secs: 0.25, mem_bytes: 1024 }));
+        assert_eq!(back.exact("b", 8), Some(Sample { secs: 1.5, mem_bytes: 2048 }));
+    }
+}

@@ -1,0 +1,125 @@
+//! Synthetic profile databases for the paper's model scales.
+//!
+//! Phase costs follow standard transformer accounting (per-token FLOPs ≈
+//! 2·P for generation/inference, 6·P for training), an H100-like
+//! effective-throughput assumption per phase, and the measured long-tail
+//! generation behaviour from the real small-scale runs (generation is
+//! memory-bandwidth-bound; its effective FLOP/s is far below training's).
+
+use crate::sched::ProfileDb;
+
+/// Paper model scales (billions of parameters).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ModelScale {
+    B1_5,
+    B7,
+    B32,
+}
+
+impl ModelScale {
+    pub fn params(self) -> f64 {
+        match self {
+            ModelScale::B1_5 => 1.5e9,
+            ModelScale::B7 => 7e9,
+            ModelScale::B32 => 32e9,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ModelScale::B1_5 => "1.5B",
+            ModelScale::B7 => "7B",
+            ModelScale::B32 => "32B",
+        }
+    }
+
+    /// Actor TP size from the paper's Table 2 (affects per-device share).
+    pub fn actor_tp(self) -> usize {
+        match self {
+            ModelScale::B1_5 => 2,
+            ModelScale::B7 => 4,
+            ModelScale::B32 => 8,
+        }
+    }
+
+    /// Rollout TP size from the paper's Table 2.
+    pub fn rollout_tp(self) -> usize {
+        match self {
+            ModelScale::B1_5 => 1,
+            ModelScale::B7 => 2,
+            ModelScale::B32 => 4,
+        }
+    }
+
+    /// KV-cache bytes per token (GQA-adjusted, bf16), from the Qwen2.5
+    /// architecture constants: 2 · layers · d_model · (kv_heads/heads) · 2.
+    pub fn kv_bytes_per_token(self) -> f64 {
+        match self {
+            ModelScale::B1_5 => 2.0 * 28.0 * 1536.0 * (2.0 / 12.0) * 2.0,
+            ModelScale::B7 => 2.0 * 28.0 * 3584.0 * (4.0 / 28.0) * 2.0,
+            ModelScale::B32 => 2.0 * 64.0 * 5120.0 * (8.0 / 40.0) * 2.0,
+        }
+    }
+}
+
+/// Effective per-device throughputs (FLOP/s) for an H100-like device.
+/// Generation is bandwidth-bound (low effective utilization); training
+/// hits much higher MFU. Ratios matter more than absolutes for the
+/// figures' shape.
+const GEN_FLOPS: f64 = 60e12;
+const INFER_FLOPS: f64 = 300e12;
+const TRAIN_FLOPS: f64 = 350e12;
+
+/// Build a per-device profile DB for one (model, workload) point.
+///
+/// `seq_len` is the full context (prompt + response); `long_tail` scales
+/// the generation time by the straggler factor measured in Figure 2 (the
+/// mean/max response-length gap, ≈2–3 at 28k contexts).
+pub fn synthetic_profile(
+    scale: ModelScale,
+    seq_len: f64,
+    long_tail: f64,
+    granularities: &[usize],
+) -> ProfileDb {
+    let p = scale.params();
+    let mut db = ProfileDb::new();
+    // Memory: weights+KV for generation; 8x weights (params, grads, Adam,
+    // activations) sharded TP-ways for training.
+    let tp = scale.actor_tp() as f64;
+    let rtp = scale.rollout_tp() as f64;
+    let gen_w = 2.0 * p / rtp; // bf16 weights per rollout device
+    let train_w = 16.0 * p / tp; // bf16 + fp32 master + Adam per train device
+    for &g in granularities {
+        let gf = g as f64;
+        // Per-call seconds for g responses on ONE device.
+        let gen = gf * seq_len * 2.0 * p / GEN_FLOPS * long_tail;
+        let infer = gf * seq_len * 2.0 * p / INFER_FLOPS;
+        let train = gf * seq_len * 6.0 * p / TRAIN_FLOPS;
+        let kv = gf * seq_len * scale.kv_bytes_per_token() / rtp;
+        db.add("rollout", g, gen, (gen_w + kv) as u64);
+        db.add("infer", g, infer, gen_w as u64);
+        db.add("train", g, train, train_w as u64);
+    }
+    db
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generation_dominates_and_training_beats_inference() {
+        let db = synthetic_profile(ModelScale::B7, 28_672.0, 2.5, &[32]);
+        let gen = db.time("rollout", 32).unwrap();
+        let inf = db.time("infer", 32).unwrap();
+        let trn = db.time("train", 32).unwrap();
+        assert!(gen > trn && trn > inf, "gen {gen} > train {trn} > infer {inf}");
+    }
+
+    #[test]
+    fn memory_scales_with_model() {
+        let small = synthetic_profile(ModelScale::B1_5, 1024.0, 1.0, &[8]);
+        let big = synthetic_profile(ModelScale::B32, 1024.0, 1.0, &[8]);
+        assert!(big.mem("train", 8).unwrap() > small.mem("train", 8).unwrap());
+    }
+}

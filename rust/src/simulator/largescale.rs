@@ -1,0 +1,155 @@
+//! Large-scale reasoning-RL simulation: RLinf (Algorithm-1 plan) vs the
+//! veRL-like collocated baseline across cluster sizes (Figure 8's shape).
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use super::costdb::{synthetic_profile, ModelScale};
+use crate::flow::pipeline::sequential_time;
+use crate::flow::WorkflowGraph;
+use crate::sched::{SchedProblem, Scheduler};
+
+/// One simulated workload point.
+#[derive(Debug, Clone)]
+pub struct SimScenario {
+    pub scale: ModelScale,
+    pub n_devices: usize,
+    /// Responses per iteration (rollout batch × group size).
+    pub responses: usize,
+    pub seq_len: f64,
+    /// Straggler factor applied to generation (long-tail severity).
+    pub long_tail: f64,
+    /// veRL's KV-budget penalty on generation throughput (§5.3).
+    pub baseline_gen_penalty: f64,
+    /// veRL's unfused log-prob penalty on inference (§5.3).
+    pub baseline_infer_penalty: f64,
+}
+
+impl SimScenario {
+    pub fn paper_default(scale: ModelScale, n_devices: usize) -> SimScenario {
+        let group = match scale {
+            ModelScale::B1_5 => 16,
+            _ => 32,
+        };
+        SimScenario {
+            scale,
+            n_devices,
+            responses: 512 * group / 16, // paper batch 512, scaled by group
+            seq_len: 28_672.0,
+            long_tail: 2.5,
+            baseline_gen_penalty: 1.35,
+            baseline_infer_penalty: 2.0,
+        }
+    }
+}
+
+/// Simulated iteration times and throughput for one point.
+#[derive(Debug, Clone)]
+pub struct LargeScalePoint {
+    pub scale_name: &'static str,
+    pub n_devices: usize,
+    pub rlinf_secs: f64,
+    pub baseline_secs: f64,
+    pub rlinf_tokens_per_sec: f64,
+    pub baseline_tokens_per_sec: f64,
+    pub speedup: f64,
+    pub plan: String,
+}
+
+/// Run Algorithm 1 on a synthetic profile (RLinf) and compare against the
+/// phase-barrier collocated baseline with veRL's penalties.
+pub fn simulate_reasoning(s: &SimScenario) -> Result<LargeScalePoint> {
+    // Serving engines decode down to single-sequence granularity, so the
+    // elastic pipeliner may pick very fine chunks at large device counts.
+    let grans: Vec<usize> = vec![1, 2, 4, 8, 16, 32, 64];
+    let db = synthetic_profile(s.scale, s.seq_len, s.long_tail, &grans);
+
+    let mut graph = WorkflowGraph::new();
+    graph.add_edge("rollout", "infer");
+    graph.add_edge("infer", "train");
+    let mut workload = HashMap::new();
+    let mut granularities = HashMap::new();
+    for w in ["rollout", "infer", "train"] {
+        workload.insert(w.to_string(), s.responses);
+        granularities.insert(w.to_string(), grans.clone());
+    }
+    // Context-switch cost: weights over PCIe-ish 50 GB/s, both directions.
+    let switch = 2.0 * (2.0 * s.scale.params() / s.scale.actor_tp() as f64) / 50e9;
+    let problem = SchedProblem {
+        graph,
+        workload,
+        granularities,
+        n_devices: s.n_devices,
+        device_mem: 80 << 30,
+        switch_overhead: switch,
+    };
+    let mut sched = Scheduler::new(&problem, &db);
+    let plan = sched.solve()?;
+    let rlinf_secs = plan.time();
+
+    // Baseline: strict temporal phases on all devices with §5.3 penalties.
+    let db_base = synthetic_profile(
+        s.scale,
+        s.seq_len,
+        s.long_tail * s.baseline_gen_penalty,
+        &grans,
+    );
+    // Baseline phases run data-parallel over all devices: each device
+    // handles its share of the responses within the phase barrier.
+    let leaf = |worker: &str, penalty: f64| -> f64 {
+        let per_dev = s.responses.div_ceil(s.n_devices).max(1);
+        db_base.time(worker, per_dev).unwrap_or(1.0) * penalty
+    };
+    let baseline_secs = sequential_time(
+        &[leaf("rollout", 1.0), leaf("infer", s.baseline_infer_penalty), leaf("train", 1.0)],
+        switch,
+    );
+
+    let tokens = s.responses as f64 * s.seq_len;
+    Ok(LargeScalePoint {
+        scale_name: s.scale.name(),
+        n_devices: s.n_devices,
+        rlinf_secs,
+        baseline_secs,
+        rlinf_tokens_per_sec: tokens / rlinf_secs,
+        baseline_tokens_per_sec: tokens / baseline_secs,
+        speedup: baseline_secs / rlinf_secs,
+        plan: plan.render(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rlinf_beats_baseline_at_paper_scales() {
+        for scale in [ModelScale::B1_5, ModelScale::B7, ModelScale::B32] {
+            for n in [16usize, 32, 64] {
+                let p = simulate_reasoning(&SimScenario::paper_default(scale, n)).unwrap();
+                assert!(
+                    p.speedup > 1.0,
+                    "{} x{}: speedup {}",
+                    p.scale_name,
+                    n,
+                    p.speedup
+                );
+                assert!(
+                    p.speedup < 4.0,
+                    "{} x{}: speedup {} implausibly large",
+                    p.scale_name,
+                    n,
+                    p.speedup
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn throughput_grows_with_devices() {
+        let a = simulate_reasoning(&SimScenario::paper_default(ModelScale::B7, 16)).unwrap();
+        let b = simulate_reasoning(&SimScenario::paper_default(ModelScale::B7, 64)).unwrap();
+        assert!(b.rlinf_tokens_per_sec > a.rlinf_tokens_per_sec);
+    }
+}

@@ -1,0 +1,14 @@
+//! Large-scale discrete-event simulator.
+//!
+//! The paper's Figures 8/9 span up to 256 H100s; this testbed has one CPU
+//! host. The simulator replays the *same* Algorithm-1 cost model over
+//! synthetic profile databases calibrated to (a) measured small-scale runs
+//! and (b) published model-size scaling laws, to reproduce the figures'
+//! *shape* (who wins, by what factor, where crossovers appear) at cluster
+//! scales we cannot run. See DESIGN.md §4 (substitution table).
+
+pub mod costdb;
+pub mod largescale;
+
+pub use costdb::synthetic_profile;
+pub use largescale::{simulate_reasoning, LargeScalePoint, SimScenario};

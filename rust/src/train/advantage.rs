@@ -1,0 +1,92 @@
+//! Advantage estimators: GRPO group normalization and GAE.
+
+/// GRPO: normalize rewards within one prompt's response group:
+/// `A_i = (r_i − mean) / (std + eps)`. A zero-variance group (all equal
+/// rewards) yields zero advantages — no learning signal, as intended.
+pub fn group_normalize(rewards: &[f32]) -> Vec<f32> {
+    let n = rewards.len().max(1) as f32;
+    let mean: f32 = rewards.iter().sum::<f32>() / n;
+    let var: f32 = rewards.iter().map(|r| (r - mean) * (r - mean)).sum::<f32>() / n;
+    let std = var.sqrt();
+    rewards.iter().map(|r| (r - mean) / (std + 1e-4)).collect()
+}
+
+/// Generalized Advantage Estimation over one environment's trajectory.
+/// `values` has length T+1 (bootstrap value at the end); `dones[t]` cuts
+/// the bootstrap at episode boundaries. Returns `(advantages, returns)`.
+pub fn gae(
+    rewards: &[f32],
+    values: &[f32],
+    dones: &[bool],
+    gamma: f32,
+    lambda: f32,
+) -> (Vec<f32>, Vec<f32>) {
+    let t_max = rewards.len();
+    assert_eq!(values.len(), t_max + 1, "values must include bootstrap");
+    assert_eq!(dones.len(), t_max);
+    let mut adv = vec![0f32; t_max];
+    let mut last = 0f32;
+    for t in (0..t_max).rev() {
+        let nonterminal = if dones[t] { 0.0 } else { 1.0 };
+        let delta = rewards[t] + gamma * values[t + 1] * nonterminal - values[t];
+        last = delta + gamma * lambda * nonterminal * last;
+        adv[t] = last;
+    }
+    let ret: Vec<f32> = adv.iter().zip(values).map(|(a, v)| a + v).collect();
+    (adv, ret)
+}
+
+/// Normalize a flat advantage vector to zero mean / unit std (PPO batch
+/// normalization).
+pub fn normalize(xs: &[f32]) -> Vec<f32> {
+    let n = xs.len().max(1) as f32;
+    let mean: f32 = xs.iter().sum::<f32>() / n;
+    let var: f32 = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / n;
+    let std = var.sqrt() + 1e-6;
+    xs.iter().map(|x| (x - mean) / std).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn group_normalization_properties() {
+        let adv = group_normalize(&[5.0, -5.0, 5.0, -5.0]);
+        let mean: f32 = adv.iter().sum::<f32>() / 4.0;
+        assert!(mean.abs() < 1e-5);
+        assert!(adv[0] > 0.0 && adv[1] < 0.0);
+        assert!((adv[0] + adv[1]).abs() < 1e-5);
+    }
+
+    #[test]
+    fn all_equal_rewards_give_zero_signal() {
+        let adv = group_normalize(&[5.0; 8]);
+        assert!(adv.iter().all(|a| a.abs() < 1e-5), "{adv:?}");
+    }
+
+    #[test]
+    fn gae_matches_hand_computation() {
+        // Two steps, no terminal: delta0 = 1 + 0.5*2 - 1 = 1; delta1 = 1 + 0.5*3 - 2 = 0.5
+        // lambda=1: A1 = 0.5; A0 = 1 + 0.5*0.5 = 1.25
+        let (adv, ret) = gae(&[1.0, 1.0], &[1.0, 2.0, 3.0], &[false, false], 0.5, 1.0);
+        assert!((adv[1] - 0.5).abs() < 1e-6);
+        assert!((adv[0] - 1.25).abs() < 1e-6);
+        assert!((ret[0] - 2.25).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gae_resets_at_done() {
+        let (adv, _) = gae(&[1.0, 1.0], &[0.0, 10.0, 10.0], &[true, false], 0.99, 0.95);
+        // Step 0 terminal: delta = r - v = 1.0; no bootstrap from step 1.
+        assert!((adv[0] - 1.0).abs() < 1e-6, "{adv:?}");
+    }
+
+    #[test]
+    fn normalize_zero_mean_unit_std() {
+        let out = normalize(&[1.0, 2.0, 3.0, 4.0]);
+        let mean: f32 = out.iter().sum::<f32>() / 4.0;
+        let var: f32 = out.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / 4.0;
+        assert!(mean.abs() < 1e-5 && (var - 1.0).abs() < 1e-3);
+    }
+}

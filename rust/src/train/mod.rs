@@ -1,0 +1,8 @@
+//! Training: GRPO/PPO updates over the fused `train_step` artifact, plus
+//! advantage computation.
+
+pub mod advantage;
+pub mod worker;
+
+pub use advantage::{gae, group_normalize};
+pub use worker::{TrainCfg, TrainWorker};

@@ -1,0 +1,395 @@
+//! The training worker: owns weights + Adam state, runs the fused
+//! `train_step` artifact (forward + Pallas loss kernel + backward + Adam in
+//! one HLO module), and serves weight snapshots for the sync barrier.
+
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::data::{Payload, Tensor};
+use crate::model::tokenizer::PAD;
+use crate::runtime::{Engine, Manifest, ModelManifest};
+use crate::worker::{WorkerCtx, WorkerLogic};
+
+#[derive(Debug, Clone)]
+pub struct TrainCfg {
+    pub artifacts_dir: String,
+    pub model: String,
+    pub lr: f32,
+    /// Skip micro-batches whose mean importance ratio exceeds this bound
+    /// (the paper's minibatch early-stop).
+    pub ratio_early_stop: f32,
+}
+
+pub struct TrainWorker {
+    cfg: TrainCfg,
+    engine: Option<Rc<Engine>>,
+    model: Option<ModelManifest>,
+    params: Vec<xla::Literal>,
+    m: Vec<xla::Literal>,
+    v: Vec<xla::Literal>,
+    step: i32,
+    weight_version: u64,
+    /// Host mirror for offload survival + weight serving.
+    host_params: Vec<Tensor>,
+}
+
+impl TrainWorker {
+    pub fn new(cfg: TrainCfg) -> TrainWorker {
+        TrainWorker {
+            cfg,
+            engine: None,
+            model: None,
+            params: Vec::new(),
+            m: Vec::new(),
+            v: Vec::new(),
+            step: 0,
+            weight_version: 0,
+            host_params: Vec::new(),
+        }
+    }
+
+    fn model(&self) -> Result<&ModelManifest> {
+        self.model.as_ref().ok_or_else(|| anyhow!("trainer not onloaded"))
+    }
+
+    fn init_weights(&mut self, seed: u32) -> Result<()> {
+        let engine = self.engine.as_ref().ok_or_else(|| anyhow!("not onloaded"))?.clone();
+        let model = self.model()?.clone();
+        let init = &model.phase("init")?[0];
+        let seed_l = crate::runtime::engine::literal_of(&Tensor::scalar_u32(seed))?;
+        self.params = engine.run_literals(init, &[seed_l])?;
+        self.m = model
+            .params
+            .iter()
+            .map(|p| {
+                crate::runtime::engine::literal_of(&Tensor::zeros(p.dtype, p.shape.clone()))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        self.v = self
+            .m
+            .iter()
+            .map(|_| Ok(()))
+            .collect::<Result<Vec<_>>>()
+            .map(|_| self.m.clone_literals())?;
+        self.step = 0;
+        self.weight_version = 1;
+        self.sync_host()?;
+        Ok(())
+    }
+
+    fn sync_host(&mut self) -> Result<()> {
+        self.host_params = self
+            .params
+            .iter()
+            .map(crate::runtime::engine::tensor_of)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(())
+    }
+
+    /// Run one micro-batch through `train_step`. Items provide tensors
+    /// `tokens [T]`, `mask [T]`, `logp_old [T]` and meta `adv`.
+    fn train_micro_batch(&mut self, items: &[Payload], ctx: &WorkerCtx) -> Result<TrainStats> {
+        let model = self.model()?.clone();
+        if self.params.is_empty() {
+            bail!("trainer has no weights; call init_weights first");
+        }
+        let t_max = model.meta_usize("max_seq")?;
+        let n = model.n_param_tensors();
+        let b = items.len();
+        let sig = model.variant("train", b)?.clone();
+        let mb = sig.batch;
+        if b > mb {
+            bail!("micro-batch {b} exceeds largest train variant {mb}");
+        }
+
+        // Pack rows; ragged tail rows are padded with zero masks (no-ops in
+        // the token-level loss).
+        let mut tokens = Vec::with_capacity(mb * t_max);
+        let mut logp = Vec::with_capacity(mb * t_max);
+        let mut mask = Vec::with_capacity(mb * t_max);
+        let mut adv = Vec::with_capacity(mb);
+        for i in 0..mb {
+            if i < b {
+                tokens.extend_from_slice(&items[i].tensor("tokens")?.to_i32()?);
+                logp.extend_from_slice(&items[i].tensor("logp_old")?.to_f32()?);
+                mask.extend_from_slice(&items[i].tensor("mask")?.to_f32()?);
+                adv.push(items[i].meta_f64("adv").unwrap_or(0.0) as f32);
+            } else {
+                tokens.extend(std::iter::repeat(PAD).take(t_max));
+                logp.extend(std::iter::repeat(0f32).take(t_max));
+                mask.extend(std::iter::repeat(0f32).take(t_max));
+                adv.push(0.0);
+            }
+        }
+
+        let step_l = crate::runtime::engine::literal_of(&Tensor::scalar_i32(self.step))?;
+        let tok_l = crate::runtime::engine::literal_of(&Tensor::from_i32(vec![mb, t_max], &tokens)?)?;
+        let lp_l = crate::runtime::engine::literal_of(&Tensor::from_f32(vec![mb, t_max], &logp)?)?;
+        let adv_l = crate::runtime::engine::literal_of(&Tensor::from_f32(vec![mb], &adv)?)?;
+        let mask_l = crate::runtime::engine::literal_of(&Tensor::from_f32(vec![mb, t_max], &mask)?)?;
+        let lr_l = crate::runtime::engine::literal_of(&Tensor::scalar_f32(self.cfg.lr))?;
+
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(3 * n + 6);
+        args.extend(self.params.iter());
+        args.extend(self.m.iter());
+        args.extend(self.v.iter());
+        args.push(&step_l);
+        args.push(&tok_l);
+        args.push(&lp_l);
+        args.push(&adv_l);
+        args.push(&mask_l);
+        args.push(&lr_l);
+
+        let engine = self.engine.as_ref().unwrap().clone();
+        let t0 = std::time::Instant::now();
+        let mut outs = engine.run_literals(&sig, &args)?;
+        ctx.metrics.record("train.step_call", t0.elapsed().as_secs_f64());
+
+        // Outputs: params, m, v, then loss/mean_ratio/clip_frac/grad_norm.
+        let gnorm = crate::runtime::engine::tensor_of(&outs.pop().unwrap())?.scalar_as_f32();
+        let clip = crate::runtime::engine::tensor_of(&outs.pop().unwrap())?.scalar_as_f32();
+        let ratio = crate::runtime::engine::tensor_of(&outs.pop().unwrap())?.scalar_as_f32();
+        let loss = crate::runtime::engine::tensor_of(&outs.pop().unwrap())?.scalar_as_f32();
+
+        // Minibatch early-stop: reject the update if the importance ratio
+        // blew past the stability bound (§5.1).
+        if ratio.is_finite() && ratio <= self.cfg.ratio_early_stop {
+            let v = outs.split_off(2 * n);
+            let m = outs.split_off(n);
+            self.params = outs;
+            self.m = m;
+            self.v = v;
+            self.step += 1;
+            Ok(TrainStats { loss, mean_ratio: ratio, clip_frac: clip, grad_norm: gnorm, skipped: false })
+        } else {
+            ctx.metrics.record_value("train.early_stop", 1.0);
+            Ok(TrainStats { loss, mean_ratio: ratio, clip_frac: clip, grad_norm: gnorm, skipped: true })
+        }
+    }
+
+    fn mem_bytes(&self) -> u64 {
+        // params + Adam m/v + activation headroom.
+        self.model.as_ref().map(|m| m.param_bytes() * 4).unwrap_or(0)
+    }
+}
+
+/// Micro-batch statistics returned to the runner.
+#[derive(Debug, Clone, Copy)]
+pub struct TrainStats {
+    pub loss: f32,
+    pub mean_ratio: f32,
+    pub clip_frac: f32,
+    pub grad_norm: f32,
+    pub skipped: bool,
+}
+
+trait CloneLits {
+    fn clone_literals(&self) -> Vec<xla::Literal>;
+}
+
+impl CloneLits for Vec<xla::Literal> {
+    fn clone_literals(&self) -> Vec<xla::Literal> {
+        self.iter()
+            .map(|l| {
+                let t = crate::runtime::engine::tensor_of(l).expect("clone literal");
+                crate::runtime::engine::literal_of(&t).expect("clone literal")
+            })
+            .collect()
+    }
+}
+
+impl WorkerLogic for TrainWorker {
+    fn onload(&mut self, ctx: &WorkerCtx) -> Result<()> {
+        if self.engine.is_none() {
+            let manifest = Rc::new(Manifest::load(&self.cfg.artifacts_dir)?);
+            let engine = Rc::new(Engine::new(manifest)?.with_metrics(ctx.metrics.clone()));
+            self.model = Some(engine.manifest().model(&self.cfg.model)?.clone());
+            self.engine = Some(engine);
+        }
+        // Restore device state from the host mirror after an offload.
+        if self.params.is_empty() && !self.host_params.is_empty() {
+            self.params = self
+                .host_params
+                .iter()
+                .map(crate::runtime::engine::literal_of)
+                .collect::<Result<Vec<_>>>()?;
+            // Adam state was dropped on offload; restart moments (documented
+            // simplification — full state offload would mirror m/v too).
+            let model = self.model()?.clone();
+            self.m = model
+                .params
+                .iter()
+                .map(|p| crate::runtime::engine::literal_of(&Tensor::zeros(p.dtype, p.shape.clone())))
+                .collect::<Result<Vec<_>>>()?;
+            self.v = self.m.clone_literals();
+        }
+        ctx.reserve_mem(self.mem_bytes(), "train").context("train onload OOM")?;
+        Ok(())
+    }
+
+    fn offload(&mut self, ctx: &WorkerCtx) -> Result<()> {
+        if !self.params.is_empty() {
+            self.sync_host()?;
+        }
+        self.params.clear();
+        self.m.clear();
+        self.v.clear();
+        ctx.free_mem("train");
+        Ok(())
+    }
+
+    fn call(&mut self, ctx: &WorkerCtx, method: &str, arg: Payload) -> Result<Payload> {
+        match method {
+            "init_weights" => {
+                let seed = arg.meta_i64("seed").unwrap_or(0) as u32;
+                self.init_weights(seed)?;
+                Ok(Payload::new().set_meta("version", self.weight_version))
+            }
+            "get_weights" => {
+                if self.params.is_empty() && self.host_params.is_empty() {
+                    bail!("no weights to serve");
+                }
+                if !self.params.is_empty() {
+                    self.sync_host()?;
+                }
+                let mut p = Payload::new().set_meta("version", self.weight_version);
+                p.tensors = self.host_params.clone();
+                Ok(p)
+            }
+            "train_batch" => {
+                // Single micro-batch packed in the payload (tests/baseline):
+                // split the packed [b, T] tensors into items.
+                let tokens = arg.tensor("tokens")?.clone();
+                let mask = arg.tensor("mask")?.clone();
+                let lp = arg.tensor("logp_old")?.clone();
+                let advs = arg
+                    .meta
+                    .get("adv")
+                    .and_then(crate::util::json::Value::as_arr)
+                    .ok_or_else(|| anyhow!("train_batch needs meta.adv"))?
+                    .to_vec();
+                let b = tokens.shape[0];
+                let items: Vec<Payload> = (0..b)
+                    .map(|i| {
+                        let mut p = Payload::from_named(vec![
+                            ("tokens", tokens.slice0(i, 1).unwrap().flatten()),
+                            ("mask", mask.slice0(i, 1).unwrap().flatten()),
+                            ("logp_old", lp.slice0(i, 1).unwrap().flatten()),
+                        ]);
+                        p.meta.set("adv", advs[i].clone());
+                        p
+                    })
+                    .collect();
+                let stats = self.train_micro_batch(&items, ctx)?;
+                self.weight_version += 1;
+                Ok(stats_payload(&stats, self.step, self.weight_version))
+            }
+            // Supervised warm-start on (prompt, answer) sequences — the
+            // stand-in for the paper's SFT'd base checkpoints. Payload:
+            // tokens [b, T] i32 + mask [b, T] f32.
+            "sft_batch" => {
+                let model = self.model()?.clone();
+                if self.params.is_empty() {
+                    bail!("trainer has no weights");
+                }
+                let tokens = arg.tensor("tokens")?.clone();
+                let mask = arg.tensor("mask")?.clone();
+                let b = tokens.shape[0];
+                let sig = model.variant("sft", b)?.clone();
+                let mb = sig.batch;
+                if b != mb {
+                    bail!("sft_batch: batch {b} != variant {mb}; pack exactly");
+                }
+                let n = model.n_param_tensors();
+                let step_l = crate::runtime::engine::literal_of(&Tensor::scalar_i32(self.step))?;
+                let tok_l = crate::runtime::engine::literal_of(&tokens)?;
+                let mask_l = crate::runtime::engine::literal_of(&mask)?;
+                let lr_l = crate::runtime::engine::literal_of(&Tensor::scalar_f32(
+                    arg.meta_f64("lr").unwrap_or(self.cfg.lr as f64) as f32,
+                ))?;
+                let mut args: Vec<&xla::Literal> = Vec::with_capacity(3 * n + 4);
+                args.extend(self.params.iter());
+                args.extend(self.m.iter());
+                args.extend(self.v.iter());
+                args.push(&step_l);
+                args.push(&tok_l);
+                args.push(&mask_l);
+                args.push(&lr_l);
+                let engine = self.engine.as_ref().unwrap().clone();
+                let t0 = std::time::Instant::now();
+                let mut outs = engine.run_literals(&sig, &args)?;
+                ctx.metrics.record("train.sft_call", t0.elapsed().as_secs_f64());
+                let acc = crate::runtime::engine::tensor_of(&outs.pop().unwrap())?.scalar_as_f32();
+                let loss = crate::runtime::engine::tensor_of(&outs.pop().unwrap())?.scalar_as_f32();
+                let v = outs.split_off(2 * n);
+                let m = outs.split_off(n);
+                self.params = outs;
+                self.m = m;
+                self.v = v;
+                self.step += 1;
+                self.weight_version += 1;
+                Ok(Payload::new()
+                    .set_meta("loss", loss as f64)
+                    .set_meta("token_acc", acc as f64)
+                    .set_meta("step", self.step as i64)
+                    .set_meta("version", self.weight_version))
+            }
+            "train_stream" => {
+                let in_ch = ctx
+                    .channels
+                    .get(arg.meta_str("in_channel").unwrap_or("scored"))
+                    .ok_or_else(|| anyhow!("missing in channel"))?;
+                let mb = arg.meta_i64("granularity").unwrap_or(8).max(1) as usize;
+                let me = ctx.endpoint();
+                let mut steps = 0usize;
+                let mut skipped = 0usize;
+                let mut loss_sum = 0f64;
+                let mut last: Option<TrainStats> = None;
+                loop {
+                    let items = in_ch.get_batch(&me, mb);
+                    if items.is_empty() {
+                        break;
+                    }
+                    let payloads: Vec<Payload> = items.into_iter().map(|i| i.payload).collect();
+                    let stats = self.train_micro_batch(&payloads, ctx)?;
+                    if stats.skipped {
+                        skipped += 1;
+                    } else {
+                        steps += 1;
+                        loss_sum += stats.loss as f64;
+                    }
+                    last = Some(stats);
+                }
+                self.weight_version += 1;
+                let mut p = stats_payload(
+                    &last.unwrap_or(TrainStats {
+                        loss: 0.0,
+                        mean_ratio: 1.0,
+                        clip_frac: 0.0,
+                        grad_norm: 0.0,
+                        skipped: false,
+                    }),
+                    self.step,
+                    self.weight_version,
+                );
+                p.meta.set("steps", steps);
+                p.meta.set("skipped", skipped);
+                p.meta.set("mean_loss", if steps > 0 { loss_sum / steps as f64 } else { 0.0 });
+                Ok(p)
+            }
+            other => bail!("train has no method {other:?}"),
+        }
+    }
+}
+
+fn stats_payload(s: &TrainStats, step: i32, version: u64) -> Payload {
+    Payload::new()
+        .set_meta("loss", s.loss as f64)
+        .set_meta("mean_ratio", s.mean_ratio as f64)
+        .set_meta("clip_frac", s.clip_frac as f64)
+        .set_meta("grad_norm", s.grad_norm as f64)
+        .set_meta("skipped", s.skipped)
+        .set_meta("step", step as i64)
+        .set_meta("version", version)
+}

@@ -1,0 +1,110 @@
+//! Tiny CLI argument parser (flag/option/positional) for the launcher and
+//! examples. Supports `--key value`, `--key=value`, boolean `--flag`, and
+//! positionals, with generated `--help` text.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw args (without argv[0]). `bool_flags` lists names that take
+    /// no value.
+    pub fn parse(raw: impl IntoIterator<Item = String>, bool_flags: &[&str]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if bool_flags.contains(&body) {
+                    out.flags.push(body.to_string());
+                } else {
+                    match it.next() {
+                        Some(v) => {
+                            out.options.insert(body.to_string(), v);
+                        }
+                        None => bail!("option --{body} expects a value"),
+                    }
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env(bool_flags: &[&str]) -> Result<Args> {
+        Self::parse(std::env::args().skip(1), bool_flags)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn strs(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed() {
+        let a = Args::parse(strs(&["train", "--model=tiny", "--steps", "10", "--verbose"]),
+                            &["verbose"]).unwrap();
+        assert_eq!(a.positional, vec!["train"]);
+        assert_eq!(a.get("model"), Some("tiny"));
+        assert_eq!(a.get_usize("steps", 0).unwrap(), 10);
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(strs(&["--model"]), &[]).is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(strs(&[]), &[]).unwrap();
+        assert_eq!(a.get_or("x", "d"), "d");
+        assert_eq!(a.get_f64("lr", 0.5).unwrap(), 0.5);
+    }
+}

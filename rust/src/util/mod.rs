@@ -1,0 +1,12 @@
+//! Self-contained utility substrates.
+//!
+//! The offline build environment vendors only the `xla` crate and its build
+//! closure, so everything a production framework would pull from crates.io
+//! (JSON, CLI parsing, PRNG, property testing, stats) is implemented here.
+
+pub mod cli;
+pub mod fmt;
+pub mod json;
+pub mod prng;
+pub mod proptest_mini;
+pub mod stats;

@@ -1,0 +1,216 @@
+//! Deterministic PRNG: PCG64 (permuted congruential generator).
+//!
+//! All stochastic parts of the system — task generation, sampling
+//! temperatures, simulator physics noise, property-test case generation —
+//! derive from this generator so every run is reproducible from a seed.
+
+/// PCG-XSL-RR 128/64 generator.
+#[derive(Debug, Clone)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const MULT: u128 = 0x2360ed051fc65da44385df649fccf645;
+
+impl Pcg64 {
+    pub fn new(seed: u64) -> Self {
+        Self::new_stream(seed, 0xda3e39cb94b95bdb)
+    }
+
+    /// Independent stream: same seed, different `stream` never collide.
+    pub fn new_stream(seed: u64, stream: u64) -> Self {
+        let mut g = Pcg64 { state: 0, inc: ((stream as u128) << 1) | 1 };
+        g.step();
+        g.state = g.state.wrapping_add(seed as u128);
+        g.step();
+        g
+    }
+
+    /// Derive a child generator (for per-worker / per-rank streams).
+    pub fn fork(&mut self, tag: u64) -> Pcg64 {
+        Pcg64::new_stream(self.next_u64() ^ tag, tag.wrapping_mul(0x9e3779b97f4a7c15) | 1)
+    }
+
+    fn step(&mut self) {
+        self.state = self.state.wrapping_mul(MULT).wrapping_add(self.inc);
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.step();
+        let rot = (self.state >> 122) as u32;
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xored.rotate_right(rot)
+    }
+
+    /// Uniform in `[0, n)` without modulo bias (Lemire).
+    pub fn next_below(&mut self, n: u64) -> u64 {
+        assert!(n > 0);
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128).wrapping_mul(n as u128);
+            let l = m as u64;
+            if l >= n.wrapping_neg() % n {
+                return (m >> 64) as u64;
+            }
+            // Reject and retry (rare).
+            if n.is_power_of_two() {
+                return x & (n - 1);
+            }
+        }
+    }
+
+    pub fn usize_below(&mut self, n: usize) -> usize {
+        self.next_below(n as u64) as usize
+    }
+
+    /// Uniform f64 in `[0, 1)` with 53 bits of precision.
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    pub fn next_f32(&mut self) -> f32 {
+        self.next_f64() as f32
+    }
+
+    /// Uniform in `[lo, hi)`.
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn next_normal(&mut self) -> f64 {
+        let u1 = self.next_f64().max(1e-300);
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+    }
+
+    /// Exponential with the given mean.
+    pub fn next_exp(&mut self, mean: f64) -> f64 {
+        -mean * (1.0 - self.next_f64()).ln()
+    }
+
+    /// Sample an index from unnormalized non-negative weights.
+    pub fn pick_weighted(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        if total <= 0.0 {
+            return self.usize_below(weights.len());
+        }
+        let mut x = self.next_f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            x -= w;
+            if x <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.usize_below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample from categorical logits with temperature (for token sampling).
+    pub fn sample_logits(&mut self, logits: &[f32], temperature: f32) -> usize {
+        if temperature <= 1e-6 {
+            return logits
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.total_cmp(b.1))
+                .map(|(i, _)| i)
+                .unwrap_or(0);
+        }
+        let inv_t = 1.0 / temperature;
+        let max = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut cum = 0.0f64;
+        let mut probs: Vec<f64> = Vec::with_capacity(logits.len());
+        for &l in logits {
+            let p = (((l - max) * inv_t) as f64).exp();
+            cum += p;
+            probs.push(p);
+        }
+        let mut x = self.next_f64() * cum;
+        for (i, p) in probs.iter().enumerate() {
+            x -= p;
+            if x <= 0.0 {
+                return i;
+            }
+        }
+        logits.len() - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Pcg64::new(42);
+        let mut b = Pcg64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn streams_differ() {
+        let mut a = Pcg64::new_stream(1, 1);
+        let mut b = Pcg64::new_stream(1, 2);
+        assert_ne!(
+            (0..8).map(|_| a.next_u64()).collect::<Vec<_>>(),
+            (0..8).map(|_| b.next_u64()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn uniform_mean() {
+        let mut g = Pcg64::new(7);
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| g.next_f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "{mean}");
+    }
+
+    #[test]
+    fn below_in_range_and_covers() {
+        let mut g = Pcg64::new(3);
+        let mut seen = [false; 7];
+        for _ in 0..1000 {
+            let x = g.usize_below(7);
+            assert!(x < 7);
+            seen[x] = true;
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut g = Pcg64::new(11);
+        let n = 20_000;
+        let xs: Vec<f64> = (0..n).map(|_| g.next_normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.03, "{mean}");
+        assert!((var - 1.0).abs() < 0.05, "{var}");
+    }
+
+    #[test]
+    fn greedy_sampling_at_zero_temperature() {
+        let mut g = Pcg64::new(0);
+        assert_eq!(g.sample_logits(&[0.1, 3.0, -1.0], 0.0), 1);
+    }
+
+    #[test]
+    fn weighted_pick_respects_weights() {
+        let mut g = Pcg64::new(5);
+        let mut counts = [0usize; 3];
+        for _ in 0..6000 {
+            counts[g.pick_weighted(&[1.0, 2.0, 3.0])] += 1;
+        }
+        assert!(counts[2] > counts[1] && counts[1] > counts[0], "{counts:?}");
+    }
+}

@@ -1,0 +1,197 @@
+//! `proptest_mini` — a small property-based testing harness.
+//!
+//! The vendored crate set has no `proptest`, so this module provides the
+//! subset the test-suite needs: seeded case generation from composable
+//! strategies, failure reporting with the offending seed, and greedy input
+//! shrinking for integer vectors. Deterministic: a failing case prints a
+//! seed that reproduces it exactly.
+//!
+//! ```ignore
+//! use rlinf::util::proptest_mini::*;
+//! check("sort is idempotent", 200, |g| {
+//!     let mut v = g.vec_i64(0..64, -100..100);
+//!     v.sort();
+//!     let once = v.clone();
+//!     v.sort();
+//!     prop_assert_eq(&once, &v)
+//! });
+//! ```
+
+use std::ops::Range;
+
+use super::prng::Pcg64;
+
+/// Case generator handed to property bodies.
+pub struct Gen {
+    rng: Pcg64,
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Gen { rng: Pcg64::new(seed), seed }
+    }
+
+    pub fn rng(&mut self) -> &mut Pcg64 {
+        &mut self.rng
+    }
+
+    pub fn usize_in(&mut self, r: Range<usize>) -> usize {
+        r.start + self.rng.usize_below((r.end - r.start).max(1))
+    }
+
+    pub fn i64_in(&mut self, r: Range<i64>) -> i64 {
+        r.start + self.rng.next_below((r.end - r.start).max(1) as u64) as i64
+    }
+
+    pub fn f64_in(&mut self, r: Range<f64>) -> f64 {
+        self.rng.range_f64(r.start, r.end)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn vec_i64(&mut self, len: Range<usize>, vals: Range<i64>) -> Vec<i64> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| self.i64_in(vals.clone())).collect()
+    }
+
+    pub fn vec_f64(&mut self, len: Range<usize>, vals: Range<f64>) -> Vec<f64> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| self.f64_in(vals.clone())).collect()
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.usize_below(xs.len())]
+    }
+}
+
+/// Property outcome; use the `prop_assert*` helpers to build it.
+pub type PropResult = Result<(), String>;
+
+pub fn prop_assert(cond: bool, msg: &str) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.to_string())
+    }
+}
+
+pub fn prop_assert_eq<T: PartialEq + std::fmt::Debug>(a: &T, b: &T) -> PropResult {
+    if a == b {
+        Ok(())
+    } else {
+        Err(format!("left != right\n  left: {a:?}\n right: {b:?}"))
+    }
+}
+
+pub fn prop_assert_near(a: f64, b: f64, tol: f64) -> PropResult {
+    if (a - b).abs() <= tol {
+        Ok(())
+    } else {
+        Err(format!("|{a} - {b}| = {} > {tol}", (a - b).abs()))
+    }
+}
+
+/// Run `cases` random cases of a property. Panics (test failure) on the
+/// first failing case, reporting its seed. Base seed can be pinned via
+/// `PROPTEST_SEED` for reproduction.
+pub fn check<F>(name: &str, cases: u64, prop: F)
+where
+    F: Fn(&mut Gen) -> PropResult,
+{
+    let base = std::env::var("PROPTEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x5eed_0000u64);
+    for i in 0..cases {
+        let seed = base.wrapping_add(i);
+        let mut g = Gen::new(seed);
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property '{name}' failed (case {i}, seed {seed}):\n{msg}\n\
+                 reproduce with PROPTEST_SEED={seed} and 1 case"
+            );
+        }
+    }
+}
+
+/// Greedy shrinking for vector-shaped counterexamples: repeatedly try
+/// removing chunks and simplifying elements toward zero while the property
+/// still fails; returns the smallest failing input found.
+pub fn shrink_vec_i64<F>(mut input: Vec<i64>, fails: F) -> Vec<i64>
+where
+    F: Fn(&[i64]) -> bool,
+{
+    debug_assert!(fails(&input));
+    // Phase 1: chunk removal.
+    let mut chunk = input.len() / 2;
+    while chunk >= 1 {
+        let mut i = 0;
+        while i + chunk <= input.len() {
+            let mut cand = input.clone();
+            cand.drain(i..i + chunk);
+            if fails(&cand) {
+                input = cand;
+            } else {
+                i += chunk;
+            }
+        }
+        chunk /= 2;
+    }
+    // Phase 2: element simplification toward 0.
+    for i in 0..input.len() {
+        while input[i] != 0 {
+            let mut cand = input.clone();
+            cand[i] /= 2;
+            if fails(&cand) {
+                input = cand;
+            } else {
+                break;
+            }
+        }
+    }
+    input
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        check("reverse twice is identity", 50, |g| {
+            let v = g.vec_i64(0..32, -50..50);
+            let mut r = v.clone();
+            r.reverse();
+            r.reverse();
+            prop_assert_eq(&v, &r)
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails' failed")]
+    fn failing_property_panics_with_seed() {
+        check("always fails", 5, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn shrinking_finds_minimal_counterexample() {
+        // Property: "no element equals 7" — minimal counterexample is [7].
+        let start = vec![3, 9, 7, 2, 7, 1];
+        let min = shrink_vec_i64(start, |xs| xs.iter().any(|&x| x == 7));
+        assert_eq!(min, vec![7]);
+    }
+
+    #[test]
+    fn gen_ranges_respected() {
+        let mut g = Gen::new(1);
+        for _ in 0..100 {
+            let x = g.i64_in(-3..4);
+            assert!((-3..4).contains(&x));
+            let u = g.usize_in(2..5);
+            assert!((2..5).contains(&u));
+        }
+    }
+}

@@ -1,0 +1,143 @@
+//! Summary statistics and sample collection for profiling, benches and the
+//! scheduler's cost model.
+
+/// Online accumulator for a stream of f64 samples.
+#[derive(Debug, Clone, Default)]
+pub struct Stream {
+    pub n: u64,
+    pub sum: f64,
+    pub sum_sq: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Stream {
+    pub fn new() -> Self {
+        Stream { n: 0, sum: 0.0, sum_sq: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        self.sum += x;
+        self.sum_sq += x * x;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.sum_sq / self.n as f64 - m * m).max(0.0)
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    pub fn merge(&mut self, other: &Stream) {
+        self.n += other.n;
+        self.sum += other.sum;
+        self.sum_sq += other.sum_sq;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+/// Percentile of a sample set (linear interpolation); `q` in [0, 1].
+pub fn percentile(samples: &mut [f64], q: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    samples.sort_by(|a, b| a.total_cmp(b));
+    let pos = q.clamp(0.0, 1.0) * (samples.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        samples[lo]
+    } else {
+        let frac = pos - lo as f64;
+        samples[lo] * (1.0 - frac) + samples[hi] * frac
+    }
+}
+
+/// Empirical CDF points `(x, F(x))` suitable for plotting (Figure 2a).
+pub fn ecdf(samples: &[f64]) -> Vec<(f64, f64)> {
+    let mut xs: Vec<f64> = samples.to_vec();
+    xs.sort_by(|a, b| a.total_cmp(b));
+    let n = xs.len().max(1) as f64;
+    xs.iter().enumerate().map(|(i, &x)| (x, (i + 1) as f64 / n)).collect()
+}
+
+/// Ordinary least squares fit `y ≈ a + b·x`; returns `(a, b)`.
+/// Used by the profiler to extrapolate time/memory vs batch size.
+pub fn linfit(xs: &[f64], ys: &[f64]) -> (f64, f64) {
+    let n = xs.len() as f64;
+    if xs.is_empty() || xs.len() != ys.len() {
+        return (0.0, 0.0);
+    }
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for (x, y) in xs.iter().zip(ys) {
+        num += (x - mx) * (y - my);
+        den += (x - mx) * (x - mx);
+    }
+    if den.abs() < 1e-12 {
+        (my, 0.0)
+    } else {
+        let b = num / den;
+        (my - b * mx, b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stream_moments() {
+        let mut s = Stream::new();
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            s.add(x);
+        }
+        assert_eq!(s.mean(), 2.5);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+        assert!((s.var() - 1.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentiles() {
+        let mut xs = vec![4.0, 1.0, 3.0, 2.0];
+        assert_eq!(percentile(&mut xs, 0.0), 1.0);
+        assert_eq!(percentile(&mut xs, 1.0), 4.0);
+        assert_eq!(percentile(&mut xs, 0.5), 2.5);
+    }
+
+    #[test]
+    fn ecdf_monotone() {
+        let pts = ecdf(&[3.0, 1.0, 2.0]);
+        assert_eq!(pts.len(), 3);
+        assert_eq!(pts[0], (1.0, 1.0 / 3.0));
+        assert_eq!(pts[2], (3.0, 1.0));
+    }
+
+    #[test]
+    fn linfit_exact_line() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let ys = [3.0, 5.0, 7.0, 9.0];
+        let (a, b) = linfit(&xs, &ys);
+        assert!((a - 1.0).abs() < 1e-9 && (b - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,84 @@
+//! Failure monitoring (§4): catch worker faults, report, fail fast.
+//!
+//! Worker threads wrap every dispatched call in `catch_unwind`; a panic is
+//! converted into a [`FailureReport`], the rank "commits suicide" (its
+//! thread exits, matching the paper's fail-fast policy to avoid cascading
+//! timeout noise), and the monitor flags the whole run as poisoned so the
+//! controller can tear everything down.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::SystemTime;
+
+#[derive(Debug, Clone)]
+pub struct FailureReport {
+    pub worker: String,
+    pub rank: usize,
+    pub method: String,
+    pub message: String,
+    pub at: SystemTime,
+}
+
+#[derive(Clone, Default)]
+pub struct FailureMonitor {
+    inner: Arc<FailureInner>,
+}
+
+#[derive(Default)]
+struct FailureInner {
+    poisoned: AtomicBool,
+    reports: Mutex<Vec<FailureReport>>,
+}
+
+impl FailureMonitor {
+    pub fn new() -> FailureMonitor {
+        FailureMonitor::default()
+    }
+
+    pub fn report(&self, worker: &str, rank: usize, method: &str, message: String) {
+        eprintln!("[failure] {worker}/{rank}.{method}: {message}");
+        self.inner.poisoned.store(true, Ordering::SeqCst);
+        self.inner.reports.lock().unwrap().push(FailureReport {
+            worker: worker.to_string(),
+            rank,
+            method: method.to_string(),
+            message,
+            at: SystemTime::now(),
+        });
+    }
+
+    /// Has any worker failed? Controllers poll this and kill the run
+    /// quickly rather than letting peers hit misleading timeouts.
+    pub fn poisoned(&self) -> bool {
+        self.inner.poisoned.load(Ordering::SeqCst)
+    }
+
+    pub fn reports(&self) -> Vec<FailureReport> {
+        self.inner.reports.lock().unwrap().clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_poisons() {
+        let m = FailureMonitor::new();
+        assert!(!m.poisoned());
+        m.report("w", 1, "f", "boom".into());
+        assert!(m.poisoned());
+        let r = m.reports();
+        assert_eq!(r.len(), 1);
+        assert_eq!(r[0].worker, "w");
+        assert_eq!(r[0].rank, 1);
+    }
+
+    #[test]
+    fn clones_share_state() {
+        let m = FailureMonitor::new();
+        let m2 = m.clone();
+        m2.report("a", 0, "g", "x".into());
+        assert!(m.poisoned());
+    }
+}

@@ -1,0 +1,371 @@
+//! WorkerGroup: SPMD launch, async dispatch, barrier handles.
+//!
+//! The `WorkerGroup` abstraction of §3.2: all ranks of a component are
+//! managed collectively; invoking a function dispatches it to all (or a
+//! selected subset of) ranks, returning a [`GroupHandle`] whose `wait()`
+//! is the synchronization barrier.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::failure::FailureMonitor;
+use super::runner::{run_rank, Ctl, LockMode};
+use super::{LogicFactory, WorkerCtx};
+use crate::channel::{ChannelRegistry, DeviceLockMgr};
+use crate::cluster::{Cluster, DeviceSet};
+use crate::comm::CommManager;
+use crate::data::Payload;
+use crate::metrics::Metrics;
+
+/// Shared services a group launches against (one per run).
+#[derive(Clone)]
+pub struct Services {
+    pub cluster: Cluster,
+    pub comm: CommManager,
+    pub channels: ChannelRegistry,
+    pub locks: DeviceLockMgr,
+    pub metrics: Metrics,
+    pub monitor: FailureMonitor,
+}
+
+impl Services {
+    pub fn new(cluster: Cluster) -> Services {
+        let metrics = Metrics::new();
+        Services {
+            comm: CommManager::new(cluster.clone(), metrics.clone()),
+            channels: ChannelRegistry::new(),
+            locks: DeviceLockMgr::new(),
+            monitor: FailureMonitor::new(),
+            metrics,
+            cluster,
+        }
+    }
+}
+
+struct Rank {
+    tx: Sender<Ctl>,
+    join: Option<JoinHandle<()>>,
+    devices: DeviceSet,
+}
+
+/// A launched SPMD worker group.
+pub struct WorkerGroup {
+    pub name: String,
+    ranks: Vec<Rank>,
+    services: Services,
+}
+
+impl WorkerGroup {
+    /// Launch `placements.len()` ranks; rank *i* runs on `placements[i]`.
+    /// `make_factory(rank)` builds the thread-affine logic factory.
+    pub fn launch(
+        name: &str,
+        services: &Services,
+        placements: Vec<DeviceSet>,
+        mut make_factory: impl FnMut(usize) -> LogicFactory,
+    ) -> Result<WorkerGroup> {
+        let mut ranks = Vec::with_capacity(placements.len());
+        for (rank, devices) in placements.into_iter().enumerate() {
+            let endpoint = format!("{name}/{rank}");
+            let mailbox = services.comm.register(&endpoint, devices.clone())?;
+            let ctx = WorkerCtx {
+                group: name.to_string(),
+                rank,
+                n_ranks: 0, // patched below
+                devices: devices.clone(),
+                cluster: services.cluster.clone(),
+                comm: services.comm.clone(),
+                channels: services.channels.clone(),
+                locks: services.locks.clone(),
+                metrics: services.metrics.clone(),
+                mailbox,
+            };
+            let factory = make_factory(rank);
+            let (tx, rx) = channel::<Ctl>();
+            let monitor = services.monitor.clone();
+            let join = std::thread::Builder::new()
+                .name(endpoint.clone())
+                .spawn(move || run_rank(ctx, factory, rx, monitor))
+                .map_err(|e| anyhow!("spawning {endpoint}: {e}"))?;
+            ranks.push(Rank { tx, join: Some(join), devices });
+        }
+        // n_ranks patch: ranks were created with 0; groups are small and the
+        // value is only informational, so re-broadcasting is skipped — the
+        // count is served by the group itself.
+        Ok(WorkerGroup { name: name.to_string(), ranks, services: services.clone() })
+    }
+
+    pub fn n_ranks(&self) -> usize {
+        self.ranks.len()
+    }
+
+    pub fn devices_of(&self, rank: usize) -> &DeviceSet {
+        &self.ranks[rank].devices
+    }
+
+    /// Union of all ranks' devices.
+    pub fn all_devices(&self) -> DeviceSet {
+        let mut ids = Vec::new();
+        for r in &self.ranks {
+            ids.extend_from_slice(r.devices.ids());
+        }
+        DeviceSet::new(ids)
+    }
+
+    /// Asynchronously invoke `method(arg)` on every rank.
+    pub fn invoke(&self, method: &str, arg: Payload, lock: LockMode) -> GroupHandle {
+        let sel: Vec<usize> = (0..self.ranks.len()).collect();
+        self.invoke_ranks(&sel, method, |_| arg.clone(), lock)
+    }
+
+    /// Invoke on a subset of ranks with per-rank arguments.
+    pub fn invoke_ranks(
+        &self,
+        ranks: &[usize],
+        method: &str,
+        mut arg_for: impl FnMut(usize) -> Payload,
+        lock: LockMode,
+    ) -> GroupHandle {
+        // Pre-register lock intents in program order (deadlock avoidance:
+        // see DeviceLockMgr::register_intent).
+        if let LockMode::Device { priority } = lock {
+            for &r in ranks {
+                let endpoint = format!("{}/{r}", self.name);
+                self.services.locks.register_intent(&endpoint, &self.ranks[r].devices, priority);
+            }
+        }
+        let mut replies = Vec::with_capacity(ranks.len());
+        for &r in ranks {
+            let (rtx, rrx) = channel();
+            let ok = self.ranks[r]
+                .tx
+                .send(Ctl::Invoke { method: method.to_string(), arg: arg_for(r), lock, reply: rtx })
+                .is_ok();
+            replies.push((r, rrx, ok));
+        }
+        GroupHandle {
+            group: self.name.clone(),
+            method: method.to_string(),
+            replies,
+            monitor: self.services.monitor.clone(),
+        }
+    }
+
+    /// Invoke on a single rank.
+    pub fn invoke_rank(&self, rank: usize, method: &str, arg: Payload, lock: LockMode) -> GroupHandle {
+        self.invoke_ranks(&[rank], method, |_| arg.clone(), lock)
+    }
+
+    /// Synchronous onload of all ranks.
+    pub fn onload(&self) -> Result<()> {
+        self.lifecycle(|reply| Ctl::Onload { reply })
+    }
+
+    /// Synchronous offload of all ranks.
+    pub fn offload(&self) -> Result<()> {
+        self.lifecycle(|reply| Ctl::Offload { reply })
+    }
+
+    fn lifecycle(&self, mk: impl Fn(Sender<Result<(), String>>) -> Ctl) -> Result<()> {
+        let mut rxs = Vec::new();
+        for r in &self.ranks {
+            let (tx, rx) = channel();
+            r.tx.send(mk(tx)).map_err(|_| anyhow!("{}: rank hung up", self.name))?;
+            rxs.push(rx);
+        }
+        for rx in rxs {
+            rx.recv().map_err(|_| anyhow!("{}: rank died", self.name))?.map_err(|e| anyhow!(e))?;
+        }
+        Ok(())
+    }
+
+    /// Graceful shutdown: join all rank threads.
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        for r in &self.ranks {
+            let _ = r.tx.send(Ctl::Shutdown);
+        }
+        for r in &mut self.ranks {
+            if let Some(j) = r.join.take() {
+                let _ = j.join();
+            }
+        }
+    }
+
+    /// Liveness probe (controller failure-monitor thread analog).
+    pub fn alive(&self) -> bool {
+        !self.services.monitor.poisoned()
+            && self.ranks.iter().all(|r| r.join.as_ref().map(|j| !j.is_finished()).unwrap_or(false))
+    }
+}
+
+impl Drop for WorkerGroup {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+/// Async result handle; `wait()` is the barrier primitive.
+pub struct GroupHandle {
+    group: String,
+    method: String,
+    replies: Vec<(usize, Receiver<Result<Payload, String>>, bool)>,
+    monitor: FailureMonitor,
+}
+
+impl GroupHandle {
+    /// Block until every targeted rank replies; returns payloads in rank
+    /// order. Any rank failure fails the whole barrier.
+    pub fn wait(self) -> Result<Vec<Payload>> {
+        let mut out = Vec::with_capacity(self.replies.len());
+        for (rank, rx, sent) in self.replies {
+            if !sent {
+                bail!("{}/{rank}.{}: rank unavailable (dead?)", self.group, self.method);
+            }
+            let reply = rx.recv().map_err(|_| {
+                anyhow!(
+                    "{}/{rank}.{}: rank exited before replying{}",
+                    self.group,
+                    self.method,
+                    if self.monitor.poisoned() { " (run poisoned)" } else { "" }
+                )
+            })?;
+            out.push(reply.map_err(|e| anyhow!("{}/{rank}.{}: {e}", self.group, self.method))?);
+        }
+        Ok(out)
+    }
+
+    /// Wait and reduce a scalar meta key across ranks.
+    pub fn wait_scalar_sum(self, key: &str) -> Result<f64> {
+        let outs = self.wait()?;
+        Ok(outs.iter().filter_map(|p| p.meta_f64(key)).sum())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+    use crate::worker::WorkerLogic;
+
+    struct Echo {
+        onloads: usize,
+    }
+
+    impl WorkerLogic for Echo {
+        fn onload(&mut self, ctx: &WorkerCtx) -> Result<()> {
+            self.onloads += 1;
+            ctx.reserve_mem(100, "weights")
+        }
+
+        fn offload(&mut self, ctx: &WorkerCtx) -> Result<()> {
+            ctx.free_mem("weights");
+            Ok(())
+        }
+
+        fn call(&mut self, ctx: &WorkerCtx, method: &str, arg: Payload) -> Result<Payload> {
+            match method {
+                "echo" => Ok(arg.set_meta("rank", ctx.rank)),
+                "fail" => bail!("intentional"),
+                "panic" => panic!("intentional panic"),
+                "onloads" => Ok(Payload::new().set_meta("n", self.onloads)),
+                other => bail!("no method {other}"),
+            }
+        }
+    }
+
+    fn services(devices: usize) -> Services {
+        Services::new(Cluster::new(ClusterConfig {
+            nodes: 1,
+            devices_per_node: devices,
+            ..Default::default()
+        }))
+    }
+
+    fn echo_group(svc: &Services, n: usize) -> WorkerGroup {
+        let placements = (0..n).map(|i| DeviceSet::range(i, 1)).collect();
+        WorkerGroup::launch("echo", svc, placements, |_rank| {
+            Box::new(|_ctx: &WorkerCtx| Ok(Box::new(Echo { onloads: 0 }) as Box<dyn WorkerLogic>))
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn spmd_dispatch_and_barrier() {
+        let svc = services(2);
+        let g = echo_group(&svc, 2);
+        let outs = g.invoke("echo", Payload::new().set_meta("x", 7i64), LockMode::None).wait().unwrap();
+        assert_eq!(outs.len(), 2);
+        assert_eq!(outs[0].meta_i64("rank"), Some(0));
+        assert_eq!(outs[1].meta_i64("rank"), Some(1));
+        assert_eq!(outs[0].meta_i64("x"), Some(7));
+        // Auto-timer recorded per group.method.
+        assert_eq!(svc.metrics.count("echo.echo"), 2);
+        g.shutdown();
+    }
+
+    #[test]
+    fn rank_subset_invocation() {
+        let svc = services(2);
+        let g = echo_group(&svc, 2);
+        let outs = g.invoke_rank(1, "echo", Payload::new(), LockMode::None).wait().unwrap();
+        assert_eq!(outs.len(), 1);
+        assert_eq!(outs[0].meta_i64("rank"), Some(1));
+        g.shutdown();
+    }
+
+    #[test]
+    fn failure_poisons_and_kills_rank() {
+        let svc = services(1);
+        let g = echo_group(&svc, 1);
+        let err = g.invoke("fail", Payload::new(), LockMode::None).wait().unwrap_err();
+        assert!(format!("{err}").contains("intentional"));
+        assert!(svc.monitor.poisoned());
+        // The rank committed suicide; further invokes report unavailability.
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        assert!(!g.alive());
+        let err2 = g.invoke("echo", Payload::new(), LockMode::None).wait().unwrap_err();
+        assert!(format!("{err2}").contains("rank"), "{err2}");
+        g.shutdown();
+    }
+
+    #[test]
+    fn panic_is_caught_as_failure() {
+        let svc = services(1);
+        let g = echo_group(&svc, 1);
+        let err = g.invoke("panic", Payload::new(), LockMode::None).wait().unwrap_err();
+        assert!(format!("{err}").contains("panic"), "{err}");
+        assert!(svc.monitor.poisoned());
+        g.shutdown();
+    }
+
+    #[test]
+    fn device_lock_mode_loads_then_offloads_only_when_contended() {
+        let svc = services(1);
+        let g = echo_group(&svc, 1);
+        // Uncontended: onload happens once, no offload between calls.
+        g.invoke("echo", Payload::new(), LockMode::Device { priority: 0 }).wait().unwrap();
+        g.invoke("echo", Payload::new(), LockMode::Device { priority: 0 }).wait().unwrap();
+        let outs = g.invoke("onloads", Payload::new(), LockMode::None).wait().unwrap();
+        assert_eq!(outs[0].meta_i64("n"), Some(1), "resident weights reused when uncontended");
+        assert_eq!(svc.metrics.count("echo.onload"), 1);
+        assert_eq!(svc.metrics.count("echo.offload"), 0);
+        g.shutdown();
+    }
+
+    #[test]
+    fn memory_accounting_through_ctx() {
+        let svc = services(1);
+        let g = echo_group(&svc, 1);
+        g.onload().unwrap();
+        assert_eq!(svc.cluster.mem_used(crate::cluster::DeviceId(0)), 100);
+        g.offload().unwrap();
+        assert_eq!(svc.cluster.mem_used(crate::cluster::DeviceId(0)), 0);
+        g.shutdown();
+    }
+}

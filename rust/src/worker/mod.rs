@@ -1,0 +1,112 @@
+//! The worker abstraction (§3.2): RL components as schedulable units.
+//!
+//! Every RL component (rollout engine, inference, trainer, simulator,
+//! reward...) implements [`WorkerLogic`] and is launched as a
+//! [`group::WorkerGroup`] of SPMD ranks, each on its own OS thread (≙ a
+//! Ray-launched process in the paper). A worker gets a [`WorkerCtx`] with:
+//!
+//! * its device placement and the shared [`Cluster`] (memory accounting),
+//! * the adaptive [`CommManager`] plus its own mailbox,
+//! * the [`ChannelRegistry`] of data channels,
+//! * the [`DeviceLockMgr`] for context switching,
+//! * the shared [`Metrics`] registry (auto-timed public functions).
+//!
+//! Group function invocation is asynchronous and returns a handle whose
+//! `wait()` is the synchronization barrier of §3.2.
+
+pub mod failure;
+pub mod group;
+pub mod runner;
+
+use crate::channel::{ChannelRegistry, DeviceLockMgr};
+use crate::cluster::{Cluster, DeviceSet};
+use crate::comm::{CommManager, Mailbox};
+use crate::data::Payload;
+use crate::metrics::Metrics;
+
+pub use failure::{FailureMonitor, FailureReport};
+pub use group::{GroupHandle, WorkerGroup};
+pub use runner::LockMode;
+
+use anyhow::Result;
+
+/// Execution context handed to worker logic.
+pub struct WorkerCtx {
+    /// Group name (e.g. "rollout").
+    pub group: String,
+    /// Rank within the group.
+    pub rank: usize,
+    pub n_ranks: usize,
+    /// Devices this rank is placed on.
+    pub devices: DeviceSet,
+    pub cluster: Cluster,
+    pub comm: CommManager,
+    pub channels: ChannelRegistry,
+    pub locks: DeviceLockMgr,
+    pub metrics: Metrics,
+    /// This rank's own mailbox for p2p messages.
+    pub mailbox: Mailbox,
+}
+
+impl WorkerCtx {
+    /// Fully-qualified endpoint name of this rank ("rollout/0").
+    pub fn endpoint(&self) -> String {
+        format!("{}/{}", self.group, self.rank)
+    }
+
+    /// Endpoint of a peer rank in another group.
+    pub fn peer(&self, group: &str, rank: usize) -> String {
+        format!("{group}/{rank}")
+    }
+
+    /// Send to a peer via the adaptive comm layer.
+    pub fn send(&self, dst_group: &str, dst_rank: usize, payload: Payload) -> Result<()> {
+        self.comm.send(&self.endpoint(), &self.peer(dst_group, dst_rank), payload)?;
+        Ok(())
+    }
+
+    /// Blocking receive from this rank's mailbox.
+    pub fn recv(&self) -> Result<crate::comm::Message> {
+        self.mailbox.recv()
+    }
+
+    /// Reserve device memory under a tag (errors = simulated OOM).
+    pub fn reserve_mem(&self, bytes: u64, tag: &str) -> Result<()> {
+        self.cluster.reserve(&self.devices, bytes, tag)
+    }
+
+    pub fn free_mem(&self, tag: &str) -> u64 {
+        self.cluster.free(&self.devices, tag)
+    }
+}
+
+/// The logic of one worker rank. `call` dispatches the worker's public
+/// functions; `onload`/`offload` manage device-resident state (§3.2's
+/// mandatory resource-management functions).
+///
+/// Deliberately **not** `Send`: logic is constructed by the (Send)
+/// [`LogicFactory`] on its own thread and never crosses threads, so
+/// workers may hold thread-affine PJRT state (`Rc<Engine>`, literals).
+pub trait WorkerLogic {
+    /// One-time initialization after thread start (runtime engines, state).
+    fn setup(&mut self, _ctx: &WorkerCtx) -> Result<()> {
+        Ok(())
+    }
+
+    /// Acquire device resources (load weights, allocate caches).
+    fn onload(&mut self, _ctx: &WorkerCtx) -> Result<()> {
+        Ok(())
+    }
+
+    /// Release device resources (free memory reservations).
+    fn offload(&mut self, _ctx: &WorkerCtx) -> Result<()> {
+        Ok(())
+    }
+
+    /// Dispatch a public function by name.
+    fn call(&mut self, ctx: &WorkerCtx, method: &str, arg: Payload) -> Result<Payload>;
+}
+
+/// Factory creating one rank's logic on its own thread (runtime engines are
+/// thread-affine, so construction must happen *inside* the thread).
+pub type LogicFactory = Box<dyn FnOnce(&WorkerCtx) -> Result<Box<dyn WorkerLogic>> + Send>;

@@ -1,0 +1,160 @@
+//! Per-rank worker thread: control loop, auto-timing, lock integration.
+
+use std::panic::AssertUnwindSafe;
+use std::sync::mpsc::{Receiver, Sender};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::failure::FailureMonitor;
+use super::{LogicFactory, WorkerCtx};
+use crate::data::Payload;
+
+/// How an invocation interacts with the device lock (§3.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LockMode {
+    /// No locking: the scheduler placed this worker on exclusive devices.
+    None,
+    /// Acquire the device lock around the call with the given dependency
+    /// priority (lower = earlier workflow stage); onload after acquiring,
+    /// offload before releasing iff contended.
+    Device { priority: u64 },
+}
+
+/// Control messages from the group to one rank.
+pub enum Ctl {
+    Invoke { method: String, arg: Payload, lock: LockMode, reply: Sender<Result<Payload, String>> },
+    Onload { reply: Sender<Result<(), String>> },
+    Offload { reply: Sender<Result<(), String>> },
+    Shutdown,
+}
+
+/// Thread body for one rank. Consumes control messages until `Shutdown`
+/// (or a failure, after which the rank exits fail-fast).
+pub fn run_rank(ctx: WorkerCtx, factory: LogicFactory, rx: Receiver<Ctl>, monitor: FailureMonitor) {
+    let mut logic = match factory(&ctx) {
+        Ok(l) => l,
+        Err(e) => {
+            monitor.report(&ctx.group, ctx.rank, "factory", format!("{e:#}"));
+            return;
+        }
+    };
+    if let Err(e) = logic.setup(&ctx) {
+        monitor.report(&ctx.group, ctx.rank, "setup", format!("{e:#}"));
+        return;
+    }
+    let mut loaded = false;
+
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            Ctl::Shutdown => break,
+            Ctl::Onload { reply } => {
+                let r = ensure_loaded(&mut *logic, &ctx, &mut loaded);
+                let _ = reply.send(r.map_err(|e| format!("{e:#}")));
+            }
+            Ctl::Offload { reply } => {
+                let r = ensure_offloaded(&mut *logic, &ctx, &mut loaded);
+                let _ = reply.send(r.map_err(|e| format!("{e:#}")));
+            }
+            Ctl::Invoke { method, arg, lock, reply } => {
+                let holder = ctx.endpoint();
+                trace(&format!("{holder} invoke {method} lock={lock:?}"));
+                if let LockMode::Device { priority } = lock {
+                    let t0 = Instant::now();
+                    ctx.locks.acquire(&holder, &ctx.devices, priority);
+                    trace(&format!("{holder} acquired devices for {method}"));
+                    ctx.metrics
+                        .record(&format!("{}.lock_wait", ctx.group), t0.elapsed().as_secs_f64());
+                    if let Err(e) = ensure_loaded(&mut *logic, &ctx, &mut loaded) {
+                        ctx.locks.release(&holder, &ctx.devices);
+                        let _ = reply.send(Err(format!("onload: {e:#}")));
+                        monitor.report(&ctx.group, ctx.rank, &method, format!("onload: {e:#}"));
+                        return;
+                    }
+                }
+
+                let t0 = Instant::now();
+                trace(&format!("{holder} calling {method}"));
+                let outcome = std::panic::catch_unwind(AssertUnwindSafe(|| {
+                    logic.call(&ctx, &method, arg)
+                }));
+                trace(&format!("{holder} finished {method}"));
+                let elapsed = t0.elapsed().as_secs_f64();
+                // Worker-group-level auto-timer (§4 Performance Profiling).
+                ctx.metrics.record(&format!("{}.{}", ctx.group, method), elapsed);
+
+                if let LockMode::Device { .. } = lock {
+                    // Offload only when someone is actually waiting for
+                    // these devices (placement-aware skip).
+                    if ctx.locks.was_contended(&holder, &ctx.devices) {
+                        let _ = ensure_offloaded(&mut *logic, &ctx, &mut loaded);
+                    }
+                    ctx.locks.release(&holder, &ctx.devices);
+                }
+
+                match outcome {
+                    Ok(Ok(out)) => {
+                        let _ = reply.send(Ok(out));
+                    }
+                    Ok(Err(e)) => {
+                        let msg = format!("{e:#}");
+                        monitor.report(&ctx.group, ctx.rank, &method, msg.clone());
+                        let _ = reply.send(Err(msg));
+                        // Fail fast: this rank is done (suicide per §4).
+                        break;
+                    }
+                    Err(panic) => {
+                        let msg = panic_message(panic);
+                        monitor.report(&ctx.group, ctx.rank, &method, msg.clone());
+                        let _ = reply.send(Err(msg));
+                        break;
+                    }
+                }
+            }
+        }
+    }
+    // Teardown: release resources and connections.
+    let _ = ensure_offloaded(&mut *logic, &ctx, &mut loaded);
+    ctx.comm.unregister(&ctx.endpoint());
+}
+
+fn ensure_loaded(logic: &mut dyn super::WorkerLogic, ctx: &WorkerCtx, loaded: &mut bool) -> Result<()> {
+    if !*loaded {
+        let t0 = Instant::now();
+        logic.onload(ctx)?;
+        ctx.metrics.record(&format!("{}.onload", ctx.group), t0.elapsed().as_secs_f64());
+        *loaded = true;
+    }
+    Ok(())
+}
+
+fn ensure_offloaded(
+    logic: &mut dyn super::WorkerLogic,
+    ctx: &WorkerCtx,
+    loaded: &mut bool,
+) -> Result<()> {
+    if *loaded {
+        let t0 = Instant::now();
+        logic.offload(ctx)?;
+        ctx.metrics.record(&format!("{}.offload", ctx.group), t0.elapsed().as_secs_f64());
+        *loaded = false;
+    }
+    Ok(())
+}
+
+/// Debug tracing, enabled with `RLINF_TRACE=1`.
+pub fn trace(msg: &str) {
+    if std::env::var_os("RLINF_TRACE").is_some() {
+        eprintln!("[trace {:?}] {msg}", std::time::SystemTime::now().duration_since(std::time::UNIX_EPOCH).unwrap().as_secs_f64());
+    }
+}
+
+fn panic_message(p: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        format!("panic: {s}")
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        format!("panic: {s}")
+    } else {
+        "panic: <non-string payload>".to_string()
+    }
+}

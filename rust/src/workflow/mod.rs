@@ -1,0 +1,14 @@
+//! Workflow runners: the imperative "macro flows" of §3.2, driven through
+//! the M2Flow machinery.
+//!
+//! [`reasoning`] implements the GRPO reasoning-RL workflow (Figure 5b/6):
+//! prompts → rollout → inference → advantage aggregation → training, with
+//! weight sync closing the loop. [`embodied`] implements the cyclic
+//! generator ⇄ simulator PPO workflow. Both run unchanged under
+//! collocated, disaggregated, and hybrid execution — only the placement
+//! and lock directives differ, which is the paper's core claim.
+
+pub mod embodied;
+pub mod reasoning;
+
+pub use reasoning::{run_grpo, GrpoReport, IterStats, RunnerOpts};

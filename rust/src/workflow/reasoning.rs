@@ -1,0 +1,633 @@
+//! The GRPO reasoning-RL workflow runner.
+//!
+//! One iteration (the macro flow, written imperatively exactly as Figure 5b
+//! sketches):
+//!
+//! ```text
+//! prompts ──> rollout.generate_stream ──> infer.logprob_stream ──> scored
+//! scored  ──(runner: group-normalize advantages per prompt)──> train items
+//! train items ──> trainer.train_stream ──> weight sync back to rollout/infer
+//! ```
+//!
+//! The same code runs under every placement mode; only `Placement` differs:
+//!
+//! * `Collocated`    — every group spans all devices; phases serialize via
+//!   the device lock (rollout prio 0, infer 1, train 2) with automatic
+//!   context switching. This is the veRL-style execution.
+//! * `Disaggregated` — rollout owns `gen_devices`, infer+train own the
+//!   rest; everything streams concurrently (elastic pipelining).
+//! * `Hybrid`        — rollout disaggregated; infer and train time-share
+//!   the remaining devices via the lock.
+//! * `Auto`          — profile, trace the graph, run Algorithm 1, then
+//!   apply the chosen plan.
+
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::cluster::{Cluster, DeviceSet};
+use crate::config::{PlacementMode, RunConfig};
+use crate::data::{Payload, Tensor};
+use crate::flow::WorkflowGraph;
+use crate::infer::{InferCfg, InferWorker};
+use crate::metrics::Reduce;
+use crate::model::{TaskGen, Tokenizer};
+use crate::rollout::worker::{RolloutCfg, RolloutWorker};
+use crate::runtime::Manifest;
+use crate::sched::{ProfileDb, SchedProblem, Scheduler};
+use crate::train::advantage::group_normalize;
+use crate::train::worker::{TrainCfg, TrainWorker};
+use crate::util::json::Value;
+use crate::worker::group::Services;
+use crate::worker::{LockMode, WorkerGroup, WorkerLogic};
+
+/// Baseline/ablation toggles layered on a [`RunConfig`].
+#[derive(Debug, Clone, Default)]
+pub struct RunnerOpts {
+    /// veRL-like baseline: strict collocated phases, halved rollout KV
+    /// budget, unfused (double-forward) log-prob inference (§5.3).
+    pub verl_like: bool,
+    /// Print per-iteration progress.
+    pub verbose: bool,
+}
+
+/// Per-iteration statistics.
+#[derive(Debug, Clone)]
+pub struct IterStats {
+    pub iter: usize,
+    pub secs: f64,
+    /// Prompt + generated tokens this iteration (the paper's RLHF
+    /// throughput numerator).
+    pub tokens: usize,
+    pub tokens_per_sec: f64,
+    pub mean_reward: f64,
+    /// Fraction of responses with the correct final answer.
+    pub accuracy: f64,
+    pub loss: f64,
+    pub train_steps: usize,
+    pub early_stopped: usize,
+}
+
+/// Whole-run report.
+#[derive(Debug, Clone)]
+pub struct GrpoReport {
+    pub iters: Vec<IterStats>,
+    /// phase -> total seconds (Figures 11–13 breakdown).
+    pub breakdown: Vec<(String, f64)>,
+    pub mode: &'static str,
+    pub plan_rendered: Option<String>,
+}
+
+impl GrpoReport {
+    pub fn mean_throughput(&self) -> f64 {
+        if self.iters.is_empty() {
+            return 0.0;
+        }
+        self.iters.iter().map(|i| i.tokens_per_sec).sum::<f64>() / self.iters.len() as f64
+    }
+
+    /// Mean throughput excluding the first iteration — the paper reports
+    /// averages *after warm-up* (§5.1), and our first iteration also pays
+    /// one-time XLA compilation of the artifacts.
+    pub fn steady_throughput(&self) -> f64 {
+        if self.iters.len() <= 1 {
+            return self.mean_throughput();
+        }
+        let tail = &self.iters[1..];
+        tail.iter().map(|i| i.tokens_per_sec).sum::<f64>() / tail.len() as f64
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut v = Value::obj();
+        v.set("mode", self.mode);
+        v.set("mean_tokens_per_sec", self.mean_throughput());
+        let iters: Vec<Value> = self
+            .iters
+            .iter()
+            .map(|i| {
+                let mut e = Value::obj();
+                e.set("iter", i.iter)
+                    .set("secs", i.secs)
+                    .set("tokens_per_sec", i.tokens_per_sec)
+                    .set("mean_reward", i.mean_reward)
+                    .set("accuracy", i.accuracy)
+                    .set("loss", i.loss);
+                e
+            })
+            .collect();
+        v.set("iters", Value::Arr(iters));
+        let bd: Vec<Value> = self
+            .breakdown
+            .iter()
+            .map(|(k, s)| {
+                let mut e = Value::obj();
+                e.set("phase", k.as_str()).set("secs", *s);
+                e
+            })
+            .collect();
+        v.set("breakdown", Value::Arr(bd));
+        v
+    }
+}
+
+/// Resolved placement directives for the three groups.
+struct Placement {
+    rollout: Vec<DeviceSet>,
+    infer: Vec<DeviceSet>,
+    train: Vec<DeviceSet>,
+    rollout_lock: LockMode,
+    infer_lock: LockMode,
+    train_lock: LockMode,
+    mode: &'static str,
+}
+
+fn resolve_placement(cfg: &RunConfig, cluster: &Cluster, mode: PlacementMode) -> Result<Placement> {
+    let n = cluster.num_devices();
+    let one_per = |ids: std::ops::Range<usize>| -> Vec<DeviceSet> {
+        ids.map(|i| DeviceSet::range(i, 1)).collect()
+    };
+    Ok(match mode {
+        PlacementMode::Collocated => Placement {
+            rollout: one_per(0..n),
+            infer: one_per(0..n),
+            train: vec![DeviceSet::range(0, n)],
+            rollout_lock: LockMode::Device { priority: 0 },
+            infer_lock: LockMode::Device { priority: 1 },
+            train_lock: LockMode::Device { priority: 2 },
+            mode: "collocated",
+        },
+        PlacementMode::Disaggregated => {
+            let g = if cfg.sched.gen_devices > 0 {
+                cfg.sched.gen_devices.min(n.saturating_sub(2).max(1))
+            } else {
+                (n * 2 / 3).max(1).min(n - 1)
+            };
+            if n < 2 {
+                bail!("disaggregated mode needs ≥2 devices");
+            }
+            let rest = n - g;
+            let infer_n = (rest / 2).max(1);
+            let train_n = rest - infer_n;
+            if train_n > 0 {
+                Placement {
+                    rollout: one_per(0..g),
+                    infer: one_per(g..g + infer_n),
+                    train: vec![DeviceSet::range(g + infer_n, train_n)],
+                    rollout_lock: LockMode::None,
+                    infer_lock: LockMode::None,
+                    train_lock: LockMode::None,
+                    mode: "disaggregated",
+                }
+            } else {
+                // Not enough devices for a three-way split: infer and train
+                // time-share the non-rollout devices.
+                Placement {
+                    rollout: one_per(0..g),
+                    infer: one_per(g..n),
+                    train: vec![DeviceSet::range(g, rest)],
+                    rollout_lock: LockMode::None,
+                    infer_lock: LockMode::Device { priority: 1 },
+                    train_lock: LockMode::Device { priority: 2 },
+                    mode: "disaggregated",
+                }
+            }
+        }
+        PlacementMode::Hybrid => {
+            if n < 2 {
+                bail!("hybrid mode needs ≥2 devices");
+            }
+            let g = if cfg.sched.gen_devices > 0 { cfg.sched.gen_devices.min(n - 1) } else { (n * 2 / 3).max(1).min(n - 1) };
+            let rest = n - g;
+            Placement {
+                rollout: one_per(0..g),
+                infer: one_per(g..n),
+                train: vec![DeviceSet::range(g, rest)],
+                rollout_lock: LockMode::None,
+                infer_lock: LockMode::Device { priority: 1 },
+                train_lock: LockMode::Device { priority: 2 },
+                mode: "hybrid",
+            }
+        }
+        PlacementMode::Auto => unreachable!("Auto resolved before placement"),
+    })
+}
+
+/// Launch the three worker groups under a placement.
+struct Groups {
+    rollout: WorkerGroup,
+    infer: WorkerGroup,
+    train: WorkerGroup,
+}
+
+fn launch_groups(
+    cfg: &RunConfig,
+    opts: &RunnerOpts,
+    services: &Services,
+    placement: &Placement,
+) -> Result<Groups> {
+    let manifest = Manifest::load(&cfg.artifacts_dir)?;
+    let model = manifest.model(&cfg.model)?;
+    let full_batch = model.granularities("decode").into_iter().max().unwrap_or(32);
+    let rollout_cfg = RolloutCfg {
+        artifacts_dir: cfg.artifacts_dir.clone(),
+        model: cfg.model.clone(),
+        temperature: cfg.rollout.temperature,
+        max_new: cfg.rollout.max_new,
+        max_batch: if opts.verl_like { Some((full_batch / 2).max(1)) } else { None },
+    };
+    let infer_cfg = InferCfg {
+        artifacts_dir: cfg.artifacts_dir.clone(),
+        model: cfg.model.clone(),
+        double_forward: opts.verl_like,
+    };
+    let train_cfg = TrainCfg {
+        artifacts_dir: cfg.artifacts_dir.clone(),
+        model: cfg.model.clone(),
+        lr: cfg.train.lr,
+        ratio_early_stop: cfg.train.ratio_early_stop,
+    };
+
+    let rollout = WorkerGroup::launch("rollout", services, placement.rollout.clone(), |_| {
+        let c = rollout_cfg.clone();
+        Box::new(move |_ctx| Ok(Box::new(RolloutWorker::new(c)) as Box<dyn WorkerLogic>))
+    })?;
+    let infer = WorkerGroup::launch("infer", services, placement.infer.clone(), |_| {
+        let c = infer_cfg.clone();
+        Box::new(move |_ctx| Ok(Box::new(InferWorker::new(c)) as Box<dyn WorkerLogic>))
+    })?;
+    let train = WorkerGroup::launch("train", services, placement.train.clone(), |_| {
+        let c = train_cfg.clone();
+        Box::new(move |_ctx| Ok(Box::new(TrainWorker::new(c)) as Box<dyn WorkerLogic>))
+    })?;
+    Ok(Groups { rollout, infer, train })
+}
+
+/// Run GRPO for `cfg.iters` iterations under the configured mode.
+pub fn run_grpo(cfg: &RunConfig, opts: &RunnerOpts) -> Result<GrpoReport> {
+    let cluster = Cluster::new(cfg.cluster.clone());
+    let services = Services::new(cluster.clone());
+
+    // Resolve Auto via profiling + Algorithm 1.
+    let (mode, plan_rendered) = match cfg.sched.mode {
+        PlacementMode::Auto => {
+            let (mode, rendered) = auto_schedule(cfg, opts)?;
+            (mode, Some(rendered))
+        }
+        m => (m, None),
+    };
+    let placement = resolve_placement(cfg, &cluster, mode)?;
+    let groups = launch_groups(cfg, opts, &services, &placement)?;
+
+    // Pre-load phases that keep device residency in pipelined modes.
+    if matches!(placement.rollout_lock, LockMode::None) {
+        groups.rollout.onload()?;
+    }
+    if matches!(placement.infer_lock, LockMode::None) {
+        groups.infer.onload()?;
+    }
+    if matches!(placement.train_lock, LockMode::None) {
+        groups.train.onload()?;
+    }
+
+    // Initialize weights on the trainer and sync everyone.
+    groups
+        .train
+        .invoke_rank(0, "init_weights", Payload::new().set_meta("seed", cfg.seed), placement.train_lock)
+        .wait()
+        .context("init_weights")?;
+    if cfg.train.sft_steps > 0 {
+        sft_warmup(cfg, &groups, &placement, opts.verbose)?;
+    }
+    sync_weights(&groups, &placement)?;
+
+    let tok = Tokenizer::new();
+    let manifest = Manifest::load(&cfg.artifacts_dir)?;
+    let model = manifest.model(&cfg.model)?;
+    let p_len = model.meta_usize("prompt_len")?;
+    let mut taskgen = if cfg.rollout.easy_tasks {
+        TaskGen::new_easy(cfg.seed ^ 0x7357)
+    } else {
+        TaskGen::new(cfg.seed ^ 0x7357)
+    };
+
+    let mut iters = Vec::new();
+    for iter in 0..cfg.iters {
+        services.metrics.record_value("iter.begin", iter as f64);
+        let t0 = Instant::now();
+        let stats = run_iteration(cfg, &services, &groups, &placement, &tok, &mut taskgen, p_len, iter)?;
+        let secs = t0.elapsed().as_secs_f64();
+        sync_weights(&groups, &placement)?;
+        let s = IterStats {
+            iter,
+            secs,
+            tokens_per_sec: stats.0 as f64 / secs,
+            tokens: stats.0,
+            mean_reward: stats.1,
+            accuracy: stats.2,
+            loss: stats.3,
+            train_steps: stats.4,
+            early_stopped: stats.5,
+        };
+        if opts.verbose {
+            println!(
+                "[{}] iter {iter}: {:.2}s, {:.0} tok/s, reward {:.2}, acc {:.2}, loss {:.4}",
+                placement.mode, s.secs, s.tokens_per_sec, s.mean_reward, s.accuracy, s.loss
+            );
+        }
+        iters.push(s);
+        if services.monitor.poisoned() {
+            bail!("run poisoned: {:?}", services.monitor.reports());
+        }
+    }
+
+    let breakdown = services.metrics.breakdown();
+    Ok(GrpoReport { iters, breakdown, mode: placement.mode, plan_rendered })
+}
+
+/// One iteration; returns (tokens, mean_reward, accuracy, loss, steps, skipped).
+#[allow(clippy::too_many_arguments)]
+fn run_iteration(
+    cfg: &RunConfig,
+    services: &Services,
+    groups: &Groups,
+    placement: &Placement,
+    tok: &Tokenizer,
+    taskgen: &mut TaskGen,
+    p_len: usize,
+    iter: usize,
+) -> Result<(usize, f64, f64, f64, usize, usize)> {
+    let gran = if cfg.sched.granularity > 0 { cfg.sched.granularity } else { 8 };
+    // Fresh single-iteration channels (auto-close on producers done).
+    let prompts_ch = services.channels.create(&format!("prompts@{iter}"));
+    let rollout_ch = services.channels.create(&format!("rollout@{iter}"));
+    let scored_ch = services.channels.create(&format!("scored@{iter}"));
+    let train_ch = services.channels.create(&format!("train@{iter}"));
+
+    // Feed prompts: batch × group_size response slots.
+    let tasks = taskgen.batch(cfg.rollout.batch);
+    prompts_ch.register_producer("runner");
+    for (pid, task) in tasks.iter().enumerate() {
+        let toks = tok.encode_prompt(&task.prompt, p_len)?;
+        for s in 0..cfg.rollout.group_size {
+            let mut p =
+                Payload::from_named(vec![("prompt", Tensor::from_i32(vec![p_len], &toks)?)]);
+            p.meta.set("prompt_id", pid);
+            p.meta.set("sample_idx", s);
+            p.meta.set("answer", task.answer.as_str());
+            prompts_ch.put("runner", p)?;
+        }
+    }
+    prompts_ch.producer_done("runner");
+
+    // Register stream producers up-front so channels close correctly.
+    for r in 0..groups.rollout.n_ranks() {
+        rollout_ch.register_producer(&format!("rollout/{r}"));
+    }
+    for r in 0..groups.infer.n_ranks() {
+        scored_ch.register_producer(&format!("infer/{r}"));
+    }
+    train_ch.register_producer("runner");
+
+    // Kick off the streams (async; locks order execution if collocated).
+    let gen_arg = Payload::new()
+        .set_meta("in_channel", prompts_ch.name())
+        .set_meta("out_channel", rollout_ch.name())
+        .set_meta("granularity", gran);
+    let h_rollout = groups.rollout.invoke("generate_stream", gen_arg, placement.rollout_lock);
+
+    let inf_arg = Payload::new()
+        .set_meta("in_channel", rollout_ch.name())
+        .set_meta("out_channel", scored_ch.name())
+        .set_meta("granularity", gran);
+    let h_infer = groups.infer.invoke("logprob_stream", inf_arg, placement.infer_lock);
+
+    let trn_arg = Payload::new()
+        .set_meta("in_channel", train_ch.name())
+        .set_meta("granularity", cfg.train.micro_batch);
+    let h_train = groups.train.invoke_rank(0, "train_stream", trn_arg, placement.train_lock);
+
+    // Runner-side aggregation: group responses per prompt, normalize
+    // advantages when a group completes, forward to the trainer. This is
+    // the pipeline pause point §3.2 describes.
+    let mut pending: std::collections::HashMap<i64, Vec<Payload>> = Default::default();
+    let mut total_tokens = 0usize;
+    let mut reward_sum = 0f64;
+    let mut correct = 0usize;
+    let mut n_resp = 0usize;
+    loop {
+        // Timed get so a dead upstream worker fails the run fast instead
+        // of wedging the controller (§4 failure monitoring).
+        let item = match scored_ch.get_timeout("runner", std::time::Duration::from_millis(200)) {
+            Some(i) => i,
+            None if scored_ch.is_closed() && scored_ch.is_empty() => break,
+            None => {
+                if services.monitor.poisoned() {
+                    train_ch.producer_done("runner");
+                    bail!("aggregation aborted: {:?}", services.monitor.reports());
+                }
+                continue;
+            }
+        };
+        let p = item.payload;
+        total_tokens += p_len + p.meta_i64("gen_len").unwrap_or(0) as usize;
+        let r = p.meta_f64("reward").unwrap_or(0.0);
+        reward_sum += r;
+        if r > 0.0 {
+            correct += 1;
+        }
+        n_resp += 1;
+        let pid = p.meta_i64("prompt_id").unwrap_or(-1);
+        let group = pending.entry(pid).or_default();
+        group.push(p);
+        if group.len() == cfg.rollout.group_size {
+            let group = pending.remove(&pid).unwrap();
+            let rewards: Vec<f32> =
+                group.iter().map(|g| g.meta_f64("reward").unwrap_or(0.0) as f32).collect();
+            let advs = group_normalize(&rewards);
+            for (mut g, adv) in group.into_iter().zip(advs) {
+                g.meta.set("adv", adv as f64);
+                let w = g.meta_i64("gen_len").unwrap_or(1) as f64;
+                train_ch.put_weighted("runner", g, w)?;
+            }
+        }
+    }
+    // Any incomplete groups (shouldn't happen) get zero advantage.
+    for (_, group) in pending.drain() {
+        for mut g in group {
+            g.meta.set("adv", 0.0);
+            train_ch.put_weighted("runner", g, 1.0)?;
+        }
+    }
+    train_ch.producer_done("runner");
+
+    h_rollout.wait().context("rollout stream")?;
+    h_infer.wait().context("infer stream")?;
+    let train_out = h_train.wait().context("train stream")?;
+    let loss = train_out[0].meta_f64("mean_loss").unwrap_or(0.0);
+    let steps = train_out[0].meta_i64("steps").unwrap_or(0) as usize;
+    let skipped = train_out[0].meta_i64("skipped").unwrap_or(0) as usize;
+
+    Ok((
+        total_tokens,
+        reward_sum / n_resp.max(1) as f64,
+        correct as f64 / n_resp.max(1) as f64,
+        loss,
+        steps,
+        skipped,
+    ))
+}
+
+/// Supervised warm-start: teacher-forced (prompt, answer, EOS) sequences
+/// through the `sft` artifact — the stand-in for the paper's SFT'd base
+/// checkpoints (a randomly-initialized policy has zero exact-match reward
+/// variance, so GRPO alone has no cold-start signal).
+fn sft_warmup(cfg: &RunConfig, groups: &Groups, placement: &Placement, verbose: bool) -> Result<()> {
+    let manifest = Manifest::load(&cfg.artifacts_dir)?;
+    let model = manifest.model(&cfg.model)?;
+    let p_len = model.meta_usize("prompt_len")?;
+    let t_max = model.meta_usize("max_seq")?;
+    let mb = model.variant("sft", cfg.train.micro_batch)?.batch;
+    let tok = Tokenizer::new();
+    let mut gen = if cfg.rollout.easy_tasks {
+        TaskGen::new_easy(cfg.seed ^ 0x5f7)
+    } else {
+        TaskGen::new(cfg.seed ^ 0x5f7)
+    };
+    for step in 0..cfg.train.sft_steps {
+        let mut tokens = Vec::with_capacity(mb * t_max);
+        let mut mask = Vec::with_capacity(mb * t_max);
+        for _ in 0..mb {
+            let task = gen.next_task();
+            let mut seq = tok.encode_prompt(&task.prompt, p_len)?;
+            let answer = tok.encode(&task.answer);
+            let a_start = seq.len();
+            seq.extend(&answer);
+            seq.push(crate::model::tokenizer::EOS);
+            let a_end = seq.len();
+            seq.resize(t_max, crate::model::tokenizer::PAD);
+            let mut m = vec![0f32; t_max];
+            for t in a_start..a_end {
+                m[t] = 1.0;
+            }
+            tokens.extend(&seq);
+            mask.extend(&m);
+        }
+        let mut arg = Payload::from_named(vec![
+            ("tokens", Tensor::from_i32(vec![mb, t_max], &tokens)?),
+            ("mask", Tensor::from_f32(vec![mb, t_max], &mask)?),
+        ]);
+        // Supervised phase uses its own (larger) step size; the RL lr in
+        // the config is tuned for policy-gradient stability, not SFT.
+        arg.meta.set("lr", 1e-3);
+        let out = groups
+            .train
+            .invoke_rank(0, "sft_batch", arg, placement.train_lock)
+            .wait()
+            .context("sft_batch")?
+            .remove(0);
+        if verbose && (step % 50 == 0 || step + 1 == cfg.train.sft_steps) {
+            println!(
+                "[sft] step {step}: loss {:.3}, token acc {:.3}",
+                out.meta_f64("loss").unwrap_or(0.0),
+                out.meta_f64("token_acc").unwrap_or(0.0)
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Weight sync barrier: trainer → rollout + infer (the paper's per-
+/// iteration weight update that synchronizes generation and training).
+fn sync_weights(groups: &Groups, placement: &Placement) -> Result<()> {
+    let w = groups
+        .train
+        .invoke_rank(0, "get_weights", Payload::new(), placement.train_lock)
+        .wait()
+        .context("get_weights")?
+        .remove(0);
+    let hr = groups.rollout.invoke("set_weights", w.clone(), LockMode::None);
+    let hi = groups.infer.invoke("set_weights", w, LockMode::None);
+    hr.wait().context("rollout set_weights")?;
+    hi.wait().context("infer set_weights")?;
+    Ok(())
+}
+
+/// Auto mode: profile one tiny iteration per mode-relevant worker, trace
+/// the workflow graph, run Algorithm 1, and map the plan onto one of the
+/// three concrete placements.
+fn auto_schedule(cfg: &RunConfig, opts: &RunnerOpts) -> Result<(PlacementMode, String)> {
+    // Profile with a reduced workload on a fresh mini-cluster.
+    let mut pcfg = cfg.clone();
+    pcfg.iters = cfg.sched.profile_iters.max(1);
+    pcfg.rollout.batch = (cfg.rollout.batch / 4).max(2);
+    pcfg.sched.mode = PlacementMode::Collocated;
+    let report = run_grpo(&pcfg, &RunnerOpts { verbose: false, ..opts.clone() })?;
+
+    // Build the profile DB from the measured phase times.
+    let responses = pcfg.responses_per_iter();
+    let mut db = ProfileDb::new();
+    let phase_time = |name: &str| -> f64 {
+        report
+            .breakdown
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, s)| *s / pcfg.iters as f64)
+            .unwrap_or(0.1)
+    };
+    let manifest = Manifest::load(&cfg.artifacts_dir)?;
+    let model = manifest.model(&cfg.model)?;
+    let grans = model.granularities("decode");
+    let param_mem = model.param_bytes();
+    for &g in &grans {
+        let frac = g as f64 / responses as f64;
+        db.add("rollout", g, phase_time("rollout") * frac, param_mem + g as u64 * 400_000);
+        db.add("infer", g, phase_time("infer") * frac, param_mem);
+        db.add("train", g, phase_time("train") * frac, param_mem * 4);
+    }
+
+    let mut graph = WorkflowGraph::new();
+    graph.add_edge("rollout", "infer");
+    graph.add_edge("infer", "train");
+    let mut workload = std::collections::HashMap::new();
+    let mut granularities = std::collections::HashMap::new();
+    for w in ["rollout", "infer", "train"] {
+        workload.insert(w.to_string(), cfg.responses_per_iter());
+        granularities.insert(w.to_string(), grans.clone());
+    }
+    let problem = SchedProblem {
+        graph,
+        workload,
+        granularities,
+        n_devices: cfg.cluster.total_devices(),
+        device_mem: cfg.cluster.device_mem,
+        switch_overhead: 2.0 * phase_time("runtime") / pcfg.iters.max(1) as f64 + 0.01,
+    };
+    let mut sched = Scheduler::new(&problem, &db);
+    let plan = sched.solve()?;
+    let assignments = plan.assignments();
+    // Map the plan shape to a concrete mode: any sharing -> hybrid unless
+    // everything shares (collocated); no sharing -> disaggregated.
+    let sharing = assignments.iter().filter(|a| a.shares_devices).count();
+    let mode = if sharing == assignments.len() {
+        PlacementMode::Collocated
+    } else if sharing == 0 {
+        PlacementMode::Disaggregated
+    } else {
+        PlacementMode::Hybrid
+    };
+    Ok((mode, format!("algorithm1 plan ({} states explored):\n{}", sched.states_explored, plan.render())))
+}
+
+/// Convenience accessor used by benches: phase seconds from a report.
+pub fn phase_secs(report: &GrpoReport, phase: &str) -> f64 {
+    report.breakdown.iter().find(|(k, _)| k == phase).map(|(_, s)| *s).unwrap_or(0.0)
+}
+
+/// Metrics names the breakdown reports aggregate (kept in sync with the
+/// worker implementations; used by tests).
+pub const PHASES: [&str; 3] = ["rollout", "infer", "train"];
+
+/// Expose mean lock-wait per group for contention diagnostics.
+pub fn lock_wait(services: &Services, group: &str) -> f64 {
+    services.metrics.get(&format!("{group}.lock_wait"), Reduce::Mean).unwrap_or(0.0)
+}

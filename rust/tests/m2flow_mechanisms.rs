@@ -1,0 +1,296 @@
+//! Integration tests for the M2Flow mechanisms composed together —
+//! pipelining through channels across worker groups, context switching
+//! under memory pressure, adaptive comm between placed workers, and the
+//! traced-graph → Algorithm 1 path. These use synthetic workers (no PJRT)
+//! so they are fast and exercise pure coordination logic.
+
+use std::collections::HashMap;
+use std::time::Duration;
+
+use rlinf::cluster::{Cluster, DeviceSet};
+use rlinf::config::ClusterConfig;
+use rlinf::data::{Payload, Tensor};
+use rlinf::flow::WorkflowGraph;
+use rlinf::sched::{ProfileDb, SchedProblem, Scheduler};
+use rlinf::worker::group::Services;
+use rlinf::worker::{LockMode, WorkerCtx, WorkerGroup, WorkerLogic};
+use anyhow::{bail, Result};
+
+fn services(devices: usize, mem: u64) -> Services {
+    Services::new(Cluster::new(ClusterConfig {
+        nodes: 1,
+        devices_per_node: devices,
+        device_mem: mem,
+        ..Default::default()
+    }))
+}
+
+/// A producer that emits `count` items to a channel, simulating work.
+struct Producer {
+    count: usize,
+}
+
+impl WorkerLogic for Producer {
+    fn call(&mut self, ctx: &WorkerCtx, method: &str, arg: Payload) -> Result<Payload> {
+        match method {
+            "produce" => {
+                let ch = ctx.channels.get(arg.meta_str("out").unwrap()).unwrap();
+                for i in 0..self.count {
+                    std::thread::sleep(Duration::from_millis(2)); // simulated compute
+                    ch.put_weighted(
+                        &ctx.endpoint(),
+                        Payload::new().set_meta("i", i).set_meta("src", ctx.rank),
+                        1.0 + i as f64,
+                    )?;
+                }
+                ch.producer_done(&ctx.endpoint());
+                Ok(Payload::new())
+            }
+            _ => bail!("?"),
+        }
+    }
+}
+
+/// A consumer that records arrival timing to prove pipelining overlap.
+struct Consumer;
+
+impl WorkerLogic for Consumer {
+    fn call(&mut self, ctx: &WorkerCtx, method: &str, arg: Payload) -> Result<Payload> {
+        match method {
+            "consume" => {
+                let ch = ctx.channels.get(arg.meta_str("in").unwrap()).unwrap();
+                let gran = arg.meta_i64("granularity").unwrap_or(1) as usize;
+                let mut n = 0usize;
+                loop {
+                    let items = ch.get_batch(&ctx.endpoint(), gran);
+                    if items.is_empty() {
+                        break;
+                    }
+                    n += items.len();
+                    ctx.metrics.record_value("consumer.chunk", items.len() as f64);
+                }
+                Ok(Payload::new().set_meta("consumed", n))
+            }
+            _ => bail!("?"),
+        }
+    }
+}
+
+#[test]
+fn elastic_pipeline_overlaps_producer_and_consumer() {
+    let svc = services(2, 1 << 30);
+    let ch = svc.channels.create("stream");
+    ch.register_producer("prod/0");
+
+    let prod = WorkerGroup::launch("prod", &svc, vec![DeviceSet::range(0, 1)], |_| {
+        Box::new(|_: &WorkerCtx| Ok(Box::new(Producer { count: 20 }) as Box<dyn WorkerLogic>))
+    })
+    .unwrap();
+    let cons = WorkerGroup::launch("cons", &svc, vec![DeviceSet::range(1, 1)], |_| {
+        Box::new(|_: &WorkerCtx| Ok(Box::new(Consumer) as Box<dyn WorkerLogic>))
+    })
+    .unwrap();
+
+    let t0 = std::time::Instant::now();
+    let hp = prod.invoke("produce", Payload::new().set_meta("out", "stream"), LockMode::None);
+    let hc = cons.invoke(
+        "consume",
+        Payload::new().set_meta("in", "stream").set_meta("granularity", 4i64),
+        LockMode::None,
+    );
+    hp.wait().unwrap();
+    let out = hc.wait().unwrap();
+    let elapsed = t0.elapsed();
+    assert_eq!(out[0].meta_i64("consumed"), Some(20));
+    // Pipelined: total ≈ producer time (40ms) + tail, far below 2x.
+    assert!(elapsed < Duration::from_millis(200), "{elapsed:?}");
+    // Chunks arrived at the requested granularity.
+    assert!(svc.metrics.count("consumer.chunk") >= 5);
+}
+
+/// A memory-hungry worker: onload reserves most of the device; two such
+/// workers cannot co-reside, forcing context switching via the lock.
+struct Hungry {
+    bytes: u64,
+}
+
+impl WorkerLogic for Hungry {
+    fn onload(&mut self, ctx: &WorkerCtx) -> Result<()> {
+        ctx.reserve_mem(self.bytes, "hungry")
+    }
+
+    fn offload(&mut self, ctx: &WorkerCtx) -> Result<()> {
+        ctx.free_mem("hungry");
+        Ok(())
+    }
+
+    fn call(&mut self, ctx: &WorkerCtx, method: &str, _arg: Payload) -> Result<Payload> {
+        match method {
+            "work" => {
+                std::thread::sleep(Duration::from_millis(10));
+                Ok(Payload::new().set_meta("mem", ctx.cluster.mem_used(ctx.devices.ids()[0])))
+            }
+            _ => bail!("?"),
+        }
+    }
+}
+
+#[test]
+fn context_switching_serializes_memory_hungry_workers() {
+    // 100-byte devices; each worker needs 80 bytes -> they must time-share.
+    let svc = services(1, 100);
+    let dev = DeviceSet::range(0, 1);
+    let a = WorkerGroup::launch("a", &svc, vec![dev.clone()], |_| {
+        Box::new(|_: &WorkerCtx| Ok(Box::new(Hungry { bytes: 80 }) as Box<dyn WorkerLogic>))
+    })
+    .unwrap();
+    let b = WorkerGroup::launch("b", &svc, vec![dev.clone()], |_| {
+        Box::new(|_: &WorkerCtx| Ok(Box::new(Hungry { bytes: 80 }) as Box<dyn WorkerLogic>))
+    })
+    .unwrap();
+
+    // Interleave many calls; the device lock + onload/offload must prevent
+    // any simultaneous residency (which would OOM the 100-byte device).
+    let mut handles = Vec::new();
+    for _ in 0..5 {
+        handles.push(a.invoke("work", Payload::new(), LockMode::Device { priority: 0 }));
+        handles.push(b.invoke("work", Payload::new(), LockMode::Device { priority: 1 }));
+    }
+    for h in handles {
+        let out = h.wait().unwrap();
+        // While running, only this worker's 80 bytes are resident.
+        assert_eq!(out[0].meta_i64("mem"), Some(80));
+    }
+    // Context switches actually happened: offloads were recorded.
+    assert!(svc.metrics.count("a.offload") + svc.metrics.count("b.offload") > 0);
+    assert!(!svc.monitor.poisoned());
+}
+
+#[test]
+fn lock_free_when_disjoint_devices() {
+    // Same workers on disjoint devices: both can stay resident, no offload.
+    let svc = services(2, 100);
+    let a = WorkerGroup::launch("a", &svc, vec![DeviceSet::range(0, 1)], |_| {
+        Box::new(|_: &WorkerCtx| Ok(Box::new(Hungry { bytes: 80 }) as Box<dyn WorkerLogic>))
+    })
+    .unwrap();
+    let b = WorkerGroup::launch("b", &svc, vec![DeviceSet::range(1, 1)], |_| {
+        Box::new(|_: &WorkerCtx| Ok(Box::new(Hungry { bytes: 80 }) as Box<dyn WorkerLogic>))
+    })
+    .unwrap();
+    for _ in 0..3 {
+        let ha = a.invoke("work", Payload::new(), LockMode::Device { priority: 0 });
+        let hb = b.invoke("work", Payload::new(), LockMode::Device { priority: 0 });
+        ha.wait().unwrap();
+        hb.wait().unwrap();
+    }
+    assert_eq!(svc.metrics.count("a.offload"), 0, "no contention -> no offload");
+    assert_eq!(svc.metrics.count("b.offload"), 0);
+}
+
+#[test]
+fn traced_graph_feeds_algorithm1() {
+    // Run a 2-stage pipeline, trace the graph from channels, schedule it.
+    let svc = services(4, 1 << 30);
+    let ch = svc.channels.create("t");
+    ch.register_producer("gen/0");
+    let gen = WorkerGroup::launch("gen", &svc, vec![DeviceSet::range(0, 1)], |_| {
+        Box::new(|_: &WorkerCtx| Ok(Box::new(Producer { count: 4 }) as Box<dyn WorkerLogic>))
+    })
+    .unwrap();
+    let tr = WorkerGroup::launch("trainer", &svc, vec![DeviceSet::range(1, 1)], |_| {
+        Box::new(|_: &WorkerCtx| Ok(Box::new(Consumer) as Box<dyn WorkerLogic>))
+    })
+    .unwrap();
+    let hp = gen.invoke("produce", Payload::new().set_meta("out", "t"), LockMode::None);
+    let hc = tr.invoke(
+        "consume",
+        Payload::new().set_meta("in", "t").set_meta("granularity", 2i64),
+        LockMode::None,
+    );
+    hp.wait().unwrap();
+    hc.wait().unwrap();
+
+    let edges = svc.channels.traced_edges();
+    let graph = WorkflowGraph::from_traced_edges(&edges);
+    assert_eq!(graph.n(), 2);
+
+    let mut db = ProfileDb::new();
+    for g in [2usize, 4] {
+        db.add("gen/0", g, 0.01 * g as f64, 10);
+        db.add("trainer/0", g, 0.005 * g as f64, 10);
+    }
+    let mut workload = HashMap::new();
+    let mut grans = HashMap::new();
+    for n in &graph.nodes {
+        workload.insert(n.clone(), 16usize);
+        grans.insert(n.clone(), vec![2, 4]);
+    }
+    let problem = SchedProblem {
+        graph,
+        workload,
+        granularities: grans,
+        n_devices: 4,
+        device_mem: 1 << 30,
+        switch_overhead: 0.001,
+    };
+    let plan = Scheduler::new(&problem, &db).solve().unwrap();
+    assert!(plan.time() > 0.0);
+    assert_eq!(plan.assignments().len(), 2);
+}
+
+#[test]
+fn adaptive_comm_weight_sync_pattern() {
+    // Trainer broadcasts weights to two rollout ranks via ctx.send — the
+    // paper's weight-update barrier over the comm layer.
+    struct Trainer;
+    impl WorkerLogic for Trainer {
+        fn call(&mut self, ctx: &WorkerCtx, method: &str, _arg: Payload) -> Result<Payload> {
+            match method {
+                "sync" => {
+                    let w = Payload::from_named(vec![(
+                        "w",
+                        Tensor::from_f32(vec![4], &[1.0, 2.0, 3.0, 4.0])?,
+                    )]);
+                    ctx.send("ro", 0, w.clone())?;
+                    ctx.send("ro", 1, w)?;
+                    Ok(Payload::new())
+                }
+                _ => bail!("?"),
+            }
+        }
+    }
+    struct Receiver;
+    impl WorkerLogic for Receiver {
+        fn call(&mut self, ctx: &WorkerCtx, method: &str, _arg: Payload) -> Result<Payload> {
+            match method {
+                "recv_weights" => {
+                    let msg = ctx.recv()?;
+                    let w = msg.payload.tensor("w")?.to_f32()?;
+                    Ok(Payload::new()
+                        .set_meta("sum", w.iter().sum::<f32>() as f64)
+                        .set_meta("backend", msg.backend.name()))
+                }
+                _ => bail!("?"),
+            }
+        }
+    }
+
+    let svc = services(4, 1 << 30);
+    let tr = WorkerGroup::launch("tr", &svc, vec![DeviceSet::range(0, 1)], |_| {
+        Box::new(|_: &WorkerCtx| Ok(Box::new(Trainer) as Box<dyn WorkerLogic>))
+    })
+    .unwrap();
+    let ro = WorkerGroup::launch("ro", &svc, vec![DeviceSet::range(1, 1), DeviceSet::range(2, 1)], |_| {
+        Box::new(|_: &WorkerCtx| Ok(Box::new(Receiver) as Box<dyn WorkerLogic>))
+    })
+    .unwrap();
+
+    let hr = ro.invoke("recv_weights", Payload::new(), LockMode::None);
+    tr.invoke("sync", Payload::new(), LockMode::None).wait().unwrap();
+    let outs = hr.wait().unwrap();
+    for o in &outs {
+        assert_eq!(o.meta_f64("sum"), Some(10.0));
+        assert_eq!(o.meta_str("backend"), Some("shm"), "same node, disjoint devices");
+    }
+}

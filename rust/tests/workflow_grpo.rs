@@ -1,0 +1,107 @@
+//! End-to-end integration: the GRPO reasoning workflow under every
+//! placement mode, on the real tiny-model artifacts.
+
+use rlinf::config::{PlacementMode, RunConfig};
+use rlinf::workflow::reasoning::{run_grpo, RunnerOpts};
+
+fn base_config() -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.model = "tiny".into();
+    cfg.artifacts_dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").into();
+    cfg.iters = 2;
+    cfg.cluster.nodes = 1;
+    cfg.cluster.devices_per_node = 2;
+    cfg.rollout.batch = 4;
+    cfg.rollout.group_size = 4;
+    cfg.rollout.max_new = 12;
+    cfg.train.micro_batch = 8;
+    cfg.seed = 42;
+    cfg
+}
+
+fn artifacts_present() -> bool {
+    std::path::Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/manifest.json")).exists()
+}
+
+fn check_report(report: &rlinf::workflow::reasoning::GrpoReport, mode: &str) {
+    assert_eq!(report.mode, mode);
+    assert_eq!(report.iters.len(), 2);
+    for it in &report.iters {
+        assert!(it.tokens > 0, "tokens generated");
+        assert!(it.tokens_per_sec > 0.0);
+        assert!(it.mean_reward >= -5.0 && it.mean_reward <= 5.0);
+        assert!(it.accuracy >= 0.0 && it.accuracy <= 1.0);
+        assert!(it.train_steps + it.early_stopped > 0, "training consumed micro-batches");
+        assert!(it.loss.is_finite());
+    }
+    // All three phases appear in the breakdown.
+    for phase in ["rollout", "infer", "train"] {
+        assert!(
+            report.breakdown.iter().any(|(k, s)| k == phase && *s > 0.0),
+            "{mode}: phase {phase} missing from breakdown {:?}",
+            report.breakdown
+        );
+    }
+}
+
+#[test]
+fn grpo_collocated_mode() {
+    if !artifacts_present() {
+        return;
+    }
+    let mut cfg = base_config();
+    cfg.sched.mode = PlacementMode::Collocated;
+    let report = run_grpo(&cfg, &RunnerOpts::default()).unwrap();
+    check_report(&report, "collocated");
+}
+
+#[test]
+fn grpo_disaggregated_mode() {
+    if !artifacts_present() {
+        return;
+    }
+    let mut cfg = base_config();
+    cfg.cluster.devices_per_node = 4;
+    cfg.sched.mode = PlacementMode::Disaggregated;
+    cfg.sched.gen_devices = 2;
+    let report = run_grpo(&cfg, &RunnerOpts::default()).unwrap();
+    check_report(&report, "disaggregated");
+}
+
+#[test]
+fn grpo_hybrid_mode() {
+    if !artifacts_present() {
+        return;
+    }
+    let mut cfg = base_config();
+    cfg.cluster.devices_per_node = 4;
+    cfg.sched.mode = PlacementMode::Hybrid;
+    cfg.sched.gen_devices = 2;
+    let report = run_grpo(&cfg, &RunnerOpts::default()).unwrap();
+    check_report(&report, "hybrid");
+}
+
+#[test]
+fn grpo_verl_baseline_runs_and_is_slower_shaped() {
+    if !artifacts_present() {
+        return;
+    }
+    let cfg = rlinf::baseline::verl_config(base_config());
+    let report = run_grpo(&cfg, &rlinf::baseline::verl_opts()).unwrap();
+    check_report(&report, "collocated");
+}
+
+#[test]
+fn grpo_deterministic_rewards_per_seed() {
+    if !artifacts_present() {
+        return;
+    }
+    let mut cfg = base_config();
+    cfg.iters = 1;
+    cfg.sched.mode = PlacementMode::Collocated;
+    cfg.cluster.devices_per_node = 1;
+    let a = run_grpo(&cfg, &RunnerOpts::default()).unwrap();
+    let b = run_grpo(&cfg, &RunnerOpts::default()).unwrap();
+    assert_eq!(a.iters[0].tokens, b.iters[0].tokens, "same seed, same rollout");
+    assert_eq!(a.iters[0].mean_reward, b.iters[0].mean_reward);
+}
