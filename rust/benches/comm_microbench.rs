@@ -1,23 +1,317 @@
-//! Adaptive-communication microbenchmark (§3.5 ablation): per-message
-//! latency and effective bandwidth of the three backends as a function of
-//! payload size, plus the cost of structure-aware metadata handling.
+//! Data-plane microbenchmark (§3.5 ablation).
 //!
-//! Shape to verify: IntraProc (zero-copy) is size-independent; Shm pays a
-//! memcpy (bandwidth-bound); Sock adds the configured inter-node latency.
+//! Part 1 — adaptive-comm backends: per-message latency and effective
+//! bandwidth of the three backends as a function of payload size. Shape to
+//! verify: IntraProc (zero-copy) is size-independent; Shm pays a memcpy
+//! (bandwidth-bound); Sock adds the configured inter-node latency.
+//!
+//! Part 2 — channel/comm hot paths, before vs. after: the sharded channel
+//! and cached-route comm layer against an in-bench reimplementation of the
+//! seed design (single `Mutex<State>` + `notify_all`, O(n) balanced
+//! dequeue, per-send route resolution). Emits `BENCH_dataplane.json` so
+//! later PRs can track the trajectory:
+//! single-producer msgs/sec, multi-producer msgs/sec, balanced-dequeue
+//! items/sec, p2p send msgs/sec, and broadcast fan-out payloads/sec.
 
 mod common;
 
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+use std::time::Instant;
+
+use rlinf::channel::Channel;
 use rlinf::cluster::{Cluster, DeviceSet};
-use rlinf::config::ClusterConfig;
 use rlinf::comm::CommManager;
+use rlinf::config::ClusterConfig;
 use rlinf::data::{Payload, Tensor};
 use rlinf::metrics::Metrics;
 use rlinf::util::fmt;
+use rlinf::util::json::Value;
+
+// ---------------------------------------------------------------------------
+// Legacy channel: faithful reduction of the seed data plane (single mutex
+// around the whole state, `notify_all` on every put, O(n) scan + O(n)
+// `VecDeque::remove` for balanced dequeue). Kept here so the bench measures
+// before/after in one binary on one machine.
+// ---------------------------------------------------------------------------
+
+#[derive(Default)]
+struct LegacyState {
+    items: std::collections::VecDeque<(Payload, f64)>,
+    open_producers: usize,
+    closed: bool,
+    consumer_load: std::collections::HashMap<String, f64>,
+}
+
+#[derive(Clone, Default)]
+struct LegacyChannel {
+    inner: Arc<(Mutex<LegacyState>, Condvar)>,
+}
+
+impl LegacyChannel {
+    fn register_producer(&self) {
+        self.inner.0.lock().unwrap().open_producers += 1;
+    }
+
+    fn producer_done(&self) {
+        let mut s = self.inner.0.lock().unwrap();
+        s.open_producers = s.open_producers.saturating_sub(1);
+        if s.open_producers == 0 {
+            s.closed = true;
+        }
+        drop(s);
+        self.inner.1.notify_all();
+    }
+
+    fn put_weighted(&self, who: &str, payload: Payload, weight: f64) {
+        let mut s = self.inner.0.lock().unwrap();
+        // Seed behavior: per-put tracing insert (allocates a String).
+        s.consumer_load.entry(who.to_string()).or_insert(0.0);
+        s.items.push_back((payload, weight));
+        drop(s);
+        self.inner.1.notify_all();
+    }
+
+    fn get(&self, who: &str) -> Option<(Payload, f64)> {
+        let mut s = self.inner.0.lock().unwrap();
+        loop {
+            if let Some(it) = s.items.pop_front() {
+                *s.consumer_load.entry(who.to_string()).or_insert(0.0) += it.1;
+                return Some(it);
+            }
+            if s.closed {
+                return None;
+            }
+            s = self.inner.1.wait(s).unwrap();
+        }
+    }
+
+    fn get_balanced(&self, who: &str) -> Option<(Payload, f64)> {
+        let mut s = self.inner.0.lock().unwrap();
+        loop {
+            if !s.items.is_empty() {
+                let idx = s
+                    .items
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1 .1.total_cmp(&b.1 .1))
+                    .map(|(i, _)| i)
+                    .unwrap_or(0);
+                let it = s.items.remove(idx).unwrap();
+                *s.consumer_load.entry(who.to_string()).or_insert(0.0) += it.1;
+                return Some(it);
+            }
+            if s.closed {
+                return None;
+            }
+            s = self.inner.1.wait(s).unwrap();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Workloads (run identically against legacy and current channels).
+// ---------------------------------------------------------------------------
+
+const SPSC_ITEMS: usize = 50_000;
+const MPMC_ITEMS_PER_PRODUCER: usize = 10_000;
+const MPMC_THREADS: usize = 4;
+const BALANCED_ITEMS: usize = 5_000;
+const BALANCED_CONSUMERS: usize = 4;
+
+fn spsc_current() -> f64 {
+    let ch = Channel::new("bench-spsc");
+    ch.register_producer("p");
+    let t0 = Instant::now();
+    let ch2 = ch.clone();
+    let h = thread::spawn(move || while ch2.get("c").is_some() {});
+    for _ in 0..SPSC_ITEMS {
+        ch.put("p", Payload::new()).unwrap();
+    }
+    ch.producer_done("p");
+    h.join().unwrap();
+    SPSC_ITEMS as f64 / t0.elapsed().as_secs_f64()
+}
+
+fn spsc_legacy() -> f64 {
+    let ch = LegacyChannel::default();
+    ch.register_producer();
+    let t0 = Instant::now();
+    let ch2 = ch.clone();
+    let h = thread::spawn(move || while ch2.get("c").is_some() {});
+    for _ in 0..SPSC_ITEMS {
+        ch.put_weighted("p", Payload::new(), 1.0);
+    }
+    ch.producer_done();
+    h.join().unwrap();
+    SPSC_ITEMS as f64 / t0.elapsed().as_secs_f64()
+}
+
+fn mpmc_current() -> f64 {
+    let ch = Channel::new("bench-mpmc");
+    for p in 0..MPMC_THREADS {
+        ch.register_producer(&format!("p{p}"));
+    }
+    let t0 = Instant::now();
+    let producers: Vec<_> = (0..MPMC_THREADS)
+        .map(|p| {
+            let ch = ch.clone();
+            thread::spawn(move || {
+                let who = format!("p{p}");
+                for i in 0..MPMC_ITEMS_PER_PRODUCER {
+                    ch.put_weighted(&who, Payload::new(), 1.0 + (i % 7) as f64).unwrap();
+                }
+                ch.producer_done(&who);
+            })
+        })
+        .collect();
+    let consumers: Vec<_> = (0..MPMC_THREADS)
+        .map(|c| {
+            let ch = ch.clone();
+            thread::spawn(move || {
+                let who = format!("c{c}");
+                while ch.get(&who).is_some() {}
+            })
+        })
+        .collect();
+    for h in producers {
+        h.join().unwrap();
+    }
+    for h in consumers {
+        h.join().unwrap();
+    }
+    (MPMC_THREADS * MPMC_ITEMS_PER_PRODUCER) as f64 / t0.elapsed().as_secs_f64()
+}
+
+fn mpmc_legacy() -> f64 {
+    let ch = LegacyChannel::default();
+    for _ in 0..MPMC_THREADS {
+        ch.register_producer();
+    }
+    let t0 = Instant::now();
+    let producers: Vec<_> = (0..MPMC_THREADS)
+        .map(|p| {
+            let ch = ch.clone();
+            thread::spawn(move || {
+                let who = format!("p{p}");
+                for i in 0..MPMC_ITEMS_PER_PRODUCER {
+                    ch.put_weighted(&who, Payload::new(), 1.0 + (i % 7) as f64);
+                }
+                ch.producer_done();
+            })
+        })
+        .collect();
+    let consumers: Vec<_> = (0..MPMC_THREADS)
+        .map(|c| {
+            let ch = ch.clone();
+            thread::spawn(move || {
+                let who = format!("c{c}");
+                while ch.get(&who).is_some() {}
+            })
+        })
+        .collect();
+    for h in producers {
+        h.join().unwrap();
+    }
+    for h in consumers {
+        h.join().unwrap();
+    }
+    (MPMC_THREADS * MPMC_ITEMS_PER_PRODUCER) as f64 / t0.elapsed().as_secs_f64()
+}
+
+fn balanced_current() -> f64 {
+    let ch = Channel::new("bench-balanced");
+    ch.register_producer("p");
+    for i in 0..BALANCED_ITEMS {
+        ch.put_weighted("p", Payload::new(), 1.0 + (i % 97) as f64).unwrap();
+    }
+    ch.producer_done("p");
+    let t0 = Instant::now();
+    let consumers: Vec<_> = (0..BALANCED_CONSUMERS)
+        .map(|c| {
+            let ch = ch.clone();
+            thread::spawn(move || {
+                let who = format!("c{c}");
+                while ch.get_balanced(&who).is_some() {}
+            })
+        })
+        .collect();
+    for h in consumers {
+        h.join().unwrap();
+    }
+    BALANCED_ITEMS as f64 / t0.elapsed().as_secs_f64()
+}
+
+fn balanced_legacy() -> f64 {
+    let ch = LegacyChannel::default();
+    ch.register_producer();
+    for i in 0..BALANCED_ITEMS {
+        ch.put_weighted("p", Payload::new(), 1.0 + (i % 97) as f64);
+    }
+    ch.producer_done();
+    let t0 = Instant::now();
+    let consumers: Vec<_> = (0..BALANCED_CONSUMERS)
+        .map(|c| {
+            let ch = ch.clone();
+            thread::spawn(move || {
+                let who = format!("c{c}");
+                while ch.get_balanced(&who).is_some() {}
+            })
+        })
+        .collect();
+    for h in consumers {
+        h.join().unwrap();
+    }
+    BALANCED_ITEMS as f64 / t0.elapsed().as_secs_f64()
+}
+
+// ---------------------------------------------------------------------------
+// Comm paths: steady-state send msgs/sec and broadcast fan-out.
+// ---------------------------------------------------------------------------
+
+fn bench_send(comm: &CommManager, mailbox: &rlinf::comm::Mailbox, dst: &str, reps: usize) -> f64 {
+    // Warm the route cache, then measure the steady state.
+    comm.send("a", dst, Payload::new()).unwrap();
+    mailbox.recv().unwrap();
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        comm.send("a", dst, Payload::new()).unwrap();
+        mailbox.recv().unwrap();
+    }
+    reps as f64 / t0.elapsed().as_secs_f64()
+}
+
+/// Broadcast one payload to `dsts` and drain; returns payloads/sec
+/// (fan-out count / elapsed). `sequential` falls back to per-destination
+/// `send` — the seed broadcast implementation.
+fn bench_broadcast(
+    comm: &CommManager,
+    mailboxes: &[rlinf::comm::Mailbox],
+    dsts: &[&str],
+    payload: &Payload,
+    reps: usize,
+    sequential: bool,
+) -> f64 {
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        if sequential {
+            for d in dsts {
+                comm.send("a", d, payload.clone()).unwrap();
+            }
+        } else {
+            comm.broadcast("a", dsts, payload).unwrap();
+        }
+        for mb in mailboxes {
+            mb.recv().unwrap();
+        }
+    }
+    (reps * dsts.len()) as f64 / t0.elapsed().as_secs_f64()
+}
 
 fn main() -> anyhow::Result<()> {
     let cluster = Cluster::new(ClusterConfig {
         nodes: 2,
-        devices_per_node: 2,
+        devices_per_node: 8,
         internode_latency: 25e-6,
         ..Default::default()
     });
@@ -27,15 +321,16 @@ fn main() -> anyhow::Result<()> {
     let _a = comm.register("a", DeviceSet::range(0, 1))?;
     let b = comm.register("b", DeviceSet::range(0, 2))?;
     let c = comm.register("c", DeviceSet::range(1, 1))?;
-    let d = comm.register("d", DeviceSet::range(2, 1))?;
+    let d = comm.register("d", DeviceSet::range(8, 1))?;
 
+    // --- Part 1: backend latency/bandwidth sweep (unchanged shape) ---
     let mut rows = Vec::new();
     for kib in [4usize, 64, 1024, 16 * 1024] {
         let n = kib * 1024 / 4;
         let t = Tensor::from_f32(vec![n], &vec![1.0f32; n])?;
         for (dst, mailbox, label) in [("b", &b, "intraproc"), ("c", &c, "shm"), ("d", &d, "sock")] {
             let reps = 30;
-            let t0 = std::time::Instant::now();
+            let t0 = Instant::now();
             for _ in 0..reps {
                 let p = Payload::from_named(vec![("x", t.clone())]);
                 comm.send("a", dst, p)?;
@@ -53,5 +348,97 @@ fn main() -> anyhow::Result<()> {
     }
     common::report("comm_backends", &["payload", "backend", "latency", "bandwidth"], rows);
     println!("\nshape: intraproc flat in size (Arc move); shm memcpy-bound; sock adds ~25µs.");
+
+    // --- Part 2: data-plane before/after ---
+    println!("\nrunning data-plane throughput comparison (legacy = seed design)...");
+    let spsc = (spsc_legacy(), spsc_current());
+    let mpmc = (mpmc_legacy(), mpmc_current());
+    let balanced = (balanced_legacy(), balanced_current());
+    let send_small = bench_send(&comm, &c, "c", 20_000);
+    let send_sock = bench_send(&comm, &d, "d", 2_000);
+
+    // Broadcast fan-out: 6 shm destinations, 256 KiB payload.
+    let fan: Vec<String> = (0..6).map(|i| format!("r{i}")).collect();
+    let fan_refs: Vec<&str> = fan.iter().map(String::as_str).collect();
+    let fan_boxes: Vec<_> = fan
+        .iter()
+        .enumerate()
+        .map(|(i, name)| comm.register(name, DeviceSet::range(2 + i, 1)).unwrap())
+        .collect();
+    let n = 256 * 1024 / 4;
+    let big = Payload::from_named(vec![("w", Tensor::from_f32(vec![n], &vec![0.5f32; n])?)]);
+    let bcast_seq = bench_broadcast(&comm, &fan_boxes, &fan_refs, &big, 50, true);
+    let bcast_fan = bench_broadcast(&comm, &fan_boxes, &fan_refs, &big, 50, false);
+
+    let ratio = |pair: (f64, f64)| pair.1 / pair.0.max(1e-9);
+    let rows = vec![
+        vec![
+            "channel spsc".into(),
+            fmt::count(spsc.0),
+            fmt::count(spsc.1),
+            format!("{:.2}x", ratio(spsc)),
+        ],
+        vec![
+            format!("channel mpmc {MPMC_THREADS}x{MPMC_THREADS}"),
+            fmt::count(mpmc.0),
+            fmt::count(mpmc.1),
+            format!("{:.2}x", ratio(mpmc)),
+        ],
+        vec![
+            "balanced dequeue".into(),
+            fmt::count(balanced.0),
+            fmt::count(balanced.1),
+            format!("{:.2}x", ratio(balanced)),
+        ],
+        vec![
+            "broadcast fan-out".into(),
+            fmt::count(bcast_seq),
+            fmt::count(bcast_fan),
+            format!("{:.2}x", bcast_fan / bcast_seq.max(1e-9)),
+        ],
+    ];
+    common::report(
+        "dataplane",
+        &["path", "legacy (items/s)", "current (items/s)", "speedup"],
+        rows,
+    );
+    println!("p2p send: shm {}/s, sock {}/s", fmt::count(send_small), fmt::count(send_sock));
+
+    // Raw numbers for trend tracking across PRs.
+    let mut out = Value::obj();
+    out.set("bench", "dataplane");
+    let section = |name: &str, legacy: f64, current: f64| {
+        let mut e = Value::obj();
+        e.set("legacy_per_sec", legacy).set("current_per_sec", current).set(
+            "speedup",
+            current / legacy.max(1e-9),
+        );
+        (name.to_string(), e)
+    };
+    let mut paths = Value::obj();
+    for (k, v) in [
+        section("channel_spsc", spsc.0, spsc.1),
+        section("channel_mpmc", mpmc.0, mpmc.1),
+        section("balanced_dequeue", balanced.0, balanced.1),
+        section("broadcast_fanout", bcast_seq, bcast_fan),
+    ] {
+        paths.set(&k, v);
+    }
+    out.set("paths", paths);
+    let mut send = Value::obj();
+    send.set("shm_msgs_per_sec", send_small).set("sock_msgs_per_sec", send_sock);
+    out.set("send", send);
+    out.set("config", {
+        let mut cfg = Value::obj();
+        cfg.set("spsc_items", SPSC_ITEMS)
+            .set("mpmc_threads", MPMC_THREADS)
+            .set("mpmc_items_per_producer", MPMC_ITEMS_PER_PRODUCER)
+            .set("balanced_items", BALANCED_ITEMS)
+            .set("broadcast_fanout", fan.len())
+            .set("broadcast_payload_kib", 256usize);
+        cfg
+    });
+    std::fs::write("BENCH_dataplane.json", out.to_json_pretty())?;
+    println!("(saved BENCH_dataplane.json)");
     Ok(())
 }

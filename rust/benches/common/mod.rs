@@ -39,6 +39,7 @@ pub fn report(name: &str, headers: &[&str], rows: Vec<Vec<String>>) {
 }
 
 /// Artifacts present? (benches no-op cleanly in artifact-less environments)
+#[allow(dead_code)]
 pub fn artifacts() -> Option<String> {
     let dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
     std::path::Path::new(&dir).join("manifest.json").exists().then_some(dir)

@@ -17,4 +17,4 @@ pub mod device_lock;
 pub mod queue;
 
 pub use device_lock::DeviceLockMgr;
-pub use queue::{Channel, ChannelRegistry, Item};
+pub use queue::{Channel, ChannelRegistry, Item, ItemsView};

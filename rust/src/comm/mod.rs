@@ -15,6 +15,11 @@
 //! once; `Sock` deep-copies and pays the configured inter-node latency.
 //! Connections are established lazily on first send and torn down when an
 //! endpoint unregisters (the connection-manager protocol of §3.5).
+//!
+//! Backend + sender resolution is cached per (src, dst) pair, so the
+//! steady-state `send` path performs no endpoint-map locking and no heap
+//! allocation; broadcasts deep-copy once and Arc-share the staged buffers
+//! across all memcpy-backed destinations. See `docs/data-plane.md`.
 
 pub mod p2p;
 

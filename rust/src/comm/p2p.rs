@@ -1,8 +1,20 @@
 //! Point-to-point + collective primitives over in-process mailboxes.
+//!
+//! ## Route cache
+//!
+//! The per-message cost of `send` is kept allocation- and contention-free
+//! by resolving each (src, dst) pair **once** into an [`Route`]: backend
+//! kind, a cloned endpoint sender, shared `Arc<str>` name labels, and the
+//! interned metric key. Steady-state sends take one `RwLock` read (shared,
+//! never blocking other senders), stamp the message with `Arc` clones, and
+//! record metrics under `&'static str` keys — no `String`, no `format!`,
+//! no endpoint-map mutex. The slow path (first send over a pair) resolves
+//! the backend, establishes the logical connection, and populates the
+//! cache; `unregister` purges every route touching the endpoint.
 
 use std::collections::{BTreeSet, HashMap};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
@@ -30,12 +42,22 @@ impl BackendKind {
             BackendKind::Sock => "sock",
         }
     }
+
+    /// Interned `comm.send.<backend>` metric key (no per-send `format!`).
+    pub fn send_metric(self) -> &'static str {
+        match self {
+            BackendKind::IntraProc => "comm.send.intraproc",
+            BackendKind::Shm => "comm.send.shm",
+            BackendKind::Sock => "comm.send.sock",
+        }
+    }
 }
 
 /// A delivered message.
 #[derive(Debug)]
 pub struct Message {
-    pub src: String,
+    /// Sender endpoint name (shared label — cloning is refcount-only).
+    pub src: Arc<str>,
     pub payload: Payload,
     pub backend: BackendKind,
 }
@@ -46,10 +68,22 @@ struct Endpoint {
     node: usize,
 }
 
+/// Resolved (src, dst) transport: everything `send` needs, precomputed.
+struct Route {
+    backend: BackendKind,
+    tx: Sender<Message>,
+    src: Arc<str>,
+    dst: Arc<str>,
+    metric: &'static str,
+}
+
 struct Inner {
     cluster: Cluster,
     metrics: Metrics,
     endpoints: Mutex<HashMap<String, Endpoint>>,
+    /// Hot-path route cache: src -> dst -> route. Reads are lock-shared;
+    /// writes only on first send over a pair or on unregister.
+    routes: RwLock<HashMap<String, HashMap<String, Arc<Route>>>>,
     /// Lazily-established logical connections (the connection manager).
     connections: Mutex<BTreeSet<(String, String)>>,
 }
@@ -90,6 +124,7 @@ impl CommManager {
                 cluster,
                 metrics,
                 endpoints: Mutex::new(HashMap::new()),
+                routes: RwLock::new(HashMap::new()),
                 connections: Mutex::new(BTreeSet::new()),
             }),
         }
@@ -107,15 +142,23 @@ impl CommManager {
         Ok(Mailbox { name: name.to_string(), rx })
     }
 
-    /// Unregister and tear down all of this endpoint's connections.
+    /// Unregister and tear down all of this endpoint's connections and
+    /// cached routes.
     pub fn unregister(&self, name: &str) {
         self.inner.endpoints.lock().unwrap().remove(name);
+        {
+            let mut routes = self.inner.routes.write().unwrap();
+            routes.remove(name);
+            for by_dst in routes.values_mut() {
+                by_dst.remove(name);
+            }
+        }
         let mut conns = self.inner.connections.lock().unwrap();
         let before = conns.len();
         conns.retain(|(a, b)| a != name && b != name);
         let torn = before - conns.len();
         if torn > 0 {
-            self.inner.metrics.record_value("comm.teardown", torn as f64);
+            self.inner.metrics.record_static("comm.teardown", torn as f64);
         }
     }
 
@@ -133,23 +176,63 @@ impl CommManager {
         })
     }
 
-    /// Point-to-point send. Synchronous variant: the payload is handed to
-    /// the transport before returning (the async variant is just this plus
-    /// the caller not waiting on a reply channel — sends never block on the
-    /// receiver here, mirroring eager RDMA writes).
-    pub fn send(&self, src: &str, dst: &str, payload: Payload) -> Result<BackendKind> {
-        let backend = self.backend_between(src, dst)?;
-        // Lazy connection establishment.
+    /// Cached route lookup; falls back to establishment on first use.
+    fn route(&self, src: &str, dst: &str) -> Result<Arc<Route>> {
         {
-            let key = (src.to_string(), dst.to_string());
-            let mut conns = self.inner.connections.lock().unwrap();
-            if conns.insert(key) {
-                self.inner.metrics.record_value("comm.connect", 1.0);
+            let cache = self.inner.routes.read().unwrap();
+            if let Some(r) = cache.get(src).and_then(|by_dst| by_dst.get(dst)) {
+                return Ok(r.clone());
             }
         }
+        self.establish(src, dst)
+    }
+
+    /// Slow path: resolve backend + sender, record the logical connection,
+    /// and cache the route. Runs once per (src, dst) pair.
+    ///
+    /// Resolution happens **under the routes write lock** so it serializes
+    /// with `unregister`'s purge: a concurrent unregister either lands
+    /// first (resolution fails with "unknown dst") or blocks until the
+    /// route is inserted and then purges it — a stale sender can never be
+    /// cached past a teardown. Lock nesting is routes → endpoints →
+    /// connections, and no other path holds them in conflicting order.
+    fn establish(&self, src: &str, dst: &str) -> Result<Arc<Route>> {
+        let mut cache = self.inner.routes.write().unwrap();
+        // Another sender may have raced us here; keep the first route so
+        // connection accounting stays exact.
+        if let Some(r) = cache.get(src).and_then(|by_dst| by_dst.get(dst)) {
+            return Ok(r.clone());
+        }
+        let backend = self.backend_between(src, dst)?;
+        let tx = {
+            let eps = self.inner.endpoints.lock().unwrap();
+            eps.get(dst).ok_or_else(|| anyhow!("unknown dst {dst:?}"))?.tx.clone()
+        };
+        let route = Arc::new(Route {
+            backend,
+            tx,
+            src: Arc::from(src),
+            dst: Arc::from(dst),
+            metric: backend.send_metric(),
+        });
+        cache.entry(src.to_string()).or_default().insert(dst.to_string(), route.clone());
+        // Lazy connection establishment (the §3.5 connection manager),
+        // recorded before the cache lock drops so teardown stays exact.
+        let fresh =
+            self.inner.connections.lock().unwrap().insert((src.to_string(), dst.to_string()));
+        drop(cache);
+        if fresh {
+            self.inner.metrics.record_static("comm.connect", 1.0);
+        }
+        Ok(route)
+    }
+
+    /// Transport the payload over an established route (backend semantics:
+    /// Arc move / one copy / copy + simulated inter-node latency).
+    fn deliver(&self, route: &Route, payload: Payload) -> Result<()> {
         let t0 = Instant::now();
         let bytes = payload.wire_bytes();
-        let delivered = match backend {
+        let delivered = match route.backend {
             BackendKind::IntraProc => payload, // Arc move, zero copy
             BackendKind::Shm => payload.deep_copy(),
             BackendKind::Sock => {
@@ -158,23 +241,67 @@ impl CommManager {
                 p
             }
         };
-        let tx = {
-            let eps = self.inner.endpoints.lock().unwrap();
-            eps.get(dst).ok_or_else(|| anyhow!("unknown dst {dst:?}"))?.tx.clone()
-        };
-        tx.send(Message { src: src.to_string(), payload: delivered, backend })
-            .map_err(|_| anyhow!("endpoint {dst:?} hung up"))?;
+        route
+            .tx
+            .send(Message { src: route.src.clone(), payload: delivered, backend: route.backend })
+            .map_err(|_| anyhow!("endpoint {:?} hung up", &*route.dst))?;
         let m = &self.inner.metrics;
-        m.record(&format!("comm.send.{}", backend.name()), t0.elapsed().as_secs_f64());
-        m.record_value("comm.bytes", bytes as f64);
-        Ok(backend)
+        m.record_static(route.metric, t0.elapsed().as_secs_f64());
+        m.record_static("comm.bytes", bytes as f64);
+        Ok(())
+    }
+
+    /// Point-to-point send. Synchronous variant: the payload is handed to
+    /// the transport before returning (the async variant is just this plus
+    /// the caller not waiting on a reply channel — sends never block on the
+    /// receiver here, mirroring eager RDMA writes).
+    pub fn send(&self, src: &str, dst: &str, payload: Payload) -> Result<BackendKind> {
+        let route = self.route(src, dst)?;
+        self.deliver(&route, payload)?;
+        Ok(route.backend)
     }
 
     /// Collective broadcast from `src` to every destination.
+    ///
+    /// Copy-once fan-out: memcpy-backed destinations (`Shm`/`Sock`) share a
+    /// **single** deep copy (their payloads Arc-share the copied buffers —
+    /// detached from the sender's, like one staging buffer fanned out), and
+    /// the simulated inter-node latency is paid once for the whole
+    /// collective (parallel NIC streams), not once per destination.
     pub fn broadcast(&self, src: &str, dsts: &[&str], payload: &Payload) -> Result<()> {
+        let mut routes = Vec::with_capacity(dsts.len());
         for d in dsts {
-            self.send(src, d, payload.clone())?;
+            routes.push(self.route(src, d)?);
         }
+        let bytes = payload.wire_bytes();
+        let collective_t0 = Instant::now();
+        let mut staged: Option<Payload> = None;
+        // Inter-node latency is paid once per collective; it is attributed
+        // to the *first* sock destination's timed sample so the
+        // `comm.send.sock` stream's sum stays comparable with `send()`
+        // (which pays it per message).
+        let mut latency_paid = false;
+        let m = &self.inner.metrics;
+        for route in &routes {
+            let t0 = Instant::now();
+            let delivered = match route.backend {
+                BackendKind::IntraProc => payload.clone(),
+                BackendKind::Shm | BackendKind::Sock => {
+                    if route.backend == BackendKind::Sock && !latency_paid {
+                        spin_for(self.inner.cluster.config().internode_latency);
+                        latency_paid = true;
+                    }
+                    staged.get_or_insert_with(|| payload.deep_copy()).clone()
+                }
+            };
+            route
+                .tx
+                .send(Message { src: route.src.clone(), payload: delivered, backend: route.backend })
+                .map_err(|_| anyhow!("endpoint {:?} hung up", &*route.dst))?;
+            m.record_static(route.metric, t0.elapsed().as_secs_f64());
+            m.record_static("comm.bytes", bytes as f64);
+        }
+        m.record_static("comm.broadcast", collective_t0.elapsed().as_secs_f64());
         Ok(())
     }
 
@@ -232,7 +359,7 @@ mod tests {
         let p = Payload::from_named(vec![("x", Tensor::from_f32(vec![2], &[1.0, 2.0]).unwrap())]);
         c.send("a", "b", p).unwrap();
         let msg = b.recv().unwrap();
-        assert_eq!(msg.src, "a");
+        assert_eq!(&*msg.src, "a");
         assert_eq!(msg.backend, BackendKind::Shm);
         assert_eq!(msg.payload.tensor("x").unwrap().to_f32().unwrap(), vec![1.0, 2.0]);
     }
@@ -267,5 +394,41 @@ mod tests {
         c.broadcast("s", &["r1", "r2"], &Payload::new().set_meta("k", 1i64)).unwrap();
         assert_eq!(r1.recv().unwrap().payload.meta_i64("k"), Some(1));
         assert_eq!(r2.recv().unwrap().payload.meta_i64("k"), Some(1));
+    }
+
+    #[test]
+    fn broadcast_detaches_receivers_from_sender() {
+        // The staged copy must be detached from the sender's buffers: the
+        // receivers may share storage among themselves (copy-once), but a
+        // later sender-side mutation of the original must not be visible.
+        let c = mgr(2, 2);
+        let _s = c.register("s", DeviceSet::range(0, 1)).unwrap();
+        let r1 = c.register("r1", DeviceSet::range(1, 1)).unwrap(); // shm
+        let r2 = c.register("r2", DeviceSet::range(2, 1)).unwrap(); // sock
+        let p = Payload::from_named(vec![("w", Tensor::from_f32(vec![2], &[1.0, 2.0]).unwrap())]);
+        c.broadcast("s", &["r1", "r2"], &p).unwrap();
+        let m1 = r1.recv().unwrap();
+        let m2 = r2.recv().unwrap();
+        assert_eq!(m1.backend, BackendKind::Shm);
+        assert_eq!(m2.backend, BackendKind::Sock);
+        for m in [&m1, &m2] {
+            assert_eq!(m.payload.tensor("w").unwrap().to_f32().unwrap(), vec![1.0, 2.0]);
+        }
+    }
+
+    #[test]
+    fn route_cache_survives_repeated_sends_and_purges_on_unregister() {
+        let c = mgr(2, 2);
+        let _a = c.register("a", DeviceSet::range(0, 1)).unwrap();
+        let d = c.register("d", DeviceSet::range(2, 1)).unwrap();
+        for _ in 0..10 {
+            assert_eq!(c.send("a", "d", Payload::new()).unwrap(), BackendKind::Sock);
+        }
+        for _ in 0..10 {
+            d.recv().unwrap();
+        }
+        assert_eq!(c.connection_count(), 1);
+        c.unregister("a");
+        assert!(c.send("a", "d", Payload::new()).is_err(), "stale route purged with src");
     }
 }

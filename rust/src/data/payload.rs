@@ -86,8 +86,10 @@ impl Payload {
     }
 
     /// Total tensor bytes (what a transport would put on the wire).
+    /// Allocation-free: the metadata size comes from a counting serializer
+    /// ([`Value::encoded_len`]), not from rendering the JSON string.
     pub fn wire_bytes(&self) -> usize {
-        self.tensors.iter().map(Tensor::byte_len).sum::<usize>() + self.meta.to_json().len()
+        self.tensors.iter().map(Tensor::byte_len).sum::<usize>() + self.meta.encoded_len()
     }
 
     /// Deep copy (memcpy transports); `clone()` shares tensor storage.
@@ -141,6 +143,14 @@ mod tests {
         let p2 = p.set_meta("batch", 3i64);
         assert_eq!(p2.batch_size(), 3);
         assert_eq!(Payload::new().batch_size(), 1);
+    }
+
+    #[test]
+    fn wire_bytes_counts_tensors_and_meta() {
+        let p = Payload::from_named(vec![("x", Tensor::from_f32(vec![3], &[1.0, 2.0, 3.0]).unwrap())])
+            .set_meta("iter", 7i64)
+            .set_meta("tag", "a\"b");
+        assert_eq!(p.wire_bytes(), 12 + p.meta.to_json().len());
     }
 
     #[test]

@@ -140,7 +140,8 @@ impl Tensor {
         let first = parts.first().ok_or_else(|| anyhow::anyhow!("concat0 of nothing"))?;
         let mut rows = 0usize;
         let tail: Vec<usize> = first.shape.iter().skip(1).copied().collect();
-        let mut bytes = Vec::new();
+        let total: usize = parts.iter().map(Tensor::byte_len).sum();
+        let mut bytes = Vec::with_capacity(total);
         for p in parts {
             if p.dtype != first.dtype || p.shape.len() != first.shape.len()
                 || p.shape[1..] != first.shape[1..]
@@ -216,6 +217,27 @@ mod tests {
         assert_eq!(s.to_i32().unwrap(), vec![4, 5, 6, 7, 8, 9]);
         let back = c.slice0(0, 2).unwrap();
         assert_eq!(back.to_i32().unwrap(), a.to_i32().unwrap());
+    }
+
+    #[test]
+    fn concat0_preallocates_exactly() {
+        let a = Tensor::from_f32(vec![2, 4], &[0.0; 8]).unwrap();
+        let b = Tensor::from_f32(vec![3, 4], &[1.0; 12]).unwrap();
+        let c = Tensor::concat0(&[a, b]).unwrap();
+        assert_eq!(c.shape, vec![5, 4]);
+        assert_eq!(c.byte_len(), 80);
+        // with_capacity(total) + exactly-total extends: no growth, no slack.
+        assert_eq!(c.data.capacity(), c.data.len());
+    }
+
+    #[test]
+    fn to_vec_reserves_exactly() {
+        let t = Tensor::from_f32(vec![16], &[0.5; 16]).unwrap();
+        let v = t.to_f32().unwrap();
+        assert_eq!(v.capacity(), v.len());
+        let i = Tensor::from_i32(vec![16], &[3; 16]).unwrap();
+        let vi = i.to_i32().unwrap();
+        assert_eq!(vi.capacity(), vi.len());
     }
 
     #[test]

@@ -4,13 +4,31 @@
 //! worker function invoked remotely, reducible across ranks (mean/max/min),
 //! and lets developers add custom timers for finer regions. Both feed the
 //! profiling-guided scheduler and the Figure 11–13 latency breakdowns.
+//!
+//! ## Hot-path design
+//!
+//! `record` sits in the rollout/train inner loops, so the registry is
+//! **sharded**: names are hashed onto `SHARDS` independent stripes, each a
+//! small `Mutex<HashMap>`. Two workers recording different metrics almost
+//! never touch the same lock, and the critical section is a hash lookup
+//! plus four float ops. Keys are stored as `Cow<'static, str>`: lookups
+//! borrow the caller's `&str` (no allocation), an owned copy is made only
+//! the first time a key is seen, and [`Metrics::record_static`] never
+//! allocates at all. Readers (`snapshot`, `breakdown`, ...) merge the
+//! stripes on demand — reads are rare, writes are the hot path.
 
+use std::borrow::Cow;
 use std::collections::BTreeMap;
+use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::util::json::Value;
 use crate::util::stats::Stream;
+
+/// Number of lock stripes. Small power of two: enough to make same-lock
+/// collisions between distinct hot metric names unlikely, cheap to merge.
+const SHARDS: usize = 16;
 
 /// Reduction applied across worker ranks / repeated calls.
 #[derive(Debug, Clone, Copy)]
@@ -22,9 +40,20 @@ pub enum Reduce {
 }
 
 /// Thread-safe metrics registry shared by all workers of a run.
-#[derive(Clone, Default)]
+#[derive(Clone)]
 pub struct Metrics {
-    inner: Arc<Mutex<BTreeMap<String, Stream>>>,
+    shards: Arc<[Mutex<HashMap<Cow<'static, str>, Stream>>; SHARDS]>,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics { shards: Arc::new(std::array::from_fn(|_| Mutex::new(HashMap::new()))) }
+    }
+}
+
+/// FNV-1a; names are short, and we only need stable dispersion over stripes.
+fn shard_of(name: &str) -> usize {
+    (crate::util::fnv1a(name) as usize) % SHARDS
 }
 
 impl Metrics {
@@ -32,10 +61,30 @@ impl Metrics {
         Metrics::default()
     }
 
-    /// Record a duration (seconds) under `name`.
+    /// Record a duration (seconds) under `name`. Allocation-free once the
+    /// key exists (borrowed `&str` lookup into the stripe's map).
     pub fn record(&self, name: &str, secs: f64) {
-        let mut m = self.inner.lock().unwrap();
-        m.entry(name.to_string()).or_insert_with(Stream::new).add(secs);
+        let mut m = self.shards[shard_of(name)].lock().unwrap();
+        if let Some(s) = m.get_mut(name) {
+            s.add(secs);
+            return;
+        }
+        let mut s = Stream::new();
+        s.add(secs);
+        m.insert(Cow::Owned(name.to_string()), s);
+    }
+
+    /// Like [`Metrics::record`] for interned `&'static str` keys: never
+    /// allocates, not even on first insertion. Use on per-message paths.
+    pub fn record_static(&self, name: &'static str, secs: f64) {
+        let mut m = self.shards[shard_of(name)].lock().unwrap();
+        if let Some(s) = m.get_mut(name) {
+            s.add(secs);
+            return;
+        }
+        let mut s = Stream::new();
+        s.add(secs);
+        m.insert(Cow::Borrowed(name), s);
     }
 
     /// Record an arbitrary scalar sample (loss, reward, bytes...).
@@ -51,15 +100,18 @@ impl Metrics {
         out
     }
 
-    /// RAII-style scope timer.
-    pub fn scope(&self, name: &str) -> ScopeTimer {
-        ScopeTimer { metrics: self.clone(), name: name.to_string(), start: Instant::now() }
+    /// RAII-style scope timer (borrows the name: no allocation).
+    pub fn scope<'a>(&'a self, name: &'a str) -> ScopeTimer<'a> {
+        ScopeTimer { metrics: self, name, start: Instant::now() }
+    }
+
+    fn lookup<T>(&self, name: &str, f: impl FnOnce(&Stream) -> T) -> Option<T> {
+        let m = self.shards[shard_of(name)].lock().unwrap();
+        m.get(name).map(f)
     }
 
     pub fn get(&self, name: &str, r: Reduce) -> Option<f64> {
-        let m = self.inner.lock().unwrap();
-        let s = m.get(name)?;
-        Some(match r {
+        self.lookup(name, |s| match r {
             Reduce::Mean => s.mean(),
             Reduce::Max => s.max,
             Reduce::Min => s.min,
@@ -68,25 +120,38 @@ impl Metrics {
     }
 
     pub fn count(&self, name: &str) -> u64 {
-        self.inner.lock().unwrap().get(name).map(|s| s.n).unwrap_or(0)
+        self.lookup(name, |s| s.n).unwrap_or(0)
+    }
+
+    /// Merged, name-sorted view of every stripe (reads are rare).
+    fn merged(&self) -> BTreeMap<String, Stream> {
+        let mut out = BTreeMap::new();
+        for shard in self.shards.iter() {
+            let m = shard.lock().unwrap();
+            for (k, s) in m.iter() {
+                out.insert(k.to_string(), s.clone());
+            }
+        }
+        out
     }
 
     pub fn names(&self) -> Vec<String> {
-        self.inner.lock().unwrap().keys().cloned().collect()
+        self.merged().into_keys().collect()
     }
 
     pub fn reset(&self) {
-        self.inner.lock().unwrap().clear();
+        for shard in self.shards.iter() {
+            shard.lock().unwrap().clear();
+        }
     }
 
     /// Snapshot as a JSON tree (EXPERIMENTS.md dumps).
     pub fn snapshot(&self) -> Value {
-        let m = self.inner.lock().unwrap();
         let mut out = Value::obj();
-        for (k, s) in m.iter() {
+        for (k, s) in self.merged() {
             let mut e = Value::obj();
             e.set("n", s.n).set("mean", s.mean()).set("sum", s.sum).set("min", s.min).set("max", s.max);
-            out.set(k, e);
+            out.set(&k, e);
         }
         out
     }
@@ -94,10 +159,9 @@ impl Metrics {
     /// Phase breakdown: total seconds per top-level phase prefix
     /// (`"rollout.generate" -> "rollout"`), as used by Figures 11–13.
     pub fn breakdown(&self) -> Vec<(String, f64)> {
-        let m = self.inner.lock().unwrap();
         let mut agg: BTreeMap<String, f64> = BTreeMap::new();
-        for (k, s) in m.iter() {
-            let phase = k.split('.').next().unwrap_or(k).to_string();
+        for (k, s) in self.merged() {
+            let phase = k.split('.').next().unwrap_or(&k).to_string();
             *agg.entry(phase).or_insert(0.0) += s.sum;
         }
         let mut v: Vec<_> = agg.into_iter().collect();
@@ -106,15 +170,15 @@ impl Metrics {
     }
 }
 
-pub struct ScopeTimer {
-    metrics: Metrics,
-    name: String,
+pub struct ScopeTimer<'a> {
+    metrics: &'a Metrics,
+    name: &'a str,
     start: Instant,
 }
 
-impl Drop for ScopeTimer {
+impl Drop for ScopeTimer<'_> {
     fn drop(&mut self) {
-        self.metrics.record(&self.name, self.start.elapsed().as_secs_f64());
+        self.metrics.record(self.name, self.start.elapsed().as_secs_f64());
     }
 }
 
@@ -132,6 +196,16 @@ mod tests {
         assert_eq!(m.get("x", Reduce::Sum), Some(4.0));
         assert_eq!(m.count("x"), 2);
         assert_eq!(m.get("y", Reduce::Mean), None);
+    }
+
+    #[test]
+    fn static_and_owned_keys_share_a_stream() {
+        let m = Metrics::new();
+        m.record_static("comm.bytes", 1.0);
+        let dynamic = String::from("comm.bytes");
+        m.record(&dynamic, 3.0);
+        assert_eq!(m.count("comm.bytes"), 2);
+        assert_eq!(m.get("comm.bytes", Reduce::Sum), Some(4.0));
     }
 
     #[test]
@@ -162,5 +236,39 @@ mod tests {
         let v = m.snapshot();
         assert_eq!(v.get_path("a.b").is_some(), false); // flat keys, not nested
         assert!(v.get("a.b").is_some());
+    }
+
+    #[test]
+    fn sharded_names_all_visible() {
+        let m = Metrics::new();
+        let keys: Vec<String> = (0..64).map(|i| format!("k{i}")).collect();
+        for k in &keys {
+            m.record(k, 1.0);
+        }
+        assert_eq!(m.names().len(), 64, "every stripe merged into the view");
+        m.reset();
+        assert!(m.names().is_empty());
+    }
+
+    #[test]
+    fn concurrent_records_are_lossless() {
+        let m = Metrics::new();
+        let threads: Vec<_> = (0..8)
+            .map(|t| {
+                let m = m.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        m.record("shared", 1.0);
+                        m.record(["a", "b", "c", "d", "e", "f", "g", "h"][t], 1.0);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(m.count("shared"), 8000);
+        assert_eq!(m.get("shared", Reduce::Sum), Some(8000.0));
+        assert_eq!(m.count("a"), 1000);
     }
 }

@@ -6,7 +6,7 @@
 //! BMP; numbers are kept as `f64`/`i64`.
 
 use std::collections::BTreeMap;
-use std::fmt::Write as _;
+use std::fmt;
 
 use anyhow::{bail, Result};
 
@@ -103,8 +103,17 @@ impl Value {
     /// Serialize compactly.
     pub fn to_json(&self) -> String {
         let mut s = String::new();
-        self.write_json(&mut s);
+        let _ = self.write_json(&mut s);
         s
+    }
+
+    /// Byte length of [`Value::to_json`] computed without allocating —
+    /// the serializer runs against a counting sink instead of a `String`,
+    /// so size probes on hot paths (e.g. `Payload::wire_bytes`) are free.
+    pub fn encoded_len(&self) -> usize {
+        let mut c = ByteCounter(0);
+        let _ = self.write_json(&mut c);
+        c.0
     }
 
     /// Serialize with 1-space indentation (diff-friendly dumps).
@@ -114,36 +123,34 @@ impl Value {
         s
     }
 
-    fn write_json(&self, out: &mut String) {
+    fn write_json<W: fmt::Write>(&self, out: &mut W) -> fmt::Result {
         match self {
-            Value::Null => out.push_str("null"),
-            Value::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
-            Value::Int(i) => {
-                let _ = write!(out, "{i}");
-            }
+            Value::Null => out.write_str("null"),
+            Value::Bool(b) => out.write_str(if *b { "true" } else { "false" }),
+            Value::Int(i) => write!(out, "{i}"),
             Value::Float(f) => write_f64(out, *f),
             Value::Str(s) => write_escaped(out, s),
             Value::Arr(a) => {
-                out.push('[');
+                out.write_char('[')?;
                 for (i, v) in a.iter().enumerate() {
                     if i > 0 {
-                        out.push(',');
+                        out.write_char(',')?;
                     }
-                    v.write_json(out);
+                    v.write_json(out)?;
                 }
-                out.push(']');
+                out.write_char(']')
             }
             Value::Obj(m) => {
-                out.push('{');
+                out.write_char('{')?;
                 for (i, (k, v)) in m.iter().enumerate() {
                     if i > 0 {
-                        out.push(',');
+                        out.write_char(',')?;
                     }
-                    write_escaped(out, k);
-                    out.push(':');
-                    v.write_json(out);
+                    write_escaped(out, k)?;
+                    out.write_char(':')?;
+                    v.write_json(out)?;
                 }
-                out.push('}');
+                out.write_char('}')
             }
         }
     }
@@ -176,7 +183,7 @@ impl Value {
                     for _ in 0..=depth {
                         out.push(' ');
                     }
-                    write_escaped(out, k);
+                    let _ = write_escaped(out, k);
                     out.push_str(": ");
                     v.write_pretty(out, depth + 1);
                 }
@@ -186,8 +193,25 @@ impl Value {
                 }
                 out.push('}');
             }
-            _ => self.write_json(out),
+            _ => {
+                let _ = self.write_json(out);
+            }
         }
+    }
+}
+
+/// `fmt::Write` sink that only counts bytes (no heap allocation).
+struct ByteCounter(usize);
+
+impl fmt::Write for ByteCounter {
+    fn write_str(&mut self, s: &str) -> fmt::Result {
+        self.0 += s.len();
+        Ok(())
+    }
+
+    fn write_char(&mut self, c: char) -> fmt::Result {
+        self.0 += c.len_utf8();
+        Ok(())
     }
 }
 
@@ -237,33 +261,31 @@ impl<T: Into<Value>> From<Vec<T>> for Value {
     }
 }
 
-fn write_f64(out: &mut String, f: f64) {
+fn write_f64<W: fmt::Write>(out: &mut W, f: f64) -> fmt::Result {
     if f.is_finite() {
-        let _ = write!(out, "{f}");
-        if f.fract() == 0.0 && !out.ends_with(|c: char| c == '.' || c == 'e' || c == '0') {
-            // `{f}` already prints e.g. "3" for 3.0; keep it (valid JSON).
-        }
+        // `{f}` already prints e.g. "3" for 3.0; keep it (valid JSON).
+        write!(out, "{f}")
     } else {
-        out.push_str("null"); // JSON has no inf/nan
+        out.write_str("null") // JSON has no inf/nan
     }
 }
 
-fn write_escaped(out: &mut String, s: &str) {
-    out.push('"');
+fn write_escaped<W: fmt::Write>(out: &mut W, s: &str) -> fmt::Result {
+    out.write_char('"')?;
     for c in s.chars() {
         match c {
-            '"' => out.push_str("\\\""),
-            '\\' => out.push_str("\\\\"),
-            '\n' => out.push_str("\\n"),
-            '\r' => out.push_str("\\r"),
-            '\t' => out.push_str("\\t"),
+            '"' => out.write_str("\\\"")?,
+            '\\' => out.write_str("\\\\")?,
+            '\n' => out.write_str("\\n")?,
+            '\r' => out.write_str("\\r")?,
+            '\t' => out.write_str("\\t")?,
             c if (c as u32) < 0x20 => {
-                let _ = write!(out, "\\u{:04x}", c as u32);
+                write!(out, "\\u{:04x}", c as u32)?;
             }
-            c => out.push(c),
+            c => out.write_char(c)?,
         }
     }
-    out.push('"');
+    out.write_char('"')
 }
 
 /// Parse a JSON document.
@@ -488,6 +510,25 @@ mod tests {
     fn unicode_escapes() {
         let v = parse(r#""Aé""#).unwrap();
         assert_eq!(v.as_str(), Some("Aé"));
+    }
+
+    #[test]
+    fn encoded_len_matches_serialization() {
+        let docs = [
+            "null",
+            "true",
+            "-12",
+            "3.5",
+            r#""a\"b\nc""#,
+            r#"{"a": [1, 2.5, {"b": "x"}], "c": null, "u": "Aé"}"#,
+            "[]",
+            "{}",
+            "[[], {}, 9007199254740993]",
+        ];
+        for src in docs {
+            let v = parse(src).unwrap();
+            assert_eq!(v.encoded_len(), v.to_json().len(), "{src}");
+        }
     }
 
     #[test]

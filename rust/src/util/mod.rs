@@ -10,3 +10,15 @@ pub mod json;
 pub mod prng;
 pub mod proptest_mini;
 pub mod stats;
+
+/// FNV-1a over a short string — the shared stripe-selection hash for the
+/// sharded metrics registry and the channel's stat shards. Stable and
+/// dependency-free; callers take `fnv1a(name) % SHARDS`.
+pub fn fnv1a(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}

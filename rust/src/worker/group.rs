@@ -72,6 +72,7 @@ impl WorkerGroup {
             let mailbox = services.comm.register(&endpoint, devices.clone())?;
             let ctx = WorkerCtx {
                 group: name.to_string(),
+                endpoint: endpoint.clone(),
                 rank,
                 n_ranks: 0, // patched below
                 devices: devices.clone(),

@@ -34,6 +34,9 @@ use anyhow::Result;
 pub struct WorkerCtx {
     /// Group name (e.g. "rollout").
     pub group: String,
+    /// Fully-qualified endpoint name ("rollout/0"), precomputed so the
+    /// hot send/dequeue paths never rebuild it.
+    pub endpoint: String,
     /// Rank within the group.
     pub rank: usize,
     pub n_ranks: usize,
@@ -50,8 +53,8 @@ pub struct WorkerCtx {
 
 impl WorkerCtx {
     /// Fully-qualified endpoint name of this rank ("rollout/0").
-    pub fn endpoint(&self) -> String {
-        format!("{}/{}", self.group, self.rank)
+    pub fn endpoint(&self) -> &str {
+        &self.endpoint
     }
 
     /// Endpoint of a peer rank in another group.
@@ -61,7 +64,7 @@ impl WorkerCtx {
 
     /// Send to a peer via the adaptive comm layer.
     pub fn send(&self, dst_group: &str, dst_rank: usize, payload: Payload) -> Result<()> {
-        self.comm.send(&self.endpoint(), &self.peer(dst_group, dst_rank), payload)?;
+        self.comm.send(&self.endpoint, &self.peer(dst_group, dst_rank), payload)?;
         Ok(())
     }
 

@@ -1,7 +1,9 @@
 //! Per-rank worker thread: control loop, auto-timing, lock integration.
 
+use std::collections::HashMap;
 use std::panic::AssertUnwindSafe;
 use std::sync::mpsc::{Receiver, Sender};
+use std::sync::OnceLock;
 use std::time::Instant;
 
 use anyhow::Result;
@@ -44,6 +46,11 @@ pub fn run_rank(ctx: WorkerCtx, factory: LogicFactory, rx: Receiver<Ctl>, monito
         return;
     }
     let mut loaded = false;
+    // Per-rank interned metric keys: the auto-timer fires on every invoke,
+    // so the `group.method` strings are built once and reused.
+    let holder = ctx.endpoint();
+    let lock_wait_key = format!("{}.lock_wait", ctx.group);
+    let mut method_keys: HashMap<String, String> = HashMap::new();
 
     while let Ok(msg) = rx.recv() {
         match msg {
@@ -57,14 +64,16 @@ pub fn run_rank(ctx: WorkerCtx, factory: LogicFactory, rx: Receiver<Ctl>, monito
                 let _ = reply.send(r.map_err(|e| format!("{e:#}")));
             }
             Ctl::Invoke { method, arg, lock, reply } => {
-                let holder = ctx.endpoint();
-                trace(&format!("{holder} invoke {method} lock={lock:?}"));
+                if trace_enabled() {
+                    trace(&format!("{holder} invoke {method} lock={lock:?}"));
+                }
                 if let LockMode::Device { priority } = lock {
                     let t0 = Instant::now();
                     ctx.locks.acquire(&holder, &ctx.devices, priority);
-                    trace(&format!("{holder} acquired devices for {method}"));
-                    ctx.metrics
-                        .record(&format!("{}.lock_wait", ctx.group), t0.elapsed().as_secs_f64());
+                    if trace_enabled() {
+                        trace(&format!("{holder} acquired devices for {method}"));
+                    }
+                    ctx.metrics.record(&lock_wait_key, t0.elapsed().as_secs_f64());
                     if let Err(e) = ensure_loaded(&mut *logic, &ctx, &mut loaded) {
                         ctx.locks.release(&holder, &ctx.devices);
                         let _ = reply.send(Err(format!("onload: {e:#}")));
@@ -74,14 +83,22 @@ pub fn run_rank(ctx: WorkerCtx, factory: LogicFactory, rx: Receiver<Ctl>, monito
                 }
 
                 let t0 = Instant::now();
-                trace(&format!("{holder} calling {method}"));
+                if trace_enabled() {
+                    trace(&format!("{holder} calling {method}"));
+                }
                 let outcome = std::panic::catch_unwind(AssertUnwindSafe(|| {
                     logic.call(&ctx, &method, arg)
                 }));
-                trace(&format!("{holder} finished {method}"));
+                if trace_enabled() {
+                    trace(&format!("{holder} finished {method}"));
+                }
                 let elapsed = t0.elapsed().as_secs_f64();
-                // Worker-group-level auto-timer (§4 Performance Profiling).
-                ctx.metrics.record(&format!("{}.{}", ctx.group, method), elapsed);
+                // Worker-group-level auto-timer (§4 Performance Profiling);
+                // the key is interned per (group, method) after first use.
+                if !method_keys.contains_key(&method) {
+                    method_keys.insert(method.clone(), format!("{}.{}", ctx.group, method));
+                }
+                ctx.metrics.record(&method_keys[&method], elapsed);
 
                 if let LockMode::Device { .. } = lock {
                     // Offload only when someone is actually waiting for
@@ -142,9 +159,16 @@ fn ensure_offloaded(
     Ok(())
 }
 
+/// Whether `RLINF_TRACE=1` tracing is on — checked once, so disabled-trace
+/// call-sites can skip building their message strings entirely.
+pub fn trace_enabled() -> bool {
+    static ON: OnceLock<bool> = OnceLock::new();
+    *ON.get_or_init(|| std::env::var_os("RLINF_TRACE").is_some())
+}
+
 /// Debug tracing, enabled with `RLINF_TRACE=1`.
 pub fn trace(msg: &str) {
-    if std::env::var_os("RLINF_TRACE").is_some() {
+    if trace_enabled() {
         eprintln!("[trace {:?}] {msg}", std::time::SystemTime::now().duration_since(std::time::UNIX_EPOCH).unwrap().as_secs_f64());
     }
 }
