@@ -1,21 +1,21 @@
-//! Building a *custom* RL workflow on the public worker API — the
+//! Building a *custom* RL workflow on the declarative flow API — the
 //! "less than 100 lines for a workflow runner" claim of §4.
 //!
-//! This example wires a bespoke two-stage pipeline (a synthetic "search
-//! tool" worker feeding a scoring worker, Deep-Research style) using only
-//! `WorkerGroup`, `Channel`, and the device lock — no framework changes.
-//!
-//! ```text
-//! cargo run --release --example custom_workflow
-//! ```
+//! A bespoke two-stage pipeline (a synthetic "search tool" feeding
+//! scorers, Deep-Research style) is *declared* as a `FlowSpec`: two
+//! stages plus one balanced edge. The `FlowDriver` validates the graph,
+//! picks the placement (`Auto`), wires the channel, and injects the port
+//! handles; the workers never see a channel name.
+//! `cargo run --release --example custom_workflow`
 
 use anyhow::{bail, Result};
-use rlinf::cluster::{Cluster, DeviceSet};
-use rlinf::config::ClusterConfig;
+use rlinf::cluster::Cluster;
+use rlinf::config::{ClusterConfig, PlacementMode};
 use rlinf::data::Payload;
+use rlinf::flow::{Edge, FlowDriver, FlowSpec, Stage};
 use rlinf::util::prng::Pcg64;
 use rlinf::worker::group::Services;
-use rlinf::worker::{LockMode, WorkerCtx, WorkerGroup, WorkerLogic};
+use rlinf::worker::{WorkerCtx, WorkerLogic};
 
 /// A "search tool" worker: simulates variable-latency retrieval calls
 /// (the dynamic, long-tail behaviour Deep-Research workflows exhibit).
@@ -27,20 +27,17 @@ impl WorkerLogic for SearchTool {
     fn call(&mut self, ctx: &WorkerCtx, method: &str, arg: Payload) -> Result<Payload> {
         match method {
             "serve" => {
-                let out = ctx.channels.get(arg.meta_str("out").unwrap()).unwrap();
+                let out = ctx.port("out")?;
                 let queries = arg.meta_i64("queries").unwrap_or(16);
                 for q in 0..queries {
                     // Long-tail latency: exponential with 5ms mean.
                     let delay = self.rng.next_exp(0.005);
                     std::thread::sleep(std::time::Duration::from_secs_f64(delay.min(0.05)));
                     let hits = 1 + self.rng.usize_below(5) as i64;
-                    out.put_weighted(
-                        &ctx.endpoint(),
-                        Payload::new().set_meta("query", q).set_meta("hits", hits),
-                        hits as f64,
-                    )?;
+                    let item = Payload::new().set_meta("query", q).set_meta("hits", hits);
+                    out.send_weighted(ctx.endpoint(), item, hits as f64)?;
                 }
-                out.producer_done(&ctx.endpoint());
+                out.done(ctx.endpoint());
                 Ok(Payload::new().set_meta("served", queries))
             }
             other => bail!("no method {other}"),
@@ -48,23 +45,23 @@ impl WorkerLogic for SearchTool {
     }
 }
 
-/// A scorer that consumes retrieval results with *balanced* dequeue so two
-/// scorer ranks share the heavy results evenly.
+/// A scorer that consumes retrieval results; the edge's *balanced*
+/// discipline hands each rank the heaviest queued item, so the two scorer
+/// ranks share the load evenly.
 struct Scorer;
 
 impl WorkerLogic for Scorer {
-    fn call(&mut self, ctx: &WorkerCtx, method: &str, arg: Payload) -> Result<Payload> {
+    fn call(&mut self, ctx: &WorkerCtx, method: &str, _arg: Payload) -> Result<Payload> {
         match method {
             "score" => {
-                let ch = ctx.channels.get(arg.meta_str("in").unwrap()).unwrap();
-                let mut total_hits = 0i64;
-                let mut items = 0usize;
-                while let Some(item) = ch.get_balanced(&ctx.endpoint()) {
-                    total_hits += item.payload.meta_i64("hits").unwrap_or(0);
+                let inp = ctx.port("in")?;
+                let (mut items, mut hits) = (0usize, 0i64);
+                while let Some(item) = inp.recv(ctx.endpoint()) {
+                    hits += item.payload.meta_i64("hits").unwrap_or(0);
                     items += 1;
                     std::thread::sleep(std::time::Duration::from_millis(2));
                 }
-                Ok(Payload::new().set_meta("items", items).set_meta("hits", total_hits))
+                Ok(Payload::new().set_meta("items", items).set_meta("hits", hits))
             }
             other => bail!("no method {other}"),
         }
@@ -72,41 +69,31 @@ impl WorkerLogic for Scorer {
 }
 
 fn main() -> Result<()> {
-    let cluster = Cluster::new(ClusterConfig { nodes: 1, devices_per_node: 3, ..Default::default() });
-    let services = Services::new(cluster);
-    let results = services.channels.create("results");
-    results.register_producer("search/0");
-
-    let search = WorkerGroup::launch("search", &services, vec![DeviceSet::range(0, 1)], |_| {
-        Box::new(|_: &WorkerCtx| {
-            Ok(Box::new(SearchTool { rng: Pcg64::new(5) }) as Box<dyn WorkerLogic>)
+    let cluster = ClusterConfig { nodes: 1, devices_per_node: 3, ..Default::default() };
+    let services = Services::new(Cluster::new(cluster));
+    let spec = FlowSpec::new("deep-research")
+        .stage(Stage::new("search", |_| {
+            Box::new(|_: &WorkerCtx| Ok(Box::new(SearchTool { rng: Pcg64::new(5) }) as Box<dyn WorkerLogic>))
         })
-    })?;
-    let scorers = WorkerGroup::launch(
-        "score",
-        &services,
-        vec![DeviceSet::range(1, 1), DeviceSet::range(2, 1)],
-        |_| Box::new(|_: &WorkerCtx| Ok(Box::new(Scorer) as Box<dyn WorkerLogic>)),
-    )?;
+        .devices(1))
+        .stage(Stage::new("score", |_| {
+            Box::new(|_: &WorkerCtx| Ok(Box::new(Scorer) as Box<dyn WorkerLogic>))
+        })
+        .ranks_per_device()
+        .weight(2.0))
+        .edge(Edge::new("results").produced_by("search", "serve").consumed_by("score", "score").balanced())
+        .call_args("search", "serve", Payload::new().set_meta("queries", 24i64));
 
-    let hs = search.invoke(
-        "serve",
-        Payload::new().set_meta("out", "results").set_meta("queries", 24i64),
-        LockMode::None,
-    );
-    let hc = scorers.invoke("score", Payload::new().set_meta("in", "results"), LockMode::None);
-    hs.wait()?;
-    let outs = hc.wait()?;
-    for (rank, o) in outs.iter().enumerate() {
-        println!(
-            "scorer {rank}: {} items, {} hits (load {})",
-            o.meta_i64("items").unwrap(),
-            o.meta_i64("hits").unwrap(),
-            results.consumer_load(&format!("score/{rank}"))
-        );
+    let driver = FlowDriver::launch(spec, &services, PlacementMode::Auto)?;
+    let mut run = driver.begin()?;
+    run.start()?;
+    let report = run.finish()?;
+
+    for (rank, o) in report.outputs("score", "score").unwrap().iter().enumerate() {
+        println!("scorer {rank}: {} items, {} hits", o.meta_i64("items").unwrap(), o.meta_i64("hits").unwrap());
     }
-    let (put, got) = results.stats();
-    println!("channel moved {put} -> {got} items; traced edges: {:?}",
-             services.channels.traced_edges());
+    let e = report.edge("results").unwrap();
+    println!("[{}] edge {} ({}) moved {} -> {} items", report.mode, e.channel, e.discipline, e.put, e.got);
+    println!("traced edges: {:?}", services.channels.traced_edges());
     Ok(())
 }

@@ -11,7 +11,11 @@
 //! dequeue, per-send route resolution). Emits `BENCH_dataplane.json` so
 //! later PRs can track the trajectory:
 //! single-producer msgs/sec, multi-producer msgs/sec, balanced-dequeue
-//! items/sec, p2p send msgs/sec, and broadcast fan-out payloads/sec.
+//! items/sec, batched-put (`put_batch`) items/sec, p2p send msgs/sec, and
+//! broadcast fan-out payloads/sec.
+//!
+//! Set `RLINF_BENCH_SMALL=1` for the CI preset (~10x smaller workloads;
+//! same JSON shape so the trend check stays comparable per preset).
 
 mod common;
 
@@ -118,36 +122,73 @@ const MPMC_ITEMS_PER_PRODUCER: usize = 10_000;
 const MPMC_THREADS: usize = 4;
 const BALANCED_ITEMS: usize = 5_000;
 const BALANCED_CONSUMERS: usize = 4;
+/// The flow driver's feed chunk size (config `sched.feed_batch` default).
+const PUT_BATCH_CHUNK: usize = 32;
 
-fn spsc_current() -> f64 {
+/// CI preset: ~10x smaller workloads, same output shape.
+fn small() -> bool {
+    std::env::var_os("RLINF_BENCH_SMALL").is_some()
+}
+
+fn scaled(n: usize) -> usize {
+    if small() {
+        (n / 10).max(1)
+    } else {
+        n
+    }
+}
+
+fn spsc_current(items: usize) -> f64 {
     let ch = Channel::new("bench-spsc");
     ch.register_producer("p");
     let t0 = Instant::now();
     let ch2 = ch.clone();
     let h = thread::spawn(move || while ch2.get("c").is_some() {});
-    for _ in 0..SPSC_ITEMS {
+    for _ in 0..items {
         ch.put("p", Payload::new()).unwrap();
     }
     ch.producer_done("p");
     h.join().unwrap();
-    SPSC_ITEMS as f64 / t0.elapsed().as_secs_f64()
+    items as f64 / t0.elapsed().as_secs_f64()
 }
 
-fn spsc_legacy() -> f64 {
+fn spsc_legacy(items: usize) -> f64 {
     let ch = LegacyChannel::default();
     ch.register_producer();
     let t0 = Instant::now();
     let ch2 = ch.clone();
     let h = thread::spawn(move || while ch2.get("c").is_some() {});
-    for _ in 0..SPSC_ITEMS {
+    for _ in 0..items {
         ch.put_weighted("p", Payload::new(), 1.0);
     }
     ch.producer_done();
     h.join().unwrap();
-    SPSC_ITEMS as f64 / t0.elapsed().as_secs_f64()
+    items as f64 / t0.elapsed().as_secs_f64()
 }
 
-fn mpmc_current() -> f64 {
+/// `put_batch` in driver-sized chunks vs per-item puts: measures how much
+/// amortizing the queue-core lock (one acquisition + one wakeup per chunk)
+/// buys on the single-producer path.
+fn spsc_batched_current(items: usize, chunk: usize) -> f64 {
+    let ch = Channel::new("bench-put-batch");
+    ch.register_producer("p");
+    let t0 = Instant::now();
+    let ch2 = ch.clone();
+    let h = thread::spawn(move || while ch2.get("c").is_some() {});
+    let mut buf: Vec<(Payload, f64)> = Vec::with_capacity(chunk);
+    for i in 0..items {
+        buf.push((Payload::new(), 1.0 + (i % 7) as f64));
+        if buf.len() == chunk {
+            ch.put_batch("p", std::mem::replace(&mut buf, Vec::with_capacity(chunk))).unwrap();
+        }
+    }
+    ch.put_batch("p", buf).unwrap();
+    ch.producer_done("p");
+    h.join().unwrap();
+    items as f64 / t0.elapsed().as_secs_f64()
+}
+
+fn mpmc_current(per_producer: usize) -> f64 {
     let ch = Channel::new("bench-mpmc");
     for p in 0..MPMC_THREADS {
         ch.register_producer(&format!("p{p}"));
@@ -158,7 +199,7 @@ fn mpmc_current() -> f64 {
             let ch = ch.clone();
             thread::spawn(move || {
                 let who = format!("p{p}");
-                for i in 0..MPMC_ITEMS_PER_PRODUCER {
+                for i in 0..per_producer {
                     ch.put_weighted(&who, Payload::new(), 1.0 + (i % 7) as f64).unwrap();
                 }
                 ch.producer_done(&who);
@@ -180,10 +221,10 @@ fn mpmc_current() -> f64 {
     for h in consumers {
         h.join().unwrap();
     }
-    (MPMC_THREADS * MPMC_ITEMS_PER_PRODUCER) as f64 / t0.elapsed().as_secs_f64()
+    (MPMC_THREADS * per_producer) as f64 / t0.elapsed().as_secs_f64()
 }
 
-fn mpmc_legacy() -> f64 {
+fn mpmc_legacy(per_producer: usize) -> f64 {
     let ch = LegacyChannel::default();
     for _ in 0..MPMC_THREADS {
         ch.register_producer();
@@ -194,7 +235,7 @@ fn mpmc_legacy() -> f64 {
             let ch = ch.clone();
             thread::spawn(move || {
                 let who = format!("p{p}");
-                for i in 0..MPMC_ITEMS_PER_PRODUCER {
+                for i in 0..per_producer {
                     ch.put_weighted(&who, Payload::new(), 1.0 + (i % 7) as f64);
                 }
                 ch.producer_done();
@@ -216,13 +257,13 @@ fn mpmc_legacy() -> f64 {
     for h in consumers {
         h.join().unwrap();
     }
-    (MPMC_THREADS * MPMC_ITEMS_PER_PRODUCER) as f64 / t0.elapsed().as_secs_f64()
+    (MPMC_THREADS * per_producer) as f64 / t0.elapsed().as_secs_f64()
 }
 
-fn balanced_current() -> f64 {
+fn balanced_current(items: usize) -> f64 {
     let ch = Channel::new("bench-balanced");
     ch.register_producer("p");
-    for i in 0..BALANCED_ITEMS {
+    for i in 0..items {
         ch.put_weighted("p", Payload::new(), 1.0 + (i % 97) as f64).unwrap();
     }
     ch.producer_done("p");
@@ -239,13 +280,13 @@ fn balanced_current() -> f64 {
     for h in consumers {
         h.join().unwrap();
     }
-    BALANCED_ITEMS as f64 / t0.elapsed().as_secs_f64()
+    items as f64 / t0.elapsed().as_secs_f64()
 }
 
-fn balanced_legacy() -> f64 {
+fn balanced_legacy(items: usize) -> f64 {
     let ch = LegacyChannel::default();
     ch.register_producer();
-    for i in 0..BALANCED_ITEMS {
+    for i in 0..items {
         ch.put_weighted("p", Payload::new(), 1.0 + (i % 97) as f64);
     }
     ch.producer_done();
@@ -262,7 +303,7 @@ fn balanced_legacy() -> f64 {
     for h in consumers {
         h.join().unwrap();
     }
-    BALANCED_ITEMS as f64 / t0.elapsed().as_secs_f64()
+    items as f64 / t0.elapsed().as_secs_f64()
 }
 
 // ---------------------------------------------------------------------------
@@ -329,7 +370,7 @@ fn main() -> anyhow::Result<()> {
         let n = kib * 1024 / 4;
         let t = Tensor::from_f32(vec![n], &vec![1.0f32; n])?;
         for (dst, mailbox, label) in [("b", &b, "intraproc"), ("c", &c, "shm"), ("d", &d, "sock")] {
-            let reps = 30;
+            let reps = if small() { 5 } else { 30 };
             let t0 = Instant::now();
             for _ in 0..reps {
                 let p = Payload::from_named(vec![("x", t.clone())]);
@@ -351,11 +392,17 @@ fn main() -> anyhow::Result<()> {
 
     // --- Part 2: data-plane before/after ---
     println!("\nrunning data-plane throughput comparison (legacy = seed design)...");
-    let spsc = (spsc_legacy(), spsc_current());
-    let mpmc = (mpmc_legacy(), mpmc_current());
-    let balanced = (balanced_legacy(), balanced_current());
-    let send_small = bench_send(&comm, &c, "c", 20_000);
-    let send_sock = bench_send(&comm, &d, "d", 2_000);
+    let spsc_items = scaled(SPSC_ITEMS);
+    let mpmc_per = scaled(MPMC_ITEMS_PER_PRODUCER);
+    let balanced_items = scaled(BALANCED_ITEMS);
+    let spsc = (spsc_legacy(spsc_items), spsc_current(spsc_items));
+    let mpmc = (mpmc_legacy(mpmc_per), mpmc_current(mpmc_per));
+    let balanced = (balanced_legacy(balanced_items), balanced_current(balanced_items));
+    // put_batch vs per-item puts on the *current* channel: the lock
+    // amortization the driver's edge sender relies on.
+    let batched = (spsc_current(spsc_items), spsc_batched_current(spsc_items, PUT_BATCH_CHUNK));
+    let send_small = bench_send(&comm, &c, "c", scaled(20_000));
+    let send_sock = bench_send(&comm, &d, "d", scaled(2_000));
 
     // Broadcast fan-out: 6 shm destinations, 256 KiB payload.
     let fan: Vec<String> = (0..6).map(|i| format!("r{i}")).collect();
@@ -367,8 +414,9 @@ fn main() -> anyhow::Result<()> {
         .collect();
     let n = 256 * 1024 / 4;
     let big = Payload::from_named(vec![("w", Tensor::from_f32(vec![n], &vec![0.5f32; n])?)]);
-    let bcast_seq = bench_broadcast(&comm, &fan_boxes, &fan_refs, &big, 50, true);
-    let bcast_fan = bench_broadcast(&comm, &fan_boxes, &fan_refs, &big, 50, false);
+    let bcast_reps = scaled(50);
+    let bcast_seq = bench_broadcast(&comm, &fan_boxes, &fan_refs, &big, bcast_reps, true);
+    let bcast_fan = bench_broadcast(&comm, &fan_boxes, &fan_refs, &big, bcast_reps, false);
 
     let ratio = |pair: (f64, f64)| pair.1 / pair.0.max(1e-9);
     let rows = vec![
@@ -389,6 +437,12 @@ fn main() -> anyhow::Result<()> {
             fmt::count(balanced.0),
             fmt::count(balanced.1),
             format!("{:.2}x", ratio(balanced)),
+        ],
+        vec![
+            format!("put_batch x{PUT_BATCH_CHUNK} (vs per-item)"),
+            fmt::count(batched.0),
+            fmt::count(batched.1),
+            format!("{:.2}x", ratio(batched)),
         ],
         vec![
             "broadcast fan-out".into(),
@@ -420,6 +474,9 @@ fn main() -> anyhow::Result<()> {
         section("channel_spsc", spsc.0, spsc.1),
         section("channel_mpmc", mpmc.0, mpmc.1),
         section("balanced_dequeue", balanced.0, balanced.1),
+        // "legacy" here = per-item puts on the current channel; "current"
+        // = put_batch in driver-sized chunks.
+        section("put_batch", batched.0, batched.1),
         section("broadcast_fanout", bcast_seq, bcast_fan),
     ] {
         paths.set(&k, v);
@@ -430,10 +487,12 @@ fn main() -> anyhow::Result<()> {
     out.set("send", send);
     out.set("config", {
         let mut cfg = Value::obj();
-        cfg.set("spsc_items", SPSC_ITEMS)
+        cfg.set("preset", if small() { "small" } else { "full" })
+            .set("spsc_items", spsc_items)
             .set("mpmc_threads", MPMC_THREADS)
-            .set("mpmc_items_per_producer", MPMC_ITEMS_PER_PRODUCER)
-            .set("balanced_items", BALANCED_ITEMS)
+            .set("mpmc_items_per_producer", mpmc_per)
+            .set("balanced_items", balanced_items)
+            .set("put_batch_chunk", PUT_BATCH_CHUNK)
             .set("broadcast_fanout", fan.len())
             .set("broadcast_payload_kib", 256usize);
         cfg

@@ -14,7 +14,9 @@
 //! skip locking entirely.
 
 pub mod device_lock;
+pub mod port;
 pub mod queue;
 
 pub use device_lock::DeviceLockMgr;
+pub use port::{BoundPort, Dequeue, PortBindings};
 pub use queue::{Channel, ChannelRegistry, Item, ItemsView};

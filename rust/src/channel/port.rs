@@ -1,0 +1,201 @@
+//! Typed channel ports: the handles the `flow::FlowDriver` binds into
+//! worker contexts.
+//!
+//! A [`BoundPort`] is a channel resolved against one *edge* of a declared
+//! flow: it carries the edge's dequeue discipline and scheduled
+//! granularity alongside the raw [`Channel`] handle, so worker logic asks
+//! its context for a named port ("in", "out", "obs", …) and streams
+//! through it without ever seeing channel names — the driver owns channel
+//! creation, naming, and producer registration.
+//!
+//! [`PortBindings`] is the per-group shared table the driver (re)binds at
+//! the start of every flow run; all ranks of a group read the same table.
+
+use std::collections::HashMap;
+use std::sync::{Arc, RwLock};
+use std::time::Duration;
+
+use anyhow::Result;
+
+use super::queue::{Channel, Item};
+use crate::data::Payload;
+
+/// Edge dequeue discipline (§3.5): how consumers pull from the channel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Dequeue {
+    /// Strict arrival order, unit weights.
+    #[default]
+    Fifo,
+    /// Arrival order with producer-attached load weights; the weights feed
+    /// the channel's load accounting (and downstream balanced edges).
+    Weighted,
+    /// Heaviest-first (greedy LPT) so consumers' cumulative loads equalize
+    /// across ranks.
+    Balanced,
+}
+
+impl Dequeue {
+    pub fn name(self) -> &'static str {
+        match self {
+            Dequeue::Fifo => "fifo",
+            Dequeue::Weighted => "weighted",
+            Dequeue::Balanced => "balanced",
+        }
+    }
+}
+
+/// A channel bound to one named port of a stage (or of the driver), with
+/// the edge's dequeue discipline and granularity attached.
+#[derive(Clone)]
+pub struct BoundPort {
+    channel: Channel,
+    discipline: Dequeue,
+    granularity: usize,
+}
+
+impl BoundPort {
+    pub fn new(channel: Channel, discipline: Dequeue, granularity: usize) -> BoundPort {
+        BoundPort { channel, discipline, granularity: granularity.max(1) }
+    }
+
+    /// The underlying channel (size probes, drain barriers).
+    pub fn channel(&self) -> &Channel {
+        &self.channel
+    }
+
+    /// Physical channel name (run-scoped; assigned by the driver).
+    pub fn name(&self) -> &str {
+        self.channel.name()
+    }
+
+    pub fn discipline(&self) -> Dequeue {
+        self.discipline
+    }
+
+    /// Scheduled micro-batch size for batched dequeues.
+    pub fn granularity(&self) -> usize {
+        self.granularity
+    }
+
+    /// Blocking dequeue of one item per the edge discipline; `None` once
+    /// the channel is closed and drained.
+    pub fn recv(&self, who: &str) -> Option<Item> {
+        match self.discipline {
+            Dequeue::Balanced => self.channel.get_balanced(who),
+            _ => self.channel.get(who),
+        }
+    }
+
+    /// FIFO dequeue with a timeout — the driver-side polling primitive
+    /// (lets a controller check failure monitors instead of blocking
+    /// forever behind a dead producer).
+    pub fn recv_timeout(&self, who: &str, timeout: Duration) -> Option<Item> {
+        self.channel.get_timeout(who, timeout)
+    }
+
+    /// Dequeue up to one granularity-sized micro-batch; empty once closed
+    /// and drained. Balanced edges fill the batch heaviest-first.
+    pub fn recv_batch(&self, who: &str) -> Vec<Item> {
+        match self.discipline {
+            Dequeue::Balanced => {
+                let mut out = Vec::with_capacity(self.granularity);
+                while out.len() < self.granularity {
+                    match self.channel.get_balanced(who) {
+                        Some(item) => out.push(item),
+                        None => break,
+                    }
+                }
+                out
+            }
+            _ => self.channel.get_batch(who, self.granularity),
+        }
+    }
+
+    /// Enqueue with unit weight.
+    pub fn send(&self, who: &str, payload: Payload) -> Result<()> {
+        self.channel.put(who, payload)
+    }
+
+    /// Enqueue with an explicit load weight (weighted/balanced edges).
+    pub fn send_weighted(&self, who: &str, payload: Payload, weight: f64) -> Result<()> {
+        self.channel.put_weighted(who, payload, weight)
+    }
+
+    /// Batched enqueue: one queue-lock acquisition and one wakeup for the
+    /// whole micro-batch ([`Channel::put_batch`]).
+    pub fn send_batch(&self, who: &str, items: Vec<(Payload, f64)>) -> Result<()> {
+        self.channel.put_batch(who, items)
+    }
+
+    /// Close this endpoint's producer slot; the channel auto-closes once
+    /// every registered producer is done.
+    pub fn done(&self, who: &str) {
+        self.channel.producer_done(who);
+    }
+}
+
+/// Per-group port table, shared by all ranks and rebound by the driver at
+/// the start of every flow run.
+#[derive(Clone, Default)]
+pub struct PortBindings {
+    inner: Arc<RwLock<HashMap<String, BoundPort>>>,
+}
+
+impl PortBindings {
+    pub fn new() -> PortBindings {
+        PortBindings::default()
+    }
+
+    pub fn bind(&self, port: &str, bp: BoundPort) {
+        self.inner.write().unwrap().insert(port.to_string(), bp);
+    }
+
+    pub fn get(&self, port: &str) -> Option<BoundPort> {
+        self.inner.read().unwrap().get(port).cloned()
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.inner.read().unwrap().keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    pub fn clear(&self) {
+        self.inner.write().unwrap().clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bound_port_honors_discipline() {
+        let ch = Channel::new("p");
+        ch.register_producer("w");
+        for w in [2.0, 7.0, 5.0] {
+            ch.put_weighted("w", Payload::new().set_meta("w", w), w).unwrap();
+        }
+        ch.producer_done("w");
+        let bp = BoundPort::new(ch, Dequeue::Balanced, 2);
+        let batch = bp.recv_batch("c");
+        assert_eq!(batch.len(), 2);
+        assert_eq!(batch[0].payload.meta_f64("w"), Some(7.0), "heaviest first");
+        assert_eq!(batch[1].payload.meta_f64("w"), Some(5.0));
+        assert_eq!(bp.recv("c").unwrap().payload.meta_f64("w"), Some(2.0));
+        assert!(bp.recv("c").is_none());
+    }
+
+    #[test]
+    fn bindings_rebind_and_clear() {
+        let b = PortBindings::new();
+        assert!(b.get("in").is_none());
+        b.bind("in", BoundPort::new(Channel::new("a"), Dequeue::Fifo, 1));
+        assert_eq!(b.get("in").unwrap().name(), "a");
+        b.bind("in", BoundPort::new(Channel::new("b"), Dequeue::Fifo, 4));
+        assert_eq!(b.get("in").unwrap().name(), "b");
+        assert_eq!(b.get("in").unwrap().granularity(), 4);
+        b.clear();
+        assert!(b.get("in").is_none());
+    }
+}

@@ -241,6 +241,36 @@ impl Channel {
         Ok(())
     }
 
+    /// Batched enqueue: one queue-lock acquisition and one wakeup for the
+    /// whole micro-batch. This is the flow driver's edge-sender primitive —
+    /// feeding a granularity-sized chunk costs one critical section instead
+    /// of one per item.
+    pub fn put_batch(&self, who: &str, items: Vec<(Payload, f64)>) -> Result<()> {
+        if items.is_empty() {
+            return Ok(());
+        }
+        let n = items.len() as u64;
+        let mut c = self.inner.core.lock().unwrap();
+        if c.closed {
+            bail!("channel {}: put after close", self.inner.name);
+        }
+        for (payload, weight) in items {
+            let seq = c.next_seq;
+            c.next_seq += 1;
+            c.by_weight.insert((weight_key(weight), seq));
+            c.items.insert(seq, Item { payload, weight });
+        }
+        c.total_put += n;
+        // One wakeup for the whole batch: several single-item waiters (or a
+        // parked batch waiter) may now be satisfiable, so broadcast. As in
+        // `put_weighted`, notify under the lock so the parked-waiter set is
+        // consistent with what we observed.
+        self.inner.cv_items.notify_all();
+        drop(c);
+        self.stat_mut(who, |s| s.producer = true);
+        Ok(())
+    }
+
     /// After a successful dequeue: drain-barrier wakeup + consumer stats.
     fn on_taken(&self, who: &str, weight: f64, became_empty: bool) {
         if became_empty {
@@ -615,6 +645,62 @@ mod tests {
         ch.producer_done("p");
         assert!(hs.join().unwrap());
         assert!(hb.join().unwrap() >= 1);
+    }
+
+    #[test]
+    fn put_batch_preserves_order_and_counts() {
+        let ch = Channel::new("t");
+        ch.register_producer("p");
+        ch.put("p", Payload::new().set_meta("i", 0i64)).unwrap();
+        ch.put_batch(
+            "p",
+            (1..4i64).map(|i| (Payload::new().set_meta("i", i), i as f64)).collect(),
+        )
+        .unwrap();
+        ch.put_batch("p", Vec::new()).unwrap(); // no-op
+        ch.producer_done("p");
+        let got: Vec<i64> =
+            std::iter::from_fn(|| ch.get("c").map(|it| it.payload.meta_i64("i").unwrap())).collect();
+        assert_eq!(got, vec![0, 1, 2, 3], "FIFO across single and batched puts");
+        let (put, taken) = ch.stats();
+        assert_eq!((put, taken), (4, 4));
+    }
+
+    #[test]
+    fn put_batch_weights_feed_balanced_dequeue() {
+        let ch = Channel::new("t");
+        ch.register_producer("p");
+        ch.put_batch(
+            "p",
+            vec![
+                (Payload::new().set_meta("w", 2.0), 2.0),
+                (Payload::new().set_meta("w", 9.0), 9.0),
+                (Payload::new().set_meta("w", 5.0), 5.0),
+            ],
+        )
+        .unwrap();
+        ch.producer_done("p");
+        assert_eq!(ch.get_balanced("c").unwrap().payload.meta_f64("w"), Some(9.0));
+        assert_eq!(ch.get_balanced("c").unwrap().payload.meta_f64("w"), Some(5.0));
+    }
+
+    #[test]
+    fn put_batch_wakes_parked_batch_waiter() {
+        let ch = Channel::new("t");
+        ch.register_producer("p");
+        let ch2 = ch.clone();
+        let h = thread::spawn(move || ch2.get_batch("c", 3).len());
+        thread::sleep(Duration::from_millis(10));
+        ch.put_batch("p", (0..3).map(|_| (Payload::new(), 1.0)).collect()).unwrap();
+        assert_eq!(h.join().unwrap(), 3, "one batched put satisfies the waiter");
+    }
+
+    #[test]
+    fn put_batch_after_close_fails() {
+        let ch = Channel::new("t");
+        ch.register_producer("p");
+        ch.close();
+        assert!(ch.put_batch("p", vec![(Payload::new(), 1.0)]).is_err());
     }
 
     #[test]

@@ -126,11 +126,24 @@ pub struct SchedConfig {
     pub granularity: usize,
     /// Profile steps per phase when profiling is enabled.
     pub profile_iters: usize,
+    /// Flow-driver poll interval (ms) while aggregating mid-flow results —
+    /// bounds how fast a dead upstream worker fails the run.
+    pub poll_ms: u64,
+    /// Micro-batch size for driver-side channel feeds (amortizes the
+    /// channel lock via `Channel::put_batch`).
+    pub feed_batch: usize,
 }
 
 impl Default for SchedConfig {
     fn default() -> Self {
-        SchedConfig { mode: PlacementMode::Auto, gen_devices: 0, granularity: 0, profile_iters: 2 }
+        SchedConfig {
+            mode: PlacementMode::Auto,
+            gen_devices: 0,
+            granularity: 0,
+            profile_iters: 2,
+            poll_ms: 200,
+            feed_batch: 32,
+        }
     }
 }
 
@@ -234,6 +247,15 @@ impl RunConfig {
         get_num!(v, "sched.gen_devices", c.sched.gen_devices, as_usize);
         get_num!(v, "sched.granularity", c.sched.granularity, as_usize);
         get_num!(v, "sched.profile_iters", c.sched.profile_iters, as_usize);
+        // Explicit (not get_num!): a negative value must error, not wrap to
+        // a ~584-million-year u64 poll interval.
+        if let Some(x) = v.get_path("sched.poll_ms").and_then(Value::as_i64) {
+            if x < 0 {
+                bail!("sched.poll_ms must not be negative");
+            }
+            c.sched.poll_ms = x as u64;
+        }
+        get_num!(v, "sched.feed_batch", c.sched.feed_batch, as_usize);
 
         get_num!(v, "embodied.num_envs", c.embodied.num_envs, as_usize);
         get_num!(v, "embodied.horizon", c.embodied.horizon, as_usize);
@@ -270,6 +292,12 @@ impl RunConfig {
         }
         if self.sched.gen_devices > self.cluster.total_devices() {
             bail!("sched.gen_devices exceeds the cluster size");
+        }
+        if self.sched.poll_ms == 0 {
+            bail!("sched.poll_ms must be positive");
+        }
+        if self.sched.feed_batch == 0 {
+            bail!("sched.feed_batch must be positive");
         }
         Ok(())
     }

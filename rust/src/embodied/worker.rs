@@ -75,7 +75,7 @@ impl WorkerLogic for SimWorker {
         Ok(())
     }
 
-    fn call(&mut self, ctx: &WorkerCtx, method: &str, arg: Payload) -> Result<Payload> {
+    fn call(&mut self, ctx: &WorkerCtx, method: &str, _arg: Payload) -> Result<Payload> {
         match method {
             // Serve one rollout: emit obs, consume actions, `horizon` times.
             "serve_rollout" => {
@@ -86,18 +86,14 @@ impl WorkerLogic for SimWorker {
                 }
                 let horizon = self.cfg.horizon as usize;
                 let n = self.cfg.num_envs;
-                let obs_ch = ctx
-                    .channels
-                    .get(arg.meta_str("obs_channel").unwrap_or("obs"))
-                    .ok_or_else(|| anyhow!("missing obs channel"))?;
-                let act_ch = ctx
-                    .channels
-                    .get(arg.meta_str("act_channel").unwrap_or("actions"))
-                    .ok_or_else(|| anyhow!("missing act channel"))?;
+                // The cyclic obs ⇄ act pair arrives pre-bound by the flow
+                // driver under this stage's "obs"/"act" ports.
+                let obs_ch = ctx.port("obs")?;
+                let act_ch = ctx.port("act")?;
                 let me = ctx.endpoint();
 
                 let obs0 = self.env_mut()?.observe_all();
-                obs_ch.put(
+                obs_ch.send(
                     &me,
                     Payload::from_named(vec![("obs", Tensor::from_f32(vec![n, OBS_DIM], &obs0)?)])
                         .set_meta("step", 0i64),
@@ -105,7 +101,7 @@ impl WorkerLogic for SimWorker {
                 let mut successes = 0usize;
                 for step in 0..horizon {
                     let item = act_ch
-                        .get(&me)
+                        .recv(&me)
                         .ok_or_else(|| anyhow!("action channel closed mid-rollout"))?;
                     let actions = item.payload.tensor("actions")?.to_i32()?;
                     let t0 = std::time::Instant::now();
@@ -114,7 +110,7 @@ impl WorkerLogic for SimWorker {
                     successes += out.successes;
                     let dones: Vec<f32> =
                         out.dones.iter().map(|&d| if d { 1.0 } else { 0.0 }).collect();
-                    obs_ch.put(
+                    obs_ch.send(
                         &me,
                         Payload::from_named(vec![
                             ("obs", Tensor::from_f32(vec![n, OBS_DIM], &out.obs)?),
@@ -124,7 +120,7 @@ impl WorkerLogic for SimWorker {
                         .set_meta("step", (step + 1) as i64),
                     )?;
                 }
-                obs_ch.producer_done(&me);
+                obs_ch.done(&me);
                 let env = self.env_mut()?;
                 Ok(Payload::new()
                     .set_meta("successes", successes)
@@ -405,14 +401,10 @@ impl WorkerLogic for PolicyWorker {
             // Drive one rollout against the simulator channels, accumulate
             // the trajectory, compute GAE, then run PPO updates.
             "collect_and_train" => {
-                let obs_ch = ctx
-                    .channels
-                    .get(arg.meta_str("obs_channel").unwrap_or("obs"))
-                    .ok_or_else(|| anyhow!("missing obs channel"))?;
-                let act_ch = ctx
-                    .channels
-                    .get(arg.meta_str("act_channel").unwrap_or("actions"))
-                    .ok_or_else(|| anyhow!("missing act channel"))?;
+                // Ports bound by the flow driver: "obs" in, "act" out —
+                // the policy side of the cyclic generator ⇄ simulator pair.
+                let obs_ch = ctx.port("obs")?;
+                let act_ch = ctx.port("act")?;
                 let train = arg.meta_i64("train").unwrap_or(1) == 1;
                 let me = ctx.endpoint();
 
@@ -424,7 +416,7 @@ impl WorkerLogic for PolicyWorker {
                 let mut all_done: Vec<Vec<bool>> = Vec::new();
                 let mut n_envs = 0usize;
 
-                while let Some(item) = obs_ch.get(&me) {
+                while let Some(item) = obs_ch.recv(&me) {
                     let obs = item.payload.tensor("obs")?.clone();
                     n_envs = obs.shape[0];
                     if let Ok(r) = item.payload.tensor("rewards") {
@@ -436,7 +428,7 @@ impl WorkerLogic for PolicyWorker {
                     let (actions, logps, values) = self.act(&obs, ctx)?;
                     if !is_last {
                         // Feed actions back unless the rollout just ended.
-                        act_ch.put(
+                        act_ch.send(
                             &me,
                             Payload::from_named(vec![(
                                 "actions",
@@ -449,7 +441,7 @@ impl WorkerLogic for PolicyWorker {
                     all_logp.push(logps);
                     all_val.push(values);
                 }
-                act_ch.producer_done(&me);
+                act_ch.done(&me);
 
                 // T transitions: steps with a successor reward.
                 let t_max = all_rew.len();

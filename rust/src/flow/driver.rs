@@ -1,0 +1,566 @@
+//! The unified flow driver: executes a validated [`FlowSpec`].
+//!
+//! `FlowDriver::launch` resolves the spec against a placement mode
+//! (collocated / disaggregated / hybrid — `Auto` falls back to a
+//! graph-shape heuristic, or to Algorithm 1 via [`FlowDriver::plan_auto`]
+//! when profiles exist), launches one [`WorkerGroup`] per stage, and keeps
+//! the per-stage lock directives. Each [`FlowDriver::begin`] then creates
+//! run-scoped channels for every edge, registers producers (stage ranks
+//! or the driver), and binds [`BoundPort`] handles into the stage port
+//! tables — worker logic reaches its channels through
+//! `WorkerCtx::port("in"/"out"/…)`, never through names.
+//!
+//! [`FlowRun::start`] invokes every stage method bound by an edge (in
+//! flow-priority order, which preserves the device-lock intent ordering
+//! that avoids deadlocks), the controller feeds sources / drains sinks /
+//! runs pumps through the run's driver-side ports, and
+//! [`FlowRun::finish`] barriers on every handle and returns a per-stage /
+//! per-edge [`FlowReport`].
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::spec::{EndpointSpec, FlowGraphInfo, FlowSpec, RankShape};
+use crate::channel::{BoundPort, Dequeue, Item};
+use crate::cluster::DeviceSet;
+use crate::config::PlacementMode;
+use crate::data::Payload;
+use crate::sched::{ProfileDb, SchedProblem, Scheduler};
+use crate::worker::group::Services;
+use crate::worker::{GroupHandle, LockMode, WorkerGroup};
+
+/// The driver's endpoint name in channel traces.
+pub const DRIVER_ENDPOINT: &str = "driver";
+
+/// Resolved placement directive for one stage.
+#[derive(Debug, Clone)]
+pub struct StagePlan {
+    pub name: String,
+    /// Per-rank device sets (rank i runs on `placements[i]`).
+    pub placements: Vec<DeviceSet>,
+    pub lock: LockMode,
+}
+
+/// Edge endpoint resolved to a stage index.
+enum Endpoint {
+    Driver,
+    Stage { idx: usize, method: String, port: String },
+}
+
+struct ResolvedEdge {
+    channel: String,
+    discipline: Dequeue,
+    granularity: usize,
+    producer: Endpoint,
+    consumer: Endpoint,
+}
+
+struct StageMeta {
+    name: String,
+    priority: u64,
+}
+
+/// A launched flow: groups up, placement applied, ready to run.
+pub struct FlowDriver {
+    name: String,
+    stages: Vec<StageMeta>,
+    edges: Vec<ResolvedEdge>,
+    call_args: Vec<(usize, String, Payload)>,
+    plans: Vec<StagePlan>,
+    groups: Vec<WorkerGroup>,
+    services: Services,
+    mode: &'static str,
+    info: FlowGraphInfo,
+    run_seq: AtomicU64,
+}
+
+impl FlowDriver {
+    /// Validate the spec, resolve the placement, and launch all stages.
+    pub fn launch(spec: FlowSpec, services: &Services, mode: PlacementMode) -> Result<FlowDriver> {
+        let info = spec.validate()?;
+        let n = services.cluster.num_devices();
+        let mode = match mode {
+            PlacementMode::Auto => auto_fallback(&spec, &info, n),
+            m => m,
+        };
+        let mode_name = mode.name();
+        let plans = resolve_placement(&spec, &info, n, mode)?;
+
+        let mut spec = spec;
+        let mut groups = Vec::with_capacity(spec.stages.len());
+        for (i, st) in spec.stages.iter_mut().enumerate() {
+            let name = st.name.clone();
+            let g = WorkerGroup::launch(&name, services, plans[i].placements.clone(), |r| {
+                (st.factory)(r)
+            })
+            .with_context(|| format!("launching stage {name:?}"))?;
+            groups.push(g);
+        }
+
+        let resolve_ep = |ep: &Option<EndpointSpec>| -> Endpoint {
+            match ep {
+                Some(EndpointSpec::Stage { stage, method, port }) => Endpoint::Stage {
+                    idx: spec.stage_index(stage).expect("validated stage reference"),
+                    method: method.clone(),
+                    port: port.clone(),
+                },
+                _ => Endpoint::Driver,
+            }
+        };
+        let edges = spec
+            .edges
+            .iter()
+            .map(|e| ResolvedEdge {
+                channel: e.channel.clone(),
+                discipline: e.discipline,
+                granularity: e.granularity,
+                producer: resolve_ep(&e.producer),
+                consumer: resolve_ep(&e.consumer),
+            })
+            .collect();
+        let call_args = spec
+            .call_args
+            .iter()
+            .filter_map(|(s, m, p)| spec.stage_index(s).map(|i| (i, m.clone(), p.clone())))
+            .collect();
+        let stages = spec
+            .stages
+            .iter()
+            .enumerate()
+            .map(|(i, s)| StageMeta { name: s.name.clone(), priority: s.priority.unwrap_or(i as u64) })
+            .collect();
+
+        Ok(FlowDriver {
+            name: spec.name.clone(),
+            stages,
+            edges,
+            call_args,
+            plans,
+            groups,
+            services: services.clone(),
+            mode: mode_name,
+            info,
+            run_seq: AtomicU64::new(0),
+        })
+    }
+
+    /// Concrete placement mode name ("collocated" / "disaggregated" /
+    /// "hybrid").
+    pub fn mode(&self) -> &'static str {
+        self.mode
+    }
+
+    /// The launched group of a stage (control-plane calls: init, weight
+    /// sync, evaluation — anything outside the streamed dataflow).
+    pub fn group(&self, stage: &str) -> Result<&WorkerGroup> {
+        Ok(&self.groups[self.stage_idx(stage)?])
+    }
+
+    /// The lock directive the placement assigned to a stage.
+    pub fn lock_of(&self, stage: &str) -> LockMode {
+        self.stage_idx(stage).map(|i| self.plans[i].lock).unwrap_or(LockMode::None)
+    }
+
+    /// Per-stage placement directives.
+    pub fn stage_plans(&self) -> &[StagePlan] {
+        &self.plans
+    }
+
+    /// Validated graph view of the flow.
+    pub fn graph(&self) -> &FlowGraphInfo {
+        &self.info
+    }
+
+    /// Pre-load every stage that owns its devices exclusively (pipelined
+    /// stages keep residency; locked stages onload under the lock).
+    pub fn onload_pipelined(&self) -> Result<()> {
+        for (i, p) in self.plans.iter().enumerate() {
+            if matches!(p.lock, LockMode::None) {
+                self.groups[i].onload().with_context(|| format!("onload {}", p.name))?;
+            }
+        }
+        Ok(())
+    }
+
+    fn stage_idx(&self, stage: &str) -> Result<usize> {
+        self.stages
+            .iter()
+            .position(|s| s.name == stage)
+            .ok_or_else(|| anyhow!("flow {:?}: no stage {stage:?}", self.name))
+    }
+
+    /// Open a new run: create run-scoped channels for every edge, register
+    /// producers, and bind ports into the stage tables.
+    pub fn begin(&self) -> Result<FlowRun<'_>> {
+        let seq = self.run_seq.fetch_add(1, Ordering::Relaxed) + 1;
+        for g in &self.groups {
+            g.ports().clear();
+        }
+        let mut ports = HashMap::new();
+        for e in &self.edges {
+            let physical = format!("{}@{seq}", e.channel);
+            let ch = self.services.channels.create(&physical);
+            let port = BoundPort::new(ch.clone(), e.discipline, e.granularity);
+            match &e.producer {
+                Endpoint::Driver => ch.register_producer(DRIVER_ENDPOINT),
+                Endpoint::Stage { idx, port: pname, .. } => {
+                    let g = &self.groups[*idx];
+                    for r in 0..g.n_ranks() {
+                        ch.register_producer(&format!("{}/{r}", self.stages[*idx].name));
+                    }
+                    g.ports().bind(pname, port.clone());
+                }
+            }
+            if let Endpoint::Stage { idx, port: pname, .. } = &e.consumer {
+                self.groups[*idx].ports().bind(pname, port.clone());
+            }
+            ports.insert(e.channel.clone(), port);
+        }
+        Ok(FlowRun { driver: self, ports, handles: Vec::new(), t0: Instant::now() })
+    }
+
+    /// Profiling-guided Algorithm-1 planning over a spec's declared graph:
+    /// builds the [`SchedProblem`] from the spec (instead of hand-wired
+    /// graphs), solves it, and maps the winning plan's shape onto a
+    /// concrete placement mode.
+    pub fn plan_auto(
+        spec: &FlowSpec,
+        n_devices: usize,
+        device_mem: u64,
+        db: &ProfileDb,
+        workload: &HashMap<String, usize>,
+        granularities: &HashMap<String, Vec<usize>>,
+        switch_overhead: f64,
+    ) -> Result<(PlacementMode, String)> {
+        let info = spec.validate()?;
+        if !info.cyclic.is_empty() {
+            bail!(
+                "flow {:?}: auto planning over cyclic flows is unsupported; \
+                 pick a concrete mode (cyclic stages co-reside and run concurrently)",
+                spec.name
+            );
+        }
+        let problem = SchedProblem {
+            graph: info.graph,
+            workload: workload.clone(),
+            granularities: granularities.clone(),
+            n_devices,
+            device_mem,
+            switch_overhead,
+        };
+        let mut sched = Scheduler::new(&problem, db);
+        let plan = sched.solve()?;
+        let mode = plan.placement_mode();
+        Ok((
+            mode,
+            format!("algorithm1 plan ({} states explored):\n{}", sched.states_explored, plan.render()),
+        ))
+    }
+}
+
+/// Profile-free `Auto` fallback: cyclic flows co-reside (their stages run
+/// concurrently regardless of placement), otherwise prefer a full spatial
+/// split when every stage can own a device, else hybrid.
+fn auto_fallback(spec: &FlowSpec, info: &FlowGraphInfo, n: usize) -> PlacementMode {
+    if !info.cyclic.is_empty() || n < 2 {
+        PlacementMode::Collocated
+    } else if n >= spec.stages.len() {
+        PlacementMode::Disaggregated
+    } else {
+        PlacementMode::Hybrid
+    }
+}
+
+fn same_scc(info: &FlowGraphInfo, a: &str, b: &str) -> bool {
+    info.members.iter().any(|m| m.iter().any(|x| x == a) && m.iter().any(|x| x == b))
+}
+
+/// Map the spec's stages onto concrete device blocks + lock directives.
+fn resolve_placement(
+    spec: &FlowSpec,
+    info: &FlowGraphInfo,
+    n: usize,
+    mode: PlacementMode,
+) -> Result<Vec<StagePlan>> {
+    if n == 0 {
+        bail!("cluster has zero devices");
+    }
+    let m = spec.stages.len();
+    let mut order: Vec<usize> = (0..m).collect();
+    order.sort_by_key(|&i| (spec.stage_priority(i), i));
+
+    // Per-stage contiguous device block (start, len) + time-sharing flag.
+    let mut blocks: Vec<(usize, usize)> = vec![(0, 0); m];
+    let mut locked: Vec<bool> = vec![false; m];
+
+    match mode {
+        PlacementMode::Collocated => {
+            // Every stage spans all devices; phases serialize via the lock.
+            for i in 0..m {
+                blocks[i] = (0, n);
+                locked[i] = m > 1;
+            }
+        }
+        PlacementMode::Disaggregated => {
+            // Disjoint blocks in flow order: explicit demands first-class,
+            // the rest split proportionally to weight; when devices run
+            // out, the leftover stages time-share the last block.
+            let mut cursor = 0usize;
+            let mut last_owner: Option<usize> = None;
+            for (k, &i) in order.iter().enumerate() {
+                let left = n - cursor;
+                let stages_left = m - k;
+                if left == 0 {
+                    let owner = last_owner.expect("n > 0 guarantees a first block");
+                    let (a, b) = (&spec.stages[owner].name, &spec.stages[i].name);
+                    if same_scc(info, a, b) {
+                        bail!(
+                            "flow {:?}: cyclic stages {a:?} and {b:?} cannot time-share a device \
+                             (they must run concurrently); need more devices",
+                            spec.name
+                        );
+                    }
+                    blocks[i] = blocks[owner];
+                    locked[i] = true;
+                    locked[owner] = true;
+                    continue;
+                }
+                let w_left: f64 =
+                    order[k..].iter().map(|&j| spec.stages[j].demand.weight.max(0.0)).sum();
+                let d = &spec.stages[i].demand;
+                let mut take = match d.explicit {
+                    Some(e) => e,
+                    None => ((left as f64) * d.weight.max(0.0) / w_left.max(1e-9)).floor() as usize,
+                };
+                take = take.clamp(1, left);
+                // Leave ≥1 device for each remaining stage when possible.
+                take = take.min(left.saturating_sub(stages_left - 1).max(1));
+                blocks[i] = (cursor, take);
+                cursor += take;
+                last_owner = Some(i);
+            }
+        }
+        PlacementMode::Hybrid => {
+            // First stage (the generator) owns its share exclusively; every
+            // later stage time-shares the remainder.
+            if n < 2 {
+                bail!("hybrid placement needs ≥2 devices");
+            }
+            let first = order[0];
+            let d = &spec.stages[first].demand;
+            let total_w: f64 = (0..m).map(|j| spec.stages[j].demand.weight.max(0.0)).sum();
+            let g = match d.explicit {
+                Some(e) => e,
+                None => ((n as f64) * d.weight.max(0.0) / total_w.max(1e-9)).floor() as usize,
+            }
+            .clamp(1, n - 1);
+            blocks[first] = (0, g);
+            for &i in &order[1..] {
+                blocks[i] = (g, n - g);
+                locked[i] = m > 2;
+            }
+        }
+        PlacementMode::Auto => unreachable!("Auto resolved before placement"),
+    }
+
+    let mut plans = Vec::with_capacity(m);
+    for i in 0..m {
+        let st = &spec.stages[i];
+        // Stages inside a cycle must run concurrently: never lock them.
+        let lock = if locked[i] && !info.cyclic.contains(&st.name) {
+            LockMode::Device { priority: spec.stage_priority(i) }
+        } else {
+            LockMode::None
+        };
+        let (start, len) = blocks[i];
+        let placements = match st.shape {
+            RankShape::PerDevice => (start..start + len).map(|d| DeviceSet::range(d, 1)).collect(),
+            RankShape::Single => vec![DeviceSet::range(start, len)],
+        };
+        plans.push(StagePlan { name: st.name.clone(), placements, lock });
+    }
+    Ok(plans)
+}
+
+/// One execution of the flow (one training iteration, typically).
+pub struct FlowRun<'a> {
+    driver: &'a FlowDriver,
+    /// Driver-side ports keyed by *logical* channel name.
+    ports: HashMap<String, BoundPort>,
+    handles: Vec<(usize, String, GroupHandle)>,
+    t0: Instant,
+}
+
+impl FlowRun<'_> {
+    /// Invoke every stage method bound by an edge, in flow-priority order
+    /// (the device-lock intent order), with the stage's planned lock mode
+    /// and any declared `call_args` payload.
+    pub fn start(&mut self) -> Result<()> {
+        if !self.handles.is_empty() {
+            bail!("flow {:?}: run already started", self.driver.name);
+        }
+        let mut calls: Vec<(usize, String)> = Vec::new();
+        for e in &self.driver.edges {
+            for ep in [&e.producer, &e.consumer] {
+                if let Endpoint::Stage { idx, method, .. } = ep {
+                    if !calls.iter().any(|(i, m)| i == idx && m == method) {
+                        calls.push((*idx, method.clone()));
+                    }
+                }
+            }
+        }
+        calls.sort_by_key(|c| (self.driver.stages[c.0].priority, c.0));
+        for (gi, method) in calls {
+            let mut arg = Payload::new();
+            for (i, m, p) in &self.driver.call_args {
+                if *i == gi && *m == method {
+                    arg = p.clone();
+                }
+            }
+            let lock = self.driver.plans[gi].lock;
+            let h = self.driver.groups[gi].invoke(&method, arg, lock);
+            self.handles.push((gi, method, h));
+        }
+        Ok(())
+    }
+
+    /// Driver-side port of a channel (any edge the driver produces or
+    /// consumes; stage-to-stage edges are reachable too, for inspection).
+    pub fn port(&self, channel: &str) -> Result<&BoundPort> {
+        self.ports
+            .get(channel)
+            .ok_or_else(|| anyhow!("flow {:?}: no channel {channel:?}", self.driver.name))
+    }
+
+    pub fn send(&self, channel: &str, payload: Payload) -> Result<()> {
+        self.port(channel)?.send(DRIVER_ENDPOINT, payload)
+    }
+
+    pub fn send_weighted(&self, channel: &str, payload: Payload, weight: f64) -> Result<()> {
+        self.port(channel)?.send_weighted(DRIVER_ENDPOINT, payload, weight)
+    }
+
+    /// Batched feed: one channel-lock acquisition for the whole chunk.
+    pub fn send_batch(&self, channel: &str, items: Vec<(Payload, f64)>) -> Result<()> {
+        self.port(channel)?.send_batch(DRIVER_ENDPOINT, items)
+    }
+
+    /// Close the driver's producer slot on a channel it feeds.
+    pub fn feed_done(&self, channel: &str) -> Result<()> {
+        self.port(channel)?.done(DRIVER_ENDPOINT);
+        Ok(())
+    }
+
+    /// Blocking driver-side dequeue.
+    pub fn recv(&self, channel: &str) -> Result<Option<Item>> {
+        Ok(self.port(channel)?.recv(DRIVER_ENDPOINT))
+    }
+
+    /// Driver-side dequeue with a timeout (poll failure monitors between
+    /// attempts instead of wedging behind a dead producer).
+    pub fn recv_timeout(&self, channel: &str, timeout: Duration) -> Result<Option<Item>> {
+        Ok(self.port(channel)?.recv_timeout(DRIVER_ENDPOINT, timeout))
+    }
+
+    /// True once a channel is closed and empty.
+    pub fn drained(&self, channel: &str) -> Result<bool> {
+        let p = self.port(channel)?;
+        Ok(p.channel().is_closed() && p.channel().is_empty())
+    }
+
+    /// Did any rank fail so far?
+    pub fn poisoned(&self) -> bool {
+        self.driver.services.monitor.poisoned()
+    }
+
+    /// Barrier on every stage handle; returns the per-stage / per-edge
+    /// report.
+    pub fn finish(self) -> Result<FlowReport> {
+        let mut outcomes = Vec::new();
+        for (gi, method, h) in self.handles {
+            let stage = self.driver.stages[gi].name.clone();
+            let outputs = h.wait().with_context(|| format!("stage {stage}.{method}"))?;
+            outcomes.push(StageOutcome { stage, method, outputs });
+        }
+        let mut edges = Vec::with_capacity(self.driver.edges.len());
+        for e in &self.driver.edges {
+            if let Some(port) = self.ports.get(&e.channel) {
+                let (put, got) = port.channel().stats();
+                edges.push(EdgeStats {
+                    channel: e.channel.clone(),
+                    discipline: e.discipline.name(),
+                    put,
+                    got,
+                    backlog: port.channel().len(),
+                });
+            }
+        }
+        Ok(FlowReport {
+            flow: self.driver.name.clone(),
+            mode: self.driver.mode,
+            secs: self.t0.elapsed().as_secs_f64(),
+            outcomes,
+            edges,
+        })
+    }
+}
+
+/// Results of one stage method across its ranks.
+pub struct StageOutcome {
+    pub stage: String,
+    pub method: String,
+    /// Return payloads in rank order.
+    pub outputs: Vec<Payload>,
+}
+
+/// Per-edge transfer statistics for one run.
+#[derive(Debug, Clone)]
+pub struct EdgeStats {
+    pub channel: String,
+    pub discipline: &'static str,
+    pub put: u64,
+    pub got: u64,
+    /// Items still queued at finish (should be 0 for drained flows).
+    pub backlog: usize,
+}
+
+/// Per-run report: what moved where, and what every stage returned.
+pub struct FlowReport {
+    pub flow: String,
+    pub mode: &'static str,
+    pub secs: f64,
+    pub outcomes: Vec<StageOutcome>,
+    pub edges: Vec<EdgeStats>,
+}
+
+impl FlowReport {
+    /// Rank-ordered outputs of one stage method.
+    pub fn outputs(&self, stage: &str, method: &str) -> Option<&[Payload]> {
+        self.outcomes
+            .iter()
+            .find(|o| o.stage == stage && o.method == method)
+            .map(|o| o.outputs.as_slice())
+    }
+
+    pub fn edge(&self, channel: &str) -> Option<&EdgeStats> {
+        self.edges.iter().find(|e| e.channel == channel)
+    }
+
+    /// Human-readable rendering for logs.
+    pub fn render(&self) -> String {
+        let mut s = format!("flow {:?} [{}] {:.3}s\n", self.flow, self.mode, self.secs);
+        for o in &self.outcomes {
+            s.push_str(&format!("  stage {}.{} -> {} rank outputs\n", o.stage, o.method, o.outputs.len()));
+        }
+        for e in &self.edges {
+            s.push_str(&format!(
+                "  edge {} [{}]: {} put, {} got, {} queued\n",
+                e.channel, e.discipline, e.put, e.got, e.backlog
+            ));
+        }
+        s
+    }
+}

@@ -5,16 +5,25 @@
 //! into single nodes via SCC condensation before Algorithm 1 runs —
 //! `ConvertCircleToNode` in the paper's pseudocode.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 use anyhow::{bail, Result};
 
 /// A directed workflow graph over named worker groups.
+///
+/// `nodes`/`edges` stay public for the scheduler's read paths; inserts go
+/// through [`WorkflowGraph::add_node`]/[`WorkflowGraph::add_edge`], which
+/// keep a name index and an edge set so trace-driven graph building is
+/// O(log n) per insert instead of O(n)/O(E) linear scans.
 #[derive(Debug, Clone, Default)]
 pub struct WorkflowGraph {
     pub nodes: Vec<String>,
-    /// Edges as (src_index, dst_index).
+    /// Edges as (src_index, dst_index), in insertion order.
     pub edges: Vec<(usize, usize)>,
+    /// Name → index (O(log n) `index_of`/`add_node`).
+    index: BTreeMap<String, usize>,
+    /// Dedup set mirroring `edges` (O(log E) membership).
+    edge_set: BTreeSet<(usize, usize)>,
 }
 
 impl WorkflowGraph {
@@ -23,23 +32,25 @@ impl WorkflowGraph {
     }
 
     pub fn add_node(&mut self, name: &str) -> usize {
-        if let Some(i) = self.index_of(name) {
+        if let Some(&i) = self.index.get(name) {
             return i;
         }
         self.nodes.push(name.to_string());
-        self.nodes.len() - 1
+        let i = self.nodes.len() - 1;
+        self.index.insert(name.to_string(), i);
+        i
     }
 
     pub fn add_edge(&mut self, src: &str, dst: &str) {
         let s = self.add_node(src);
         let d = self.add_node(dst);
-        if !self.edges.contains(&(s, d)) {
+        if self.edge_set.insert((s, d)) {
             self.edges.push((s, d));
         }
     }
 
     pub fn index_of(&self, name: &str) -> Option<usize> {
-        self.nodes.iter().position(|n| n == name)
+        self.index.get(name).copied()
     }
 
     pub fn n(&self) -> usize {
@@ -77,7 +88,7 @@ impl WorkflowGraph {
         for &(s, d) in &self.edges {
             if comp_of[s] != comp_of[d] {
                 let (a, b) = (comp_of[s], comp_of[d]);
-                if !g.edges.contains(&(a, b)) {
+                if g.edge_set.insert((a, b)) {
                     g.edges.push((a, b));
                 }
             }
@@ -276,6 +287,19 @@ mod tests {
         let g = WorkflowGraph::from_traced_edges(&edges);
         assert_eq!(g.n(), 2);
         assert_eq!(g.edges.len(), 1, "deduplicated");
+    }
+
+    #[test]
+    fn add_edge_dedups_through_index() {
+        let mut g = WorkflowGraph::new();
+        for _ in 0..3 {
+            g.add_edge("a", "b");
+            g.add_edge("b", "c");
+        }
+        assert_eq!(g.n(), 3);
+        assert_eq!(g.edges.len(), 2, "repeated inserts deduplicated");
+        assert_eq!(g.index_of("b"), Some(1));
+        assert_eq!(g.index_of("zzz"), None);
     }
 
     #[test]

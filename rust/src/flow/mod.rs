@@ -1,14 +1,22 @@
-//! M2Flow transformation machinery (§3.3): the workflow graph, JIT trace
-//! extraction, elastic chunking, and execution-plan application.
+//! M2Flow transformation machinery (§3.3): declarative flow composition,
+//! the workflow graph, JIT trace extraction, elastic chunking, and
+//! execution-plan application.
 //!
-//! The *macro* flow is whatever the workflow runner wrote imperatively;
-//! these utilities extract its graph from channel traces, and transform
-//! worker tasks into the *micro* execution flow the scheduler chose —
-//! re-chunking data granularity (elastic pipelining) and inserting device
-//! lock / onload / offload steps (context switching).
+//! The *macro* flow is declared once as a [`FlowSpec`] — stages, typed
+//! edges, driver pumps — and executed by the [`FlowDriver`], which
+//! validates the graph (SCC-condensing cycles), resolves the placement,
+//! creates and wires every channel, and transforms worker tasks into the
+//! *micro* execution flow the scheduler chose: re-chunked data
+//! granularity (elastic pipelining) and device lock / onload / offload
+//! steps (context switching). [`graph`] still supports just-in-time trace
+//! extraction for flows composed imperatively.
 
+pub mod driver;
 pub mod graph;
 pub mod pipeline;
+pub mod spec;
 
+pub use driver::{EdgeStats, FlowDriver, FlowReport, FlowRun, StageOutcome, StagePlan};
 pub use graph::WorkflowGraph;
 pub use pipeline::{chunk_sizes, Chunk};
+pub use spec::{Edge, FlowGraphInfo, FlowSpec, Stage};

@@ -1,0 +1,553 @@
+//! Declarative M2Flow composition: the [`FlowSpec`] builder.
+//!
+//! A flow is declared as **stages** (worker groups with a logic factory,
+//! device demand, rank shape, and flow-order priority) plus **typed
+//! edges** (named channels binding a producer stage+method to a consumer
+//! stage+method, with a dequeue discipline and micro-batch granularity).
+//! Either side of an edge may instead be *the driver* — the controller
+//! thread that feeds sources, drains sinks, and pumps mid-flow
+//! aggregations.
+//!
+//! [`FlowSpec::validate`] checks the declaration (unknown stage
+//! references, duplicate channel names, consumer-only or dangling
+//! channels) and derives the stage dataflow graph. Cycles are allowed —
+//! they are collapsed by SCC condensation (`ConvertCircleToNode`, §3.4),
+//! and cyclic stages are exempted from device locking because they must
+//! run concurrently.
+//!
+//! The spec is executed by [`crate::flow::FlowDriver`], which resolves a
+//! placement, launches the groups, creates and wires every channel, and
+//! injects [`crate::channel::BoundPort`] handles into worker contexts.
+
+use std::collections::BTreeSet;
+
+use anyhow::{bail, Result};
+
+use super::graph::WorkflowGraph;
+use crate::channel::Dequeue;
+use crate::data::Payload;
+use crate::worker::LogicFactory;
+
+/// Per-rank logic-factory maker: called once per rank at group launch.
+pub type StageFactory = Box<dyn FnMut(usize) -> LogicFactory + Send>;
+
+/// How a stage's ranks map onto its allotted device block.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RankShape {
+    /// One SPMD rank per owned device (data-parallel streaming stages).
+    #[default]
+    PerDevice,
+    /// A single rank spanning the whole block (e.g. a trainer).
+    Single,
+}
+
+/// How many devices a stage wants under spatial placements.
+#[derive(Debug, Clone, Copy)]
+pub struct DeviceDemand {
+    /// Relative share when devices are split proportionally.
+    pub weight: f64,
+    /// Exact device count (overrides `weight`; still clamped to fit).
+    pub explicit: Option<usize>,
+}
+
+impl Default for DeviceDemand {
+    fn default() -> Self {
+        DeviceDemand { weight: 1.0, explicit: None }
+    }
+}
+
+/// Resolved stage declaration (built via [`Stage`]).
+pub struct StageSpec {
+    pub name: String,
+    pub shape: RankShape,
+    pub demand: DeviceDemand,
+    /// Flow-order priority (lower = earlier stage); doubles as the device
+    /// lock priority under time-shared placements. Defaults to insertion
+    /// order.
+    pub priority: Option<u64>,
+    pub(crate) factory: StageFactory,
+}
+
+/// Builder for one stage.
+pub struct Stage(StageSpec);
+
+impl Stage {
+    pub fn new(name: &str, factory: impl FnMut(usize) -> LogicFactory + Send + 'static) -> Stage {
+        Stage(StageSpec {
+            name: name.to_string(),
+            shape: RankShape::default(),
+            demand: DeviceDemand::default(),
+            priority: None,
+            factory: Box::new(factory),
+        })
+    }
+
+    /// One rank spanning the stage's whole device block.
+    pub fn single_rank(mut self) -> Stage {
+        self.0.shape = RankShape::Single;
+        self
+    }
+
+    /// One rank per owned device (the default).
+    pub fn ranks_per_device(mut self) -> Stage {
+        self.0.shape = RankShape::PerDevice;
+        self
+    }
+
+    /// Relative device share under proportional splits.
+    pub fn weight(mut self, w: f64) -> Stage {
+        self.0.demand.weight = w;
+        self
+    }
+
+    /// Exact device count under spatial placements.
+    pub fn devices(mut self, n: usize) -> Stage {
+        self.0.demand.explicit = Some(n);
+        self
+    }
+
+    /// Explicit flow-order priority (lower = earlier).
+    pub fn priority(mut self, p: u64) -> Stage {
+        self.0.priority = Some(p);
+        self
+    }
+}
+
+/// One side of an edge: a stage's method port, or the driver.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum EndpointSpec {
+    /// The controller thread running the flow.
+    Driver,
+    /// A worker stage: `method` is invoked when the flow starts, and the
+    /// channel is bound to the named `port` in the stage's context.
+    Stage { stage: String, method: String, port: String },
+}
+
+/// Resolved edge declaration (built via [`Edge`]).
+#[derive(Debug, Clone)]
+pub struct EdgeSpec {
+    pub channel: String,
+    pub producer: Option<EndpointSpec>,
+    pub consumer: Option<EndpointSpec>,
+    pub discipline: Dequeue,
+    /// Consumer-side micro-batch granularity (elastic pipelining unit).
+    pub granularity: usize,
+}
+
+/// Builder for one typed edge.
+#[derive(Debug, Clone)]
+pub struct Edge(EdgeSpec);
+
+impl Edge {
+    pub fn new(channel: &str) -> Edge {
+        Edge(EdgeSpec {
+            channel: channel.to_string(),
+            producer: None,
+            consumer: None,
+            discipline: Dequeue::Fifo,
+            granularity: 1,
+        })
+    }
+
+    /// Producer stage + streaming method; binds to the stage's "out" port.
+    pub fn produced_by(self, stage: &str, method: &str) -> Edge {
+        self.produced_at(stage, method, "out")
+    }
+
+    /// Producer stage + method with an explicit port name.
+    pub fn produced_at(mut self, stage: &str, method: &str, port: &str) -> Edge {
+        self.0.producer = Some(EndpointSpec::Stage {
+            stage: stage.to_string(),
+            method: method.to_string(),
+            port: port.to_string(),
+        });
+        self
+    }
+
+    /// The driver feeds this channel (a flow source or pump output).
+    pub fn produced_by_driver(mut self) -> Edge {
+        self.0.producer = Some(EndpointSpec::Driver);
+        self
+    }
+
+    /// Consumer stage + streaming method; binds to the stage's "in" port.
+    pub fn consumed_by(self, stage: &str, method: &str) -> Edge {
+        self.consumed_at(stage, method, "in")
+    }
+
+    /// Consumer stage + method with an explicit port name.
+    pub fn consumed_at(mut self, stage: &str, method: &str, port: &str) -> Edge {
+        self.0.consumer = Some(EndpointSpec::Stage {
+            stage: stage.to_string(),
+            method: method.to_string(),
+            port: port.to_string(),
+        });
+        self
+    }
+
+    /// The driver drains this channel (a flow sink or pump input).
+    pub fn consumed_by_driver(mut self) -> Edge {
+        self.0.consumer = Some(EndpointSpec::Driver);
+        self
+    }
+
+    pub fn fifo(mut self) -> Edge {
+        self.0.discipline = Dequeue::Fifo;
+        self
+    }
+
+    pub fn weighted(mut self) -> Edge {
+        self.0.discipline = Dequeue::Weighted;
+        self
+    }
+
+    pub fn balanced(mut self) -> Edge {
+        self.0.discipline = Dequeue::Balanced;
+        self
+    }
+
+    /// Consumer micro-batch size (the scheduler's granularity knob).
+    pub fn granularity(mut self, g: usize) -> Edge {
+        self.0.granularity = g.max(1);
+        self
+    }
+}
+
+/// Validated graph view of a spec.
+pub struct FlowGraphInfo {
+    /// Stage-level dataflow graph (driver endpoints bridged via pumps).
+    pub graph: WorkflowGraph,
+    /// SCC-condensed DAG (what Algorithm 1 schedules).
+    pub condensed: WorkflowGraph,
+    /// Stage membership of each condensed node.
+    pub members: Vec<Vec<String>>,
+    /// Stages in a multi-member SCC: they run concurrently by construction
+    /// and are therefore exempt from device locking.
+    pub cyclic: BTreeSet<String>,
+}
+
+/// A declarative macro flow: stages + typed edges + driver pumps.
+pub struct FlowSpec {
+    pub name: String,
+    pub(crate) stages: Vec<StageSpec>,
+    pub(crate) edges: Vec<EdgeSpec>,
+    /// Driver pass-throughs: (consumed channel, produced channel). Purely
+    /// declarative — they extend the dataflow graph across the driver so
+    /// scheduling sees e.g. `infer → (driver aggregation) → train` as
+    /// `infer → train`. The driver-side logic itself runs between
+    /// `FlowRun::start` and `FlowRun::finish`.
+    pub(crate) pumps: Vec<(String, String)>,
+    /// Extra invocation payloads per (stage, method).
+    pub(crate) call_args: Vec<(String, String, Payload)>,
+}
+
+impl FlowSpec {
+    pub fn new(name: &str) -> FlowSpec {
+        FlowSpec {
+            name: name.to_string(),
+            stages: Vec::new(),
+            edges: Vec::new(),
+            pumps: Vec::new(),
+            call_args: Vec::new(),
+        }
+    }
+
+    pub fn stage(mut self, s: Stage) -> FlowSpec {
+        self.stages.push(s.0);
+        self
+    }
+
+    pub fn edge(mut self, e: Edge) -> FlowSpec {
+        self.edges.push(e.0);
+        self
+    }
+
+    /// Declare that the driver moves data from `from_channel` (which it
+    /// consumes) to `to_channel` (which it produces).
+    pub fn pump(mut self, from_channel: &str, to_channel: &str) -> FlowSpec {
+        self.pumps.push((from_channel.to_string(), to_channel.to_string()));
+        self
+    }
+
+    /// Base payload for a stage method's flow invocation.
+    pub fn call_args(mut self, stage: &str, method: &str, args: Payload) -> FlowSpec {
+        self.call_args.push((stage.to_string(), method.to_string(), args));
+        self
+    }
+
+    pub fn stage_index(&self, name: &str) -> Option<usize> {
+        self.stages.iter().position(|s| s.name == name)
+    }
+
+    /// Effective flow-order priority of stage `idx`.
+    pub fn stage_priority(&self, idx: usize) -> u64 {
+        self.stages[idx].priority.unwrap_or(idx as u64)
+    }
+
+    /// Validate the declaration and derive its dataflow graph.
+    ///
+    /// Errors: no stages, duplicate stage names, duplicate channel names,
+    /// edges referencing unknown stages, consumer-only channels (no
+    /// producer), dangling channels (no consumer), driver-to-driver
+    /// channels, malformed pumps, and `call_args` for unknown stages.
+    /// Cycles are *not* errors: they condense into single schedulable
+    /// nodes, and their member stages are flagged in
+    /// [`FlowGraphInfo::cyclic`].
+    pub fn validate(&self) -> Result<FlowGraphInfo> {
+        if self.stages.is_empty() {
+            bail!("flow {:?}: no stages declared", self.name);
+        }
+        let mut names = BTreeSet::new();
+        for s in &self.stages {
+            if s.name.is_empty() {
+                bail!("flow {:?}: stage with empty name", self.name);
+            }
+            if !names.insert(s.name.as_str()) {
+                bail!("flow {:?}: duplicate stage {:?}", self.name, s.name);
+            }
+        }
+
+        let mut channels = BTreeSet::new();
+        // Each (stage, port) may carry exactly one channel: bindings are a
+        // per-group map keyed by port name, so a second edge on the same
+        // port would silently shadow the first at bind time.
+        let mut bound_ports: BTreeSet<(&str, &str)> = BTreeSet::new();
+        for e in &self.edges {
+            if !channels.insert(e.channel.as_str()) {
+                bail!("flow {:?}: duplicate channel name {:?}", self.name, e.channel);
+            }
+            for ep in [&e.producer, &e.consumer] {
+                if let Some(EndpointSpec::Stage { stage, port, .. }) = ep {
+                    if !bound_ports.insert((stage.as_str(), port.as_str())) {
+                        bail!(
+                            "flow {:?}: channel {:?} rebinds port {port:?} of stage {stage:?} \
+                             (already bound by another edge — give it a distinct port name)",
+                            self.name,
+                            e.channel
+                        );
+                    }
+                }
+            }
+            match &e.producer {
+                None => bail!(
+                    "flow {:?}: channel {:?} is consumer-only (no producer declared)",
+                    self.name,
+                    e.channel
+                ),
+                Some(EndpointSpec::Stage { stage, .. }) if self.stage_index(stage).is_none() => {
+                    bail!(
+                        "flow {:?}: channel {:?} produced by unknown stage {:?}",
+                        self.name,
+                        e.channel,
+                        stage
+                    )
+                }
+                _ => {}
+            }
+            match &e.consumer {
+                None => bail!(
+                    "flow {:?}: channel {:?} is dangling (no consumer declared)",
+                    self.name,
+                    e.channel
+                ),
+                Some(EndpointSpec::Stage { stage, .. }) if self.stage_index(stage).is_none() => {
+                    bail!(
+                        "flow {:?}: channel {:?} consumed by unknown stage {:?}",
+                        self.name,
+                        e.channel,
+                        stage
+                    )
+                }
+                _ => {}
+            }
+            if e.producer == Some(EndpointSpec::Driver) && e.consumer == Some(EndpointSpec::Driver)
+            {
+                bail!(
+                    "flow {:?}: channel {:?} never touches a stage",
+                    self.name,
+                    e.channel
+                );
+            }
+        }
+
+        for (from, to) in &self.pumps {
+            let fe = self
+                .edges
+                .iter()
+                .find(|e| &e.channel == from)
+                .ok_or_else(|| {
+                    anyhow::anyhow!("flow {:?}: pump reads unknown channel {from:?}", self.name)
+                })?;
+            let te = self
+                .edges
+                .iter()
+                .find(|e| &e.channel == to)
+                .ok_or_else(|| {
+                    anyhow::anyhow!("flow {:?}: pump feeds unknown channel {to:?}", self.name)
+                })?;
+            if fe.consumer != Some(EndpointSpec::Driver) {
+                bail!(
+                    "flow {:?}: pump source {from:?} is not consumed by the driver",
+                    self.name
+                );
+            }
+            if te.producer != Some(EndpointSpec::Driver) {
+                bail!(
+                    "flow {:?}: pump target {to:?} is not produced by the driver",
+                    self.name
+                );
+            }
+        }
+
+        for (stage, method, _) in &self.call_args {
+            if self.stage_index(stage).is_none() {
+                bail!(
+                    "flow {:?}: call_args for unknown stage {stage:?} (method {method:?})",
+                    self.name
+                );
+            }
+        }
+
+        // Stage dataflow graph: direct stage→stage edges, plus pump-bridged
+        // edges across the driver.
+        let mut graph = WorkflowGraph::new();
+        for s in &self.stages {
+            graph.add_node(&s.name);
+        }
+        for e in &self.edges {
+            if let (
+                Some(EndpointSpec::Stage { stage: p, .. }),
+                Some(EndpointSpec::Stage { stage: c, .. }),
+            ) = (&e.producer, &e.consumer)
+            {
+                if p != c {
+                    graph.add_edge(p, c);
+                }
+            }
+        }
+        for (from, to) in &self.pumps {
+            let p = self.edges.iter().find(|e| &e.channel == from).and_then(|e| match &e.producer {
+                Some(EndpointSpec::Stage { stage, .. }) => Some(stage.clone()),
+                _ => None,
+            });
+            let c = self.edges.iter().find(|e| &e.channel == to).and_then(|e| match &e.consumer {
+                Some(EndpointSpec::Stage { stage, .. }) => Some(stage.clone()),
+                _ => None,
+            });
+            if let (Some(p), Some(c)) = (p, c) {
+                if p != c {
+                    graph.add_edge(&p, &c);
+                }
+            }
+        }
+
+        let (condensed, members) = graph.condense();
+        let mut cyclic = BTreeSet::new();
+        for m in &members {
+            if m.len() > 1 {
+                for n in m {
+                    cyclic.insert(n.clone());
+                }
+            }
+        }
+        Ok(FlowGraphInfo { graph, condensed, members, cyclic })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::worker::{WorkerCtx, WorkerLogic};
+
+    struct Nop;
+    impl WorkerLogic for Nop {
+        fn call(&mut self, _ctx: &WorkerCtx, _m: &str, arg: Payload) -> Result<Payload> {
+            Ok(arg)
+        }
+    }
+
+    fn nop(name: &str) -> Stage {
+        Stage::new(name, |_| Box::new(|_: &WorkerCtx| Ok(Box::new(Nop) as Box<dyn WorkerLogic>)))
+    }
+
+    #[test]
+    fn builder_defaults() {
+        let spec = FlowSpec::new("t")
+            .stage(nop("a").weight(2.0).devices(3).single_rank())
+            .stage(nop("b"))
+            .edge(Edge::new("x").produced_by("a", "m").consumed_by("b", "m").weighted().granularity(4));
+        assert_eq!(spec.stages[0].demand.explicit, Some(3));
+        assert_eq!(spec.stages[0].shape, RankShape::Single);
+        assert_eq!(spec.stages[1].shape, RankShape::PerDevice);
+        assert_eq!(spec.stage_priority(1), 1, "insertion order default");
+        assert_eq!(spec.edges[0].granularity, 4);
+        assert_eq!(spec.edges[0].discipline, Dequeue::Weighted);
+        spec.validate().unwrap();
+    }
+
+    #[test]
+    fn linear_flow_graph_matches_declaration() {
+        let spec = FlowSpec::new("grpo-shape")
+            .stage(nop("rollout"))
+            .stage(nop("infer"))
+            .stage(nop("train"))
+            .edge(Edge::new("prompts").produced_by_driver().consumed_by("rollout", "gen"))
+            .edge(Edge::new("rollout").produced_by("rollout", "gen").consumed_by("infer", "lp"))
+            .edge(Edge::new("scored").produced_by("infer", "lp").consumed_by_driver())
+            .edge(Edge::new("train").produced_by_driver().consumed_by("train", "ts"))
+            .pump("scored", "train");
+        let info = spec.validate().unwrap();
+        assert_eq!(info.graph.n(), 3);
+        assert_eq!(info.graph.edges.len(), 2, "rollout→infer plus pump-bridged infer→train");
+        assert!(info.cyclic.is_empty());
+        assert!(info.graph.topo_order().is_ok());
+    }
+
+    #[test]
+    fn pump_requires_driver_endpoints() {
+        let spec = FlowSpec::new("t")
+            .stage(nop("a"))
+            .stage(nop("b"))
+            .edge(Edge::new("x").produced_by("a", "m").consumed_by("b", "m"))
+            .pump("x", "x");
+        let err = spec.validate().unwrap_err().to_string();
+        assert!(err.contains("pump"), "{err}");
+    }
+
+    #[test]
+    fn port_shadowing_rejected() {
+        // Two channels feeding the same default "in" port of one stage
+        // would silently shadow each other at bind time.
+        let spec = FlowSpec::new("t")
+            .stage(nop("a"))
+            .edge(Edge::new("x").produced_by_driver().consumed_by("a", "m"))
+            .edge(Edge::new("y").produced_by_driver().consumed_by("a", "m"));
+        let err = spec.validate().unwrap_err().to_string();
+        assert!(err.contains("rebinds port"), "{err}");
+
+        // Distinct port names on the same stage+method are fine.
+        let spec = FlowSpec::new("t")
+            .stage(nop("a"))
+            .edge(Edge::new("x").produced_by_driver().consumed_at("a", "m", "left"))
+            .edge(Edge::new("y").produced_by_driver().consumed_at("a", "m", "right"));
+        spec.validate().unwrap();
+    }
+
+    #[test]
+    fn driver_only_channel_rejected() {
+        let spec = FlowSpec::new("t")
+            .stage(nop("a"))
+            .edge(Edge::new("x").produced_by_driver().consumed_by_driver());
+        assert!(spec.validate().is_err());
+    }
+
+    #[test]
+    fn call_args_unknown_stage_rejected() {
+        let spec = FlowSpec::new("t")
+            .stage(nop("a"))
+            .edge(Edge::new("x").produced_by_driver().consumed_by("a", "m"))
+            .call_args("ghost", "m", Payload::new());
+        let err = spec.validate().unwrap_err().to_string();
+        assert!(err.contains("ghost"), "{err}");
+    }
+}

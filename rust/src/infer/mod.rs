@@ -138,20 +138,16 @@ impl WorkerLogic for InferWorker {
                 Ok(Payload::from_named(vec![("logp_old", Tensor::concat0(&rows)?)]))
             }
             "logprob_stream" => {
-                let in_ch = ctx
-                    .channels
-                    .get(arg.meta_str("in_channel").unwrap_or("rollout"))
-                    .ok_or_else(|| anyhow!("missing in channel"))?;
-                let out_ch = ctx
-                    .channels
-                    .get(arg.meta_str("out_channel").unwrap_or("scored"))
-                    .ok_or_else(|| anyhow!("missing out channel"))?;
-                let gran = arg.meta_i64("granularity").unwrap_or(8).max(1) as usize;
+                // Ports bound by the flow driver: "in" streams scored
+                // responses in at the scheduled granularity, "out" carries
+                // them onward with log-probs attached.
+                let in_ch = ctx.port("in")?;
+                let out_ch = ctx.port("out")?;
                 let me = ctx.endpoint();
                 let mut processed = 0usize;
                 let result = (|| -> Result<()> {
                 loop {
-                    let items = in_ch.get_batch(&me, gran);
+                    let items = in_ch.recv_batch(&me);
                     if items.is_empty() {
                         break;
                     }
@@ -173,14 +169,14 @@ impl WorkerLogic for InferWorker {
                         }
                         p.tensors.push(lp);
                         let w = p.meta_i64("gen_len").unwrap_or(1) as f64;
-                        out_ch.put_weighted(&me, p, w)?;
+                        out_ch.send_weighted(&me, p, w)?;
                         processed += 1;
                     }
                 }
                 Ok(())
                 })();
                 // Always close our producer slot (fail-fast propagation).
-                out_ch.producer_done(&me);
+                out_ch.done(&me);
                 result?;
                 Ok(Payload::new().set_meta("processed", processed))
             }

@@ -182,20 +182,16 @@ impl WorkerLogic for RolloutWorker {
                 Ok(reply)
             }
             "generate_stream" => {
-                let in_ch = ctx
-                    .channels
-                    .get(arg.meta_str("in_channel").unwrap_or("prompts"))
-                    .ok_or_else(|| anyhow!("missing in channel"))?;
-                let out_ch = ctx
-                    .channels
-                    .get(arg.meta_str("out_channel").unwrap_or("rollout"))
-                    .ok_or_else(|| anyhow!("missing out channel"))?;
-                let gran = arg.meta_i64("granularity").unwrap_or(8).max(1) as usize;
+                // Channels arrive pre-bound by the flow driver: "in" is the
+                // prompt edge (granularity = the scheduled micro-batch),
+                // "out" the per-response edge (weight = generated length).
+                let in_ch = ctx.port("in")?;
+                let out_ch = ctx.port("out")?;
                 let me = ctx.endpoint();
                 let mut produced = 0usize;
                 let result = (|| -> Result<()> {
                     loop {
-                        let items = in_ch.get_batch(&me, gran);
+                        let items = in_ch.recv_batch(&me);
                         if items.is_empty() {
                             return Ok(());
                         }
@@ -203,14 +199,14 @@ impl WorkerLogic for RolloutWorker {
                         let outs = self.generate_payloads(payloads, ctx)?;
                         for o in outs {
                             let w = o.meta_i64("gen_len").unwrap_or(1) as f64;
-                            out_ch.put_weighted(&me, o, w)?;
+                            out_ch.send_weighted(&me, o, w)?;
                             produced += 1;
                         }
                     }
                 })();
                 // Always close our producer slot — a dying producer must
                 // not wedge downstream consumers (fail-fast, §4).
-                out_ch.producer_done(&me);
+                out_ch.done(&me);
                 result?;
                 Ok(Payload::new().set_meta("produced", produced))
             }

@@ -6,6 +6,7 @@
 //! and pipeline. `assignments()` flattens the tree into per-worker
 //! directives the workflow runner applies.
 
+use crate::config::PlacementMode;
 use crate::util::json::Value;
 
 #[derive(Debug, Clone)]
@@ -73,6 +74,22 @@ impl Plan {
                 left.walk(shared, stage, out);
                 right.walk(shared, stage, out);
             }
+        }
+    }
+
+    /// Map the plan's sharing shape onto a concrete placement mode: every
+    /// worker time-shares → collocated; none do → disaggregated; a mix →
+    /// hybrid. This is how a spec-planned Algorithm-1 result is applied by
+    /// the flow driver.
+    pub fn placement_mode(&self) -> PlacementMode {
+        let assignments = self.assignments();
+        let sharing = assignments.iter().filter(|a| a.shares_devices).count();
+        if sharing == assignments.len() {
+            PlacementMode::Collocated
+        } else if sharing == 0 {
+            PlacementMode::Disaggregated
+        } else {
+            PlacementMode::Hybrid
         }
     }
 
@@ -174,6 +191,30 @@ mod tests {
             time: 1.2,
         };
         assert!(p.assignments().iter().all(|x| !x.shares_devices));
+    }
+
+    #[test]
+    fn placement_mode_mapping() {
+        let temporal = Plan::Temporal {
+            first: Box::new(leaf("x", 2, 1.0)),
+            second: Box::new(leaf("y", 2, 2.0)),
+            time: 3.0,
+        };
+        assert_eq!(temporal.placement_mode(), PlacementMode::Collocated);
+        let spatial = Plan::Spatial {
+            left: Box::new(leaf("a", 2, 1.0)),
+            right: Box::new(leaf("b", 2, 1.0)),
+            chunks: 8,
+            time: 1.2,
+        };
+        assert_eq!(spatial.placement_mode(), PlacementMode::Disaggregated);
+        let mixed = Plan::Spatial {
+            left: Box::new(leaf("gen", 2, 1.0)),
+            right: Box::new(temporal),
+            chunks: 4,
+            time: 4.0,
+        };
+        assert_eq!(mixed.placement_mode(), PlacementMode::Hybrid);
     }
 
     #[test]

@@ -336,18 +336,16 @@ impl WorkerLogic for TrainWorker {
                     .set_meta("version", self.weight_version))
             }
             "train_stream" => {
-                let in_ch = ctx
-                    .channels
-                    .get(arg.meta_str("in_channel").unwrap_or("scored"))
-                    .ok_or_else(|| anyhow!("missing in channel"))?;
-                let mb = arg.meta_i64("granularity").unwrap_or(8).max(1) as usize;
+                // The flow driver binds "in" to the advantage-labelled
+                // training edge; its granularity is the micro-batch size.
+                let in_ch = ctx.port("in")?;
                 let me = ctx.endpoint();
                 let mut steps = 0usize;
                 let mut skipped = 0usize;
                 let mut loss_sum = 0f64;
                 let mut last: Option<TrainStats> = None;
                 loop {
-                    let items = in_ch.get_batch(&me, mb);
+                    let items = in_ch.recv_batch(&me);
                     if items.is_empty() {
                         break;
                     }

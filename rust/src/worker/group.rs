@@ -13,7 +13,7 @@ use anyhow::{anyhow, bail, Result};
 use super::failure::FailureMonitor;
 use super::runner::{run_rank, Ctl, LockMode};
 use super::{LogicFactory, WorkerCtx};
-use crate::channel::{ChannelRegistry, DeviceLockMgr};
+use crate::channel::{ChannelRegistry, DeviceLockMgr, PortBindings};
 use crate::cluster::{Cluster, DeviceSet};
 use crate::comm::CommManager;
 use crate::data::Payload;
@@ -55,6 +55,9 @@ pub struct WorkerGroup {
     pub name: String,
     ranks: Vec<Rank>,
     services: Services,
+    /// Shared port table all ranks read; the flow driver rebinds it at the
+    /// start of every run.
+    ports: PortBindings,
 }
 
 impl WorkerGroup {
@@ -66,6 +69,7 @@ impl WorkerGroup {
         placements: Vec<DeviceSet>,
         mut make_factory: impl FnMut(usize) -> LogicFactory,
     ) -> Result<WorkerGroup> {
+        let ports = PortBindings::new();
         let mut ranks = Vec::with_capacity(placements.len());
         for (rank, devices) in placements.into_iter().enumerate() {
             let endpoint = format!("{name}/{rank}");
@@ -82,6 +86,7 @@ impl WorkerGroup {
                 locks: services.locks.clone(),
                 metrics: services.metrics.clone(),
                 mailbox,
+                ports: ports.clone(),
             };
             let factory = make_factory(rank);
             let (tx, rx) = channel::<Ctl>();
@@ -95,11 +100,16 @@ impl WorkerGroup {
         // n_ranks patch: ranks were created with 0; groups are small and the
         // value is only informational, so re-broadcasting is skipped — the
         // count is served by the group itself.
-        Ok(WorkerGroup { name: name.to_string(), ranks, services: services.clone() })
+        Ok(WorkerGroup { name: name.to_string(), ranks, services: services.clone(), ports })
     }
 
     pub fn n_ranks(&self) -> usize {
         self.ranks.len()
+    }
+
+    /// The group's shared port table (bound by the flow driver each run).
+    pub fn ports(&self) -> &PortBindings {
+        &self.ports
     }
 
     pub fn devices_of(&self, rank: usize) -> &DeviceSet {

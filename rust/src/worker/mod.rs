@@ -18,7 +18,7 @@ pub mod failure;
 pub mod group;
 pub mod runner;
 
-use crate::channel::{ChannelRegistry, DeviceLockMgr};
+use crate::channel::{BoundPort, ChannelRegistry, DeviceLockMgr, PortBindings};
 use crate::cluster::{Cluster, DeviceSet};
 use crate::comm::{CommManager, Mailbox};
 use crate::data::Payload;
@@ -28,7 +28,7 @@ pub use failure::{FailureMonitor, FailureReport};
 pub use group::{GroupHandle, WorkerGroup};
 pub use runner::LockMode;
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 /// Execution context handed to worker logic.
 pub struct WorkerCtx {
@@ -49,12 +49,28 @@ pub struct WorkerCtx {
     pub metrics: Metrics,
     /// This rank's own mailbox for p2p messages.
     pub mailbox: Mailbox,
+    /// Channels the `flow::FlowDriver` bound to this group's named ports
+    /// (shared by all ranks; rebound per flow run).
+    pub ports: PortBindings,
 }
 
 impl WorkerCtx {
     /// Fully-qualified endpoint name of this rank ("rollout/0").
     pub fn endpoint(&self) -> &str {
         &self.endpoint
+    }
+
+    /// The channel bound to one of this worker's named ports ("in", "out",
+    /// "obs", …) by the flow driver, with the edge's dequeue discipline
+    /// and granularity attached. Errors when the group was launched
+    /// outside a driven flow (or the port was never declared on an edge).
+    pub fn port(&self, name: &str) -> Result<BoundPort> {
+        self.ports.get(name).ok_or_else(|| {
+            anyhow!(
+                "{}: no channel bound to port {name:?} (stage launched outside a FlowDriver?)",
+                self.endpoint
+            )
+        })
     }
 
     /// Endpoint of a peer rank in another group.

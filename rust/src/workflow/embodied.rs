@@ -1,9 +1,11 @@
-//! The embodied PPO workflow runner (generator ⇄ simulator loop).
+//! The embodied PPO workflow runner (generator ⇄ simulator loop),
+//! declared as a cyclic [`FlowSpec`].
 //!
-//! Each iteration runs `horizon` simulator steps against the acting
-//! policy through a pair of channels (the cyclic data flow of Figure 1),
-//! then PPO-updates the policy on the collected trajectory. Placement
-//! modes:
+//! The spec declares two stages joined by a channel *cycle* — `obs` from
+//! sim to policy, `act` back from policy to sim (the cyclic data flow of
+//! Figure 1). The [`FlowDriver`] condenses the cycle into one schedulable
+//! node and exempts both stages from device locking (they must run
+//! concurrently). Placement modes:
 //!
 //! * `Collocated` — simulator and policy share every device; for the
 //!   CPU-bound LIBERO-like profile this devotes all resources to rollout
@@ -15,16 +17,17 @@
 
 use std::time::Instant;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
-use crate::cluster::{Cluster, DeviceSet};
+use crate::cluster::Cluster;
 use crate::config::{PlacementMode, RunConfig};
 use crate::data::Payload;
 use crate::embodied::env::EnvKind;
 use crate::embodied::ood::OodMode;
 use crate::embodied::worker::{PolicyCfg, PolicyWorker, SimCfg, SimWorker};
+use crate::flow::{Edge, FlowDriver, FlowSpec, Stage};
 use crate::worker::group::Services;
-use crate::worker::{LockMode, WorkerGroup, WorkerLogic};
+use crate::worker::{LockMode, WorkerLogic};
 
 /// Baseline toggles (SimpleVLA-RL / RL4VLA-like inefficiencies, §5.3).
 #[derive(Debug, Clone, Default)]
@@ -83,40 +86,8 @@ impl EmbodiedReport {
     }
 }
 
-/// Run embodied PPO training; returns the report.
-pub fn run_embodied(cfg: &RunConfig, opts: &EmbodiedOpts) -> Result<EmbodiedReport> {
-    let cluster = Cluster::new(cfg.cluster.clone());
-    let services = Services::new(cluster.clone());
-    let n = cluster.num_devices();
-    let kind = EnvKind::parse(&cfg.embodied.env_kind);
-
-    // Placement: pair sim/policy ranks. Collocated shares devices (lock
-    // unnecessary between sim and policy: the sim holds no model weights,
-    // and LIBERO's sim is CPU-only); hybrid/disagg split the devices.
-    let mode = match cfg.sched.mode {
-        PlacementMode::Auto => {
-            // Heuristic from the paper's own findings: CPU-bound sims favor
-            // collocated, GPU sims favor hybrid.
-            if kind == EnvKind::Libero { PlacementMode::Collocated } else { PlacementMode::Hybrid }
-        }
-        m => m,
-    };
-    let (sim_dev, pol_dev, mode_name) = match mode {
-        PlacementMode::Collocated => (DeviceSet::range(0, n), DeviceSet::range(0, n), "collocated"),
-        PlacementMode::Hybrid | PlacementMode::Disaggregated => {
-            if n < 2 {
-                bail!("hybrid embodied needs ≥2 devices");
-            }
-            let s = (n / 2).max(1);
-            (
-                DeviceSet::range(0, s),
-                DeviceSet::range(s, n - s),
-                if mode == PlacementMode::Hybrid { "hybrid" } else { "disaggregated" },
-            )
-        }
-        PlacementMode::Auto => unreachable!(),
-    };
-
+/// Declare the cyclic sim ⇄ policy flow.
+fn embodied_spec(cfg: &RunConfig, opts: &EmbodiedOpts, kind: EnvKind) -> FlowSpec {
     let sim_cfg = SimCfg {
         num_envs: cfg.embodied.num_envs,
         horizon: cfg.embodied.horizon as u16,
@@ -135,17 +106,63 @@ pub fn run_embodied(cfg: &RunConfig, opts: &EmbodiedOpts) -> Result<EmbodiedRepo
         double_forward: opts.double_forward,
     };
 
-    let sim = WorkerGroup::launch("sim", &services, vec![sim_dev], |_| {
-        let c = sim_cfg.clone();
-        Box::new(move |_ctx| Ok(Box::new(SimWorker::new(c)) as Box<dyn WorkerLogic>))
-    })?;
-    let policy = WorkerGroup::launch("policy", &services, vec![pol_dev], |_| {
-        let c = pol_cfg.clone();
-        Box::new(move |_ctx| Ok(Box::new(PolicyWorker::new(c)) as Box<dyn WorkerLogic>))
-    })?;
-    sim.onload().context("sim onload")?;
-    policy.onload().context("policy onload")?;
-    policy
+    FlowSpec::new("embodied-ppo")
+        .stage(
+            Stage::new("sim", move |_rank| {
+                let c = sim_cfg.clone();
+                Box::new(move |_ctx| Ok(Box::new(SimWorker::new(c)) as Box<dyn WorkerLogic>))
+            })
+            .single_rank(),
+        )
+        .stage(
+            Stage::new("policy", move |_rank| {
+                let c = pol_cfg.clone();
+                Box::new(move |_ctx| Ok(Box::new(PolicyWorker::new(c)) as Box<dyn WorkerLogic>))
+            })
+            .single_rank(),
+        )
+        .edge(
+            Edge::new("obs")
+                .produced_at("sim", "serve_rollout", "obs")
+                .consumed_at("policy", "collect_and_train", "obs"),
+        )
+        .edge(
+            Edge::new("actions")
+                .produced_at("policy", "collect_and_train", "act")
+                .consumed_at("sim", "serve_rollout", "act"),
+        )
+        .call_args(
+            "policy",
+            "collect_and_train",
+            Payload::new().set_meta("horizon", cfg.embodied.horizon).set_meta("train", 1i64),
+        )
+}
+
+/// Run embodied PPO training; returns the report.
+pub fn run_embodied(cfg: &RunConfig, opts: &EmbodiedOpts) -> Result<EmbodiedReport> {
+    let services = Services::new(Cluster::new(cfg.cluster.clone()));
+    let kind = EnvKind::parse(&cfg.embodied.env_kind);
+
+    // Auto: heuristic from the paper's own findings — CPU-bound sims favor
+    // collocated, GPU sims favor hybrid. (Algorithm-1 auto planning skips
+    // cyclic flows; their stages co-run regardless of placement.)
+    let mode = match cfg.sched.mode {
+        PlacementMode::Auto => {
+            if kind == EnvKind::Libero {
+                PlacementMode::Collocated
+            } else {
+                PlacementMode::Hybrid
+            }
+        }
+        m => m,
+    };
+
+    let spec = embodied_spec(cfg, opts, kind);
+    let driver = FlowDriver::launch(spec, &services, mode)?;
+    // Cyclic stages are never locked, so both pre-load and stay resident.
+    driver.onload_pipelined()?;
+    driver
+        .group("policy")?
         .invoke_rank(0, "init_weights", Payload::new().set_meta("seed", cfg.seed), LockMode::None)
         .wait()
         .context("policy init")?;
@@ -153,26 +170,19 @@ pub fn run_embodied(cfg: &RunConfig, opts: &EmbodiedOpts) -> Result<EmbodiedRepo
     let mut iters = Vec::new();
     for iter in 0..cfg.iters {
         let t0 = Instant::now();
-        let obs_ch = services.channels.create(&format!("obs@{iter}"));
-        let act_ch = services.channels.create(&format!("actions@{iter}"));
-        obs_ch.register_producer("sim/0");
-        act_ch.register_producer("policy/0");
-
-        let sim_arg = Payload::new()
-            .set_meta("obs_channel", obs_ch.name())
-            .set_meta("act_channel", act_ch.name());
-        let h_sim = sim.invoke_rank(0, "serve_rollout", sim_arg, LockMode::None);
-
-        let pol_arg = Payload::new()
-            .set_meta("obs_channel", obs_ch.name())
-            .set_meta("act_channel", act_ch.name())
-            .set_meta("horizon", cfg.embodied.horizon)
-            .set_meta("train", 1i64);
-        let h_pol = policy.invoke_rank(0, "collect_and_train", pol_arg, LockMode::None);
-
-        let sim_out = h_sim.wait().context("sim rollout")?.remove(0);
-        let pol_out = h_pol.wait().context("policy collect+train")?.remove(0);
+        let mut run = driver.begin()?;
+        run.start()?;
+        let report = run.finish()?;
         let secs = t0.elapsed().as_secs_f64();
+
+        let sim_out = report
+            .outputs("sim", "serve_rollout")
+            .and_then(|o| o.first())
+            .ok_or_else(|| anyhow!("sim produced no output"))?;
+        let pol_out = report
+            .outputs("policy", "collect_and_train")
+            .and_then(|o| o.first())
+            .ok_or_else(|| anyhow!("policy produced no output"))?;
 
         let s = EmbodiedIter {
             iter,
@@ -184,8 +194,12 @@ pub fn run_embodied(cfg: &RunConfig, opts: &EmbodiedOpts) -> Result<EmbodiedRepo
         };
         if opts.verbose {
             println!(
-                "[{mode_name}] iter {iter}: {:.2}s, {:.2} batch/s, reward {:.3}, success {:.2}",
-                s.secs, s.batches_per_sec, s.mean_reward, s.success_rate
+                "[{}] iter {iter}: {:.2}s, {:.2} batch/s, reward {:.3}, success {:.2}",
+                driver.mode(),
+                s.secs,
+                s.batches_per_sec,
+                s.mean_reward,
+                s.success_rate
             );
         }
         iters.push(s);
@@ -194,7 +208,7 @@ pub fn run_embodied(cfg: &RunConfig, opts: &EmbodiedOpts) -> Result<EmbodiedRepo
         }
     }
 
-    Ok(EmbodiedReport { iters, breakdown: services.metrics.breakdown(), mode: mode_name })
+    Ok(EmbodiedReport { iters, breakdown: services.metrics.breakdown(), mode: driver.mode() })
 }
 
 /// Evaluate a trained policy's success rate under an OOD mode without

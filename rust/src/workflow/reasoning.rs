@@ -1,15 +1,17 @@
-//! The GRPO reasoning-RL workflow runner.
+//! The GRPO reasoning-RL workflow runner, declared as a [`FlowSpec`].
 //!
-//! One iteration (the macro flow, written imperatively exactly as Figure 5b
-//! sketches):
+//! One iteration (the macro flow of Figure 5b, now declarative):
 //!
 //! ```text
 //! prompts ──> rollout.generate_stream ──> infer.logprob_stream ──> scored
-//! scored  ──(runner: group-normalize advantages per prompt)──> train items
-//! train items ──> trainer.train_stream ──> weight sync back to rollout/infer
+//! scored  ──(driver pump: group-normalize advantages per prompt)──> train
+//! train   ──> train.train_stream ──> weight sync back to rollout/infer
 //! ```
 //!
-//! The same code runs under every placement mode; only `Placement` differs:
+//! The spec declares three stages and four typed edges; the
+//! [`FlowDriver`] validates the graph, creates and wires every channel,
+//! and applies the placement — the same declaration runs under every
+//! mode:
 //!
 //! * `Collocated`    — every group spans all devices; phases serialize via
 //!   the device lock (rollout prio 0, infer 1, train 2) with automatic
@@ -18,28 +20,29 @@
 //!   rest; everything streams concurrently (elastic pipelining).
 //! * `Hybrid`        — rollout disaggregated; infer and train time-share
 //!   the remaining devices via the lock.
-//! * `Auto`          — profile, trace the graph, run Algorithm 1, then
-//!   apply the chosen plan.
+//! * `Auto`          — profile, run Algorithm 1 over the spec's declared
+//!   graph, then apply the chosen plan.
 
-use std::time::Instant;
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
-use crate::cluster::{Cluster, DeviceSet};
+use crate::cluster::Cluster;
 use crate::config::{PlacementMode, RunConfig};
 use crate::data::{Payload, Tensor};
-use crate::flow::WorkflowGraph;
+use crate::flow::{Edge, FlowDriver, FlowSpec, Stage};
 use crate::infer::{InferCfg, InferWorker};
 use crate::metrics::Reduce;
 use crate::model::{TaskGen, Tokenizer};
 use crate::rollout::worker::{RolloutCfg, RolloutWorker};
 use crate::runtime::Manifest;
-use crate::sched::{ProfileDb, SchedProblem, Scheduler};
+use crate::sched::ProfileDb;
 use crate::train::advantage::group_normalize;
 use crate::train::worker::{TrainCfg, TrainWorker};
 use crate::util::json::Value;
 use crate::worker::group::Services;
-use crate::worker::{LockMode, WorkerGroup, WorkerLogic};
+use crate::worker::{LockMode, WorkerLogic};
 
 /// Baseline/ablation toggles layered on a [`RunConfig`].
 #[derive(Debug, Clone, Default)]
@@ -130,101 +133,22 @@ impl GrpoReport {
     }
 }
 
-/// Resolved placement directives for the three groups.
-struct Placement {
-    rollout: Vec<DeviceSet>,
-    infer: Vec<DeviceSet>,
-    train: Vec<DeviceSet>,
-    rollout_lock: LockMode,
-    infer_lock: LockMode,
-    train_lock: LockMode,
-    mode: &'static str,
+/// Rollout's device share under spatial placements — kept identical to the
+/// pre-declarative heuristic: an explicit `gen_devices`, else 2/3 of the
+/// cluster, always leaving ≥1 device for the rest.
+fn gen_share(cfg: &RunConfig) -> usize {
+    let n = cfg.cluster.total_devices();
+    let cap = n.saturating_sub(1).max(1);
+    if cfg.sched.gen_devices > 0 {
+        cfg.sched.gen_devices.min(cap)
+    } else {
+        (n * 2 / 3).max(1).min(cap)
+    }
 }
 
-fn resolve_placement(cfg: &RunConfig, cluster: &Cluster, mode: PlacementMode) -> Result<Placement> {
-    let n = cluster.num_devices();
-    let one_per = |ids: std::ops::Range<usize>| -> Vec<DeviceSet> {
-        ids.map(|i| DeviceSet::range(i, 1)).collect()
-    };
-    Ok(match mode {
-        PlacementMode::Collocated => Placement {
-            rollout: one_per(0..n),
-            infer: one_per(0..n),
-            train: vec![DeviceSet::range(0, n)],
-            rollout_lock: LockMode::Device { priority: 0 },
-            infer_lock: LockMode::Device { priority: 1 },
-            train_lock: LockMode::Device { priority: 2 },
-            mode: "collocated",
-        },
-        PlacementMode::Disaggregated => {
-            let g = if cfg.sched.gen_devices > 0 {
-                cfg.sched.gen_devices.min(n.saturating_sub(2).max(1))
-            } else {
-                (n * 2 / 3).max(1).min(n - 1)
-            };
-            if n < 2 {
-                bail!("disaggregated mode needs ≥2 devices");
-            }
-            let rest = n - g;
-            let infer_n = (rest / 2).max(1);
-            let train_n = rest - infer_n;
-            if train_n > 0 {
-                Placement {
-                    rollout: one_per(0..g),
-                    infer: one_per(g..g + infer_n),
-                    train: vec![DeviceSet::range(g + infer_n, train_n)],
-                    rollout_lock: LockMode::None,
-                    infer_lock: LockMode::None,
-                    train_lock: LockMode::None,
-                    mode: "disaggregated",
-                }
-            } else {
-                // Not enough devices for a three-way split: infer and train
-                // time-share the non-rollout devices.
-                Placement {
-                    rollout: one_per(0..g),
-                    infer: one_per(g..n),
-                    train: vec![DeviceSet::range(g, rest)],
-                    rollout_lock: LockMode::None,
-                    infer_lock: LockMode::Device { priority: 1 },
-                    train_lock: LockMode::Device { priority: 2 },
-                    mode: "disaggregated",
-                }
-            }
-        }
-        PlacementMode::Hybrid => {
-            if n < 2 {
-                bail!("hybrid mode needs ≥2 devices");
-            }
-            let g = if cfg.sched.gen_devices > 0 { cfg.sched.gen_devices.min(n - 1) } else { (n * 2 / 3).max(1).min(n - 1) };
-            let rest = n - g;
-            Placement {
-                rollout: one_per(0..g),
-                infer: one_per(g..n),
-                train: vec![DeviceSet::range(g, rest)],
-                rollout_lock: LockMode::None,
-                infer_lock: LockMode::Device { priority: 1 },
-                train_lock: LockMode::Device { priority: 2 },
-                mode: "hybrid",
-            }
-        }
-        PlacementMode::Auto => unreachable!("Auto resolved before placement"),
-    })
-}
-
-/// Launch the three worker groups under a placement.
-struct Groups {
-    rollout: WorkerGroup,
-    infer: WorkerGroup,
-    train: WorkerGroup,
-}
-
-fn launch_groups(
-    cfg: &RunConfig,
-    opts: &RunnerOpts,
-    services: &Services,
-    placement: &Placement,
-) -> Result<Groups> {
+/// Declare the GRPO macro flow: three stages, four typed edges, one
+/// driver pump (the per-prompt advantage aggregation).
+fn grpo_spec(cfg: &RunConfig, opts: &RunnerOpts, gran: usize) -> Result<FlowSpec> {
     let manifest = Manifest::load(&cfg.artifacts_dir)?;
     let model = manifest.model(&cfg.model)?;
     let full_batch = model.granularities("decode").into_iter().max().unwrap_or(32);
@@ -247,58 +171,78 @@ fn launch_groups(
         ratio_early_stop: cfg.train.ratio_early_stop,
     };
 
-    let rollout = WorkerGroup::launch("rollout", services, placement.rollout.clone(), |_| {
-        let c = rollout_cfg.clone();
-        Box::new(move |_ctx| Ok(Box::new(RolloutWorker::new(c)) as Box<dyn WorkerLogic>))
-    })?;
-    let infer = WorkerGroup::launch("infer", services, placement.infer.clone(), |_| {
-        let c = infer_cfg.clone();
-        Box::new(move |_ctx| Ok(Box::new(InferWorker::new(c)) as Box<dyn WorkerLogic>))
-    })?;
-    let train = WorkerGroup::launch("train", services, placement.train.clone(), |_| {
-        let c = train_cfg.clone();
-        Box::new(move |_ctx| Ok(Box::new(TrainWorker::new(c)) as Box<dyn WorkerLogic>))
-    })?;
-    Ok(Groups { rollout, infer, train })
+    Ok(FlowSpec::new("grpo")
+        .stage(
+            Stage::new("rollout", move |_rank| {
+                let c = rollout_cfg.clone();
+                Box::new(move |_ctx| Ok(Box::new(RolloutWorker::new(c)) as Box<dyn WorkerLogic>))
+            })
+            .ranks_per_device()
+            .weight(2.0)
+            .devices(gen_share(cfg)),
+        )
+        .stage(
+            Stage::new("infer", move |_rank| {
+                let c = infer_cfg.clone();
+                Box::new(move |_ctx| Ok(Box::new(InferWorker::new(c)) as Box<dyn WorkerLogic>))
+            })
+            .ranks_per_device(),
+        )
+        .stage(
+            Stage::new("train", move |_rank| {
+                let c = train_cfg.clone();
+                Box::new(move |_ctx| Ok(Box::new(TrainWorker::new(c)) as Box<dyn WorkerLogic>))
+            })
+            .single_rank(),
+        )
+        .edge(Edge::new("prompts").produced_by_driver().consumed_by("rollout", "generate_stream").granularity(gran))
+        .edge(
+            Edge::new("rollout")
+                .produced_by("rollout", "generate_stream")
+                .consumed_by("infer", "logprob_stream")
+                .weighted()
+                .granularity(gran),
+        )
+        .edge(Edge::new("scored").produced_by("infer", "logprob_stream").consumed_by_driver().weighted())
+        .edge(
+            Edge::new("train")
+                .produced_by_driver()
+                .consumed_by("train", "train_stream")
+                .weighted()
+                .granularity(cfg.train.micro_batch),
+        )
+        .pump("scored", "train"))
 }
 
 /// Run GRPO for `cfg.iters` iterations under the configured mode.
 pub fn run_grpo(cfg: &RunConfig, opts: &RunnerOpts) -> Result<GrpoReport> {
-    let cluster = Cluster::new(cfg.cluster.clone());
-    let services = Services::new(cluster.clone());
+    let services = Services::new(Cluster::new(cfg.cluster.clone()));
+    let gran = if cfg.sched.granularity > 0 { cfg.sched.granularity } else { 8 };
 
-    // Resolve Auto via profiling + Algorithm 1.
+    // Resolve Auto via profiling + Algorithm 1 over the declared graph.
     let (mode, plan_rendered) = match cfg.sched.mode {
         PlacementMode::Auto => {
-            let (mode, rendered) = auto_schedule(cfg, opts)?;
+            let (mode, rendered) = auto_schedule(cfg, opts, gran)?;
             (mode, Some(rendered))
         }
         m => (m, None),
     };
-    let placement = resolve_placement(cfg, &cluster, mode)?;
-    let groups = launch_groups(cfg, opts, &services, &placement)?;
+    let spec = grpo_spec(cfg, opts, gran)?;
+    let driver = FlowDriver::launch(spec, &services, mode)?;
 
-    // Pre-load phases that keep device residency in pipelined modes.
-    if matches!(placement.rollout_lock, LockMode::None) {
-        groups.rollout.onload()?;
-    }
-    if matches!(placement.infer_lock, LockMode::None) {
-        groups.infer.onload()?;
-    }
-    if matches!(placement.train_lock, LockMode::None) {
-        groups.train.onload()?;
-    }
+    // Pre-load stages that keep device residency in pipelined modes.
+    driver.onload_pipelined()?;
 
     // Initialize weights on the trainer and sync everyone.
-    groups
-        .train
-        .invoke_rank(0, "init_weights", Payload::new().set_meta("seed", cfg.seed), placement.train_lock)
+    driver
+        .group("train")?
+        .invoke_rank(0, "init_weights", Payload::new().set_meta("seed", cfg.seed), driver.lock_of("train"))
         .wait()
         .context("init_weights")?;
     if cfg.train.sft_steps > 0 {
-        sft_warmup(cfg, &groups, &placement, opts.verbose)?;
+        sft_warmup(cfg, &driver, opts.verbose)?;
     }
-    sync_weights(&groups, &placement)?;
+    sync_weights(&driver)?;
 
     let tok = Tokenizer::new();
     let manifest = Manifest::load(&cfg.artifacts_dir)?;
@@ -314,9 +258,9 @@ pub fn run_grpo(cfg: &RunConfig, opts: &RunnerOpts) -> Result<GrpoReport> {
     for iter in 0..cfg.iters {
         services.metrics.record_value("iter.begin", iter as f64);
         let t0 = Instant::now();
-        let stats = run_iteration(cfg, &services, &groups, &placement, &tok, &mut taskgen, p_len, iter)?;
+        let stats = run_iteration(cfg, &services, &driver, &tok, &mut taskgen, p_len)?;
         let secs = t0.elapsed().as_secs_f64();
-        sync_weights(&groups, &placement)?;
+        sync_weights(&driver)?;
         let s = IterStats {
             iter,
             secs,
@@ -331,7 +275,12 @@ pub fn run_grpo(cfg: &RunConfig, opts: &RunnerOpts) -> Result<GrpoReport> {
         if opts.verbose {
             println!(
                 "[{}] iter {iter}: {:.2}s, {:.0} tok/s, reward {:.2}, acc {:.2}, loss {:.4}",
-                placement.mode, s.secs, s.tokens_per_sec, s.mean_reward, s.accuracy, s.loss
+                driver.mode(),
+                s.secs,
+                s.tokens_per_sec,
+                s.mean_reward,
+                s.accuracy,
+                s.loss
             );
         }
         iters.push(s);
@@ -341,31 +290,25 @@ pub fn run_grpo(cfg: &RunConfig, opts: &RunnerOpts) -> Result<GrpoReport> {
     }
 
     let breakdown = services.metrics.breakdown();
-    Ok(GrpoReport { iters, breakdown, mode: placement.mode, plan_rendered })
+    Ok(GrpoReport { iters, breakdown, mode: driver.mode(), plan_rendered })
 }
 
 /// One iteration; returns (tokens, mean_reward, accuracy, loss, steps, skipped).
-#[allow(clippy::too_many_arguments)]
 fn run_iteration(
     cfg: &RunConfig,
     services: &Services,
-    groups: &Groups,
-    placement: &Placement,
+    driver: &FlowDriver,
     tok: &Tokenizer,
     taskgen: &mut TaskGen,
     p_len: usize,
-    iter: usize,
 ) -> Result<(usize, f64, f64, f64, usize, usize)> {
-    let gran = if cfg.sched.granularity > 0 { cfg.sched.granularity } else { 8 };
-    // Fresh single-iteration channels (auto-close on producers done).
-    let prompts_ch = services.channels.create(&format!("prompts@{iter}"));
-    let rollout_ch = services.channels.create(&format!("rollout@{iter}"));
-    let scored_ch = services.channels.create(&format!("scored@{iter}"));
-    let train_ch = services.channels.create(&format!("train@{iter}"));
+    let mut run = driver.begin()?;
 
-    // Feed prompts: batch × group_size response slots.
+    // Feed prompts: batch × group_size response slots, in feed_batch-sized
+    // chunks so each chunk pays one channel-lock acquisition (put_batch).
     let tasks = taskgen.batch(cfg.rollout.batch);
-    prompts_ch.register_producer("runner");
+    let feed = cfg.sched.feed_batch.max(1);
+    let mut chunk: Vec<(Payload, f64)> = Vec::with_capacity(feed);
     for (pid, task) in tasks.iter().enumerate() {
         let toks = tok.encode_prompt(&task.prompt, p_len)?;
         for s in 0..cfg.rollout.group_size {
@@ -374,42 +317,25 @@ fn run_iteration(
             p.meta.set("prompt_id", pid);
             p.meta.set("sample_idx", s);
             p.meta.set("answer", task.answer.as_str());
-            prompts_ch.put("runner", p)?;
+            chunk.push((p, 1.0));
+            if chunk.len() >= feed {
+                let full = std::mem::replace(&mut chunk, Vec::with_capacity(feed));
+                run.send_batch("prompts", full)?;
+            }
         }
     }
-    prompts_ch.producer_done("runner");
-
-    // Register stream producers up-front so channels close correctly.
-    for r in 0..groups.rollout.n_ranks() {
-        rollout_ch.register_producer(&format!("rollout/{r}"));
-    }
-    for r in 0..groups.infer.n_ranks() {
-        scored_ch.register_producer(&format!("infer/{r}"));
-    }
-    train_ch.register_producer("runner");
+    run.send_batch("prompts", chunk)?;
+    run.feed_done("prompts")?;
 
     // Kick off the streams (async; locks order execution if collocated).
-    let gen_arg = Payload::new()
-        .set_meta("in_channel", prompts_ch.name())
-        .set_meta("out_channel", rollout_ch.name())
-        .set_meta("granularity", gran);
-    let h_rollout = groups.rollout.invoke("generate_stream", gen_arg, placement.rollout_lock);
+    run.start()?;
 
-    let inf_arg = Payload::new()
-        .set_meta("in_channel", rollout_ch.name())
-        .set_meta("out_channel", scored_ch.name())
-        .set_meta("granularity", gran);
-    let h_infer = groups.infer.invoke("logprob_stream", inf_arg, placement.infer_lock);
-
-    let trn_arg = Payload::new()
-        .set_meta("in_channel", train_ch.name())
-        .set_meta("granularity", cfg.train.micro_batch);
-    let h_train = groups.train.invoke_rank(0, "train_stream", trn_arg, placement.train_lock);
-
-    // Runner-side aggregation: group responses per prompt, normalize
-    // advantages when a group completes, forward to the trainer. This is
-    // the pipeline pause point §3.2 describes.
-    let mut pending: std::collections::HashMap<i64, Vec<Payload>> = Default::default();
+    // Driver pump (declared as `pump("scored", "train")`): group responses
+    // per prompt, normalize advantages when a group completes, forward the
+    // whole group to the trainer in one batched put. This is the pipeline
+    // pause point §3.2 describes.
+    let poll = Duration::from_millis(cfg.sched.poll_ms.max(1));
+    let mut pending: HashMap<i64, Vec<Payload>> = Default::default();
     let mut total_tokens = 0usize;
     let mut reward_sum = 0f64;
     let mut correct = 0usize;
@@ -417,12 +343,14 @@ fn run_iteration(
     loop {
         // Timed get so a dead upstream worker fails the run fast instead
         // of wedging the controller (§4 failure monitoring).
-        let item = match scored_ch.get_timeout("runner", std::time::Duration::from_millis(200)) {
+        let item = match run.recv_timeout("scored", poll)? {
             Some(i) => i,
-            None if scored_ch.is_closed() && scored_ch.is_empty() => break,
             None => {
-                if services.monitor.poisoned() {
-                    train_ch.producer_done("runner");
+                if run.drained("scored")? {
+                    break;
+                }
+                if run.poisoned() {
+                    run.feed_done("train")?;
                     bail!("aggregation aborted: {:?}", services.monitor.reports());
                 }
                 continue;
@@ -444,28 +372,32 @@ fn run_iteration(
             let rewards: Vec<f32> =
                 group.iter().map(|g| g.meta_f64("reward").unwrap_or(0.0) as f32).collect();
             let advs = group_normalize(&rewards);
+            let mut out = Vec::with_capacity(group.len());
             for (mut g, adv) in group.into_iter().zip(advs) {
                 g.meta.set("adv", adv as f64);
                 let w = g.meta_i64("gen_len").unwrap_or(1) as f64;
-                train_ch.put_weighted("runner", g, w)?;
+                out.push((g, w));
             }
+            run.send_batch("train", out)?;
         }
     }
     // Any incomplete groups (shouldn't happen) get zero advantage.
     for (_, group) in pending.drain() {
         for mut g in group {
             g.meta.set("adv", 0.0);
-            train_ch.put_weighted("runner", g, 1.0)?;
+            run.send_weighted("train", g, 1.0)?;
         }
     }
-    train_ch.producer_done("runner");
+    run.feed_done("train")?;
 
-    h_rollout.wait().context("rollout stream")?;
-    h_infer.wait().context("infer stream")?;
-    let train_out = h_train.wait().context("train stream")?;
-    let loss = train_out[0].meta_f64("mean_loss").unwrap_or(0.0);
-    let steps = train_out[0].meta_i64("steps").unwrap_or(0) as usize;
-    let skipped = train_out[0].meta_i64("skipped").unwrap_or(0) as usize;
+    let report = run.finish()?;
+    let train_out = report
+        .outputs("train", "train_stream")
+        .and_then(|o| o.first())
+        .ok_or_else(|| anyhow!("train stage produced no output"))?;
+    let loss = train_out.meta_f64("mean_loss").unwrap_or(0.0);
+    let steps = train_out.meta_i64("steps").unwrap_or(0) as usize;
+    let skipped = train_out.meta_i64("skipped").unwrap_or(0) as usize;
 
     Ok((
         total_tokens,
@@ -481,7 +413,7 @@ fn run_iteration(
 /// through the `sft` artifact — the stand-in for the paper's SFT'd base
 /// checkpoints (a randomly-initialized policy has zero exact-match reward
 /// variance, so GRPO alone has no cold-start signal).
-fn sft_warmup(cfg: &RunConfig, groups: &Groups, placement: &Placement, verbose: bool) -> Result<()> {
+fn sft_warmup(cfg: &RunConfig, driver: &FlowDriver, verbose: bool) -> Result<()> {
     let manifest = Manifest::load(&cfg.artifacts_dir)?;
     let model = manifest.model(&cfg.model)?;
     let p_len = model.meta_usize("prompt_len")?;
@@ -493,6 +425,8 @@ fn sft_warmup(cfg: &RunConfig, groups: &Groups, placement: &Placement, verbose: 
     } else {
         TaskGen::new(cfg.seed ^ 0x5f7)
     };
+    let train = driver.group("train")?;
+    let train_lock = driver.lock_of("train");
     for step in 0..cfg.train.sft_steps {
         let mut tokens = Vec::with_capacity(mb * t_max);
         let mut mask = Vec::with_capacity(mb * t_max);
@@ -519,9 +453,8 @@ fn sft_warmup(cfg: &RunConfig, groups: &Groups, placement: &Placement, verbose: 
         // Supervised phase uses its own (larger) step size; the RL lr in
         // the config is tuned for policy-gradient stability, not SFT.
         arg.meta.set("lr", 1e-3);
-        let out = groups
-            .train
-            .invoke_rank(0, "sft_batch", arg, placement.train_lock)
+        let out = train
+            .invoke_rank(0, "sft_batch", arg, train_lock)
             .wait()
             .context("sft_batch")?
             .remove(0);
@@ -538,24 +471,24 @@ fn sft_warmup(cfg: &RunConfig, groups: &Groups, placement: &Placement, verbose: 
 
 /// Weight sync barrier: trainer → rollout + infer (the paper's per-
 /// iteration weight update that synchronizes generation and training).
-fn sync_weights(groups: &Groups, placement: &Placement) -> Result<()> {
-    let w = groups
-        .train
-        .invoke_rank(0, "get_weights", Payload::new(), placement.train_lock)
+fn sync_weights(driver: &FlowDriver) -> Result<()> {
+    let w = driver
+        .group("train")?
+        .invoke_rank(0, "get_weights", Payload::new(), driver.lock_of("train"))
         .wait()
         .context("get_weights")?
         .remove(0);
-    let hr = groups.rollout.invoke("set_weights", w.clone(), LockMode::None);
-    let hi = groups.infer.invoke("set_weights", w, LockMode::None);
+    let hr = driver.group("rollout")?.invoke("set_weights", w.clone(), LockMode::None);
+    let hi = driver.group("infer")?.invoke("set_weights", w, LockMode::None);
     hr.wait().context("rollout set_weights")?;
     hi.wait().context("infer set_weights")?;
     Ok(())
 }
 
-/// Auto mode: profile one tiny iteration per mode-relevant worker, trace
-/// the workflow graph, run Algorithm 1, and map the plan onto one of the
-/// three concrete placements.
-fn auto_schedule(cfg: &RunConfig, opts: &RunnerOpts) -> Result<(PlacementMode, String)> {
+/// Auto mode: profile one tiny collocated run, build the cost model, then
+/// let the driver plan Algorithm 1 over the *declared* graph (no hand-
+/// wired `WorkflowGraph` — the spec is the source of truth).
+fn auto_schedule(cfg: &RunConfig, opts: &RunnerOpts, gran: usize) -> Result<(PlacementMode, String)> {
     // Profile with a reduced workload on a fresh mini-cluster.
     let mut pcfg = cfg.clone();
     pcfg.iters = cfg.sched.profile_iters.max(1);
@@ -585,37 +518,22 @@ fn auto_schedule(cfg: &RunConfig, opts: &RunnerOpts) -> Result<(PlacementMode, S
         db.add("train", g, phase_time("train") * frac, param_mem * 4);
     }
 
-    let mut graph = WorkflowGraph::new();
-    graph.add_edge("rollout", "infer");
-    graph.add_edge("infer", "train");
-    let mut workload = std::collections::HashMap::new();
-    let mut granularities = std::collections::HashMap::new();
+    let mut workload = HashMap::new();
+    let mut granularities = HashMap::new();
     for w in ["rollout", "infer", "train"] {
         workload.insert(w.to_string(), cfg.responses_per_iter());
         granularities.insert(w.to_string(), grans.clone());
     }
-    let problem = SchedProblem {
-        graph,
-        workload,
-        granularities,
-        n_devices: cfg.cluster.total_devices(),
-        device_mem: cfg.cluster.device_mem,
-        switch_overhead: 2.0 * phase_time("runtime") / pcfg.iters.max(1) as f64 + 0.01,
-    };
-    let mut sched = Scheduler::new(&problem, &db);
-    let plan = sched.solve()?;
-    let assignments = plan.assignments();
-    // Map the plan shape to a concrete mode: any sharing -> hybrid unless
-    // everything shares (collocated); no sharing -> disaggregated.
-    let sharing = assignments.iter().filter(|a| a.shares_devices).count();
-    let mode = if sharing == assignments.len() {
-        PlacementMode::Collocated
-    } else if sharing == 0 {
-        PlacementMode::Disaggregated
-    } else {
-        PlacementMode::Hybrid
-    };
-    Ok((mode, format!("algorithm1 plan ({} states explored):\n{}", sched.states_explored, plan.render())))
+    let spec = grpo_spec(cfg, opts, gran)?;
+    FlowDriver::plan_auto(
+        &spec,
+        cfg.cluster.total_devices(),
+        cfg.cluster.device_mem,
+        &db,
+        &workload,
+        &granularities,
+        2.0 * phase_time("runtime") / pcfg.iters.max(1) as f64 + 0.01,
+    )
 }
 
 /// Convenience accessor used by benches: phase seconds from a report.

@@ -1,0 +1,249 @@
+//! Integration tests for the declarative flow API: `FlowSpec` validation
+//! (unknown stages, duplicate channels, consumer-only channels, cyclic
+//! specs → SCC condensation) and the `FlowDriver` runtime (channel
+//! wiring, port injection, placement + lock resolution, per-edge report).
+//!
+//! These use synthetic workers (no PJRT) so they run everywhere,
+//! independent of the artifact bundle.
+
+use anyhow::{bail, Result};
+use rlinf::cluster::Cluster;
+use rlinf::config::{ClusterConfig, PlacementMode};
+use rlinf::data::Payload;
+use rlinf::flow::{Edge, FlowDriver, FlowSpec, Stage};
+use rlinf::worker::group::Services;
+use rlinf::worker::{LockMode, WorkerCtx, WorkerLogic};
+
+fn services(devices: usize) -> Services {
+    Services::new(Cluster::new(ClusterConfig {
+        nodes: 1,
+        devices_per_node: devices,
+        ..Default::default()
+    }))
+}
+
+/// Forwards items from port "in" to port "out", doubling meta `v`.
+struct Relay;
+
+impl WorkerLogic for Relay {
+    fn call(&mut self, ctx: &WorkerCtx, method: &str, _arg: Payload) -> Result<Payload> {
+        match method {
+            "relay" => {
+                let inp = ctx.port("in")?;
+                let out = ctx.port("out")?;
+                let me = ctx.endpoint();
+                let mut n = 0usize;
+                let result = (|| -> Result<()> {
+                    while let Some(item) = inp.recv(me) {
+                        let v = item.payload.meta_i64("v").unwrap_or(0);
+                        out.send_weighted(me, Payload::new().set_meta("v", v * 2), v as f64)?;
+                        n += 1;
+                    }
+                    Ok(())
+                })();
+                out.done(me);
+                result?;
+                Ok(Payload::new().set_meta("relayed", n))
+            }
+            other => bail!("no method {other}"),
+        }
+    }
+}
+
+/// Drains port "in", returning the item count and the sum of meta `v`.
+struct Sink;
+
+impl WorkerLogic for Sink {
+    fn call(&mut self, ctx: &WorkerCtx, method: &str, _arg: Payload) -> Result<Payload> {
+        match method {
+            "drain" => {
+                let inp = ctx.port("in")?;
+                let me = ctx.endpoint();
+                let mut n = 0usize;
+                let mut sum = 0i64;
+                while let Some(item) = inp.recv(me) {
+                    n += 1;
+                    sum += item.payload.meta_i64("v").unwrap_or(0);
+                }
+                Ok(Payload::new().set_meta("n", n).set_meta("sum", sum))
+            }
+            other => bail!("no method {other}"),
+        }
+    }
+}
+
+fn relay_stage(name: &str) -> Stage {
+    Stage::new(name, |_| Box::new(|_: &WorkerCtx| Ok(Box::new(Relay) as Box<dyn WorkerLogic>)))
+}
+
+fn sink_stage(name: &str) -> Stage {
+    Stage::new(name, |_| Box::new(|_: &WorkerCtx| Ok(Box::new(Sink) as Box<dyn WorkerLogic>)))
+}
+
+#[test]
+fn unknown_stage_reference_rejected() {
+    let spec = FlowSpec::new("bad")
+        .stage(sink_stage("a"))
+        .edge(Edge::new("x").produced_by("ghost", "m").consumed_by("a", "drain"));
+    let err = spec.validate().unwrap_err().to_string();
+    assert!(err.contains("unknown stage") && err.contains("ghost"), "{err}");
+
+    let spec = FlowSpec::new("bad")
+        .stage(relay_stage("a"))
+        .edge(Edge::new("x").produced_by("a", "relay").consumed_by("ghost", "m"));
+    let err = spec.validate().unwrap_err().to_string();
+    assert!(err.contains("unknown stage"), "{err}");
+}
+
+#[test]
+fn duplicate_channel_name_rejected() {
+    let spec = FlowSpec::new("bad")
+        .stage(relay_stage("a"))
+        .stage(sink_stage("b"))
+        .edge(Edge::new("x").produced_by_driver().consumed_by("a", "relay"))
+        .edge(Edge::new("x").produced_by("a", "relay").consumed_by("b", "drain"));
+    let err = spec.validate().unwrap_err().to_string();
+    assert!(err.contains("duplicate channel"), "{err}");
+}
+
+#[test]
+fn consumer_only_and_dangling_channels_rejected() {
+    // No producer declared at all.
+    let spec = FlowSpec::new("bad")
+        .stage(sink_stage("a"))
+        .edge(Edge::new("x").consumed_by("a", "drain"));
+    let err = spec.validate().unwrap_err().to_string();
+    assert!(err.contains("consumer-only"), "{err}");
+
+    // No consumer declared at all.
+    let spec = FlowSpec::new("bad")
+        .stage(relay_stage("a"))
+        .edge(Edge::new("x").produced_by("a", "relay"));
+    let err = spec.validate().unwrap_err().to_string();
+    assert!(err.contains("dangling"), "{err}");
+}
+
+#[test]
+fn cyclic_spec_condenses_and_suppresses_locks() {
+    let spec = FlowSpec::new("cyc")
+        .stage(relay_stage("ping"))
+        .stage(relay_stage("pong"))
+        .stage(sink_stage("tail").single_rank())
+        .edge(Edge::new("a").produced_by("ping", "relay").consumed_by("pong", "relay"))
+        .edge(Edge::new("b").produced_by("pong", "relay").consumed_by("ping", "relay"))
+        .edge(Edge::new("c").produced_at("pong", "relay", "tee").consumed_by("tail", "drain"));
+    let info = spec.validate().unwrap();
+    assert_eq!(info.graph.n(), 3);
+    assert_eq!(info.condensed.n(), 2, "cycle collapsed to one node");
+    assert!(info.condensed.topo_order().is_ok(), "condensation yields a DAG");
+    assert!(info.members.iter().any(|m| m.len() == 2));
+    assert!(info.cyclic.contains("ping") && info.cyclic.contains("pong"));
+    assert!(!info.cyclic.contains("tail"));
+
+    // Under a collocated plan the cyclic pair must never take device locks
+    // (they run concurrently by construction); the downstream stage still
+    // time-shares via the lock.
+    let svc = services(2);
+    let driver = FlowDriver::launch(spec, &svc, PlacementMode::Collocated).unwrap();
+    assert_eq!(driver.mode(), "collocated");
+    assert_eq!(driver.lock_of("ping"), LockMode::None);
+    assert_eq!(driver.lock_of("pong"), LockMode::None);
+    assert!(matches!(driver.lock_of("tail"), LockMode::Device { .. }));
+}
+
+#[test]
+fn cyclic_stages_refuse_to_time_share_one_device() {
+    let spec = FlowSpec::new("cyc")
+        .stage(relay_stage("ping"))
+        .stage(relay_stage("pong"))
+        .edge(Edge::new("a").produced_by("ping", "relay").consumed_by("pong", "relay"))
+        .edge(Edge::new("b").produced_by("pong", "relay").consumed_by("ping", "relay"));
+    let svc = services(1);
+    let err = FlowDriver::launch(spec, &svc, PlacementMode::Disaggregated).unwrap_err();
+    assert!(format!("{err}").contains("cannot time-share"), "{err}");
+}
+
+#[test]
+fn driver_wires_and_runs_the_declared_flow() {
+    let svc = services(3);
+    let spec = FlowSpec::new("pipeline")
+        .stage(relay_stage("relay").devices(1).single_rank())
+        .stage(sink_stage("sink").ranks_per_device().weight(2.0))
+        .edge(Edge::new("src").produced_by_driver().consumed_by("relay", "relay").granularity(4))
+        .edge(Edge::new("mid").produced_by("relay", "relay").consumed_by("sink", "drain").balanced());
+    let driver = FlowDriver::launch(spec, &svc, PlacementMode::Disaggregated).unwrap();
+    assert_eq!(driver.mode(), "disaggregated");
+    // Spatial split: relay and sink own disjoint devices -> no locks.
+    assert_eq!(driver.lock_of("relay"), LockMode::None);
+    assert_eq!(driver.lock_of("sink"), LockMode::None);
+
+    // Two runs off the same driver: channels are run-scoped, ports rebind.
+    for round in 0..2 {
+        let mut run = driver.begin().unwrap();
+        let items: Vec<(Payload, f64)> =
+            (1..=10).map(|v| (Payload::new().set_meta("v", v as i64), 1.0)).collect();
+        run.send_batch("src", items).unwrap();
+        run.feed_done("src").unwrap();
+        run.start().unwrap();
+        let report = run.finish().unwrap();
+
+        let outs = report.outputs("sink", "drain").unwrap();
+        assert_eq!(outs.len(), 2, "one output per sink rank");
+        let n: i64 = outs.iter().map(|p| p.meta_i64("n").unwrap()).sum();
+        let sum: i64 = outs.iter().map(|p| p.meta_i64("sum").unwrap()).sum();
+        assert_eq!(n, 10, "round {round}: all items consumed");
+        assert_eq!(sum, 2 * (1..=10).sum::<i64>(), "round {round}: relay doubled each item");
+
+        let mid = report.edge("mid").unwrap();
+        assert_eq!((mid.put, mid.got, mid.backlog), (10, 10, 0));
+        assert_eq!(mid.discipline, "balanced");
+        assert_eq!(report.outputs("relay", "relay").unwrap()[0].meta_i64("relayed"), Some(10));
+    }
+    // The driver owned every channel: each logical edge exists per run.
+    let names = svc.channels.names();
+    assert!(names.iter().any(|c| c == "src@1") && names.iter().any(|c| c == "src@2"), "{names:?}");
+    assert!(!svc.monitor.poisoned());
+}
+
+#[test]
+fn auto_fallback_resolves_by_graph_shape() {
+    // Acyclic two-stage flow with enough devices -> disaggregated.
+    let spec = FlowSpec::new("auto1")
+        .stage(relay_stage("a").single_rank())
+        .stage(sink_stage("b").single_rank())
+        .edge(Edge::new("x").produced_by_driver().consumed_by("a", "relay"))
+        .edge(Edge::new("y").produced_by("a", "relay").consumed_by("b", "drain"));
+    let svc = services(3);
+    let driver = FlowDriver::launch(spec, &svc, PlacementMode::Auto).unwrap();
+    assert_eq!(driver.mode(), "disaggregated");
+
+    // Cyclic flow -> collocated (the pair co-runs anyway).
+    let spec = FlowSpec::new("auto2")
+        .stage(relay_stage("ping").single_rank())
+        .stage(relay_stage("pong").single_rank())
+        .edge(Edge::new("a").produced_by("ping", "relay").consumed_by("pong", "relay"))
+        .edge(Edge::new("b").produced_by("pong", "relay").consumed_by("ping", "relay"));
+    let svc = services(3);
+    let driver = FlowDriver::launch(spec, &svc, PlacementMode::Auto).unwrap();
+    assert_eq!(driver.mode(), "collocated");
+}
+
+#[test]
+fn hybrid_places_generator_apart_and_locks_the_rest() {
+    let svc = services(4);
+    let spec = FlowSpec::new("hyb")
+        .stage(relay_stage("gen").devices(2))
+        .stage(relay_stage("mid").single_rank())
+        .stage(sink_stage("tail").single_rank())
+        .edge(Edge::new("p").produced_by_driver().consumed_by("gen", "relay"))
+        .edge(Edge::new("q").produced_by("gen", "relay").consumed_by("mid", "relay"))
+        .edge(Edge::new("r").produced_by("mid", "relay").consumed_by("tail", "drain"));
+    let driver = FlowDriver::launch(spec, &svc, PlacementMode::Hybrid).unwrap();
+    assert_eq!(driver.lock_of("gen"), LockMode::None, "generator owns its slice");
+    assert_eq!(driver.lock_of("mid"), LockMode::Device { priority: 1 });
+    assert_eq!(driver.lock_of("tail"), LockMode::Device { priority: 2 });
+    let plans = driver.stage_plans();
+    assert_eq!(plans[0].placements.len(), 2, "per-device ranks on the 2-device slice");
+    // mid and tail share the remaining 2-device block.
+    assert_eq!(plans[1].placements[0].ids(), plans[2].placements[0].ids());
+}

@@ -82,6 +82,24 @@ fn grpo_hybrid_mode() {
 }
 
 #[test]
+fn grpo_auto_mode() {
+    if !artifacts_present() {
+        return;
+    }
+    let mut cfg = base_config();
+    cfg.cluster.devices_per_node = 4;
+    cfg.sched.mode = PlacementMode::Auto;
+    cfg.sched.profile_iters = 1;
+    let report = run_grpo(&cfg, &RunnerOpts::default()).unwrap();
+    // Auto resolves to a concrete mode via Algorithm 1 over the declared
+    // flow graph and reports the plan it chose.
+    assert!(["collocated", "disaggregated", "hybrid"].contains(&report.mode), "{}", report.mode);
+    let plan = report.plan_rendered.as_deref().unwrap();
+    assert!(plan.contains("algorithm1 plan"), "{plan}");
+    check_report(&report, report.mode);
+}
+
+#[test]
 fn grpo_verl_baseline_runs_and_is_slower_shaped() {
     if !artifacts_present() {
         return;
