@@ -1,0 +1,129 @@
+//! Multi-flow cluster sharing: GRPO reasoning **and** embodied PPO running
+//! concurrently on one simulated cluster under a [`FlowSupervisor`].
+//!
+//! ```text
+//! make artifacts && cargo run --release --example multi_flow
+//! ```
+//!
+//! The supervisor admits both flows under admission control (GRPO gets a
+//! 4-device window, embodied PPO the remaining 2), each flow launches its
+//! declarative spec inside its window with a flow-scoped name space and a
+//! flow-level device-lock priority band, and both train at the same time.
+//! When the embodied flow finishes first, its devices are released and
+//! **re-offered** to the still-admitted GRPO flow as an elastic resize
+//! (with a re-chunking granularity hint). Per-flow fairness counters
+//! (lock grants / waits / preemptions) come back on every report.
+
+use rlinf::cluster::Cluster;
+use rlinf::config::{PlacementMode, RunConfig};
+use rlinf::flow::{AdmitReq, FlowSupervisor};
+use rlinf::util::fmt;
+use rlinf::worker::group::Services;
+use rlinf::workflow::embodied::{run_embodied_shared, EmbodiedOpts};
+use rlinf::workflow::reasoning::{run_grpo_shared, RunnerOpts};
+
+fn main() -> anyhow::Result<()> {
+    // One shared 6-device cluster for both workloads.
+    let mut cfg = RunConfig::default();
+    cfg.model = "tiny".into();
+    cfg.artifacts_dir = "artifacts".into();
+    cfg.cluster.devices_per_node = 6;
+    cfg.iters = 3;
+    cfg.rollout.batch = 8;
+    cfg.rollout.group_size = 4;
+    cfg.rollout.max_new = 16;
+    cfg.embodied.num_envs = 64;
+    cfg.embodied.horizon = 32;
+    cfg.supervisor.time_slice_ms = 100;
+
+    let services = Services::new(Cluster::new(cfg.cluster.clone()));
+    let sup = FlowSupervisor::new(&services, cfg.supervisor.clone());
+
+    // Admission control: GRPO is senior (slot 0) and shareable; embodied
+    // gets the remaining devices in its own exclusive window.
+    let grpo_adm = sup.admit(
+        AdmitReq::new("grpo", 4).slot(0).shareable().granularities(vec![4, 8, 16, 32]),
+    )?;
+    let emb_adm = sup.admit(AdmitReq::new("embodied", 2).slot(1))?;
+    for f in sup.flows() {
+        println!(
+            "admitted {:<9} window=({}, {}) exclusive={} priority_base={}",
+            f.name, f.window.0, f.window.1, f.exclusive, f.priority_base
+        );
+    }
+
+    // Run both flows concurrently against the shared services.
+    let grpo_thread = {
+        let mut c = cfg.clone();
+        c.sched.mode = PlacementMode::Collocated; // phases context-switch in-window
+        let services = services.clone();
+        let opts = grpo_adm.opts.clone();
+        std::thread::spawn(move || {
+            run_grpo_shared(&c, &RunnerOpts { verbose: true, ..Default::default() }, &services, opts)
+        })
+    };
+    let emb_thread = {
+        let mut c = cfg.clone();
+        c.iters = 2;
+        c.sched.mode = PlacementMode::Collocated; // cyclic pair co-runs in-window
+        let services = services.clone();
+        let opts = emb_adm.opts.clone();
+        std::thread::spawn(move || {
+            run_embodied_shared(&c, &EmbodiedOpts { verbose: true, ..Default::default() }, &services, opts)
+        })
+    };
+
+    // Time-slice fairness is driven by the supervisor tick: age waiters
+    // starved past supervisor.time_slice_ms while the flows run.
+    while !emb_thread.is_finished() {
+        sup.tick();
+        std::thread::sleep(std::time::Duration::from_millis(cfg.supervisor.time_slice_ms));
+    }
+
+    // The embodied flow finishes first; retire it while GRPO still runs so
+    // its devices are re-offered for elastic growth.
+    let emb_report = emb_thread.join().expect("embodied thread panicked")?;
+    let retire = sup.retire("embodied")?;
+    if let Some((s, l)) = retire.freed {
+        println!("\nembodied retired: freed window ({s}, {l})");
+    }
+    for offer in &retire.offers {
+        println!(
+            "resize offer -> {}: window=({}, {}), granularity hint {:?}",
+            offer.flow, offer.window.0, offer.window.1, offer.granularity
+        );
+        let opts = sup.accept_resize(offer)?;
+        println!(
+            "accepted: {} may relaunch over window {:?} next iteration",
+            offer.flow, opts.window
+        );
+    }
+
+    while !grpo_thread.is_finished() {
+        sup.tick();
+        std::thread::sleep(std::time::Duration::from_millis(cfg.supervisor.time_slice_ms));
+    }
+    let grpo_report = grpo_thread.join().expect("grpo thread panicked")?;
+    sup.retire("grpo")?;
+
+    println!(
+        "\ngrpo [{}]: {} tokens/s mean | locks: {} grants, {} waits ({:.3}s), {} preemptions",
+        grpo_report.mode,
+        fmt::count(grpo_report.mean_throughput()),
+        grpo_report.locks.grants,
+        grpo_report.locks.waits,
+        grpo_report.locks.wait_secs,
+        grpo_report.locks.preemptions,
+    );
+    println!(
+        "embodied [{}]: {:.2} batch/s mean, success {:.2} | locks: {} grants, {} waits, {} preemptions",
+        emb_report.mode,
+        emb_report.mean_batches_per_sec(),
+        emb_report.final_success_rate(),
+        emb_report.locks.grants,
+        emb_report.locks.waits,
+        emb_report.locks.preemptions,
+    );
+    println!("cluster devices free after retirement: {}", services.cluster.free_devices());
+    Ok(())
+}

@@ -14,20 +14,91 @@
 //! * **Placement-aware skip** — acquiring a device set that no other
 //!   registered worker touches is free, and release-time offload can be
 //!   skipped when nobody is waiting (`was_contended`).
+//!
+//! With multiple *flows* sharing one cluster (the `FlowSupervisor`), the
+//! manager additionally keeps per-holder [`LockCounters`] so fairness is
+//! observable per flow (holders are prefixed with the flow scope), supports
+//! dropping the **stale intents** of a finished flow (`drop_intents` — a
+//! leftover intent would otherwise block a later flow's acquisition
+//! forever), and implements time-slice fairness via `age_waiters`: a waiter
+//! starved past its slice is boosted senior to every intersecting waiter so
+//! a low-priority flow cannot be locked out indefinitely.
 
 use std::collections::HashMap;
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 use crate::cluster::DeviceSet;
+
+/// Per-holder fairness counters (aggregated per flow via name prefixes).
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct LockCounters {
+    /// Successful acquisitions.
+    pub grants: u64,
+    /// Acquisitions that had to block at least once.
+    pub waits: u64,
+    /// Total seconds spent blocked in `acquire`.
+    pub wait_secs: f64,
+    /// Releases that yielded to a senior waiter of **another flow** (a
+    /// holder outside this holder's name scope) — the cross-flow context
+    /// switches forced on this holder. Intra-flow phase hand-offs are not
+    /// preemptions.
+    pub preemptions: u64,
+}
+
+impl LockCounters {
+    /// Add `other` into `self` (prefix aggregation).
+    pub fn absorb(&mut self, other: &LockCounters) {
+        self.grants += other.grants;
+        self.waits += other.waits;
+        self.wait_secs += other.wait_secs;
+        self.preemptions += other.preemptions;
+    }
+
+    /// Counter-wise difference against an earlier snapshot.
+    pub fn since(&self, earlier: &LockCounters) -> LockCounters {
+        LockCounters {
+            grants: self.grants.saturating_sub(earlier.grants),
+            waits: self.waits.saturating_sub(earlier.waits),
+            wait_secs: (self.wait_secs - earlier.wait_secs).max(0.0),
+            preemptions: self.preemptions.saturating_sub(earlier.preemptions),
+        }
+    }
+}
+
+/// One pending acquisition (an in-flight `acquire` or a pre-registered
+/// intent). `ticket` uniquely identifies the entry so `age_waiters` can
+/// boost its priority while the owning thread is parked — the thread
+/// re-reads its own effective priority from the table each wakeup.
+struct Waiter {
+    holder: String,
+    priority: u64,
+    set: DeviceSet,
+    since: Instant,
+    ticket: u64,
+}
 
 #[derive(Default)]
 struct LockState {
     /// device -> holder name.
     holders: HashMap<usize, String>,
-    /// Waiting (holder, priority, devices) triples.
-    waiters: Vec<(String, u64, DeviceSet)>,
+    /// Pending acquisitions in registration order.
+    waiters: Vec<Waiter>,
+    next_ticket: u64,
     /// Grant counter for fairness diagnostics.
     grants: u64,
+    /// Per-holder fairness counters.
+    counters: HashMap<String, LockCounters>,
+}
+
+/// Flow identity of a holder name: the `"name:"` scope prefix the flow
+/// driver applies under multi-flow launches, or `""` for unscoped
+/// single-flow holders. Preemptions count only across flow boundaries.
+fn flow_scope(holder: &str) -> &str {
+    match holder.find(':') {
+        Some(i) => &holder[..=i],
+        None => "",
+    }
 }
 
 /// Shared device-lock manager.
@@ -54,9 +125,21 @@ impl DeviceLockMgr {
         }
         let (lock, cv) = &*self.inner;
         let mut st = lock.lock().unwrap();
-        let exists = st.waiters.iter().any(|(w, p, _)| w == holder && *p == priority);
+        // Invariant: at most one waiter entry per holder (a holder is one
+        // rank thread with at most one acquisition in flight). An existing
+        // entry — possibly priority-boosted by `age_waiters` — already
+        // defends this holder's place in line.
+        let exists = st.waiters.iter().any(|w| w.holder == holder);
         if !exists {
-            st.waiters.push((holder.to_string(), priority, set.clone()));
+            let ticket = st.next_ticket;
+            st.next_ticket += 1;
+            st.waiters.push(Waiter {
+                holder: holder.to_string(),
+                priority,
+                set: set.clone(),
+                since: Instant::now(),
+                ticket,
+            });
         }
         drop(st);
         cv.notify_all();
@@ -74,33 +157,67 @@ impl DeviceLockMgr {
         // Re-entrancy: if we already hold all requested devices, done
         // (drop any pre-registered intent so it cannot block juniors).
         if set.ids().iter().all(|d| st.holders.get(&d.0).map(|h| h == holder).unwrap_or(false)) {
-            st.waiters.retain(|(w, p, _)| !(w == holder && *p == priority));
+            st.waiters.retain(|w| w.holder != holder);
             drop(st);
             cv.notify_all();
             return;
         }
-        let exists = st.waiters.iter().any(|(w, p, _)| w == holder && *p == priority);
-        if !exists {
-            st.waiters.push((holder.to_string(), priority, set.clone()));
-        }
+        // Adopt this holder's pre-registered intent or enqueue. Matched by
+        // holder alone (not priority): `age_waiters` may have boosted the
+        // intent's priority, and failing to adopt it would strand a
+        // permanent senior waiter that starves every other flow until
+        // finish()/retire() sweeps it.
+        let existing = st.waiters.iter().find(|w| w.holder == holder).map(|w| w.ticket);
+        let ticket = match existing {
+            Some(t) => t,
+            None => {
+                let t = st.next_ticket;
+                st.next_ticket += 1;
+                st.waiters.push(Waiter {
+                    holder: holder.to_string(),
+                    priority,
+                    set: set.clone(),
+                    since: Instant::now(),
+                    ticket: t,
+                });
+                t
+            }
+        };
+        let t0 = Instant::now();
+        let mut waited = false;
         loop {
+            // Effective priority may have been boosted by `age_waiters`
+            // while we were parked; always read it from our own entry.
+            let my_prio = st
+                .waiters
+                .iter()
+                .find(|w| w.ticket == ticket)
+                .map(|w| w.priority)
+                .unwrap_or(priority);
             let free = set
                 .ids()
                 .iter()
                 .all(|d| st.holders.get(&d.0).map(|h| h == holder).unwrap_or(true));
-            let has_senior_waiter = st.waiters.iter().any(|(w, p, ws)| {
-                w != holder && *p < priority && ws.intersects(set)
+            let has_senior_waiter = st.waiters.iter().any(|w| {
+                w.ticket != ticket && w.holder != holder && w.priority < my_prio && w.set.intersects(set)
             });
             if free && !has_senior_waiter {
                 break;
             }
+            waited = true;
             st = cv.wait(st).unwrap();
         }
-        st.waiters.retain(|(w, p, _)| !(w == holder && *p == priority));
+        st.waiters.retain(|w| w.ticket != ticket);
         for d in set.ids() {
             st.holders.insert(d.0, holder.to_string());
         }
         st.grants += 1;
+        let c = st.counters.entry(holder.to_string()).or_default();
+        c.grants += 1;
+        if waited {
+            c.waits += 1;
+            c.wait_secs += t0.elapsed().as_secs_f64();
+        }
         drop(st);
         cv.notify_all();
     }
@@ -120,6 +237,7 @@ impl DeviceLockMgr {
             st.holders.insert(d.0, holder.to_string());
         }
         st.grants += 1;
+        st.counters.entry(holder.to_string()).or_default().grants += 1;
         drop(st);
         cv.notify_all();
         true
@@ -138,12 +256,98 @@ impl DeviceLockMgr {
         cv.notify_all();
     }
 
+    /// Release, recording a **preemption** against `holder` when a waiter
+    /// of *another flow* (different name scope — the `"name:"` prefix)
+    /// with strictly senior priority is parked on an intersecting set —
+    /// i.e. this release is a forced yield to a foreign flow (the
+    /// cross-flow context switch the multi-flow supervisor arbitrates),
+    /// not a voluntary hand-back or an ordinary intra-flow phase switch.
+    /// Returns whether a preemption was noted.
+    pub fn release_yielding(&self, holder: &str, set: &DeviceSet, priority: u64) -> bool {
+        let (lock, cv) = &*self.inner;
+        let mut st = lock.lock().unwrap();
+        let preempted = st.waiters.iter().any(|w| {
+            flow_scope(&w.holder) != flow_scope(holder)
+                && w.priority < priority
+                && w.set.intersects(set)
+        });
+        if preempted {
+            st.counters.entry(holder.to_string()).or_default().preemptions += 1;
+        }
+        for d in set.ids() {
+            if st.holders.get(&d.0).map(|h| h == holder).unwrap_or(false) {
+                st.holders.remove(&d.0);
+            }
+        }
+        drop(st);
+        cv.notify_all();
+        preempted
+    }
+
+    /// Drop every pending intent whose holder name starts with `prefix`
+    /// (e.g. a finished flow's `"grpo:"` scope, or one group's
+    /// `"rollout/"`). A stale intent left behind by a finished flow would
+    /// otherwise read as a permanent senior waiter and block every later
+    /// acquisition intersecting its device set. Returns how many were
+    /// dropped.
+    pub fn drop_intents(&self, prefix: &str) -> usize {
+        let (lock, cv) = &*self.inner;
+        let mut st = lock.lock().unwrap();
+        let before = st.waiters.len();
+        st.waiters.retain(|w| !w.holder.starts_with(prefix));
+        let dropped = before - st.waiters.len();
+        drop(st);
+        if dropped > 0 {
+            cv.notify_all();
+        }
+        dropped
+    }
+
+    /// Time-slice fairness: boost every waiter that has been parked longer
+    /// than `max_wait` to be senior to all intersecting waiters, so a
+    /// junior flow sharing devices with a senior one is guaranteed a turn
+    /// each slice. Safe with in-flight `acquire`s — blocked threads
+    /// re-read their effective priority from the waiter table. Returns the
+    /// number of boosted waiters.
+    pub fn age_waiters(&self, max_wait: Duration) -> usize {
+        let (lock, cv) = &*self.inner;
+        let mut st = lock.lock().unwrap();
+        let mut boosts: Vec<(usize, u64)> = Vec::new();
+        for (i, w) in st.waiters.iter().enumerate() {
+            if w.since.elapsed() < max_wait {
+                continue;
+            }
+            let min_peer = st
+                .waiters
+                .iter()
+                .enumerate()
+                .filter(|(j, o)| *j != i && o.set.intersects(&w.set))
+                .map(|(_, o)| o.priority)
+                .min();
+            if let Some(m) = min_peer {
+                if w.priority > m {
+                    boosts.push((i, m.saturating_sub(1)));
+                }
+            }
+        }
+        let n = boosts.len();
+        for (i, p) in boosts {
+            st.waiters[i].priority = p;
+            st.waiters[i].since = Instant::now();
+        }
+        drop(st);
+        if n > 0 {
+            cv.notify_all();
+        }
+        n
+    }
+
     /// Is anyone (else) currently waiting on devices intersecting `set`?
     /// Drives the release-time offload decision: no waiter → stay resident.
     pub fn was_contended(&self, holder: &str, set: &DeviceSet) -> bool {
         let (lock, _) = &*self.inner;
         let st = lock.lock().unwrap();
-        st.waiters.iter().any(|(w, _, ws)| w != holder && ws.intersects(set))
+        st.waiters.iter().any(|w| w.holder != holder && w.set.intersects(set))
     }
 
     pub fn holder_of(&self, device: usize) -> Option<String> {
@@ -152,6 +356,41 @@ impl DeviceLockMgr {
 
     pub fn grants(&self) -> u64 {
         self.inner.0.lock().unwrap().grants
+    }
+
+    /// Pending intents/acquires whose holder starts with `prefix`.
+    pub fn pending_intents(&self, prefix: &str) -> usize {
+        let (lock, _) = &*self.inner;
+        let st = lock.lock().unwrap();
+        st.waiters.iter().filter(|w| w.holder.starts_with(prefix)).count()
+    }
+
+    /// Forget the fairness counters of every holder whose name starts with
+    /// `prefix`. Called when a flow *retires* (its reports are already
+    /// rendered): a later flow reusing the name must not inherit a dead
+    /// flow's totals, and the per-holder map must not grow per generation.
+    /// Not called between runs — [`DeviceLockMgr::counters`] stays
+    /// cumulative across a living flow's runs.
+    pub fn reset_counters(&self, prefix: &str) -> usize {
+        let (lock, _) = &*self.inner;
+        let mut st = lock.lock().unwrap();
+        let before = st.counters.len();
+        st.counters.retain(|k, _| !k.starts_with(prefix));
+        before - st.counters.len()
+    }
+
+    /// Aggregate counters over every holder whose name starts with
+    /// `prefix` (`""` = all holders). Per-flow fairness accounting.
+    pub fn counters(&self, prefix: &str) -> LockCounters {
+        let (lock, _) = &*self.inner;
+        let st = lock.lock().unwrap();
+        let mut out = LockCounters::default();
+        for (name, c) in st.counters.iter() {
+            if name.starts_with(prefix) {
+                out.absorb(c);
+            }
+        }
+        out
     }
 }
 
@@ -249,5 +488,147 @@ mod tests {
         let s = DeviceSet::range(0, 1);
         m.acquire("a", &s, 0);
         assert!(!m.was_contended("a", &s), "no waiter -> keep weights resident");
+    }
+
+    #[test]
+    fn stale_intent_blocks_until_dropped() {
+        // Regression (multi-flow intent lifecycle): a finished flow's
+        // never-claimed intent must not block a later flow forever.
+        let m = DeviceLockMgr::new();
+        let s = DeviceSet::range(0, 1);
+        // Flow "dead:" registered an intent at senior priority and then
+        // finished without ever acquiring.
+        m.register_intent("dead:gen/0", &s, 0);
+        assert!(m.was_contended("live:train/0", &s));
+
+        let m2 = m.clone();
+        let s2 = s.clone();
+        let got = Arc::new(AtomicUsize::new(0));
+        let g2 = got.clone();
+        let h = thread::spawn(move || {
+            m2.acquire("live:train/0", &s2, 7); // junior to the stale intent
+            g2.store(1, Ordering::SeqCst);
+            m2.release("live:train/0", &s2);
+        });
+        thread::sleep(Duration::from_millis(30));
+        assert_eq!(got.load(Ordering::SeqCst), 0, "stale senior intent blocks the junior flow");
+        assert_eq!(m.drop_intents("dead:"), 1);
+        h.join().unwrap();
+        assert_eq!(got.load(Ordering::SeqCst), 1, "drop_intents unblocks the waiter");
+        assert_eq!(m.pending_intents(""), 0);
+    }
+
+    #[test]
+    fn release_yielding_counts_preemption_for_junior_holder_only() {
+        let m = DeviceLockMgr::new();
+        let s = DeviceSet::range(0, 1);
+        // Junior flow "lo:" holds; senior flow "hi:" waits.
+        m.acquire("lo:gen/0", &s, 100);
+        m.register_intent("hi:gen/0", &s, 0);
+        assert!(m.release_yielding("lo:gen/0", &s, 100), "senior waiter -> forced yield");
+        m.acquire("hi:gen/0", &s, 0);
+        // Junior waiter does not make the senior holder's release a yield.
+        m.register_intent("lo:gen/0", &s, 100);
+        assert!(!m.release_yielding("hi:gen/0", &s, 0));
+        m.drop_intents("lo:");
+
+        let lo = m.counters("lo:");
+        let hi = m.counters("hi:");
+        assert_eq!(lo.preemptions, 1);
+        assert_eq!(hi.preemptions, 0);
+        assert_eq!(lo.grants, 1);
+        assert_eq!(hi.grants, 1);
+        assert_eq!(m.counters("").grants, 2, "prefix \"\" aggregates every holder");
+
+        // Intra-flow hand-offs never count: a sibling stage's senior
+        // intent is an ordinary phase switch, not a preemption.
+        m.acquire("lo:train/0", &s, 102);
+        m.register_intent("lo:gen/0", &s, 100);
+        assert!(!m.release_yielding("lo:train/0", &s, 102), "same flow scope");
+        m.drop_intents("lo:");
+        assert_eq!(m.counters("lo:").preemptions, 1, "unchanged by intra-flow yield");
+    }
+
+    #[test]
+    fn counters_track_waits() {
+        let m = DeviceLockMgr::new();
+        let s = DeviceSet::range(0, 1);
+        m.acquire("a", &s, 0);
+        let m2 = m.clone();
+        let s2 = s.clone();
+        let h = thread::spawn(move || {
+            m2.acquire("b", &s2, 1);
+            m2.release("b", &s2);
+        });
+        // Release only once b is provably parked behind a.
+        while !m.was_contended("a", &s) {
+            thread::sleep(Duration::from_millis(1));
+        }
+        m.release("a", &s);
+        h.join().unwrap();
+        let b = m.counters("b");
+        assert_eq!(b.grants, 1);
+        assert_eq!(b.waits, 1, "blocked acquisition counted");
+        assert!(b.wait_secs > 0.0);
+        assert_eq!(m.counters("a").waits, 0, "uncontended acquisition never waited");
+
+        // Retirement pruning: a reused holder name starts from zero.
+        assert_eq!(m.reset_counters("b"), 1);
+        assert_eq!(m.counters("b"), LockCounters::default());
+        assert_eq!(m.counters("a").grants, 1, "other holders untouched");
+    }
+
+    #[test]
+    fn boosted_intent_is_adopted_by_the_late_acquire() {
+        // Regression: an intent whose priority was boosted by aging must
+        // still be adopted (and removed) by the holder's acquire — a
+        // (holder, priority) exact match would strand it as a permanent
+        // senior waiter.
+        let m = DeviceLockMgr::new();
+        let s = DeviceSet::range(0, 1);
+        m.acquire("holder", &s, 0);
+        m.register_intent("slow", &s, 70);
+        m.register_intent("peer", &s, 10);
+        std::thread::sleep(Duration::from_millis(15));
+        assert!(m.age_waiters(Duration::from_millis(1)) >= 1, "slow boosted past peer");
+
+        let m2 = m.clone();
+        let s2 = s.clone();
+        let h = thread::spawn(move || {
+            m2.acquire("slow", &s2, 70); // original (pre-boost) priority
+            m2.release("slow", &s2);
+        });
+        thread::sleep(Duration::from_millis(20));
+        assert_eq!(m.pending_intents("slow"), 1, "boosted intent adopted, not duplicated");
+        m.release("holder", &s);
+        h.join().unwrap();
+        assert_eq!(m.pending_intents("slow"), 0, "adopted intent claimed on grant");
+        assert_eq!(m.drop_intents("peer"), 1);
+    }
+
+    #[test]
+    fn aging_boosts_starved_waiter_over_senior_intent() {
+        // Time-slice fairness: waiter "slow" is junior to a standing intent
+        // and would never win; aging makes it senior.
+        let m = DeviceLockMgr::new();
+        let s = DeviceSet::range(0, 1);
+        m.register_intent("greedy", &s, 0);
+        let m2 = m.clone();
+        let s2 = s.clone();
+        let got = Arc::new(AtomicUsize::new(0));
+        let g2 = got.clone();
+        let h = thread::spawn(move || {
+            m2.acquire("slow", &s2, 50);
+            g2.store(1, Ordering::SeqCst);
+            m2.release("slow", &s2);
+        });
+        thread::sleep(Duration::from_millis(30));
+        assert_eq!(got.load(Ordering::SeqCst), 0, "junior waiter starved behind the intent");
+        // Everything parked longer than 10ms gets boosted; "slow" becomes
+        // senior to "greedy" and acquires.
+        assert!(m.age_waiters(Duration::from_millis(10)) >= 1);
+        h.join().unwrap();
+        assert_eq!(got.load(Ordering::SeqCst), 1);
+        m.drop_intents("greedy");
     }
 }

@@ -17,6 +17,6 @@ pub mod device_lock;
 pub mod port;
 pub mod queue;
 
-pub use device_lock::DeviceLockMgr;
+pub use device_lock::{DeviceLockMgr, LockCounters};
 pub use port::{BoundPort, Dequeue, PortBindings};
 pub use queue::{Channel, ChannelRegistry, Item, ItemsView};

@@ -143,6 +143,17 @@ impl Cluster {
         set.clone()
     }
 
+    /// Devices not currently claimed by any allocation — the admission-
+    /// control input for multi-flow cluster sharing.
+    pub fn free_devices(&self) -> usize {
+        self.inner.allocated.lock().unwrap().iter().filter(|b| !**b).count()
+    }
+
+    /// Devices currently claimed.
+    pub fn allocated_devices(&self) -> usize {
+        self.num_devices() - self.free_devices()
+    }
+
     pub fn release(&self, set: &DeviceSet) {
         let mut alloc = self.inner.allocated.lock().unwrap();
         for d in set.ids() {
@@ -204,6 +215,17 @@ mod tests {
         assert!(c.allocate_explicit(&[9]).is_err());
         c.release(&a);
         c.allocate_explicit(&[3]).unwrap();
+    }
+
+    #[test]
+    fn free_device_accounting() {
+        let c = cluster(1, 4);
+        assert_eq!(c.free_devices(), 4);
+        let a = c.allocate_packed(3).unwrap();
+        assert_eq!(c.free_devices(), 1);
+        assert_eq!(c.allocated_devices(), 3);
+        c.release(&a);
+        assert_eq!(c.free_devices(), 4);
     }
 
     #[test]

@@ -147,6 +147,34 @@ impl Default for SchedConfig {
     }
 }
 
+/// Multi-flow cluster-sharing configuration (the `FlowSupervisor`'s
+/// admission and fairness knobs).
+#[derive(Debug, Clone)]
+pub struct SupervisorConfig {
+    /// Maximum concurrently admitted flows.
+    pub max_flows: usize,
+    /// Device-lock priority stride between flow slots. Must exceed every
+    /// intra-flow stage priority so cross-flow ordering is total.
+    pub priority_stride: u64,
+    /// Time-slice budget (ms) before a starved waiter is boosted senior by
+    /// [`crate::channel::DeviceLockMgr::age_waiters`]; 0 disables aging.
+    pub time_slice_ms: u64,
+    /// Admit flows onto already-claimed device windows (time-sharing via
+    /// prioritized device locks) when free capacity runs out.
+    pub oversubscribe: bool,
+}
+
+impl Default for SupervisorConfig {
+    fn default() -> Self {
+        SupervisorConfig {
+            max_flows: 4,
+            priority_stride: 1 << 20,
+            time_slice_ms: 0,
+            oversubscribe: true,
+        }
+    }
+}
+
 /// Embodied-workload configuration (ManiSkill-like / LIBERO-like).
 #[derive(Debug, Clone)]
 pub struct EmbodiedConfig {
@@ -184,6 +212,7 @@ pub struct RunConfig {
     pub rollout: RolloutConfig,
     pub train: TrainConfig,
     pub sched: SchedConfig,
+    pub supervisor: SupervisorConfig,
     pub embodied: EmbodiedConfig,
 }
 
@@ -198,6 +227,7 @@ impl Default for RunConfig {
             rollout: RolloutConfig::default(),
             train: TrainConfig::default(),
             sched: SchedConfig::default(),
+            supervisor: SupervisorConfig::default(),
             embodied: EmbodiedConfig::default(),
         }
     }
@@ -257,6 +287,27 @@ impl RunConfig {
         }
         get_num!(v, "sched.feed_batch", c.sched.feed_batch, as_usize);
 
+        get_num!(v, "supervisor.max_flows", c.supervisor.max_flows, as_usize);
+        // Explicit (not get_num!): negative values must error, not wrap to
+        // astronomically large u64 strides/slices (same convention as
+        // sched.poll_ms above).
+        for (path, field) in [
+            ("supervisor.priority_stride", &mut c.supervisor.priority_stride),
+            ("supervisor.time_slice_ms", &mut c.supervisor.time_slice_ms),
+        ] {
+            if let Some(x) = v.get_path(path).and_then(Value::as_i64) {
+                if x < 0 {
+                    bail!("{path} must not be negative");
+                }
+                *field = x as u64;
+            }
+        }
+        if let Some(b) = v.get_path("supervisor.oversubscribe").and_then(Value::as_bool) {
+            c.supervisor.oversubscribe = b;
+        } else if let Some(x) = v.get_path("supervisor.oversubscribe").and_then(Value::as_i64) {
+            c.supervisor.oversubscribe = x != 0;
+        }
+
         get_num!(v, "embodied.num_envs", c.embodied.num_envs, as_usize);
         get_num!(v, "embodied.horizon", c.embodied.horizon, as_usize);
         if let Some(s) = v.get_path("embodied.env_kind").and_then(Value::as_str) {
@@ -299,6 +350,12 @@ impl RunConfig {
         if self.sched.feed_batch == 0 {
             bail!("sched.feed_batch must be positive");
         }
+        if self.supervisor.max_flows == 0 {
+            bail!("supervisor.max_flows must be positive");
+        }
+        if self.supervisor.priority_stride == 0 {
+            bail!("supervisor.priority_stride must be positive");
+        }
         Ok(())
     }
 
@@ -338,5 +395,24 @@ mod tests {
         assert!(RunConfig::from_value(&v).is_err());
         let v = parse_toml("[sched]\nmode = wat").unwrap();
         assert!(RunConfig::from_value(&v).is_err());
+        let v = parse_toml("[supervisor]\nmax_flows = 0").unwrap();
+        assert!(RunConfig::from_value(&v).is_err());
+        let v = parse_toml("[supervisor]\npriority_stride = -1").unwrap();
+        assert!(RunConfig::from_value(&v).is_err(), "negative stride must error, not wrap");
+        let v = parse_toml("[supervisor]\ntime_slice_ms = -5").unwrap();
+        assert!(RunConfig::from_value(&v).is_err());
+    }
+
+    #[test]
+    fn supervisor_knobs_parsed() {
+        let v = parse_toml(
+            "[supervisor]\nmax_flows = 2\npriority_stride = 4096\ntime_slice_ms = 50\noversubscribe = 0\n",
+        )
+        .unwrap();
+        let c = RunConfig::from_value(&v).unwrap();
+        assert_eq!(c.supervisor.max_flows, 2);
+        assert_eq!(c.supervisor.priority_stride, 4096);
+        assert_eq!(c.supervisor.time_slice_ms, 50);
+        assert!(!c.supervisor.oversubscribe);
     }
 }

@@ -24,7 +24,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Context, Result};
 
 use super::spec::{EndpointSpec, FlowGraphInfo, FlowSpec, RankShape};
-use crate::channel::{BoundPort, Dequeue, Item};
+use crate::channel::{BoundPort, Dequeue, Item, LockCounters};
 use crate::cluster::DeviceSet;
 use crate::config::PlacementMode;
 use crate::data::Payload;
@@ -34,6 +34,30 @@ use crate::worker::{GroupHandle, LockMode, WorkerGroup};
 
 /// The driver's endpoint name in channel traces.
 pub const DRIVER_ENDPOINT: &str = "driver";
+
+/// Multi-flow launch options: how this flow coexists with others on one
+/// shared cluster. `Default` reproduces the single-flow behaviour (whole
+/// cluster, no scope, base priority 0, locks decided by the placement).
+#[derive(Debug, Clone, Default)]
+pub struct LaunchOpts {
+    /// Namespace prefix for group, endpoint, and physical channel names
+    /// (e.g. `"grpo:"`). Required when several flows share one `Services`,
+    /// since endpoint registration and lock-counter aggregation key on
+    /// names.
+    pub scope: Option<String>,
+    /// Device window `(start, len)` this flow is confined to; `None` spans
+    /// the whole cluster. The `FlowSupervisor` hands windows out under
+    /// admission control.
+    pub window: Option<(usize, usize)>,
+    /// Added to every stage's flow priority: flows get disjoint priority
+    /// bands so cross-flow device-lock ordering is total (no cross-flow
+    /// deadlock as long as the band stride exceeds intra-flow priorities).
+    pub priority_base: u64,
+    /// Force device locking on every non-cyclic stage regardless of
+    /// placement mode — required when the window is time-shared with
+    /// another flow (cross-flow context switching).
+    pub shared_window: bool,
+}
 
 /// Resolved placement directive for one stage.
 #[derive(Debug, Clone)]
@@ -66,6 +90,7 @@ struct StageMeta {
 /// A launched flow: groups up, placement applied, ready to run.
 pub struct FlowDriver {
     name: String,
+    scope: String,
     stages: Vec<StageMeta>,
     edges: Vec<ResolvedEdge>,
     call_args: Vec<(usize, String, Payload)>,
@@ -78,21 +103,62 @@ pub struct FlowDriver {
 }
 
 impl FlowDriver {
-    /// Validate the spec, resolve the placement, and launch all stages.
+    /// Validate the spec, resolve the placement, and launch all stages on
+    /// the whole cluster (single-flow launch).
     pub fn launch(spec: FlowSpec, services: &Services, mode: PlacementMode) -> Result<FlowDriver> {
+        FlowDriver::launch_with(spec, services, mode, LaunchOpts::default())
+    }
+
+    /// Launch under multi-flow [`LaunchOpts`]: a name scope, a device
+    /// window, a flow-level lock-priority band, and (for time-shared
+    /// windows) forced device locking.
+    pub fn launch_with(
+        spec: FlowSpec,
+        services: &Services,
+        mode: PlacementMode,
+        opts: LaunchOpts,
+    ) -> Result<FlowDriver> {
         let info = spec.validate()?;
-        let n = services.cluster.num_devices();
+        if opts.shared_window && !info.cyclic.is_empty() {
+            // Cyclic stages must run concurrently and therefore never take
+            // device locks — on a time-shared window they would use a
+            // co-tenant's devices with no arbitration at all. Such flows
+            // need exclusive capacity.
+            bail!(
+                "flow {:?}: cyclic stages {:?} cannot take device locks, so this flow \
+                 cannot time-share a window — admit it with exclusive capacity",
+                spec.name,
+                info.cyclic
+            );
+        }
+        let total = services.cluster.num_devices();
+        let (base, n) = opts.window.unwrap_or((0, total));
+        if n == 0 || base + n > total {
+            bail!(
+                "flow {:?}: device window ({base}, {n}) outside cluster of {total}",
+                spec.name
+            );
+        }
         let mode = match mode {
             PlacementMode::Auto => auto_fallback(&spec, &info, n),
             m => m,
         };
         let mode_name = mode.name();
-        let plans = resolve_placement(&spec, &info, n, mode)?;
+        let plans = resolve_placement(
+            &spec,
+            &info,
+            base,
+            n,
+            mode,
+            opts.priority_base,
+            opts.shared_window,
+        )?;
 
+        let scope = opts.scope.clone().unwrap_or_default();
         let mut spec = spec;
         let mut groups = Vec::with_capacity(spec.stages.len());
         for (i, st) in spec.stages.iter_mut().enumerate() {
-            let name = st.name.clone();
+            let name = format!("{scope}{}", st.name);
             let g = WorkerGroup::launch(&name, services, plans[i].placements.clone(), |r| {
                 (st.factory)(r)
             })
@@ -130,11 +196,15 @@ impl FlowDriver {
             .stages
             .iter()
             .enumerate()
-            .map(|(i, s)| StageMeta { name: s.name.clone(), priority: s.priority.unwrap_or(i as u64) })
+            .map(|(i, s)| StageMeta {
+                name: s.name.clone(),
+                priority: opts.priority_base + s.priority.unwrap_or(i as u64),
+            })
             .collect();
 
         Ok(FlowDriver {
             name: spec.name.clone(),
+            scope,
             stages,
             edges,
             call_args,
@@ -145,6 +215,42 @@ impl FlowDriver {
             info,
             run_seq: AtomicU64::new(0),
         })
+    }
+
+    /// Name scope of this flow ("" when launched single-flow).
+    pub fn scope(&self) -> &str {
+        &self.scope
+    }
+
+    /// Per-group lock-holder prefixes ("scope:stage/") — the aggregation
+    /// keys for this flow's fairness counters and stale-intent cleanup.
+    fn lock_prefixes(&self) -> Vec<String> {
+        self.groups.iter().map(|g| format!("{}/", g.name)).collect()
+    }
+
+    /// Cumulative device-lock fairness counters for this flow (grants,
+    /// waits, wait seconds, preemptions) since launch.
+    pub fn lock_counters(&self) -> LockCounters {
+        let mut out = LockCounters::default();
+        for p in self.lock_prefixes() {
+            out.absorb(&self.services.locks.counters(&p));
+        }
+        out
+    }
+
+    /// Phase-time breakdown restricted to **this flow**. Metric phases key
+    /// on the (scoped) group prefix, so on shared services a scoped flow
+    /// filters to its own groups and strips the scope back off ("rollout",
+    /// not "grpo:rollout"); an unscoped single-flow driver returns the full
+    /// registry view unchanged.
+    pub fn breakdown(&self) -> Vec<(String, f64)> {
+        let all = self.services.metrics.breakdown();
+        if self.scope.is_empty() {
+            return all;
+        }
+        all.into_iter()
+            .filter_map(|(k, s)| k.strip_prefix(self.scope.as_str()).map(|r| (r.to_string(), s)))
+            .collect()
     }
 
     /// Concrete placement mode name ("collocated" / "disaggregated" /
@@ -201,7 +307,10 @@ impl FlowDriver {
         }
         let mut ports = HashMap::new();
         for e in &self.edges {
-            let physical = format!("{}@{seq}", e.channel);
+            // Physical names carry the flow scope so concurrent flows with
+            // identical logical channel names never collide in the shared
+            // registry.
+            let physical = format!("{}{}@{seq}", self.scope, e.channel);
             let ch = self.services.channels.create(&physical);
             let port = BoundPort::new(ch.clone(), e.discipline, e.granularity);
             match &e.producer {
@@ -209,7 +318,8 @@ impl FlowDriver {
                 Endpoint::Stage { idx, port: pname, .. } => {
                     let g = &self.groups[*idx];
                     for r in 0..g.n_ranks() {
-                        ch.register_producer(&format!("{}/{r}", self.stages[*idx].name));
+                        // Must match the ranks' (scoped) endpoint names.
+                        ch.register_producer(&format!("{}/{r}", g.name));
                     }
                     g.ports().bind(pname, port.clone());
                 }
@@ -219,7 +329,13 @@ impl FlowDriver {
             }
             ports.insert(e.channel.clone(), port);
         }
-        Ok(FlowRun { driver: self, ports, handles: Vec::new(), t0: Instant::now() })
+        Ok(FlowRun {
+            driver: self,
+            ports,
+            handles: Vec::new(),
+            t0: Instant::now(),
+            locks0: self.lock_counters(),
+        })
     }
 
     /// Profiling-guided Algorithm-1 planning over a spec's declared graph:
@@ -278,12 +394,18 @@ fn same_scc(info: &FlowGraphInfo, a: &str, b: &str) -> bool {
     info.members.iter().any(|m| m.iter().any(|x| x == a) && m.iter().any(|x| x == b))
 }
 
-/// Map the spec's stages onto concrete device blocks + lock directives.
+/// Map the spec's stages onto concrete device blocks + lock directives,
+/// confined to the window `[base, base + n)` of the cluster. `force_lock`
+/// (time-shared windows) makes every non-cyclic stage take the device lock
+/// even under placements that would otherwise own devices exclusively.
 fn resolve_placement(
     spec: &FlowSpec,
     info: &FlowGraphInfo,
+    base: usize,
     n: usize,
     mode: PlacementMode,
+    priority_base: u64,
+    force_lock: bool,
 ) -> Result<Vec<StagePlan>> {
     if n == 0 {
         bail!("cluster has zero devices");
@@ -366,19 +488,29 @@ fn resolve_placement(
         PlacementMode::Auto => unreachable!("Auto resolved before placement"),
     }
 
+    if force_lock {
+        // Time-shared window: another flow's workers touch these devices,
+        // so exclusive ownership is off the table for every stage.
+        for l in locked.iter_mut() {
+            *l = true;
+        }
+    }
+
     let mut plans = Vec::with_capacity(m);
     for i in 0..m {
         let st = &spec.stages[i];
         // Stages inside a cycle must run concurrently: never lock them.
         let lock = if locked[i] && !info.cyclic.contains(&st.name) {
-            LockMode::Device { priority: spec.stage_priority(i) }
+            LockMode::Device { priority: priority_base + spec.stage_priority(i) }
         } else {
             LockMode::None
         };
         let (start, len) = blocks[i];
         let placements = match st.shape {
-            RankShape::PerDevice => (start..start + len).map(|d| DeviceSet::range(d, 1)).collect(),
-            RankShape::Single => vec![DeviceSet::range(start, len)],
+            RankShape::PerDevice => {
+                (start..start + len).map(|d| DeviceSet::range(base + d, 1)).collect()
+            }
+            RankShape::Single => vec![DeviceSet::range(base + start, len)],
         };
         plans.push(StagePlan { name: st.name.clone(), placements, lock });
     }
@@ -392,6 +524,8 @@ pub struct FlowRun<'a> {
     ports: HashMap<String, BoundPort>,
     handles: Vec<(usize, String, GroupHandle)>,
     t0: Instant,
+    /// Lock-counter snapshot at `begin` (per-run fairness diff).
+    locks0: LockCounters,
 }
 
 impl FlowRun<'_> {
@@ -477,8 +611,30 @@ impl FlowRun<'_> {
     }
 
     /// Barrier on every stage handle; returns the per-stage / per-edge
-    /// report.
+    /// report with this run's device-lock fairness counters.
+    ///
+    /// Also drops any **stale lock intents** left behind by this flow's
+    /// groups: an intent registered for an invocation that failed (or was
+    /// never claimed because a rank died) would otherwise read as a
+    /// permanent senior waiter and block a later flow's acquisition on the
+    /// shared cluster.
     pub fn finish(self) -> Result<FlowReport> {
+        // Intent lifecycle: nothing of this flow may keep waiting after the
+        // barrier. Normal completion leaves no intents; a failed run can
+        // (e.g. a dispatch to a dead rank registers an intent nobody will
+        // ever claim). The guard drops them on *every* exit path — the
+        // error path returns early so a wedged sibling stage cannot hang
+        // the barrier behind a dead producer.
+        struct IntentGuard<'a>(&'a FlowDriver);
+        impl Drop for IntentGuard<'_> {
+            fn drop(&mut self) {
+                for p in self.0.lock_prefixes() {
+                    self.0.services.locks.drop_intents(&p);
+                }
+            }
+        }
+        let _cleanup = IntentGuard(self.driver);
+
         let mut outcomes = Vec::new();
         for (gi, method, h) in self.handles {
             let stage = self.driver.stages[gi].name.clone();
@@ -504,6 +660,7 @@ impl FlowRun<'_> {
             secs: self.t0.elapsed().as_secs_f64(),
             outcomes,
             edges,
+            locks: self.driver.lock_counters().since(&self.locks0),
         })
     }
 }
@@ -527,13 +684,19 @@ pub struct EdgeStats {
     pub backlog: usize,
 }
 
-/// Per-run report: what moved where, and what every stage returned.
+/// Per-run report: what moved where, what every stage returned, and how
+/// the flow fared in device-lock arbitration (contention + preemptions —
+/// the multi-flow fairness observables).
 pub struct FlowReport {
     pub flow: String,
     pub mode: &'static str,
     pub secs: f64,
     pub outcomes: Vec<StageOutcome>,
     pub edges: Vec<EdgeStats>,
+    /// This run's device-lock counters: grants, blocked acquisitions,
+    /// seconds spent waiting, and preemptions (forced yields to a senior
+    /// flow).
+    pub locks: LockCounters,
 }
 
 impl FlowReport {
@@ -561,6 +724,10 @@ impl FlowReport {
                 e.channel, e.discipline, e.put, e.got, e.backlog
             ));
         }
+        s.push_str(&format!(
+            "  locks: {} grants, {} waits ({:.3}s), {} preemptions\n",
+            self.locks.grants, self.locks.waits, self.locks.wait_secs, self.locks.preemptions
+        ));
         s
     }
 }

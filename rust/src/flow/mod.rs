@@ -10,13 +10,23 @@
 //! granularity (elastic pipelining) and device lock / onload / offload
 //! steps (context switching). [`graph`] still supports just-in-time trace
 //! extraction for flows composed imperatively.
+//!
+//! [`supervisor`] extends both mechanisms *across* flows: a
+//! [`FlowSupervisor`] admits multiple specs onto one shared cluster with
+//! per-flow device windows, cross-flow context switching via prioritized
+//! lock bands, time-slice fairness, and elastic resizing when a flow
+//! retires.
 
 pub mod driver;
 pub mod graph;
 pub mod pipeline;
 pub mod spec;
+pub mod supervisor;
 
-pub use driver::{EdgeStats, FlowDriver, FlowReport, FlowRun, StageOutcome, StagePlan};
+pub use driver::{EdgeStats, FlowDriver, FlowReport, FlowRun, LaunchOpts, StageOutcome, StagePlan};
 pub use graph::WorkflowGraph;
 pub use pipeline::{chunk_sizes, Chunk};
 pub use spec::{Edge, FlowGraphInfo, FlowSpec, Stage};
+pub use supervisor::{
+    plan_union, AdmitReq, Admission, FlowStatus, FlowSupervisor, ResizeOffer, RetireReport,
+};

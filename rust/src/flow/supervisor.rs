@@ -1,0 +1,759 @@
+//! Multi-flow cluster sharing: the [`FlowSupervisor`].
+//!
+//! RLinf's context switching and elastic pipelining exist *within* a flow;
+//! the supervisor extends them *across* flows so several RL workloads
+//! (e.g. GRPO reasoning and embodied PPO) share one cluster:
+//!
+//! * **Admission control** — a flow asks for a device count; if the free
+//!   capacity covers it the supervisor carves out an exclusive contiguous
+//!   window (real allocation against the [`Cluster`] books). When capacity
+//!   runs out, a flow that declared itself *shareable* may be admitted
+//!   onto another shareable flow's window instead — both then time-share
+//!   via prioritized device locks (cross-flow context switching).
+//! * **Priority bands** — each flow gets a lock-priority band
+//!   (`slot × priority_stride`), keeping the cross-flow ordering total
+//!   while preserving the intra-flow data-dependency ordering that
+//!   prevents producer/consumer deadlocks.
+//! * **Time-slice fairness** — [`FlowSupervisor::tick`] ages starved
+//!   waiters ([`DeviceLockMgr::age_waiters`]): a junior flow parked past
+//!   its slice is boosted senior, so priority never becomes starvation.
+//! * **Elastic resizing** — when a flow retires, its devices are released
+//!   and re-offered to adjacent running flows as [`ResizeOffer`]s, with a
+//!   re-chunking granularity hint scaled from the flow's declared options
+//!   (the `Plan`-granularity story of elastic pipelining).
+//! * **Joint placement** — [`plan_union`] re-runs Algorithm 1 over the
+//!   disjoint union of several flows' declared graphs when profiles
+//!   exist, yielding one plan (and per-flow window widths) instead of the
+//!   partitioned admission heuristic.
+//!
+//! Fairness is observable: per-flow [`LockCounters`] (grants, waits,
+//! preemptions) aggregate by the flow's name scope, and every
+//! [`super::FlowReport`] carries the per-run diff.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use super::driver::LaunchOpts;
+use super::graph::WorkflowGraph;
+use super::spec::FlowSpec;
+use crate::channel::LockCounters;
+use crate::cluster::DeviceSet;
+use crate::config::SupervisorConfig;
+use crate::sched::{Plan, ProfileDb, SchedProblem, Scheduler};
+use crate::worker::group::Services;
+
+/// Admission request for one flow.
+#[derive(Debug, Clone)]
+pub struct AdmitReq {
+    /// Unique flow name; becomes the scope prefix `"{name}:"`.
+    pub name: String,
+    /// Devices requested (0 ⇒ 1).
+    pub devices: usize,
+    /// Priority slot (lower = more senior); default: admission order.
+    pub slot: Option<u64>,
+    /// May this flow time-share its window with another shareable flow?
+    /// Shareable flows always take device locks, so a later overlapping
+    /// admission stays safe. The flow must be **acyclic**: cyclic stages
+    /// cannot lock, and `FlowDriver::launch_with` rejects `shared_window`
+    /// launches of cyclic specs.
+    pub shareable: bool,
+    /// Granularity options for elastic re-chunking offers (typically the
+    /// model's artifact batch variants).
+    pub granularities: Vec<usize>,
+}
+
+impl AdmitReq {
+    pub fn new(name: &str, devices: usize) -> AdmitReq {
+        AdmitReq {
+            name: name.to_string(),
+            devices,
+            slot: None,
+            shareable: false,
+            granularities: Vec::new(),
+        }
+    }
+
+    pub fn shareable(mut self) -> AdmitReq {
+        self.shareable = true;
+        self
+    }
+
+    pub fn slot(mut self, s: u64) -> AdmitReq {
+        self.slot = Some(s);
+        self
+    }
+
+    pub fn granularities(mut self, g: Vec<usize>) -> AdmitReq {
+        self.granularities = g;
+        self
+    }
+}
+
+/// Outcome of an admission: the window plus ready-made [`LaunchOpts`] for
+/// [`super::FlowDriver::launch_with`].
+#[derive(Debug, Clone)]
+pub struct Admission {
+    pub flow: String,
+    /// Device window `(start, len)`.
+    pub window: (usize, usize),
+    /// Window disjoint from every other admitted flow.
+    pub exclusive: bool,
+    pub priority_base: u64,
+    pub opts: LaunchOpts,
+}
+
+/// A freed-capacity offer to a running flow (elastic resizing). Accepting
+/// it (via [`FlowSupervisor::accept_resize`]) claims the devices and
+/// returns fresh launch options; the flow relaunches its driver — after
+/// dropping the old one, which frees its endpoint names — with the wider
+/// window, re-chunking edges to `granularity` when one is suggested.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ResizeOffer {
+    pub flow: String,
+    /// The expanded window (old window merged with freed devices).
+    pub window: (usize, usize),
+    /// Re-chunk hint snapped to the flow's declared granularity options.
+    pub granularity: Option<usize>,
+}
+
+/// What a retirement freed and who may grow into it.
+#[derive(Debug, Clone)]
+pub struct RetireReport {
+    /// Contiguous device range released back to the cluster. `None` when
+    /// the retiring flow owned nothing (a time-sharing tenant), when every
+    /// owned device passed to a surviving co-tenant, or when the released
+    /// devices were non-contiguous (still released, just not offerable as
+    /// one window).
+    pub freed: Option<(usize, usize)>,
+    pub offers: Vec<ResizeOffer>,
+}
+
+#[derive(Debug, Clone)]
+struct FlowEntry {
+    name: String,
+    window: (usize, usize),
+    /// This entry performed the cluster allocation for its window.
+    /// Exact device IDs this entry allocated from the cluster books (empty
+    /// for a time-sharing tenant). Every allocated device belongs to
+    /// exactly one entry, so retirement can never leak or double-release.
+    owned: Vec<usize>,
+    exclusive: bool,
+    shareable: bool,
+    priority_base: u64,
+    granularities: Vec<usize>,
+}
+
+#[derive(Default)]
+struct SupState {
+    flows: Vec<FlowEntry>,
+    next_slot: u64,
+}
+
+/// Admits multiple [`FlowSpec`]-driven flows onto one shared [`Services`]
+/// cluster. See the module docs for the full mechanism.
+pub struct FlowSupervisor {
+    services: Services,
+    cfg: SupervisorConfig,
+    state: Mutex<SupState>,
+}
+
+/// Status snapshot of one admitted flow.
+#[derive(Debug, Clone)]
+pub struct FlowStatus {
+    pub name: String,
+    pub window: (usize, usize),
+    pub exclusive: bool,
+    pub priority_base: u64,
+}
+
+impl FlowSupervisor {
+    pub fn new(services: &Services, cfg: SupervisorConfig) -> FlowSupervisor {
+        FlowSupervisor { services: services.clone(), cfg, state: Mutex::new(SupState::default()) }
+    }
+
+    /// The shared services flows launch against.
+    pub fn services(&self) -> &Services {
+        &self.services
+    }
+
+    /// Admit a flow: allocate an exclusive window when capacity allows,
+    /// else (if permitted) time-share the junior-most shareable flow's
+    /// window. Errors when the cluster cannot host the flow.
+    pub fn admit(&self, req: AdmitReq) -> Result<Admission> {
+        let mut st = self.state.lock().unwrap();
+        if st.flows.len() >= self.cfg.max_flows {
+            bail!(
+                "supervisor: {} flows admitted (max_flows = {})",
+                st.flows.len(),
+                self.cfg.max_flows
+            );
+        }
+        if req.name.is_empty() || req.name.contains(':') {
+            bail!("supervisor: flow name {:?} must be non-empty and ':'-free", req.name);
+        }
+        if st.flows.iter().any(|f| f.name == req.name) {
+            bail!("supervisor: flow {:?} already admitted", req.name);
+        }
+        let total = self.services.cluster.num_devices();
+        let want = req.devices.max(1);
+        if want > total {
+            bail!("supervisor: flow {:?} wants {want} devices, cluster has {total}", req.name);
+        }
+        // Validate the priority slot *before* touching the cluster books,
+        // so a rejected admission cannot leak an allocation.
+        let slot = req.slot.unwrap_or(st.next_slot);
+        let priority_base = slot.checked_mul(self.cfg.priority_stride).with_context(|| {
+            format!("supervisor: slot {slot} × priority_stride overflows the priority space")
+        })?;
+        // Disjoint priority bands are what makes the cross-flow lock order
+        // total (the deadlock-freedom argument); a shared slot would
+        // interleave two flows' seniorities.
+        if st.flows.iter().any(|f| f.priority_base == priority_base) {
+            bail!("supervisor: priority slot {slot} already in use by an admitted flow");
+        }
+
+        // Exclusive path: a contiguous free block of the requested size.
+        let free = self.services.cluster.free_devices();
+        let mut fragmented = false;
+        let owned = if want <= free {
+            match self.services.cluster.allocate_packed(want) {
+                Ok(set) => Some(set),
+                Err(_) => {
+                    // Enough devices in total, but no contiguous block —
+                    // report fragmentation explicitly instead of letting
+                    // it masquerade as exhaustion.
+                    fragmented = true;
+                    None
+                }
+            }
+        } else {
+            None
+        };
+        let avail = if fragmented {
+            format!("{free} free but fragmented (no contiguous {want}-device block)")
+        } else {
+            format!("{free} free")
+        };
+        let (window, owned_ids, exclusive) = match owned {
+            Some(set) => {
+                let ids: Vec<usize> = set.ids().iter().map(|d| d.0).collect();
+                ((ids[0], want), ids, true)
+            }
+            None => {
+                // Oversubscribed path: time-share a shareable host window.
+                if !self.cfg.oversubscribe {
+                    bail!(
+                        "supervisor: flow {:?} wants {want} devices, {avail} \
+                         (oversubscription disabled)",
+                        req.name
+                    );
+                }
+                if !req.shareable {
+                    bail!(
+                        "supervisor: flow {:?} wants {want} devices, {avail}, \
+                         and is not shareable",
+                        req.name
+                    );
+                }
+                // The host window must actually cover the request: silently
+                // clamping a flow that asked for N devices onto a narrower
+                // window would defeat its declared demands.
+                let host = st
+                    .flows
+                    .iter_mut()
+                    .filter(|f| f.shareable && f.window.1 >= want)
+                    .max_by_key(|f| f.priority_base)
+                    .with_context(|| {
+                        format!(
+                            "supervisor: flow {:?} wants {want} devices, {avail}, \
+                             and no shareable flow with a window of ≥{want} devices \
+                             to time-share with",
+                            req.name
+                        )
+                    })?;
+                host.exclusive = false;
+                (host.window, Vec::new(), false)
+            }
+        };
+
+        st.next_slot = st.next_slot.max(slot.saturating_add(1));
+        let entry = FlowEntry {
+            name: req.name.clone(),
+            window,
+            owned: owned_ids,
+            exclusive,
+            shareable: req.shareable,
+            priority_base,
+            granularities: req.granularities,
+        };
+        st.flows.push(entry);
+        Ok(Admission {
+            flow: req.name.clone(),
+            window,
+            exclusive,
+            priority_base,
+            opts: LaunchOpts {
+                scope: Some(format!("{}:", req.name)),
+                window: Some(window),
+                priority_base,
+                // Shareable flows always lock, so a later overlapping
+                // admission needs no relaunch of this one.
+                shared_window: req.shareable,
+            },
+        })
+    }
+
+    /// Retire a finished flow: drop its stale lock intents, forget its
+    /// fairness counters (a later flow may reuse the name), pass each
+    /// owned device to a surviving co-tenant covering it or release it,
+    /// and offer freed capacity to adjacent running flows.
+    pub fn retire(&self, name: &str) -> Result<RetireReport> {
+        let mut st = self.state.lock().unwrap();
+        let idx = st
+            .flows
+            .iter()
+            .position(|f| f.name == name)
+            .with_context(|| format!("supervisor: no admitted flow {name:?}"))?;
+        let gone = st.flows.remove(idx);
+
+        // Intent + counter lifecycle: a finished flow must leave no waiter
+        // behind, and its fairness totals die with it (reports were
+        // rendered from the per-run/driver snapshots already).
+        let scope = format!("{name}:");
+        self.services.locks.drop_intents(&scope);
+        self.services.locks.reset_counters(&scope);
+
+        let overlaps = |a: (usize, usize), b: (usize, usize)| a.0 < b.0 + b.1 && b.0 < a.0 + a.1;
+        // Device-exact inheritance: every device the retiring flow owned
+        // either passes to the senior-most surviving flow whose window
+        // covers it, or returns to the pool. Exact accounting means no
+        // device can leak or be double-released, even after resizes grew a
+        // window past its tenants.
+        let mut freed_ids: Vec<usize> = Vec::new();
+        for d in gone.owned {
+            let heir = st
+                .flows
+                .iter_mut()
+                .filter(|f| f.window.0 <= d && d < f.window.0 + f.window.1)
+                .min_by_key(|f| f.priority_base);
+            match heir {
+                Some(h) => h.owned.push(d),
+                None => freed_ids.push(d),
+            }
+        }
+        let mut freed = None;
+        if !freed_ids.is_empty() {
+            freed_ids.sort_unstable();
+            self.services.cluster.release(&DeviceSet::new(
+                freed_ids.iter().map(|&d| crate::cluster::DeviceId(d)).collect(),
+            ));
+            // Offerable only when contiguous (windows are ranges).
+            if freed_ids.windows(2).all(|w| w[1] == w[0] + 1) {
+                freed = Some((freed_ids[0], freed_ids.len()));
+            }
+        }
+        // Exclusivity is a derived property: recompute it for everyone (a
+        // retiring tenant can make its host exclusive again).
+        let snapshot: Vec<(String, (usize, usize))> =
+            st.flows.iter().map(|f| (f.name.clone(), f.window)).collect();
+        for f in st.flows.iter_mut() {
+            f.exclusive = !snapshot.iter().any(|(n, w)| n != &f.name && overlaps(*w, f.window));
+        }
+
+        let mut offers = Vec::new();
+        if let Some((fs, fl)) = freed {
+            for f in st.flows.iter() {
+                let (ws, wl) = f.window;
+                let adjacent = ws + wl == fs || fs + fl == ws;
+                if !adjacent {
+                    continue;
+                }
+                let merged = (ws.min(fs), wl + fl);
+                // Re-chunk hint: scale granularity with the device growth,
+                // snapped to the largest declared option that fits.
+                let granularity = if f.granularities.is_empty() {
+                    None
+                } else {
+                    let scaled = f
+                        .granularities
+                        .iter()
+                        .copied()
+                        .max()
+                        .unwrap_or(1)
+                        .saturating_mul(merged.1)
+                        / wl.max(1);
+                    f.granularities
+                        .iter()
+                        .copied()
+                        .filter(|&g| g <= scaled)
+                        .max()
+                        .or_else(|| f.granularities.iter().copied().min())
+                };
+                offers.push(ResizeOffer { flow: f.name.clone(), window: merged, granularity });
+            }
+            // Senior flows get first refusal.
+            let prio = |name: &str| {
+                st.flows
+                    .iter()
+                    .find(|f| f.name == name)
+                    .map(|f| f.priority_base)
+                    .unwrap_or(u64::MAX)
+            };
+            offers.sort_by_key(|o| prio(&o.flow));
+        }
+        Ok(RetireReport { freed, offers })
+    }
+
+    /// Accept a [`ResizeOffer`]: claim the freed devices and return fresh
+    /// launch options for relaunching the flow's driver over the wider
+    /// window. Errors if another admission claimed the devices first.
+    pub fn accept_resize(&self, offer: &ResizeOffer) -> Result<LaunchOpts> {
+        let mut st = self.state.lock().unwrap();
+        let entry = st
+            .flows
+            .iter_mut()
+            .find(|f| f.name == offer.flow)
+            .with_context(|| format!("supervisor: no admitted flow {:?}", offer.flow))?;
+        let (os, ol) = entry.window;
+        let (ns, nl) = offer.window;
+        if ns > os || ns + nl < os + ol {
+            bail!("supervisor: offer window {:?} does not contain {:?}", offer.window, entry.window);
+        }
+        let extra: Vec<usize> = (ns..ns + nl).filter(|d| *d < os || *d >= os + ol).collect();
+        self.services
+            .cluster
+            .allocate_explicit(&extra)
+            .context("supervisor: freed devices were re-claimed by another admission")?;
+        entry.window = offer.window;
+        entry.owned.extend(extra.iter().copied());
+        Ok(LaunchOpts {
+            scope: Some(format!("{}:", entry.name)),
+            window: Some(entry.window),
+            priority_base: entry.priority_base,
+            // Invariant (same as admission): shareable flows always lock,
+            // so a later overlapping admission never needs this flow to
+            // relaunch first.
+            shared_window: entry.shareable,
+        })
+    }
+
+    /// Time-slice fairness tick: boost waiters starved past the configured
+    /// slice (no-op when `time_slice_ms` is 0). Returns boosted waiters.
+    pub fn tick(&self) -> usize {
+        if self.cfg.time_slice_ms == 0 {
+            return 0;
+        }
+        self.services.locks.age_waiters(Duration::from_millis(self.cfg.time_slice_ms))
+    }
+
+    /// Per-flow device-lock fairness counters (grants, waits, preemptions).
+    pub fn counters(&self, flow: &str) -> LockCounters {
+        self.services.locks.counters(&format!("{flow}:"))
+    }
+
+    /// Snapshot of admitted flows.
+    pub fn flows(&self) -> Vec<FlowStatus> {
+        self.state
+            .lock()
+            .unwrap()
+            .flows
+            .iter()
+            .map(|f| FlowStatus {
+                name: f.name.clone(),
+                window: f.window,
+                exclusive: f.exclusive,
+                priority_base: f.priority_base,
+            })
+            .collect()
+    }
+}
+
+/// Joint placement: run Algorithm 1 once over the **disjoint union** of
+/// several flows' declared graphs (each node prefixed `"{flow}:"`), as if
+/// they were one workflow competing for the whole cluster. Returns the
+/// winning plan plus each flow's window width (the peak device count any
+/// of its workers was granted — the admission hint).
+///
+/// `workload` / `granularities` are keyed by the *prefixed* (and, for
+/// cyclic flows, SCC-condensed `"a:x+a:y"`) node names, matching the
+/// profile database. Used when profiles exist; otherwise the supervisor's
+/// partitioned admission heuristic applies.
+pub fn plan_union(
+    flows: &[(&str, &FlowSpec)],
+    db: &ProfileDb,
+    workload: &HashMap<String, usize>,
+    granularities: &HashMap<String, Vec<usize>>,
+    n_devices: usize,
+    device_mem: u64,
+    switch_overhead: f64,
+) -> Result<(Plan, HashMap<String, usize>)> {
+    if flows.is_empty() {
+        bail!("plan_union: no flows");
+    }
+    let mut union = WorkflowGraph::new();
+    let mut seen = std::collections::BTreeSet::new();
+    for (fname, spec) in flows {
+        if fname.contains(':') {
+            bail!("plan_union: flow name {fname:?} must be ':'-free");
+        }
+        if !seen.insert(*fname) {
+            // Identical prefixes would silently merge two specs' graphs
+            // into one chimera node set.
+            bail!("plan_union: duplicate flow name {fname:?}");
+        }
+        let info = spec
+            .validate()
+            .with_context(|| format!("plan_union: validating flow {fname:?}"))?;
+        for node in &info.graph.nodes {
+            union.add_node(&format!("{fname}:{node}"));
+        }
+        for &(a, b) in &info.graph.edges {
+            union.add_edge(
+                &format!("{fname}:{}", info.graph.nodes[a]),
+                &format!("{fname}:{}", info.graph.nodes[b]),
+            );
+        }
+    }
+    let (condensed, _members) = union.condense();
+    let problem = SchedProblem {
+        graph: condensed,
+        workload: workload.clone(),
+        granularities: granularities.clone(),
+        n_devices,
+        device_mem,
+        switch_overhead,
+    };
+    let mut sched = Scheduler::new(&problem, db);
+    let plan = sched.solve().context("plan_union: Algorithm 1 over the union graph")?;
+
+    let mut widths: HashMap<String, usize> = HashMap::new();
+    for a in plan.assignments() {
+        let flow = a.worker.split(':').next().unwrap_or("").to_string();
+        let w = widths.entry(flow).or_insert(0);
+        *w = (*w).max(a.devices);
+    }
+    Ok((plan, widths))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+    use crate::config::ClusterConfig;
+    use crate::flow::spec::Stage;
+    use crate::flow::Edge;
+    use crate::worker::{WorkerCtx, WorkerLogic};
+    use anyhow::Result;
+    use crate::data::Payload;
+
+    fn services(devices: usize) -> Services {
+        Services::new(Cluster::new(ClusterConfig {
+            nodes: 1,
+            devices_per_node: devices,
+            ..Default::default()
+        }))
+    }
+
+    fn sup(devices: usize, cfg: SupervisorConfig) -> FlowSupervisor {
+        FlowSupervisor::new(&services(devices), cfg)
+    }
+
+    #[test]
+    fn exclusive_admissions_partition_the_cluster() {
+        let s = sup(8, SupervisorConfig::default());
+        let a = s.admit(AdmitReq::new("grpo", 6)).unwrap();
+        let b = s.admit(AdmitReq::new("embodied", 2)).unwrap();
+        assert!(a.exclusive && b.exclusive);
+        assert_eq!(a.window.1 + b.window.1, 8);
+        // Disjoint windows.
+        assert!(a.window.0 + a.window.1 <= b.window.0 || b.window.0 + b.window.1 <= a.window.0);
+        assert_eq!(s.services().cluster.free_devices(), 0);
+        // Distinct priority bands.
+        assert_ne!(a.priority_base, b.priority_base);
+        assert_eq!(a.opts.scope.as_deref(), Some("grpo:"));
+    }
+
+    #[test]
+    fn oversubscription_requires_shareable_flows() {
+        let s = sup(2, SupervisorConfig::default());
+        s.admit(AdmitReq::new("a", 2).shareable()).unwrap();
+        // Non-shareable flow cannot squeeze in.
+        assert!(s.admit(AdmitReq::new("b", 2)).is_err());
+        // Shareable flow time-shares a's window with forced locking.
+        let b = s.admit(AdmitReq::new("b", 2).shareable()).unwrap();
+        assert!(!b.exclusive);
+        assert_eq!(b.window, (0, 2));
+        assert!(b.opts.shared_window);
+        // The host lost exclusivity.
+        let flows = s.flows();
+        assert!(!flows.iter().find(|f| f.name == "a").unwrap().exclusive);
+    }
+
+    #[test]
+    fn admission_limits_enforced() {
+        let cfg = SupervisorConfig { max_flows: 1, ..Default::default() };
+        let s = sup(4, cfg);
+        s.admit(AdmitReq::new("only", 1)).unwrap();
+        assert!(s.admit(AdmitReq::new("more", 1)).is_err(), "max_flows");
+        assert!(s.retire("ghost").is_err());
+        let s = sup(2, SupervisorConfig { oversubscribe: false, ..Default::default() });
+        s.admit(AdmitReq::new("a", 2).shareable()).unwrap();
+        let err = s.admit(AdmitReq::new("b", 1).shareable()).unwrap_err().to_string();
+        assert!(err.contains("oversubscription disabled"), "{err}");
+        assert!(s.admit(AdmitReq::new("bad:name", 1)).is_err());
+        assert!(s.admit(AdmitReq::new("huge", 99)).is_err());
+    }
+
+    #[test]
+    fn duplicate_priority_slots_rejected_without_leaking_devices() {
+        let s = sup(4, SupervisorConfig::default());
+        s.admit(AdmitReq::new("a", 1).slot(3)).unwrap();
+        let err = s.admit(AdmitReq::new("b", 1).slot(3)).unwrap_err().to_string();
+        assert!(err.contains("slot"), "{err}");
+        assert_eq!(s.services().cluster.free_devices(), 3, "rejected admission must not leak");
+        // Default slot continues past the explicit one.
+        let b = s.admit(AdmitReq::new("b", 1)).unwrap();
+        assert_ne!(b.priority_base, 3 * SupervisorConfig::default().priority_stride);
+        // Overflowing slots are rejected, not wrapped.
+        assert!(s.admit(AdmitReq::new("c", 1).slot(u64::MAX)).is_err());
+    }
+
+    #[test]
+    fn oversubscription_requires_a_wide_enough_host() {
+        let s = sup(6, SupervisorConfig::default());
+        s.admit(AdmitReq::new("small", 1).shareable()).unwrap();
+        s.admit(AdmitReq::new("rest", 5)).unwrap(); // consume remaining capacity
+        // A 3-device request cannot be clamped onto the 1-device window.
+        let err = s.admit(AdmitReq::new("big", 3).shareable()).unwrap_err().to_string();
+        assert!(err.contains("≥3"), "{err}");
+        // An equal-or-smaller request time-shares fine.
+        let ok = s.admit(AdmitReq::new("fits", 1).shareable()).unwrap();
+        assert_eq!(ok.window.1, 1);
+    }
+
+    #[test]
+    fn retire_frees_devices_and_offers_growth() {
+        let s = sup(8, SupervisorConfig::default());
+        s.admit(AdmitReq::new("keep", 6).granularities(vec![4, 8, 16])).unwrap();
+        s.admit(AdmitReq::new("done", 2)).unwrap();
+        assert_eq!(s.services().cluster.free_devices(), 0);
+
+        let r = s.retire("done").unwrap();
+        assert_eq!(r.freed, Some((6, 2)));
+        assert_eq!(s.services().cluster.free_devices(), 2);
+        assert_eq!(r.offers.len(), 1);
+        let offer = &r.offers[0];
+        assert_eq!(offer.flow, "keep");
+        assert_eq!(offer.window, (0, 8));
+        // 16 * 8/6 = 21 -> snapped down to 16.
+        assert_eq!(offer.granularity, Some(16));
+
+        let opts = s.accept_resize(offer).unwrap();
+        assert_eq!(opts.window, Some((0, 8)));
+        assert_eq!(s.services().cluster.free_devices(), 0);
+        assert_eq!(s.flows()[0].window, (0, 8));
+    }
+
+    #[test]
+    fn retiring_tenant_restores_host_exclusivity() {
+        let s = sup(2, SupervisorConfig::default());
+        s.admit(AdmitReq::new("host", 2).shareable()).unwrap();
+        s.admit(AdmitReq::new("guest", 2).shareable()).unwrap();
+        assert!(!s.flows().iter().find(|f| f.name == "host").unwrap().exclusive);
+        // The *tenant* retires first: the host must read as exclusive again.
+        let r = s.retire("guest").unwrap();
+        assert_eq!(r.freed, None, "tenant owned nothing");
+        let host = &s.flows()[0];
+        assert!(host.exclusive, "sole tenant is exclusive again after the guest leaves");
+        assert_eq!(s.services().cluster.free_devices(), 0, "host still holds the window");
+    }
+
+    #[test]
+    fn retiring_a_grown_owner_releases_uncovered_devices() {
+        // Regression: a flow that grew past its co-tenants via resize must
+        // not leak the uninhabited tail of its window on retirement.
+        let s = sup(6, SupervisorConfig::default());
+        s.admit(AdmitReq::new("host", 4).shareable()).unwrap(); // owns (0,4)
+        s.admit(AdmitReq::new("x", 2)).unwrap(); // owns (4,2)
+        s.admit(AdmitReq::new("guest", 4).shareable()).unwrap(); // shares (0,4)
+
+        let r = s.retire("x").unwrap();
+        assert_eq!(r.freed, Some((4, 2)));
+        let offer = r.offers.iter().find(|o| o.flow == "guest").unwrap();
+        s.accept_resize(offer).unwrap(); // guest now owns (0,6)
+
+        // Guest retires: host inherits the inhabited (0,4); devices 4-5
+        // are covered by nobody and must return to the pool, not leak.
+        let r = s.retire("guest").unwrap();
+        assert_eq!(r.freed, Some((4, 2)), "uncovered tail released and offerable");
+        assert_eq!(s.services().cluster.free_devices(), 2);
+
+        let r = s.retire("host").unwrap();
+        assert_eq!(r.freed, Some((0, 4)));
+        assert_eq!(s.services().cluster.free_devices(), 6, "nothing leaked");
+    }
+
+    #[test]
+    fn retiring_window_owner_passes_ownership_to_cotenant() {
+        let s = sup(2, SupervisorConfig::default());
+        s.admit(AdmitReq::new("host", 2).shareable()).unwrap();
+        s.admit(AdmitReq::new("guest", 2).shareable()).unwrap();
+        // Host owned the allocation; guest inherits instead of freeing.
+        let r = s.retire("host").unwrap();
+        assert_eq!(r.freed, None);
+        assert!(r.offers.is_empty());
+        assert_eq!(s.services().cluster.free_devices(), 0, "guest still runs there");
+        let flows = s.flows();
+        assert_eq!(flows.len(), 1);
+        assert!(flows[0].exclusive, "sole tenant is exclusive again");
+        // Now the guest retires too; devices return to the pool.
+        let r = s.retire("guest").unwrap();
+        assert_eq!(r.freed, Some((0, 2)));
+        assert_eq!(s.services().cluster.free_devices(), 2);
+    }
+
+    struct Nop;
+    impl WorkerLogic for Nop {
+        fn call(&mut self, _ctx: &WorkerCtx, _m: &str, arg: Payload) -> Result<Payload> {
+            Ok(arg)
+        }
+    }
+
+    fn nop(name: &str) -> Stage {
+        Stage::new(name, |_| Box::new(|_: &WorkerCtx| Ok(Box::new(Nop) as Box<dyn WorkerLogic>)))
+    }
+
+    #[test]
+    fn union_planning_spans_both_flows() {
+        let grpo = crate::flow::FlowSpec::new("grpo")
+            .stage(nop("rollout"))
+            .stage(nop("train"))
+            .edge(Edge::new("r").produced_by("rollout", "m").consumed_by("train", "m"));
+        let solo = crate::flow::FlowSpec::new("solo")
+            .stage(nop("sim"))
+            .edge(Edge::new("s").produced_by_driver().consumed_by("sim", "m"));
+
+        let mut db = ProfileDb::new();
+        let mut workload = HashMap::new();
+        let mut granularities = HashMap::new();
+        for w in ["a:rollout", "a:train", "b:sim"] {
+            for g in [8usize, 16] {
+                db.add(w, g, 0.01 * g as f64, 1 << 20);
+            }
+            workload.insert(w.to_string(), 32usize);
+            granularities.insert(w.to_string(), vec![8, 16]);
+        }
+        let (plan, widths) =
+            plan_union(&[("a", &grpo), ("b", &solo)], &db, &workload, &granularities, 8, 8 << 30, 0.1)
+                .unwrap();
+        let names: Vec<String> =
+            plan.assignments().iter().map(|x| x.worker.clone()).collect();
+        assert!(names.contains(&"a:rollout".to_string()), "{names:?}");
+        assert!(names.contains(&"b:sim".to_string()), "{names:?}");
+        assert!(widths["a"] >= 1 && widths["b"] >= 1);
+        assert!(widths["a"] <= 8 && widths["b"] <= 8);
+    }
+}

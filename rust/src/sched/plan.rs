@@ -77,6 +77,17 @@ impl Plan {
         }
     }
 
+    /// Devices granted to one worker, if it appears in the plan.
+    pub fn devices_of(&self, worker: &str) -> Option<usize> {
+        self.assignments().iter().find(|a| a.worker == worker).map(|a| a.devices)
+    }
+
+    /// Data granularity chosen for one worker, if it appears in the plan.
+    /// This is the re-chunking hint a resized flow applies to its edges.
+    pub fn granularity_of(&self, worker: &str) -> Option<usize> {
+        self.assignments().iter().find(|a| a.worker == worker).map(|a| a.granularity)
+    }
+
     /// Map the plan's sharing shape onto a concrete placement mode: every
     /// worker time-shares → collocated; none do → disaggregated; a mix →
     /// hybrid. This is how a spec-planned Algorithm-1 result is applied by
@@ -215,6 +226,19 @@ mod tests {
             time: 4.0,
         };
         assert_eq!(mixed.placement_mode(), PlacementMode::Hybrid);
+    }
+
+    #[test]
+    fn per_worker_lookups() {
+        let p = Plan::Spatial {
+            left: Box::new(leaf("a", 3, 1.0)),
+            right: Box::new(leaf("b", 1, 1.0)),
+            chunks: 2,
+            time: 1.5,
+        };
+        assert_eq!(p.devices_of("a"), Some(3));
+        assert_eq!(p.granularity_of("b"), Some(8));
+        assert_eq!(p.devices_of("ghost"), None);
     }
 
     #[test]

@@ -100,13 +100,16 @@ pub fn run_rank(ctx: WorkerCtx, factory: LogicFactory, rx: Receiver<Ctl>, monito
                 }
                 ctx.metrics.record(&method_keys[&method], elapsed);
 
-                if let LockMode::Device { .. } = lock {
+                if let LockMode::Device { priority } = lock {
                     // Offload only when someone is actually waiting for
                     // these devices (placement-aware skip).
                     if ctx.locks.was_contended(&holder, &ctx.devices) {
                         let _ = ensure_offloaded(&mut *logic, &ctx, &mut loaded);
                     }
-                    ctx.locks.release(&holder, &ctx.devices);
+                    // Yield-aware release: a senior waiter of another
+                    // holder makes this a preemption (counted per holder,
+                    // aggregated per flow for fairness reports).
+                    ctx.locks.release_yielding(&holder, &ctx.devices, priority);
                 }
 
                 match outcome {

@@ -19,13 +19,14 @@ use std::time::Instant;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::channel::LockCounters;
 use crate::cluster::Cluster;
 use crate::config::{PlacementMode, RunConfig};
 use crate::data::Payload;
 use crate::embodied::env::EnvKind;
 use crate::embodied::ood::OodMode;
 use crate::embodied::worker::{PolicyCfg, PolicyWorker, SimCfg, SimWorker};
-use crate::flow::{Edge, FlowDriver, FlowSpec, Stage};
+use crate::flow::{Edge, FlowDriver, FlowSpec, LaunchOpts, Stage};
 use crate::worker::group::Services;
 use crate::worker::{LockMode, WorkerLogic};
 
@@ -62,6 +63,11 @@ pub struct EmbodiedReport {
     pub iters: Vec<EmbodiedIter>,
     pub breakdown: Vec<(String, f64)>,
     pub mode: &'static str,
+    /// Device-lock fairness counters for this flow. Cyclic stages never
+    /// lock (and a cyclic flow cannot time-share a window — the driver
+    /// rejects `shared_window` launches), so these stay zero for the
+    /// fully-cyclic sim ⇄ policy flow.
+    pub locks: LockCounters,
 }
 
 impl EmbodiedReport {
@@ -138,9 +144,21 @@ fn embodied_spec(cfg: &RunConfig, opts: &EmbodiedOpts, kind: EnvKind) -> FlowSpe
         )
 }
 
-/// Run embodied PPO training; returns the report.
+/// Run embodied PPO training on a private cluster; returns the report.
 pub fn run_embodied(cfg: &RunConfig, opts: &EmbodiedOpts) -> Result<EmbodiedReport> {
     let services = Services::new(Cluster::new(cfg.cluster.clone()));
+    run_embodied_shared(cfg, opts, &services, LaunchOpts::default())
+}
+
+/// Run embodied PPO against **shared** services under multi-flow
+/// [`LaunchOpts`] — the `FlowSupervisor` entry point. `run_embodied` is
+/// the single-flow shim over this.
+pub fn run_embodied_shared(
+    cfg: &RunConfig,
+    opts: &EmbodiedOpts,
+    services: &Services,
+    launch: LaunchOpts,
+) -> Result<EmbodiedReport> {
     let kind = EnvKind::parse(&cfg.embodied.env_kind);
 
     // Auto: heuristic from the paper's own findings — CPU-bound sims favor
@@ -158,7 +176,7 @@ pub fn run_embodied(cfg: &RunConfig, opts: &EmbodiedOpts) -> Result<EmbodiedRepo
     };
 
     let spec = embodied_spec(cfg, opts, kind);
-    let driver = FlowDriver::launch(spec, &services, mode)?;
+    let driver = FlowDriver::launch_with(spec, services, mode, launch)?;
     // Cyclic stages are never locked, so both pre-load and stay resident.
     driver.onload_pipelined()?;
     driver
@@ -208,7 +226,13 @@ pub fn run_embodied(cfg: &RunConfig, opts: &EmbodiedOpts) -> Result<EmbodiedRepo
         }
     }
 
-    Ok(EmbodiedReport { iters, breakdown: services.metrics.breakdown(), mode: driver.mode() })
+    Ok(EmbodiedReport {
+        iters,
+        // Per-flow view (scope-filtered on shared services).
+        breakdown: driver.breakdown(),
+        mode: driver.mode(),
+        locks: driver.lock_counters(),
+    })
 }
 
 /// Evaluate a trained policy's success rate under an OOD mode without

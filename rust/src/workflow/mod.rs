@@ -7,8 +7,14 @@
 //! generator ⇄ simulator PPO workflow. Both run unchanged under
 //! collocated, disaggregated, and hybrid execution — only the placement
 //! and lock directives differ, which is the paper's core claim.
+//!
+//! Both runners also ship a `*_shared` variant taking shared
+//! [`crate::worker::group::Services`] plus multi-flow
+//! [`crate::flow::LaunchOpts`], so a [`crate::flow::FlowSupervisor`] can
+//! run them **concurrently on one cluster** (see `examples/multi_flow.rs`).
 
 pub mod embodied;
 pub mod reasoning;
 
-pub use reasoning::{run_grpo, GrpoReport, IterStats, RunnerOpts};
+pub use embodied::{run_embodied, run_embodied_shared, EmbodiedOpts, EmbodiedReport};
+pub use reasoning::{run_grpo, run_grpo_shared, GrpoReport, IterStats, RunnerOpts};

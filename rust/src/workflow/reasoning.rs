@@ -28,10 +28,11 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::channel::LockCounters;
 use crate::cluster::Cluster;
 use crate::config::{PlacementMode, RunConfig};
 use crate::data::{Payload, Tensor};
-use crate::flow::{Edge, FlowDriver, FlowSpec, Stage};
+use crate::flow::{Edge, FlowDriver, FlowSpec, LaunchOpts, Stage};
 use crate::infer::{InferCfg, InferWorker};
 use crate::metrics::Reduce;
 use crate::model::{TaskGen, Tokenizer};
@@ -79,6 +80,9 @@ pub struct GrpoReport {
     pub breakdown: Vec<(String, f64)>,
     pub mode: &'static str,
     pub plan_rendered: Option<String>,
+    /// Device-lock fairness counters for this flow (contention and
+    /// preemptions — meaningful when sharing a cluster with other flows).
+    pub locks: LockCounters,
 }
 
 impl GrpoReport {
@@ -135,9 +139,8 @@ impl GrpoReport {
 
 /// Rollout's device share under spatial placements — kept identical to the
 /// pre-declarative heuristic: an explicit `gen_devices`, else 2/3 of the
-/// cluster, always leaving ≥1 device for the rest.
-fn gen_share(cfg: &RunConfig) -> usize {
-    let n = cfg.cluster.total_devices();
+/// flow's device window, always leaving ≥1 device for the rest.
+fn gen_share(cfg: &RunConfig, n: usize) -> usize {
     let cap = n.saturating_sub(1).max(1);
     if cfg.sched.gen_devices > 0 {
         cfg.sched.gen_devices.min(cap)
@@ -147,8 +150,9 @@ fn gen_share(cfg: &RunConfig) -> usize {
 }
 
 /// Declare the GRPO macro flow: three stages, four typed edges, one
-/// driver pump (the per-prompt advantage aggregation).
-fn grpo_spec(cfg: &RunConfig, opts: &RunnerOpts, gran: usize) -> Result<FlowSpec> {
+/// driver pump (the per-prompt advantage aggregation). `n_devices` is the
+/// flow's device window width (the whole cluster when run single-flow).
+fn grpo_spec(cfg: &RunConfig, opts: &RunnerOpts, gran: usize, n_devices: usize) -> Result<FlowSpec> {
     let manifest = Manifest::load(&cfg.artifacts_dir)?;
     let model = manifest.model(&cfg.model)?;
     let full_batch = model.granularities("decode").into_iter().max().unwrap_or(32);
@@ -179,7 +183,7 @@ fn grpo_spec(cfg: &RunConfig, opts: &RunnerOpts, gran: usize) -> Result<FlowSpec
             })
             .ranks_per_device()
             .weight(2.0)
-            .devices(gen_share(cfg)),
+            .devices(gen_share(cfg, n_devices)),
         )
         .stage(
             Stage::new("infer", move |_rank| {
@@ -214,21 +218,36 @@ fn grpo_spec(cfg: &RunConfig, opts: &RunnerOpts, gran: usize) -> Result<FlowSpec
         .pump("scored", "train"))
 }
 
-/// Run GRPO for `cfg.iters` iterations under the configured mode.
+/// Run GRPO for `cfg.iters` iterations under the configured mode, on a
+/// private cluster built from `cfg.cluster`.
 pub fn run_grpo(cfg: &RunConfig, opts: &RunnerOpts) -> Result<GrpoReport> {
     let services = Services::new(Cluster::new(cfg.cluster.clone()));
+    run_grpo_shared(cfg, opts, &services, LaunchOpts::default())
+}
+
+/// Run GRPO against **shared** services under multi-flow [`LaunchOpts`]
+/// (name scope, device window, lock-priority band) — the entry point the
+/// `FlowSupervisor` admission hands out. `run_grpo` is the single-flow
+/// shim over this.
+pub fn run_grpo_shared(
+    cfg: &RunConfig,
+    opts: &RunnerOpts,
+    services: &Services,
+    launch: LaunchOpts,
+) -> Result<GrpoReport> {
+    let n_devices = launch.window.map(|(_, l)| l).unwrap_or(services.cluster.num_devices());
     let gran = if cfg.sched.granularity > 0 { cfg.sched.granularity } else { 8 };
 
     // Resolve Auto via profiling + Algorithm 1 over the declared graph.
     let (mode, plan_rendered) = match cfg.sched.mode {
         PlacementMode::Auto => {
-            let (mode, rendered) = auto_schedule(cfg, opts, gran)?;
+            let (mode, rendered) = auto_schedule(cfg, opts, gran, n_devices)?;
             (mode, Some(rendered))
         }
         m => (m, None),
     };
-    let spec = grpo_spec(cfg, opts, gran)?;
-    let driver = FlowDriver::launch(spec, &services, mode)?;
+    let spec = grpo_spec(cfg, opts, gran, n_devices)?;
+    let driver = FlowDriver::launch_with(spec, services, mode, launch)?;
 
     // Pre-load stages that keep device residency in pipelined modes.
     driver.onload_pipelined()?;
@@ -258,7 +277,7 @@ pub fn run_grpo(cfg: &RunConfig, opts: &RunnerOpts) -> Result<GrpoReport> {
     for iter in 0..cfg.iters {
         services.metrics.record_value("iter.begin", iter as f64);
         let t0 = Instant::now();
-        let stats = run_iteration(cfg, &services, &driver, &tok, &mut taskgen, p_len)?;
+        let stats = run_iteration(cfg, services, &driver, &tok, &mut taskgen, p_len)?;
         let secs = t0.elapsed().as_secs_f64();
         sync_weights(&driver)?;
         let s = IterStats {
@@ -289,8 +308,16 @@ pub fn run_grpo(cfg: &RunConfig, opts: &RunnerOpts) -> Result<GrpoReport> {
         }
     }
 
-    let breakdown = services.metrics.breakdown();
-    Ok(GrpoReport { iters, breakdown, mode: driver.mode(), plan_rendered })
+    // Per-flow view: on shared services the driver filters out other
+    // flows' phases and strips this flow's scope prefix.
+    let breakdown = driver.breakdown();
+    Ok(GrpoReport {
+        iters,
+        breakdown,
+        mode: driver.mode(),
+        plan_rendered,
+        locks: driver.lock_counters(),
+    })
 }
 
 /// One iteration; returns (tokens, mean_reward, accuracy, loss, steps, skipped).
@@ -487,8 +514,15 @@ fn sync_weights(driver: &FlowDriver) -> Result<()> {
 
 /// Auto mode: profile one tiny collocated run, build the cost model, then
 /// let the driver plan Algorithm 1 over the *declared* graph (no hand-
-/// wired `WorkflowGraph` — the spec is the source of truth).
-fn auto_schedule(cfg: &RunConfig, opts: &RunnerOpts, gran: usize) -> Result<(PlacementMode, String)> {
+/// wired `WorkflowGraph` — the spec is the source of truth). `n_devices`
+/// is the flow's device window width: under a supervisor admission the
+/// plan must be drawn for the window, not the whole cluster.
+fn auto_schedule(
+    cfg: &RunConfig,
+    opts: &RunnerOpts,
+    gran: usize,
+    n_devices: usize,
+) -> Result<(PlacementMode, String)> {
     // Profile with a reduced workload on a fresh mini-cluster.
     let mut pcfg = cfg.clone();
     pcfg.iters = cfg.sched.profile_iters.max(1);
@@ -524,10 +558,10 @@ fn auto_schedule(cfg: &RunConfig, opts: &RunnerOpts, gran: usize) -> Result<(Pla
         workload.insert(w.to_string(), cfg.responses_per_iter());
         granularities.insert(w.to_string(), grans.clone());
     }
-    let spec = grpo_spec(cfg, opts, gran)?;
+    let spec = grpo_spec(cfg, opts, gran, n_devices)?;
     FlowDriver::plan_auto(
         &spec,
-        cfg.cluster.total_devices(),
+        n_devices,
         cfg.cluster.device_mem,
         &db,
         &workload,

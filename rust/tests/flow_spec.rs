@@ -10,7 +10,7 @@ use anyhow::{bail, Result};
 use rlinf::cluster::Cluster;
 use rlinf::config::{ClusterConfig, PlacementMode};
 use rlinf::data::Payload;
-use rlinf::flow::{Edge, FlowDriver, FlowSpec, Stage};
+use rlinf::flow::{Edge, FlowDriver, FlowSpec, LaunchOpts, Stage};
 use rlinf::worker::group::Services;
 use rlinf::worker::{LockMode, WorkerCtx, WorkerLogic};
 
@@ -226,6 +226,139 @@ fn auto_fallback_resolves_by_graph_shape() {
     let svc = services(3);
     let driver = FlowDriver::launch(spec, &svc, PlacementMode::Auto).unwrap();
     assert_eq!(driver.mode(), "collocated");
+}
+
+#[test]
+fn windowed_scoped_launch_confines_and_namespaces_the_flow() {
+    // Two identical flows, same stage and channel names, on one shared
+    // Services — only possible because scope namespaces groups, endpoints,
+    // and physical channels, and windows confine devices.
+    let svc = services(4);
+    let mk = |scope: &str, window: (usize, usize), base: u64| {
+        let spec = FlowSpec::new("twin")
+            .stage(relay_stage("relay").single_rank())
+            .stage(sink_stage("sink").single_rank())
+            .edge(Edge::new("src").produced_by_driver().consumed_by("relay", "relay"))
+            .edge(Edge::new("mid").produced_by("relay", "relay").consumed_by("sink", "drain"));
+        FlowDriver::launch_with(
+            spec,
+            &svc,
+            PlacementMode::Disaggregated,
+            LaunchOpts {
+                scope: Some(scope.to_string()),
+                window: Some(window),
+                priority_base: base,
+                shared_window: false,
+            },
+        )
+        .unwrap()
+    };
+    let a = mk("a:", (0, 2), 0);
+    let b = mk("b:", (2, 2), 1000);
+
+    // Windows respected: every placement stays inside its half.
+    for (drv, lo, hi) in [(&a, 0usize, 2usize), (&b, 2, 4)] {
+        for p in drv.stage_plans() {
+            for set in &p.placements {
+                for d in set.ids() {
+                    assert!(d.0 >= lo && d.0 < hi, "{:?} outside window [{lo},{hi})", set);
+                }
+            }
+        }
+    }
+
+    // Both flows run to completion concurrently with identical names.
+    let mut ra = a.begin().unwrap();
+    let mut rb = b.begin().unwrap();
+    for (run, v) in [(&ra, 1i64), (&rb, 100i64)] {
+        run.send("src", Payload::new().set_meta("v", v)).unwrap();
+        run.feed_done("src").unwrap();
+    }
+    ra.start().unwrap();
+    rb.start().unwrap();
+    let rep_a = ra.finish().unwrap();
+    let rep_b = rb.finish().unwrap();
+    assert_eq!(rep_a.outputs("sink", "drain").unwrap()[0].meta_i64("sum"), Some(2));
+    assert_eq!(rep_b.outputs("sink", "drain").unwrap()[0].meta_i64("sum"), Some(200));
+
+    // Physical channels are scope-disambiguated in the shared registry.
+    let names = svc.channels.names();
+    assert!(names.iter().any(|c| c == "a:src@1"), "{names:?}");
+    assert!(names.iter().any(|c| c == "b:src@1"), "{names:?}");
+
+    // No locks were needed (disjoint windows) and none were counted.
+    assert_eq!(a.lock_counters().grants, 0);
+    assert_eq!(rep_b.locks.grants, 0);
+}
+
+#[test]
+fn shared_window_forces_locks_and_priority_bands() {
+    let svc = services(2);
+    let spec = FlowSpec::new("forced")
+        .stage(relay_stage("relay").single_rank())
+        .stage(sink_stage("sink").single_rank())
+        .edge(Edge::new("src").produced_by_driver().consumed_by("relay", "relay"))
+        .edge(Edge::new("mid").produced_by("relay", "relay").consumed_by("sink", "drain"));
+    // Disaggregated over 2 devices would normally lock nothing; a shared
+    // window forces Device locks in the flow's priority band.
+    let driver = FlowDriver::launch_with(
+        spec,
+        &svc,
+        PlacementMode::Disaggregated,
+        LaunchOpts {
+            scope: Some("f:".into()),
+            window: None,
+            priority_base: 500,
+            shared_window: true,
+        },
+    )
+    .unwrap();
+    assert_eq!(driver.lock_of("relay"), LockMode::Device { priority: 500 });
+    assert_eq!(driver.lock_of("sink"), LockMode::Device { priority: 501 });
+
+    let mut run = driver.begin().unwrap();
+    run.send("src", Payload::new().set_meta("v", 3)).unwrap();
+    run.feed_done("src").unwrap();
+    run.start().unwrap();
+    let rep = run.finish().unwrap();
+    assert_eq!(rep.outputs("sink", "drain").unwrap()[0].meta_i64("sum"), Some(6));
+    assert_eq!(rep.locks.grants, 2, "both stages acquired under forced locks: {:?}", rep.locks);
+}
+
+#[test]
+fn cyclic_flow_cannot_time_share_a_window() {
+    // Cyclic stages never take device locks, so shared_window would leave
+    // them completely unarbitrated against the co-tenant flow.
+    let svc = services(2);
+    let spec = FlowSpec::new("cyc")
+        .stage(relay_stage("ping").single_rank())
+        .stage(relay_stage("pong").single_rank())
+        .edge(Edge::new("a").produced_by("ping", "relay").consumed_by("pong", "relay"))
+        .edge(Edge::new("b").produced_by("pong", "relay").consumed_by("ping", "relay"));
+    let err = FlowDriver::launch_with(
+        spec,
+        &svc,
+        PlacementMode::Collocated,
+        LaunchOpts { shared_window: true, ..Default::default() },
+    )
+    .unwrap_err();
+    assert!(format!("{err}").contains("cannot time-share"), "{err}");
+}
+
+#[test]
+fn out_of_range_window_rejected() {
+    let svc = services(2);
+    let spec = FlowSpec::new("w")
+        .stage(sink_stage("s").single_rank())
+        .edge(Edge::new("x").produced_by_driver().consumed_by("s", "drain"));
+    let err = FlowDriver::launch_with(
+        spec,
+        &svc,
+        PlacementMode::Collocated,
+        LaunchOpts { window: Some((1, 2)), ..Default::default() },
+    )
+    .unwrap_err();
+    assert!(format!("{err}").contains("window"), "{err}");
 }
 
 #[test]

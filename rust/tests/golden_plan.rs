@@ -1,0 +1,188 @@
+//! Golden-profile regression tests pinning Algorithm 1's placement output
+//! for the shipped GRPO and embodied profiles (`tests/data/*.json`), so a
+//! future scheduler edit cannot silently change production plans.
+//!
+//! The golden files live next to the profiles
+//! (`tests/data/golden_*.json`). On first run (or with `RLINF_BLESS=1`)
+//! the current plan is written and the test passes with a notice — commit
+//! the blessed file to arm the regression. On later runs any deviation
+//! from the blessed plan fails. Structural invariants (coverage, device
+//! bounds, granularity membership, determinism) are asserted
+//! unconditionally.
+
+use std::collections::HashMap;
+
+use rlinf::data::Payload;
+use rlinf::flow::{plan_union, Edge, FlowSpec, Stage, WorkflowGraph};
+use rlinf::sched::{Plan, ProfileDb, SchedProblem, Scheduler};
+use rlinf::util::json;
+use rlinf::worker::{WorkerCtx, WorkerLogic};
+
+fn data_path(name: &str) -> String {
+    format!("{}/tests/data/{name}", env!("CARGO_MANIFEST_DIR"))
+}
+
+fn load_profiles(name: &str) -> ProfileDb {
+    let text = std::fs::read_to_string(data_path(name))
+        .unwrap_or_else(|e| panic!("shipped profile {name} missing: {e}"));
+    ProfileDb::from_json(&json::parse(&text).expect("valid profile JSON"))
+}
+
+/// Compare (or bless) a plan against its golden file.
+fn check_golden(golden_name: &str, plan: &Plan) {
+    let rendered = plan.to_json().to_json_pretty();
+    let path = data_path(golden_name);
+    let bless = std::env::var_os("RLINF_BLESS").is_some();
+    match std::fs::read_to_string(&path) {
+        Ok(expected) if !bless => {
+            assert_eq!(
+                expected.trim(),
+                rendered.trim(),
+                "Algorithm 1 plan changed vs golden {golden_name}; if intentional, \
+                 re-bless with RLINF_BLESS=1 and commit the new golden"
+            );
+        }
+        _ => {
+            std::fs::write(&path, format!("{rendered}\n")).expect("write golden");
+            eprintln!("blessed golden plan {golden_name} — commit it to arm the regression");
+        }
+    }
+}
+
+/// Structural invariants every plan must satisfy regardless of goldens.
+fn check_invariants(plan: &Plan, workers: &[&str], n_devices: usize, grans: &[usize]) {
+    let a = plan.assignments();
+    assert_eq!(a.len(), workers.len(), "every worker placed exactly once: {a:?}");
+    for w in workers {
+        let x = a.iter().find(|x| x.worker == *w).unwrap_or_else(|| panic!("{w} missing"));
+        assert!(x.devices >= 1 && x.devices <= n_devices, "{w}: {} devices", x.devices);
+        assert!(grans.contains(&x.granularity), "{w}: granularity {} not offered", x.granularity);
+    }
+    assert!(plan.time() > 0.0 && plan.time().is_finite());
+    // Stage indices are a permutation-free strictly increasing DFS order.
+    for win in a.windows(2) {
+        assert!(win[0].stage < win[1].stage);
+    }
+}
+
+fn grpo_problem() -> SchedProblem {
+    let mut g = WorkflowGraph::new();
+    g.add_edge("rollout", "infer");
+    g.add_edge("infer", "train");
+    let mut workload = HashMap::new();
+    let mut granularities = HashMap::new();
+    for w in ["rollout", "infer", "train"] {
+        workload.insert(w.to_string(), 128usize);
+        granularities.insert(w.to_string(), vec![8, 16, 32]);
+    }
+    SchedProblem {
+        graph: g,
+        workload,
+        granularities,
+        n_devices: 8,
+        device_mem: 8 << 30,
+        switch_overhead: 0.2,
+    }
+}
+
+#[test]
+fn grpo_shipped_profile_plan_is_pinned() {
+    let db = load_profiles("profiles_grpo.json");
+    let problem = grpo_problem();
+    let plan = Scheduler::new(&problem, &db).solve().unwrap();
+    check_invariants(&plan, &["rollout", "infer", "train"], 8, &[8, 16, 32]);
+    check_golden("golden_grpo_plan.json", &plan);
+}
+
+#[test]
+fn grpo_plan_is_deterministic() {
+    // The golden pin only works if repeated solves agree bit-for-bit.
+    let db = load_profiles("profiles_grpo.json");
+    let problem = grpo_problem();
+    let a = Scheduler::new(&problem, &db).solve().unwrap();
+    let b = Scheduler::new(&problem, &db).solve().unwrap();
+    assert_eq!(a.to_json().to_json(), b.to_json().to_json(), "scheduler must be deterministic");
+    assert_eq!(a.placement_mode(), b.placement_mode());
+    assert_eq!(a.assignments(), b.assignments());
+}
+
+struct Nop;
+impl WorkerLogic for Nop {
+    fn call(&mut self, _ctx: &WorkerCtx, _m: &str, arg: Payload) -> anyhow::Result<Payload> {
+        Ok(arg)
+    }
+}
+
+fn nop(name: &str) -> Stage {
+    Stage::new(name, |_| Box::new(|_: &WorkerCtx| Ok(Box::new(Nop) as Box<dyn WorkerLogic>)))
+}
+
+fn grpo_flow() -> FlowSpec {
+    FlowSpec::new("grpo")
+        .stage(nop("rollout"))
+        .stage(nop("infer"))
+        .stage(nop("train"))
+        .edge(Edge::new("r").produced_by("rollout", "gen").consumed_by("infer", "lp"))
+        .edge(Edge::new("s").produced_by("infer", "lp").consumed_by("train", "ts"))
+}
+
+fn embodied_flow() -> FlowSpec {
+    FlowSpec::new("embodied")
+        .stage(nop("sim"))
+        .stage(nop("policy"))
+        .edge(Edge::new("obs").produced_at("sim", "sr", "obs").consumed_at("policy", "ct", "obs"))
+        .edge(Edge::new("act").produced_at("policy", "ct", "act").consumed_at("sim", "sr", "act"))
+}
+
+#[test]
+fn union_shipped_profile_plan_is_pinned() {
+    // Joint placement: Algorithm 1 over the union of the GRPO chain and
+    // the (SCC-condensed) embodied cycle, as one 8-device problem.
+    let db = load_profiles("profiles_union.json");
+    let grpo = grpo_flow();
+    let emb = embodied_flow();
+    let mut workload = HashMap::new();
+    let mut granularities = HashMap::new();
+    for w in ["grpo:rollout", "grpo:infer", "grpo:train"] {
+        workload.insert(w.to_string(), 128usize);
+        granularities.insert(w.to_string(), vec![8, 16, 32]);
+    }
+    workload.insert("emb:sim+emb:policy".to_string(), 128usize);
+    granularities.insert("emb:sim+emb:policy".to_string(), vec![32, 64]);
+
+    let (plan, widths) = plan_union(
+        &[("grpo", &grpo), ("emb", &emb)],
+        &db,
+        &workload,
+        &granularities,
+        8,
+        8 << 30,
+        0.2,
+    )
+    .unwrap();
+
+    check_invariants(
+        &plan,
+        &["grpo:rollout", "grpo:infer", "grpo:train", "emb:sim+emb:policy"],
+        8,
+        &[8, 16, 32, 64],
+    );
+    // Window widths cover both flows and fit the cluster.
+    assert!(widths["grpo"] >= 1 && widths["grpo"] <= 8);
+    assert!(widths["emb"] >= 1 && widths["emb"] <= 8);
+
+    check_golden("golden_union_plan.json", &plan);
+
+    // Determinism of the union path too.
+    let (plan2, _) = plan_union(
+        &[("grpo", &grpo), ("emb", &emb)],
+        &db,
+        &workload,
+        &granularities,
+        8,
+        8 << 30,
+        0.2,
+    )
+    .unwrap();
+    assert_eq!(plan.to_json().to_json(), plan2.to_json().to_json());
+}

@@ -1,0 +1,292 @@
+//! Deterministic multi-flow stress test: two flows with overlapping device
+//! demands time-share a 2-device cluster under a seeded PRNG schedule.
+//!
+//! Asserts the multi-flow contract end to end:
+//! * both flows complete (no cross-flow deadlock),
+//! * `DeviceLockMgr::grants()` matches the expected accounting
+//!   (one grant per locked stage invocation per rank),
+//! * preemption counters are nonzero **only** for the lower-priority flow,
+//! * no stale lock intents survive the runs,
+//! * retirement returns the devices to the cluster pool.
+//!
+//! CI runs this in release mode under a 120-second watchdog — the test
+//! wedging is the deadlock canary.
+
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+use rlinf::cluster::Cluster;
+use rlinf::config::{ClusterConfig, PlacementMode, SupervisorConfig};
+use rlinf::data::Payload;
+use rlinf::flow::{AdmitReq, Edge, FlowDriver, FlowReport, FlowSpec, FlowSupervisor, Stage};
+use rlinf::util::prng::Pcg64;
+use rlinf::worker::group::Services;
+use rlinf::worker::{WorkerCtx, WorkerLogic};
+
+/// Produces `items` payloads into its "out" port, pacing each with a
+/// seeded-PRNG sleep in `[lo_ms, hi_ms)` — the deterministic schedule that
+/// keeps the lock-holding windows predictable.
+struct Streamer {
+    rng: Pcg64,
+    items: usize,
+    lo_ms: f64,
+    hi_ms: f64,
+}
+
+impl WorkerLogic for Streamer {
+    fn call(&mut self, ctx: &WorkerCtx, method: &str, _arg: Payload) -> Result<Payload> {
+        match method {
+            "produce" => {
+                let out = ctx.port("out")?;
+                for i in 0..self.items {
+                    let ms = self.rng.range_f64(self.lo_ms, self.hi_ms);
+                    std::thread::sleep(Duration::from_secs_f64(ms / 1000.0));
+                    out.send_weighted(ctx.endpoint(), Payload::new().set_meta("i", i as i64), 1.0)?;
+                }
+                out.done(ctx.endpoint());
+                Ok(Payload::new().set_meta("produced", self.items))
+            }
+            other => bail!("no method {other}"),
+        }
+    }
+}
+
+/// Drains its "in" port until closed, echoing every item to "res".
+struct Sink;
+
+impl WorkerLogic for Sink {
+    fn call(&mut self, ctx: &WorkerCtx, method: &str, _arg: Payload) -> Result<Payload> {
+        match method {
+            "collect" => {
+                let inp = ctx.port("in")?;
+                let out = ctx.port("res")?;
+                let mut n = 0i64;
+                while let Some(item) = inp.recv(ctx.endpoint()) {
+                    out.send(ctx.endpoint(), item.payload)?;
+                    n += 1;
+                }
+                out.done(ctx.endpoint());
+                Ok(Payload::new().set_meta("collected", n))
+            }
+            other => bail!("no method {other}"),
+        }
+    }
+}
+
+/// Two-stage linear flow: gen --data--> sink --res--> driver.
+fn stress_spec(name: &str, seed: u64, items: usize, lo_ms: f64, hi_ms: f64) -> FlowSpec {
+    FlowSpec::new(name)
+        .stage(
+            Stage::new("gen", move |_| {
+                let rng = Pcg64::new_stream(seed, 0x11);
+                Box::new(move |_: &WorkerCtx| {
+                    Ok(Box::new(Streamer { rng: rng.clone(), items, lo_ms, hi_ms })
+                        as Box<dyn WorkerLogic>)
+                })
+            })
+            .single_rank(),
+        )
+        .stage(
+            Stage::new("sink", |_| {
+                Box::new(|_: &WorkerCtx| Ok(Box::new(Sink) as Box<dyn WorkerLogic>))
+            })
+            .single_rank(),
+        )
+        .edge(Edge::new("data").produced_by("gen", "produce").consumed_by("sink", "collect"))
+        .edge(Edge::new("res").produced_at("sink", "collect", "res").consumed_by_driver())
+}
+
+/// Drain a run's "res" channel to completion, polling so a wedged flow
+/// fails fast instead of hanging the harness.
+fn drain(run: &rlinf::flow::FlowRun<'_>, expect: usize) -> Result<usize> {
+    let mut got = 0usize;
+    let mut idle = 0u32;
+    loop {
+        match run.recv_timeout("res", Duration::from_millis(50))? {
+            Some(_) => {
+                got += 1;
+                idle = 0;
+            }
+            None => {
+                if run.drained("res")? {
+                    break;
+                }
+                if run.poisoned() {
+                    bail!("flow poisoned while draining");
+                }
+                idle += 1;
+                if idle > 1200 {
+                    bail!("no progress for 60s draining res ({got}/{expect} items) — deadlock?");
+                }
+            }
+        }
+    }
+    Ok(got)
+}
+
+#[test]
+fn two_flows_time_share_two_devices_with_fair_accounting() {
+    let services = Services::new(Cluster::new(ClusterConfig {
+        nodes: 1,
+        devices_per_node: 2,
+        ..Default::default()
+    }));
+    let sup = FlowSupervisor::new(
+        &services,
+        SupervisorConfig { priority_stride: 1000, ..Default::default() },
+    );
+
+    // Senior flow "hi" (slot 0) and junior flow "lo" (slot 1) both demand
+    // the whole 2-device cluster: "lo" time-shares "hi"'s window.
+    let adm_hi = sup.admit(AdmitReq::new("hi", 2).slot(0).shareable()).unwrap();
+    let adm_lo = sup.admit(AdmitReq::new("lo", 2).slot(1).shareable()).unwrap();
+    assert!(adm_hi.exclusive);
+    assert!(!adm_lo.exclusive, "lo must time-share");
+    assert_eq!(adm_lo.window, adm_hi.window);
+    assert_eq!(adm_hi.priority_base, 0);
+    assert_eq!(adm_lo.priority_base, 1000);
+
+    let n_hi = 6usize;
+    let n_lo = 20usize;
+    // lo's generator paces 15–25ms per item: it holds the device lock for
+    // 300–500ms, so even a heavily loaded runner cannot miss the window
+    // between the 60ms head start below and lo's release.
+    let drv_lo = FlowDriver::launch_with(
+        stress_spec("lo-flow", 7, n_lo, 15.0, 25.0),
+        &services,
+        PlacementMode::Collocated,
+        adm_lo.opts.clone(),
+    )
+    .unwrap();
+    let drv_hi = FlowDriver::launch_with(
+        stress_spec("hi-flow", 9, n_hi, 5.0, 10.0),
+        &services,
+        PlacementMode::Collocated,
+        adm_hi.opts.clone(),
+    )
+    .unwrap();
+
+    // Deterministic schedule: start the junior flow first so its generator
+    // is mid-stream (holding the lock) when the senior flow's intents
+    // arrive — forcing exactly the cross-flow preemption under test.
+    let mut run_lo = drv_lo.begin().unwrap();
+    run_lo.start().unwrap();
+    std::thread::sleep(Duration::from_millis(60));
+    let mut run_hi = drv_hi.begin().unwrap();
+    run_hi.start().unwrap();
+
+    // Both flows complete: no cross-flow deadlock.
+    let got_hi = drain(&run_hi, n_hi).unwrap();
+    let got_lo = drain(&run_lo, n_lo).unwrap();
+    assert_eq!(got_hi, n_hi, "senior flow delivered every item");
+    assert_eq!(got_lo, n_lo, "junior flow delivered every item");
+
+    let rep_hi: FlowReport = run_hi.finish().unwrap();
+    let rep_lo: FlowReport = run_lo.finish().unwrap();
+    assert_eq!(rep_hi.edge("data").unwrap().got, n_hi as u64);
+    assert_eq!(rep_lo.edge("data").unwrap().got, n_lo as u64);
+
+    // Grant accounting: 2 locked stage invocations per flow, one rank
+    // each, nothing else touches the lock manager.
+    assert_eq!(services.locks.grants(), 4, "gen+sink per flow, one rank each");
+    assert_eq!(rep_hi.locks.grants, 2, "{:?}", rep_hi.locks);
+    assert_eq!(rep_lo.locks.grants, 2, "{:?}", rep_lo.locks);
+    assert_eq!(sup.counters("hi"), rep_hi.locks, "per-run diff == cumulative (single run)");
+    assert_eq!(sup.counters("lo"), rep_lo.locks);
+
+    // Preemptions: only the junior flow was forced to yield. The senior
+    // flow's releases never face a senior waiter.
+    assert!(
+        rep_lo.locks.preemptions >= 1,
+        "junior flow must have yielded to the senior one: {:?}",
+        rep_lo.locks
+    );
+    assert_eq!(rep_hi.locks.preemptions, 0, "senior flow never preempted: {:?}", rep_hi.locks);
+
+    // Contention observed on both sides (hi's gen waited behind lo's gen;
+    // lo's sink waited at minimum).
+    assert!(rep_hi.locks.waits >= 1, "{:?}", rep_hi.locks);
+    assert!(rep_lo.locks.waits >= 1, "{:?}", rep_lo.locks);
+    assert!(rep_hi.locks.wait_secs > 0.0);
+
+    // Intent lifecycle: nothing left pending after the runs.
+    assert_eq!(services.locks.pending_intents(""), 0, "no stale intents survive finish()");
+
+    // Retirement: the time-sharing junior frees nothing; the owner frees
+    // the window back to the pool.
+    let r = sup.retire("lo").unwrap();
+    assert_eq!(r.freed, None);
+    let r = sup.retire("hi").unwrap();
+    assert_eq!(r.freed, Some(adm_hi.window));
+    assert_eq!(services.cluster.free_devices(), 2);
+}
+
+#[test]
+fn stale_intents_from_a_dead_flow_do_not_block_admitted_flows() {
+    // Integration-level regression for the intent lifecycle: dispatching a
+    // locked invocation to an already-dead rank registers the lock intent
+    // *before* the send fails, and nothing would ever claim it — a
+    // permanent senior waiter that blocks every later flow on the shared
+    // devices. `FlowRun::finish` must drop such stale intents.
+    struct Dies;
+    impl WorkerLogic for Dies {
+        fn call(&mut self, _ctx: &WorkerCtx, _m: &str, _arg: Payload) -> Result<Payload> {
+            bail!("intentional mid-flow death");
+        }
+    }
+
+    let services = Services::new(Cluster::new(ClusterConfig {
+        nodes: 1,
+        devices_per_node: 1,
+        ..Default::default()
+    }));
+    let spec = FlowSpec::new("doomed")
+        .stage(
+            Stage::new("gen", |_| {
+                Box::new(|_: &WorkerCtx| Ok(Box::new(Dies) as Box<dyn WorkerLogic>))
+            })
+            .single_rank(),
+        )
+        .edge(Edge::new("res").produced_at("gen", "produce", "out").consumed_by_driver());
+    let drv = FlowDriver::launch_with(
+        spec,
+        &services,
+        PlacementMode::Collocated,
+        rlinf::flow::LaunchOpts {
+            scope: Some("doomed:".into()),
+            shared_window: true, // single stage would otherwise skip locking
+            ..Default::default()
+        },
+    )
+    .unwrap();
+
+    // Run 1: the rank acquires, fails, and exits fail-fast.
+    let mut run = drv.begin().unwrap();
+    run.start().unwrap();
+    let err = format!("{:#}", run.finish().unwrap_err());
+    assert!(err.contains("intentional"), "{err}");
+    assert!(services.monitor.poisoned());
+
+    // Run 2: dispatch to the now-dead rank. The intent is registered in
+    // program order before the control-channel send can fail — this is
+    // the stale entry that used to leak.
+    let mut run = drv.begin().unwrap();
+    run.start().unwrap();
+    std::thread::sleep(Duration::from_millis(20));
+    assert_eq!(
+        services.locks.pending_intents("doomed:"),
+        1,
+        "dead-rank dispatch leaves an unclaimed intent pending"
+    );
+    // While pending, it reads as a senior waiter to everyone.
+    let dev = rlinf::cluster::DeviceSet::range(0, 1);
+    assert!(services.locks.was_contended("next:train/0", &dev));
+
+    let err = format!("{:#}", run.finish().unwrap_err());
+    assert!(err.contains("rank"), "{err}");
+
+    // The regression: finish() dropped the stale intent; later flows run.
+    assert_eq!(services.locks.pending_intents("doomed:"), 0, "stale intents dropped on finish");
+    assert!(!services.locks.was_contended("next:train/0", &dev));
+    assert!(services.locks.try_acquire("next:train/0", &dev));
+}

@@ -1,0 +1,183 @@
+//! Property-based tests (via `util::proptest_mini`) for the three channel
+//! dequeue disciplines: FIFO order under arbitrary put/put_batch/get
+//! interleavings, weighted-load proportions within tolerance, and
+//! balanced dequeue never starving an endpoint.
+
+use rlinf::channel::Channel;
+use rlinf::data::Payload;
+use rlinf::util::proptest_mini::{check, prop_assert, prop_assert_eq};
+
+fn tagged(i: i64) -> Payload {
+    Payload::new().set_meta("i", i)
+}
+
+/// FIFO discipline: any interleaving of `put`, `put_batch`, and `get`
+/// dequeues items in exact arrival order, and the put/got counters
+/// reconcile with a reference model.
+#[test]
+fn fifo_order_preserved_under_random_interleavings() {
+    check("fifo order under put/put_batch/get interleavings", 150, |g| {
+        let ch = Channel::new("prop-fifo");
+        ch.register_producer("p");
+        let mut model: std::collections::VecDeque<i64> = Default::default();
+        let mut next = 0i64;
+        let mut got: Vec<i64> = Vec::new();
+        let ops = g.usize_in(1..60);
+        for _ in 0..ops {
+            match g.usize_in(0..3) {
+                0 => {
+                    ch.put("p", tagged(next)).unwrap();
+                    model.push_back(next);
+                    next += 1;
+                }
+                1 => {
+                    let k = g.usize_in(1..6);
+                    let batch: Vec<(Payload, f64)> = (0..k)
+                        .map(|j| (tagged(next + j as i64), g.f64_in(0.1..9.0)))
+                        .collect();
+                    ch.put_batch("p", batch).unwrap();
+                    for j in 0..k {
+                        model.push_back(next + j as i64);
+                    }
+                    next += k as i64;
+                }
+                _ => {
+                    // Only dequeue when the model says an item is queued,
+                    // so the blocking get cannot hang the property.
+                    if let Some(want) = model.pop_front() {
+                        let item = ch.get("c").expect("model says non-empty");
+                        let seen = item.payload.meta_i64("i").unwrap();
+                        prop_assert_eq(&want, &seen)?;
+                        got.push(seen);
+                    }
+                }
+            }
+        }
+        // Drain the remainder after close; order must continue seamlessly.
+        ch.producer_done("p");
+        while let Some(want) = model.pop_front() {
+            let item = ch.get("c").expect("closed channel still drains");
+            prop_assert_eq(&want, &item.payload.meta_i64("i").unwrap())?;
+        }
+        prop_assert(ch.get("c").is_none(), "closed + drained returns None")?;
+        let (put, taken) = ch.stats();
+        prop_assert_eq(&put, &(next as u64))?;
+        prop_assert_eq(&taken, &(next as u64))
+    });
+}
+
+/// Weighted/balanced discipline: with consumers taking turns in a random
+/// (seeded) order, cumulative per-consumer loads stay within one maximum
+/// item weight of the fair share — the greedy-LPT guarantee the balanced
+/// dequeue is built on — and the total load is conserved exactly.
+#[test]
+fn balanced_dequeue_load_proportions_within_tolerance() {
+    check("balanced dequeue equalizes weighted load", 100, |g| {
+        let ch = Channel::new("prop-balanced");
+        ch.register_producer("p");
+        let k = g.usize_in(2..5); // consumers
+        let per = g.usize_in(3..10); // items each consumer will take
+        let n = k * per;
+        let max_w = 10.0;
+        let mut total = 0.0;
+        for _ in 0..n {
+            let w = g.f64_in(0.5..max_w);
+            total += w;
+            ch.put_weighted("p", Payload::new(), w).unwrap();
+        }
+        ch.producer_done("p");
+
+        let names = ["c0", "c1", "c2", "c3", "c4"];
+        // Strict round-robin turns; each turn takes the heaviest item.
+        for _ in 0..per {
+            for who in names.iter().take(k) {
+                ch.get_balanced(who).expect("n = k * per items queued");
+            }
+        }
+        let loads: Vec<f64> = names.iter().take(k).map(|w| ch.consumer_load(w)).collect();
+        let sum: f64 = loads.iter().sum();
+        prop_assert((sum - total).abs() < 1e-6, &format!("load conserved: {sum} vs {total}"))?;
+        let fair = total / k as f64;
+        for (i, l) in loads.iter().enumerate() {
+            prop_assert(
+                (l - fair).abs() <= max_w + 1e-9,
+                &format!("consumer {i} load {l} deviates from fair {fair} by > max weight"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+/// Balanced dequeue never starves an endpoint: under a random (seeded)
+/// schedule of which consumer pulls next, every consumer that takes turns
+/// receives an item on every turn while the queue is non-empty, and item
+/// conservation holds.
+#[test]
+fn balanced_dequeue_never_starves_an_endpoint() {
+    check("balanced dequeue starvation-freedom", 100, |g| {
+        let ch = Channel::new("prop-starve");
+        ch.register_producer("p");
+        let n = g.usize_in(6..40);
+        for _ in 0..n {
+            ch.put_weighted("p", Payload::new(), g.f64_in(0.1..10.0)).unwrap();
+        }
+        ch.producer_done("p");
+
+        let k = g.usize_in(2..5);
+        let names = ["e0", "e1", "e2", "e3", "e4"];
+        let mut counts = vec![0usize; k];
+        let mut turns = vec![0usize; k];
+        // Random schedule, but guarantee every endpoint appears: seed the
+        // schedule with one round-robin pass, then n - k random turns.
+        let mut schedule: Vec<usize> = (0..k).collect();
+        for _ in k..n {
+            schedule.push(g.usize_in(0..k));
+        }
+        for &who in &schedule {
+            turns[who] += 1;
+            let item = ch.get_balanced(names[who]);
+            prop_assert(item.is_some(), "queue non-empty: every request must be served")?;
+            counts[who] += 1;
+        }
+        for i in 0..k {
+            prop_assert(
+                counts[i] == turns[i],
+                &format!("endpoint {i} starved: {} served of {} turns", counts[i], turns[i]),
+            )?;
+            prop_assert(counts[i] >= 1, "every endpoint got at least one item")?;
+        }
+        prop_assert_eq(&counts.iter().sum::<usize>(), &n)
+    });
+}
+
+/// Weighted discipline (FIFO order + weight bookkeeping): arrival order is
+/// independent of weights, while the consumer-side load accounting tracks
+/// the exact dequeued weight per endpoint.
+#[test]
+fn weighted_dequeue_keeps_fifo_order_and_exact_load_accounting() {
+    check("weighted dequeue: FIFO order, exact loads", 100, |g| {
+        let ch = Channel::new("prop-weighted");
+        ch.register_producer("p");
+        let n = g.usize_in(2..40);
+        let weights: Vec<f64> = (0..n).map(|_| g.f64_in(0.1..10.0)).collect();
+        for (i, w) in weights.iter().enumerate() {
+            ch.put_weighted("p", tagged(i as i64), *w).unwrap();
+        }
+        ch.producer_done("p");
+        // Two consumers alternate; order must stay arrival order.
+        let mut expect_a = 0.0;
+        let mut expect_b = 0.0;
+        for i in 0..n {
+            let who = if i % 2 == 0 { "a" } else { "b" };
+            let item = ch.get(who).unwrap();
+            prop_assert_eq(&(i as i64), &item.payload.meta_i64("i").unwrap())?;
+            if i % 2 == 0 {
+                expect_a += item.weight;
+            } else {
+                expect_b += item.weight;
+            }
+        }
+        prop_assert((ch.consumer_load("a") - expect_a).abs() < 1e-9, "load(a) exact")?;
+        prop_assert((ch.consumer_load("b") - expect_b).abs() < 1e-9, "load(b) exact")
+    });
+}
