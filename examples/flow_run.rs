@@ -1,0 +1,384 @@
+//! `flow_run`: lint and run serialized flow **manifests** — whole RL
+//! workflows declared in TOML, no Rust required.
+//!
+//! ```text
+//! # Lint every shipped manifest (parse + schema + FlowSpec validation):
+//! cargo run --release --example flow_run -- --check configs/*.flow.toml
+//!
+//! # Run one workload end-to-end (needs `make artifacts` for grpo/embodied):
+//! cargo run --release --example flow_run -- configs/grpo.flow.toml
+//!
+//! # Run several flows concurrently on one cluster under a supervisor:
+//! cargo run --release --example flow_run -- configs/multi_flow.flow.toml
+//!
+//! # Override any key, same syntax as the launcher:
+//! cargo run --release --example flow_run -- --set iters=1 configs/grpo.flow.toml
+//! ```
+//!
+//! Dispatch: a file with a `[flow]` section is a single-flow manifest,
+//! run by the workload its `[flow].workload` names (`grpo`, `embodied`,
+//! or `generic` — the generic runner feeds `feed = N` items into every
+//! driver-produced edge, executes declared `[[pump]]` logic, and drains
+//! the sinks). A file with `[[flow]]` tables references other manifests
+//! and runs them concurrently under a `FlowSupervisor`.
+
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+use rlinf::cluster::Cluster;
+use rlinf::config::{loader, RunConfig};
+use rlinf::data::Payload;
+use rlinf::flow::manifest::{EndpointDecl, FlowManifest, LoadedManifest, MultiFlowManifest};
+use rlinf::flow::registry::PumpLogic;
+use rlinf::flow::{FlowDriver, FlowSpec, FlowSupervisor, LaunchOpts, StageRegistry};
+use rlinf::util::cli::Args;
+use rlinf::util::json::Value;
+use rlinf::worker::group::Services;
+use rlinf::workflow::embodied::{run_embodied_with_spec, EmbodiedOpts};
+use rlinf::workflow::reasoning::{run_grpo_with_spec, RunnerOpts};
+
+fn usage() -> &'static str {
+    "usage: flow_run [--check] [--set path=value] <manifest.toml>...\n\
+     \n\
+     --check   lint only: parse, resolve stage kinds against the registry,\n\
+     \u{20}         validate the FlowSpec; report every failing manifest\n\
+     --set     apply a `a.b.c=value` override before interpretation"
+}
+
+fn load_with_overrides(path: &str, sets: Option<&str>) -> Result<LoadedManifest> {
+    let mut tree = loader::load_toml_file(path)?;
+    if let Some(spec) = sets {
+        loader::apply_override(&mut tree, spec).with_context(|| format!("--set {spec}"))?;
+    }
+    match tree.get("flow") {
+        Some(Value::Arr(_)) => {
+            if sets.is_some() {
+                // Referenced sub-manifests are loaded from disk, so a
+                // top-level override would silently not reach them.
+                bail!(
+                    "{path}: --set applies to single-flow manifests only; \
+                     pass the referenced manifest directly or edit it"
+                );
+            }
+            Ok(LoadedManifest::Multi(MultiFlowManifest::from_value(tree, path)?))
+        }
+        _ => Ok(LoadedManifest::Flow(Box::new(FlowManifest::from_value(tree, path)?))),
+    }
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env(&["check"])?;
+    if args.positional.is_empty() {
+        bail!("{}", usage());
+    }
+    let reg = StageRegistry::builtin();
+    if args.has_flag("check") {
+        return check_all(&args.positional, args.get("set"), &reg);
+    }
+    if args.positional.len() != 1 {
+        bail!("run mode takes exactly one manifest\n{}", usage());
+    }
+    match load_with_overrides(&args.positional[0], args.get("set"))? {
+        LoadedManifest::Flow(m) => run_single(*m, &reg),
+        LoadedManifest::Multi(mm) => run_multi(mm, &reg),
+    }
+}
+
+/// Lint every manifest; report all failures before exiting non-zero.
+fn check_all(paths: &[String], sets: Option<&str>, reg: &StageRegistry) -> Result<()> {
+    let mut failures = 0usize;
+    for path in paths {
+        match check_one(path, sets, reg) {
+            Ok(summary) => println!("OK   {path}: {summary}"),
+            Err(e) => {
+                eprintln!("FAIL {path}: {e:#}");
+                failures += 1;
+            }
+        }
+    }
+    if failures > 0 {
+        bail!("{failures} of {} manifest(s) failed lint", paths.len());
+    }
+    println!("all {} manifest(s) lint clean", paths.len());
+    Ok(())
+}
+
+fn check_one(path: &str, sets: Option<&str>, reg: &StageRegistry) -> Result<String> {
+    match load_with_overrides(path, sets)? {
+        LoadedManifest::Flow(m) => {
+            m.lint(reg)?;
+            m.run_config()?;
+            Ok(format!(
+                "flow {:?} [{}]: {} stages, {} edges, {} pumps",
+                m.name,
+                m.workload,
+                m.stages.len(),
+                m.edges.len(),
+                m.pumps.len()
+            ))
+        }
+        LoadedManifest::Multi(mm) => {
+            let cfg = mm.run_config()?;
+            let resolved = mm.resolve()?;
+            let mut total = 0usize;
+            for (m, req) in &resolved {
+                m.lint(reg)?;
+                m.run_config()?;
+                total += req.devices;
+            }
+            let have = cfg.cluster.total_devices();
+            if total > have && !cfg.supervisor.oversubscribe {
+                bail!(
+                    "flows request {total} devices, cluster has {have}, and \
+                     supervisor.oversubscribe is off"
+                );
+            }
+            Ok(format!(
+                "multi-flow: {} flows, {total} devices requested of {have}",
+                resolved.len()
+            ))
+        }
+    }
+}
+
+/// Run one single-flow manifest under its declared workload.
+fn run_single(m: FlowManifest, reg: &StageRegistry) -> Result<()> {
+    let cfg = m.run_config()?;
+    let services = Services::new(Cluster::new(cfg.cluster.clone()));
+    let spec = m.to_spec(reg)?;
+    let summary = run_workload(&m, &cfg, &services, LaunchOpts::default(), spec, reg)?;
+    println!("{summary}");
+    Ok(())
+}
+
+/// Dispatch one flow to its workload runner; returns a summary line.
+fn run_workload(
+    m: &FlowManifest,
+    cfg: &RunConfig,
+    services: &Services,
+    launch: LaunchOpts,
+    spec: FlowSpec,
+    reg: &StageRegistry,
+) -> Result<String> {
+    match m.workload.as_str() {
+        "grpo" => {
+            let report = run_grpo_with_spec(
+                cfg,
+                &RunnerOpts { verbose: true, ..Default::default() },
+                services,
+                launch,
+                spec,
+            )?;
+            Ok(format!(
+                "flow {:?} [{}]: {:.0} tokens/s mean, {} iters | locks: {} grants, {} waits, {} preemptions",
+                m.name,
+                report.mode,
+                report.mean_throughput(),
+                report.iters.len(),
+                report.locks.grants,
+                report.locks.waits,
+                report.locks.preemptions,
+            ))
+        }
+        "embodied" => {
+            let report = run_embodied_with_spec(
+                cfg,
+                &EmbodiedOpts { verbose: true, ..Default::default() },
+                services,
+                launch,
+                spec,
+            )?;
+            Ok(format!(
+                "flow {:?} [{}]: {:.2} batch/s mean, success {:.2}",
+                m.name,
+                report.mode,
+                report.mean_batches_per_sec(),
+                report.final_success_rate(),
+            ))
+        }
+        _ => run_generic(m, cfg, services, launch, spec, reg),
+    }
+}
+
+/// The generic runner: feed declared sources, execute `[[pump]]` logic,
+/// drain driver-consumed sinks, report the flow.
+fn run_generic(
+    m: &FlowManifest,
+    cfg: &RunConfig,
+    services: &Services,
+    launch: LaunchOpts,
+    spec: FlowSpec,
+    reg: &StageRegistry,
+) -> Result<String> {
+    let is_pump_target = |ch: &str| m.pumps.iter().any(|p| p.to == ch);
+    let is_pump_source = |ch: &str| m.pumps.iter().any(|p| p.from == ch);
+
+    let driver = FlowDriver::launch_with(spec, services, cfg.sched.mode, launch)?;
+    driver.onload_pipelined()?;
+    let mut run = driver.begin()?;
+
+    // Start the stages *before* feeding: a bounded (capacity) source edge
+    // must have its consumers alive, or a feed larger than the bound would
+    // park the driver forever.
+    run.start()?;
+
+    // Feed every driver-produced edge its declared synthetic items (pump
+    // targets are fed by their pump instead).
+    let feed_chunk = cfg.sched.feed_batch.max(1);
+    for e in &m.edges {
+        if e.from != EndpointDecl::Driver || is_pump_target(&e.channel) {
+            continue;
+        }
+        let mut chunk: Vec<(Payload, f64)> = Vec::with_capacity(feed_chunk);
+        for i in 0..e.feed {
+            chunk.push((Payload::new().set_meta("i", i as i64), 1.0));
+            if chunk.len() >= feed_chunk {
+                run.send_batch(&e.channel, std::mem::take(&mut chunk))?;
+            }
+        }
+        run.send_batch(&e.channel, chunk)?;
+        run.feed_done(&e.channel)?;
+    }
+
+    // Pumps: poll each source, push items through the declared logic,
+    // forward emissions, flush + close on drain.
+    struct ActivePump {
+        from: String,
+        to: String,
+        logic: Box<dyn PumpLogic>,
+        done: bool,
+    }
+    let mut pumps: Vec<ActivePump> = Vec::with_capacity(m.pumps.len());
+    for p in &m.pumps {
+        pumps.push(ActivePump {
+            from: p.from.clone(),
+            to: p.to.clone(),
+            logic: reg.resolve_pump(&p.logic, &p.options)?,
+            done: false,
+        });
+    }
+    let poll = Duration::from_millis(cfg.sched.poll_ms.max(1));
+    while pumps.iter().any(|p| !p.done) {
+        for p in pumps.iter_mut().filter(|p| !p.done) {
+            match run.recv_timeout(&p.from, poll)? {
+                Some(item) => {
+                    let out = p.logic.push(item)?;
+                    if !out.is_empty() {
+                        run.send_batch(&p.to, out)?;
+                    }
+                }
+                None => {
+                    if run.drained(&p.from)? {
+                        let out = p.logic.flush()?;
+                        if !out.is_empty() {
+                            run.send_batch(&p.to, out)?;
+                        }
+                        run.feed_done(&p.to)?;
+                        p.done = true;
+                    } else if run.poisoned() {
+                        bail!("flow {:?} poisoned while pumping {}", m.name, p.from);
+                    }
+                }
+            }
+        }
+    }
+
+    // Drain the remaining driver-consumed sinks.
+    for e in &m.edges {
+        if e.to != EndpointDecl::Driver || is_pump_source(&e.channel) {
+            continue;
+        }
+        let mut n = 0usize;
+        loop {
+            match run.recv_timeout(&e.channel, poll)? {
+                Some(_) => n += 1,
+                None => {
+                    if run.drained(&e.channel)? {
+                        break;
+                    }
+                    if run.poisoned() {
+                        bail!("flow {:?} poisoned while draining {}", m.name, e.channel);
+                    }
+                }
+            }
+        }
+        println!("sink {}: {} items", e.channel, n);
+    }
+
+    let report = run.finish()?;
+    print!("{}", report.render());
+    Ok(format!("flow {:?} [{}] completed in {:.3}s", m.name, report.mode, report.secs))
+}
+
+/// Run a multi-flow manifest: admit every referenced flow under one
+/// supervisor, run them concurrently, retire as they finish.
+fn run_multi(mm: MultiFlowManifest, reg: &StageRegistry) -> Result<()> {
+    let cfg = mm.run_config()?;
+    let services = Services::new(Cluster::new(cfg.cluster.clone()));
+    let sup = FlowSupervisor::new(&services, cfg.supervisor.clone());
+
+    let mut threads = Vec::new();
+    for (m, req) in mm.resolve()? {
+        let adm = sup.admit(req).with_context(|| format!("admitting flow {:?}", m.name))?;
+        println!(
+            "admitted {:<12} window=({}, {}) exclusive={} priority_base={}",
+            adm.flow, adm.window.0, adm.window.1, adm.exclusive, adm.priority_base
+        );
+        let flow_cfg = m.run_config()?;
+        let spec = m.to_spec(reg)?;
+        let services = services.clone();
+        let opts = adm.opts.clone();
+        let name = m.name.clone();
+        // Generic pumps resolve inside the thread: rebuild a registry there
+        // (built-ins only; multi-flow runs custom kinds via the library API).
+        threads.push((
+            name,
+            std::thread::spawn(move || -> Result<String> {
+                let reg = StageRegistry::builtin();
+                run_workload(&m, &flow_cfg, &services, opts, spec, &reg)
+            }),
+        ));
+    }
+
+    // Drive time-slice fairness while the flows run, and retire each flow
+    // as soon as it finishes — freed windows are re-offered to the flows
+    // still running (elastic resizing), exactly like examples/multi_flow.rs.
+    let tick = cfg.supervisor.time_slice_ms.max(20);
+    let mut slots: Vec<(String, Option<std::thread::JoinHandle<Result<String>>>)> =
+        threads.into_iter().map(|(n, h)| (n, Some(h))).collect();
+    let mut failed = Vec::new();
+    while slots.iter().any(|(_, h)| h.is_some()) {
+        sup.tick();
+        for (name, slot) in slots.iter_mut() {
+            let finished = slot.as_ref().map(|h| h.is_finished()).unwrap_or(false);
+            if !finished {
+                continue;
+            }
+            let h = slot.take().expect("checked is_some above");
+            match h.join().expect("flow thread panicked") {
+                Ok(summary) => println!("{summary}"),
+                Err(e) => {
+                    eprintln!("flow {name:?} failed: {e:#}");
+                    failed.push(name.clone());
+                }
+            }
+            let retire = sup.retire(name)?;
+            if let Some((s, l)) = retire.freed {
+                println!("retired {name:?}: freed window ({s}, {l})");
+            }
+            for offer in &retire.offers {
+                println!(
+                    "  resize offer -> {}: window=({}, {}), granularity hint {:?} \
+                     (relaunch over the wider window at the next iteration boundary)",
+                    offer.flow, offer.window.0, offer.window.1, offer.granularity
+                );
+            }
+        }
+        std::thread::sleep(Duration::from_millis(tick));
+    }
+    println!("cluster devices free after retirement: {}", services.cluster.free_devices());
+    if !failed.is_empty() {
+        bail!("{} flow(s) failed: {}", failed.len(), failed.join(", "));
+    }
+    Ok(())
+}

@@ -11,7 +11,8 @@
 //! dequeue, per-send route resolution). Emits `BENCH_dataplane.json` so
 //! later PRs can track the trajectory:
 //! single-producer msgs/sec, multi-producer msgs/sec, balanced-dequeue
-//! items/sec, batched-put (`put_batch`) items/sec, p2p send msgs/sec, and
+//! items/sec, batched-put (`put_batch`) items/sec, bounded-channel
+//! non-blocking send (`try_put`) items/sec, p2p send msgs/sec, and
 //! broadcast fan-out payloads/sec.
 //!
 //! Set `RLINF_BENCH_SMALL=1` for the CI preset (~10x smaller workloads;
@@ -23,7 +24,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
 use std::time::Instant;
 
-use rlinf::channel::Channel;
+use rlinf::channel::{Channel, TryPut};
 use rlinf::cluster::{Cluster, DeviceSet};
 use rlinf::comm::CommManager;
 use rlinf::config::ClusterConfig;
@@ -124,6 +125,8 @@ const BALANCED_ITEMS: usize = 5_000;
 const BALANCED_CONSUMERS: usize = 4;
 /// The flow driver's feed chunk size (config `sched.feed_batch` default).
 const PUT_BATCH_CHUNK: usize = 32;
+/// Queue bound for the bounded-channel producer comparison.
+const BOUNDED_CAP: usize = 256;
 
 /// CI preset: ~10x smaller workloads, same output shape.
 fn small() -> bool {
@@ -183,6 +186,45 @@ fn spsc_batched_current(items: usize, chunk: usize) -> f64 {
         }
     }
     ch.put_batch("p", buf).unwrap();
+    ch.producer_done("p");
+    h.join().unwrap();
+    items as f64 / t0.elapsed().as_secs_f64()
+}
+
+/// Bounded channel, blocking `put`: the producer parks whenever the queue
+/// is at capacity (condvar round-trip per stall).
+fn spsc_bounded_blocking(items: usize, cap: usize) -> f64 {
+    let ch = Channel::new("bench-bounded-put");
+    ch.set_capacity(cap);
+    ch.register_producer("p");
+    let t0 = Instant::now();
+    let ch2 = ch.clone();
+    let h = thread::spawn(move || while ch2.get("c").is_some() {});
+    for _ in 0..items {
+        ch.put("p", Payload::new()).unwrap();
+    }
+    ch.producer_done("p");
+    h.join().unwrap();
+    items as f64 / t0.elapsed().as_secs_f64()
+}
+
+/// Bounded channel, non-blocking `try_put`: `Full` outcomes yield instead
+/// of parking — the async-send path a stage uses to overlap useful work
+/// with a congested downstream edge.
+fn spsc_bounded_try(items: usize, cap: usize) -> f64 {
+    let ch = Channel::new("bench-bounded-try");
+    ch.set_capacity(cap);
+    ch.register_producer("p");
+    let t0 = Instant::now();
+    let ch2 = ch.clone();
+    let h = thread::spawn(move || while ch2.get("c").is_some() {});
+    let mut sent = 0usize;
+    while sent < items {
+        match ch.try_put("p", Payload::new()).unwrap() {
+            TryPut::Done => sent += 1,
+            TryPut::Full => thread::yield_now(),
+        }
+    }
     ch.producer_done("p");
     h.join().unwrap();
     items as f64 / t0.elapsed().as_secs_f64()
@@ -401,6 +443,11 @@ fn main() -> anyhow::Result<()> {
     // put_batch vs per-item puts on the *current* channel: the lock
     // amortization the driver's edge sender relies on.
     let batched = (spsc_current(spsc_items), spsc_batched_current(spsc_items, PUT_BATCH_CHUNK));
+    // Bounded-channel producer paths: blocking put vs non-blocking try_put.
+    let bounded = (
+        spsc_bounded_blocking(spsc_items, BOUNDED_CAP),
+        spsc_bounded_try(spsc_items, BOUNDED_CAP),
+    );
     let send_small = bench_send(&comm, &c, "c", scaled(20_000));
     let send_sock = bench_send(&comm, &d, "d", scaled(2_000));
 
@@ -445,6 +492,12 @@ fn main() -> anyhow::Result<()> {
             format!("{:.2}x", ratio(batched)),
         ],
         vec![
+            format!("bounded({BOUNDED_CAP}) try_put (vs blocking put)"),
+            fmt::count(bounded.0),
+            fmt::count(bounded.1),
+            format!("{:.2}x", ratio(bounded)),
+        ],
+        vec![
             "broadcast fan-out".into(),
             fmt::count(bcast_seq),
             fmt::count(bcast_fan),
@@ -477,6 +530,9 @@ fn main() -> anyhow::Result<()> {
         // "legacy" here = per-item puts on the current channel; "current"
         // = put_batch in driver-sized chunks.
         section("put_batch", batched.0, batched.1),
+        // "legacy" = blocking put on a bounded channel; "current" =
+        // non-blocking try_put with a yield on Full.
+        section("bounded_try_put", bounded.0, bounded.1),
         section("broadcast_fanout", bcast_seq, bcast_fan),
     ] {
         paths.set(&k, v);
@@ -493,6 +549,7 @@ fn main() -> anyhow::Result<()> {
             .set("mpmc_items_per_producer", mpmc_per)
             .set("balanced_items", balanced_items)
             .set("put_batch_chunk", PUT_BATCH_CHUNK)
+            .set("bounded_cap", BOUNDED_CAP)
             .set("broadcast_fanout", fan.len())
             .set("broadcast_payload_kib", 256usize);
         cfg

@@ -19,4 +19,4 @@ pub mod queue;
 
 pub use device_lock::{DeviceLockMgr, LockCounters};
 pub use port::{BoundPort, Dequeue, PortBindings};
-pub use queue::{Channel, ChannelRegistry, Item, ItemsView};
+pub use queue::{Channel, ChannelRegistry, Item, ItemsView, TryPut};

@@ -17,7 +17,7 @@ use std::time::Duration;
 
 use anyhow::Result;
 
-use super::queue::{Channel, Item};
+use super::queue::{Channel, Item, TryPut};
 use crate::data::Payload;
 
 /// Edge dequeue discipline (§3.5): how consumers pull from the channel.
@@ -125,6 +125,25 @@ impl BoundPort {
     /// whole micro-batch ([`Channel::put_batch`]).
     pub fn send_batch(&self, who: &str, items: Vec<(Payload, f64)>) -> Result<()> {
         self.channel.put_batch(who, items)
+    }
+
+    /// Non-blocking enqueue: [`TryPut::Full`] (nothing sent) when the
+    /// edge's bounded channel is at capacity, instead of blocking the
+    /// producer — the async-send primitive for stages that can overlap
+    /// useful work with a congested downstream edge.
+    pub fn try_send(&self, who: &str, payload: Payload) -> Result<TryPut> {
+        self.channel.try_put(who, payload)
+    }
+
+    /// Non-blocking weighted enqueue; see [`BoundPort::try_send`].
+    pub fn try_send_weighted(&self, who: &str, payload: Payload, weight: f64) -> Result<TryPut> {
+        self.channel.try_put_weighted(who, payload, weight)
+    }
+
+    /// Non-blocking all-or-nothing batched enqueue: on [`TryPut::Full`]
+    /// `items` is left untouched for a later retry.
+    pub fn try_send_batch(&self, who: &str, items: &mut Vec<(Payload, f64)>) -> Result<TryPut> {
+        self.channel.try_put_batch(who, items)
     }
 
     /// Close this endpoint's producer slot; the channel auto-closes once

@@ -55,6 +55,22 @@ fn weight_key(w: f64) -> u64 {
     }
 }
 
+/// Outcome of a non-blocking `try_put*` call.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TryPut {
+    /// Item(s) enqueued.
+    Done,
+    /// The channel is at capacity; nothing was enqueued. Retry later or
+    /// fall back to a blocking put.
+    Full,
+}
+
+impl TryPut {
+    pub fn is_full(self) -> bool {
+        self == TryPut::Full
+    }
+}
+
 /// Queue core: the only state touched on every put/get.
 #[derive(Default)]
 struct Core {
@@ -72,6 +88,20 @@ struct Core {
     /// Consumers parked in `get_batch` (they may need >1 item, so puts
     /// must broadcast while any are waiting).
     batch_waiters: usize,
+    /// Optional queue bound (`None` = unbounded, the default). When set,
+    /// blocking puts wait for space and `try_put*` report [`TryPut::Full`]
+    /// instead of enqueueing past the bound.
+    capacity: Option<usize>,
+}
+
+impl Core {
+    /// Free slots under the capacity bound (`usize::MAX` when unbounded).
+    fn space(&self) -> usize {
+        match self.capacity {
+            Some(cap) => cap.saturating_sub(self.items.len()),
+            None => usize::MAX,
+        }
+    }
 }
 
 impl Core {
@@ -118,6 +148,8 @@ struct Inner {
     cv_items: Condvar,
     /// Waiters for the queue to drain (`wait_drained` barrier).
     cv_empty: Condvar,
+    /// Producers blocked on a capacity bound (bounded channels only).
+    cv_space: Condvar,
     /// Striped per-endpoint stats, off the queue's critical path.
     stats: [Mutex<HashMap<String, EndpointStat>>; STAT_SHARDS],
 }
@@ -165,6 +197,7 @@ impl Channel {
                 core: Mutex::new(Core::default()),
                 cv_items: Condvar::new(),
                 cv_empty: Condvar::new(),
+                cv_space: Condvar::new(),
                 stats: std::array::from_fn(|_| Mutex::new(HashMap::new())),
             }),
         }
@@ -201,6 +234,8 @@ impl Channel {
         drop(c);
         if closed {
             self.inner.cv_items.notify_all();
+            // Bounded producers parked on capacity must fail out, not hang.
+            self.inner.cv_space.notify_all();
         }
     }
 
@@ -208,6 +243,24 @@ impl Channel {
     pub fn close(&self) {
         self.inner.core.lock().unwrap().closed = true;
         self.inner.cv_items.notify_all();
+        self.inner.cv_space.notify_all();
+    }
+
+    /// Bound the queue to `cap` items (0 clears the bound). With a bound
+    /// set, blocking puts wait for space and `try_put*` report
+    /// [`TryPut::Full`]. The flow driver applies an edge's declared
+    /// `capacity` here when it creates the run's channels.
+    pub fn set_capacity(&self, cap: usize) {
+        let mut c = self.inner.core.lock().unwrap();
+        c.capacity = if cap == 0 { None } else { Some(cap) };
+        drop(c);
+        // A raised/cleared bound may unblock parked producers.
+        self.inner.cv_space.notify_all();
+    }
+
+    /// The configured queue bound (`None` = unbounded).
+    pub fn capacity(&self) -> Option<usize> {
+        self.inner.core.lock().unwrap().capacity
     }
 
     /// Enqueue with unit weight.
@@ -217,6 +270,10 @@ impl Channel {
 
     pub fn put_weighted(&self, who: &str, payload: Payload, weight: f64) -> Result<()> {
         let mut c = self.inner.core.lock().unwrap();
+        // Bounded channel: wait for a free slot (close wakes us to fail).
+        while c.space() == 0 && !c.closed {
+            c = self.inner.cv_space.wait(c).unwrap();
+        }
         if c.closed {
             bail!("channel {}: put after close", self.inner.name);
         }
@@ -241,6 +298,66 @@ impl Channel {
         Ok(())
     }
 
+    /// Non-blocking enqueue with unit weight: [`TryPut::Full`] (nothing
+    /// enqueued) when a bounded channel is at capacity, instead of
+    /// blocking. Errors only on a closed channel.
+    pub fn try_put(&self, who: &str, payload: Payload) -> Result<TryPut> {
+        self.try_put_weighted(who, payload, 1.0)
+    }
+
+    /// Non-blocking [`Channel::put_weighted`]; see [`Channel::try_put`].
+    pub fn try_put_weighted(&self, who: &str, payload: Payload, weight: f64) -> Result<TryPut> {
+        let mut c = self.inner.core.lock().unwrap();
+        if c.closed {
+            bail!("channel {}: put after close", self.inner.name);
+        }
+        if c.space() == 0 {
+            return Ok(TryPut::Full);
+        }
+        let seq = c.next_seq;
+        c.next_seq += 1;
+        c.by_weight.insert((weight_key(weight), seq));
+        c.items.insert(seq, Item { payload, weight });
+        c.total_put += 1;
+        if c.batch_waiters > 0 {
+            self.inner.cv_items.notify_all();
+        } else {
+            self.inner.cv_items.notify_one();
+        }
+        drop(c);
+        self.stat_mut(who, |s| s.producer = true);
+        Ok(TryPut::Done)
+    }
+
+    /// Non-blocking batched enqueue, all-or-nothing: when the bounded
+    /// channel lacks space for the **whole** batch, nothing is enqueued,
+    /// `items` is left untouched, and [`TryPut::Full`] is returned. On
+    /// [`TryPut::Done`] the vector is drained.
+    pub fn try_put_batch(&self, who: &str, items: &mut Vec<(Payload, f64)>) -> Result<TryPut> {
+        if items.is_empty() {
+            return Ok(TryPut::Done);
+        }
+        let mut c = self.inner.core.lock().unwrap();
+        if c.closed {
+            bail!("channel {}: put after close", self.inner.name);
+        }
+        if c.space() < items.len() {
+            return Ok(TryPut::Full);
+        }
+        let n = items.len() as u64;
+        for (payload, weight) in items.drain(..) {
+            let seq = c.next_seq;
+            c.next_seq += 1;
+            c.by_weight.insert((weight_key(weight), seq));
+            c.items.insert(seq, Item { payload, weight });
+        }
+        c.total_put += n;
+        self.inner.cv_items.notify_all();
+        drop(c);
+        self.stat_mut(who, |s| s.producer = true);
+        Ok(TryPut::Done)
+    }
+
     /// Batched enqueue: one queue-lock acquisition and one wakeup for the
     /// whole micro-batch. This is the flow driver's edge-sender primitive —
     /// feeding a granularity-sized chunk costs one critical section instead
@@ -251,6 +368,19 @@ impl Channel {
         }
         let n = items.len() as u64;
         let mut c = self.inner.core.lock().unwrap();
+        if let Some(cap) = c.capacity {
+            if items.len() > cap {
+                bail!(
+                    "channel {}: batch of {} exceeds capacity {cap}",
+                    self.inner.name,
+                    items.len()
+                );
+            }
+            // Wait until the whole batch fits (close wakes us to fail).
+            while c.space() < items.len() && !c.closed {
+                c = self.inner.cv_space.wait(c).unwrap();
+            }
+        }
         if c.closed {
             bail!("channel {}: put after close", self.inner.name);
         }
@@ -271,10 +401,15 @@ impl Channel {
         Ok(())
     }
 
-    /// After a successful dequeue: drain-barrier wakeup + consumer stats.
-    fn on_taken(&self, who: &str, weight: f64, became_empty: bool) {
+    /// After a successful dequeue: drain-barrier + bounded-producer wakeups
+    /// plus consumer stats. `bounded` is read while the core lock is held.
+    fn on_taken(&self, who: &str, weight: f64, became_empty: bool, bounded: bool) {
         if became_empty {
             self.inner.cv_empty.notify_all();
+        }
+        if bounded {
+            // Freed at least one slot: wake producers parked on capacity.
+            self.inner.cv_space.notify_all();
         }
         self.stat_mut(who, |s| {
             s.consumer = true;
@@ -288,8 +423,9 @@ impl Channel {
         loop {
             if let Some(item) = c.take_first() {
                 let became_empty = c.items.is_empty();
+                let bounded = c.capacity.is_some();
                 drop(c);
-                self.on_taken(who, item.weight, became_empty);
+                self.on_taken(who, item.weight, became_empty, bounded);
                 return Some(item);
             }
             if c.closed {
@@ -315,8 +451,9 @@ impl Channel {
         loop {
             if let Some(item) = c.take_first() {
                 let became_empty = c.items.is_empty();
+                let bounded = c.capacity.is_some();
                 drop(c);
-                self.on_taken(who, item.weight, became_empty);
+                self.on_taken(who, item.weight, became_empty, bounded);
                 return Some(item);
             }
             if c.closed {
@@ -345,8 +482,9 @@ impl Channel {
                 let idx = pick(&ItemsView { core: &*c }).min(c.items.len() - 1);
                 let item = c.take_at(idx).expect("idx clamped to len");
                 let became_empty = c.items.is_empty();
+                let bounded = c.capacity.is_some();
                 drop(c);
-                self.on_taken(who, item.weight, became_empty);
+                self.on_taken(who, item.weight, became_empty, bounded);
                 return Some(item);
             }
             if c.closed {
@@ -366,8 +504,9 @@ impl Channel {
         loop {
             if let Some(item) = c.take_heaviest() {
                 let became_empty = c.items.is_empty();
+                let bounded = c.capacity.is_some();
                 drop(c);
-                self.on_taken(who, item.weight, became_empty);
+                self.on_taken(who, item.weight, became_empty, bounded);
                 return Some(item);
             }
             if c.closed {
@@ -395,8 +534,9 @@ impl Channel {
                     out.push(item);
                 }
                 let became_empty = c.items.is_empty();
+                let bounded = c.capacity.is_some();
                 drop(c);
-                self.on_taken(who, w, became_empty);
+                self.on_taken(who, w, became_empty, bounded);
                 return out;
             }
             if c.closed {
@@ -761,6 +901,93 @@ mod tests {
         ch.register_producer("p");
         ch.put("p", Payload::new()).unwrap();
         assert!(!ch.wait_drained(Duration::from_millis(20)));
+    }
+
+    #[test]
+    fn try_put_reports_full_without_enqueueing() {
+        let ch = Channel::new("t");
+        ch.set_capacity(2);
+        ch.register_producer("p");
+        assert_eq!(ch.try_put("p", Payload::new()).unwrap(), TryPut::Done);
+        assert_eq!(ch.try_put_weighted("p", Payload::new(), 3.0).unwrap(), TryPut::Done);
+        assert_eq!(ch.try_put("p", Payload::new()).unwrap(), TryPut::Full);
+        assert!(ch.try_put("p", Payload::new()).unwrap().is_full());
+        let (put, _) = ch.stats();
+        assert_eq!(put, 2, "a Full outcome must not count as a put");
+        assert_eq!(ch.len(), 2);
+        // Draining one slot makes the next try_put succeed.
+        ch.get("c").unwrap();
+        assert_eq!(ch.try_put("p", Payload::new()).unwrap(), TryPut::Done);
+        ch.close();
+        assert!(ch.try_put("p", Payload::new()).is_err(), "closed errors, not Full");
+    }
+
+    #[test]
+    fn try_put_batch_is_all_or_nothing() {
+        let ch = Channel::new("t");
+        ch.set_capacity(3);
+        ch.register_producer("p");
+        let mut batch: Vec<(Payload, f64)> =
+            (0..2).map(|i| (Payload::new().set_meta("i", i as i64), 1.0)).collect();
+        assert_eq!(ch.try_put_batch("p", &mut batch).unwrap(), TryPut::Done);
+        assert!(batch.is_empty(), "consumed on Done");
+        let mut batch: Vec<(Payload, f64)> = (0..2).map(|_| (Payload::new(), 1.0)).collect();
+        assert_eq!(ch.try_put_batch("p", &mut batch).unwrap(), TryPut::Full);
+        assert_eq!(batch.len(), 2, "untouched on Full");
+        assert_eq!(ch.len(), 2);
+        // An unbounded channel never reports Full.
+        ch.set_capacity(0);
+        assert_eq!(ch.try_put_batch("p", &mut batch).unwrap(), TryPut::Done);
+        assert_eq!(ch.len(), 4);
+    }
+
+    #[test]
+    fn bounded_put_blocks_until_space() {
+        let ch = Channel::new("t");
+        ch.set_capacity(1);
+        ch.register_producer("p");
+        ch.put("p", Payload::new().set_meta("i", 0i64)).unwrap();
+        let ch2 = ch.clone();
+        let h = thread::spawn(move || ch2.put("p", Payload::new().set_meta("i", 1i64)));
+        thread::sleep(Duration::from_millis(20));
+        assert_eq!(ch.len(), 1, "second put parked on the bound");
+        assert_eq!(ch.get("c").unwrap().payload.meta_i64("i"), Some(0));
+        h.join().unwrap().unwrap();
+        assert_eq!(ch.get("c").unwrap().payload.meta_i64("i"), Some(1));
+    }
+
+    #[test]
+    fn bounded_put_fails_out_on_close_instead_of_hanging() {
+        let ch = Channel::new("t");
+        ch.set_capacity(1);
+        ch.register_producer("p");
+        ch.put("p", Payload::new()).unwrap();
+        let ch2 = ch.clone();
+        let h = thread::spawn(move || ch2.put("p", Payload::new()));
+        thread::sleep(Duration::from_millis(20));
+        ch.close();
+        assert!(h.join().unwrap().is_err(), "parked producer observes the close");
+    }
+
+    #[test]
+    fn bounded_put_batch_waits_for_whole_batch_space() {
+        let ch = Channel::new("t");
+        ch.set_capacity(4);
+        ch.register_producer("p");
+        ch.put_batch("p", (0..3).map(|_| (Payload::new(), 1.0)).collect()).unwrap();
+        // A 5-item batch can never fit a 4-slot channel: error, not hang.
+        assert!(ch.put_batch("p", (0..5).map(|_| (Payload::new(), 1.0)).collect()).is_err());
+        let ch2 = ch.clone();
+        let h = thread::spawn(move || {
+            ch2.put_batch("p", (0..3).map(|_| (Payload::new(), 1.0)).collect())
+        });
+        thread::sleep(Duration::from_millis(20));
+        assert_eq!(ch.len(), 3, "batch parked until 3 slots free up");
+        for _ in 0..2 {
+            ch.get("c").unwrap();
+        }
+        h.join().unwrap().unwrap();
+        assert_eq!(ch.len(), 4);
     }
 
     #[test]

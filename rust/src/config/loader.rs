@@ -1,37 +1,84 @@
 //! TOML-subset configuration loader.
 //!
-//! Supports the subset real launcher configs use: `[section]` and
-//! `[nested.section]` headers, `key = value` pairs with strings, integers,
-//! floats, booleans, and flat arrays, plus `#` comments. Parsed into the
-//! same [`Value`] tree as JSON so the typed config layer has one input
-//! format, and CLI `--set a.b.c=v` overrides can be applied uniformly.
+//! Supports the subset real launcher configs and flow manifests use:
+//! `[section]` / `[nested.section]` headers, `[[table]]` array-of-tables
+//! headers (each appends a fresh table — `[[stage]]` blocks in flow
+//! manifests), `key = value` pairs with strings, integers, floats,
+//! booleans, and flat arrays, plus `#` comments. Parsed into the same
+//! [`Value`] tree as JSON so the typed config layer has one input format,
+//! and CLI `--set a.b.c=v` overrides can be applied uniformly.
+//!
+//! Every parse error carries its **section/key context** (for example
+//! ``line 7 ([rollout].batch): cannot parse value "x"``) so a failing
+//! manifest lint points at the exact key, not just a line number.
 
 use anyhow::{bail, Context, Result};
 
 use crate::util::json::Value;
 
-/// Parse TOML-subset text into a [`Value::Obj`] tree.
+/// Where `key = value` lines currently land: a plain `[section]`, or the
+/// latest element of a `[[table]]` array.
+enum Target {
+    Section(Vec<String>),
+    ArrayElem(Vec<String>),
+}
+
+impl Target {
+    /// Human-readable context for error messages: `[a.b]` / `[[stage]]`,
+    /// or "top level" before any header.
+    fn describe(&self) -> String {
+        match self {
+            Target::Section(p) if p.is_empty() => "top level".to_string(),
+            Target::Section(p) => format!("[{}]", p.join(".")),
+            Target::ArrayElem(p) => format!("[[{}]]", p.join(".")),
+        }
+    }
+}
+
+/// Parse TOML-subset text into a [`Value::Obj`] tree. `[[table]]` headers
+/// produce `Value::Arr` entries whose elements are the individual tables.
 pub fn parse_toml(text: &str) -> Result<Value> {
     let mut root = Value::obj();
-    let mut section: Vec<String> = Vec::new();
+    let mut target = Target::Section(Vec::new());
     for (lineno, raw) in text.lines().enumerate() {
         let line = strip_comment(raw).trim();
         if line.is_empty() {
             continue;
         }
-        if let Some(h) = line.strip_prefix('[') {
-            let h = h.strip_suffix(']').with_context(|| format!("line {}: bad section", lineno + 1))?;
-            section = h.split('.').map(|s| s.trim().to_string()).collect();
-            ensure_path(&mut root, &section);
+        let ctx = target.describe();
+        if let Some(h) = line.strip_prefix("[[") {
+            let h = h
+                .strip_suffix("]]")
+                .with_context(|| format!("line {}: bad array-of-tables header", lineno + 1))?;
+            let path = split_path(h, lineno)?;
+            push_table(&mut root, &path, lineno)?;
+            target = Target::ArrayElem(path);
+        } else if let Some(h) = line.strip_prefix('[') {
+            let h = h
+                .strip_suffix(']')
+                .with_context(|| format!("line {}: bad section header", lineno + 1))?;
+            let path = split_path(h, lineno)?;
+            ensure_path(&mut root, &path, lineno)?;
+            target = Target::Section(path);
         } else if let Some((k, v)) = line.split_once('=') {
             let key = k.trim();
-            let val = parse_value(v.trim()).with_context(|| format!("line {}: bad value", lineno + 1))?;
-            let obj = navigate(&mut root, &section);
+            if key.is_empty() {
+                bail!("line {} ({ctx}): empty key before `=`", lineno + 1);
+            }
+            let val = parse_value(v.trim())
+                .with_context(|| format!("line {} ({ctx}.{key}): bad value", lineno + 1))?;
+            let obj = match &target {
+                Target::Section(p) => navigate(&mut root, p, lineno)?,
+                Target::ArrayElem(p) => last_table(&mut root, p, lineno)?,
+            };
             if let Value::Obj(m) = obj {
                 m.insert(key.to_string(), val);
             }
         } else {
-            bail!("line {}: expected `key = value` or `[section]`", lineno + 1);
+            bail!(
+                "line {} ({ctx}): expected `key = value`, `[section]`, or `[[table]]`",
+                lineno + 1
+            );
         }
     }
     Ok(root)
@@ -46,16 +93,88 @@ pub fn load_toml_file(path: &str) -> Result<Value> {
 pub fn apply_override(root: &mut Value, spec: &str) -> Result<()> {
     let (path, raw) = spec.split_once('=').context("override must be path=value")?;
     let parts: Vec<String> = path.split('.').map(|s| s.trim().to_string()).collect();
-    if parts.is_empty() {
-        bail!("empty override path");
+    if parts.iter().any(|p| p.is_empty()) {
+        bail!("override path {path:?} has an empty segment");
     }
-    let val = parse_value(raw.trim())?;
+    let val = parse_value(raw.trim()).with_context(|| format!("override {path}: bad value"))?;
     let (last, dirs) = parts.split_last().unwrap();
-    ensure_path(root, dirs);
-    if let Value::Obj(m) = navigate(root, dirs) {
+    ensure_path(root, dirs, 0).with_context(|| format!("override path {path:?}"))?;
+    if let Value::Obj(m) = navigate(root, dirs, 0).with_context(|| format!("override path {path:?}"))? {
         m.insert(last.clone(), val);
     }
     Ok(())
+}
+
+fn split_path(h: &str, lineno: usize) -> Result<Vec<String>> {
+    let path: Vec<String> = h.split('.').map(|s| s.trim().to_string()).collect();
+    if path.iter().any(|p| p.is_empty()) {
+        bail!("line {}: empty segment in section name {h:?}", lineno + 1);
+    }
+    Ok(path)
+}
+
+/// Ensure `path` exists as nested objects; errors (with the offending
+/// segment named) when a segment is already bound to a non-object value.
+fn ensure_path(root: &mut Value, path: &[String], lineno: usize) -> Result<()> {
+    let mut cur = root;
+    for p in path {
+        match cur {
+            Value::Obj(m) => cur = m.entry(p.clone()).or_insert_with(Value::obj),
+            _ => bail!(
+                "line {}: section path segment {p:?} is already a non-table value",
+                lineno + 1
+            ),
+        }
+    }
+    Ok(())
+}
+
+fn navigate<'a>(root: &'a mut Value, path: &[String], lineno: usize) -> Result<&'a mut Value> {
+    let mut cur = root;
+    for p in path {
+        cur = match cur {
+            Value::Obj(m) => m.get_mut(p).with_context(|| {
+                format!("line {}: section path segment {p:?} vanished", lineno + 1)
+            })?,
+            _ => bail!(
+                "line {}: section path segment {p:?} is not a table",
+                lineno + 1
+            ),
+        };
+    }
+    Ok(cur)
+}
+
+/// Append a fresh table to the array at `path` (creating it on first use);
+/// errors when the name is already bound to a non-array value.
+fn push_table(root: &mut Value, path: &[String], lineno: usize) -> Result<()> {
+    let (last, dirs) = path.split_last().expect("split_path rejects empty paths");
+    ensure_path(root, dirs, lineno)?;
+    let parent = navigate(root, dirs, lineno)?;
+    let Value::Obj(m) = parent else {
+        bail!("line {}: [[{}]] parent is not a table", lineno + 1, path.join("."));
+    };
+    match m.entry(last.clone()).or_insert_with(|| Value::Arr(Vec::new())) {
+        Value::Arr(items) => {
+            items.push(Value::obj());
+            Ok(())
+        }
+        _ => bail!(
+            "line {}: [[{}]] conflicts with an existing non-array value",
+            lineno + 1,
+            path.join(".")
+        ),
+    }
+}
+
+/// The latest element of the `[[table]]` array at `path`.
+fn last_table<'a>(root: &'a mut Value, path: &[String], lineno: usize) -> Result<&'a mut Value> {
+    match navigate(root, path, lineno)? {
+        Value::Arr(items) => items.last_mut().with_context(|| {
+            format!("line {}: [[{}]] has no open table", lineno + 1, path.join("."))
+        }),
+        _ => bail!("line {}: {:?} is not an array of tables", lineno + 1, path.join(".")),
+    }
 }
 
 fn strip_comment(line: &str) -> &str {
@@ -68,28 +187,6 @@ fn strip_comment(line: &str) -> &str {
         }
     }
     line
-}
-
-fn ensure_path(root: &mut Value, path: &[String]) {
-    let mut cur = root;
-    for p in path {
-        if let Value::Obj(m) = cur {
-            cur = m.entry(p.clone()).or_insert_with(Value::obj);
-        } else {
-            return;
-        }
-    }
-}
-
-fn navigate<'a>(root: &'a mut Value, path: &[String]) -> &'a mut Value {
-    let mut cur = root;
-    for p in path {
-        cur = match cur {
-            Value::Obj(m) => m.get_mut(p).expect("ensure_path called first"),
-            _ => unreachable!("path through non-object"),
-        };
-    }
-    cur
 }
 
 fn parse_value(s: &str) -> Result<Value> {
@@ -169,8 +266,65 @@ mode = auto
     }
 
     #[test]
+    fn override_through_scalar_errors_instead_of_panicking() {
+        let mut v = parse_toml("title = \"x\"").unwrap();
+        let err = apply_override(&mut v, "title.sub=1").unwrap_err().to_string();
+        assert!(err.contains("title"), "{err}");
+    }
+
+    #[test]
     fn rejects_bad_lines() {
         assert!(parse_toml("just words").is_err());
         assert!(parse_toml("[unclosed").is_err());
+        assert!(parse_toml("[[unclosed]").is_err());
+        assert!(parse_toml("= 3").is_err());
+    }
+
+    #[test]
+    fn array_of_tables() {
+        let v = parse_toml(
+            r#"
+[flow]
+name = "demo"
+[[stage]]
+name = "a"
+kind = "relay"
+[[stage]]
+name = "b"
+weight = 2.0
+[[edge]]
+channel = "x"
+"#,
+        )
+        .unwrap();
+        let stages = v.get_path("stage").unwrap().as_arr().unwrap();
+        assert_eq!(stages.len(), 2);
+        assert_eq!(stages[0].get_path("kind").unwrap().as_str(), Some("relay"));
+        assert_eq!(stages[1].get_path("weight").unwrap().as_f64(), Some(2.0));
+        assert_eq!(v.get_path("edge").unwrap().as_arr().unwrap().len(), 1);
+        assert_eq!(v.get_path("flow.name").unwrap().as_str(), Some("demo"));
+    }
+
+    #[test]
+    fn array_table_conflicts_rejected() {
+        // A scalar already bound to the name cannot become an array.
+        assert!(parse_toml("stage = 3\n[[stage]]\nx = 1").is_err());
+        // A section cannot also be used as an array of tables.
+        assert!(parse_toml("[stage]\nx = 1\n[[stage]]\ny = 2").is_err());
+    }
+
+    #[test]
+    fn errors_carry_section_and_key_context() {
+        let err = parse_toml("[rollout]\nbatch = ???").unwrap_err();
+        let chain = format!("{err:#}");
+        assert!(chain.contains("[rollout].batch"), "{chain}");
+        assert!(chain.contains("line 2"), "{chain}");
+
+        let err = parse_toml("[[stage]]\nkind = !!").unwrap_err();
+        let chain = format!("{err:#}");
+        assert!(chain.contains("[[stage]].kind"), "{chain}");
+
+        let err = parse_toml("[a]\nwat").unwrap_err();
+        assert!(format!("{err:#}").contains("[a]"), "{err:#}");
     }
 }

@@ -496,3 +496,70 @@ impl WorkerLogic for PolicyWorker {
 pub fn value_len(v: &Value) -> usize {
     v.as_arr().map(|a| a.len()).unwrap_or(0)
 }
+
+/// Register the embodied stage kinds (`"sim"` and `"policy"`) with a flow
+/// `StageRegistry` — the cyclic generator ⇄ simulator pair.
+pub fn register(reg: &mut crate::flow::StageRegistry) -> Result<()> {
+    use crate::flow::registry::OptSpec;
+    reg.register_stage(
+        "sim",
+        "vectorized environment stage: serves observations on port \"obs\", consumes \
+         actions on port \"act\" (cyclic with \"policy\")",
+        vec![
+            OptSpec::int("num_envs", 256, "parallel environments"),
+            OptSpec::int("horizon", 80, "steps per rollout"),
+            OptSpec::str("env_kind", "maniskill", "\"maniskill\" (GPU-profile) or \"libero\" (CPU-bound)"),
+            OptSpec::str("ood", "none", "OOD mode: none / vision / semantic / position"),
+            OptSpec::int("seed", 0, "environment seed"),
+            OptSpec::boolean("reinit_per_rollout", false, "baseline: re-init envs every rollout"),
+        ],
+        |o| {
+            let cfg = SimCfg {
+                num_envs: o.usize("num_envs")?,
+                horizon: u16::try_from(o.i64("horizon")?)
+                    .map_err(|_| anyhow!("horizon must fit u16"))?,
+                kind: EnvKind::parse(&o.str("env_kind")?),
+                ood: OodMode::parse(&o.str("ood")?),
+                seed: o.u64("seed")?,
+                reinit_per_rollout: o.flag("reinit_per_rollout")?,
+            };
+            Ok(Box::new(move |_rank: usize| -> crate::worker::LogicFactory {
+                let c = cfg.clone();
+                Box::new(move |_ctx: &WorkerCtx| {
+                    Ok(Box::new(SimWorker::new(c)) as Box<dyn WorkerLogic>)
+                })
+            }))
+        },
+    )?;
+    reg.register_stage(
+        "policy",
+        "actor-critic policy stage: consumes observations on port \"obs\", produces \
+         actions on port \"act\", trains on the accumulated trajectory",
+        vec![
+            OptSpec::str("artifacts_dir", "artifacts", "artifact bundle directory"),
+            OptSpec::str("model", "pickplace", "model name in the artifact manifest"),
+            OptSpec::float("gamma", 0.99, "discount factor"),
+            OptSpec::float("gae_lambda", 0.95, "GAE lambda"),
+            OptSpec::float("lr", 3e-4, "learning rate"),
+            OptSpec::int("seed", 0, "policy init seed"),
+            OptSpec::boolean("double_forward", false, "baseline: separate act/log-prob passes"),
+        ],
+        |o| {
+            let cfg = PolicyCfg {
+                artifacts_dir: o.str("artifacts_dir")?,
+                model: o.str("model")?,
+                gamma: o.f32("gamma")?,
+                gae_lambda: o.f32("gae_lambda")?,
+                lr: o.f32("lr")?,
+                seed: o.u64("seed")?,
+                double_forward: o.flag("double_forward")?,
+            };
+            Ok(Box::new(move |_rank: usize| -> crate::worker::LogicFactory {
+                let c = cfg.clone();
+                Box::new(move |_ctx: &WorkerCtx| {
+                    Ok(Box::new(PolicyWorker::new(c)) as Box<dyn WorkerLogic>)
+                })
+            }))
+        },
+    )
+}

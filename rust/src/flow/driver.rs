@@ -57,6 +57,14 @@ pub struct LaunchOpts {
     /// placement mode — required when the window is time-shared with
     /// another flow (cross-flow context switching).
     pub shared_window: bool,
+    /// Per-stage granularity **hints** (stage name → micro-batch size;
+    /// the key `"*"` applies to every stage without its own entry),
+    /// typically lifted from an Algorithm-1 [`crate::sched::Plan`] or a
+    /// supervisor resize offer. A hint that disagrees with an edge's
+    /// declared granularity is snapped to the nearest declared option
+    /// ([`crate::flow::Edge::granularity_options`]) and the adjustment is
+    /// recorded on every [`FlowReport::rechunks`].
+    pub rechunk: HashMap<String, usize>,
 }
 
 /// Resolved placement directive for one stage.
@@ -77,9 +85,42 @@ enum Endpoint {
 struct ResolvedEdge {
     channel: String,
     discipline: Dequeue,
+    /// Effective granularity (declared value, possibly re-chunked by a
+    /// snapped [`LaunchOpts::rechunk`] hint).
     granularity: usize,
+    capacity: Option<usize>,
     producer: Endpoint,
     consumer: Endpoint,
+}
+
+/// One spec-level re-chunking adjustment: a scheduler hint disagreed with
+/// an edge's declared granularity and was snapped to the nearest declared
+/// option (§3.3 elastic pipelining, applied at the spec level).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Rechunk {
+    /// Consumer stage whose hint triggered the adjustment.
+    pub stage: String,
+    /// Logical channel (edge) the adjustment applies to.
+    pub channel: String,
+    /// Granularity the spec declared.
+    pub declared: usize,
+    /// Granularity the plan/offer suggested.
+    pub hint: usize,
+    /// Granularity actually applied (nearest declared option; equals
+    /// `declared` when the hint was rejected outright).
+    pub applied: usize,
+}
+
+/// Snap `hint` to the nearest of `options ∪ {declared}` (ties toward the
+/// smaller size — under-chunking only costs pipelining, over-chunking can
+/// exceed an artifact's largest batch variant).
+fn snap_granularity(hint: usize, declared: usize, options: &[usize]) -> usize {
+    options
+        .iter()
+        .copied()
+        .chain([declared])
+        .min_by_key(|&o| (o.abs_diff(hint), o))
+        .unwrap_or(declared)
 }
 
 struct StageMeta {
@@ -99,6 +140,8 @@ pub struct FlowDriver {
     services: Services,
     mode: &'static str,
     info: FlowGraphInfo,
+    /// Re-chunking adjustments applied at launch (hint vs declared).
+    rechunks: Vec<Rechunk>,
     run_seq: AtomicU64,
 }
 
@@ -176,17 +219,41 @@ impl FlowDriver {
                 _ => Endpoint::Driver,
             }
         };
-        let edges = spec
-            .edges
-            .iter()
-            .map(|e| ResolvedEdge {
+        // Apply spec-level re-chunking hints: a consumer-stage hint that
+        // disagrees with the declared edge granularity snaps to the nearest
+        // declared option; every adjustment is recorded for the report.
+        let mut rechunks = Vec::new();
+        let mut edges = Vec::with_capacity(spec.edges.len());
+        for e in &spec.edges {
+            let mut granularity = e.granularity;
+            if let Some(EndpointSpec::Stage { stage, .. }) = &e.consumer {
+                let hint =
+                    opts.rechunk.get(stage.as_str()).or_else(|| opts.rechunk.get("*")).copied();
+                if let Some(hint) = hint {
+                    let hint = hint.max(1);
+                    if hint != e.granularity {
+                        let applied =
+                            snap_granularity(hint, e.granularity, &e.granularity_options);
+                        rechunks.push(Rechunk {
+                            stage: stage.clone(),
+                            channel: e.channel.clone(),
+                            declared: e.granularity,
+                            hint,
+                            applied,
+                        });
+                        granularity = applied;
+                    }
+                }
+            }
+            edges.push(ResolvedEdge {
                 channel: e.channel.clone(),
                 discipline: e.discipline,
-                granularity: e.granularity,
+                granularity,
+                capacity: e.capacity,
                 producer: resolve_ep(&e.producer),
                 consumer: resolve_ep(&e.consumer),
-            })
-            .collect();
+            });
+        }
         let call_args = spec
             .call_args
             .iter()
@@ -213,8 +280,15 @@ impl FlowDriver {
             services: services.clone(),
             mode: mode_name,
             info,
+            rechunks,
             run_seq: AtomicU64::new(0),
         })
+    }
+
+    /// Re-chunking adjustments applied at launch: hints from
+    /// [`LaunchOpts::rechunk`] snapped to each edge's declared options.
+    pub fn rechunks(&self) -> &[Rechunk] {
+        &self.rechunks
     }
 
     /// Name scope of this flow ("" when launched single-flow).
@@ -312,6 +386,11 @@ impl FlowDriver {
             // registry.
             let physical = format!("{}{}@{seq}", self.scope, e.channel);
             let ch = self.services.channels.create(&physical);
+            if let Some(cap) = e.capacity {
+                // Declared edge bound: producers block (or see
+                // `TryPut::Full` from the try_send variants) at `cap`.
+                ch.set_capacity(cap);
+            }
             let port = BoundPort::new(ch.clone(), e.discipline, e.granularity);
             match &e.producer {
                 Endpoint::Driver => ch.register_producer(DRIVER_ENDPOINT),
@@ -341,7 +420,9 @@ impl FlowDriver {
     /// Profiling-guided Algorithm-1 planning over a spec's declared graph:
     /// builds the [`SchedProblem`] from the spec (instead of hand-wired
     /// graphs), solves it, and maps the winning plan's shape onto a
-    /// concrete placement mode.
+    /// concrete placement mode. The third element carries the plan's
+    /// per-stage granularities — feed them into [`LaunchOpts::rechunk`] so
+    /// the driver snaps edges to the plan's choice.
     pub fn plan_auto(
         spec: &FlowSpec,
         n_devices: usize,
@@ -350,7 +431,7 @@ impl FlowDriver {
         workload: &HashMap<String, usize>,
         granularities: &HashMap<String, Vec<usize>>,
         switch_overhead: f64,
-    ) -> Result<(PlacementMode, String)> {
+    ) -> Result<(PlacementMode, String, HashMap<String, usize>)> {
         let info = spec.validate()?;
         if !info.cyclic.is_empty() {
             bail!(
@@ -370,9 +451,15 @@ impl FlowDriver {
         let mut sched = Scheduler::new(&problem, db);
         let plan = sched.solve()?;
         let mode = plan.placement_mode();
+        let hints: HashMap<String, usize> = plan
+            .assignments()
+            .into_iter()
+            .map(|a| (a.worker, a.granularity))
+            .collect();
         Ok((
             mode,
             format!("algorithm1 plan ({} states explored):\n{}", sched.states_explored, plan.render()),
+            hints,
         ))
     }
 }
@@ -660,6 +747,7 @@ impl FlowRun<'_> {
             secs: self.t0.elapsed().as_secs_f64(),
             outcomes,
             edges,
+            rechunks: self.driver.rechunks.clone(),
             locks: self.driver.lock_counters().since(&self.locks0),
         })
     }
@@ -693,6 +781,9 @@ pub struct FlowReport {
     pub secs: f64,
     pub outcomes: Vec<StageOutcome>,
     pub edges: Vec<EdgeStats>,
+    /// Spec-level re-chunking adjustments in force for this run: scheduler
+    /// hints snapped to each edge's declared granularity options.
+    pub rechunks: Vec<Rechunk>,
     /// This run's device-lock counters: grants, blocked acquisitions,
     /// seconds spent waiting, and preemptions (forced yields to a senior
     /// flow).
@@ -722,6 +813,12 @@ impl FlowReport {
             s.push_str(&format!(
                 "  edge {} [{}]: {} put, {} got, {} queued\n",
                 e.channel, e.discipline, e.put, e.got, e.backlog
+            ));
+        }
+        for r in &self.rechunks {
+            s.push_str(&format!(
+                "  rechunk {} -> {}: declared {}, hint {}, applied {}\n",
+                r.channel, r.stage, r.declared, r.hint, r.applied
             ));
         }
         s.push_str(&format!(

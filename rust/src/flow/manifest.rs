@@ -1,0 +1,833 @@
+//! Serialized flow manifests: declare a whole RL workflow in TOML.
+//!
+//! A manifest makes the flow API **data**: the same stages, typed edges,
+//! pumps, and launch options a [`FlowSpec`](super::FlowSpec) builder
+//! declares in Rust, expressed as `[flow]` / `[[stage]]` / `[[edge]]` /
+//! `[[pump]]` / `[[call]]` sections (parsed by the `config::loader`
+//! TOML subset) — so a new workload needs no Rust at all. Stage logic is
+//! referenced by **kind** and resolved through the
+//! [`StageRegistry`](super::StageRegistry)'s typed option schemas.
+//!
+//! ```toml
+//! [flow]
+//! name = "demo"                  # becomes FlowSpec::new("demo")
+//! workload = "generic"           # generic | grpo | embodied (runner choice)
+//! mode = "disaggregated"         # placement; falls back to [sched].mode
+//!
+//! [[stage]]
+//! name = "work"                  # stage name
+//! kind = "relay"                 # registry kind; extra keys = kind options
+//! shape = "per_device"           # per_device | single
+//! weight = 2.0                   # device share
+//!
+//! [[edge]]
+//! channel = "src"
+//! from = "driver"                # "driver" or "stage.method[@port]"
+//! to = "work.run"                # default port: "out" (from) / "in" (to)
+//! discipline = "weighted"        # fifo | weighted | balanced
+//! granularity = 8
+//! granularity_options = [4, 8, 16]
+//! capacity = 64                  # optional channel bound
+//! feed = 32                      # generic runner: synthetic source items
+//!
+//! [[pump]]
+//! from = "scored"                # driver-consumed channel
+//! to = "train"                   # driver-produced channel
+//! logic = "group_adv"            # pump kind; extra keys = pump options
+//! group_size = 4
+//!
+//! [[call]]
+//! stage = "work"                 # extra invocation metadata for a method
+//! method = "run"
+//! horizon = 32                   # remaining keys -> call_args meta
+//! ```
+//!
+//! The manifest file may also carry the standard launcher sections
+//! (`[cluster]`, `[rollout]`, `[train]`, `[sched]`, `[supervisor]`, …):
+//! [`FlowManifest::run_config`] reads them into a [`RunConfig`] for the
+//! runner. A **multi-flow** manifest instead carries `[[flow]]` reference
+//! tables (`manifest = "grpo.flow.toml"` plus admission overrides) and a
+//! shared `[cluster]`/`[supervisor]`; see [`MultiFlowManifest`].
+//!
+//! Every error carries `file: section.key` context so `flow_run --check`
+//! failures are actionable.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::registry::StageRegistry;
+use super::spec::{Edge, FlowGraphInfo, FlowSpec, RankShape, Stage};
+use super::supervisor::AdmitReq;
+use crate::channel::Dequeue;
+use crate::config::{loader, PlacementMode, RunConfig};
+use crate::data::Payload;
+use crate::util::json::Value;
+
+/// One side of a declared edge.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum EndpointDecl {
+    Driver,
+    Stage { stage: String, method: String, port: Option<String> },
+}
+
+/// One `[[stage]]` declaration.
+#[derive(Debug, Clone)]
+pub struct StageDecl {
+    pub name: String,
+    /// Registry kind resolved through [`StageRegistry::resolve_stage`].
+    pub kind: String,
+    pub shape: RankShape,
+    pub weight: f64,
+    pub devices: Option<usize>,
+    pub priority: Option<u64>,
+    /// Kind options (every non-reserved key of the stage table).
+    pub options: BTreeMap<String, Value>,
+}
+
+/// One `[[edge]]` declaration.
+#[derive(Debug, Clone)]
+pub struct EdgeDecl {
+    pub channel: String,
+    pub from: EndpointDecl,
+    pub to: EndpointDecl,
+    pub discipline: Dequeue,
+    pub granularity: usize,
+    pub granularity_options: Vec<usize>,
+    pub capacity: Option<usize>,
+    /// Synthetic items the generic runner feeds into a driver-produced
+    /// edge (ignored by workload-specific runners).
+    pub feed: usize,
+}
+
+/// One `[[pump]]` declaration (driver-side aggregation).
+#[derive(Debug, Clone)]
+pub struct PumpDecl {
+    pub from: String,
+    pub to: String,
+    /// Pump kind resolved through [`StageRegistry::resolve_pump`].
+    pub logic: String,
+    pub options: BTreeMap<String, Value>,
+}
+
+/// One `[[call]]` declaration: extra invocation metadata.
+#[derive(Debug, Clone)]
+pub struct CallDecl {
+    pub stage: String,
+    pub method: String,
+    pub meta: BTreeMap<String, Value>,
+}
+
+/// `[flow]`-section admission hints for multi-flow runs.
+#[derive(Debug, Clone, Default)]
+pub struct AdmitDecl {
+    pub devices: Option<usize>,
+    pub slot: Option<u64>,
+    pub shareable: bool,
+    pub granularities: Vec<usize>,
+}
+
+/// A parsed single-flow manifest.
+#[derive(Debug, Clone)]
+pub struct FlowManifest {
+    /// Source file (error context; the caller-supplied origin for
+    /// in-memory text).
+    pub origin: String,
+    pub name: String,
+    /// Runner dispatch: `"generic"`, `"grpo"`, or `"embodied"`.
+    pub workload: String,
+    /// `[flow].mode` override (`None` defers to `[sched].mode`).
+    pub mode: Option<PlacementMode>,
+    pub stages: Vec<StageDecl>,
+    pub edges: Vec<EdgeDecl>,
+    pub pumps: Vec<PumpDecl>,
+    pub calls: Vec<CallDecl>,
+    pub admit: AdmitDecl,
+    /// The full parsed tree ([`FlowManifest::run_config`] source).
+    pub tree: Value,
+}
+
+/// A parsed multi-flow manifest: shared cluster/supervisor sections plus
+/// `[[flow]]` references to single-flow manifests.
+#[derive(Debug, Clone)]
+pub struct MultiFlowManifest {
+    pub origin: String,
+    pub flows: Vec<FlowRef>,
+    pub tree: Value,
+}
+
+/// One `[[flow]]` reference inside a multi-flow manifest.
+#[derive(Debug, Clone)]
+pub struct FlowRef {
+    /// Path to the referenced manifest, relative to the multi-flow file.
+    pub manifest: String,
+    pub devices: Option<usize>,
+    pub slot: Option<u64>,
+    pub shareable: Option<bool>,
+    pub granularities: Option<Vec<usize>>,
+}
+
+/// Either kind of manifest file, dispatched by shape: `[[flow]]` tables ⇒
+/// multi, `[flow]` section ⇒ single.
+pub enum LoadedManifest {
+    Flow(Box<FlowManifest>),
+    Multi(MultiFlowManifest),
+}
+
+/// Load either a single-flow or a multi-flow manifest from disk.
+pub fn load_any(path: &str) -> Result<LoadedManifest> {
+    let tree = loader::load_toml_file(path)?;
+    match tree.get("flow") {
+        Some(Value::Arr(_)) => Ok(LoadedManifest::Multi(MultiFlowManifest::from_value(tree, path)?)),
+        _ => Ok(LoadedManifest::Flow(Box::new(FlowManifest::from_value(tree, path)?))),
+    }
+}
+
+impl FlowManifest {
+    /// Load and parse a single-flow manifest file.
+    pub fn load(path: &str) -> Result<FlowManifest> {
+        let tree = loader::load_toml_file(path)?;
+        FlowManifest::from_value(tree, path)
+    }
+
+    /// Parse manifest text (`origin` labels errors).
+    pub fn parse(text: &str, origin: &str) -> Result<FlowManifest> {
+        let tree = loader::parse_toml(text).with_context(|| format!("parsing {origin}"))?;
+        FlowManifest::from_value(tree, origin)
+    }
+
+    /// Interpret an already-parsed tree as a single-flow manifest.
+    pub fn from_value(tree: Value, origin: &str) -> Result<FlowManifest> {
+        let flow = Sect::required(&tree, "flow", origin, "[flow]")?;
+        let name = flow.str("name")?;
+        if name.is_empty() || name.contains(':') {
+            bail!("{origin}: [flow].name must be non-empty and ':'-free, got {name:?}");
+        }
+        let workload = flow.str_or("workload", "generic")?;
+        if !["generic", "grpo", "embodied"].contains(&workload.as_str()) {
+            bail!(
+                "{origin}: [flow].workload must be generic, grpo, or embodied; got {workload:?}"
+            );
+        }
+        let mode = match flow.opt_raw("mode") {
+            Some(v) => {
+                let s = v
+                    .as_str()
+                    .ok_or_else(|| anyhow!("{origin}: [flow].mode must be a string"))?;
+                Some(PlacementMode::parse(s).with_context(|| format!("{origin}: [flow].mode"))?)
+            }
+            None => None,
+        };
+        let admit = AdmitDecl {
+            devices: flow.usize_opt("devices")?,
+            slot: flow.u64_opt("slot")?,
+            shareable: flow.bool_or("shareable", false)?,
+            granularities: flow.arr_usize("granularities")?,
+        };
+        flow.reject_unknown(&[
+            "name",
+            "workload",
+            "mode",
+            "devices",
+            "slot",
+            "shareable",
+            "granularities",
+        ])?;
+
+        let mut stages = Vec::new();
+        for (i, s) in tables(&tree, "stage").iter().enumerate() {
+            let sect = Sect::new(s, origin, &format!("[[stage]] #{}", i + 1))?;
+            let name = sect.str("name")?;
+            let sect = Sect::new(s, origin, &format!("[[stage]] {name:?}"))?;
+            let shape = match sect.str_or("shape", "per_device")?.as_str() {
+                "per_device" => RankShape::PerDevice,
+                "single" => RankShape::Single,
+                other => bail!(
+                    "{origin}: [[stage]] {name:?}.shape must be per_device or single, got {other:?}"
+                ),
+            };
+            stages.push(StageDecl {
+                kind: sect.str("kind")?,
+                shape,
+                weight: sect.f64_or("weight", 1.0)?,
+                devices: sect.usize_opt("devices")?,
+                priority: sect.u64_opt("priority")?,
+                options: sect.extras(&["name", "kind", "shape", "weight", "devices", "priority"]),
+                name,
+            });
+        }
+
+        let mut edges = Vec::new();
+        for (i, e) in tables(&tree, "edge").iter().enumerate() {
+            let sect = Sect::new(e, origin, &format!("[[edge]] #{}", i + 1))?;
+            let channel = sect.str("channel")?;
+            let sect = Sect::new(e, origin, &format!("[[edge]] {channel:?}"))?;
+            sect.reject_unknown(&[
+                "channel",
+                "from",
+                "to",
+                "discipline",
+                "granularity",
+                "granularity_options",
+                "capacity",
+                "feed",
+            ])?;
+            let discipline = match sect.str_or("discipline", "fifo")?.as_str() {
+                "fifo" => Dequeue::Fifo,
+                "weighted" => Dequeue::Weighted,
+                "balanced" => Dequeue::Balanced,
+                other => bail!(
+                    "{origin}: [[edge]] {channel:?}.discipline must be fifo, weighted, or \
+                     balanced; got {other:?}"
+                ),
+            };
+            edges.push(EdgeDecl {
+                from: parse_endpoint(&sect.str("from")?, &sect.ctx_key("from"))?,
+                to: parse_endpoint(&sect.str("to")?, &sect.ctx_key("to"))?,
+                discipline,
+                granularity: sect.usize_or("granularity", 1)?.max(1),
+                granularity_options: sect.arr_usize("granularity_options")?,
+                capacity: sect.usize_opt("capacity")?,
+                feed: sect.usize_or("feed", 0)?,
+                channel,
+            });
+        }
+
+        let mut pumps = Vec::new();
+        for (i, p) in tables(&tree, "pump").iter().enumerate() {
+            let sect = Sect::new(p, origin, &format!("[[pump]] #{}", i + 1))?;
+            pumps.push(PumpDecl {
+                from: sect.str("from")?,
+                to: sect.str("to")?,
+                logic: sect.str_or("logic", "forward")?,
+                options: sect.extras(&["from", "to", "logic"]),
+            });
+        }
+
+        let mut calls = Vec::new();
+        for (i, c) in tables(&tree, "call").iter().enumerate() {
+            let sect = Sect::new(c, origin, &format!("[[call]] #{}", i + 1))?;
+            calls.push(CallDecl {
+                stage: sect.str("stage")?,
+                method: sect.str("method")?,
+                meta: sect.extras(&["stage", "method"]),
+            });
+        }
+
+        Ok(FlowManifest {
+            origin: origin.to_string(),
+            name,
+            workload,
+            mode,
+            stages,
+            edges,
+            pumps,
+            calls,
+            admit,
+            tree,
+        })
+    }
+
+    /// Resolve the manifest into a [`FlowSpec`]: every stage kind is
+    /// looked up in the registry (options schema-validated), edges, pumps,
+    /// and call metadata are rebuilt through the builder API.
+    pub fn to_spec(&self, reg: &StageRegistry) -> Result<FlowSpec> {
+        let mut spec = FlowSpec::new(&self.name);
+        for s in &self.stages {
+            let factory = reg.resolve_stage(&s.kind, &s.options).with_context(|| {
+                format!("{}: [[stage]] {:?} (kind {:?})", self.origin, s.name, s.kind)
+            })?;
+            let mut st = Stage::new(&s.name, factory);
+            st = match s.shape {
+                RankShape::PerDevice => st.ranks_per_device(),
+                RankShape::Single => st.single_rank(),
+            };
+            st = st.weight(s.weight);
+            if let Some(d) = s.devices {
+                st = st.devices(d);
+            }
+            if let Some(p) = s.priority {
+                st = st.priority(p);
+            }
+            spec = spec.stage(st);
+        }
+        for e in &self.edges {
+            let mut edge = Edge::new(&e.channel);
+            edge = match &e.from {
+                EndpointDecl::Driver => edge.produced_by_driver(),
+                EndpointDecl::Stage { stage, method, port } => {
+                    edge.produced_at(stage, method, port.as_deref().unwrap_or("out"))
+                }
+            };
+            edge = match &e.to {
+                EndpointDecl::Driver => edge.consumed_by_driver(),
+                EndpointDecl::Stage { stage, method, port } => {
+                    edge.consumed_at(stage, method, port.as_deref().unwrap_or("in"))
+                }
+            };
+            edge = match e.discipline {
+                Dequeue::Fifo => edge.fifo(),
+                Dequeue::Weighted => edge.weighted(),
+                Dequeue::Balanced => edge.balanced(),
+            };
+            edge = edge.granularity(e.granularity);
+            if !e.granularity_options.is_empty() {
+                edge = edge.granularity_options(e.granularity_options.clone());
+            }
+            if let Some(cap) = e.capacity {
+                edge = edge.capacity(cap);
+            }
+            spec = spec.edge(edge);
+        }
+        for p in &self.pumps {
+            // Pump *logic* is resolved by the runner; lint it here so
+            // `--check` catches unknown kinds and bad options.
+            reg.resolve_pump(&p.logic, &p.options).with_context(|| {
+                format!("{}: [[pump]] {} -> {} (logic {:?})", self.origin, p.from, p.to, p.logic)
+            })?;
+            spec = spec.pump(&p.from, &p.to);
+        }
+        for c in &self.calls {
+            let mut payload = Payload::new();
+            for (k, v) in &c.meta {
+                payload.meta.set(k, v.clone());
+            }
+            spec = spec.call_args(&c.stage, &c.method, payload);
+        }
+        Ok(spec)
+    }
+
+    /// Lint: resolve against the registry and run full spec validation.
+    pub fn lint(&self, reg: &StageRegistry) -> Result<FlowGraphInfo> {
+        let spec = self.to_spec(reg)?;
+        spec.validate()
+            .with_context(|| format!("{}: validating flow {:?}", self.origin, self.name))
+    }
+
+    /// The launcher config carried alongside the flow sections (cluster
+    /// shape, hyper-parameters, scheduler/supervisor knobs), with
+    /// `[flow].mode` overriding `[sched].mode` when set.
+    pub fn run_config(&self) -> Result<RunConfig> {
+        let mut cfg = RunConfig::from_value(&self.tree)
+            .with_context(|| format!("{}: launcher config", self.origin))?;
+        if let Some(m) = self.mode {
+            cfg.sched.mode = m;
+        }
+        Ok(cfg)
+    }
+
+    /// Admission request from the `[flow]` hints (multi-flow runs).
+    pub fn admit_req(&self) -> AdmitReq {
+        let mut req = AdmitReq::new(&self.name, self.admit.devices.unwrap_or(1));
+        if let Some(s) = self.admit.slot {
+            req = req.slot(s);
+        }
+        if self.admit.shareable {
+            req = req.shareable();
+        }
+        if !self.admit.granularities.is_empty() {
+            req = req.granularities(self.admit.granularities.clone());
+        }
+        req
+    }
+}
+
+impl MultiFlowManifest {
+    /// Interpret an already-parsed tree as a multi-flow manifest.
+    pub fn from_value(tree: Value, origin: &str) -> Result<MultiFlowManifest> {
+        let mut flows = Vec::new();
+        for (i, f) in tables(&tree, "flow").iter().enumerate() {
+            let sect = Sect::new(f, origin, &format!("[[flow]] #{}", i + 1))?;
+            sect.reject_unknown(&["manifest", "devices", "slot", "shareable", "granularities"])?;
+            flows.push(FlowRef {
+                manifest: sect.str("manifest")?,
+                devices: sect.usize_opt("devices")?,
+                slot: sect.u64_opt("slot")?,
+                shareable: sect.bool_opt("shareable")?,
+                granularities: match sect.opt_raw("granularities") {
+                    Some(_) => Some(sect.arr_usize("granularities")?),
+                    None => None,
+                },
+            });
+        }
+        if flows.is_empty() {
+            bail!("{origin}: multi-flow manifest declares no [[flow]] tables");
+        }
+        Ok(MultiFlowManifest { origin: origin.to_string(), flows, tree })
+    }
+
+    /// Shared launcher config (cluster + supervisor sections).
+    pub fn run_config(&self) -> Result<RunConfig> {
+        RunConfig::from_value(&self.tree)
+            .with_context(|| format!("{}: launcher config", self.origin))
+    }
+
+    /// Load every referenced manifest (paths relative to this file) and
+    /// merge the `[[flow]]` admission overrides over each flow's own
+    /// `[flow]` hints.
+    pub fn resolve(&self) -> Result<Vec<(FlowManifest, AdmitReq)>> {
+        let base = Path::new(&self.origin).parent().unwrap_or_else(|| Path::new("."));
+        let mut out = Vec::new();
+        for r in &self.flows {
+            let path = base.join(&r.manifest);
+            let path = path.to_string_lossy().to_string();
+            let m = FlowManifest::load(&path)
+                .with_context(|| format!("{}: [[flow]] manifest {:?}", self.origin, r.manifest))?;
+            let mut req = m.admit_req();
+            if let Some(d) = r.devices {
+                req.devices = d;
+            }
+            if let Some(s) = r.slot {
+                req = req.slot(s);
+            }
+            if let Some(s) = r.shareable {
+                // Bidirectional override: the [[flow]] table can also turn
+                // a manifest-declared shareable flow exclusive.
+                req.shareable = s;
+            }
+            if let Some(g) = &r.granularities {
+                req = req.granularities(g.clone());
+            }
+            out.push((m, req));
+        }
+        Ok(out)
+    }
+}
+
+/// Tables at `key`: `[[key]]` array elements (empty when absent).
+fn tables<'a>(tree: &'a Value, key: &str) -> Vec<&'a Value> {
+    match tree.get(key) {
+        Some(Value::Arr(items)) => items.iter().collect(),
+        _ => Vec::new(),
+    }
+}
+
+fn parse_endpoint(s: &str, ctx: &str) -> Result<EndpointDecl> {
+    if s == "driver" {
+        return Ok(EndpointDecl::Driver);
+    }
+    let (rest, port) = match s.split_once('@') {
+        Some((a, p)) if !p.is_empty() => (a, Some(p.to_string())),
+        Some(_) => bail!("{ctx}: endpoint {s:?} has an empty @port"),
+        None => (s, None),
+    };
+    let (stage, method) = rest
+        .split_once('.')
+        .ok_or_else(|| anyhow!("{ctx}: endpoint {s:?} must be \"driver\" or \"stage.method[@port]\""))?;
+    if stage.is_empty() || method.is_empty() {
+        bail!("{ctx}: endpoint {s:?} has an empty stage or method");
+    }
+    Ok(EndpointDecl::Stage {
+        stage: stage.to_string(),
+        method: method.to_string(),
+        port,
+    })
+}
+
+/// Typed, error-contextful reader over one table/section of the tree.
+struct Sect<'a> {
+    obj: &'a BTreeMap<String, Value>,
+    /// `"{origin}: {section}"`.
+    ctx: String,
+}
+
+impl<'a> Sect<'a> {
+    fn new(v: &'a Value, origin: &str, section: &str) -> Result<Sect<'a>> {
+        match v.as_obj() {
+            Some(obj) => Ok(Sect { obj, ctx: format!("{origin}: {section}") }),
+            None => bail!("{origin}: {section} is not a table"),
+        }
+    }
+
+    fn required(tree: &'a Value, key: &str, origin: &str, section: &str) -> Result<Sect<'a>> {
+        match tree.get(key) {
+            Some(v) => Sect::new(v, origin, section),
+            None => bail!("{origin}: missing {section} section"),
+        }
+    }
+
+    fn ctx_key(&self, key: &str) -> String {
+        format!("{}.{key}", self.ctx)
+    }
+
+    fn opt_raw(&self, key: &str) -> Option<&Value> {
+        self.obj.get(key)
+    }
+
+    fn str(&self, key: &str) -> Result<String> {
+        match self.obj.get(key) {
+            Some(v) => Ok(v
+                .as_str()
+                .ok_or_else(|| anyhow!("{}: must be a string, got {v:?}", self.ctx_key(key)))?
+                .to_string()),
+            None => bail!("{}: missing required key", self.ctx_key(key)),
+        }
+    }
+
+    fn str_or(&self, key: &str, default: &str) -> Result<String> {
+        match self.obj.get(key) {
+            Some(v) => Ok(v
+                .as_str()
+                .ok_or_else(|| anyhow!("{}: must be a string, got {v:?}", self.ctx_key(key)))?
+                .to_string()),
+            None => Ok(default.to_string()),
+        }
+    }
+
+    fn usize_opt(&self, key: &str) -> Result<Option<usize>> {
+        match self.obj.get(key) {
+            Some(v) => {
+                let i = v
+                    .as_i64()
+                    .ok_or_else(|| anyhow!("{}: must be an integer, got {v:?}", self.ctx_key(key)))?;
+                Ok(Some(usize::try_from(i).map_err(|_| {
+                    anyhow!("{}: must be non-negative, got {i}", self.ctx_key(key))
+                })?))
+            }
+            None => Ok(None),
+        }
+    }
+
+    fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        Ok(self.usize_opt(key)?.unwrap_or(default))
+    }
+
+    fn u64_opt(&self, key: &str) -> Result<Option<u64>> {
+        match self.usize_opt(key)? {
+            Some(v) => Ok(Some(v as u64)),
+            None => Ok(None),
+        }
+    }
+
+    fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.obj.get(key) {
+            Some(v) => v
+                .as_f64()
+                .ok_or_else(|| anyhow!("{}: must be a number, got {v:?}", self.ctx_key(key))),
+            None => Ok(default),
+        }
+    }
+
+    fn bool_opt(&self, key: &str) -> Result<Option<bool>> {
+        match self.obj.get(key) {
+            Some(v) => Ok(Some(v.as_bool().ok_or_else(|| {
+                anyhow!("{}: must be true or false, got {v:?}", self.ctx_key(key))
+            })?)),
+            None => Ok(None),
+        }
+    }
+
+    fn bool_or(&self, key: &str, default: bool) -> Result<bool> {
+        Ok(self.bool_opt(key)?.unwrap_or(default))
+    }
+
+    fn arr_usize(&self, key: &str) -> Result<Vec<usize>> {
+        match self.obj.get(key) {
+            Some(Value::Arr(items)) => items
+                .iter()
+                .map(|v| {
+                    v.as_usize().ok_or_else(|| {
+                        anyhow!(
+                            "{}: must be an array of non-negative integers, got {v:?}",
+                            self.ctx_key(key)
+                        )
+                    })
+                })
+                .collect(),
+            Some(v) => bail!("{}: must be an array, got {v:?}", self.ctx_key(key)),
+            None => Ok(Vec::new()),
+        }
+    }
+
+    /// Every key not in `reserved` (kind/pump options, call metadata).
+    fn extras(&self, reserved: &[&str]) -> BTreeMap<String, Value> {
+        self.obj
+            .iter()
+            .filter(|(k, _)| !reserved.contains(&k.as_str()))
+            .map(|(k, v)| (k.clone(), v.clone()))
+            .collect()
+    }
+
+    /// Error on any key outside `known` (typo lint for closed tables).
+    fn reject_unknown(&self, known: &[&str]) -> Result<()> {
+        for k in self.obj.keys() {
+            if !known.contains(&k.as_str()) {
+                bail!(
+                    "{}.{k}: unknown key (known: {})",
+                    self.ctx,
+                    known.join(", ")
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DEMO: &str = r#"
+[flow]
+name = "demo"
+mode = "disaggregated"
+devices = 3
+shareable = true
+granularities = [2, 4]
+
+[[stage]]
+name = "work"
+kind = "relay"
+weight = 2.0
+
+[[stage]]
+name = "tail"
+kind = "sink"
+shape = "single"
+priority = 9
+
+[[edge]]
+channel = "src"
+from = "driver"
+to = "work.run"
+granularity = 4
+granularity_options = [2, 4, 8]
+feed = 16
+
+[[edge]]
+channel = "mid"
+from = "work.run"
+to = "tail.drain"
+discipline = "balanced"
+capacity = 64
+"#;
+
+    #[test]
+    fn parses_and_resolves_demo() {
+        let m = FlowManifest::parse(DEMO, "demo.toml").unwrap();
+        assert_eq!(m.name, "demo");
+        assert_eq!(m.workload, "generic");
+        assert_eq!(m.mode, Some(PlacementMode::Disaggregated));
+        assert_eq!(m.admit.devices, Some(3));
+        assert!(m.admit.shareable);
+        assert_eq!(m.stages.len(), 2);
+        assert_eq!(m.stages[1].shape, RankShape::Single);
+        assert_eq!(m.stages[1].priority, Some(9));
+        assert_eq!(m.edges[0].feed, 16);
+        assert_eq!(m.edges[1].capacity, Some(64));
+
+        let reg = StageRegistry::builtin();
+        let info = m.lint(&reg).unwrap();
+        assert_eq!(info.graph.n(), 2);
+        let spec = m.to_spec(&reg).unwrap();
+        let sig = spec.signature();
+        assert_eq!(sig.get_path("flow").unwrap().as_str(), Some("demo"));
+        // Default ports land as out/in.
+        let edges = sig.get_path("edges").unwrap().as_arr().unwrap();
+        assert_eq!(edges[0].get_path("to").unwrap().as_str(), Some("work.run@in"));
+        assert_eq!(edges[1].get_path("from").unwrap().as_str(), Some("work.run@out"));
+    }
+
+    #[test]
+    fn admission_request_from_flow_section() {
+        let m = FlowManifest::parse(DEMO, "demo.toml").unwrap();
+        let req = m.admit_req();
+        assert_eq!(req.name, "demo");
+        assert_eq!(req.devices, 3);
+        assert!(req.shareable);
+        assert_eq!(req.granularities, vec![2, 4]);
+    }
+
+    #[test]
+    fn missing_flow_section_rejected() {
+        let err = FlowManifest::parse("[a]\nx = 1", "f.toml").unwrap_err().to_string();
+        assert!(err.contains("f.toml") && err.contains("[flow]"), "{err}");
+    }
+
+    #[test]
+    fn bad_workload_and_mode_rejected() {
+        let err = FlowManifest::parse("[flow]\nname = \"x\"\nworkload = \"wat\"", "f.toml")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("workload"), "{err}");
+        let err = FlowManifest::parse("[flow]\nname = \"x\"\nmode = \"wat\"", "f.toml")
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("[flow].mode"), "{err:#}");
+    }
+
+    #[test]
+    fn bad_endpoint_rejected_with_context() {
+        let text = r#"
+[flow]
+name = "x"
+[[stage]]
+name = "a"
+kind = "sink"
+[[edge]]
+channel = "c"
+from = "driver"
+to = "nodot"
+"#;
+        let err = FlowManifest::parse(text, "f.toml").unwrap_err().to_string();
+        assert!(err.contains("[[edge]] \"c\".to") && err.contains("nodot"), "{err}");
+    }
+
+    #[test]
+    fn unknown_edge_key_rejected() {
+        let text = r#"
+[flow]
+name = "x"
+[[edge]]
+channel = "c"
+from = "driver"
+to = "a.m"
+granulraity = 8
+"#;
+        let err = FlowManifest::parse(text, "f.toml").unwrap_err().to_string();
+        assert!(err.contains("granulraity") && err.contains("unknown key"), "{err}");
+    }
+
+    #[test]
+    fn bad_discipline_rejected() {
+        let text = r#"
+[flow]
+name = "x"
+[[stage]]
+name = "a"
+kind = "sink"
+[[edge]]
+channel = "c"
+from = "driver"
+to = "a.m"
+discipline = "lifo"
+"#;
+        let err = FlowManifest::parse(text, "f.toml").unwrap_err().to_string();
+        assert!(err.contains("discipline") && err.contains("lifo"), "{err}");
+    }
+
+    #[test]
+    fn multi_flow_parse() {
+        let tree = loader::parse_toml(
+            r#"
+[supervisor]
+max_flows = 2
+[[flow]]
+manifest = "a.flow.toml"
+devices = 4
+slot = 0
+shareable = true
+[[flow]]
+manifest = "b.flow.toml"
+devices = 2
+"#,
+        )
+        .unwrap();
+        let m = MultiFlowManifest::from_value(tree, "multi.toml").unwrap();
+        assert_eq!(m.flows.len(), 2);
+        assert_eq!(m.flows[0].devices, Some(4));
+        assert_eq!(m.flows[0].shareable, Some(true));
+        assert_eq!(m.flows[1].slot, None);
+        assert_eq!(m.run_config().unwrap().supervisor.max_flows, 2);
+    }
+}

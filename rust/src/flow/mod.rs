@@ -16,16 +16,29 @@
 //! per-flow device windows, cross-flow context switching via prioritized
 //! lock bands, time-slice fairness, and elastic resizing when a flow
 //! retires.
+//!
+//! [`manifest`] + [`registry`] make the whole surface **data**: a flow is
+//! declared in a TOML manifest (`[flow]`/`[[stage]]`/`[[edge]]`/
+//! `[[pump]]` sections), stage logic is referenced by registered *kind*
+//! with a typed option schema, and `examples/flow_run.rs` lints
+//! (`--check`) and runs manifests end-to-end — new workloads need no
+//! Rust at all (docs/flow-api.md § "Flow manifests").
 
 pub mod driver;
 pub mod graph;
+pub mod manifest;
 pub mod pipeline;
+pub mod registry;
 pub mod spec;
 pub mod supervisor;
 
-pub use driver::{EdgeStats, FlowDriver, FlowReport, FlowRun, LaunchOpts, StageOutcome, StagePlan};
+pub use driver::{
+    EdgeStats, FlowDriver, FlowReport, FlowRun, LaunchOpts, Rechunk, StageOutcome, StagePlan,
+};
 pub use graph::WorkflowGraph;
+pub use manifest::FlowManifest;
 pub use pipeline::{chunk_sizes, Chunk};
+pub use registry::{OptKind, OptSpec, PumpLogic, StageOpts, StageRegistry};
 pub use spec::{Edge, FlowGraphInfo, FlowSpec, Stage};
 pub use supervisor::{
     plan_union, AdmitReq, Admission, FlowStatus, FlowSupervisor, ResizeOffer, RetireReport,

@@ -1,0 +1,527 @@
+//! The stage-logic registry: **named worker-logic factories with typed
+//! option schemas** — the lookup layer that turns flow composition from
+//! code into data.
+//!
+//! A [`FlowSpec`](super::FlowSpec) built in Rust closes over concrete
+//! `WorkerLogic` constructors. A flow **manifest** (TOML) cannot: it names
+//! a stage *kind* (`kind = "rollout"`) plus a bag of options, and the
+//! registry resolves that name to a [`StageFactory`] after validating the
+//! options against the kind's declared schema (unknown keys, missing
+//! required keys, and type mismatches are precise lint errors, not launch
+//! surprises).
+//!
+//! Built-in kinds are registered **by their owning modules** —
+//! `rollout`/`infer`/`train` (the GRPO stages), `sim`/`policy` (the
+//! embodied pair), and the generic `relay`/`sink` pair this module
+//! provides for custom pipelines. Driver-side aggregations (**pump
+//! logic**) are a second namespace: `forward` (pass-through) here and
+//! `group_adv` (per-prompt GRPO advantage normalization) registered by
+//! `train::advantage`. User code extends both namespaces with
+//! [`StageRegistry::register_stage`] / [`StageRegistry::register_pump`].
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::spec::StageFactory;
+use crate::channel::Item;
+use crate::data::Payload;
+use crate::util::json::Value;
+use crate::worker::{WorkerCtx, WorkerLogic};
+
+/// Type of one schema option.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OptKind {
+    Str,
+    Int,
+    Float,
+    Bool,
+}
+
+impl OptKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            OptKind::Str => "string",
+            OptKind::Int => "integer",
+            OptKind::Float => "float",
+            OptKind::Bool => "bool",
+        }
+    }
+
+    fn accepts(self, v: &Value) -> bool {
+        match self {
+            OptKind::Str => v.as_str().is_some(),
+            OptKind::Int => v.as_i64().is_some(),
+            // Ints coerce to floats (TOML `lr = 1` for 1.0).
+            OptKind::Float => v.as_f64().is_some(),
+            OptKind::Bool => v.as_bool().is_some(),
+        }
+    }
+}
+
+/// One typed option a stage/pump kind accepts.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub key: String,
+    pub kind: OptKind,
+    /// `None` + `required` ⇒ the manifest must set it; `Some` is the
+    /// default filled in when absent.
+    pub default: Option<Value>,
+    pub required: bool,
+    pub help: String,
+}
+
+impl OptSpec {
+    pub fn str(key: &str, default: &str, help: &str) -> OptSpec {
+        OptSpec {
+            key: key.to_string(),
+            kind: OptKind::Str,
+            default: Some(Value::Str(default.to_string())),
+            required: false,
+            help: help.to_string(),
+        }
+    }
+
+    pub fn int(key: &str, default: i64, help: &str) -> OptSpec {
+        OptSpec {
+            key: key.to_string(),
+            kind: OptKind::Int,
+            default: Some(Value::Int(default)),
+            required: false,
+            help: help.to_string(),
+        }
+    }
+
+    pub fn float(key: &str, default: f64, help: &str) -> OptSpec {
+        OptSpec {
+            key: key.to_string(),
+            kind: OptKind::Float,
+            default: Some(Value::Float(default)),
+            required: false,
+            help: help.to_string(),
+        }
+    }
+
+    pub fn boolean(key: &str, default: bool, help: &str) -> OptSpec {
+        OptSpec {
+            key: key.to_string(),
+            kind: OptKind::Bool,
+            default: Some(Value::Bool(default)),
+            required: false,
+            help: help.to_string(),
+        }
+    }
+
+    /// An option the manifest **must** provide.
+    pub fn required(key: &str, kind: OptKind, help: &str) -> OptSpec {
+        OptSpec {
+            key: key.to_string(),
+            kind,
+            default: None,
+            required: true,
+            help: help.to_string(),
+        }
+    }
+}
+
+/// Schema-validated option bag handed to a kind's builder: every declared
+/// option is present (manifest value or default) with the declared type.
+pub struct StageOpts {
+    values: BTreeMap<String, Value>,
+}
+
+impl StageOpts {
+    /// Build from raw pairs without schema validation (tests, ad-hoc use).
+    pub fn from_pairs(pairs: Vec<(&str, Value)>) -> StageOpts {
+        StageOpts {
+            values: pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect(),
+        }
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.values.get(key)
+    }
+
+    fn want(&self, key: &str) -> Result<&Value> {
+        self.values.get(key).ok_or_else(|| anyhow!("option {key:?} not declared in the schema"))
+    }
+
+    pub fn str(&self, key: &str) -> Result<String> {
+        Ok(self.want(key)?.as_str().ok_or_else(|| anyhow!("option {key:?} is not a string"))?.to_string())
+    }
+
+    pub fn i64(&self, key: &str) -> Result<i64> {
+        self.want(key)?.as_i64().ok_or_else(|| anyhow!("option {key:?} is not an integer"))
+    }
+
+    pub fn usize(&self, key: &str) -> Result<usize> {
+        let v = self.i64(key)?;
+        usize::try_from(v).map_err(|_| anyhow!("option {key:?} must be non-negative, got {v}"))
+    }
+
+    pub fn u64(&self, key: &str) -> Result<u64> {
+        let v = self.i64(key)?;
+        u64::try_from(v).map_err(|_| anyhow!("option {key:?} must be non-negative, got {v}"))
+    }
+
+    pub fn f64(&self, key: &str) -> Result<f64> {
+        self.want(key)?.as_f64().ok_or_else(|| anyhow!("option {key:?} is not a number"))
+    }
+
+    pub fn f32(&self, key: &str) -> Result<f32> {
+        Ok(self.f64(key)? as f32)
+    }
+
+    pub fn flag(&self, key: &str) -> Result<bool> {
+        self.want(key)?.as_bool().ok_or_else(|| anyhow!("option {key:?} is not a bool"))
+    }
+}
+
+/// Driver-side aggregation logic for one pump (the channel the driver
+/// consumes → the channel it produces). The runner feeds every dequeued
+/// item through [`PumpLogic::push`] and forwards whatever it emits;
+/// [`PumpLogic::flush`] drains buffered state once the source closes.
+pub trait PumpLogic: Send {
+    fn push(&mut self, item: Item) -> Result<Vec<(Payload, f64)>>;
+
+    fn flush(&mut self) -> Result<Vec<(Payload, f64)>> {
+        Ok(Vec::new())
+    }
+}
+
+type StageBuilder = Box<dyn Fn(&StageOpts) -> Result<StageFactory> + Send + Sync>;
+type PumpBuilder = Box<dyn Fn(&StageOpts) -> Result<Box<dyn PumpLogic>> + Send + Sync>;
+
+struct Entry<B> {
+    help: String,
+    schema: Vec<OptSpec>,
+    build: B,
+}
+
+/// Registry of named stage kinds and pump kinds. See the module docs.
+pub struct StageRegistry {
+    stages: BTreeMap<String, Entry<StageBuilder>>,
+    pumps: BTreeMap<String, Entry<PumpBuilder>>,
+}
+
+impl Default for StageRegistry {
+    fn default() -> Self {
+        StageRegistry::new()
+    }
+}
+
+impl StageRegistry {
+    /// Empty registry (user kinds only).
+    pub fn new() -> StageRegistry {
+        StageRegistry { stages: BTreeMap::new(), pumps: BTreeMap::new() }
+    }
+
+    /// Registry pre-loaded with every built-in kind: the GRPO stages
+    /// (`rollout`/`infer`/`train`), the embodied pair (`sim`/`policy`),
+    /// the generic `relay`/`sink`, and the `forward`/`group_adv` pumps.
+    pub fn builtin() -> StageRegistry {
+        let mut reg = StageRegistry::new();
+        register_generic(&mut reg).expect("generic kinds are distinct");
+        crate::rollout::worker::register(&mut reg).expect("rollout kind is distinct");
+        crate::infer::register(&mut reg).expect("infer kind is distinct");
+        crate::train::worker::register(&mut reg).expect("train kind is distinct");
+        crate::train::advantage::register_pump(&mut reg).expect("group_adv pump is distinct");
+        crate::embodied::worker::register(&mut reg).expect("embodied kinds are distinct");
+        reg
+    }
+
+    /// Register a stage kind. Errors on a duplicate name.
+    pub fn register_stage(
+        &mut self,
+        kind: &str,
+        help: &str,
+        schema: Vec<OptSpec>,
+        build: impl Fn(&StageOpts) -> Result<StageFactory> + Send + Sync + 'static,
+    ) -> Result<()> {
+        if self.stages.contains_key(kind) {
+            bail!("stage kind {kind:?} already registered");
+        }
+        self.stages.insert(
+            kind.to_string(),
+            Entry { help: help.to_string(), schema, build: Box::new(build) },
+        );
+        Ok(())
+    }
+
+    /// Register a pump (driver-side aggregation) kind.
+    pub fn register_pump(
+        &mut self,
+        kind: &str,
+        help: &str,
+        schema: Vec<OptSpec>,
+        build: impl Fn(&StageOpts) -> Result<Box<dyn PumpLogic>> + Send + Sync + 'static,
+    ) -> Result<()> {
+        if self.pumps.contains_key(kind) {
+            bail!("pump kind {kind:?} already registered");
+        }
+        self.pumps.insert(
+            kind.to_string(),
+            Entry { help: help.to_string(), schema, build: Box::new(build) },
+        );
+        Ok(())
+    }
+
+    pub fn stage_kinds(&self) -> Vec<&str> {
+        self.stages.keys().map(String::as_str).collect()
+    }
+
+    pub fn pump_kinds(&self) -> Vec<&str> {
+        self.pumps.keys().map(String::as_str).collect()
+    }
+
+    pub fn stage_schema(&self, kind: &str) -> Option<(&str, &[OptSpec])> {
+        self.stages.get(kind).map(|e| (e.help.as_str(), e.schema.as_slice()))
+    }
+
+    pub fn pump_schema(&self, kind: &str) -> Option<(&str, &[OptSpec])> {
+        self.pumps.get(kind).map(|e| (e.help.as_str(), e.schema.as_slice()))
+    }
+
+    /// Resolve a stage kind against raw options: schema validation (unknown
+    /// key / missing required / type mismatch are errors; defaults filled
+    /// in), then the kind's factory builder.
+    pub fn resolve_stage(
+        &self,
+        kind: &str,
+        given: &BTreeMap<String, Value>,
+    ) -> Result<StageFactory> {
+        let e = self.stages.get(kind).ok_or_else(|| {
+            anyhow!("unknown stage kind {kind:?} (registered: {})", self.stages.keys().cloned().collect::<Vec<_>>().join(", "))
+        })?;
+        let opts = validated(kind, &e.schema, given)?;
+        (e.build)(&opts).with_context(|| format!("building stage kind {kind:?}"))
+    }
+
+    /// Resolve a pump kind against raw options; see
+    /// [`StageRegistry::resolve_stage`].
+    pub fn resolve_pump(
+        &self,
+        kind: &str,
+        given: &BTreeMap<String, Value>,
+    ) -> Result<Box<dyn PumpLogic>> {
+        let e = self.pumps.get(kind).ok_or_else(|| {
+            anyhow!("unknown pump kind {kind:?} (registered: {})", self.pumps.keys().cloned().collect::<Vec<_>>().join(", "))
+        })?;
+        let opts = validated(kind, &e.schema, given)?;
+        (e.build)(&opts).with_context(|| format!("building pump kind {kind:?}"))
+    }
+}
+
+/// Check `given` against `schema`: unknown keys and type mismatches are
+/// errors, defaults are filled, required keys must be present.
+fn validated(kind: &str, schema: &[OptSpec], given: &BTreeMap<String, Value>) -> Result<StageOpts> {
+    let mut values = BTreeMap::new();
+    for (k, v) in given {
+        let spec = schema.iter().find(|s| s.key == *k).ok_or_else(|| {
+            anyhow!(
+                "kind {kind:?} has no option {k:?} (schema: {})",
+                schema.iter().map(|s| s.key.as_str()).collect::<Vec<_>>().join(", ")
+            )
+        })?;
+        if !spec.kind.accepts(v) {
+            bail!(
+                "kind {kind:?} option {k:?} expects a {}, got {v:?}",
+                spec.kind.name()
+            );
+        }
+        values.insert(k.clone(), v.clone());
+    }
+    for s in schema {
+        if values.contains_key(&s.key) {
+            continue;
+        }
+        match &s.default {
+            Some(d) => {
+                values.insert(s.key.clone(), d.clone());
+            }
+            None if s.required => {
+                bail!("kind {kind:?}: required option {:?} missing", s.key)
+            }
+            None => {}
+        }
+    }
+    Ok(StageOpts { values })
+}
+
+// ---------------------------------------------------------------------------
+// Generic built-ins: `relay` / `sink` stages and the `forward` pump —
+// enough to declare a working custom pipeline from TOML alone.
+// ---------------------------------------------------------------------------
+
+/// Forwards every item from port `"in"` to port `"out"` (optionally
+/// simulating per-item work); accepts any method name.
+struct RelayLogic {
+    work_ms: u64,
+}
+
+impl WorkerLogic for RelayLogic {
+    fn call(&mut self, ctx: &WorkerCtx, _method: &str, _arg: Payload) -> Result<Payload> {
+        let inp = ctx.port("in")?;
+        let out = ctx.port("out")?;
+        let me = ctx.endpoint();
+        let mut n = 0usize;
+        let result = (|| -> Result<()> {
+            while let Some(item) = inp.recv(me) {
+                if self.work_ms > 0 {
+                    std::thread::sleep(std::time::Duration::from_millis(self.work_ms));
+                }
+                out.send_weighted(me, item.payload, item.weight)?;
+                n += 1;
+            }
+            Ok(())
+        })();
+        out.done(me);
+        result?;
+        Ok(Payload::new().set_meta("relayed", n))
+    }
+}
+
+/// Drains port `"in"`, returning the item count and summed weight; accepts
+/// any method name.
+struct SinkLogic;
+
+impl WorkerLogic for SinkLogic {
+    fn call(&mut self, ctx: &WorkerCtx, _method: &str, _arg: Payload) -> Result<Payload> {
+        let inp = ctx.port("in")?;
+        let me = ctx.endpoint();
+        let mut n = 0usize;
+        let mut load = 0f64;
+        while let Some(item) = inp.recv(me) {
+            n += 1;
+            load += item.weight;
+        }
+        Ok(Payload::new().set_meta("n", n).set_meta("load", load))
+    }
+}
+
+/// Pass-through pump: forward each item unchanged, weight preserved.
+struct ForwardPump;
+
+impl PumpLogic for ForwardPump {
+    fn push(&mut self, item: Item) -> Result<Vec<(Payload, f64)>> {
+        Ok(vec![(item.payload, item.weight)])
+    }
+}
+
+fn register_generic(reg: &mut StageRegistry) -> Result<()> {
+    reg.register_stage(
+        "relay",
+        "generic pass-through stage: port \"in\" -> port \"out\", weight preserved",
+        vec![OptSpec::int("work_ms", 0, "simulated per-item work (milliseconds)")],
+        |o| {
+            let work_ms = o.u64("work_ms")?;
+            Ok(Box::new(move |_rank: usize| -> crate::worker::LogicFactory {
+                Box::new(move |_ctx: &WorkerCtx| {
+                    Ok(Box::new(RelayLogic { work_ms }) as Box<dyn WorkerLogic>)
+                })
+            }))
+        },
+    )?;
+    reg.register_stage(
+        "sink",
+        "generic terminal stage: drains port \"in\", reports item count + load",
+        Vec::new(),
+        |_o| {
+            Ok(Box::new(move |_rank: usize| -> crate::worker::LogicFactory {
+                Box::new(move |_ctx: &WorkerCtx| Ok(Box::new(SinkLogic) as Box<dyn WorkerLogic>))
+            }))
+        },
+    )?;
+    reg.register_pump(
+        "forward",
+        "pass-through pump: items move from the consumed to the produced channel unchanged",
+        Vec::new(),
+        |_o| Ok(Box::new(ForwardPump) as Box<dyn PumpLogic>),
+    )?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn opts(pairs: Vec<(&str, Value)>) -> BTreeMap<String, Value> {
+        pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect()
+    }
+
+    #[test]
+    fn builtin_kinds_present() {
+        let reg = StageRegistry::builtin();
+        for k in ["rollout", "infer", "train", "sim", "policy", "relay", "sink"] {
+            assert!(reg.stage_kinds().contains(&k), "missing stage kind {k}");
+        }
+        for k in ["forward", "group_adv"] {
+            assert!(reg.pump_kinds().contains(&k), "missing pump kind {k}");
+        }
+    }
+
+    #[test]
+    fn unknown_kind_lists_registered() {
+        let reg = StageRegistry::builtin();
+        let err = reg.resolve_stage("ghost", &BTreeMap::new()).unwrap_err().to_string();
+        assert!(err.contains("unknown stage kind") && err.contains("rollout"), "{err}");
+    }
+
+    #[test]
+    fn schema_validation_paths() {
+        let reg = StageRegistry::builtin();
+        // Unknown option key.
+        let err = reg
+            .resolve_stage("relay", &opts(vec![("wat", Value::Int(1))]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("no option") && err.contains("work_ms"), "{err}");
+        // Type mismatch.
+        let err = reg
+            .resolve_stage("relay", &opts(vec![("work_ms", Value::Str("x".into()))]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("expects a integer") || err.contains("expects a"), "{err}");
+        // Defaults fill in.
+        reg.resolve_stage("relay", &BTreeMap::new()).unwrap();
+        // Required option missing (group_adv.group_size).
+        let err = reg.resolve_pump("group_adv", &BTreeMap::new()).unwrap_err().to_string();
+        assert!(err.contains("required") && err.contains("group_size"), "{err}");
+    }
+
+    #[test]
+    fn float_options_accept_ints() {
+        let reg = StageRegistry::builtin();
+        reg.resolve_stage("rollout", &opts(vec![("temperature", Value::Int(1))])).unwrap();
+    }
+
+    #[test]
+    fn user_registration_and_duplicates() {
+        let mut reg = StageRegistry::new();
+        reg.register_stage("mine", "h", Vec::new(), |_o| {
+            Ok(Box::new(move |_rank: usize| -> crate::worker::LogicFactory {
+                Box::new(move |_ctx: &WorkerCtx| Ok(Box::new(SinkLogic) as Box<dyn WorkerLogic>))
+            }))
+        })
+        .unwrap();
+        let err = reg
+            .register_stage("mine", "h", Vec::new(), |_o| bail!("never built"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("already registered"), "{err}");
+        reg.resolve_stage("mine", &BTreeMap::new()).unwrap();
+    }
+
+    #[test]
+    fn forward_pump_passes_through() {
+        let reg = StageRegistry::builtin();
+        let mut p = reg.resolve_pump("forward", &BTreeMap::new()).unwrap();
+        let out = p
+            .push(Item { payload: Payload::new().set_meta("v", 7i64), weight: 3.0 })
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].0.meta_i64("v"), Some(7));
+        assert_eq!(out[0].1, 3.0);
+        assert!(p.flush().unwrap().is_empty());
+    }
+}

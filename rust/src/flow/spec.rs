@@ -41,6 +41,15 @@ pub enum RankShape {
     Single,
 }
 
+impl RankShape {
+    pub fn name(self) -> &'static str {
+        match self {
+            RankShape::PerDevice => "per_device",
+            RankShape::Single => "single",
+        }
+    }
+}
+
 /// How many devices a stage wants under spatial placements.
 #[derive(Debug, Clone, Copy)]
 pub struct DeviceDemand {
@@ -132,6 +141,15 @@ pub struct EdgeSpec {
     pub discipline: Dequeue,
     /// Consumer-side micro-batch granularity (elastic pipelining unit).
     pub granularity: usize,
+    /// Declared granularity options (typically the model's artifact batch
+    /// variants). When a `Plan` or resize offer suggests a different
+    /// granularity, the driver snaps the hint to the **nearest declared
+    /// option** and records the adjustment on the `FlowReport`.
+    pub granularity_options: Vec<usize>,
+    /// Optional channel bound: producers into this edge block (or see
+    /// `TryPut::Full` from the non-blocking senders) once this many items
+    /// are queued. `None` = unbounded.
+    pub capacity: Option<usize>,
 }
 
 /// Builder for one typed edge.
@@ -146,6 +164,8 @@ impl Edge {
             consumer: None,
             discipline: Dequeue::Fifo,
             granularity: 1,
+            granularity_options: Vec::new(),
+            capacity: None,
         })
     }
 
@@ -209,6 +229,24 @@ impl Edge {
     /// Consumer micro-batch size (the scheduler's granularity knob).
     pub fn granularity(mut self, g: usize) -> Edge {
         self.0.granularity = g.max(1);
+        self
+    }
+
+    /// Declared granularity options for re-chunking: a scheduler hint that
+    /// disagrees with [`Edge::granularity`] is snapped to the nearest of
+    /// these (sorted, deduplicated; zeroes dropped).
+    pub fn granularity_options(mut self, mut opts: Vec<usize>) -> Edge {
+        opts.retain(|&g| g > 0);
+        opts.sort_unstable();
+        opts.dedup();
+        self.0.granularity_options = opts;
+        self
+    }
+
+    /// Bound the edge's channel to `cap` queued items (backpressure; pairs
+    /// with the non-blocking `try_send*` port methods).
+    pub fn capacity(mut self, cap: usize) -> Edge {
+        self.0.capacity = if cap == 0 { None } else { Some(cap) };
         self
     }
 }
@@ -282,6 +320,84 @@ impl FlowSpec {
     /// Effective flow-order priority of stage `idx`.
     pub fn stage_priority(&self, idx: usize) -> u64 {
         self.stages[idx].priority.unwrap_or(idx as u64)
+    }
+
+    /// Canonical topology signature: everything the spec *declares* —
+    /// stages (shape, demand, priority), edges (endpoints, discipline,
+    /// granularity + options, capacity), pumps, and `call_args` metadata —
+    /// as a comparable [`Value`] tree. Logic factories are opaque and
+    /// excluded. Two specs with equal signatures wire identically, which
+    /// is the round-trip contract between flow **manifests** and the
+    /// builder API (asserted in `tests/flow_manifest.rs`).
+    pub fn signature(&self) -> Value {
+        let ep = |e: &Option<EndpointSpec>| -> Value {
+            match e {
+                Some(EndpointSpec::Stage { stage, method, port }) => {
+                    Value::Str(format!("{stage}.{method}@{port}"))
+                }
+                Some(EndpointSpec::Driver) => Value::Str("driver".to_string()),
+                None => Value::Str("none".to_string()),
+            }
+        };
+        let mut v = Value::obj();
+        v.set("flow", self.name.as_str());
+        let stages: Vec<Value> = self
+            .stages
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                let mut e = Value::obj();
+                e.set("name", s.name.as_str())
+                    .set("shape", s.shape.name())
+                    .set("weight", s.demand.weight)
+                    .set("priority", self.stage_priority(i));
+                if let Some(d) = s.demand.explicit {
+                    e.set("devices", d);
+                }
+                e
+            })
+            .collect();
+        v.set("stages", Value::Arr(stages));
+        let edges: Vec<Value> = self
+            .edges
+            .iter()
+            .map(|e| {
+                let mut o = Value::obj();
+                o.set("channel", e.channel.as_str())
+                    .set("from", ep(&e.producer))
+                    .set("to", ep(&e.consumer))
+                    .set("discipline", e.discipline.name())
+                    .set("granularity", e.granularity)
+                    .set(
+                        "granularity_options",
+                        Value::Arr(e.granularity_options.iter().map(|&g| Value::Int(g as i64)).collect()),
+                    );
+                if let Some(cap) = e.capacity {
+                    o.set("capacity", cap);
+                }
+                o
+            })
+            .collect();
+        v.set("edges", Value::Arr(edges));
+        let pumps: Vec<Value> = self
+            .pumps
+            .iter()
+            .map(|(from, to)| Value::Str(format!("{from}->{to}")))
+            .collect();
+        v.set("pumps", Value::Arr(pumps));
+        let calls: Vec<Value> = self
+            .call_args
+            .iter()
+            .map(|(stage, method, payload)| {
+                let mut o = Value::obj();
+                o.set("stage", stage.as_str())
+                    .set("method", method.as_str())
+                    .set("meta", payload.meta.clone());
+                o
+            })
+            .collect();
+        v.set("calls", Value::Arr(calls));
+        v
     }
 
     /// Validate the declaration and derive its dataflow graph.
@@ -367,6 +483,20 @@ impl FlowSpec {
                     self.name,
                     e.channel
                 );
+            }
+            if let Some(cap) = e.capacity {
+                // A consumer waiting for a granularity-sized batch that can
+                // never fit the bound would deadlock against blocked
+                // producers; reject the combination up front.
+                let need = e.granularity.max(e.granularity_options.iter().copied().max().unwrap_or(0));
+                if cap < need {
+                    bail!(
+                        "flow {:?}: channel {:?} capacity {cap} is below its \
+                         granularity (options) of {need} — batch dequeues could never fill",
+                        self.name,
+                        e.channel
+                    );
+                }
             }
         }
 
@@ -539,6 +669,58 @@ mod tests {
             .stage(nop("a"))
             .edge(Edge::new("x").produced_by_driver().consumed_by_driver());
         assert!(spec.validate().is_err());
+    }
+
+    #[test]
+    fn granularity_options_and_capacity_builders() {
+        let spec = FlowSpec::new("t")
+            .stage(nop("a"))
+            .edge(
+                Edge::new("x")
+                    .produced_by_driver()
+                    .consumed_by("a", "m")
+                    .granularity(8)
+                    .granularity_options(vec![16, 4, 0, 8, 8])
+                    .capacity(64),
+            );
+        assert_eq!(spec.edges[0].granularity_options, vec![4, 8, 16], "sorted, deduped, no 0");
+        assert_eq!(spec.edges[0].capacity, Some(64));
+        spec.validate().unwrap();
+
+        // Capacity below the largest batch dequeue could never fill.
+        let spec = FlowSpec::new("t").stage(nop("a")).edge(
+            Edge::new("x")
+                .produced_by_driver()
+                .consumed_by("a", "m")
+                .granularity(8)
+                .capacity(4),
+        );
+        let err = spec.validate().unwrap_err().to_string();
+        assert!(err.contains("capacity"), "{err}");
+    }
+
+    #[test]
+    fn signature_is_stable_and_factory_independent() {
+        let mk = |name: &str| {
+            FlowSpec::new("sig")
+                .stage(nop(name).weight(2.0).single_rank())
+                .stage(nop("b"))
+                .edge(Edge::new("x").produced_by_driver().consumed_by(name, "m").granularity(4))
+                .edge(
+                    Edge::new("y")
+                        .produced_at(name, "m", "out")
+                        .consumed_by("b", "n")
+                        .weighted()
+                        .granularity_options(vec![2, 4]),
+                )
+                .pump("x", "x")
+        };
+        // Identical declarations (with distinct factory closures) sign equal.
+        assert_eq!(mk("a").signature(), mk("a").signature());
+        assert_ne!(mk("a").signature(), mk("z").signature());
+        let sig = mk("a").signature();
+        assert_eq!(sig.get_path("flow").unwrap().as_str(), Some("sig"));
+        assert_eq!(sig.get_path("stages").unwrap().as_arr().unwrap().len(), 2);
     }
 
     #[test]

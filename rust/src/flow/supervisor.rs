@@ -302,6 +302,7 @@ impl FlowSupervisor {
                 // Shareable flows always lock, so a later overlapping
                 // admission needs no relaunch of this one.
                 shared_window: req.shareable,
+                ..Default::default()
             },
         })
     }
@@ -437,6 +438,13 @@ impl FlowSupervisor {
             // so a later overlapping admission never needs this flow to
             // relaunch first.
             shared_window: entry.shareable,
+            // Re-chunk hint: the wildcard entry makes every stage of the
+            // relaunched flow snap its edges to the offer's granularity
+            // (nearest declared option per edge).
+            rechunk: offer
+                .granularity
+                .map(|g| HashMap::from([("*".to_string(), g)]))
+                .unwrap_or_default(),
         })
     }
 

@@ -184,3 +184,32 @@ impl WorkerLogic for InferWorker {
         }
     }
 }
+
+/// Register the `"infer"` stage kind with a flow `StageRegistry`: the
+/// log-prob recompute stage (port `"in"` → port `"out"`).
+pub fn register(reg: &mut crate::flow::StageRegistry) -> Result<()> {
+    use crate::flow::registry::OptSpec;
+    reg.register_stage(
+        "infer",
+        "log-prob recompute stage: consumes response items from port \"in\", forwards \
+         them with `logp_old` on port \"out\"",
+        vec![
+            OptSpec::str("artifacts_dir", "artifacts", "artifact bundle directory"),
+            OptSpec::str("model", "tiny", "model name in the artifact manifest"),
+            OptSpec::boolean("double_forward", false, "baseline: unfused double forward"),
+        ],
+        |o| {
+            let cfg = InferCfg {
+                artifacts_dir: o.str("artifacts_dir")?,
+                model: o.str("model")?,
+                double_forward: o.flag("double_forward")?,
+            };
+            Ok(Box::new(move |_rank: usize| -> crate::worker::LogicFactory {
+                let c = cfg.clone();
+                Box::new(move |_ctx: &WorkerCtx| {
+                    Ok(Box::new(InferWorker::new(c)) as Box<dyn WorkerLogic>)
+                })
+            }))
+        },
+    )
+}

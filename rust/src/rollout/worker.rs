@@ -214,3 +214,40 @@ impl WorkerLogic for RolloutWorker {
         }
     }
 }
+
+/// Register the `"rollout"` stage kind with a flow [`StageRegistry`]:
+/// manifests declare `kind = "rollout"` plus these options and get a
+/// [`RolloutWorker`] per rank.
+pub fn register(reg: &mut crate::flow::StageRegistry) -> anyhow::Result<()> {
+    use crate::flow::registry::OptSpec;
+    reg.register_stage(
+        "rollout",
+        "token-generation stage (RolloutEngine): streams prompt items from port \"in\" \
+         to scored response items on port \"out\"",
+        vec![
+            OptSpec::str("artifacts_dir", "artifacts", "artifact bundle directory"),
+            OptSpec::str("model", "tiny", "model name in the artifact manifest"),
+            OptSpec::float("temperature", 1.0, "sampling temperature"),
+            OptSpec::int("max_new", 48, "max generated tokens per response"),
+            OptSpec::int("max_batch", 0, "decode-batch cap (0 = artifact default)"),
+        ],
+        |o| {
+            let cfg = RolloutCfg {
+                artifacts_dir: o.str("artifacts_dir")?,
+                model: o.str("model")?,
+                temperature: o.f32("temperature")?,
+                max_new: o.usize("max_new")?,
+                max_batch: match o.usize("max_batch")? {
+                    0 => None,
+                    n => Some(n),
+                },
+            };
+            Ok(Box::new(move |_rank: usize| -> crate::worker::LogicFactory {
+                let c = cfg.clone();
+                Box::new(move |_ctx: &WorkerCtx| {
+                    Ok(Box::new(RolloutWorker::new(c)) as Box<dyn WorkerLogic>)
+                })
+            }))
+        },
+    )
+}

@@ -90,3 +90,93 @@ mod tests {
         assert!(mean.abs() < 1e-5 && (var - 1.0).abs() < 1e-3);
     }
 }
+
+/// Register the `"group_adv"` pump kind with a flow `StageRegistry`: the
+/// driver-side GRPO aggregation. Items are buffered per prompt (meta
+/// `key`, default `"prompt_id"`); once a group of `group_size` completes,
+/// rewards (meta `"reward"`) are [`group_normalize`]d into per-item
+/// `"adv"` metadata and the whole group is emitted in one batch, weighted
+/// by meta `weight_key` (default `"gen_len"`). Incomplete groups flush
+/// with zero advantage when the source channel closes — the same driver
+/// pump `workflow::reasoning::run_iteration` hand-codes.
+pub fn register_pump(reg: &mut crate::flow::StageRegistry) -> anyhow::Result<()> {
+    use crate::flow::registry::{OptKind, OptSpec};
+    reg.register_pump(
+        "group_adv",
+        "per-prompt GRPO advantage normalization: buffer responses by prompt, normalize \
+         rewards within each complete group, forward with `adv` metadata",
+        vec![
+            OptSpec::required("group_size", OptKind::Int, "responses per prompt group"),
+            OptSpec::str("key", "prompt_id", "meta key grouping responses"),
+            OptSpec::str("weight_key", "gen_len", "meta key used as the emitted item weight"),
+        ],
+        |o| {
+            let group_size = o.usize("group_size")?.max(1);
+            let key = o.str("key")?;
+            let weight_key = o.str("weight_key")?;
+            Ok(Box::new(GroupAdvPump {
+                group_size,
+                key,
+                weight_key,
+                pending: std::collections::HashMap::new(),
+            }) as Box<dyn crate::flow::registry::PumpLogic>)
+        },
+    )
+}
+
+/// State of the `"group_adv"` pump (see [`register_pump`]).
+struct GroupAdvPump {
+    group_size: usize,
+    key: String,
+    weight_key: String,
+    pending: std::collections::HashMap<i64, Vec<crate::data::Payload>>,
+}
+
+impl GroupAdvPump {
+    fn emit(&self, group: Vec<crate::data::Payload>) -> Vec<(crate::data::Payload, f64)> {
+        let rewards: Vec<f32> =
+            group.iter().map(|g| g.meta_f64("reward").unwrap_or(0.0) as f32).collect();
+        let advs = group_normalize(&rewards);
+        group
+            .into_iter()
+            .zip(advs)
+            .map(|(mut g, adv)| {
+                g.meta.set("adv", adv as f64);
+                let w = g.meta_i64(&self.weight_key).unwrap_or(1).max(1) as f64;
+                (g, w)
+            })
+            .collect()
+    }
+}
+
+impl crate::flow::registry::PumpLogic for GroupAdvPump {
+    fn push(
+        &mut self,
+        item: crate::channel::Item,
+    ) -> anyhow::Result<Vec<(crate::data::Payload, f64)>> {
+        let pid = item.payload.meta_i64(&self.key).unwrap_or(-1);
+        let group = self.pending.entry(pid).or_default();
+        group.push(item.payload);
+        if group.len() >= self.group_size {
+            let group = self.pending.remove(&pid).expect("entry just filled");
+            return Ok(self.emit(group));
+        }
+        Ok(Vec::new())
+    }
+
+    fn flush(&mut self) -> anyhow::Result<Vec<(crate::data::Payload, f64)>> {
+        // Incomplete groups (shouldn't happen in a healthy run) get zero
+        // advantage rather than being dropped.
+        let mut out = Vec::new();
+        let mut pids: Vec<i64> = self.pending.keys().copied().collect();
+        pids.sort_unstable();
+        for pid in pids {
+            let group = self.pending.remove(&pid).expect("key just listed");
+            for mut g in group {
+                g.meta.set("adv", 0.0);
+                out.push((g, 1.0));
+            }
+        }
+        Ok(out)
+    }
+}

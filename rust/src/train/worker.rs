@@ -391,3 +391,34 @@ fn stats_payload(s: &TrainStats, step: i32, version: u64) -> Payload {
         .set_meta("step", step as i64)
         .set_meta("version", version)
 }
+
+/// Register the `"train"` stage kind with a flow `StageRegistry`: the
+/// GRPO/PPO update stage streaming micro-batches from port `"in"`.
+pub fn register(reg: &mut crate::flow::StageRegistry) -> Result<()> {
+    use crate::flow::registry::OptSpec;
+    reg.register_stage(
+        "train",
+        "policy-update stage: consumes advantage-tagged response items from port \"in\" \
+         and applies GRPO/PPO steps",
+        vec![
+            OptSpec::str("artifacts_dir", "artifacts", "artifact bundle directory"),
+            OptSpec::str("model", "tiny", "model name in the artifact manifest"),
+            OptSpec::float("lr", 3e-4, "learning rate"),
+            OptSpec::float("ratio_early_stop", 4.0, "skip micro-batches above this ratio"),
+        ],
+        |o| {
+            let cfg = TrainCfg {
+                artifacts_dir: o.str("artifacts_dir")?,
+                model: o.str("model")?,
+                lr: o.f32("lr")?,
+                ratio_early_stop: o.f32("ratio_early_stop")?,
+            };
+            Ok(Box::new(move |_rank: usize| -> crate::worker::LogicFactory {
+                let c = cfg.clone();
+                Box::new(move |_ctx: &WorkerCtx| {
+                    Ok(Box::new(TrainWorker::new(c)) as Box<dyn WorkerLogic>)
+                })
+            }))
+        },
+    )
+}

@@ -93,7 +93,11 @@ impl EmbodiedReport {
 }
 
 /// Declare the cyclic sim ⇄ policy flow.
-fn embodied_spec(cfg: &RunConfig, opts: &EmbodiedOpts, kind: EnvKind) -> FlowSpec {
+///
+/// Public so flow manifests can be round-tripped against the canonical
+/// topology — `configs/embodied_ppo.flow.toml` must produce exactly this
+/// spec's signature.
+pub fn embodied_spec(cfg: &RunConfig, opts: &EmbodiedOpts, kind: EnvKind) -> FlowSpec {
     let sim_cfg = SimCfg {
         num_envs: cfg.embodied.num_envs,
         horizon: cfg.embodied.horizon as u16,
@@ -160,6 +164,21 @@ pub fn run_embodied_shared(
     launch: LaunchOpts,
 ) -> Result<EmbodiedReport> {
     let kind = EnvKind::parse(&cfg.embodied.env_kind);
+    let spec = embodied_spec(cfg, opts, kind);
+    run_embodied_with_spec(cfg, opts, services, launch, spec)
+}
+
+/// Run embodied PPO over a **caller-supplied spec** — the entry point
+/// flow manifests use. The spec must keep the canonical names: stages
+/// `sim`/`policy` with methods `serve_rollout`/`collect_and_train`.
+pub fn run_embodied_with_spec(
+    cfg: &RunConfig,
+    opts: &EmbodiedOpts,
+    services: &Services,
+    launch: LaunchOpts,
+    spec: FlowSpec,
+) -> Result<EmbodiedReport> {
+    let kind = EnvKind::parse(&cfg.embodied.env_kind);
 
     // Auto: heuristic from the paper's own findings — CPU-bound sims favor
     // collocated, GPU sims favor hybrid. (Algorithm-1 auto planning skips
@@ -175,7 +194,6 @@ pub fn run_embodied_shared(
         m => m,
     };
 
-    let spec = embodied_spec(cfg, opts, kind);
     let driver = FlowDriver::launch_with(spec, services, mode, launch)?;
     // Cyclic stages are never locked, so both pre-load and stay resident.
     driver.onload_pipelined()?;

@@ -16,5 +16,10 @@
 pub mod embodied;
 pub mod reasoning;
 
-pub use embodied::{run_embodied, run_embodied_shared, EmbodiedOpts, EmbodiedReport};
-pub use reasoning::{run_grpo, run_grpo_shared, GrpoReport, IterStats, RunnerOpts};
+pub use embodied::{
+    embodied_spec, run_embodied, run_embodied_shared, run_embodied_with_spec, EmbodiedOpts,
+    EmbodiedReport,
+};
+pub use reasoning::{
+    grpo_spec, run_grpo, run_grpo_shared, run_grpo_with_spec, GrpoReport, IterStats, RunnerOpts,
+};

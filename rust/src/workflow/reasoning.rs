@@ -149,13 +149,30 @@ fn gen_share(cfg: &RunConfig, n: usize) -> usize {
     }
 }
 
+/// Decode-batch variants compiled into every artifact bundle
+/// (`python/compile/aot.py` `GEN_BATCHES`) — the declared re-chunk
+/// options on the generation/inference edges. A scheduler hint snaps to
+/// the nearest of these.
+pub const GEN_GRANULARITIES: [usize; 4] = [4, 8, 16, 32];
+
+/// Train micro-batch variants (`aot.py` `TRAIN_MICRO_BATCHES`) — the
+/// declared re-chunk options on the training edge.
+pub const TRAIN_GRANULARITIES: [usize; 2] = [4, 8];
+
 /// Declare the GRPO macro flow: three stages, four typed edges, one
 /// driver pump (the per-prompt advantage aggregation). `n_devices` is the
 /// flow's device window width (the whole cluster when run single-flow).
-fn grpo_spec(cfg: &RunConfig, opts: &RunnerOpts, gran: usize, n_devices: usize) -> Result<FlowSpec> {
-    let manifest = Manifest::load(&cfg.artifacts_dir)?;
-    let model = manifest.model(&cfg.model)?;
-    let full_batch = model.granularities("decode").into_iter().max().unwrap_or(32);
+///
+/// Public (and artifact-independent) so flow manifests can be
+/// round-tripped against the canonical topology — `configs/grpo.flow.toml`
+/// must produce exactly this spec's signature.
+pub fn grpo_spec(
+    cfg: &RunConfig,
+    opts: &RunnerOpts,
+    gran: usize,
+    n_devices: usize,
+) -> Result<FlowSpec> {
+    let full_batch = GEN_GRANULARITIES.into_iter().max().unwrap_or(32);
     let rollout_cfg = RolloutCfg {
         artifacts_dir: cfg.artifacts_dir.clone(),
         model: cfg.model.clone(),
@@ -199,13 +216,20 @@ fn grpo_spec(cfg: &RunConfig, opts: &RunnerOpts, gran: usize, n_devices: usize) 
             })
             .single_rank(),
         )
-        .edge(Edge::new("prompts").produced_by_driver().consumed_by("rollout", "generate_stream").granularity(gran))
+        .edge(
+            Edge::new("prompts")
+                .produced_by_driver()
+                .consumed_by("rollout", "generate_stream")
+                .granularity(gran)
+                .granularity_options(GEN_GRANULARITIES.to_vec()),
+        )
         .edge(
             Edge::new("rollout")
                 .produced_by("rollout", "generate_stream")
                 .consumed_by("infer", "logprob_stream")
                 .weighted()
-                .granularity(gran),
+                .granularity(gran)
+                .granularity_options(GEN_GRANULARITIES.to_vec()),
         )
         .edge(Edge::new("scored").produced_by("infer", "logprob_stream").consumed_by_driver().weighted())
         .edge(
@@ -213,7 +237,8 @@ fn grpo_spec(cfg: &RunConfig, opts: &RunnerOpts, gran: usize, n_devices: usize) 
                 .produced_by_driver()
                 .consumed_by("train", "train_stream")
                 .weighted()
-                .granularity(cfg.train.micro_batch),
+                .granularity(cfg.train.micro_batch)
+                .granularity_options(TRAIN_GRANULARITIES.to_vec()),
         )
         .pump("scored", "train"))
 }
@@ -237,16 +262,37 @@ pub fn run_grpo_shared(
 ) -> Result<GrpoReport> {
     let n_devices = launch.window.map(|(_, l)| l).unwrap_or(services.cluster.num_devices());
     let gran = if cfg.sched.granularity > 0 { cfg.sched.granularity } else { 8 };
+    let spec = grpo_spec(cfg, opts, gran, n_devices)?;
+    run_grpo_with_spec(cfg, opts, services, launch, spec)
+}
 
-    // Resolve Auto via profiling + Algorithm 1 over the declared graph.
+/// Run GRPO over a **caller-supplied spec** — the entry point flow
+/// manifests use (`configs/grpo.flow.toml` → `FlowManifest::to_spec` →
+/// here). The spec must keep the canonical GRPO names: stages
+/// `rollout`/`infer`/`train` and channels `prompts`/`scored`/`train`
+/// (the driver-side iteration logic addresses them by name).
+pub fn run_grpo_with_spec(
+    cfg: &RunConfig,
+    opts: &RunnerOpts,
+    services: &Services,
+    mut launch: LaunchOpts,
+    spec: FlowSpec,
+) -> Result<GrpoReport> {
+    let n_devices = launch.window.map(|(_, l)| l).unwrap_or(services.cluster.num_devices());
+
+    // Resolve Auto via profiling + Algorithm 1 over the declared graph;
+    // the plan's granularities ride into the launch as re-chunk hints
+    // (snapped per edge to the declared options).
     let (mode, plan_rendered) = match cfg.sched.mode {
         PlacementMode::Auto => {
-            let (mode, rendered) = auto_schedule(cfg, opts, gran, n_devices)?;
+            let (mode, rendered, hints) = auto_schedule(cfg, opts, n_devices, &spec)?;
+            for (stage, g) in hints {
+                launch.rechunk.entry(stage).or_insert(g);
+            }
             (mode, Some(rendered))
         }
         m => (m, None),
     };
-    let spec = grpo_spec(cfg, opts, gran, n_devices)?;
     let driver = FlowDriver::launch_with(spec, services, mode, launch)?;
 
     // Pre-load stages that keep device residency in pipelined modes.
@@ -331,6 +377,12 @@ fn run_iteration(
 ) -> Result<(usize, f64, f64, f64, usize, usize)> {
     let mut run = driver.begin()?;
 
+    // Kick off the streams first (async; locks order execution if
+    // collocated). Starting before the feed matters on bounded edges: a
+    // `capacity` smaller than the prompt feed would otherwise park the
+    // driver with no consumer alive to drain the channel.
+    run.start()?;
+
     // Feed prompts: batch × group_size response slots, in feed_batch-sized
     // chunks so each chunk pays one channel-lock acquisition (put_batch).
     let tasks = taskgen.batch(cfg.rollout.batch);
@@ -353,9 +405,6 @@ fn run_iteration(
     }
     run.send_batch("prompts", chunk)?;
     run.feed_done("prompts")?;
-
-    // Kick off the streams (async; locks order execution if collocated).
-    run.start()?;
 
     // Driver pump (declared as `pump("scored", "train")`): group responses
     // per prompt, normalize advantages when a group completes, forward the
@@ -520,9 +569,9 @@ fn sync_weights(driver: &FlowDriver) -> Result<()> {
 fn auto_schedule(
     cfg: &RunConfig,
     opts: &RunnerOpts,
-    gran: usize,
     n_devices: usize,
-) -> Result<(PlacementMode, String)> {
+    spec: &FlowSpec,
+) -> Result<(PlacementMode, String, HashMap<String, usize>)> {
     // Profile with a reduced workload on a fresh mini-cluster.
     let mut pcfg = cfg.clone();
     pcfg.iters = cfg.sched.profile_iters.max(1);
@@ -558,9 +607,8 @@ fn auto_schedule(
         workload.insert(w.to_string(), cfg.responses_per_iter());
         granularities.insert(w.to_string(), grans.clone());
     }
-    let spec = grpo_spec(cfg, opts, gran, n_devices)?;
     FlowDriver::plan_auto(
-        &spec,
+        spec,
         n_devices,
         cfg.cluster.device_mem,
         &db,

@@ -1,0 +1,461 @@
+//! Integration tests for serialized flow manifests: the golden round-trip
+//! (manifest → registry-resolved `FlowSpec` ≡ builder-declared spec, by
+//! topology signature), every validation error path, re-chunk hint
+//! application, and a runtime smoke test driving manifest-built specs
+//! through the `FlowDriver`.
+
+use rlinf::cluster::Cluster;
+use rlinf::config::{ClusterConfig, PlacementMode};
+use rlinf::data::Payload;
+use rlinf::embodied::EnvKind;
+use rlinf::flow::manifest::{load_any, FlowManifest, LoadedManifest};
+use rlinf::flow::{Edge, FlowDriver, FlowSpec, LaunchOpts, Rechunk, Stage, StageRegistry};
+use rlinf::worker::group::Services;
+use rlinf::worker::{WorkerCtx, WorkerLogic};
+use rlinf::workflow::embodied::{embodied_spec, EmbodiedOpts};
+use rlinf::workflow::reasoning::{grpo_spec, run_grpo_with_spec, RunnerOpts};
+
+fn repo_path(rel: &str) -> String {
+    format!("{}/../{rel}", env!("CARGO_MANIFEST_DIR"))
+}
+
+fn services(devices: usize) -> Services {
+    Services::new(Cluster::new(ClusterConfig {
+        nodes: 1,
+        devices_per_node: devices,
+        ..Default::default()
+    }))
+}
+
+fn artifacts_present() -> bool {
+    std::path::Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/manifest.json")).exists()
+}
+
+/// Assert two specs declare the same topology, with a readable diff.
+fn assert_same_signature(a: &FlowSpec, b: &FlowSpec) {
+    let (sa, sb) = (a.signature(), b.signature());
+    assert_eq!(
+        sa.to_json_pretty(),
+        sb.to_json_pretty(),
+        "manifest and builder specs declare different topologies"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Shipped manifests round-trip to the builder specs they replace.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn shipped_grpo_manifest_matches_builder_spec() {
+    let m = FlowManifest::load(&repo_path("configs/grpo.flow.toml")).unwrap();
+    assert_eq!(m.workload, "grpo");
+    let reg = StageRegistry::builtin();
+    let manifest_spec = m.to_spec(&reg).unwrap();
+    let cfg = m.run_config().unwrap();
+    assert_eq!(cfg.sched.mode, PlacementMode::Collocated, "[flow].mode overrides sched");
+
+    let gran = if cfg.sched.granularity > 0 { cfg.sched.granularity } else { 8 };
+    let builder =
+        grpo_spec(&cfg, &RunnerOpts::default(), gran, cfg.cluster.total_devices()).unwrap();
+    assert_same_signature(&manifest_spec, &builder);
+
+    // Both validate to the canonical 3-stage graph with the pump bridge.
+    let info = manifest_spec.validate().unwrap();
+    assert_eq!(info.graph.n(), 3);
+    assert_eq!(info.graph.edges.len(), 2, "rollout→infer plus pump-bridged infer→train");
+    assert!(info.cyclic.is_empty());
+}
+
+#[test]
+fn shipped_embodied_manifest_matches_builder_spec() {
+    let m = FlowManifest::load(&repo_path("configs/embodied_ppo.flow.toml")).unwrap();
+    assert_eq!(m.workload, "embodied");
+    let reg = StageRegistry::builtin();
+    let manifest_spec = m.to_spec(&reg).unwrap();
+    let cfg = m.run_config().unwrap();
+
+    let builder =
+        embodied_spec(&cfg, &EmbodiedOpts::default(), EnvKind::parse(&cfg.embodied.env_kind));
+    assert_same_signature(&manifest_spec, &builder);
+
+    // The obs/actions cycle condenses to one schedulable node.
+    let info = manifest_spec.validate().unwrap();
+    assert_eq!(info.graph.n(), 2);
+    assert_eq!(info.condensed.n(), 1);
+    assert!(info.cyclic.contains("sim") && info.cyclic.contains("policy"));
+}
+
+#[test]
+fn shipped_multi_flow_manifest_resolves_both_topologies() {
+    let loaded = load_any(&repo_path("configs/multi_flow.flow.toml")).unwrap();
+    let mm = match loaded {
+        LoadedManifest::Multi(mm) => mm,
+        LoadedManifest::Flow(_) => panic!("[[flow]] tables must load as a multi manifest"),
+    };
+    let cfg = mm.run_config().unwrap();
+    assert_eq!(cfg.cluster.total_devices(), 6);
+    assert_eq!(cfg.supervisor.max_flows, 2);
+
+    let reg = StageRegistry::builtin();
+    let resolved = mm.resolve().unwrap();
+    assert_eq!(resolved.len(), 2);
+
+    let (grpo, grpo_req) = &resolved[0];
+    assert_eq!(grpo_req.name, "grpo");
+    assert_eq!((grpo_req.devices, grpo_req.slot), (4, Some(0)));
+    assert!(grpo_req.shareable);
+    assert_eq!(grpo_req.granularities, vec![4, 8, 16, 32]);
+    let gcfg = grpo.run_config().unwrap();
+    let gran = if gcfg.sched.granularity > 0 { gcfg.sched.granularity } else { 8 };
+    assert_same_signature(
+        &grpo.to_spec(&reg).unwrap(),
+        &grpo_spec(&gcfg, &RunnerOpts::default(), gran, gcfg.cluster.total_devices()).unwrap(),
+    );
+
+    let (emb, emb_req) = &resolved[1];
+    assert_eq!(emb_req.name, "embodied-ppo");
+    assert_eq!((emb_req.devices, emb_req.slot), (2, Some(1)));
+    assert!(!emb_req.shareable);
+    let ecfg = emb.run_config().unwrap();
+    assert_same_signature(
+        &emb.to_spec(&reg).unwrap(),
+        &embodied_spec(&ecfg, &EmbodiedOpts::default(), EnvKind::parse(&ecfg.embodied.env_kind)),
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Golden round-trip on a synthetic manifest (no artifacts involved).
+// ---------------------------------------------------------------------------
+
+struct Nop;
+impl WorkerLogic for Nop {
+    fn call(&mut self, _ctx: &WorkerCtx, _m: &str, arg: Payload) -> anyhow::Result<Payload> {
+        Ok(arg)
+    }
+}
+
+fn nop(name: &str) -> Stage {
+    Stage::new(name, |_| Box::new(|_: &WorkerCtx| Ok(Box::new(Nop) as Box<dyn WorkerLogic>)))
+}
+
+const SYNTHETIC: &str = r#"
+[flow]
+name = "syn"
+
+[[stage]]
+name = "work"
+kind = "relay"
+weight = 2.0
+devices = 2
+
+[[stage]]
+name = "tail"
+kind = "sink"
+shape = "single"
+
+[[edge]]
+channel = "src"
+from = "driver"
+to = "work.run"
+granularity = 4
+granularity_options = [2, 4, 8]
+capacity = 64
+feed = 10
+
+[[edge]]
+channel = "mid"
+from = "work.run"
+to = "tail.drain"
+discipline = "balanced"
+
+[[call]]
+stage = "tail"
+method = "drain"
+budget = 7
+"#;
+
+#[test]
+fn synthetic_manifest_round_trips_to_builder_spec() {
+    let m = FlowManifest::parse(SYNTHETIC, "syn.toml").unwrap();
+    let reg = StageRegistry::builtin();
+    let manifest_spec = m.to_spec(&reg).unwrap();
+
+    let builder = FlowSpec::new("syn")
+        .stage(nop("work").weight(2.0).devices(2))
+        .stage(nop("tail").single_rank())
+        .edge(
+            Edge::new("src")
+                .produced_by_driver()
+                .consumed_by("work", "run")
+                .granularity(4)
+                .granularity_options(vec![2, 4, 8])
+                .capacity(64),
+        )
+        .edge(Edge::new("mid").produced_by("work", "run").consumed_by("tail", "drain").balanced())
+        .call_args("tail", "drain", Payload::new().set_meta("budget", 7i64));
+    assert_same_signature(&manifest_spec, &builder);
+}
+
+// ---------------------------------------------------------------------------
+// Validation error paths.
+// ---------------------------------------------------------------------------
+
+fn manifest(text: &str) -> FlowManifest {
+    FlowManifest::parse(text, "err.toml").unwrap()
+}
+
+#[test]
+fn unknown_stage_kind_rejected_with_known_list() {
+    let m = manifest(
+        r#"
+[flow]
+name = "x"
+[[stage]]
+name = "a"
+kind = "warp_drive"
+[[edge]]
+channel = "c"
+from = "driver"
+to = "a.m"
+"#,
+    );
+    let err = format!("{:#}", m.to_spec(&StageRegistry::builtin()).unwrap_err());
+    assert!(err.contains("warp_drive") && err.contains("unknown stage kind"), "{err}");
+    assert!(err.contains("err.toml"), "error names the file: {err}");
+    assert!(err.contains("rollout"), "error lists registered kinds: {err}");
+}
+
+#[test]
+fn bad_option_type_rejected() {
+    let m = manifest(
+        r#"
+[flow]
+name = "x"
+[[stage]]
+name = "a"
+kind = "relay"
+work_ms = "slow"
+[[edge]]
+channel = "c"
+from = "driver"
+to = "a.m"
+"#,
+    );
+    let err = format!("{:#}", m.to_spec(&StageRegistry::builtin()).unwrap_err());
+    assert!(err.contains("work_ms") && err.contains("expects"), "{err}");
+}
+
+#[test]
+fn dangling_edge_rejected_at_lint() {
+    let m = manifest(
+        r#"
+[flow]
+name = "x"
+[[stage]]
+name = "a"
+kind = "relay"
+[[edge]]
+channel = "c"
+from = "a.m"
+to = "driver"
+[[edge]]
+channel = "orphan"
+from = "a.m@tee"
+to = "ghost.m"
+"#,
+    );
+    let err = format!("{:#}", m.lint(&StageRegistry::builtin()).unwrap_err());
+    assert!(err.contains("unknown stage") && err.contains("ghost"), "{err}");
+}
+
+#[test]
+fn duplicate_channel_rejected_at_lint() {
+    let m = manifest(
+        r#"
+[flow]
+name = "x"
+[[stage]]
+name = "a"
+kind = "sink"
+[[edge]]
+channel = "c"
+from = "driver"
+to = "a.m"
+[[edge]]
+channel = "c"
+from = "driver"
+to = "a.m@second"
+"#,
+    );
+    let err = format!("{:#}", m.lint(&StageRegistry::builtin()).unwrap_err());
+    assert!(err.contains("duplicate channel"), "{err}");
+}
+
+#[test]
+fn driver_only_channel_rejected_at_lint() {
+    let m = manifest(
+        r#"
+[flow]
+name = "x"
+[[stage]]
+name = "a"
+kind = "sink"
+[[edge]]
+channel = "c"
+to = "a.m"
+from = "driver"
+[[edge]]
+channel = "d"
+from = "driver"
+to = "driver"
+"#,
+    );
+    let err = format!("{:#}", m.lint(&StageRegistry::builtin()).unwrap_err());
+    assert!(err.contains("never touches a stage"), "{err}");
+}
+
+#[test]
+fn unknown_pump_logic_rejected() {
+    let m = manifest(
+        r#"
+[flow]
+name = "x"
+[[stage]]
+name = "a"
+kind = "relay"
+[[edge]]
+channel = "c"
+from = "a.m"
+to = "driver"
+[[edge]]
+channel = "d"
+from = "driver"
+to = "a.m"
+[[pump]]
+from = "c"
+to = "d"
+logic = "blender"
+"#,
+    );
+    let err = format!("{:#}", m.to_spec(&StageRegistry::builtin()).unwrap_err());
+    assert!(err.contains("unknown pump kind") && err.contains("blender"), "{err}");
+}
+
+// ---------------------------------------------------------------------------
+// Runtime: manifest-built specs drive the FlowDriver.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn synthetic_manifest_runs_through_the_driver() {
+    let m = FlowManifest::parse(SYNTHETIC, "syn.toml").unwrap();
+    let reg = StageRegistry::builtin();
+    let spec = m.to_spec(&reg).unwrap();
+    let svc = services(3);
+    let driver = FlowDriver::launch(spec, &svc, PlacementMode::Disaggregated).unwrap();
+
+    let mut run = driver.begin().unwrap();
+    // The declared capacity landed on the physical run-scoped channel.
+    assert_eq!(svc.channels.get("src@1").unwrap().capacity(), Some(64));
+
+    let items: Vec<(Payload, f64)> =
+        (0..10).map(|i| (Payload::new().set_meta("i", i as i64), 1.0 + i as f64)).collect();
+    run.send_batch("src", items).unwrap();
+    run.feed_done("src").unwrap();
+    run.start().unwrap();
+    let report = run.finish().unwrap();
+
+    let sink = report.outputs("tail", "drain").unwrap();
+    assert_eq!(sink.len(), 1);
+    assert_eq!(sink[0].meta_i64("n"), Some(10), "all items relayed to the sink");
+    let mid = report.edge("mid").unwrap();
+    assert_eq!((mid.put, mid.got, mid.backlog), (10, 10, 0));
+    assert_eq!(mid.discipline, "balanced");
+    assert!(report.rechunks.is_empty(), "no hints, no adjustments");
+}
+
+#[test]
+fn rechunk_hints_snap_to_declared_options_and_are_reported() {
+    let mk = || {
+        FlowSpec::new("rc")
+            .stage(nop("work"))
+            .stage(nop("tail").single_rank())
+            .edge(
+                Edge::new("src")
+                    .produced_by_driver()
+                    .consumed_by("work", "run")
+                    .granularity(8)
+                    .granularity_options(vec![4, 8, 16]),
+            )
+            .edge(Edge::new("mid").produced_by("work", "run").consumed_by("tail", "drain"))
+    };
+    let svc = services(2);
+
+    // Hint 30 on "work" snaps to the nearest declared option, 16.
+    let mut opts = LaunchOpts::default();
+    opts.rechunk.insert("work".to_string(), 30);
+    let driver =
+        FlowDriver::launch_with(mk(), &svc, PlacementMode::Collocated, opts).unwrap();
+    assert_eq!(
+        driver.rechunks(),
+        &[Rechunk {
+            stage: "work".to_string(),
+            channel: "src".to_string(),
+            declared: 8,
+            hint: 30,
+            applied: 16,
+        }]
+    );
+    // The run's report carries the adjustment too.
+    let mut run = driver.begin().unwrap();
+    run.feed_done("src").unwrap();
+    run.start().unwrap();
+    let report = run.finish().unwrap();
+    assert_eq!(report.rechunks.len(), 1);
+    assert_eq!(report.rechunks[0].applied, 16);
+
+    // A wildcard hint applies to stages without their own entry; an edge
+    // with no declared options snaps back to its declared granularity and
+    // still records the (rejected) hint.
+    let mut opts = LaunchOpts::default();
+    opts.rechunk.insert("*".to_string(), 5);
+    let driver =
+        FlowDriver::launch_with(mk(), &svc, PlacementMode::Collocated, opts).unwrap();
+    let rc = driver.rechunks();
+    assert_eq!(rc.len(), 2);
+    let src = rc.iter().find(|r| r.channel == "src").unwrap();
+    assert_eq!(src.applied, 4, "5 snaps to nearest option 4");
+    let mid = rc.iter().find(|r| r.channel == "mid").unwrap();
+    assert_eq!((mid.declared, mid.hint, mid.applied), (1, 5, 1), "no options -> keep declared");
+
+    // A hint equal to the declared granularity records nothing.
+    let mut opts = LaunchOpts::default();
+    opts.rechunk.insert("work".to_string(), 8);
+    let driver =
+        FlowDriver::launch_with(mk(), &svc, PlacementMode::Collocated, opts).unwrap();
+    assert!(driver.rechunks().is_empty());
+}
+
+#[test]
+fn grpo_manifest_runs_end_to_end() {
+    if !artifacts_present() {
+        return;
+    }
+    let m = FlowManifest::load(&repo_path("configs/grpo.flow.toml")).unwrap();
+    let reg = StageRegistry::builtin();
+    let mut cfg = m.run_config().unwrap();
+    cfg.iters = 1;
+    let spec = m.to_spec(&reg).unwrap();
+    let services = Services::new(Cluster::new(cfg.cluster.clone()));
+    let report = run_grpo_with_spec(
+        &cfg,
+        &RunnerOpts::default(),
+        &services,
+        LaunchOpts::default(),
+        spec,
+    )
+    .unwrap();
+    assert_eq!(report.mode, "collocated");
+    assert_eq!(report.iters.len(), 1);
+    assert!(report.iters[0].tokens > 0, "the manifest-built flow generated tokens");
+    assert!(report.iters[0].train_steps + report.iters[0].early_stopped > 0);
+}

@@ -248,7 +248,7 @@ fn windowed_scoped_launch_confines_and_namespaces_the_flow() {
                 scope: Some(scope.to_string()),
                 window: Some(window),
                 priority_base: base,
-                shared_window: false,
+                ..Default::default()
             },
         )
         .unwrap()
@@ -310,6 +310,7 @@ fn shared_window_forces_locks_and_priority_bands() {
             window: None,
             priority_base: 500,
             shared_window: true,
+            ..Default::default()
         },
     )
     .unwrap();
