@@ -21,21 +21,32 @@
 //! driver-produced edge, executes declared `[[pump]]` logic, and drains
 //! the sinks). A file with `[[flow]]` tables references other manifests
 //! and runs them concurrently under a `FlowSupervisor`.
+//!
+//! **Adaptive scheduling:** the manifest's `[profile]` section drives the
+//! live `ProfileStore` lifecycle — `seed = "store.json"` preloads it,
+//! `persist = "store.json"` writes it back after the run. With
+//! `mode = "auto"`, run 1 of a fresh store launches on the graph-shape
+//! heuristic and *measures*; run 2 (seeded from the persisted store)
+//! plans Algorithm 1 from the measured profile. Multi-flow runs admit
+//! through the supervisor's live-profile joint admission and accept
+//! resize offers, so a running flow relaunches over freed devices.
 
 use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 use rlinf::cluster::Cluster;
-use rlinf::config::{loader, RunConfig};
+use rlinf::config::RunConfig;
 use rlinf::data::Payload;
-use rlinf::flow::manifest::{EndpointDecl, FlowManifest, LoadedManifest, MultiFlowManifest};
+use rlinf::flow::manifest::{
+    load_tree, EndpointDecl, FlowManifest, LoadedManifest, MultiFlowManifest, ProfileDecl,
+};
 use rlinf::flow::registry::PumpLogic;
 use rlinf::flow::{FlowDriver, FlowSpec, FlowSupervisor, LaunchOpts, StageRegistry};
 use rlinf::util::cli::Args;
 use rlinf::util::json::Value;
 use rlinf::worker::group::Services;
-use rlinf::workflow::embodied::{run_embodied_with_spec, EmbodiedOpts};
-use rlinf::workflow::reasoning::{run_grpo_with_spec, RunnerOpts};
+use rlinf::workflow::embodied::{run_embodied_elastic, EmbodiedOpts};
+use rlinf::workflow::reasoning::{run_grpo_elastic, RunnerOpts};
 
 fn usage() -> &'static str {
     "usage: flow_run [--check] [--set path=value] <manifest.toml>...\n\
@@ -46,9 +57,11 @@ fn usage() -> &'static str {
 }
 
 fn load_with_overrides(path: &str, sets: Option<&str>) -> Result<LoadedManifest> {
-    let mut tree = loader::load_toml_file(path)?;
+    // `load_tree` expands single-level `include =` references.
+    let mut tree = load_tree(path)?;
     if let Some(spec) = sets {
-        loader::apply_override(&mut tree, spec).with_context(|| format!("--set {spec}"))?;
+        rlinf::config::loader::apply_override(&mut tree, spec)
+            .with_context(|| format!("--set {spec}"))?;
     }
     match tree.get("flow") {
         Some(Value::Arr(_)) => {
@@ -141,62 +154,107 @@ fn check_one(path: &str, sets: Option<&str>, reg: &StageRegistry) -> Result<Stri
     }
 }
 
+/// Resolve a `[profile]` path relative to the manifest file.
+fn manifest_rel(origin: &str, rel: &str) -> String {
+    std::path::Path::new(origin)
+        .parent()
+        .unwrap_or_else(|| std::path::Path::new("."))
+        .join(rel)
+        .to_string_lossy()
+        .to_string()
+}
+
+/// Apply the `[profile]` pre-run lifecycle: alpha override + store seeding
+/// (an absent seed file is a cold start, not an error — the first run
+/// writes it via `persist`).
+fn seed_profile_store(decl: &ProfileDecl, origin: &str, services: &Services) -> Result<()> {
+    if let Some(a) = decl.alpha {
+        services.profiles.set_alpha(a);
+    }
+    if let Some(seed) = &decl.seed {
+        let path = manifest_rel(origin, seed);
+        if std::path::Path::new(&path).exists() {
+            let n = services.profiles.seed_file(&path)?;
+            println!("profile store: seeded {n} flow(s) from {path}");
+        } else {
+            println!("profile store: seed {path} absent (cold start)");
+        }
+    }
+    Ok(())
+}
+
+/// Apply the `[profile]` post-run lifecycle: persist the live store.
+fn persist_profile_store(decl: &ProfileDecl, origin: &str, services: &Services) -> Result<()> {
+    if let Some(p) = &decl.persist {
+        let path = manifest_rel(origin, p);
+        services.profiles.save(&path)?;
+        println!("profile store: persisted to {path}");
+    }
+    Ok(())
+}
+
 /// Run one single-flow manifest under its declared workload.
 fn run_single(m: FlowManifest, reg: &StageRegistry) -> Result<()> {
     let cfg = m.run_config()?;
     let services = Services::new(Cluster::new(cfg.cluster.clone()));
-    let spec = m.to_spec(reg)?;
-    let summary = run_workload(&m, &cfg, &services, LaunchOpts::default(), spec, reg)?;
+    seed_profile_store(&m.profile, &m.origin, &services)?;
+    let summary = run_workload(&m, &cfg, &services, LaunchOpts::default(), reg)?;
+    persist_profile_store(&m.profile, &m.origin, &services)?;
     println!("{summary}");
     Ok(())
 }
 
-/// Dispatch one flow to its workload runner; returns a summary line.
+/// Dispatch one flow to its workload runner; returns a summary line. The
+/// spec is (re)built from the manifest on demand, so grpo/embodied flows
+/// support relaunch-on-resize under a supervisor.
 fn run_workload(
     m: &FlowManifest,
     cfg: &RunConfig,
     services: &Services,
     launch: LaunchOpts,
-    spec: FlowSpec,
     reg: &StageRegistry,
 ) -> Result<String> {
     match m.workload.as_str() {
         "grpo" => {
-            let report = run_grpo_with_spec(
+            let report = run_grpo_elastic(
                 cfg,
                 &RunnerOpts { verbose: true, ..Default::default() },
                 services,
                 launch,
-                spec,
+                |_n| m.to_spec(reg),
             )?;
             Ok(format!(
-                "flow {:?} [{}]: {:.0} tokens/s mean, {} iters | locks: {} grants, {} waits, {} preemptions",
+                "flow {:?} [{} via {}]: {:.0} tokens/s mean, {} iters, {} relaunches | \
+                 locks: {} grants, {} waits, {} preemptions",
                 m.name,
                 report.mode,
+                report.plan_source,
                 report.mean_throughput(),
                 report.iters.len(),
+                report.relaunches.len(),
                 report.locks.grants,
                 report.locks.waits,
                 report.locks.preemptions,
             ))
         }
         "embodied" => {
-            let report = run_embodied_with_spec(
+            let report = run_embodied_elastic(
                 cfg,
                 &EmbodiedOpts { verbose: true, ..Default::default() },
                 services,
                 launch,
-                spec,
+                |_n| m.to_spec(reg),
             )?;
             Ok(format!(
-                "flow {:?} [{}]: {:.2} batch/s mean, success {:.2}",
+                "flow {:?} [{}]: {:.2} batch/s mean, success {:.2}, {} relaunches",
                 m.name,
                 report.mode,
                 report.mean_batches_per_sec(),
                 report.final_success_rate(),
+                report.relaunches.len(),
             ))
         }
-        _ => run_generic(m, cfg, services, launch, spec, reg),
+        _ => run_generic(m, cfg, services, launch, reg),
     }
 }
 
@@ -207,13 +265,17 @@ fn run_generic(
     cfg: &RunConfig,
     services: &Services,
     launch: LaunchOpts,
-    spec: FlowSpec,
     reg: &StageRegistry,
 ) -> Result<String> {
     let is_pump_target = |ch: &str| m.pumps.iter().any(|p| p.to == ch);
     let is_pump_source = |ch: &str| m.pumps.iter().any(|p| p.from == ch);
 
+    let spec = m.to_spec(reg)?;
     let driver = FlowDriver::launch_with(spec, services, cfg.sched.mode, launch)?;
+    println!("plan: {} (source: {})", driver.mode(), driver.plan_source());
+    if let Some(note) = driver.plan_note() {
+        println!("{note}");
+    }
     driver.onload_pipelined()?;
     let mut run = driver.begin()?;
 
@@ -307,42 +369,72 @@ fn run_generic(
 
     let report = run.finish()?;
     print!("{}", report.render());
-    Ok(format!("flow {:?} [{}] completed in {:.3}s", m.name, report.mode, report.secs))
+    Ok(format!(
+        "flow {:?} [{} via {}] completed in {:.3}s",
+        m.name, report.mode, report.plan_source, report.secs
+    ))
 }
 
 /// Run a multi-flow manifest: admit every referenced flow under one
-/// supervisor, run them concurrently, retire as they finish.
+/// supervisor — through **live-profile joint admission** when the shared
+/// store already covers every flow — run them concurrently, and retire
+/// them as they finish. Freed windows are re-offered to the flows still
+/// running; accepted offers are delivered into each runner's resize slot,
+/// so the surviving flows *relaunch* over the wider windows.
 fn run_multi(mm: MultiFlowManifest, reg: &StageRegistry) -> Result<()> {
     let cfg = mm.run_config()?;
     let services = Services::new(Cluster::new(cfg.cluster.clone()));
+    seed_profile_store(&mm.profile, &mm.origin, &services)?;
     let sup = FlowSupervisor::new(&services, cfg.supervisor.clone());
 
+    // Joint admission: hand the supervisor every (request, spec) pair at
+    // once. With live profiles for all flows it sizes windows from one
+    // Algorithm-1 union plan; otherwise the declared devices apply.
+    let resolved = mm.resolve()?;
+    // Sub-manifest [profile] sections share the one services-wide store:
+    // seed each referenced flow's file too, and remember every persist
+    // target for the end of the run.
+    let mut persists: Vec<(ProfileDecl, String)> = Vec::new();
+    for (m, _) in &resolved {
+        seed_profile_store(&m.profile, &m.origin, &services)?;
+        if m.profile.persist.is_some() {
+            persists.push((m.profile.clone(), m.origin.clone()));
+        }
+    }
+    let specs: Vec<FlowSpec> =
+        resolved.iter().map(|(m, _)| m.to_spec(reg)).collect::<Result<Vec<_>>>()?;
+    let reqs = resolved
+        .iter()
+        .zip(specs.iter())
+        .map(|((_, req), spec)| (req.clone(), spec))
+        .collect::<Vec<_>>();
+    let admissions = sup.admit_all(reqs).context("joint admission")?;
+
     let mut threads = Vec::new();
-    for (m, req) in mm.resolve()? {
-        let adm = sup.admit(req).with_context(|| format!("admitting flow {:?}", m.name))?;
+    for ((m, _), adm) in resolved.into_iter().zip(admissions.into_iter()) {
         println!(
             "admitted {:<12} window=({}, {}) exclusive={} priority_base={}",
             adm.flow, adm.window.0, adm.window.1, adm.exclusive, adm.priority_base
         );
         let flow_cfg = m.run_config()?;
-        let spec = m.to_spec(reg)?;
         let services = services.clone();
         let opts = adm.opts.clone();
         let name = m.name.clone();
-        // Generic pumps resolve inside the thread: rebuild a registry there
+        // Stage kinds resolve inside the thread: rebuild a registry there
         // (built-ins only; multi-flow runs custom kinds via the library API).
         threads.push((
             name,
             std::thread::spawn(move || -> Result<String> {
                 let reg = StageRegistry::builtin();
-                run_workload(&m, &flow_cfg, &services, opts, spec, &reg)
+                run_workload(&m, &flow_cfg, &services, opts, &reg)
             }),
         ));
     }
 
     // Drive time-slice fairness while the flows run, and retire each flow
     // as soon as it finishes — freed windows are re-offered to the flows
-    // still running (elastic resizing), exactly like examples/multi_flow.rs.
+    // still running and *accepted on their behalf*, so survivors relaunch
+    // over the wider windows at their next iteration boundary.
     let tick = cfg.supervisor.time_slice_ms.max(20);
     let mut slots: Vec<(String, Option<std::thread::JoinHandle<Result<String>>>)> =
         threads.into_iter().map(|(n, h)| (n, Some(h))).collect();
@@ -367,16 +459,23 @@ fn run_multi(mm: MultiFlowManifest, reg: &StageRegistry) -> Result<()> {
                 println!("retired {name:?}: freed window ({s}, {l})");
             }
             for offer in &retire.offers {
-                println!(
-                    "  resize offer -> {}: window=({}, {}), granularity hint {:?} \
-                     (relaunch over the wider window at the next iteration boundary)",
-                    offer.flow, offer.window.0, offer.window.1, offer.granularity
-                );
+                match sup.accept_resize(offer) {
+                    Ok(opts) => println!(
+                        "  resize accepted -> {}: window={:?}, rechunk {:?} \
+                         (delivered; flow relaunches at its next iteration boundary)",
+                        offer.flow, opts.window, opts.rechunk
+                    ),
+                    Err(e) => println!("  resize offer to {} not claimable: {e:#}", offer.flow),
+                }
             }
         }
         std::thread::sleep(Duration::from_millis(tick));
     }
     println!("cluster devices free after retirement: {}", services.cluster.free_devices());
+    persist_profile_store(&mm.profile, &mm.origin, &services)?;
+    for (decl, origin) in &persists {
+        persist_profile_store(decl, origin, &services)?;
+    }
     if !failed.is_empty() {
         bail!("{} flow(s) failed: {}", failed.len(), failed.join(", "));
     }

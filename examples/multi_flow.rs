@@ -10,9 +10,14 @@
 //! declarative spec inside its window with a flow-scoped name space and a
 //! flow-level device-lock priority band, and both train at the same time.
 //! When the embodied flow finishes first, its devices are released and
-//! **re-offered** to the still-admitted GRPO flow as an elastic resize
-//! (with a re-chunking granularity hint). Per-flow fairness counters
-//! (lock grants / waits / preemptions) come back on every report.
+//! **re-offered** to the still-admitted GRPO flow as an elastic resize.
+//! Accepting the offer delivers fresh launch options into the GRPO
+//! runner's resize slot — at its next iteration boundary it drains,
+//! drops its driver, and **relaunches over the wider window**, with the
+//! relaunch recorded on its report (`GrpoReport::relaunches`). Per-flow
+//! fairness counters (lock grants / waits / preemptions) come back on
+//! every report, and every finished iteration feeds the shared
+//! `ProfileStore` (the adaptive-scheduling control loop).
 
 use rlinf::cluster::Cluster;
 use rlinf::config::{PlacementMode, RunConfig};
@@ -28,7 +33,7 @@ fn main() -> anyhow::Result<()> {
     cfg.model = "tiny".into();
     cfg.artifacts_dir = "artifacts".into();
     cfg.cluster.devices_per_node = 6;
-    cfg.iters = 3;
+    cfg.iters = 4;
     cfg.rollout.batch = 8;
     cfg.rollout.group_size = 4;
     cfg.rollout.max_new = 16;
@@ -81,7 +86,9 @@ fn main() -> anyhow::Result<()> {
     }
 
     // The embodied flow finishes first; retire it while GRPO still runs so
-    // its devices are re-offered for elastic growth.
+    // its devices are re-offered for elastic growth. Accepting the offer
+    // delivers the new launch options straight into the GRPO runner's
+    // resize slot — it relaunches at its next iteration boundary.
     let emb_report = emb_thread.join().expect("embodied thread panicked")?;
     let retire = sup.retire("embodied")?;
     if let Some((s, l)) = retire.freed {
@@ -94,8 +101,9 @@ fn main() -> anyhow::Result<()> {
         );
         let opts = sup.accept_resize(offer)?;
         println!(
-            "accepted: {} may relaunch over window {:?} next iteration",
-            offer.flow, opts.window
+            "accepted: new window {:?} delivered to {} — it relaunches at the next \
+             iteration boundary",
+            opts.window, offer.flow
         );
     }
 
@@ -115,6 +123,15 @@ fn main() -> anyhow::Result<()> {
         grpo_report.locks.wait_secs,
         grpo_report.locks.preemptions,
     );
+    for r in &grpo_report.relaunches {
+        println!(
+            "grpo relaunch-on-resize: before iter {} over window {:?} [{}]",
+            r.at_iter, r.window, r.mode
+        );
+    }
+    if grpo_report.relaunches.is_empty() {
+        println!("grpo finished before the resize offer landed (no relaunch this time)");
+    }
     println!(
         "embodied [{}]: {:.2} batch/s mean, success {:.2} | locks: {} grants, {} waits, {} preemptions",
         emb_report.mode,

@@ -1,0 +1,223 @@
+//! Adaptive-scheduling bench: unprofiled (heuristic) vs live-profiled
+//! Auto placement of a synthetic relay pipeline, in steps/sec.
+//!
+//! Run 1 launches under `Auto` with an empty `ProfileStore` — the driver
+//! falls back to the graph-shape heuristic — and measures. Every finished
+//! run feeds the store, so later launches resolve `Auto` through
+//! Algorithm 1 over the *measured* per-stage costs. The bench reports the
+//! steady-state steps/sec of both regimes and emits `BENCH_adaptive.json`
+//! so the adaptive-loop trajectory is trend-checkable across PRs
+//! (artifact-free: uses synthetic workers, no compiled models).
+//!
+//! Set `RLINF_BENCH_SMALL=1` for the CI preset (fewer runs/items; same
+//! JSON shape).
+
+mod common;
+
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+use rlinf::cluster::Cluster;
+use rlinf::config::{ClusterConfig, PlacementMode};
+use rlinf::data::Payload;
+use rlinf::flow::{Edge, FlowDriver, FlowSpec, Stage};
+use rlinf::sched::ProfileStore;
+use rlinf::util::json::Value;
+use rlinf::worker::group::Services;
+use rlinf::worker::{WorkerCtx, WorkerLogic};
+
+fn small() -> bool {
+    std::env::var_os("RLINF_BENCH_SMALL").is_some()
+}
+
+/// Relay with a deterministic per-item cost skew: the "heavy" stage costs
+/// ~4x the "light" one, so profiled planning has a real asymmetry to see.
+struct Work {
+    spin_us: u64,
+}
+
+impl WorkerLogic for Work {
+    fn call(&mut self, ctx: &WorkerCtx, method: &str, _arg: Payload) -> Result<Payload> {
+        match method {
+            "run" => {
+                let inp = ctx.port("in")?;
+                let out = ctx.port("out")?;
+                let me = ctx.endpoint();
+                let mut n = 0i64;
+                while let Some(item) = inp.recv(me) {
+                    let t0 = Instant::now();
+                    while t0.elapsed() < Duration::from_micros(self.spin_us) {
+                        std::hint::spin_loop();
+                    }
+                    out.send(me, item.payload)?;
+                    n += 1;
+                }
+                out.done(me);
+                Ok(Payload::new().set_meta("n", n))
+            }
+            other => bail!("no method {other}"),
+        }
+    }
+}
+
+struct Tail;
+
+impl WorkerLogic for Tail {
+    fn call(&mut self, ctx: &WorkerCtx, method: &str, _arg: Payload) -> Result<Payload> {
+        match method {
+            "drain" => {
+                let inp = ctx.port("in")?;
+                let me = ctx.endpoint();
+                let mut n = 0i64;
+                while inp.recv(me).is_some() {
+                    n += 1;
+                }
+                Ok(Payload::new().set_meta("n", n))
+            }
+            other => bail!("no method {other}"),
+        }
+    }
+}
+
+fn spec(heavy_us: u64, light_us: u64) -> FlowSpec {
+    FlowSpec::new("adaptive-bench")
+        .stage(
+            Stage::new("heavy", move |_| {
+                Box::new(move |_: &WorkerCtx| {
+                    Ok(Box::new(Work { spin_us: heavy_us }) as Box<dyn WorkerLogic>)
+                })
+            })
+            .single_rank()
+            .weight(2.0),
+        )
+        .stage(
+            Stage::new("light", move |_| {
+                Box::new(move |_: &WorkerCtx| {
+                    Ok(Box::new(Work { spin_us: light_us }) as Box<dyn WorkerLogic>)
+                })
+            })
+            .single_rank(),
+        )
+        .stage(
+            Stage::new("tail", |_| {
+                Box::new(|_: &WorkerCtx| Ok(Box::new(Tail) as Box<dyn WorkerLogic>))
+            })
+            .single_rank(),
+        )
+        .edge(
+            Edge::new("src")
+                .produced_by_driver()
+                .consumed_by("heavy", "run")
+                .granularity(4)
+                .granularity_options(vec![2, 4, 8]),
+        )
+        .edge(
+            Edge::new("mid")
+                .produced_by("heavy", "run")
+                .consumed_by("light", "run")
+                .granularity(4)
+                .granularity_options(vec![2, 4, 8]),
+        )
+        .edge(Edge::new("out").produced_by("light", "run").consumed_by("tail", "drain"))
+}
+
+/// One measured run: feed `items`, drain, finish. Returns (secs, mode,
+/// plan_source).
+fn run_once(
+    services: &Services,
+    heavy_us: u64,
+    light_us: u64,
+    items: usize,
+) -> Result<(f64, &'static str, &'static str)> {
+    let driver = FlowDriver::launch_with(
+        spec(heavy_us, light_us),
+        services,
+        PlacementMode::Auto,
+        Default::default(),
+    )?;
+    let t0 = Instant::now();
+    let mut run = driver.begin()?;
+    run.start()?;
+    let batch: Vec<(Payload, f64)> =
+        (0..items).map(|i| (Payload::new().set_meta("i", i as i64), 1.0)).collect();
+    run.send_batch("src", batch)?;
+    run.feed_done("src")?;
+    let report = run.finish()?;
+    let secs = t0.elapsed().as_secs_f64();
+    assert_eq!(report.edge("out").unwrap().got, items as u64);
+    Ok((secs, driver.mode(), driver.plan_source()))
+}
+
+fn main() -> Result<()> {
+    let (items, runs) = if small() { (64usize, 3usize) } else { (256, 5) };
+    let (heavy_us, light_us) = (400u64, 100u64);
+    let devices = 4;
+
+    let services = Services::new(Cluster::new(ClusterConfig {
+        nodes: 1,
+        devices_per_node: devices,
+        ..Default::default()
+    }));
+
+    let key = ProfileStore::flow_key(&spec(heavy_us, light_us).profile_signature());
+    assert!(!services.profiles.ready(&key), "fresh store");
+
+    // Regime 1: unprofiled heuristic Auto (the very first run).
+    let (cold_secs, cold_mode, cold_src) = run_once(&services, heavy_us, light_us, items)?;
+    assert_eq!(cold_src, "heuristic");
+    let cold_steps = items as f64 / cold_secs;
+
+    // Regime 2: live-profiled Auto — the store now holds run 1's
+    // measurements (and keeps refining with every further run).
+    let mut warm_secs = Vec::with_capacity(runs);
+    let mut warm_mode = "";
+    for _ in 0..runs {
+        let (secs, mode, src) = run_once(&services, heavy_us, light_us, items)?;
+        assert_eq!(src, "profiled");
+        warm_mode = mode;
+        warm_secs.push(secs);
+    }
+    // Steady state: best run (first profiled run may still pay warm-up).
+    let warm_best = warm_secs.iter().copied().fold(f64::INFINITY, f64::min);
+    let warm_steps = items as f64 / warm_best;
+
+    common::report(
+        "adaptive",
+        &["regime", "mode", "steps/sec"],
+        vec![
+            vec!["unprofiled auto".into(), cold_mode.into(), common::f(cold_steps)],
+            vec!["live-profiled auto".into(), warm_mode.into(), common::f(warm_steps)],
+        ],
+    );
+
+    // Raw numbers for trend tracking across PRs.
+    let mut out = Value::obj();
+    out.set("bench", "adaptive");
+    let mut unprofiled = Value::obj();
+    unprofiled
+        .set("mode", cold_mode)
+        .set("steps_per_sec", cold_steps)
+        .set("secs", cold_secs);
+    out.set("unprofiled", unprofiled);
+    let mut profiled = Value::obj();
+    profiled
+        .set("mode", warm_mode)
+        .set("steps_per_sec", warm_steps)
+        .set("best_secs", warm_best)
+        .set("runs", warm_secs.len());
+    out.set("profiled", profiled);
+    out.set("speedup", warm_steps / cold_steps.max(1e-9));
+    out.set("config", {
+        let mut cfg = Value::obj();
+        cfg.set("preset", if small() { "small" } else { "full" })
+            .set("items", items)
+            .set("devices", devices)
+            .set("heavy_us", heavy_us)
+            .set("light_us", light_us)
+            .set("profiled_runs", runs);
+        cfg
+    });
+    std::fs::write("BENCH_adaptive.json", out.to_json_pretty())?;
+    println!("(saved BENCH_adaptive.json)");
+    Ok(())
+}

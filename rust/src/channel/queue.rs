@@ -633,6 +633,13 @@ impl ChannelRegistry {
         self.inner.lock().unwrap().get(name).cloned()
     }
 
+    /// Drop a channel from the registry (run-scoped teardown). Live handles
+    /// keep working; the name becomes available for re-creation — required
+    /// when a relaunched flow driver re-creates its run-scoped channels.
+    pub fn remove(&self, name: &str) {
+        self.inner.lock().unwrap().remove(name);
+    }
+
     pub fn names(&self) -> Vec<String> {
         self.inner.lock().unwrap().keys().cloned().collect()
     }

@@ -561,5 +561,10 @@ pub fn register(reg: &mut crate::flow::StageRegistry) -> Result<()> {
                 })
             }))
         },
+    )?;
+    reg.declare_methods("sim", &["serve_rollout", "success_rate"])?;
+    reg.declare_methods(
+        "policy",
+        &["collect_and_train", "init_weights", "get_weights", "set_weights"],
     )
 }

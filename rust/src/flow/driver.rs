@@ -18,7 +18,9 @@
 //! per-edge [`FlowReport`].
 
 use std::collections::HashMap;
+use std::fmt;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
@@ -28,12 +30,58 @@ use crate::channel::{BoundPort, Dequeue, Item, LockCounters};
 use crate::cluster::DeviceSet;
 use crate::config::PlacementMode;
 use crate::data::Payload;
-use crate::sched::{ProfileDb, SchedProblem, Scheduler};
+use crate::sched::{EdgeSample, FlowProfile, ProfileDb, ProfileStore, SchedProblem, Scheduler, StageSample};
 use crate::worker::group::Services;
 use crate::worker::{GroupHandle, LockMode, WorkerGroup};
 
 /// The driver's endpoint name in channel traces.
 pub const DRIVER_ENDPOINT: &str = "driver";
+
+/// Mailbox through which a `FlowSupervisor` delivers **accepted** resize
+/// launch options to a running workflow. `accept_resize` deposits fresh
+/// [`LaunchOpts`]; the workflow runner polls [`ResizeSlot::take`] between
+/// iterations, drains the current run, drops its driver, and relaunches
+/// over the wider window (relaunch-on-resize). Cloning shares the slot.
+#[derive(Clone, Default)]
+pub struct ResizeSlot {
+    inner: Arc<Mutex<Option<Box<LaunchOpts>>>>,
+}
+
+impl ResizeSlot {
+    /// Deposit accepted launch options (replacing any undelivered ones —
+    /// the latest accepted window wins).
+    pub fn offer(&self, opts: LaunchOpts) {
+        *self.inner.lock().unwrap() = Some(Box::new(opts));
+    }
+
+    /// Claim the pending launch options, if any.
+    pub fn take(&self) -> Option<LaunchOpts> {
+        self.inner.lock().unwrap().take().map(|b| *b)
+    }
+
+    pub fn is_pending(&self) -> bool {
+        self.inner.lock().unwrap().is_some()
+    }
+}
+
+impl fmt::Debug for ResizeSlot {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "ResizeSlot {{ pending: {} }}", self.is_pending())
+    }
+}
+
+/// One relaunch-on-resize event recorded by a workflow runner: the flow
+/// drained at an iteration boundary, dropped its driver, and relaunched
+/// over the window a supervisor resize delivered.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Relaunch {
+    /// Iteration index the relaunch happened before.
+    pub at_iter: usize,
+    /// The new device window.
+    pub window: Option<(usize, usize)>,
+    /// Concrete placement mode of the relaunched driver.
+    pub mode: &'static str,
+}
 
 /// Multi-flow launch options: how this flow coexists with others on one
 /// shared cluster. `Default` reproduces the single-flow behaviour (whole
@@ -65,6 +113,11 @@ pub struct LaunchOpts {
     /// ([`crate::flow::Edge::granularity_options`]) and the adjustment is
     /// recorded on every [`FlowReport::rechunks`].
     pub rechunk: HashMap<String, usize>,
+    /// Resize mailbox shared with the supervisor: accepted resize offers
+    /// land here and the workflow runner relaunches between iterations.
+    /// Default is an (unshared) empty slot — single-flow launches never
+    /// see an offer.
+    pub resize: ResizeSlot,
 }
 
 /// Resolved placement directive for one stage.
@@ -142,6 +195,14 @@ pub struct FlowDriver {
     info: FlowGraphInfo,
     /// Re-chunking adjustments applied at launch (hint vs declared).
     rechunks: Vec<Rechunk>,
+    /// How the placement mode was chosen: `"declared"` (caller picked a
+    /// concrete mode), `"heuristic"` (Auto, no live profile), or
+    /// `"profiled"` (Auto resolved by Algorithm 1 over the ProfileStore).
+    plan_source: &'static str,
+    /// Rendered Algorithm-1 plan when `plan_source == "profiled"`.
+    plan_note: Option<String>,
+    /// ProfileStore key of this flow's topology signature.
+    profile_key: String,
     run_seq: AtomicU64,
 }
 
@@ -159,9 +220,13 @@ impl FlowDriver {
         spec: FlowSpec,
         services: &Services,
         mode: PlacementMode,
-        opts: LaunchOpts,
+        mut opts: LaunchOpts,
     ) -> Result<FlowDriver> {
         let info = spec.validate()?;
+        // Keyed on the *profile* signature (explicit device demands
+        // stripped), so a resized relaunch — which rebuilds the spec with
+        // a different demand — keeps reading and feeding the same profile.
+        let profile_key = ProfileStore::flow_key(&spec.profile_signature());
         if opts.shared_window && !info.cyclic.is_empty() {
             // Cyclic stages must run concurrently and therefore never take
             // device locks — on a time-shared window they would use a
@@ -182,9 +247,27 @@ impl FlowDriver {
                 spec.name
             );
         }
-        let mode = match mode {
-            PlacementMode::Auto => auto_fallback(&spec, &info, n),
-            m => m,
+        // Auto resolution is live-profile-first (the adaptive control
+        // loop): when the shared ProfileStore holds measurements for this
+        // topology, Algorithm 1 plans from them and its granularities ride
+        // in as re-chunk hints (caller-supplied hints win); otherwise the
+        // graph-shape heuristic applies, and the *next* launch — after one
+        // measured run has fed the store — plans from live data.
+        let mut plan_note = None;
+        let (mode, plan_source) = match mode {
+            PlacementMode::Auto => {
+                match plan_from_store(&spec, &info, n, services, &profile_key) {
+                    Some((m, rendered, hints)) => {
+                        for (stage, g) in hints {
+                            opts.rechunk.entry(stage).or_insert(g);
+                        }
+                        plan_note = Some(rendered);
+                        (m, "profiled")
+                    }
+                    None => (auto_fallback(&spec, &info, n), "heuristic"),
+                }
+            }
+            m => (m, "declared"),
         };
         let mode_name = mode.name();
         let plans = resolve_placement(
@@ -281,8 +364,28 @@ impl FlowDriver {
             mode: mode_name,
             info,
             rechunks,
+            plan_source,
+            plan_note,
+            profile_key,
             run_seq: AtomicU64::new(0),
         })
+    }
+
+    /// How the placement mode was chosen: `"declared"`, `"heuristic"`
+    /// (Auto without live profiles), or `"profiled"` (Auto planned by
+    /// Algorithm 1 over the shared [`ProfileStore`]).
+    pub fn plan_source(&self) -> &'static str {
+        self.plan_source
+    }
+
+    /// Rendered Algorithm-1 plan when the launch was live-profiled.
+    pub fn plan_note(&self) -> Option<&str> {
+        self.plan_note.as_deref()
+    }
+
+    /// The [`ProfileStore`] key of this flow's topology signature.
+    pub fn profile_key(&self) -> &str {
+        &self.profile_key
     }
 
     /// Re-chunking adjustments applied at launch: hints from
@@ -372,6 +475,12 @@ impl FlowDriver {
             .ok_or_else(|| anyhow!("flow {:?}: no stage {stage:?}", self.name))
     }
 
+    /// Cumulative phase seconds keyed by (scope-stripped) phase name — the
+    /// snapshot-and-diff basis for per-run live-profile feedback.
+    fn stage_secs(&self) -> HashMap<String, f64> {
+        self.breakdown().into_iter().collect()
+    }
+
     /// Open a new run: create run-scoped channels for every edge, register
     /// producers, and bind ports into the stage tables.
     pub fn begin(&self) -> Result<FlowRun<'_>> {
@@ -414,6 +523,7 @@ impl FlowDriver {
             handles: Vec::new(),
             t0: Instant::now(),
             locks0: self.lock_counters(),
+            secs0: self.stage_secs(),
         })
     }
 
@@ -462,6 +572,103 @@ impl FlowDriver {
             hints,
         ))
     }
+}
+
+impl Drop for FlowDriver {
+    fn drop(&mut self) {
+        // A dropped driver's run-scoped channels leave the shared registry:
+        // they are closed and drained (or abandoned with the flow), and a
+        // relaunched driver with the same scope restarts its run sequence
+        // at 1 — without this sweep it would collide with its
+        // predecessor's stale closed channels.
+        let last = self.run_seq.load(Ordering::Relaxed);
+        for seq in 1..=last {
+            for e in &self.edges {
+                self.services.channels.remove(&format!("{}{}@{seq}", self.scope, e.channel));
+            }
+        }
+    }
+}
+
+/// Mean profiled call overhead across stages — the context-switch cost
+/// estimate live planning feeds Algorithm 1 (plus a floor so temporal
+/// plans are never free).
+fn store_switch_overhead(prof: &FlowProfile) -> f64 {
+    let workers = prof.db.workers();
+    let sum: f64 = workers.iter().map(|w| prof.db.call_overhead(w)).sum();
+    sum / workers.len().max(1) as f64 + 0.01
+}
+
+/// Live-profile Auto planning (the adaptive control loop): when the shared
+/// [`ProfileStore`] holds measurements for this spec's topology signature,
+/// build the [`SchedProblem`] from the *live* data (measured per-stage
+/// costs and workloads; candidate granularities = profiled points ∪ the
+/// declared edge options) and run Algorithm 1. Returns `None` — falling
+/// back to the graph-shape heuristic — for cyclic flows, unprofiled
+/// topologies, and infeasible problems.
+fn plan_from_store(
+    spec: &FlowSpec,
+    info: &FlowGraphInfo,
+    n_devices: usize,
+    services: &Services,
+    key: &str,
+) -> Option<(PlacementMode, String, HashMap<String, usize>)> {
+    if !info.cyclic.is_empty() {
+        return None;
+    }
+    let prof = services.profiles.snapshot(key)?;
+    if !prof.ready() {
+        return None;
+    }
+    let mut workload = HashMap::new();
+    let mut granularities = HashMap::new();
+    for stage in &info.graph.nodes {
+        let batches = prof.db.batches(stage);
+        if batches.is_empty() {
+            // A stage with no samples cannot be costed; stay heuristic.
+            return None;
+        }
+        let w = prof
+            .workload_of(stage)
+            .unwrap_or_else(|| batches.iter().copied().max().unwrap_or(1));
+        workload.insert(stage.clone(), w.max(1));
+        let mut grans = batches;
+        for e in &spec.edges {
+            if let Some(EndpointSpec::Stage { stage: s, .. }) = &e.consumer {
+                if s == stage {
+                    grans.push(e.granularity);
+                    grans.extend(e.granularity_options.iter().copied());
+                }
+            }
+        }
+        grans.retain(|&g| g > 0);
+        grans.sort_unstable();
+        grans.dedup();
+        granularities.insert(stage.clone(), grans);
+    }
+    let problem = SchedProblem {
+        graph: info.graph.clone(),
+        workload,
+        granularities,
+        n_devices,
+        device_mem: services.cluster.mem_capacity(),
+        switch_overhead: store_switch_overhead(&prof),
+    };
+    let mut sched = Scheduler::new(&problem, &prof.db);
+    let plan = sched.solve().ok()?;
+    let mode = plan.placement_mode();
+    let hints: HashMap<String, usize> =
+        plan.assignments().into_iter().map(|a| (a.worker, a.granularity)).collect();
+    Some((
+        mode,
+        format!(
+            "algorithm1 plan ({} states explored, {} live runs):\n{}",
+            sched.states_explored,
+            prof.runs,
+            plan.render()
+        ),
+        hints,
+    ))
 }
 
 /// Profile-free `Auto` fallback: cyclic flows co-reside (their stages run
@@ -613,6 +820,8 @@ pub struct FlowRun<'a> {
     t0: Instant,
     /// Lock-counter snapshot at `begin` (per-run fairness diff).
     locks0: LockCounters,
+    /// Per-stage phase-seconds snapshot at `begin` (per-run profile diff).
+    secs0: HashMap<String, f64>,
 }
 
 impl FlowRun<'_> {
@@ -741,9 +950,79 @@ impl FlowRun<'_> {
                 });
             }
         }
+
+        // Live-profile feedback (§3.4 as a closed loop): fold this run's
+        // measured per-stage call costs, workloads, and per-edge occupancy
+        // into the shared ProfileStore, keyed by the flow's topology
+        // signature. The next Auto launch of this topology — in this
+        // process or, via JSON persistence, the next one — plans from what
+        // this run actually measured. Only successful runs record.
+        let after = self.driver.stage_secs();
+        let mut stage_samples = Vec::new();
+        for (si, st) in self.driver.stages.iter().enumerate() {
+            let secs = after.get(&st.name).copied().unwrap_or(0.0)
+                - self.secs0.get(&st.name).copied().unwrap_or(0.0);
+            // Items + effective granularity come from the stage's inbound
+            // edge (for pure producers: the outbound edge's put count).
+            let mut items = 0u64;
+            let mut gran = 1usize;
+            for e in &self.driver.edges {
+                if let Endpoint::Stage { idx, .. } = &e.consumer {
+                    if *idx == si {
+                        if let Some(port) = self.ports.get(&e.channel) {
+                            let (_, got) = port.channel().stats();
+                            if got > items {
+                                items = got;
+                                gran = e.granularity;
+                            }
+                        }
+                    }
+                }
+            }
+            if items == 0 {
+                for e in &self.driver.edges {
+                    if let Endpoint::Stage { idx, .. } = &e.producer {
+                        if *idx == si {
+                            if let Some(port) = self.ports.get(&e.channel) {
+                                let (put, _) = port.channel().stats();
+                                if put > items {
+                                    items = put;
+                                    gran = e.granularity;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            if secs > 0.0 && items > 0 {
+                let calls = (items as usize).div_ceil(gran.max(1)).max(1);
+                stage_samples.push(StageSample {
+                    stage: st.name.clone(),
+                    granularity: gran,
+                    secs_per_call: secs / calls as f64,
+                    items: items as usize,
+                });
+            }
+        }
+        let edge_samples: Vec<EdgeSample> = edges
+            .iter()
+            .map(|e| EdgeSample {
+                channel: e.channel.clone(),
+                put: e.put,
+                got: e.got,
+                backlog: e.backlog,
+            })
+            .collect();
+        self.driver.services.profiles.record_run(
+            &self.driver.profile_key,
+            &stage_samples,
+            &edge_samples,
+        );
+
         Ok(FlowReport {
             flow: self.driver.name.clone(),
             mode: self.driver.mode,
+            plan_source: self.driver.plan_source,
             secs: self.t0.elapsed().as_secs_f64(),
             outcomes,
             edges,
@@ -778,6 +1057,9 @@ pub struct EdgeStats {
 pub struct FlowReport {
     pub flow: String,
     pub mode: &'static str,
+    /// How the placement was chosen: `"declared"` / `"heuristic"` /
+    /// `"profiled"` (see [`FlowDriver::plan_source`]).
+    pub plan_source: &'static str,
     pub secs: f64,
     pub outcomes: Vec<StageOutcome>,
     pub edges: Vec<EdgeStats>,
@@ -805,7 +1087,10 @@ impl FlowReport {
 
     /// Human-readable rendering for logs.
     pub fn render(&self) -> String {
-        let mut s = format!("flow {:?} [{}] {:.3}s\n", self.flow, self.mode, self.secs);
+        let mut s = format!(
+            "flow {:?} [{} via {}] {:.3}s\n",
+            self.flow, self.mode, self.plan_source, self.secs
+        );
         for o in &self.outcomes {
             s.push_str(&format!("  stage {}.{} -> {} rank outputs\n", o.stage, o.method, o.outputs.len()));
         }

@@ -49,6 +49,17 @@
 //! tables (`manifest = "grpo.flow.toml"` plus admission overrides) and a
 //! shared `[cluster]`/`[supervisor]`; see [`MultiFlowManifest`].
 //!
+//! Two more top-level pieces:
+//!
+//! * `include = "base.flow.toml"` — **single-level** config reuse: the
+//!   named file (relative to the including one) is loaded first and this
+//!   file's keys override it, table-by-table (scalars, arrays, and
+//!   `[[table]]` arrays replace wholesale; `[section]`s merge key-wise).
+//!   The included file must not itself `include` anything.
+//! * `[profile]` — the live-profile store lifecycle: `seed` (JSON written
+//!   by `ProfileStore::save` to preload before running), `persist` (path
+//!   to write the store after the run), `alpha` (EWMA smoothing).
+//!
 //! Every error carries `file: section.key` context so `flow_run --check`
 //! failures are actionable.
 
@@ -128,6 +139,82 @@ pub struct AdmitDecl {
     pub granularities: Vec<usize>,
 }
 
+/// `[profile]` section: live-profile store lifecycle for this run.
+#[derive(Debug, Clone, Default)]
+pub struct ProfileDecl {
+    /// JSON file (written by `ProfileStore::save`) to seed the store from
+    /// before running; path relative to the manifest.
+    pub seed: Option<String>,
+    /// Where to persist the store after the run; path relative to the
+    /// manifest.
+    pub persist: Option<String>,
+    /// EWMA smoothing override for merged samples.
+    pub alpha: Option<f64>,
+}
+
+fn parse_profile(tree: &Value, origin: &str) -> Result<ProfileDecl> {
+    match tree.get("profile") {
+        Some(v) => {
+            let sect = Sect::new(v, origin, "[profile]")?;
+            sect.reject_unknown(&["seed", "persist", "alpha"])?;
+            Ok(ProfileDecl {
+                seed: sect.str_opt("seed")?,
+                persist: sect.str_opt("persist")?,
+                alpha: sect.f64_opt("alpha")?,
+            })
+        }
+        None => Ok(ProfileDecl::default()),
+    }
+}
+
+/// Load a manifest tree with single-level `include` expansion: the named
+/// file is the base, this file's keys override it. Nested includes error.
+pub fn load_tree(path: &str) -> Result<Value> {
+    let mut tree = loader::load_toml_file(path)?;
+    let inc = match tree.get("include").and_then(Value::as_str) {
+        Some(s) => s.to_string(),
+        None => {
+            if tree.get("include").is_some() {
+                bail!("{path}: include must be a string path");
+            }
+            return Ok(tree);
+        }
+    };
+    let base_dir = Path::new(path).parent().unwrap_or_else(|| Path::new("."));
+    let ipath = base_dir.join(&inc).to_string_lossy().to_string();
+    let base = loader::load_toml_file(&ipath)
+        .with_context(|| format!("{path}: include = {inc:?}"))?;
+    if base.get("include").is_some() {
+        bail!(
+            "{path}: included file {inc:?} has its own include — \
+             only single-level includes are supported"
+        );
+    }
+    if let Value::Obj(m) = &mut tree {
+        m.remove("include");
+    }
+    Ok(merge_value(base, tree))
+}
+
+/// Deep merge: child keys override the base. Objects merge key-wise;
+/// everything else (scalars, arrays — including `[[table]]` arrays)
+/// replaces wholesale.
+fn merge_value(base: Value, over: Value) -> Value {
+    match (base, over) {
+        (Value::Obj(mut b), Value::Obj(o)) => {
+            for (k, v) in o {
+                let merged = match b.remove(&k) {
+                    Some(bv) => merge_value(bv, v),
+                    None => v,
+                };
+                b.insert(k, merged);
+            }
+            Value::Obj(b)
+        }
+        (_, o) => o,
+    }
+}
+
 /// A parsed single-flow manifest.
 #[derive(Debug, Clone)]
 pub struct FlowManifest {
@@ -144,6 +231,8 @@ pub struct FlowManifest {
     pub pumps: Vec<PumpDecl>,
     pub calls: Vec<CallDecl>,
     pub admit: AdmitDecl,
+    /// `[profile]` store lifecycle (seed / persist / alpha).
+    pub profile: ProfileDecl,
     /// The full parsed tree ([`FlowManifest::run_config`] source).
     pub tree: Value,
 }
@@ -154,6 +243,8 @@ pub struct FlowManifest {
 pub struct MultiFlowManifest {
     pub origin: String,
     pub flows: Vec<FlowRef>,
+    /// `[profile]` store lifecycle shared by every referenced flow.
+    pub profile: ProfileDecl,
     pub tree: Value,
 }
 
@@ -175,9 +266,10 @@ pub enum LoadedManifest {
     Multi(MultiFlowManifest),
 }
 
-/// Load either a single-flow or a multi-flow manifest from disk.
+/// Load either a single-flow or a multi-flow manifest from disk (with
+/// single-level `include` expansion).
 pub fn load_any(path: &str) -> Result<LoadedManifest> {
-    let tree = loader::load_toml_file(path)?;
+    let tree = load_tree(path)?;
     match tree.get("flow") {
         Some(Value::Arr(_)) => Ok(LoadedManifest::Multi(MultiFlowManifest::from_value(tree, path)?)),
         _ => Ok(LoadedManifest::Flow(Box::new(FlowManifest::from_value(tree, path)?))),
@@ -185,9 +277,10 @@ pub fn load_any(path: &str) -> Result<LoadedManifest> {
 }
 
 impl FlowManifest {
-    /// Load and parse a single-flow manifest file.
+    /// Load and parse a single-flow manifest file (with single-level
+    /// `include` expansion).
     pub fn load(path: &str) -> Result<FlowManifest> {
-        let tree = loader::load_toml_file(path)?;
+        let tree = load_tree(path)?;
         FlowManifest::from_value(tree, path)
     }
 
@@ -199,6 +292,12 @@ impl FlowManifest {
 
     /// Interpret an already-parsed tree as a single-flow manifest.
     pub fn from_value(tree: Value, origin: &str) -> Result<FlowManifest> {
+        if tree.get("include").is_some() {
+            bail!(
+                "{origin}: unexpanded include — load manifests through \
+                 FlowManifest::load / manifest::load_tree"
+            );
+        }
         let flow = Sect::required(&tree, "flow", origin, "[flow]")?;
         let name = flow.str("name")?;
         if name.is_empty() || name.contains(':') {
@@ -315,6 +414,7 @@ impl FlowManifest {
             });
         }
 
+        let profile = parse_profile(&tree, origin)?;
         Ok(FlowManifest {
             origin: origin.to_string(),
             name,
@@ -325,14 +425,49 @@ impl FlowManifest {
             pumps,
             calls,
             admit,
+            profile,
             tree,
         })
     }
 
+    /// Check one `stage.method` endpoint against the stage kind's declared
+    /// method schema ([`StageRegistry::stage_methods`]); an empty schema is
+    /// a wildcard (generic kinds), an unknown stage is left to spec-level
+    /// validation.
+    fn check_method(&self, reg: &StageRegistry, stage: &str, method: &str, at: &str) -> Result<()> {
+        let Some(decl) = self.stages.iter().find(|s| s.name == stage) else {
+            return Ok(());
+        };
+        match reg.stage_methods(&decl.kind) {
+            Some(known) if !known.is_empty() && !known.iter().any(|m| m == method) => bail!(
+                "{}: {at}: stage {stage:?} (kind {:?}) has no method {method:?} \
+                 (declared: {})",
+                self.origin,
+                decl.kind,
+                known.join(", ")
+            ),
+            _ => Ok(()),
+        }
+    }
+
     /// Resolve the manifest into a [`FlowSpec`]: every stage kind is
     /// looked up in the registry (options schema-validated), edges, pumps,
-    /// and call metadata are rebuilt through the builder API.
+    /// and call metadata are rebuilt through the builder API. Edge and
+    /// call endpoints are checked against each kind's declared **method
+    /// schema**, so `flow_run --check` rejects endpoints naming
+    /// nonexistent worker methods.
     pub fn to_spec(&self, reg: &StageRegistry) -> Result<FlowSpec> {
+        for e in &self.edges {
+            if let EndpointDecl::Stage { stage, method, .. } = &e.from {
+                self.check_method(reg, stage, method, &format!("[[edge]] {:?}.from", e.channel))?;
+            }
+            if let EndpointDecl::Stage { stage, method, .. } = &e.to {
+                self.check_method(reg, stage, method, &format!("[[edge]] {:?}.to", e.channel))?;
+            }
+        }
+        for c in &self.calls {
+            self.check_method(reg, &c.stage, &c.method, "[[call]]")?;
+        }
         let mut spec = FlowSpec::new(&self.name);
         for s in &self.stages {
             let factory = reg.resolve_stage(&s.kind, &s.options).with_context(|| {
@@ -454,7 +589,8 @@ impl MultiFlowManifest {
         if flows.is_empty() {
             bail!("{origin}: multi-flow manifest declares no [[flow]] tables");
         }
-        Ok(MultiFlowManifest { origin: origin.to_string(), flows, tree })
+        let profile = parse_profile(&tree, origin)?;
+        Ok(MultiFlowManifest { origin: origin.to_string(), flows, profile, tree })
     }
 
     /// Shared launcher config (cluster + supervisor sections).
@@ -562,6 +698,26 @@ impl<'a> Sect<'a> {
                 .ok_or_else(|| anyhow!("{}: must be a string, got {v:?}", self.ctx_key(key)))?
                 .to_string()),
             None => bail!("{}: missing required key", self.ctx_key(key)),
+        }
+    }
+
+    fn str_opt(&self, key: &str) -> Result<Option<String>> {
+        match self.obj.get(key) {
+            Some(v) => Ok(Some(
+                v.as_str()
+                    .ok_or_else(|| anyhow!("{}: must be a string, got {v:?}", self.ctx_key(key)))?
+                    .to_string(),
+            )),
+            None => Ok(None),
+        }
+    }
+
+    fn f64_opt(&self, key: &str) -> Result<Option<f64>> {
+        match self.obj.get(key) {
+            Some(v) => Ok(Some(v.as_f64().ok_or_else(|| {
+                anyhow!("{}: must be a number, got {v:?}", self.ctx_key(key))
+            })?)),
+            None => Ok(None),
         }
     }
 

@@ -33,7 +33,8 @@ pub mod spec;
 pub mod supervisor;
 
 pub use driver::{
-    EdgeStats, FlowDriver, FlowReport, FlowRun, LaunchOpts, Rechunk, StageOutcome, StagePlan,
+    EdgeStats, FlowDriver, FlowReport, FlowRun, LaunchOpts, Rechunk, Relaunch, ResizeSlot,
+    StageOutcome, StagePlan,
 };
 pub use graph::WorkflowGraph;
 pub use manifest::FlowManifest;
@@ -41,5 +42,6 @@ pub use pipeline::{chunk_sizes, Chunk};
 pub use registry::{OptKind, OptSpec, PumpLogic, StageOpts, StageRegistry};
 pub use spec::{Edge, FlowGraphInfo, FlowSpec, Stage};
 pub use supervisor::{
-    plan_union, AdmitReq, Admission, FlowStatus, FlowSupervisor, ResizeOffer, RetireReport,
+    plan_union, plan_union_live, AdmitReq, Admission, FlowStatus, FlowSupervisor, ResizeOffer,
+    RetireReport,
 };

@@ -195,6 +195,11 @@ type PumpBuilder = Box<dyn Fn(&StageOpts) -> Result<Box<dyn PumpLogic>> + Send +
 struct Entry<B> {
     help: String,
     schema: Vec<OptSpec>,
+    /// Callable worker methods of this kind (empty = wildcard: the kind
+    /// accepts any method name, e.g. the generic `relay`/`sink`). Declared
+    /// so `flow_run --check` can reject `[[edge]]`/`[[call]]` endpoints
+    /// naming nonexistent methods.
+    methods: Vec<String>,
     build: B,
 }
 
@@ -243,9 +248,28 @@ impl StageRegistry {
         }
         self.stages.insert(
             kind.to_string(),
-            Entry { help: help.to_string(), schema, build: Box::new(build) },
+            Entry { help: help.to_string(), schema, methods: Vec::new(), build: Box::new(build) },
         );
         Ok(())
+    }
+
+    /// Declare the callable worker methods of a registered stage kind.
+    /// Manifests whose `[[edge]]`/`[[call]]` endpoints name a method
+    /// outside this list fail lint; an empty (undeclared) list is a
+    /// wildcard — any method passes (generic kinds like `relay`).
+    pub fn declare_methods(&mut self, kind: &str, methods: &[&str]) -> Result<()> {
+        let e = self
+            .stages
+            .get_mut(kind)
+            .ok_or_else(|| anyhow!("declare_methods: unknown stage kind {kind:?}"))?;
+        e.methods = methods.iter().map(|m| m.to_string()).collect();
+        Ok(())
+    }
+
+    /// Declared methods of a stage kind (`None` = unknown kind; empty
+    /// slice = wildcard, accepts any method).
+    pub fn stage_methods(&self, kind: &str) -> Option<&[String]> {
+        self.stages.get(kind).map(|e| e.methods.as_slice())
     }
 
     /// Register a pump (driver-side aggregation) kind.
@@ -261,7 +285,7 @@ impl StageRegistry {
         }
         self.pumps.insert(
             kind.to_string(),
-            Entry { help: help.to_string(), schema, build: Box::new(build) },
+            Entry { help: help.to_string(), schema, methods: Vec::new(), build: Box::new(build) },
         );
         Ok(())
     }

@@ -400,6 +400,26 @@ impl FlowSpec {
         v
     }
 
+    /// The flow's **profile identity**: the topology signature with
+    /// placement-sizing keys (per-stage explicit device demands) stripped.
+    /// Measured per-stage costs don't depend on how many devices the spec
+    /// *asks* for, and a resized relaunch rebuilds the spec with a
+    /// different demand — keying the `ProfileStore` on this keeps the
+    /// profile following the flow across resizes.
+    pub fn profile_signature(&self) -> Value {
+        let mut sig = self.signature();
+        if let Value::Obj(m) = &mut sig {
+            if let Some(Value::Arr(stages)) = m.get_mut("stages") {
+                for s in stages {
+                    if let Value::Obj(sm) = s {
+                        sm.remove("devices");
+                    }
+                }
+            }
+        }
+        sig
+    }
+
     /// Validate the declaration and derive its dataflow graph.
     ///
     /// Errors: no stages, duplicate stage names, duplicate channel names,

@@ -36,13 +36,13 @@ use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
-use super::driver::LaunchOpts;
+use super::driver::{LaunchOpts, ResizeSlot};
 use super::graph::WorkflowGraph;
 use super::spec::FlowSpec;
 use crate::channel::LockCounters;
 use crate::cluster::DeviceSet;
 use crate::config::SupervisorConfig;
-use crate::sched::{Plan, ProfileDb, SchedProblem, Scheduler};
+use crate::sched::{Plan, ProfileDb, ProfileStore, SchedProblem, Scheduler};
 use crate::worker::group::Services;
 
 /// Admission request for one flow.
@@ -144,6 +144,13 @@ struct FlowEntry {
     shareable: bool,
     priority_base: u64,
     granularities: Vec<usize>,
+    /// Resize mailbox shared with the flow's `LaunchOpts`: accepted
+    /// offers are deposited here for the runner's relaunch-on-resize.
+    resize: ResizeSlot,
+    /// ProfileStore key of the flow's topology (set by [`FlowSupervisor::
+    /// admit_spec`]/[`FlowSupervisor::admit_all`]); enables live re-chunk
+    /// hints on resize.
+    profile_key: Option<String>,
 }
 
 #[derive(Default)]
@@ -280,6 +287,7 @@ impl FlowSupervisor {
         };
 
         st.next_slot = st.next_slot.max(slot.saturating_add(1));
+        let resize = ResizeSlot::default();
         let entry = FlowEntry {
             name: req.name.clone(),
             window,
@@ -288,6 +296,8 @@ impl FlowSupervisor {
             shareable: req.shareable,
             priority_base,
             granularities: req.granularities,
+            resize: resize.clone(),
+            profile_key: None,
         };
         st.flows.push(entry);
         Ok(Admission {
@@ -302,9 +312,113 @@ impl FlowSupervisor {
                 // Shareable flows always lock, so a later overlapping
                 // admission needs no relaunch of this one.
                 shared_window: req.shareable,
+                // The runner polls this slot between iterations; accepted
+                // resize offers are delivered through it.
+                resize,
                 ..Default::default()
             },
         })
+    }
+
+    /// Admit one flow **with its spec**: same capacity accounting as
+    /// [`FlowSupervisor::admit`], plus the spec's topology signature is
+    /// remembered so later resize offers carry *live* re-chunk hints
+    /// replanned from the [`ProfileStore`].
+    pub fn admit_spec(&self, req: AdmitReq, spec: &FlowSpec) -> Result<Admission> {
+        let key = ProfileStore::flow_key(&spec.profile_signature());
+        let adm = self.admit(req)?;
+        let mut st = self.state.lock().unwrap();
+        if let Some(f) = st.flows.iter_mut().find(|f| f.name == adm.flow) {
+            f.profile_key = Some(key);
+        }
+        Ok(adm)
+    }
+
+    /// **Joint admission from live profiles** (the ROADMAP lever): admit a
+    /// batch of flows, sizing each window from one Algorithm-1 plan over
+    /// the disjoint union of their declared graphs — fed entirely by the
+    /// shared [`ProfileStore`] — instead of the caller's per-flow device
+    /// counts. Temporal plans grant every flow its *peak* width (widths
+    /// can overlap in time), so widths whose sum exceeds the cluster are
+    /// normalized proportionally before admission. If a planned batch
+    /// still cannot be admitted, its partial admissions are rolled back
+    /// and the declared `devices` apply — the same cold-start path used
+    /// when any flow is cyclic or unprofiled. Every admission runs
+    /// through the normal capacity accounting either way.
+    pub fn admit_all(&self, reqs: Vec<(AdmitReq, &FlowSpec)>) -> Result<Vec<Admission>> {
+        if let Some(widths) = self.live_union_widths(&reqs) {
+            let mut planned: Vec<(AdmitReq, &FlowSpec)> = reqs
+                .iter()
+                .map(|(r, s)| {
+                    let mut r = r.clone();
+                    if let Some(w) = widths.get(&r.name) {
+                        r.devices = (*w).max(1);
+                    }
+                    (r, *s)
+                })
+                .collect();
+            let total = self.services.cluster.num_devices();
+            let sum: usize = planned.iter().map(|(r, _)| r.devices).sum();
+            if sum > total {
+                for (r, _) in planned.iter_mut() {
+                    r.devices = (r.devices * total / sum).max(1);
+                }
+            }
+            if let Ok(out) = self.try_admit_batch(planned) {
+                return Ok(out);
+            }
+            // Partial admissions were rolled back; fall through to the
+            // declared device counts.
+        }
+        self.try_admit_batch(reqs)
+    }
+
+    /// Admit a batch atomically: on any failure, retire the admissions
+    /// already made for this batch and return the error.
+    fn try_admit_batch(&self, reqs: Vec<(AdmitReq, &FlowSpec)>) -> Result<Vec<Admission>> {
+        let mut out: Vec<Admission> = Vec::with_capacity(reqs.len());
+        for (req, spec) in reqs {
+            let name = req.name.clone();
+            match self.admit_spec(req, spec) {
+                Ok(a) => out.push(a),
+                Err(e) => {
+                    for a in &out {
+                        let _ = self.retire(&a.flow);
+                    }
+                    return Err(e).with_context(|| format!("admitting flow {name:?}"));
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Per-flow window widths from one live-profiled union plan, or `None`
+    /// when any flow is cyclic, unprofiled, or the plan is infeasible.
+    fn live_union_widths(&self, reqs: &[(AdmitReq, &FlowSpec)]) -> Option<HashMap<String, usize>> {
+        if reqs.is_empty() {
+            return None;
+        }
+        for (_, spec) in reqs {
+            let info = spec.validate().ok()?;
+            if !info.cyclic.is_empty() {
+                return None;
+            }
+            let key = ProfileStore::flow_key(&spec.profile_signature());
+            if !self.services.profiles.ready(&key) {
+                return None;
+            }
+        }
+        let flows: Vec<(&str, &FlowSpec)> =
+            reqs.iter().map(|(r, s)| (r.name.as_str(), *s)).collect();
+        let (_, widths) = plan_union_live(
+            &flows,
+            &self.services.profiles,
+            self.services.cluster.num_devices(),
+            self.services.cluster.mem_capacity(),
+            0.05,
+        )
+        .ok()?;
+        reqs.iter().all(|(r, _)| widths.contains_key(&r.name)).then_some(widths)
     }
 
     /// Retire a finished flow: drop its stale lock intents, forget its
@@ -319,6 +433,10 @@ impl FlowSupervisor {
             .position(|f| f.name == name)
             .with_context(|| format!("supervisor: no admitted flow {name:?}"))?;
         let gone = st.flows.remove(idx);
+        // Discard any undelivered resize options: the deposited LaunchOpts
+        // hold the slot's own Arc (a reference cycle), so an offer the
+        // retired flow never consumed would otherwise leak with the slot.
+        gone.resize.take();
 
         // Intent + counter lifecycle: a finished flow must leave no waiter
         // behind, and its fairness totals die with it (reports were
@@ -430,7 +548,24 @@ impl FlowSupervisor {
             .context("supervisor: freed devices were re-claimed by another admission")?;
         entry.window = offer.window;
         entry.owned.extend(extra.iter().copied());
-        Ok(LaunchOpts {
+        // Re-chunk hints for the relaunch: preferably re-planned per stage
+        // from the **live profile book** at the new window width; when the
+        // flow has no live profile, fall back to the offer's wildcard hint
+        // (declared granularities scaled by the device growth). Either way
+        // the driver snaps hints to each edge's declared options.
+        let rechunk = live_rechunk(
+            &self.services.profiles,
+            entry.profile_key.as_deref(),
+            entry.window.1,
+            &entry.granularities,
+        )
+        .unwrap_or_else(|| {
+            offer
+                .granularity
+                .map(|g| HashMap::from([("*".to_string(), g)]))
+                .unwrap_or_default()
+        });
+        let opts = LaunchOpts {
             scope: Some(format!("{}:", entry.name)),
             window: Some(entry.window),
             priority_base: entry.priority_base,
@@ -438,14 +573,28 @@ impl FlowSupervisor {
             // so a later overlapping admission never needs this flow to
             // relaunch first.
             shared_window: entry.shareable,
-            // Re-chunk hint: the wildcard entry makes every stage of the
-            // relaunched flow snap its edges to the offer's granularity
-            // (nearest declared option per edge).
-            rechunk: offer
-                .granularity
-                .map(|g| HashMap::from([("*".to_string(), g)]))
-                .unwrap_or_default(),
-        })
+            rechunk,
+            // Same mailbox: future offers keep reaching the runner after
+            // it relaunches with these options.
+            resize: entry.resize.clone(),
+        };
+        // Deliver to the running workflow; it relaunches at its next
+        // iteration boundary (relaunch-on-resize).
+        entry.resize.offer(opts.clone());
+        Ok(opts)
+    }
+
+    /// Pending (accepted, undelivered) resize options for a flow — mainly
+    /// for tests and observability; runners hold the slot directly.
+    pub fn pending_resize(&self, flow: &str) -> bool {
+        self.state
+            .lock()
+            .unwrap()
+            .flows
+            .iter()
+            .find(|f| f.name == flow)
+            .map(|f| f.resize.is_pending())
+            .unwrap_or(false)
     }
 
     /// Time-slice fairness tick: boost waiters starved past the configured
@@ -544,6 +693,94 @@ pub fn plan_union(
         *w = (*w).max(a.devices);
     }
     Ok((plan, widths))
+}
+
+/// [`plan_union`] fed from the **live profile store** instead of
+/// caller-supplied tables: each flow's per-stage cost samples and workload
+/// estimates are read from the [`ProfileStore`] under the flow's topology
+/// signature, prefixed `"{flow}:"`, and handed to Algorithm 1. Errors when
+/// a flow is cyclic (live samples are per-stage, not per-SCC) or has no
+/// profile yet — callers fall back to the partitioned admission heuristic.
+pub fn plan_union_live(
+    flows: &[(&str, &FlowSpec)],
+    store: &ProfileStore,
+    n_devices: usize,
+    device_mem: u64,
+    switch_overhead: f64,
+) -> Result<(Plan, HashMap<String, usize>)> {
+    let mut db = ProfileDb::new();
+    let mut workload = HashMap::new();
+    let mut granularities = HashMap::new();
+    for (name, spec) in flows {
+        let info = spec
+            .validate()
+            .with_context(|| format!("plan_union_live: validating flow {name:?}"))?;
+        if !info.cyclic.is_empty() {
+            bail!(
+                "plan_union_live: flow {name:?} is cyclic — live profiles are recorded \
+                 per stage, not per SCC; use plan_union with explicit condensed tables"
+            );
+        }
+        let key = ProfileStore::flow_key(&spec.profile_signature());
+        let prof = store
+            .snapshot(&key)
+            .filter(|p| p.ready())
+            .with_context(|| format!("plan_union_live: no live profile for flow {name:?}"))?;
+        for stage in prof.db.workers() {
+            let pref = format!("{name}:{stage}");
+            for b in prof.db.batches(&stage) {
+                if let Some(s) = prof.db.exact(&stage, b) {
+                    db.add(&pref, b, s.secs, s.mem_bytes);
+                }
+            }
+            workload.insert(pref.clone(), prof.workload_of(&stage).unwrap_or(1));
+            granularities.insert(pref, prof.db.batches(&stage));
+        }
+    }
+    plan_union(flows, &db, &workload, &granularities, n_devices, device_mem, switch_overhead)
+}
+
+/// Per-stage granularity hints re-planned from the live profile book for a
+/// flow that just grew to `n_devices`: for every profiled stage, pick the
+/// candidate granularity (profiled points ∪ the flow's declared options)
+/// minimizing the stage's total time at the new width — ties prefer the
+/// larger batch (fewer calls). `None` when the flow has no usable profile.
+fn live_rechunk(
+    store: &ProfileStore,
+    key: Option<&str>,
+    n_devices: usize,
+    declared: &[usize],
+) -> Option<HashMap<String, usize>> {
+    let prof = store.snapshot(key?)?;
+    if !prof.ready() {
+        return None;
+    }
+    let mut out = HashMap::new();
+    for stage in prof.db.workers() {
+        let m = prof.workload_of(&stage).unwrap_or(1).max(1);
+        let mut cands = prof.db.batches(&stage);
+        cands.extend(declared.iter().copied());
+        cands.retain(|&g| g > 0);
+        cands.sort_unstable();
+        cands.dedup();
+        let mut best: Option<(f64, usize)> = None;
+        for g in cands {
+            let Some(t_call) = prof.db.time(&stage, g) else { continue };
+            let calls_per_device = m.div_ceil(g).div_ceil(n_devices.max(1)).max(1);
+            let t = t_call * calls_per_device as f64;
+            let better = match best {
+                Some((bt, bg)) => t < bt || (t == bt && g > bg),
+                None => true,
+            };
+            if better {
+                best = Some((t, g));
+            }
+        }
+        if let Some((_, g)) = best {
+            out.insert(stage, g);
+        }
+    }
+    (!out.is_empty()).then_some(out)
 }
 
 #[cfg(test)]
@@ -732,6 +969,38 @@ mod tests {
 
     fn nop(name: &str) -> Stage {
         Stage::new(name, |_| Box::new(|_: &WorkerCtx| Ok(Box::new(Nop) as Box<dyn WorkerLogic>)))
+    }
+
+    #[test]
+    fn joint_admission_normalizes_overlapping_widths() {
+        // Temporal union plans grant every flow its peak width; admit_all
+        // must normalize the (overlapping) widths to fit the cluster and
+        // admit the whole batch instead of letting the first flow absorb
+        // everything and the second bail.
+        let s = sup(6, SupervisorConfig::default());
+        let mk = |name: &str| {
+            crate::flow::FlowSpec::new(name)
+                .stage(nop("work"))
+                .edge(Edge::new("src").produced_by_driver().consumed_by("work", "m"))
+        };
+        let fa = mk("fa");
+        let fb = mk("fb");
+        for spec in [&fa, &fb] {
+            let key = ProfileStore::flow_key(&spec.profile_signature());
+            let mut db = ProfileDb::new();
+            db.add("work", 8, 0.1, 1 << 20);
+            let mut wl = HashMap::new();
+            wl.insert("work".to_string(), 32usize);
+            s.services().profiles.seed_flow(&key, &db, &wl);
+        }
+        let adms = s
+            .admit_all(vec![(AdmitReq::new("fa", 3), &fa), (AdmitReq::new("fb", 3), &fb)])
+            .unwrap();
+        assert_eq!(adms.len(), 2, "both flows admitted");
+        let total: usize = adms.iter().map(|a| a.window.1).sum();
+        assert!(total <= 6, "planned windows fit the cluster: {adms:?}");
+        assert!(adms.iter().all(|a| a.exclusive), "no forced time-sharing: {adms:?}");
+        assert_eq!(s.services().cluster.free_devices(), 6 - total);
     }
 
     #[test]

@@ -211,5 +211,6 @@ pub fn register(reg: &mut crate::flow::StageRegistry) -> Result<()> {
                 })
             }))
         },
-    )
+    )?;
+    reg.declare_methods("infer", &["logprob_stream", "logprob_batch", "set_weights"])
 }

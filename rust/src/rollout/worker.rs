@@ -249,5 +249,6 @@ pub fn register(reg: &mut crate::flow::StageRegistry) -> anyhow::Result<()> {
                 })
             }))
         },
-    )
+    )?;
+    reg.declare_methods("rollout", &["generate_stream", "generate_batch", "set_weights"])
 }

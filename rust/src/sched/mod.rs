@@ -7,4 +7,4 @@ pub mod profile;
 
 pub use algorithm1::{SchedProblem, Scheduler};
 pub use plan::Plan;
-pub use profile::ProfileDb;
+pub use profile::{EdgeObs, EdgeSample, FlowProfile, ProfileDb, ProfileStore, StageSample};

@@ -1,14 +1,32 @@
-//! Profile database: measured (time, memory) per worker per granularity.
+//! Profile database + live profile store: measured (time, memory) per
+//! worker per granularity.
 //!
-//! The profiler runs each component at a few batch sizes (§3.4); the
-//! scheduler interpolates/extrapolates between measured points with a
-//! linear fit — which matches the measured behaviour of both generation
-//! (linear in batch) and the simulator (near-flat time, linear memory) in
-//! the paper's Figure 3.
+//! Two layers:
+//!
+//! * [`ProfileDb`] — the passive cost table Algorithm 1 reads. The
+//!   profiler runs each component at a few batch sizes (§3.4); the
+//!   scheduler interpolates/extrapolates between measured points with a
+//!   linear fit — which matches the measured behaviour of both generation
+//!   (linear in batch) and the simulator (near-flat time, linear memory)
+//!   in the paper's Figure 3. A *single* measured point is treated as a
+//!   constant cost (no line can be fit through one sample).
+//! * [`ProfileStore`] — the shared, thread-safe **live** profile book
+//!   (PR 5 tentpole). Keyed by the flow's canonical topology signature
+//!   ([`crate::flow::FlowSpec::signature`], hashed via
+//!   [`ProfileStore::flow_key`]), each entry holds a per-stage
+//!   [`ProfileDb`], per-stage workload estimates, and per-edge occupancy.
+//!   Every finished `FlowRun` folds its measurements in (EWMA-merged with
+//!   existing points), the `FlowDriver` consults the store at launch to
+//!   resolve `Auto` placement from *live* data, and the whole book is
+//!   JSON-serializable so a deployment's second process starts from what
+//!   the first one measured.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap};
+use std::sync::{Arc, Mutex};
 
-use crate::util::json::Value;
+use anyhow::{Context, Result};
+
+use crate::util::json::{self, Value};
 use crate::util::stats::linfit;
 
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -39,6 +57,10 @@ impl ProfileDb {
         self.map.keys().cloned().collect()
     }
 
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
     pub fn batches(&self, worker: &str) -> Vec<usize> {
         self.map.get(worker).map(|m| m.keys().copied().collect()).unwrap_or_default()
     }
@@ -59,8 +81,10 @@ impl ProfileDb {
             return None;
         }
         if xs.len() == 1 {
-            // One point: scale linearly through the origin (per-item cost).
-            return Some(ys[0] / xs[0] * batch as f64);
+            // One point is a degenerate fit: a line forced through it (via
+            // the origin or otherwise) wildly over/under-shoots far from
+            // the measured batch. The constant sample is the honest answer.
+            return Some(ys[0]);
         }
         let (a, b) = linfit(&xs, &ys);
         Some((a + b * batch as f64).max(1e-9))
@@ -78,7 +102,8 @@ impl ProfileDb {
             return None;
         }
         if xs.len() == 1 {
-            return Some((ys[0] / xs[0] * batch as f64) as u64);
+            // Same degenerate-fit guard as `time`.
+            return Some(ys[0] as u64);
         }
         let (a, b) = linfit(&xs, &ys);
         Some((a + b * batch as f64).max(0.0) as u64)
@@ -131,6 +156,301 @@ impl ProfileDb {
     }
 }
 
+// ---------------------------------------------------------------------------
+// The live profile store.
+// ---------------------------------------------------------------------------
+
+/// Default weight a fresh sample carries when merged into the store.
+pub const DEFAULT_EWMA_ALPHA: f64 = 0.5;
+
+/// One stage's measurement from a finished `FlowRun`.
+#[derive(Debug, Clone)]
+pub struct StageSample {
+    pub stage: String,
+    /// Micro-batch granularity the stage actually ran at.
+    pub granularity: usize,
+    /// Measured seconds per granularity-sized call.
+    pub secs_per_call: f64,
+    /// Items the stage processed this run (its workload sample).
+    pub items: usize,
+}
+
+/// One edge's occupancy from a finished `FlowRun`.
+#[derive(Debug, Clone)]
+pub struct EdgeSample {
+    pub channel: String,
+    pub put: u64,
+    pub got: u64,
+    pub backlog: usize,
+}
+
+/// EWMA-merged per-edge occupancy (items per run).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct EdgeObs {
+    pub put: f64,
+    pub got: f64,
+    pub backlog: f64,
+}
+
+/// Everything the store knows about one flow topology.
+#[derive(Debug, Clone, Default)]
+pub struct FlowProfile {
+    /// Per-(stage, granularity) cost samples — the `ProfileDb` Algorithm 1
+    /// reads directly.
+    pub db: ProfileDb,
+    /// Per-stage items-per-run estimate (the scheduler's workload `M`).
+    pub workload: BTreeMap<String, f64>,
+    /// Per-edge occupancy (channel -> EWMA of put/got/backlog).
+    pub edges: BTreeMap<String, EdgeObs>,
+    /// Measured runs folded in (seeding does not count as a run).
+    pub runs: u64,
+}
+
+impl FlowProfile {
+    /// Does this profile hold enough to plan from (any cost sample at all)?
+    pub fn ready(&self) -> bool {
+        !self.db.is_empty()
+    }
+
+    /// Workload estimate for one stage, rounded to whole items.
+    pub fn workload_of(&self, stage: &str) -> Option<usize> {
+        self.workload.get(stage).map(|w| w.round().max(1.0) as usize)
+    }
+}
+
+struct StoreInner {
+    alpha: f64,
+    flows: BTreeMap<String, FlowProfile>,
+}
+
+/// Shared, thread-safe live profile book (see the module docs). Cloning is
+/// cheap and shares state — every `Services` clone sees the same book.
+#[derive(Clone)]
+pub struct ProfileStore {
+    inner: Arc<Mutex<StoreInner>>,
+}
+
+impl Default for ProfileStore {
+    fn default() -> Self {
+        ProfileStore::new()
+    }
+}
+
+impl ProfileStore {
+    pub fn new() -> ProfileStore {
+        ProfileStore::with_alpha(DEFAULT_EWMA_ALPHA)
+    }
+
+    /// A store with a specific EWMA smoothing factor (clamped to (0, 1];
+    /// 1.0 = latest run wins outright).
+    pub fn with_alpha(alpha: f64) -> ProfileStore {
+        ProfileStore {
+            inner: Arc::new(Mutex::new(StoreInner {
+                alpha: alpha.clamp(0.01, 1.0),
+                flows: BTreeMap::new(),
+            })),
+        }
+    }
+
+    /// Change the smoothing factor (e.g. from a manifest `[profile].alpha`).
+    pub fn set_alpha(&self, alpha: f64) {
+        self.inner.lock().unwrap().alpha = alpha.clamp(0.01, 1.0);
+    }
+
+    /// Canonical store key for a flow topology: a stable hash of its
+    /// [`crate::flow::FlowSpec::signature`]. Identical declarations (same
+    /// stages, edges, pumps, call args) share one profile regardless of
+    /// scope or process.
+    pub fn flow_key(signature: &Value) -> String {
+        format!("{:016x}", crate::util::fnv1a(&signature.to_json()))
+    }
+
+    /// Fold one finished run's measurements in. Fresh samples are
+    /// EWMA-merged with existing points (`new = α·fresh + (1−α)·old`), so
+    /// the book tracks drift without forgetting history; merge order is
+    /// deterministic for a deterministic sample sequence.
+    pub fn record_run(&self, key: &str, stages: &[StageSample], edges: &[EdgeSample]) {
+        if stages.is_empty() && edges.is_empty() {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        let alpha = inner.alpha;
+        let prof = inner.flows.entry(key.to_string()).or_default();
+        for s in stages {
+            let g = s.granularity.max(1);
+            let (secs, mem) = match prof.db.exact(&s.stage, g) {
+                Some(old) => (alpha * s.secs_per_call + (1.0 - alpha) * old.secs, old.mem_bytes),
+                // The runtime cannot measure device memory; borrow the
+                // stage's (interpolated) footprint from its other sampled
+                // granularities so planning keeps a memory constraint —
+                // an entirely new stage starts at 0 (unconstrained).
+                None => (s.secs_per_call, prof.db.mem(&s.stage, g).unwrap_or(0)),
+            };
+            prof.db.add(&s.stage, g, secs, mem);
+            let fresh = s.items as f64;
+            let w = match prof.workload.get(&s.stage) {
+                Some(old) => alpha * fresh + (1.0 - alpha) * old,
+                None => fresh,
+            };
+            prof.workload.insert(s.stage.clone(), w);
+        }
+        for e in edges {
+            let fresh = EdgeObs {
+                put: e.put as f64,
+                got: e.got as f64,
+                backlog: e.backlog as f64,
+            };
+            let obs = match prof.edges.get(&e.channel) {
+                Some(old) => EdgeObs {
+                    put: alpha * fresh.put + (1.0 - alpha) * old.put,
+                    got: alpha * fresh.got + (1.0 - alpha) * old.got,
+                    backlog: alpha * fresh.backlog + (1.0 - alpha) * old.backlog,
+                },
+                None => fresh,
+            };
+            prof.edges.insert(e.channel.clone(), obs);
+        }
+        if !stages.is_empty() {
+            prof.runs += 1;
+        }
+    }
+
+    /// Seed one flow's cost table from an offline profile (overwrites any
+    /// colliding samples; does not count as a measured run).
+    pub fn seed_flow(&self, key: &str, db: &ProfileDb, workload: &HashMap<String, usize>) {
+        let mut inner = self.inner.lock().unwrap();
+        let prof = inner.flows.entry(key.to_string()).or_default();
+        for w in db.workers() {
+            for b in db.batches(&w) {
+                if let Some(s) = db.exact(&w, b) {
+                    prof.db.add(&w, b, s.secs, s.mem_bytes);
+                }
+            }
+        }
+        for (stage, m) in workload {
+            prof.workload.insert(stage.clone(), *m as f64);
+        }
+    }
+
+    /// Snapshot of one flow's profile (clone; the store keeps evolving).
+    pub fn snapshot(&self, key: &str) -> Option<FlowProfile> {
+        self.inner.lock().unwrap().flows.get(key).cloned()
+    }
+
+    /// Is there enough profile to plan this flow from live data?
+    pub fn ready(&self, key: &str) -> bool {
+        self.inner
+            .lock()
+            .unwrap()
+            .flows
+            .get(key)
+            .map(|p| p.ready())
+            .unwrap_or(false)
+    }
+
+    /// Measured runs folded in for one flow.
+    pub fn runs(&self, key: &str) -> u64 {
+        self.inner.lock().unwrap().flows.get(key).map(|p| p.runs).unwrap_or(0)
+    }
+
+    /// Keys of every profiled flow.
+    pub fn keys(&self) -> Vec<String> {
+        self.inner.lock().unwrap().flows.keys().cloned().collect()
+    }
+
+    pub fn to_json(&self) -> Value {
+        let inner = self.inner.lock().unwrap();
+        let mut root = Value::obj();
+        root.set("alpha", inner.alpha);
+        let mut flows = Value::obj();
+        for (key, p) in &inner.flows {
+            let mut fv = Value::obj();
+            fv.set("runs", p.runs);
+            fv.set("stages", p.db.to_json());
+            let mut wv = Value::obj();
+            for (s, w) in &p.workload {
+                wv.set(s, *w);
+            }
+            fv.set("workload", wv);
+            let mut ev = Value::obj();
+            for (c, o) in &p.edges {
+                let mut ov = Value::obj();
+                ov.set("put", o.put).set("got", o.got).set("backlog", o.backlog);
+                ev.set(c, ov);
+            }
+            fv.set("edges", ev);
+            flows.set(key, fv);
+        }
+        root.set("flows", flows);
+        root
+    }
+
+    /// Merge a serialized book into this store (seed path). Existing
+    /// samples are overwritten by the incoming ones; run counts add up.
+    pub fn merge_json(&self, v: &Value) {
+        let mut inner = self.inner.lock().unwrap();
+        let Some(flows) = v.get("flows").and_then(Value::as_obj) else { return };
+        for (key, fv) in flows {
+            let prof = inner.flows.entry(key.clone()).or_default();
+            if let Some(stages) = fv.get("stages") {
+                let db = ProfileDb::from_json(stages);
+                for w in db.workers() {
+                    for b in db.batches(&w) {
+                        if let Some(s) = db.exact(&w, b) {
+                            prof.db.add(&w, b, s.secs, s.mem_bytes);
+                        }
+                    }
+                }
+            }
+            if let Some(wl) = fv.get("workload").and_then(Value::as_obj) {
+                for (s, w) in wl {
+                    if let Some(x) = w.as_f64() {
+                        prof.workload.insert(s.clone(), x);
+                    }
+                }
+            }
+            if let Some(edges) = fv.get("edges").and_then(Value::as_obj) {
+                for (c, o) in edges {
+                    prof.edges.insert(
+                        c.clone(),
+                        EdgeObs {
+                            put: o.get("put").and_then(Value::as_f64).unwrap_or(0.0),
+                            got: o.get("got").and_then(Value::as_f64).unwrap_or(0.0),
+                            backlog: o.get("backlog").and_then(Value::as_f64).unwrap_or(0.0),
+                        },
+                    );
+                }
+            }
+            prof.runs += fv.get("runs").and_then(Value::as_i64).unwrap_or(0).max(0) as u64;
+        }
+    }
+
+    /// Rebuild a store from its serialized form.
+    pub fn from_json(v: &Value) -> ProfileStore {
+        let alpha = v.get("alpha").and_then(Value::as_f64).unwrap_or(DEFAULT_EWMA_ALPHA);
+        let store = ProfileStore::with_alpha(alpha);
+        store.merge_json(v);
+        store
+    }
+
+    /// Persist the whole book to a JSON file.
+    pub fn save(&self, path: &str) -> Result<()> {
+        std::fs::write(path, self.to_json().to_json_pretty())
+            .with_context(|| format!("writing profile store {path}"))
+    }
+
+    /// Seed this store from a JSON file written by [`ProfileStore::save`].
+    /// Returns the number of flows merged in.
+    pub fn seed_file(&self, path: &str) -> Result<usize> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading profile store {path}"))?;
+        let v = json::parse(&text).with_context(|| format!("parsing profile store {path}"))?;
+        let n = v.get("flows").and_then(Value::as_obj).map(|m| m.len()).unwrap_or(0);
+        self.merge_json(&v);
+        Ok(n)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -150,10 +470,16 @@ mod tests {
     }
 
     #[test]
-    fn single_point_scales_through_origin() {
+    fn single_point_is_constant_not_extrapolated() {
+        // Degenerate-fit guard: one sample yields a constant cost at every
+        // batch instead of a line through the origin (which would claim a
+        // 2x batch costs 2x, on zero evidence).
         let mut db = ProfileDb::new();
         db.add("sim", 10, 2.0, 50);
-        assert!((db.time("sim", 20).unwrap() - 4.0).abs() < 1e-9);
+        assert_eq!(db.time("sim", 20), Some(2.0));
+        assert_eq!(db.time("sim", 5), Some(2.0));
+        assert_eq!(db.mem("sim", 40), Some(50));
+        assert_eq!(db.call_overhead("sim"), 0.0);
     }
 
     #[test]
@@ -173,5 +499,90 @@ mod tests {
         let back = ProfileDb::from_json(&db.to_json());
         assert_eq!(back.exact("a", 4), Some(Sample { secs: 0.25, mem_bytes: 1024 }));
         assert_eq!(back.exact("b", 8), Some(Sample { secs: 1.5, mem_bytes: 2048 }));
+    }
+
+    fn sample(stage: &str, g: usize, secs: f64, items: usize) -> StageSample {
+        StageSample { stage: stage.to_string(), granularity: g, secs_per_call: secs, items }
+    }
+
+    #[test]
+    fn ewma_merge_is_deterministic() {
+        // α = 0.5: after samples 1.0 then 2.0, the stored value is exactly
+        // 0.5·2.0 + 0.5·1.0 = 1.5 — bit-for-bit, every time.
+        for _ in 0..3 {
+            let store = ProfileStore::with_alpha(0.5);
+            store.record_run("k", &[sample("a", 8, 1.0, 32)], &[]);
+            store.record_run("k", &[sample("a", 8, 2.0, 64)], &[]);
+            let p = store.snapshot("k").unwrap();
+            assert_eq!(p.db.exact("a", 8).unwrap().secs, 1.5);
+            assert_eq!(p.workload["a"], 48.0);
+            assert_eq!(p.runs, 2);
+        }
+    }
+
+    #[test]
+    fn edge_occupancy_merges() {
+        let store = ProfileStore::with_alpha(0.5);
+        let e1 = EdgeSample { channel: "c".into(), put: 10, got: 10, backlog: 0 };
+        let e2 = EdgeSample { channel: "c".into(), put: 20, got: 18, backlog: 2 };
+        store.record_run("k", &[sample("a", 4, 0.1, 10)], &[e1]);
+        store.record_run("k", &[sample("a", 4, 0.1, 10)], &[e2]);
+        let p = store.snapshot("k").unwrap();
+        let o = p.edges["c"];
+        assert_eq!(o.put, 15.0);
+        assert_eq!(o.got, 14.0);
+        assert_eq!(o.backlog, 1.0);
+    }
+
+    #[test]
+    fn store_json_roundtrip() {
+        let store = ProfileStore::with_alpha(0.25);
+        store.record_run(
+            "k1",
+            &[sample("rollout", 8, 0.4, 32), sample("train", 4, 0.2, 32)],
+            &[EdgeSample { channel: "prompts".into(), put: 32, got: 32, backlog: 0 }],
+        );
+        store.record_run("k2", &[sample("sim", 16, 1.0, 64)], &[]);
+
+        let back = ProfileStore::from_json(&store.to_json());
+        for key in ["k1", "k2"] {
+            let a = store.snapshot(key).unwrap();
+            let b = back.snapshot(key).unwrap();
+            assert_eq!(a.runs, b.runs, "{key}");
+            assert_eq!(a.workload, b.workload, "{key}");
+            assert_eq!(a.edges, b.edges, "{key}");
+            for w in a.db.workers() {
+                for g in a.db.batches(&w) {
+                    assert_eq!(a.db.exact(&w, g), b.db.exact(&w, g), "{key}:{w}@{g}");
+                }
+            }
+        }
+        // Round-trip preserves readiness and key listing.
+        assert_eq!(store.keys(), back.keys());
+        assert!(back.ready("k1") && back.ready("k2"));
+    }
+
+    #[test]
+    fn seeding_is_ready_but_not_a_run() {
+        let store = ProfileStore::new();
+        let mut db = ProfileDb::new();
+        db.add("a", 8, 0.5, 64);
+        let mut workload = HashMap::new();
+        workload.insert("a".to_string(), 32usize);
+        store.seed_flow("k", &db, &workload);
+        assert!(store.ready("k"));
+        assert_eq!(store.runs("k"), 0, "seeding is not a measured run");
+        let p = store.snapshot("k").unwrap();
+        assert_eq!(p.workload_of("a"), Some(32));
+        assert_eq!(p.db.exact("a", 8).unwrap().secs, 0.5);
+    }
+
+    #[test]
+    fn flow_key_is_stable_and_discriminating() {
+        let a = Value::Str("topology-a".into());
+        let b = Value::Str("topology-b".into());
+        assert_eq!(ProfileStore::flow_key(&a), ProfileStore::flow_key(&a));
+        assert_ne!(ProfileStore::flow_key(&a), ProfileStore::flow_key(&b));
+        assert_eq!(ProfileStore::flow_key(&a).len(), 16);
     }
 }

@@ -253,9 +253,42 @@ impl WorkerLogic for TrainWorker {
                 if !self.params.is_empty() {
                     self.sync_host()?;
                 }
-                let mut p = Payload::new().set_meta("version", self.weight_version);
+                let mut p = Payload::new()
+                    .set_meta("version", self.weight_version)
+                    .set_meta("step", self.step as i64);
                 p.tensors = self.host_params.clone();
                 Ok(p)
+            }
+            // Adopt a served weight snapshot — the relaunch-on-resize
+            // transfer path (a relaunched trainer continues from the old
+            // one's weights). Adam moments restart, matching the
+            // offload/onload simplification above.
+            "set_weights" => {
+                let model = self.model()?.clone();
+                if arg.tensors.len() != model.n_param_tensors() {
+                    bail!(
+                        "set_weights: {} tensors, model has {}",
+                        arg.tensors.len(),
+                        model.n_param_tensors()
+                    );
+                }
+                self.params = arg
+                    .tensors
+                    .iter()
+                    .map(crate::runtime::engine::literal_of)
+                    .collect::<Result<Vec<_>>>()?;
+                self.m = model
+                    .params
+                    .iter()
+                    .map(|p| {
+                        crate::runtime::engine::literal_of(&Tensor::zeros(p.dtype, p.shape.clone()))
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                self.v = self.m.clone_literals();
+                self.step = arg.meta_i64("step").unwrap_or(0) as i32;
+                self.weight_version = arg.meta_i64("version").unwrap_or(0).max(1) as u64;
+                self.host_params = arg.tensors.clone();
+                Ok(Payload::new().set_meta("version", self.weight_version))
             }
             "train_batch" => {
                 // Single micro-batch packed in the payload (tests/baseline):
@@ -420,5 +453,9 @@ pub fn register(reg: &mut crate::flow::StageRegistry) -> Result<()> {
                 })
             }))
         },
+    )?;
+    reg.declare_methods(
+        "train",
+        &["train_stream", "train_batch", "sft_batch", "init_weights", "get_weights", "set_weights"],
     )
 }

@@ -18,6 +18,7 @@ use crate::cluster::{Cluster, DeviceSet};
 use crate::comm::CommManager;
 use crate::data::Payload;
 use crate::metrics::Metrics;
+use crate::sched::ProfileStore;
 
 /// Shared services a group launches against (one per run).
 #[derive(Clone)]
@@ -28,6 +29,10 @@ pub struct Services {
     pub locks: DeviceLockMgr,
     pub metrics: Metrics,
     pub monitor: FailureMonitor,
+    /// Live profile book: fed by every `FlowRun::finish`, consulted by the
+    /// `FlowDriver` (Auto placement) and `FlowSupervisor` (joint admission,
+    /// live re-chunk hints). Shared by every clone of these services.
+    pub profiles: ProfileStore,
 }
 
 impl Services {
@@ -38,6 +43,7 @@ impl Services {
             channels: ChannelRegistry::new(),
             locks: DeviceLockMgr::new(),
             monitor: FailureMonitor::new(),
+            profiles: ProfileStore::new(),
             metrics,
             cluster,
         }

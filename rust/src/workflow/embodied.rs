@@ -26,7 +26,7 @@ use crate::data::Payload;
 use crate::embodied::env::EnvKind;
 use crate::embodied::ood::OodMode;
 use crate::embodied::worker::{PolicyCfg, PolicyWorker, SimCfg, SimWorker};
-use crate::flow::{Edge, FlowDriver, FlowSpec, LaunchOpts, Stage};
+use crate::flow::{Edge, FlowDriver, FlowSpec, LaunchOpts, Relaunch, Stage};
 use crate::worker::group::Services;
 use crate::worker::{LockMode, WorkerLogic};
 
@@ -63,6 +63,10 @@ pub struct EmbodiedReport {
     pub iters: Vec<EmbodiedIter>,
     pub breakdown: Vec<(String, f64)>,
     pub mode: &'static str,
+    /// Relaunch-on-resize events: the flow drained at an iteration
+    /// boundary and relaunched over a supervisor-delivered wider window
+    /// (policy weights are carried across via get/set_weights).
+    pub relaunches: Vec<Relaunch>,
     /// Device-lock fairness counters for this flow. Cyclic stages never
     /// lock (and a cyclic flow cannot time-share a window — the driver
     /// rejects `shared_window` launches), so these stay zero for the
@@ -156,7 +160,8 @@ pub fn run_embodied(cfg: &RunConfig, opts: &EmbodiedOpts) -> Result<EmbodiedRepo
 
 /// Run embodied PPO against **shared** services under multi-flow
 /// [`LaunchOpts`] — the `FlowSupervisor` entry point. `run_embodied` is
-/// the single-flow shim over this.
+/// the single-flow shim over this. Rebuilds the canonical spec on demand,
+/// so relaunch-on-resize is fully supported.
 pub fn run_embodied_shared(
     cfg: &RunConfig,
     opts: &EmbodiedOpts,
@@ -164,19 +169,40 @@ pub fn run_embodied_shared(
     launch: LaunchOpts,
 ) -> Result<EmbodiedReport> {
     let kind = EnvKind::parse(&cfg.embodied.env_kind);
-    let spec = embodied_spec(cfg, opts, kind);
-    run_embodied_with_spec(cfg, opts, services, launch, spec)
+    let c = cfg.clone();
+    let o = opts.clone();
+    run_embodied_elastic(cfg, opts, services, launch, move |_n| Ok(embodied_spec(&c, &o, kind)))
 }
 
 /// Run embodied PPO over a **caller-supplied spec** — the entry point
 /// flow manifests use. The spec must keep the canonical names: stages
 /// `sim`/`policy` with methods `serve_rollout`/`collect_and_train`.
+/// One-shot: pending resize offers are ignored (no way to rebuild the
+/// spec) — use [`run_embodied_elastic`] for relaunch-on-resize.
 pub fn run_embodied_with_spec(
     cfg: &RunConfig,
     opts: &EmbodiedOpts,
     services: &Services,
     launch: LaunchOpts,
     spec: FlowSpec,
+) -> Result<EmbodiedReport> {
+    let mut once = Some(spec);
+    run_embodied_elastic(cfg, opts, services, launch, move |_n| {
+        once.take()
+            .ok_or_else(|| anyhow!("one-shot spec already consumed; relaunch needs a spec factory"))
+    })
+}
+
+/// The adaptive embodied runner: between iterations, a pending resize
+/// offer (delivered through the launch options' resize slot) triggers a
+/// drain-and-relaunch over the wider window. The trained policy weights
+/// are carried across the relaunch (`get_weights` → `set_weights`).
+pub fn run_embodied_elastic(
+    cfg: &RunConfig,
+    opts: &EmbodiedOpts,
+    services: &Services,
+    launch: LaunchOpts,
+    mut make_spec: impl FnMut(usize) -> Result<FlowSpec>,
 ) -> Result<EmbodiedReport> {
     let kind = EnvKind::parse(&cfg.embodied.env_kind);
 
@@ -194,7 +220,10 @@ pub fn run_embodied_with_spec(
         m => m,
     };
 
-    let driver = FlowDriver::launch_with(spec, services, mode, launch)?;
+    let n_devices = launch.window.map(|(_, l)| l).unwrap_or(services.cluster.num_devices());
+    let spec = make_spec(n_devices)?;
+    let mut launch = launch;
+    let mut driver = FlowDriver::launch_with(spec, services, mode, launch.clone())?;
     // Cyclic stages are never locked, so both pre-load and stay resident.
     driver.onload_pipelined()?;
     driver
@@ -203,8 +232,85 @@ pub fn run_embodied_with_spec(
         .wait()
         .context("policy init")?;
 
+    let mut relaunches: Vec<Relaunch> = Vec::new();
     let mut iters = Vec::new();
     for iter in 0..cfg.iters {
+        // Relaunch-on-resize at the iteration boundary: the previous run
+        // fully drained (finish() barriers), so the sim ⇄ policy cycle is
+        // quiescent. Policy weights travel across the relaunch.
+        if let Some(new_opts) = launch.resize.take() {
+            let n = new_opts.window.map(|(_, l)| l).unwrap_or(services.cluster.num_devices());
+            match make_spec(n) {
+                Ok(spec) => {
+                    // Snapshot the trained policy; a failure is loud (a
+                    // silent re-init would be an undetectable regression).
+                    let weights = match driver
+                        .group("policy")?
+                        .invoke_rank(0, "get_weights", Payload::new(), LockMode::None)
+                        .wait()
+                    {
+                        Ok(mut v) => Some(v.remove(0)),
+                        Err(e) => {
+                            eprintln!(
+                                "[resize] policy weight snapshot failed ({e:#}); the \
+                                 relaunched policy re-initializes from seed"
+                            );
+                            None
+                        }
+                    };
+                    let (d, applied) = super::swap_driver(
+                        services,
+                        mode,
+                        driver,
+                        spec,
+                        &launch,
+                        &new_opts,
+                        &mut make_spec,
+                    )?;
+                    driver = d;
+                    driver.onload_pipelined()?;
+                    if let Some(w) = weights {
+                        driver
+                            .group("policy")?
+                            .invoke_rank(0, "set_weights", w, LockMode::None)
+                            .wait()
+                            .context("restore policy weights after relaunch")?;
+                    } else {
+                        driver
+                            .group("policy")?
+                            .invoke_rank(
+                                0,
+                                "init_weights",
+                                Payload::new().set_meta("seed", cfg.seed),
+                                LockMode::None,
+                            )
+                            .wait()
+                            .context("policy re-init after relaunch")?;
+                    }
+                    if applied {
+                        relaunches.push(Relaunch {
+                            at_iter: iter,
+                            window: new_opts.window,
+                            mode: driver.mode(),
+                        });
+                        if opts.verbose {
+                            println!(
+                                "[resize] relaunched over window {:?} [{}] before iter {iter}",
+                                new_opts.window,
+                                driver.mode()
+                            );
+                        }
+                        launch = new_opts;
+                    }
+                }
+                Err(e) => {
+                    if opts.verbose {
+                        println!("[resize] offer ignored: {e:#}");
+                    }
+                }
+            }
+        }
+
         let t0 = Instant::now();
         let mut run = driver.begin()?;
         run.start()?;
@@ -249,6 +355,7 @@ pub fn run_embodied_with_spec(
         // Per-flow view (scope-filtered on shared services).
         breakdown: driver.breakdown(),
         mode: driver.mode(),
+        relaunches,
         locks: driver.lock_counters(),
     })
 }

@@ -16,10 +16,53 @@
 pub mod embodied;
 pub mod reasoning;
 
+use anyhow::{Context, Result};
+
+use crate::config::PlacementMode;
+use crate::flow::{FlowDriver, FlowSpec, LaunchOpts};
+use crate::worker::group::Services;
+
+/// The shared relaunch-on-resize swap both runners use: drop `old`
+/// (freeing its scoped endpoints and channels) and relaunch over
+/// `new_opts`. If the resized launch fails — e.g. the wider window is
+/// invalid for this flow — fall back to relaunching over the *previous*
+/// options (`launch`): the old window is still owned, so a bad resize
+/// offer must not kill a healthy training run. Returns the new driver and
+/// whether the resize was actually applied. Weight carry (snapshot before,
+/// restore after) stays with the caller — it is workload-specific.
+pub(crate) fn swap_driver(
+    services: &Services,
+    mode: PlacementMode,
+    old: FlowDriver,
+    spec: FlowSpec,
+    launch: &LaunchOpts,
+    new_opts: &LaunchOpts,
+    make_spec: &mut dyn FnMut(usize) -> Result<FlowSpec>,
+) -> Result<(FlowDriver, bool)> {
+    drop(old);
+    match FlowDriver::launch_with(spec, services, mode, new_opts.clone()) {
+        Ok(d) => Ok((d, true)),
+        Err(e) => {
+            eprintln!(
+                "[resize] relaunch over window {:?} failed: {e:#}; restoring the previous \
+                 window {:?}",
+                new_opts.window, launch.window
+            );
+            let n = launch.window.map(|(_, l)| l).unwrap_or(services.cluster.num_devices());
+            let spec = make_spec(n)
+                .context("rebuilding the spec for the previous window after a failed resize")?;
+            let d = FlowDriver::launch_with(spec, services, mode, launch.clone())
+                .context("relaunching over the previous window after a failed resize")?;
+            Ok((d, false))
+        }
+    }
+}
+
 pub use embodied::{
-    embodied_spec, run_embodied, run_embodied_shared, run_embodied_with_spec, EmbodiedOpts,
-    EmbodiedReport,
+    embodied_spec, run_embodied, run_embodied_elastic, run_embodied_shared,
+    run_embodied_with_spec, EmbodiedOpts, EmbodiedReport,
 };
 pub use reasoning::{
-    grpo_spec, run_grpo, run_grpo_shared, run_grpo_with_spec, GrpoReport, IterStats, RunnerOpts,
+    grpo_spec, run_grpo, run_grpo_elastic, run_grpo_shared, run_grpo_with_spec, GrpoReport,
+    IterStats, RunnerOpts,
 };

@@ -32,13 +32,13 @@ use crate::channel::LockCounters;
 use crate::cluster::Cluster;
 use crate::config::{PlacementMode, RunConfig};
 use crate::data::{Payload, Tensor};
-use crate::flow::{Edge, FlowDriver, FlowSpec, LaunchOpts, Stage};
+use crate::flow::{Edge, FlowDriver, FlowSpec, LaunchOpts, Relaunch, Stage};
 use crate::infer::{InferCfg, InferWorker};
 use crate::metrics::Reduce;
 use crate::model::{TaskGen, Tokenizer};
 use crate::rollout::worker::{RolloutCfg, RolloutWorker};
 use crate::runtime::Manifest;
-use crate::sched::ProfileDb;
+use crate::sched::{ProfileDb, ProfileStore};
 use crate::train::advantage::group_normalize;
 use crate::train::worker::{TrainCfg, TrainWorker};
 use crate::util::json::Value;
@@ -80,6 +80,12 @@ pub struct GrpoReport {
     pub breakdown: Vec<(String, f64)>,
     pub mode: &'static str,
     pub plan_rendered: Option<String>,
+    /// How the (final) driver's placement was chosen: `"declared"`,
+    /// `"heuristic"`, or `"profiled"` (live ProfileStore planning).
+    pub plan_source: &'static str,
+    /// Relaunch-on-resize events: the flow drained at an iteration
+    /// boundary and relaunched over a supervisor-delivered wider window.
+    pub relaunches: Vec<Relaunch>,
     /// Device-lock fairness counters for this flow (contention and
     /// preemptions — meaningful when sharing a cluster with other flows).
     pub locks: LockCounters,
@@ -133,6 +139,8 @@ impl GrpoReport {
             })
             .collect();
         v.set("breakdown", Value::Arr(bd));
+        v.set("plan_source", self.plan_source);
+        v.set("relaunches", self.relaunches.len());
         v
     }
 }
@@ -253,61 +261,74 @@ pub fn run_grpo(cfg: &RunConfig, opts: &RunnerOpts) -> Result<GrpoReport> {
 /// Run GRPO against **shared** services under multi-flow [`LaunchOpts`]
 /// (name scope, device window, lock-priority band) — the entry point the
 /// `FlowSupervisor` admission hands out. `run_grpo` is the single-flow
-/// shim over this.
+/// shim over this. Rebuilds the canonical spec on demand, so
+/// relaunch-on-resize is fully supported.
 pub fn run_grpo_shared(
     cfg: &RunConfig,
     opts: &RunnerOpts,
     services: &Services,
     launch: LaunchOpts,
 ) -> Result<GrpoReport> {
-    let n_devices = launch.window.map(|(_, l)| l).unwrap_or(services.cluster.num_devices());
     let gran = if cfg.sched.granularity > 0 { cfg.sched.granularity } else { 8 };
-    let spec = grpo_spec(cfg, opts, gran, n_devices)?;
-    run_grpo_with_spec(cfg, opts, services, launch, spec)
+    let c = cfg.clone();
+    let o = opts.clone();
+    run_grpo_elastic(cfg, opts, services, launch, move |n| grpo_spec(&c, &o, gran, n))
 }
 
 /// Run GRPO over a **caller-supplied spec** — the entry point flow
 /// manifests use (`configs/grpo.flow.toml` → `FlowManifest::to_spec` →
 /// here). The spec must keep the canonical GRPO names: stages
 /// `rollout`/`infer`/`train` and channels `prompts`/`scored`/`train`
-/// (the driver-side iteration logic addresses them by name).
+/// (the driver-side iteration logic addresses them by name). One-shot:
+/// with no way to rebuild the spec, pending resize offers are ignored —
+/// use [`run_grpo_elastic`] with a spec factory for relaunch-on-resize.
 pub fn run_grpo_with_spec(
     cfg: &RunConfig,
     opts: &RunnerOpts,
     services: &Services,
-    mut launch: LaunchOpts,
+    launch: LaunchOpts,
     spec: FlowSpec,
 ) -> Result<GrpoReport> {
+    let mut once = Some(spec);
+    run_grpo_elastic(cfg, opts, services, launch, move |_n| {
+        once.take()
+            .ok_or_else(|| anyhow!("one-shot spec already consumed; relaunch needs a spec factory"))
+    })
+}
+
+/// The full adaptive GRPO runner: `make_spec(n_devices)` builds the flow
+/// spec for a window of `n_devices`, the driver resolves `Auto` placement
+/// from the live [`ProfileStore`] (cold-starting it with one §3.4
+/// profiling run when empty), every finished iteration feeds measurements
+/// back, and between iterations the runner accepts any pending
+/// [`crate::flow::ResizeOffer`] delivered through the launch options'
+/// resize slot — draining in-flight batches, dropping the driver, and
+/// relaunching over the wider window with re-planned granularities.
+pub fn run_grpo_elastic(
+    cfg: &RunConfig,
+    opts: &RunnerOpts,
+    services: &Services,
+    launch: LaunchOpts,
+    mut make_spec: impl FnMut(usize) -> Result<FlowSpec>,
+) -> Result<GrpoReport> {
     let n_devices = launch.window.map(|(_, l)| l).unwrap_or(services.cluster.num_devices());
+    let spec = make_spec(n_devices)?;
 
-    // Resolve Auto via profiling + Algorithm 1 over the declared graph;
-    // the plan's granularities ride into the launch as re-chunk hints
-    // (snapped per edge to the declared options).
-    let (mode, plan_rendered) = match cfg.sched.mode {
-        PlacementMode::Auto => {
-            let (mode, rendered, hints) = auto_schedule(cfg, opts, n_devices, &spec)?;
-            for (stage, g) in hints {
-                launch.rechunk.entry(stage).or_insert(g);
-            }
-            (mode, Some(rendered))
+    // Cold start: under Auto with no live profile for this topology yet,
+    // run the §3.4 profiler once (tiny collocated run) and seed the store
+    // so the launch below plans from measured data. Later launches — and
+    // every relaunch — skip this: the store already holds live samples.
+    if cfg.sched.mode == PlacementMode::Auto {
+        let key = ProfileStore::flow_key(&spec.profile_signature());
+        if !services.profiles.ready(&key) {
+            seed_profile(cfg, opts, services, &key)?;
         }
-        m => (m, None),
-    };
-    let driver = FlowDriver::launch_with(spec, services, mode, launch)?;
-
-    // Pre-load stages that keep device residency in pipelined modes.
-    driver.onload_pipelined()?;
-
-    // Initialize weights on the trainer and sync everyone.
-    driver
-        .group("train")?
-        .invoke_rank(0, "init_weights", Payload::new().set_meta("seed", cfg.seed), driver.lock_of("train"))
-        .wait()
-        .context("init_weights")?;
-    if cfg.train.sft_steps > 0 {
-        sft_warmup(cfg, &driver, opts.verbose)?;
     }
-    sync_weights(&driver)?;
+
+    let mut launch = launch;
+    let mut driver = FlowDriver::launch_with(spec, services, cfg.sched.mode, launch.clone())?;
+    let mut plan_rendered = driver.plan_note().map(str::to_string);
+    init_flow(cfg, opts, &driver)?;
 
     let tok = Tokenizer::new();
     let manifest = Manifest::load(&cfg.artifacts_dir)?;
@@ -319,8 +340,96 @@ pub fn run_grpo_with_spec(
         TaskGen::new(cfg.seed ^ 0x7357)
     };
 
+    let mut relaunches: Vec<Relaunch> = Vec::new();
     let mut iters = Vec::new();
     for iter in 0..cfg.iters {
+        // Relaunch-on-resize: an accepted offer delivered between
+        // iterations. The previous iteration's run is fully drained
+        // (finish() barriers on every stage), so nothing is in flight;
+        // drop the driver (freeing its scoped endpoints and channels) and
+        // relaunch over the wider window. Auto placement re-resolves from
+        // the store — now warm with this flow's own measurements.
+        if let Some(new_opts) = launch.resize.take() {
+            let n = new_opts.window.map(|(_, l)| l).unwrap_or(services.cluster.num_devices());
+            match make_spec(n) {
+                Ok(spec) => {
+                    // Carry the trained weights across the relaunch: the
+                    // served snapshot from the retiring trainer seeds the
+                    // relaunched one (Adam moments restart — the same
+                    // simplification the offload path makes). A failed
+                    // snapshot is loud: silently restarting from seed would
+                    // be an undetectable training regression.
+                    let weights = match driver
+                        .group("train")?
+                        .invoke_rank(0, "get_weights", Payload::new(), driver.lock_of("train"))
+                        .wait()
+                    {
+                        Ok(mut v) => Some(v.remove(0)),
+                        Err(e) => {
+                            eprintln!(
+                                "[resize] trainer weight snapshot failed ({e:#}); the \
+                                 relaunched trainer re-initializes from seed"
+                            );
+                            None
+                        }
+                    };
+                    let (d, applied) = super::swap_driver(
+                        services,
+                        cfg.sched.mode,
+                        driver,
+                        spec,
+                        &launch,
+                        &new_opts,
+                        &mut make_spec,
+                    )?;
+                    driver = d;
+                    driver.onload_pipelined()?;
+                    if let Some(w) = weights {
+                        driver
+                            .group("train")?
+                            .invoke_rank(0, "set_weights", w, driver.lock_of("train"))
+                            .wait()
+                            .context("restore trainer weights after relaunch")?;
+                    } else {
+                        driver
+                            .group("train")?
+                            .invoke_rank(
+                                0,
+                                "init_weights",
+                                Payload::new().set_meta("seed", cfg.seed),
+                                driver.lock_of("train"),
+                            )
+                            .wait()
+                            .context("trainer re-init after relaunch")?;
+                    }
+                    sync_weights(&driver)?;
+                    if applied {
+                        relaunches.push(Relaunch {
+                            at_iter: iter,
+                            window: new_opts.window,
+                            mode: driver.mode(),
+                        });
+                        // The relaunched driver's plan supersedes the old
+                        // one — even when it resolved without a note.
+                        plan_rendered = driver.plan_note().map(str::to_string);
+                        if opts.verbose {
+                            println!(
+                                "[resize] relaunched over window {:?} [{}] before iter {iter}",
+                                new_opts.window,
+                                driver.mode()
+                            );
+                        }
+                        launch = new_opts;
+                    }
+                }
+                Err(e) => {
+                    if opts.verbose {
+                        println!("[resize] offer ignored: {e:#}");
+                    }
+                }
+            }
+        }
+
         services.metrics.record_value("iter.begin", iter as f64);
         let t0 = Instant::now();
         let stats = run_iteration(cfg, services, &driver, &tok, &mut taskgen, p_len)?;
@@ -362,8 +471,27 @@ pub fn run_grpo_with_spec(
         breakdown,
         mode: driver.mode(),
         plan_rendered,
+        plan_source: driver.plan_source(),
+        relaunches,
         locks: driver.lock_counters(),
     })
+}
+
+/// First-launch initialization: residency pre-load, trainer weight init,
+/// optional SFT warm-start, and the weight-sync barrier. (Relaunches
+/// restore the previous trainer's weights instead — see the resize path
+/// in [`run_grpo_elastic`].)
+fn init_flow(cfg: &RunConfig, opts: &RunnerOpts, driver: &FlowDriver) -> Result<()> {
+    driver.onload_pipelined()?;
+    driver
+        .group("train")?
+        .invoke_rank(0, "init_weights", Payload::new().set_meta("seed", cfg.seed), driver.lock_of("train"))
+        .wait()
+        .context("init_weights")?;
+    if cfg.train.sft_steps > 0 {
+        sft_warmup(cfg, driver, opts.verbose)?;
+    }
+    sync_weights(driver)
 }
 
 /// One iteration; returns (tokens, mean_reward, accuracy, loss, steps, skipped).
@@ -561,17 +689,13 @@ fn sync_weights(driver: &FlowDriver) -> Result<()> {
     Ok(())
 }
 
-/// Auto mode: profile one tiny collocated run, build the cost model, then
-/// let the driver plan Algorithm 1 over the *declared* graph (no hand-
-/// wired `WorkflowGraph` — the spec is the source of truth). `n_devices`
-/// is the flow's device window width: under a supervisor admission the
-/// plan must be drawn for the window, not the whole cluster.
-fn auto_schedule(
-    cfg: &RunConfig,
-    opts: &RunnerOpts,
-    n_devices: usize,
-    spec: &FlowSpec,
-) -> Result<(PlacementMode, String, HashMap<String, usize>)> {
+/// Cold-start profiler (§3.4): run one tiny collocated iteration batch on
+/// a fresh mini-cluster, convert the measured phase times into a per-stage
+/// cost table, and **seed the shared [`ProfileStore`]** under `key`. The
+/// caller's subsequent `Auto` launch then plans Algorithm 1 from the
+/// store — and every later run keeps refining it with live measurements,
+/// so the offline profiler runs at most once per topology per store.
+fn seed_profile(cfg: &RunConfig, opts: &RunnerOpts, services: &Services, key: &str) -> Result<()> {
     // Profile with a reduced workload on a fresh mini-cluster.
     let mut pcfg = cfg.clone();
     pcfg.iters = cfg.sched.profile_iters.max(1);
@@ -602,20 +726,11 @@ fn auto_schedule(
     }
 
     let mut workload = HashMap::new();
-    let mut granularities = HashMap::new();
     for w in ["rollout", "infer", "train"] {
         workload.insert(w.to_string(), cfg.responses_per_iter());
-        granularities.insert(w.to_string(), grans.clone());
     }
-    FlowDriver::plan_auto(
-        spec,
-        n_devices,
-        cfg.cluster.device_mem,
-        &db,
-        &workload,
-        &granularities,
-        2.0 * phase_time("runtime") / pcfg.iters.max(1) as f64 + 0.01,
-    )
+    services.profiles.seed_flow(key, &db, &workload);
+    Ok(())
 }
 
 /// Convenience accessor used by benches: phase seconds from a report.

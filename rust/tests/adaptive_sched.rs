@@ -1,0 +1,257 @@
+//! Adaptive-scheduling integration: the live-profile control loop.
+//!
+//! Run 1 of an `Auto` flow launches on the graph-shape heuristic (the
+//! shared `ProfileStore` is empty) and its finished run feeds measured
+//! per-stage costs back; run 2 of the *same topology* resolves `Auto`
+//! through Algorithm 1 over the live profile (`plan_source() ==
+//! "profiled"`), and repeated launches reproduce the same plan. The same
+//! loop works across a JSON persistence round-trip — a fresh process
+//! seeded from the persisted store plans from measured data immediately.
+//! This is the acceptance pin for "run the same manifest twice: heuristic
+//! plan on run 1, measured-profile Auto plan on run 2".
+
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+use rlinf::cluster::Cluster;
+use rlinf::config::{ClusterConfig, PlacementMode};
+use rlinf::data::Payload;
+use rlinf::flow::{Edge, FlowDriver, FlowSpec, Stage};
+use rlinf::sched::ProfileStore;
+use rlinf::worker::group::Services;
+use rlinf::worker::{WorkerCtx, WorkerLogic};
+
+/// Relays port "in" to port "out" with ~1ms of simulated work per item.
+struct Work;
+
+impl WorkerLogic for Work {
+    fn call(&mut self, ctx: &WorkerCtx, method: &str, _arg: Payload) -> Result<Payload> {
+        match method {
+            "run" => {
+                let inp = ctx.port("in")?;
+                let out = ctx.port("out")?;
+                let me = ctx.endpoint();
+                let mut n = 0i64;
+                while let Some(item) = inp.recv(me) {
+                    std::thread::sleep(Duration::from_millis(1));
+                    out.send(me, item.payload)?;
+                    n += 1;
+                }
+                out.done(me);
+                Ok(Payload::new().set_meta("n", n))
+            }
+            other => bail!("no method {other}"),
+        }
+    }
+}
+
+/// Drains port "in".
+struct Tail;
+
+impl WorkerLogic for Tail {
+    fn call(&mut self, ctx: &WorkerCtx, method: &str, _arg: Payload) -> Result<Payload> {
+        match method {
+            "drain" => {
+                let inp = ctx.port("in")?;
+                let me = ctx.endpoint();
+                let mut n = 0i64;
+                while inp.recv(me).is_some() {
+                    n += 1;
+                }
+                Ok(Payload::new().set_meta("n", n))
+            }
+            other => bail!("no method {other}"),
+        }
+    }
+}
+
+/// Two-stage pipeline with declared granularity options — rebuilt fresh
+/// for every launch (factories are not Clone); all builds share one
+/// topology signature and therefore one ProfileStore entry.
+fn adaptive_spec() -> FlowSpec {
+    FlowSpec::new("adaptive")
+        .stage(
+            Stage::new("work", |_| {
+                Box::new(|_: &WorkerCtx| Ok(Box::new(Work) as Box<dyn WorkerLogic>))
+            })
+            .single_rank()
+            .weight(2.0),
+        )
+        .stage(
+            Stage::new("tail", |_| {
+                Box::new(|_: &WorkerCtx| Ok(Box::new(Tail) as Box<dyn WorkerLogic>))
+            })
+            .single_rank(),
+        )
+        .edge(
+            Edge::new("src")
+                .produced_by_driver()
+                .consumed_by("work", "run")
+                .granularity(2)
+                .granularity_options(vec![1, 2, 4]),
+        )
+        .edge(Edge::new("mid").produced_by("work", "run").consumed_by("tail", "drain"))
+}
+
+fn services(devices: usize) -> Services {
+    Services::new(Cluster::new(ClusterConfig {
+        nodes: 1,
+        devices_per_node: devices,
+        ..Default::default()
+    }))
+}
+
+const ITEMS: usize = 8;
+
+/// One full measured run through the driver.
+fn run_once(driver: &FlowDriver) {
+    let mut run = driver.begin().unwrap();
+    run.start().unwrap();
+    let items: Vec<(Payload, f64)> =
+        (0..ITEMS).map(|i| (Payload::new().set_meta("i", i as i64), 1.0)).collect();
+    run.send_batch("src", items).unwrap();
+    run.feed_done("src").unwrap();
+    let report = run.finish().unwrap();
+    assert_eq!(report.edge("mid").unwrap().got, ITEMS as u64);
+}
+
+#[test]
+fn second_auto_launch_plans_from_the_live_profile() {
+    let svc = services(2);
+    let key = ProfileStore::flow_key(&adaptive_spec().profile_signature());
+    assert!(!svc.profiles.ready(&key), "fresh store");
+
+    // Run 1: Auto resolves by the graph-shape heuristic (no profile yet).
+    let d1 = FlowDriver::launch_with(
+        adaptive_spec(),
+        &svc,
+        PlacementMode::Auto,
+        Default::default(),
+    )
+    .unwrap();
+    assert_eq!(d1.plan_source(), "heuristic");
+    assert!(d1.plan_note().is_none());
+    run_once(&d1);
+    drop(d1);
+
+    // The finished run fed the store: both stages sampled, workload ≈ the
+    // items fed, one measured run.
+    assert!(svc.profiles.ready(&key));
+    assert_eq!(svc.profiles.runs(&key), 1);
+    let prof = svc.profiles.snapshot(&key).unwrap();
+    assert!(prof.db.batches("work").contains(&2), "sampled at the effective granularity");
+    assert!(!prof.db.batches("tail").is_empty());
+    assert_eq!(prof.workload_of("work"), Some(ITEMS));
+    assert_eq!(prof.edges["src"].got, ITEMS as f64);
+
+    // Run 2: the same topology now resolves Auto from the live profile.
+    let d2 = FlowDriver::launch_with(
+        adaptive_spec(),
+        &svc,
+        PlacementMode::Auto,
+        Default::default(),
+    )
+    .unwrap();
+    assert_eq!(d2.plan_source(), "profiled");
+    let note = d2.plan_note().expect("live plan rendered").to_string();
+    assert!(note.contains("algorithm1 plan"), "{note}");
+    assert!(note.contains("1 live runs"), "{note}");
+    let mode2 = d2.mode();
+    let rechunks2 = d2.rechunks().to_vec();
+    drop(d2);
+
+    // Pin: repeated profiled launches reproduce the same placement (the
+    // store content is unchanged — launching alone records nothing).
+    let d3 = FlowDriver::launch_with(
+        adaptive_spec(),
+        &svc,
+        PlacementMode::Auto,
+        Default::default(),
+    )
+    .unwrap();
+    assert_eq!(d3.plan_source(), "profiled");
+    assert_eq!(d3.mode(), mode2, "profiled Auto placement is reproducible");
+    assert_eq!(d3.rechunks(), rechunks2.as_slice(), "profiled re-chunk hints are reproducible");
+}
+
+#[test]
+fn persisted_store_reproduces_the_profiled_plan_in_a_fresh_process() {
+    // Process 1: measure once, plan profiled, persist the store.
+    let svc1 = services(2);
+    let d1 = FlowDriver::launch_with(
+        adaptive_spec(),
+        &svc1,
+        PlacementMode::Auto,
+        Default::default(),
+    )
+    .unwrap();
+    run_once(&d1);
+    drop(d1);
+    let d2 = FlowDriver::launch_with(
+        adaptive_spec(),
+        &svc1,
+        PlacementMode::Auto,
+        Default::default(),
+    )
+    .unwrap();
+    assert_eq!(d2.plan_source(), "profiled");
+    let mode = d2.mode();
+    let rechunks = d2.rechunks().to_vec();
+    drop(d2);
+
+    let path = std::env::temp_dir()
+        .join(format!("rlinf_profile_store_{}.json", std::process::id()))
+        .to_string_lossy()
+        .to_string();
+    svc1.profiles.save(&path).unwrap();
+
+    // "Process 2": a fresh cluster/services seeded from the persisted
+    // file plans the identical profiled placement with zero warm-up runs.
+    let svc2 = services(2);
+    let key = ProfileStore::flow_key(&adaptive_spec().profile_signature());
+    assert!(!svc2.profiles.ready(&key));
+    let seeded = svc2.profiles.seed_file(&path).unwrap();
+    assert!(seeded >= 1, "at least this flow seeded");
+    assert!(svc2.profiles.ready(&key));
+
+    let d3 = FlowDriver::launch_with(
+        adaptive_spec(),
+        &svc2,
+        PlacementMode::Auto,
+        Default::default(),
+    )
+    .unwrap();
+    assert_eq!(d3.plan_source(), "profiled");
+    assert_eq!(d3.mode(), mode, "persisted profile reproduces the plan");
+    assert_eq!(d3.rechunks(), rechunks.as_slice());
+    drop(d3);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn declared_modes_never_consult_the_store() {
+    let svc = services(2);
+    let d = FlowDriver::launch_with(
+        adaptive_spec(),
+        &svc,
+        PlacementMode::Collocated,
+        Default::default(),
+    )
+    .unwrap();
+    assert_eq!(d.plan_source(), "declared");
+    assert!(d.plan_note().is_none());
+    run_once(&d);
+    drop(d);
+    // Measurements still recorded (the loop learns under every mode)…
+    let key = ProfileStore::flow_key(&adaptive_spec().profile_signature());
+    assert!(svc.profiles.ready(&key));
+    // …and a declared mode stays declared on the next launch.
+    let d = FlowDriver::launch_with(
+        adaptive_spec(),
+        &svc,
+        PlacementMode::Disaggregated,
+        Default::default(),
+    )
+    .unwrap();
+    assert_eq!(d.plan_source(), "declared");
+}

@@ -8,7 +8,7 @@ use rlinf::cluster::Cluster;
 use rlinf::config::{ClusterConfig, PlacementMode};
 use rlinf::data::Payload;
 use rlinf::embodied::EnvKind;
-use rlinf::flow::manifest::{load_any, FlowManifest, LoadedManifest};
+use rlinf::flow::manifest::{load_any, load_tree, FlowManifest, LoadedManifest};
 use rlinf::flow::{Edge, FlowDriver, FlowSpec, LaunchOpts, Rechunk, Stage, StageRegistry};
 use rlinf::worker::group::Services;
 use rlinf::worker::{WorkerCtx, WorkerLogic};
@@ -312,6 +312,236 @@ to = "driver"
     );
     let err = format!("{:#}", m.lint(&StageRegistry::builtin()).unwrap_err());
     assert!(err.contains("never touches a stage"), "{err}");
+}
+
+#[test]
+fn edge_method_outside_kind_schema_rejected() {
+    // Registry-declared method schemas: "rollout" lists its callable
+    // methods, so an endpoint naming a typo'd method fails lint with the
+    // declared list in the message.
+    let m = manifest(
+        r#"
+[flow]
+name = "x"
+[[stage]]
+name = "gen"
+kind = "rollout"
+[[edge]]
+channel = "c"
+from = "driver"
+to = "gen.generate_streamz"
+"#,
+    );
+    let err = format!("{:#}", m.to_spec(&StageRegistry::builtin()).unwrap_err());
+    assert!(err.contains("generate_streamz") && err.contains("no method"), "{err}");
+    assert!(err.contains("generate_stream"), "error lists declared methods: {err}");
+    assert!(err.contains("[[edge]] \"c\".to"), "{err}");
+}
+
+#[test]
+fn call_method_outside_kind_schema_rejected() {
+    let m = manifest(
+        r#"
+[flow]
+name = "x"
+[[stage]]
+name = "t"
+kind = "train"
+[[edge]]
+channel = "c"
+from = "driver"
+to = "t.train_stream"
+[[call]]
+stage = "t"
+method = "init_weightz"
+seed = 1
+"#,
+    );
+    let err = format!("{:#}", m.to_spec(&StageRegistry::builtin()).unwrap_err());
+    assert!(err.contains("init_weightz") && err.contains("no method"), "{err}");
+    assert!(err.contains("init_weights"), "{err}");
+}
+
+#[test]
+fn wildcard_kinds_accept_any_method() {
+    // Generic kinds (relay/sink) declare no methods — any name passes.
+    let m = manifest(
+        r#"
+[flow]
+name = "x"
+[[stage]]
+name = "a"
+kind = "relay"
+[[edge]]
+channel = "c"
+from = "driver"
+to = "a.whatever_method"
+[[edge]]
+channel = "d"
+from = "a.whatever_method@out2"
+to = "driver"
+"#,
+    );
+    m.to_spec(&StageRegistry::builtin()).unwrap();
+}
+
+#[test]
+fn profile_section_parsed_and_typo_checked() {
+    let m = manifest(
+        r#"
+[flow]
+name = "x"
+[[stage]]
+name = "a"
+kind = "sink"
+[[edge]]
+channel = "c"
+from = "driver"
+to = "a.m"
+[profile]
+seed = "store.json"
+persist = "store.json"
+alpha = 0.25
+"#,
+    );
+    assert_eq!(m.profile.seed.as_deref(), Some("store.json"));
+    assert_eq!(m.profile.persist.as_deref(), Some("store.json"));
+    assert_eq!(m.profile.alpha, Some(0.25));
+
+    let err = FlowManifest::parse(
+        "[flow]\nname = \"x\"\n[profile]\npersits = \"typo.json\"",
+        "p.toml",
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("persits") && err.contains("unknown key"), "{err}");
+}
+
+// ---------------------------------------------------------------------------
+// Manifest includes (single-level, child keys override).
+// ---------------------------------------------------------------------------
+
+fn temp_manifest_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("rlinf_manifest_{}_{tag}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn include_merges_base_with_child_overrides() {
+    let dir = temp_manifest_dir("inc");
+    std::fs::write(
+        dir.join("base.flow.toml"),
+        r#"
+iters = 5
+seed = 7
+[flow]
+name = "base"
+workload = "generic"
+[cluster]
+devices_per_node = 2
+[[stage]]
+name = "a"
+kind = "sink"
+[[edge]]
+channel = "c"
+from = "driver"
+to = "a.m"
+feed = 4
+"#,
+    )
+    .unwrap();
+    std::fs::write(
+        dir.join("child.flow.toml"),
+        r#"
+include = "base.flow.toml"
+iters = 2
+[flow]
+name = "child"
+[cluster]
+devices_per_node = 3
+"#,
+    )
+    .unwrap();
+
+    let m = FlowManifest::load(&dir.join("child.flow.toml").to_string_lossy()).unwrap();
+    // Child keys override; untouched base keys survive (section-merge).
+    assert_eq!(m.name, "child");
+    assert_eq!(m.workload, "generic", "base [flow].workload survives the merge");
+    assert_eq!(m.stages.len(), 1, "base [[stage]] tables inherited");
+    assert_eq!(m.edges[0].feed, 4);
+    let cfg = m.run_config().unwrap();
+    assert_eq!(cfg.iters, 2, "child scalar override");
+    assert_eq!(cfg.seed, 7, "base scalar survives");
+    assert_eq!(cfg.cluster.devices_per_node, 3, "child section key override");
+    // The spec still lints.
+    m.lint(&StageRegistry::builtin()).unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn child_stage_tables_replace_base_wholesale() {
+    let dir = temp_manifest_dir("tables");
+    std::fs::write(
+        dir.join("base.flow.toml"),
+        r#"
+[flow]
+name = "base"
+[[stage]]
+name = "a"
+kind = "sink"
+[[stage]]
+name = "b"
+kind = "sink"
+[[edge]]
+channel = "c"
+from = "driver"
+to = "a.m"
+"#,
+    )
+    .unwrap();
+    std::fs::write(
+        dir.join("child.flow.toml"),
+        r#"
+include = "base.flow.toml"
+[[stage]]
+name = "only"
+kind = "relay"
+[[edge]]
+channel = "c"
+from = "driver"
+to = "only.run"
+[[edge]]
+channel = "d"
+from = "only.run"
+to = "driver"
+"#,
+    )
+    .unwrap();
+    let m = FlowManifest::load(&dir.join("child.flow.toml").to_string_lossy()).unwrap();
+    assert_eq!(m.stages.len(), 1, "[[stage]] arrays replace, not append");
+    assert_eq!(m.stages[0].name, "only");
+    assert_eq!(m.edges.len(), 2);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn nested_includes_rejected() {
+    let dir = temp_manifest_dir("nested");
+    std::fs::write(dir.join("a.flow.toml"), "include = \"b.flow.toml\"\n[flow]\nname = \"a\"\n")
+        .unwrap();
+    std::fs::write(dir.join("b.flow.toml"), "include = \"c.flow.toml\"\n[flow]\nname = \"b\"\n")
+        .unwrap();
+    std::fs::write(dir.join("c.flow.toml"), "[flow]\nname = \"c\"\n").unwrap();
+    let err =
+        format!("{:#}", load_tree(&dir.join("a.flow.toml").to_string_lossy()).unwrap_err());
+    assert!(err.contains("single-level"), "{err}");
+    // A missing include errors with context.
+    std::fs::write(dir.join("d.flow.toml"), "include = \"ghost.flow.toml\"\n").unwrap();
+    let err =
+        format!("{:#}", load_tree(&dir.join("d.flow.toml").to_string_lossy()).unwrap_err());
+    assert!(err.contains("ghost.flow.toml"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]

@@ -222,6 +222,95 @@ fn two_flows_time_share_two_devices_with_fair_accounting() {
 }
 
 #[test]
+fn resize_offer_relaunches_flow_over_the_wider_window() {
+    // Relaunch-on-resize, end to end at the driver level (mirroring the
+    // workflow runners' iteration loop): a flow runs an iteration on its
+    // admitted window; a co-tenant retires; the freed device is offered,
+    // accepted, and **delivered through the admission's resize slot**; the
+    // flow drains, drops its driver, and relaunches over the merged
+    // window — same scope, no endpoint/channel collision.
+    let services = Services::new(Cluster::new(ClusterConfig {
+        nodes: 1,
+        devices_per_node: 3,
+        ..Default::default()
+    }));
+    let sup = FlowSupervisor::new(&services, SupervisorConfig::default());
+    let grow = sup.admit(AdmitReq::new("grow", 2).slot(0).granularities(vec![2, 4])).unwrap();
+    sup.admit(AdmitReq::new("done", 1).slot(1)).unwrap();
+    assert_eq!(grow.window, (0, 2));
+
+    let n_items = 4usize;
+    let mut launch = grow.opts.clone();
+    let driver = FlowDriver::launch_with(
+        stress_spec("grow-flow", 3, n_items, 1.0, 2.0),
+        &services,
+        PlacementMode::Collocated,
+        launch.clone(),
+    )
+    .unwrap();
+    let narrow = driver.stage_plans()[0].placements[0].ids().len();
+    assert_eq!(narrow, 2, "first launch spans the admitted 2-device window");
+
+    // Iteration 1 on the narrow window.
+    let mut run = driver.begin().unwrap();
+    run.start().unwrap();
+    assert_eq!(drain(&run, n_items).unwrap(), n_items);
+    run.finish().unwrap();
+
+    // Co-tenant retires; its device is offered to the survivor.
+    let r = sup.retire("done").unwrap();
+    assert_eq!(r.freed, Some((2, 1)));
+    let offer = r.offers.iter().find(|o| o.flow == "grow").expect("adjacent offer");
+    assert_eq!(offer.window, (0, 3));
+
+    // Accepting delivers the new launch options into the runner's slot.
+    assert!(!launch.resize.is_pending(), "no offer pending before accept");
+    let accepted = sup.accept_resize(offer).unwrap();
+    assert!(sup.pending_resize("grow"), "supervisor sees the delivery");
+    assert!(launch.resize.is_pending(), "slot shared with the admission opts");
+
+    // Between iterations: take the offer and relaunch (the runners do
+    // exactly this inside run_grpo_elastic / run_embodied_elastic).
+    let new_opts = launch.resize.take().unwrap();
+    assert!(!launch.resize.is_pending(), "offer consumed");
+    assert_eq!(new_opts.window, Some(offer.window));
+    assert_eq!(new_opts.window, accepted.window);
+    assert_eq!(new_opts.scope.as_deref(), Some("grow:"));
+    // Live re-chunk hints need a profiled spec; this flow was admitted
+    // without one, so the offer's scaled declared granularity applies to
+    // every stage (4 = largest option fitting 4 × 3/2).
+    assert_eq!(new_opts.rechunk.get("*"), Some(&4));
+
+    drop(driver);
+    let driver = FlowDriver::launch_with(
+        stress_spec("grow-flow", 5, n_items, 1.0, 2.0),
+        &services,
+        PlacementMode::Collocated,
+        new_opts.clone(),
+    )
+    .expect("relaunch with the same scope after dropping the old driver");
+    launch = new_opts;
+    let wide = driver.stage_plans()[0].placements[0].ids().len();
+    assert_eq!(wide, 3, "relaunched placement spans the merged window");
+    // The wildcard hint was snapped per edge (declared 1, no options).
+    assert_eq!(driver.rechunks().len(), 1);
+    assert_eq!(driver.rechunks()[0].hint, 4);
+    assert_eq!(driver.rechunks()[0].applied, 1);
+
+    // Iteration 2 on the wide window completes normally.
+    let mut run = driver.begin().unwrap();
+    run.start().unwrap();
+    assert_eq!(drain(&run, n_items).unwrap(), n_items);
+    let report = run.finish().unwrap();
+    assert_eq!(report.edge("data").unwrap().got, n_items as u64);
+    assert!(!launch.resize.is_pending());
+
+    drop(driver);
+    sup.retire("grow").unwrap();
+    assert_eq!(services.cluster.free_devices(), 3, "nothing leaked across the relaunch");
+}
+
+#[test]
 fn stale_intents_from_a_dead_flow_do_not_block_admitted_flows() {
     // Integration-level regression for the intent lifecycle: dispatching a
     // locked invocation to an already-dead rank registers the lock intent
