@@ -49,11 +49,15 @@ use rlinf::workflow::embodied::{run_embodied_elastic, EmbodiedOpts};
 use rlinf::workflow::reasoning::{run_grpo_elastic, RunnerOpts};
 
 fn usage() -> &'static str {
-    "usage: flow_run [--check] [--set path=value] <manifest.toml>...\n\
+    "usage: flow_run [--check] [--set path=value] [--checkpoint dir] [--resume dir] <manifest.toml>...\n\
      \n\
-     --check   lint only: parse, resolve stage kinds against the registry,\n\
-     \u{20}         validate the FlowSpec; report every failing manifest\n\
-     --set     apply a `a.b.c=value` override before interpretation"
+     --check       lint only: parse, resolve stage kinds against the registry,\n\
+     \u{20}             validate the FlowSpec; report every failing manifest\n\
+     --set         apply a `a.b.c=value` override before interpretation\n\
+     --checkpoint  write a flow checkpoint to this directory after every\n\
+     \u{20}             iteration (grpo workload)\n\
+     --resume      continue a killed run from a checkpoint directory\n\
+     \u{20}             (grpo workload)"
 }
 
 fn load_with_overrides(path: &str, sets: Option<&str>) -> Result<LoadedManifest> {
@@ -91,10 +95,26 @@ fn main() -> Result<()> {
     if args.positional.len() != 1 {
         bail!("run mode takes exactly one manifest\n{}", usage());
     }
+    let ckpt = CheckpointCli {
+        save_dir: args.get("checkpoint").map(str::to_string),
+        resume_from: args.get("resume").map(str::to_string),
+    };
     match load_with_overrides(&args.positional[0], args.get("set"))? {
-        LoadedManifest::Flow(m) => run_single(*m, &reg),
-        LoadedManifest::Multi(mm) => run_multi(mm, &reg),
+        LoadedManifest::Flow(m) => run_single(*m, &reg, &ckpt),
+        LoadedManifest::Multi(mm) => {
+            if ckpt.save_dir.is_some() || ckpt.resume_from.is_some() {
+                bail!("--checkpoint/--resume apply to single-flow manifests only");
+            }
+            run_multi(mm, &reg)
+        }
     }
+}
+
+/// `--checkpoint` / `--resume` CLI state, threaded to the grpo workload.
+#[derive(Clone, Default)]
+struct CheckpointCli {
+    save_dir: Option<String>,
+    resume_from: Option<String>,
 }
 
 /// Lint every manifest; report all failures before exiting non-zero.
@@ -194,11 +214,11 @@ fn persist_profile_store(decl: &ProfileDecl, origin: &str, services: &Services) 
 }
 
 /// Run one single-flow manifest under its declared workload.
-fn run_single(m: FlowManifest, reg: &StageRegistry) -> Result<()> {
+fn run_single(m: FlowManifest, reg: &StageRegistry, ckpt: &CheckpointCli) -> Result<()> {
     let cfg = m.run_config()?;
     let services = Services::new(Cluster::new(cfg.cluster.clone()));
     seed_profile_store(&m.profile, &m.origin, &services)?;
-    let summary = run_workload(&m, &cfg, &services, LaunchOpts::default(), reg)?;
+    let summary = run_workload(&m, &cfg, &services, LaunchOpts::default(), reg, ckpt)?;
     persist_profile_store(&m.profile, &m.origin, &services)?;
     println!("{summary}");
     Ok(())
@@ -213,12 +233,18 @@ fn run_workload(
     services: &Services,
     launch: LaunchOpts,
     reg: &StageRegistry,
+    ckpt: &CheckpointCli,
 ) -> Result<String> {
     match m.workload.as_str() {
         "grpo" => {
             let report = run_grpo_elastic(
                 cfg,
-                &RunnerOpts { verbose: true, ..Default::default() },
+                &RunnerOpts {
+                    verbose: true,
+                    checkpoint_dir: ckpt.save_dir.clone(),
+                    resume_from: ckpt.resume_from.clone(),
+                    ..Default::default()
+                },
                 services,
                 launch,
                 |_n| m.to_spec(reg),
@@ -272,12 +298,16 @@ fn run_generic(
 
     let spec = m.to_spec(reg)?;
     let driver = FlowDriver::launch_with(spec, services, cfg.sched.mode, launch)?;
+    // With a restart budget, blocked producers wait out a stage being
+    // healed instead of failing the whole flow.
+    driver.set_recovering(cfg.fault.max_restarts > 0);
     println!("plan: {} (source: {})", driver.mode(), driver.plan_source());
     if let Some(note) = driver.plan_note() {
         println!("{note}");
     }
     driver.onload_pipelined()?;
     let mut run = driver.begin()?;
+    let mut tracker = run.tracker();
 
     // Start the stages *before* feeding: a bounded (capacity) source edge
     // must have its consumers alive, or a feed larger than the bound would
@@ -337,6 +367,14 @@ fn run_generic(
                         }
                         run.feed_done(&p.to)?;
                         p.done = true;
+                    } else if cfg.fault.max_restarts > 0 {
+                        // Stage-scoped recovery: restart failed/hung
+                        // stages in place and replay their in-flight
+                        // items (generic stages carry no weights to
+                        // re-seed). Err = budget exhausted — fail the run.
+                        run.heal(&cfg.fault, &mut tracker, |_| None).with_context(|| {
+                            format!("recovering flow {:?} while pumping {}", m.name, p.from)
+                        })?;
                     } else if run.poisoned() {
                         bail!("flow {:?} poisoned while pumping {}", m.name, p.from);
                     }
@@ -358,7 +396,11 @@ fn run_generic(
                     if run.drained(&e.channel)? {
                         break;
                     }
-                    if run.poisoned() {
+                    if cfg.fault.max_restarts > 0 {
+                        run.heal(&cfg.fault, &mut tracker, |_| None).with_context(|| {
+                            format!("recovering flow {:?} while draining {}", m.name, e.channel)
+                        })?;
+                    } else if run.poisoned() {
                         bail!("flow {:?} poisoned while draining {}", m.name, e.channel);
                     }
                 }
@@ -426,7 +468,7 @@ fn run_multi(mm: MultiFlowManifest, reg: &StageRegistry) -> Result<()> {
             name,
             std::thread::spawn(move || -> Result<String> {
                 let reg = StageRegistry::builtin();
-                run_workload(&m, &flow_cfg, &services, opts, &reg)
+                run_workload(&m, &flow_cfg, &services, opts, &reg, &CheckpointCli::default())
             }),
         ));
     }

@@ -1,0 +1,175 @@
+//! Fault-tolerance bench: steady-state vs injected-kill throughput of a
+//! chaos relay pipeline, plus MTTR (mean time to recovery — poison
+//! observed → stage restarted and the flow moving again).
+//!
+//! The steady regime runs the same `chaos` stage kind with injection
+//! disabled (`panic_after = 0`), so both regimes pay identical per-item
+//! costs and the gap is purely detection + restart + replay overhead.
+//! The kill regime panics the relay a quarter of the way through the
+//! stream; `FlowRun::heal` restarts the stage in place and the un-acked
+//! item replays, so the sink still counts every item. Emits
+//! `BENCH_faults.json` for trend tracking across PRs (artifact-free:
+//! synthetic workers, no compiled models).
+//!
+//! Set `RLINF_BENCH_SMALL=1` for the CI preset (fewer items; same JSON
+//! shape).
+
+mod common;
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+use rlinf::cluster::Cluster;
+use rlinf::config::{ClusterConfig, FaultConfig, PlacementMode};
+use rlinf::data::Payload;
+use rlinf::flow::{Edge, FlowDriver, FlowSpec, Stage, StageRegistry};
+use rlinf::util::json::Value;
+use rlinf::worker::group::Services;
+
+fn small() -> bool {
+    std::env::var_os("RLINF_BENCH_SMALL").is_some()
+}
+
+/// Driver→chaos→driver relay; `panic_after = 0` disables injection.
+fn spec(panic_after: i64, work_ms: i64) -> FlowSpec {
+    let reg = StageRegistry::builtin();
+    let opts: BTreeMap<String, Value> = [
+        ("panic_after".to_string(), Value::Int(panic_after)),
+        ("max_faults".to_string(), Value::Int(1)),
+        ("work_ms".to_string(), Value::Int(work_ms)),
+    ]
+    .into_iter()
+    .collect();
+    FlowSpec::new("fault-bench")
+        .stage(Stage::new("inject", reg.resolve_stage("chaos", &opts).unwrap()).single_rank())
+        .edge(Edge::new("src").produced_by_driver().consumed_by("inject", "run"))
+        .edge(Edge::new("mid").produced_by("inject", "run").consumed_by_driver())
+}
+
+/// One measured run. Returns (wall secs, MTTR secs when a fault fired,
+/// stage restarts applied).
+fn run_once(
+    panic_after: i64,
+    work_ms: i64,
+    items: usize,
+    fc: Option<&FaultConfig>,
+) -> Result<(f64, Option<f64>, u64)> {
+    let services = Services::new(Cluster::new(ClusterConfig {
+        nodes: 1,
+        devices_per_node: 1,
+        ..Default::default()
+    }));
+    let driver =
+        FlowDriver::launch(spec(panic_after, work_ms), &services, PlacementMode::Disaggregated)?;
+    driver.set_recovering(fc.is_some());
+    let t0 = Instant::now();
+    let mut run = driver.begin()?;
+    run.start()?;
+    let mut tracker = run.tracker();
+    for i in 0..items {
+        run.send("src", Payload::new().set_meta("i", i as i64))?;
+    }
+    run.feed_done("src")?;
+
+    let mut got = 0usize;
+    let mut t_fail: Option<Instant> = None;
+    let mut mttr: Option<f64> = None;
+    let budget = Instant::now() + Duration::from_secs(120);
+    loop {
+        if Instant::now() > budget {
+            bail!("bench wedged after {got}/{items} items");
+        }
+        if t_fail.is_none() && run.poisoned() {
+            t_fail = Some(Instant::now());
+        }
+        match run.recv_timeout("mid", Duration::from_millis(50))? {
+            Some(_) => got += 1,
+            None => {
+                if run.drained("mid")? {
+                    break;
+                }
+                if let Some(fc) = fc {
+                    let healed = run.heal(fc, &mut tracker, |_| None)?;
+                    if healed > 0 && mttr.is_none() {
+                        if let Some(tf) = t_fail {
+                            mttr = Some(tf.elapsed().as_secs_f64());
+                        }
+                    }
+                } else if run.poisoned() {
+                    bail!("fault-free run poisoned");
+                }
+            }
+        }
+    }
+    if got != items {
+        bail!("expected {items} items, got {got}");
+    }
+    let restarts = tracker.total_restarts();
+    run.finish()?;
+    Ok((t0.elapsed().as_secs_f64(), mttr, restarts))
+}
+
+fn main() -> Result<()> {
+    let items = if small() { 64usize } else { 256 };
+    let work_ms = 1i64;
+    let fc = FaultConfig { heartbeat_ms: 10, deadline_ms: 0, max_restarts: 2, backoff_ms: 5 };
+
+    // Regime 1: steady state, injection disabled.
+    let (steady_secs, _, steady_restarts) = run_once(0, work_ms, items, None)?;
+    assert_eq!(steady_restarts, 0);
+    let steady_steps = items as f64 / steady_secs;
+
+    // Regime 2: a rank is killed a quarter of the way through the stream.
+    let kill_at = (items / 4).max(1) as i64;
+    let (fault_secs, mttr, restarts) = run_once(kill_at, work_ms, items, Some(&fc))?;
+    let mttr = mttr.ok_or_else(|| anyhow::anyhow!("injected kill produced no measurable MTTR"))?;
+    if !mttr.is_finite() {
+        bail!("MTTR is not finite: {mttr}");
+    }
+    if restarts == 0 {
+        bail!("injected kill was not recovered by a stage restart");
+    }
+    let fault_steps = items as f64 / fault_secs;
+
+    common::report(
+        "faults",
+        &["regime", "steps/sec", "mttr (s)", "restarts"],
+        vec![
+            vec!["steady".into(), common::f(steady_steps), "-".into(), "0".into()],
+            vec![
+                "injected kill".into(),
+                common::f(fault_steps),
+                common::f3(mttr),
+                restarts.to_string(),
+            ],
+        ],
+    );
+
+    let mut out = Value::obj();
+    out.set("bench", "faults");
+    let mut steady = Value::obj();
+    steady.set("steps_per_sec", steady_steps).set("secs", steady_secs);
+    out.set("steady", steady);
+    let mut killed = Value::obj();
+    killed
+        .set("steps_per_sec", fault_steps)
+        .set("secs", fault_secs)
+        .set("mttr_secs", mttr)
+        .set("restarts", restarts);
+    out.set("injected_kill", killed);
+    out.set("recovery_overhead", (fault_secs - steady_secs).max(0.0));
+    out.set("config", {
+        let mut cfg = Value::obj();
+        cfg.set("preset", if small() { "small" } else { "full" })
+            .set("items", items)
+            .set("work_ms", work_ms)
+            .set("kill_at_item", kill_at)
+            .set("max_restarts", fc.max_restarts)
+            .set("backoff_ms", fc.backoff_ms);
+        cfg
+    });
+    std::fs::write("BENCH_faults.json", out.to_json_pretty())?;
+    println!("(saved BENCH_faults.json)");
+    Ok(())
+}

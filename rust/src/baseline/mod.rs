@@ -15,7 +15,7 @@ use crate::workflow::reasoning::RunnerOpts;
 
 /// Runner options that reproduce veRL's execution profile.
 pub fn verl_opts() -> RunnerOpts {
-    RunnerOpts { verl_like: true, verbose: false }
+    RunnerOpts { verl_like: true, ..Default::default() }
 }
 
 /// Force a config into veRL's collocated-only execution mode.

@@ -151,6 +151,12 @@ impl BoundPort {
     pub fn done(&self, who: &str) {
         self.channel.producer_done(who);
     }
+
+    /// Acknowledge everything `who` consumed from this port, releasing the
+    /// channel's at-least-once replay buffer (see [`Channel::ack`]).
+    pub fn ack(&self, who: &str) {
+        self.channel.ack(who);
+    }
 }
 
 /// Per-group port table, shared by all ranks and rebound by the driver at
@@ -181,6 +187,15 @@ impl PortBindings {
 
     pub fn clear(&self) {
         self.inner.write().unwrap().clear();
+    }
+
+    /// Acknowledge `who`'s consumption on **every** bound port — called by
+    /// the rank runner when a dispatched call completes, committing the
+    /// call's consumed items (ports the rank never read from are no-ops).
+    pub fn ack_all(&self, who: &str) {
+        for bp in self.inner.read().unwrap().values() {
+            bp.ack(who);
+        }
     }
 }
 

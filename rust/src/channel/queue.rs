@@ -81,8 +81,13 @@ struct Core {
     /// `get_balanced` (previously an O(n) scan + O(n) `VecDeque::remove`).
     by_weight: BTreeSet<(u64, u64)>,
     next_seq: u64,
-    open_producers: usize,
+    /// Registered producers still open (by name). A name-set rather than a
+    /// count so re-registration after a stage restart is idempotent.
+    producers: BTreeSet<String>,
     closed: bool,
+    /// Set by [`Channel::close`]; an explicitly closed channel stays
+    /// closed even if a restarted producer re-registers.
+    force_closed: bool,
     total_put: u64,
     total_got: u64,
     /// Consumers parked in `get_batch` (they may need >1 item, so puts
@@ -92,6 +97,16 @@ struct Core {
     /// blocking puts wait for space and `try_put*` report [`TryPut::Full`]
     /// instead of enqueueing past the bound.
     capacity: Option<usize>,
+    /// At-least-once replay enabled (flow-driven channels): each
+    /// consumer's most recent take is retained in `inflight` until the
+    /// consumer acks it — implicitly, by its next take, or explicitly via
+    /// [`Channel::ack`] when its dispatched call completes. A consumer
+    /// that dies mid-call leaves its last take unacked;
+    /// [`Channel::requeue_inflight`] re-inserts it (at its original
+    /// sequence position) for the restarted stage.
+    replay: bool,
+    /// Per-consumer unacked takes: `(original seq, shallow copy)`.
+    inflight: HashMap<String, Vec<(u64, Item)>>,
 }
 
 impl Core {
@@ -107,28 +122,49 @@ impl Core {
 impl Core {
     /// Pop the FIFO head; the caller already knows the queue is non-empty
     /// or handles `None`. Counter update is atomic with the removal.
-    fn take_first(&mut self) -> Option<Item> {
+    fn take_first(&mut self) -> Option<(u64, Item)> {
         let (seq, item) = self.items.pop_first()?;
         self.by_weight.remove(&(weight_key(item.weight), seq));
         self.total_got += 1;
-        Some(item)
+        Some((seq, item))
     }
 
     /// Pop the heaviest item (greedy LPT), O(log n).
-    fn take_heaviest(&mut self) -> Option<Item> {
+    fn take_heaviest(&mut self) -> Option<(u64, Item)> {
         let (_, seq) = self.by_weight.pop_last()?;
         let item = self.items.remove(&seq).expect("weight index in sync");
         self.total_got += 1;
-        Some(item)
+        Some((seq, item))
     }
 
     /// Pop the item at FIFO position `idx` (custom policies).
-    fn take_at(&mut self, idx: usize) -> Option<Item> {
+    fn take_at(&mut self, idx: usize) -> Option<(u64, Item)> {
         let seq = *self.items.keys().nth(idx)?;
         let item = self.items.remove(&seq).expect("key just observed");
         self.by_weight.remove(&(weight_key(item.weight), seq));
         self.total_got += 1;
-        Some(item)
+        Some((seq, item))
+    }
+
+    /// Ack-on-next-take: a consumer's new take commits (drops) its
+    /// previous one — the previous call's outputs are already downstream —
+    /// and becomes the new unacked in-flight work. No-op unless replay is
+    /// enabled.
+    fn begin_take(&mut self, who: &str) {
+        if self.replay {
+            self.inflight.entry(who.to_string()).or_default().clear();
+        }
+    }
+
+    /// Record one taken item into `who`'s in-flight buffer (shallow copy;
+    /// tensor storage is `Arc`-shared). No-op unless replay is enabled.
+    fn note_take(&mut self, who: &str, seq: u64, item: &Item) {
+        if self.replay {
+            self.inflight
+                .entry(who.to_string())
+                .or_default()
+                .push((seq, Item { payload: item.payload.clone(), weight: item.weight }));
+        }
     }
 }
 
@@ -152,6 +188,12 @@ struct Inner {
     cv_space: Condvar,
     /// Striped per-endpoint stats, off the queue's critical path.
     stats: [Mutex<HashMap<String, EndpointStat>>; STAT_SHARDS],
+    /// Optional abort probe (set by the flow driver on run-scoped
+    /// channels): producers parked on a capacity bound poll it and fail
+    /// out promptly when it fires — e.g. the run was poisoned and is being
+    /// torn down — instead of hanging until an external timeout. Read only
+    /// on the blocking-put slow path, never on the hot path.
+    probe: Mutex<Option<Arc<dyn Fn() -> bool + Send + Sync>>>,
 }
 
 /// FIFO-ordered read-only view handed to [`Channel::get_with`] policies.
@@ -199,6 +241,7 @@ impl Channel {
                 cv_empty: Condvar::new(),
                 cv_space: Condvar::new(),
                 stats: std::array::from_fn(|_| Mutex::new(HashMap::new())),
+                probe: Mutex::new(None),
             }),
         }
     }
@@ -218,16 +261,24 @@ impl Channel {
     }
 
     /// Declare a producer; the channel auto-closes when all producers have
-    /// called [`Channel::producer_done`].
+    /// called [`Channel::producer_done`]. Registration is idempotent per
+    /// name, so a restarted stage re-registering its ranks is a no-op —
+    /// and if *every* producer of an auto-closed channel restarts, the
+    /// channel re-opens (an explicit [`Channel::close`] is final).
     pub fn register_producer(&self, who: &str) {
-        self.inner.core.lock().unwrap().open_producers += 1;
+        let mut c = self.inner.core.lock().unwrap();
+        c.producers.insert(who.to_string());
+        if c.closed && !c.force_closed {
+            c.closed = false;
+        }
+        drop(c);
         self.stat_mut(who, |s| s.producer = true);
     }
 
-    pub fn producer_done(&self, _who: &str) {
+    pub fn producer_done(&self, who: &str) {
         let mut c = self.inner.core.lock().unwrap();
-        c.open_producers = c.open_producers.saturating_sub(1);
-        if c.open_producers == 0 {
+        c.producers.remove(who);
+        if c.producers.is_empty() {
             c.closed = true;
         }
         let closed = c.closed;
@@ -239,9 +290,13 @@ impl Channel {
         }
     }
 
-    /// Force-close (tests / teardown).
+    /// Force-close (tests / teardown). Final: re-registering a producer
+    /// does not re-open an explicitly closed channel.
     pub fn close(&self) {
-        self.inner.core.lock().unwrap().closed = true;
+        let mut c = self.inner.core.lock().unwrap();
+        c.closed = true;
+        c.force_closed = true;
+        drop(c);
         self.inner.cv_items.notify_all();
         self.inner.cv_space.notify_all();
     }
@@ -263,6 +318,97 @@ impl Channel {
         self.inner.core.lock().unwrap().capacity
     }
 
+    /// Enable at-least-once replay: consumers' takes are retained until
+    /// acked (see [`Channel::ack`] / [`Channel::requeue_inflight`]). The
+    /// flow driver enables this on run-scoped channels; raw channels skip
+    /// the per-dequeue bookkeeping.
+    pub fn set_replay(&self, on: bool) {
+        let mut c = self.inner.core.lock().unwrap();
+        c.replay = on;
+        if !on {
+            c.inflight.clear();
+        }
+    }
+
+    /// Install the abort probe polled by producers parked on a capacity
+    /// bound (see the field doc on `Inner::probe`).
+    pub fn set_poison_probe(&self, probe: Arc<dyn Fn() -> bool + Send + Sync>) {
+        *self.inner.probe.lock().unwrap() = Some(probe);
+    }
+
+    /// Commit `who`'s most recent take: its call completed, so the items
+    /// it consumed no longer need to be replayable. Called by the rank
+    /// runner (via `PortBindings::ack_all`) after every successful
+    /// dispatched call; a new take by the same consumer acks implicitly.
+    pub fn ack(&self, who: &str) {
+        let mut c = self.inner.core.lock().unwrap();
+        if c.replay {
+            c.inflight.remove(who);
+        }
+    }
+
+    /// Re-insert `who`'s unacked in-flight items at their original
+    /// sequence positions — the stage-restart replay path. The consumer
+    /// died mid-call, so whatever it had taken but not acked is handed to
+    /// its replacement in arrival order. Put/got counters and `who`'s
+    /// balanced-dequeue load are rolled back so stats still reconcile.
+    /// Returns the number of items replayed.
+    pub fn requeue_inflight(&self, who: &str) -> usize {
+        let mut c = self.inner.core.lock().unwrap();
+        let buf = match c.inflight.remove(who) {
+            Some(b) if !b.is_empty() => b,
+            _ => return 0,
+        };
+        let n = buf.len();
+        let mut w = 0.0;
+        for (seq, item) in buf {
+            w += item.weight;
+            c.by_weight.insert((weight_key(item.weight), seq));
+            c.items.insert(seq, item);
+        }
+        c.total_got = c.total_got.saturating_sub(n as u64);
+        // Replayed items may briefly overflow a capacity bound (space()
+        // saturates at 0); consumers drain the excess first.
+        self.inner.cv_items.notify_all();
+        drop(c);
+        self.stat_mut(who, |s| s.load = (s.load - w).max(0.0));
+        n
+    }
+
+    /// Total unacked in-flight items across consumers (diagnostics).
+    pub fn inflight_len(&self) -> usize {
+        let c = self.inner.core.lock().unwrap();
+        c.inflight.values().map(|v| v.len()).sum()
+    }
+
+    /// Slow-path wait for `need` free slots, polling the abort probe (when
+    /// installed) so a poisoned run's producers fail out promptly instead
+    /// of hanging until an external timeout. Close also wakes us to fail.
+    fn wait_for_space<'a>(
+        &'a self,
+        mut c: std::sync::MutexGuard<'a, Core>,
+        need: usize,
+    ) -> Result<std::sync::MutexGuard<'a, Core>> {
+        let probe = self.inner.probe.lock().unwrap().clone();
+        while c.space() < need && !c.closed {
+            match &probe {
+                Some(p) => {
+                    if p() {
+                        bail!("channel {}: put aborted, run poisoned", self.inner.name);
+                    }
+                    let (guard, _) = self
+                        .inner
+                        .cv_space
+                        .wait_timeout(c, Duration::from_millis(20))
+                        .unwrap();
+                    c = guard;
+                }
+                None => c = self.inner.cv_space.wait(c).unwrap(),
+            }
+        }
+        Ok(c)
+    }
+
     /// Enqueue with unit weight.
     pub fn put(&self, who: &str, payload: Payload) -> Result<()> {
         self.put_weighted(who, payload, 1.0)
@@ -271,8 +417,8 @@ impl Channel {
     pub fn put_weighted(&self, who: &str, payload: Payload, weight: f64) -> Result<()> {
         let mut c = self.inner.core.lock().unwrap();
         // Bounded channel: wait for a free slot (close wakes us to fail).
-        while c.space() == 0 && !c.closed {
-            c = self.inner.cv_space.wait(c).unwrap();
+        if c.space() == 0 && !c.closed {
+            c = self.wait_for_space(c, 1)?;
         }
         if c.closed {
             bail!("channel {}: put after close", self.inner.name);
@@ -377,8 +523,8 @@ impl Channel {
                 );
             }
             // Wait until the whole batch fits (close wakes us to fail).
-            while c.space() < items.len() && !c.closed {
-                c = self.inner.cv_space.wait(c).unwrap();
+            if c.space() < items.len() && !c.closed {
+                c = self.wait_for_space(c, items.len())?;
             }
         }
         if c.closed {
@@ -421,7 +567,9 @@ impl Channel {
     pub fn get(&self, who: &str) -> Option<Item> {
         let mut c = self.inner.core.lock().unwrap();
         loop {
-            if let Some(item) = c.take_first() {
+            if let Some((seq, item)) = c.take_first() {
+                c.begin_take(who);
+                c.note_take(who, seq, &item);
                 let became_empty = c.items.is_empty();
                 let bounded = c.capacity.is_some();
                 drop(c);
@@ -449,7 +597,9 @@ impl Channel {
         let deadline = Instant::now() + timeout;
         let mut c = self.inner.core.lock().unwrap();
         loop {
-            if let Some(item) = c.take_first() {
+            if let Some((seq, item)) = c.take_first() {
+                c.begin_take(who);
+                c.note_take(who, seq, &item);
                 let became_empty = c.items.is_empty();
                 let bounded = c.capacity.is_some();
                 drop(c);
@@ -480,7 +630,9 @@ impl Channel {
         loop {
             if !c.items.is_empty() {
                 let idx = pick(&ItemsView { core: &*c }).min(c.items.len() - 1);
-                let item = c.take_at(idx).expect("idx clamped to len");
+                let (seq, item) = c.take_at(idx).expect("idx clamped to len");
+                c.begin_take(who);
+                c.note_take(who, seq, &item);
                 let became_empty = c.items.is_empty();
                 let bounded = c.capacity.is_some();
                 drop(c);
@@ -502,7 +654,9 @@ impl Channel {
     pub fn get_balanced(&self, who: &str) -> Option<Item> {
         let mut c = self.inner.core.lock().unwrap();
         loop {
-            if let Some(item) = c.take_heaviest() {
+            if let Some((seq, item)) = c.take_heaviest() {
+                c.begin_take(who);
+                c.note_take(who, seq, &item);
                 let became_empty = c.items.is_empty();
                 let bounded = c.capacity.is_some();
                 drop(c);
@@ -528,8 +682,10 @@ impl Channel {
                 let take = n.min(c.items.len());
                 let mut out = Vec::with_capacity(take);
                 let mut w = 0.0;
+                c.begin_take(who);
                 for _ in 0..take {
-                    let item = c.take_first().expect("len checked");
+                    let (seq, item) = c.take_first().expect("len checked");
+                    c.note_take(who, seq, &item);
                     w += item.weight;
                     out.push(item);
                 }
@@ -995,6 +1151,118 @@ mod tests {
         }
         h.join().unwrap().unwrap();
         assert_eq!(ch.len(), 4);
+    }
+
+    #[test]
+    fn replay_ack_on_next_take_and_requeue() {
+        let ch = Channel::new("t");
+        ch.set_replay(true);
+        ch.register_producer("p");
+        for i in 0..3i64 {
+            ch.put("p", Payload::new().set_meta("i", i)).unwrap();
+        }
+        // Take 0: it is now in-flight for "c".
+        assert_eq!(ch.get("c").unwrap().payload.meta_i64("i"), Some(0));
+        assert_eq!(ch.inflight_len(), 1);
+        // Take 1: implicitly acks 0; only 1 is in-flight now.
+        assert_eq!(ch.get("c").unwrap().payload.meta_i64("i"), Some(1));
+        assert_eq!(ch.inflight_len(), 1);
+        // Consumer dies mid-call: replay its unacked take.
+        assert_eq!(ch.requeue_inflight("c"), 1);
+        assert_eq!(ch.inflight_len(), 0);
+        // The replacement sees item 1 again, in FIFO position before 2.
+        assert_eq!(ch.get("c2").unwrap().payload.meta_i64("i"), Some(1));
+        assert_eq!(ch.get("c2").unwrap().payload.meta_i64("i"), Some(2));
+        // Explicit ack (call completed): nothing left to replay.
+        ch.ack("c2");
+        assert_eq!(ch.requeue_inflight("c2"), 0);
+        let (put, got) = ch.stats();
+        assert_eq!((put, got), (3, 3), "requeue rolled back the lost take");
+    }
+
+    #[test]
+    fn replay_batch_requeues_whole_take() {
+        let ch = Channel::new("t");
+        ch.set_replay(true);
+        ch.register_producer("p");
+        for i in 0..4i64 {
+            ch.put_weighted("p", Payload::new().set_meta("i", i), 2.0).unwrap();
+        }
+        assert_eq!(ch.get_batch("c", 3).len(), 3);
+        assert_eq!(ch.inflight_len(), 3);
+        assert_eq!(ch.consumer_load("c"), 6.0);
+        assert_eq!(ch.requeue_inflight("c"), 3);
+        assert_eq!(ch.consumer_load("c"), 0.0, "load rolled back with the requeue");
+        let order: Vec<i64> = ch.get_batch("c2", 4).iter().map(|it| it.payload.meta_i64("i").unwrap()).collect();
+        assert_eq!(order, vec![0, 1, 2, 3], "replayed at original positions");
+        let (put, got) = ch.stats();
+        assert_eq!(put, 4);
+        assert_eq!(got, 4, "3 rolled back, then all 4 re-taken");
+    }
+
+    #[test]
+    fn replay_disabled_skips_bookkeeping() {
+        let ch = Channel::new("t");
+        ch.register_producer("p");
+        ch.put("p", Payload::new()).unwrap();
+        ch.get("c").unwrap();
+        assert_eq!(ch.inflight_len(), 0);
+        assert_eq!(ch.requeue_inflight("c"), 0);
+    }
+
+    #[test]
+    fn reregister_reopens_autoclosed_channel() {
+        let ch = Channel::new("t");
+        ch.register_producer("p");
+        ch.register_producer("p"); // idempotent: one open slot per name
+        ch.producer_done("p");
+        assert!(ch.is_closed(), "single done closes despite double register");
+        // Restarted producer re-registers: the channel re-opens.
+        ch.register_producer("p");
+        assert!(!ch.is_closed());
+        ch.put("p", Payload::new()).unwrap();
+        ch.producer_done("p");
+        assert!(ch.is_closed());
+        // Explicit close is final.
+        let ch2 = Channel::new("t2");
+        ch2.register_producer("p");
+        ch2.close();
+        ch2.register_producer("p");
+        assert!(ch2.is_closed(), "force-close survives re-registration");
+    }
+
+    #[test]
+    fn poison_probe_unblocks_bounded_put() {
+        let ch = Channel::new("t");
+        ch.set_capacity(1);
+        let poisoned = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let probe = poisoned.clone();
+        ch.set_poison_probe(Arc::new(move || {
+            probe.load(std::sync::atomic::Ordering::SeqCst)
+        }));
+        ch.register_producer("p");
+        ch.put("p", Payload::new()).unwrap();
+        let ch2 = ch.clone();
+        let h = thread::spawn(move || {
+            let t0 = Instant::now();
+            let r = ch2.put("p", Payload::new());
+            (r, t0.elapsed())
+        });
+        thread::sleep(Duration::from_millis(30));
+        poisoned.store(true, std::sync::atomic::Ordering::SeqCst);
+        let (r, waited) = h.join().unwrap();
+        assert!(r.is_err(), "parked producer fails out on poison");
+        assert!(
+            waited < Duration::from_secs(2),
+            "prompt wakeup, not a full external timeout: {waited:?}"
+        );
+        // A healthy probe leaves normal blocking behavior intact.
+        poisoned.store(false, std::sync::atomic::Ordering::SeqCst);
+        let ch3 = ch.clone();
+        let h = thread::spawn(move || ch3.put("p", Payload::new()));
+        thread::sleep(Duration::from_millis(30));
+        ch.get("c").unwrap();
+        h.join().unwrap().unwrap();
     }
 
     #[test]

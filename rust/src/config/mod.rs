@@ -175,6 +175,31 @@ impl Default for SupervisorConfig {
     }
 }
 
+/// Fault-tolerance policy (`[fault]`): heartbeat/deadline detection knobs
+/// and the stage-restart budget. Applies per flow run; manifests inherit
+/// it through `FlowManifest::run_config`.
+#[derive(Debug, Clone)]
+pub struct FaultConfig {
+    /// Watchdog scan interval (ms) for heartbeat/deadline checks.
+    pub heartbeat_ms: u64,
+    /// A dispatched call running longer than this (ms) counts as hung and
+    /// is reported like a panic. 0 disables hang detection (panics are
+    /// still caught and recovered).
+    pub deadline_ms: u64,
+    /// Stage restarts allowed per stage per run before escalating to a
+    /// full flow relaunch. 0 disables in-place restart (fail-fast).
+    pub max_restarts: u64,
+    /// Base backoff (ms) before a restart; doubles per consecutive
+    /// restart of the same stage.
+    pub backoff_ms: u64,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig { heartbeat_ms: 50, deadline_ms: 0, max_restarts: 2, backoff_ms: 50 }
+    }
+}
+
 /// Embodied-workload configuration (ManiSkill-like / LIBERO-like).
 #[derive(Debug, Clone)]
 pub struct EmbodiedConfig {
@@ -213,6 +238,7 @@ pub struct RunConfig {
     pub train: TrainConfig,
     pub sched: SchedConfig,
     pub supervisor: SupervisorConfig,
+    pub fault: FaultConfig,
     pub embodied: EmbodiedConfig,
 }
 
@@ -228,6 +254,7 @@ impl Default for RunConfig {
             train: TrainConfig::default(),
             sched: SchedConfig::default(),
             supervisor: SupervisorConfig::default(),
+            fault: FaultConfig::default(),
             embodied: EmbodiedConfig::default(),
         }
     }
@@ -308,6 +335,23 @@ impl RunConfig {
             c.supervisor.oversubscribe = x != 0;
         }
 
+        // Explicit (not get_num!): negative intervals/budgets must error,
+        // not wrap to astronomically large u64 values (same convention as
+        // sched.poll_ms above).
+        for (path, field) in [
+            ("fault.heartbeat_ms", &mut c.fault.heartbeat_ms),
+            ("fault.deadline_ms", &mut c.fault.deadline_ms),
+            ("fault.max_restarts", &mut c.fault.max_restarts),
+            ("fault.backoff_ms", &mut c.fault.backoff_ms),
+        ] {
+            if let Some(x) = v.get_path(path).and_then(Value::as_i64) {
+                if x < 0 {
+                    bail!("{path} must not be negative");
+                }
+                *field = x as u64;
+            }
+        }
+
         get_num!(v, "embodied.num_envs", c.embodied.num_envs, as_usize);
         get_num!(v, "embodied.horizon", c.embodied.horizon, as_usize);
         if let Some(s) = v.get_path("embodied.env_kind").and_then(Value::as_str) {
@@ -356,6 +400,9 @@ impl RunConfig {
         if self.supervisor.priority_stride == 0 {
             bail!("supervisor.priority_stride must be positive");
         }
+        if self.fault.heartbeat_ms == 0 {
+            bail!("fault.heartbeat_ms must be positive");
+        }
         Ok(())
     }
 
@@ -400,6 +447,28 @@ mod tests {
         let v = parse_toml("[supervisor]\npriority_stride = -1").unwrap();
         assert!(RunConfig::from_value(&v).is_err(), "negative stride must error, not wrap");
         let v = parse_toml("[supervisor]\ntime_slice_ms = -5").unwrap();
+        assert!(RunConfig::from_value(&v).is_err());
+    }
+
+    #[test]
+    fn fault_knobs_parsed_and_validated() {
+        let c = RunConfig::default();
+        assert_eq!(c.fault.heartbeat_ms, 50);
+        assert_eq!(c.fault.deadline_ms, 0, "hang detection off by default");
+        assert_eq!(c.fault.max_restarts, 2);
+        assert_eq!(c.fault.backoff_ms, 50);
+        let v = parse_toml(
+            "[fault]\nheartbeat_ms = 10\ndeadline_ms = 400\nmax_restarts = 5\nbackoff_ms = 20\n",
+        )
+        .unwrap();
+        let c = RunConfig::from_value(&v).unwrap();
+        assert_eq!(c.fault.heartbeat_ms, 10);
+        assert_eq!(c.fault.deadline_ms, 400);
+        assert_eq!(c.fault.max_restarts, 5);
+        assert_eq!(c.fault.backoff_ms, 20);
+        let v = parse_toml("[fault]\ndeadline_ms = -1").unwrap();
+        assert!(RunConfig::from_value(&v).is_err(), "negative deadline must error, not wrap");
+        let v = parse_toml("[fault]\nheartbeat_ms = 0").unwrap();
         assert!(RunConfig::from_value(&v).is_err());
     }
 

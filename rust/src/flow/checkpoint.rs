@@ -1,0 +1,318 @@
+//! Flow checkpoint/resume: snapshot flow progress to a directory so a
+//! killed process can continue where it stopped.
+//!
+//! A [`FlowCheckpoint`] records the *flow-level* training state — the
+//! iteration cursor, per-stage step counters, arbitrary runner extras
+//! (pending-batch cursors, RNG seeds, hyper-parameters), and per-stage
+//! weight payloads (whatever the stage's `get_weights` returned) — plus
+//! the live [`ProfileStore`] book, so a resumed process plans placements
+//! from the measurements the killed one already paid for.
+//!
+//! Layout under the checkpoint directory:
+//!
+//! ```text
+//! <dir>/state.json     flow name, iter, steps, extras, weights
+//! <dir>/profile.json   ProfileStore::save (absent when the book is empty)
+//! ```
+//!
+//! Weights ride inside `state.json` as hex-encoded little-endian tensor
+//! bytes — exact round-trip for every dtype, no float re-parsing drift.
+//! `flow_run --resume <dir>` (and the workflow runners' `resume_from`)
+//! rebuild the run from here: seed the store, `set_weights` on trained
+//! stages, and continue from `iter`.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::{DType, Payload, Tensor};
+use crate::sched::ProfileStore;
+use crate::util::json::{self, Value};
+
+/// Snapshot of one flow's training progress.
+#[derive(Debug, Clone, Default)]
+pub struct FlowCheckpoint {
+    /// Flow name (sanity-checked on resume).
+    pub flow: String,
+    /// Next iteration to run (iterations `0..iter` are complete).
+    pub iter: u64,
+    /// Per-stage completed step counters.
+    steps: BTreeMap<String, u64>,
+    /// Runner-defined extras (pending-batch cursors, config echoes …).
+    extra: Value,
+    /// Per-stage weight payloads (from the stage's `get_weights`).
+    weights: BTreeMap<String, Payload>,
+}
+
+impl FlowCheckpoint {
+    pub fn new(flow: &str, iter: u64) -> FlowCheckpoint {
+        FlowCheckpoint {
+            flow: flow.to_string(),
+            iter,
+            steps: BTreeMap::new(),
+            extra: Value::obj(),
+            weights: BTreeMap::new(),
+        }
+    }
+
+    pub fn set_steps(&mut self, stage: &str, steps: u64) -> &mut Self {
+        self.steps.insert(stage.to_string(), steps);
+        self
+    }
+
+    pub fn steps_of(&self, stage: &str) -> Option<u64> {
+        self.steps.get(stage).copied()
+    }
+
+    /// Attach a runner-defined extra (stored under `extra.<key>`).
+    pub fn set_extra(&mut self, key: &str, v: impl Into<Value>) -> &mut Self {
+        self.extra.set(key, v);
+        self
+    }
+
+    pub fn extra(&self, key: &str) -> Option<&Value> {
+        self.extra.get(key)
+    }
+
+    /// Attach a stage's weight payload (typically its `get_weights` reply).
+    pub fn set_weights(&mut self, stage: &str, weights: Payload) -> &mut Self {
+        self.weights.insert(stage.to_string(), weights);
+        self
+    }
+
+    pub fn weights_of(&self, stage: &str) -> Option<&Payload> {
+        self.weights.get(stage)
+    }
+
+    /// Stages with recorded weights, sorted.
+    pub fn weighted_stages(&self) -> Vec<String> {
+        self.weights.keys().cloned().collect()
+    }
+
+    /// Persist to `dir` (created if missing): `state.json` always,
+    /// `profile.json` when the store holds any flow.
+    pub fn save(&self, dir: &str, profiles: Option<&ProfileStore>) -> Result<()> {
+        std::fs::create_dir_all(dir).with_context(|| format!("creating checkpoint dir {dir}"))?;
+        let state = Path::new(dir).join("state.json");
+        std::fs::write(&state, self.to_json().to_json_pretty())
+            .with_context(|| format!("writing {}", state.display()))?;
+        if let Some(store) = profiles {
+            if !store.keys().is_empty() {
+                store.save(&Path::new(dir).join("profile.json").to_string_lossy())?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Load a checkpoint from `dir`; when `profiles` is given, merge the
+    /// saved profile book into it (no-op if the file is absent).
+    pub fn load(dir: &str, profiles: Option<&ProfileStore>) -> Result<FlowCheckpoint> {
+        let state = Path::new(dir).join("state.json");
+        let text = std::fs::read_to_string(&state)
+            .with_context(|| format!("reading checkpoint {}", state.display()))?;
+        let v = json::parse(&text).with_context(|| format!("parsing {}", state.display()))?;
+        let ck = FlowCheckpoint::from_json(&v)?;
+        if let Some(store) = profiles {
+            let prof = Path::new(dir).join("profile.json");
+            if prof.exists() {
+                store.seed_file(&prof.to_string_lossy())?;
+            }
+        }
+        Ok(ck)
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut root = Value::obj();
+        root.set("flow", self.flow.as_str());
+        root.set("iter", self.iter);
+        let mut steps = Value::obj();
+        for (s, n) in &self.steps {
+            steps.set(s, *n);
+        }
+        root.set("steps", steps);
+        root.set("extra", self.extra.clone());
+        let mut weights = Value::obj();
+        for (s, p) in &self.weights {
+            weights.set(s, payload_to_json(p));
+        }
+        root.set("weights", weights);
+        root
+    }
+
+    pub fn from_json(v: &Value) -> Result<FlowCheckpoint> {
+        let flow = v
+            .get("flow")
+            .and_then(Value::as_str)
+            .context("checkpoint: missing flow name")?
+            .to_string();
+        let iter = v.get("iter").and_then(Value::as_i64).unwrap_or(0).max(0) as u64;
+        let mut ck = FlowCheckpoint::new(&flow, iter);
+        if let Some(steps) = v.get("steps").and_then(Value::as_obj) {
+            for (s, n) in steps {
+                ck.set_steps(s, n.as_i64().unwrap_or(0).max(0) as u64);
+            }
+        }
+        if let Some(extra) = v.get("extra") {
+            ck.extra = extra.clone();
+        }
+        if let Some(weights) = v.get("weights").and_then(Value::as_obj) {
+            for (s, pv) in weights {
+                ck.weights.insert(s.clone(), payload_from_json(pv)?);
+            }
+        }
+        Ok(ck)
+    }
+}
+
+fn payload_to_json(p: &Payload) -> Value {
+    let mut v = Value::obj();
+    v.set("meta", p.meta.clone());
+    let tensors: Vec<Value> = p
+        .tensors
+        .iter()
+        .map(|t| {
+            let mut tv = Value::obj();
+            tv.set("dtype", t.dtype.name());
+            tv.set(
+                "shape",
+                Value::Arr(t.shape.iter().map(|&d| Value::Int(d as i64)).collect()),
+            );
+            tv.set("data", hex_encode(t.bytes()));
+            tv
+        })
+        .collect();
+    v.set("tensors", Value::Arr(tensors));
+    v
+}
+
+fn payload_from_json(v: &Value) -> Result<Payload> {
+    let mut p = Payload::new();
+    if let Some(meta) = v.get("meta") {
+        p.meta = meta.clone();
+    }
+    if let Some(ts) = v.get("tensors").and_then(Value::as_arr) {
+        for tv in ts {
+            let dtype = DType::from_name(
+                tv.get("dtype").and_then(Value::as_str).context("tensor: missing dtype")?,
+            )?;
+            let shape: Vec<usize> = tv
+                .get("shape")
+                .and_then(Value::as_arr)
+                .context("tensor: missing shape")?
+                .iter()
+                .map(|d| d.as_i64().unwrap_or(0).max(0) as usize)
+                .collect();
+            let data = hex_decode(
+                tv.get("data").and_then(Value::as_str).context("tensor: missing data")?,
+            )?;
+            p.tensors.push(Tensor::from_bytes(dtype, shape, data)?);
+        }
+    }
+    Ok(p)
+}
+
+fn hex_encode(bytes: &[u8]) -> String {
+    let mut s = String::with_capacity(bytes.len() * 2);
+    for b in bytes {
+        s.push(char::from_digit((b >> 4) as u32, 16).unwrap());
+        s.push(char::from_digit((b & 0xf) as u32, 16).unwrap());
+    }
+    s
+}
+
+fn hex_decode(s: &str) -> Result<Vec<u8>> {
+    if s.len() % 2 != 0 {
+        bail!("hex blob has odd length {}", s.len());
+    }
+    let mut out = Vec::with_capacity(s.len() / 2);
+    let b = s.as_bytes();
+    for i in (0..b.len()).step_by(2) {
+        let hi = (b[i] as char).to_digit(16).context("bad hex digit")?;
+        let lo = (b[i + 1] as char).to_digit(16).context("bad hex digit")?;
+        out.push(((hi << 4) | lo) as u8);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> String {
+        let d = std::env::temp_dir().join(format!(
+            "rlinf-ckpt-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        d.to_string_lossy().into_owned()
+    }
+
+    #[test]
+    fn hex_round_trip() {
+        let bytes: Vec<u8> = (0..=255u8).collect();
+        assert_eq!(hex_decode(&hex_encode(&bytes)).unwrap(), bytes);
+        assert!(hex_decode("abc").is_err());
+        assert!(hex_decode("zz").is_err());
+    }
+
+    #[test]
+    fn checkpoint_round_trip_preserves_state_and_weights() {
+        let dir = tmpdir("rt");
+        let mut ck = FlowCheckpoint::new("grpo", 7);
+        ck.set_steps("train", 21).set_steps("rollout", 63);
+        ck.set_extra("pending", 3usize);
+        ck.set_weights(
+            "train",
+            Payload::from_named(vec![(
+                "w",
+                Tensor::from_f32(vec![2, 2], &[1.0, -2.5, 3.25, 0.0]).unwrap(),
+            )])
+            .set_meta("version", 21i64),
+        );
+        ck.save(&dir, None).unwrap();
+
+        let back = FlowCheckpoint::load(&dir, None).unwrap();
+        assert_eq!(back.flow, "grpo");
+        assert_eq!(back.iter, 7);
+        assert_eq!(back.steps_of("train"), Some(21));
+        assert_eq!(back.steps_of("rollout"), Some(63));
+        assert_eq!(back.extra("pending").and_then(Value::as_i64), Some(3));
+        let w = back.weights_of("train").unwrap();
+        assert_eq!(w.meta_i64("version"), Some(21));
+        let t = w.tensor("w").unwrap();
+        assert_eq!(t.shape, vec![2, 2]);
+        assert_eq!(t.to_f32().unwrap(), vec![1.0, -2.5, 3.25, 0.0]);
+        assert_eq!(back.weighted_stages(), vec!["train".to_string()]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn checkpoint_carries_profile_store() {
+        let dir = tmpdir("prof");
+        let store = ProfileStore::new();
+        store.record_run(
+            "key1",
+            &[crate::sched::StageSample {
+                stage: "gen".into(),
+                granularity: 4,
+                secs_per_call: 0.25,
+                items: 16,
+            }],
+            &[],
+        );
+        let ck = FlowCheckpoint::new("f", 1);
+        ck.save(&dir, Some(&store)).unwrap();
+
+        let fresh = ProfileStore::new();
+        let back = FlowCheckpoint::load(&dir, Some(&fresh)).unwrap();
+        assert_eq!(back.iter, 1);
+        assert!(fresh.snapshot("key1").is_some(), "profile book restored");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn load_missing_dir_errors() {
+        assert!(FlowCheckpoint::load("/nonexistent/rlinf-ckpt", None).is_err());
+    }
+}

@@ -19,16 +19,16 @@
 
 use std::collections::HashMap;
 use std::fmt;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use super::spec::{EndpointSpec, FlowGraphInfo, FlowSpec, RankShape};
+use super::spec::{EndpointSpec, FlowGraphInfo, FlowSpec, RankShape, StageFactory};
 use crate::channel::{BoundPort, Dequeue, Item, LockCounters};
 use crate::cluster::DeviceSet;
-use crate::config::PlacementMode;
+use crate::config::{FaultConfig, PlacementMode};
 use crate::data::Payload;
 use crate::sched::{EdgeSample, FlowProfile, ProfileDb, ProfileStore, SchedProblem, Scheduler, StageSample};
 use crate::worker::group::Services;
@@ -204,6 +204,18 @@ pub struct FlowDriver {
     /// ProfileStore key of this flow's topology signature.
     profile_key: String,
     run_seq: AtomicU64,
+    /// Retained per-stage factories (a spec's [`StageFactory`] maker is
+    /// re-callable), so a failed stage can be respawned in place without
+    /// relaunching the whole flow.
+    factories: Vec<Mutex<StageFactory>>,
+    /// Teardown switch read by this flow's channel poison probes: set on
+    /// abort/escalation so producers blocked on bounded edges bail out
+    /// promptly instead of wedging behind a dead consumer.
+    aborted: Arc<AtomicBool>,
+    /// While set, *transient* scope poison does not abort blocked puts —
+    /// a healing controller restarts the failed consumer and the queue
+    /// drains; only [`FlowDriver::abort`] unblocks producers fatally.
+    recovering: Arc<AtomicBool>,
 }
 
 impl FlowDriver {
@@ -352,8 +364,14 @@ impl FlowDriver {
             })
             .collect();
 
+        // Keep the stage factories: they are the respawn recipe for
+        // FlowDriver::restart_stage (the spec is consumed here anyway).
+        let name = spec.name.clone();
+        let factories: Vec<Mutex<StageFactory>> =
+            spec.stages.into_iter().map(|st| Mutex::new(st.factory)).collect();
+
         Ok(FlowDriver {
-            name: spec.name.clone(),
+            name,
             scope,
             stages,
             edges,
@@ -368,6 +386,9 @@ impl FlowDriver {
             plan_note,
             profile_key,
             run_seq: AtomicU64::new(0),
+            factories,
+            aborted: Arc::new(AtomicBool::new(false)),
+            recovering: Arc::new(AtomicBool::new(false)),
         })
     }
 
@@ -500,6 +521,24 @@ impl FlowDriver {
                 // `TryPut::Full` from the try_send variants) at `cap`.
                 ch.set_capacity(cap);
             }
+            // At-least-once delivery: consumed-but-unacked items are held
+            // per consumer and replayed into the queue when a failed stage
+            // restarts (see FlowRun::restart_stage).
+            ch.set_replay(true);
+            {
+                // Fail-fast wakeup for producers blocked on this bounded
+                // edge: bail when the flow is torn down, or when its scope
+                // is poisoned and nobody intends to heal it.
+                let monitor = self.services.monitor.clone();
+                let scope = self.scope.clone();
+                let aborted = self.aborted.clone();
+                let recovering = self.recovering.clone();
+                ch.set_poison_probe(Arc::new(move || {
+                    aborted.load(Ordering::Relaxed)
+                        || (!recovering.load(Ordering::Relaxed)
+                            && monitor.scope_poisoned(&scope))
+                }));
+            }
             let port = BoundPort::new(ch.clone(), e.discipline, e.granularity);
             match &e.producer {
                 Endpoint::Driver => ch.register_producer(DRIVER_ENDPOINT),
@@ -519,12 +558,71 @@ impl FlowDriver {
         }
         Ok(FlowRun {
             driver: self,
+            seq,
             ports,
             handles: Vec::new(),
             t0: Instant::now(),
             locks0: self.lock_counters(),
             secs0: self.stage_secs(),
         })
+    }
+
+    /// Declare whether a controller intends to **heal** this flow's
+    /// failures (stage restart) rather than fail fast. While recovering,
+    /// producers blocked on bounded edges wait out transient scope poison
+    /// instead of aborting — the restarted consumer drains the queue.
+    pub fn set_recovering(&self, on: bool) {
+        self.recovering.store(on, Ordering::Relaxed);
+    }
+
+    /// Fatal teardown switch: wakes every producer blocked on this flow's
+    /// bounded edges (their puts fail) so escalation — drop the driver,
+    /// full relaunch — cannot wedge behind a dead consumer.
+    pub fn abort(&self) {
+        self.aborted.store(true, Ordering::Relaxed);
+    }
+
+    /// Tear down and respawn one stage's ranks in place, replaying the
+    /// in-flight items its dead ranks had consumed but never acknowledged.
+    /// `seq` is the run whose channels carry the replay buffers.
+    fn restart_stage_inner(&self, idx: usize, seq: u64) -> Result<()> {
+        let g = &self.groups[idx];
+        // 1. Replay: push every un-acked take of this stage's ranks back
+        //    into its source channels before the replacements come up.
+        for e in &self.edges {
+            if let Endpoint::Stage { idx: ci, .. } = &e.consumer {
+                if *ci == idx {
+                    let physical = format!("{}{}@{seq}", self.scope, e.channel);
+                    if let Some(ch) = self.services.channels.get(&physical) {
+                        for r in 0..g.n_ranks() {
+                            ch.requeue_inflight(&format!("{}/{r}", g.name));
+                        }
+                    }
+                }
+            }
+        }
+        // 2. Respawn the ranks: same devices, same shared port table.
+        {
+            let mut factory = self.factories[idx].lock().unwrap();
+            g.respawn(|r| (*factory)(r))
+                .with_context(|| format!("respawning stage {:?}", self.stages[idx].name))?;
+        }
+        // 3. Re-open the stage's produced edges: registration is
+        //    idempotent, and it un-closes a channel that auto-closed when
+        //    the dying rank (or a sibling) marked its producer slot done.
+        for e in &self.edges {
+            if let Endpoint::Stage { idx: pi, .. } = &e.producer {
+                if *pi == idx {
+                    let physical = format!("{}{}@{seq}", self.scope, e.channel);
+                    if let Some(ch) = self.services.channels.get(&physical) {
+                        for r in 0..g.n_ranks() {
+                            ch.register_producer(&format!("{}/{r}", g.name));
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
     }
 
     /// Profiling-guided Algorithm-1 planning over a spec's declared graph:
@@ -576,6 +674,9 @@ impl FlowDriver {
 
 impl Drop for FlowDriver {
     fn drop(&mut self) {
+        // Wake any producer still blocked on a bounded edge before the
+        // groups' Drop tries to join their threads.
+        self.aborted.store(true, Ordering::Relaxed);
         // A dropped driver's run-scoped channels leave the shared registry:
         // they are closed and drained (or abandoned with the flow), and a
         // relaunched driver with the same scope restarts its run sequence
@@ -811,9 +912,36 @@ fn resolve_placement(
     Ok(plans)
 }
 
+/// Per-run restart bookkeeping for [`FlowRun::heal`]: how many times each
+/// stage was restarted this run, and the failure-report watermark already
+/// attributed (so one failure triggers one restart, not one per poll).
+#[derive(Debug, Default)]
+pub struct RestartTracker {
+    counts: HashMap<String, u64>,
+    seen_reports: usize,
+}
+
+impl RestartTracker {
+    pub fn new() -> RestartTracker {
+        RestartTracker::default()
+    }
+
+    /// Restarts applied to one stage so far.
+    pub fn restarts_of(&self, stage: &str) -> u64 {
+        self.counts.get(stage).copied().unwrap_or(0)
+    }
+
+    /// Restarts applied across all stages.
+    pub fn total_restarts(&self) -> u64 {
+        self.counts.values().sum()
+    }
+}
+
 /// One execution of the flow (one training iteration, typically).
 pub struct FlowRun<'a> {
     driver: &'a FlowDriver,
+    /// Run sequence number: suffix of this run's physical channel names.
+    seq: u64,
     /// Driver-side ports keyed by *logical* channel name.
     ports: HashMap<String, BoundPort>,
     handles: Vec<(usize, String, GroupHandle)>,
@@ -890,9 +1018,22 @@ impl FlowRun<'_> {
     }
 
     /// Driver-side dequeue with a timeout (poll failure monitors between
-    /// attempts instead of wedging behind a dead producer).
+    /// attempts instead of wedging behind a dead producer). The wait is
+    /// sliced so a failure *during* the wait returns within ~25ms instead
+    /// of only at the timeout — the fail-fast wakeup for pump loops.
     pub fn recv_timeout(&self, channel: &str, timeout: Duration) -> Result<Option<Item>> {
-        Ok(self.port(channel)?.recv_timeout(DRIVER_ENDPOINT, timeout))
+        let port = self.port(channel)?;
+        let slice = Duration::from_millis(25);
+        let deadline = Instant::now() + timeout;
+        loop {
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            if let Some(item) = port.recv_timeout(DRIVER_ENDPOINT, remaining.min(slice)) {
+                return Ok(Some(item));
+            }
+            if self.poisoned() || remaining <= slice {
+                return Ok(None);
+            }
+        }
     }
 
     /// True once a channel is closed and empty.
@@ -901,9 +1042,156 @@ impl FlowRun<'_> {
         Ok(p.channel().is_closed() && p.channel().is_empty())
     }
 
-    /// Did any rank fail so far?
+    /// Did a rank of **this flow** fail so far? Scope-aware: a co-tenant
+    /// flow's failure on shared services does not read as this run's.
     pub fn poisoned(&self) -> bool {
-        self.driver.services.monitor.poisoned()
+        self.driver.services.monitor.scope_poisoned(&self.driver.scope)
+    }
+
+    /// A restart tracker primed at this run's current failure-report
+    /// watermark, so failures from *earlier* runs (kept as history by the
+    /// monitor) are never re-attributed to this one.
+    pub fn tracker(&self) -> RestartTracker {
+        RestartTracker {
+            counts: HashMap::new(),
+            seen_reports: self.driver.services.monitor.scope_reports(&self.driver.scope).len(),
+        }
+    }
+
+    /// Ranks of this flow whose current call has outlived `deadline`
+    /// (each stuck call is reported once; see [`HealthRegistry::stalled`]).
+    ///
+    /// [`HealthRegistry::stalled`]: crate::worker::HealthRegistry::stalled
+    pub fn stalled(&self, deadline: Duration) -> Vec<crate::worker::StalledRank> {
+        self.driver.services.health.stalled(&self.driver.scope, deadline)
+    }
+
+    /// Restart one stage of this run in place: replay its un-acked items,
+    /// respawn its ranks on the same devices, re-open its produced edges,
+    /// optionally re-seed state (e.g. `("set_weights", snapshot)` for a
+    /// trained stage — invoked synchronously, without locks), then
+    /// re-invoke the stage's streaming methods and swap the dead barrier
+    /// handles for live ones.
+    pub fn restart_stage(&mut self, stage: &str, reseed: Option<(&str, Payload)>) -> Result<()> {
+        let idx = self.driver.stage_idx(stage)?;
+        self.driver.restart_stage_inner(idx, self.seq)?;
+        if let Some((method, arg)) = reseed {
+            self.driver.groups[idx]
+                .invoke(method, arg, LockMode::None)
+                .wait()
+                .with_context(|| format!("re-seeding restarted stage {stage}.{method}"))?;
+        }
+        for (gi, method, handle) in self.handles.iter_mut() {
+            if *gi != idx {
+                continue;
+            }
+            let mut arg = Payload::new();
+            for (i, m, p) in &self.driver.call_args {
+                if *i == *gi && m.as_str() == method.as_str() {
+                    arg = p.clone();
+                }
+            }
+            let lock = self.driver.plans[idx].lock;
+            *handle = self.driver.groups[idx].invoke(method.as_str(), arg, lock);
+        }
+        Ok(())
+    }
+
+    /// One watchdog/recovery pass: flag hung calls as failures, attribute
+    /// new failure reports to stages, and restart each failed stage
+    /// (bounded by `fault.max_restarts` per stage, with exponential
+    /// backoff). `reseed` maps a stage name to an optional state-restore
+    /// invocation for its replacement ranks. Returns the number of stages
+    /// restarted; errors mean recovery is **not** possible at this level —
+    /// the caller escalates (typically: abort, drop the driver, relaunch).
+    pub fn heal(
+        &mut self,
+        fault: &FaultConfig,
+        tracker: &mut RestartTracker,
+        mut reseed: impl FnMut(&str) -> Option<(String, Payload)>,
+    ) -> Result<usize> {
+        let monitor = self.driver.services.monitor.clone();
+        // Hang detection: an overdue call is reported like a panic and
+        // takes the same restart path. Requires an explicit deadline.
+        if fault.deadline_ms > 0 {
+            let deadline = Duration::from_millis(fault.deadline_ms);
+            for s in self.stalled(deadline) {
+                let (worker, rank) = match s.endpoint.rsplit_once('/') {
+                    Some((w, r)) => (w.to_string(), r.parse().unwrap_or(0)),
+                    None => (s.endpoint.clone(), 0),
+                };
+                monitor.report(
+                    &worker,
+                    rank,
+                    &s.method,
+                    format!(
+                        "hang: {} busy {:.0}ms (deadline {}ms)",
+                        s.method,
+                        s.busy_for.as_secs_f64() * 1e3,
+                        fault.deadline_ms
+                    ),
+                );
+            }
+        }
+        let mut reports = monitor.scope_reports(&self.driver.scope);
+        if reports.len() <= tracker.seen_reports && self.poisoned() {
+            // A dying rank flips the poison flag an instant before filing
+            // its report; give the report a beat to land before concluding
+            // the poison has no attributable failure.
+            std::thread::sleep(Duration::from_millis(20));
+            reports = monitor.scope_reports(&self.driver.scope);
+        }
+        let fresh = &reports[tracker.seen_reports.min(reports.len())..];
+        if fresh.is_empty() {
+            if self.poisoned() {
+                bail!(
+                    "flow {:?}: poisoned with no attributable new stage failure",
+                    self.driver.name
+                );
+            }
+            return Ok(0);
+        }
+        let mut failed: Vec<String> = Vec::new();
+        for r in fresh {
+            if let Some(stage) = r.worker.strip_prefix(&self.driver.scope) {
+                if self.driver.stage_idx(stage).is_ok() && !failed.iter().any(|s| s == stage) {
+                    failed.push(stage.to_string());
+                }
+            }
+        }
+        tracker.seen_reports = reports.len();
+        if failed.is_empty() {
+            bail!(
+                "flow {:?}: failure reports name no stage of this flow",
+                self.driver.name
+            );
+        }
+        let mut restarted = 0usize;
+        for stage in failed {
+            let n = tracker.counts.entry(stage.clone()).or_insert(0);
+            if *n >= fault.max_restarts {
+                bail!(
+                    "flow {:?}: stage {stage:?} failed after {} restarts (max_restarts) — escalate",
+                    self.driver.name,
+                    n
+                );
+            }
+            let backoff = fault.backoff_ms.saturating_mul(1u64 << (*n).min(16));
+            if backoff > 0 {
+                std::thread::sleep(Duration::from_millis(backoff));
+            }
+            *n += 1;
+            let rs = reseed(&stage);
+            self.restart_stage(&stage, rs.as_ref().map(|(m, p)| (m.as_str(), p.clone())))?;
+            restarted += 1;
+        }
+        // Heal committed: clear this flow's poison so blocked producers
+        // resume — unless a *newer* failure landed while restarting, which
+        // the next heal pass attributes.
+        if monitor.scope_reports(&self.driver.scope).len() == tracker.seen_reports {
+            monitor.clear_scope(&self.driver.scope);
+        }
+        Ok(restarted)
     }
 
     /// Barrier on every stage handle; returns the per-stage / per-edge

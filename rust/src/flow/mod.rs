@@ -24,6 +24,7 @@
 //! (`--check`) and runs manifests end-to-end — new workloads need no
 //! Rust at all (docs/flow-api.md § "Flow manifests").
 
+pub mod checkpoint;
 pub mod driver;
 pub mod graph;
 pub mod manifest;
@@ -32,9 +33,10 @@ pub mod registry;
 pub mod spec;
 pub mod supervisor;
 
+pub use checkpoint::FlowCheckpoint;
 pub use driver::{
     EdgeStats, FlowDriver, FlowReport, FlowRun, LaunchOpts, Rechunk, Relaunch, ResizeSlot,
-    StageOutcome, StagePlan,
+    RestartTracker, StageOutcome, StagePlan,
 };
 pub use graph::WorkflowGraph;
 pub use manifest::FlowManifest;

@@ -12,14 +12,16 @@
 //!
 //! Built-in kinds are registered **by their owning modules** —
 //! `rollout`/`infer`/`train` (the GRPO stages), `sim`/`policy` (the
-//! embodied pair), and the generic `relay`/`sink` pair this module
-//! provides for custom pipelines. Driver-side aggregations (**pump
+//! embodied pair), and the generic `relay`/`sink`/`chaos` trio this
+//! module provides for custom pipelines and fault-injection drills. Driver-side aggregations (**pump
 //! logic**) are a second namespace: `forward` (pass-through) here and
 //! `group_adv` (per-prompt GRPO advantage normalization) registered by
 //! `train::advantage`. User code extends both namespaces with
 //! [`StageRegistry::register_stage`] / [`StageRegistry::register_pump`].
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -405,6 +407,94 @@ impl WorkerLogic for RelayLogic {
     }
 }
 
+/// Fault-injection stage: relays port `"in"` → port `"out"` like
+/// [`RelayLogic`], but injects failures on schedule — a panic before
+/// forwarding the `panic_after`-th item, an indefinite hang before the
+/// `hang_after`-th, or a seeded per-item random panic with probability
+/// `fail_prob`. Faults always fire **before** the triggering item is
+/// forwarded, so at-least-once replay after a stage restart reproduces
+/// exact downstream counts. The injected-fault counter is created once
+/// when the kind is resolved and shared across ranks *and* restarts:
+/// after `max_faults` faults have fired, every respawned rank relays
+/// cleanly. This is the test harness for the fault-tolerance machinery
+/// (heartbeats, `FlowRun::heal`, replay).
+struct ChaosLogic {
+    panic_after: u64,
+    hang_after: u64,
+    fail_prob: f64,
+    work_ms: u64,
+    max_faults: u64,
+    faults: Arc<AtomicU64>,
+    rng: u64,
+    seen: u64,
+}
+
+impl ChaosLogic {
+    /// Claim one fault slot; `false` once `max_faults` have fired.
+    fn claim_fault(&self) -> bool {
+        let mut cur = self.faults.load(Ordering::Relaxed);
+        loop {
+            if cur >= self.max_faults {
+                return false;
+            }
+            match self.faults.compare_exchange(
+                cur,
+                cur + 1,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return true,
+                Err(now) => cur = now,
+            }
+        }
+    }
+
+    /// xorshift64* — deterministic draw stream per (seed, rank).
+    fn draw(&mut self) -> f64 {
+        self.rng ^= self.rng << 13;
+        self.rng ^= self.rng >> 7;
+        self.rng ^= self.rng << 17;
+        (self.rng.wrapping_mul(0x2545_F491_4F6C_DD1D) >> 11) as f64 / (1u64 << 53) as f64
+    }
+}
+
+impl WorkerLogic for ChaosLogic {
+    fn call(&mut self, ctx: &WorkerCtx, _method: &str, _arg: Payload) -> Result<Payload> {
+        let inp = ctx.port("in")?;
+        let out = ctx.port("out")?;
+        let me = ctx.endpoint();
+        let mut n = 0usize;
+        let result = (|| -> Result<()> {
+            while let Some(item) = inp.recv(me) {
+                self.seen += 1;
+                if self.panic_after > 0 && self.seen == self.panic_after && self.claim_fault() {
+                    panic!("chaos: injected panic at item {}", self.seen);
+                }
+                if self.hang_after > 0 && self.seen == self.hang_after && self.claim_fault() {
+                    loop {
+                        std::thread::sleep(std::time::Duration::from_millis(50));
+                    }
+                }
+                if self.fail_prob > 0.0 {
+                    let p = self.draw();
+                    if p < self.fail_prob && self.claim_fault() {
+                        panic!("chaos: injected random panic (p={p:.3}) at item {}", self.seen);
+                    }
+                }
+                if self.work_ms > 0 {
+                    std::thread::sleep(std::time::Duration::from_millis(self.work_ms));
+                }
+                out.send_weighted(me, item.payload, item.weight)?;
+                n += 1;
+            }
+            Ok(())
+        })();
+        out.done(me);
+        result?;
+        Ok(Payload::new().set_meta("relayed", n))
+    }
+}
+
 /// Drains port `"in"`, returning the item count and summed weight; accepts
 /// any method name.
 struct SinkLogic;
@@ -456,6 +546,49 @@ fn register_generic(reg: &mut StageRegistry) -> Result<()> {
             }))
         },
     )?;
+    reg.register_stage(
+        "chaos",
+        "fault-injection relay: forwards \"in\" -> \"out\" but panics/hangs on schedule (fault-tolerance testing)",
+        vec![
+            OptSpec::int("panic_after", 0, "panic before forwarding the Nth item (0 = never)"),
+            OptSpec::int("hang_after", 0, "hang indefinitely before forwarding the Nth item (0 = never)"),
+            OptSpec::float("fail_prob", 0.0, "per-item panic probability (seeded, deterministic)"),
+            OptSpec::int("seed", 1, "RNG seed for fail_prob draws"),
+            OptSpec::int("max_faults", 1, "stop injecting after this many faults (the count survives stage restarts)"),
+            OptSpec::int("work_ms", 0, "simulated per-item work (milliseconds)"),
+        ],
+        |o| {
+            let panic_after = o.u64("panic_after")?;
+            let hang_after = o.u64("hang_after")?;
+            let fail_prob = o.f64("fail_prob")?;
+            let seed = o.u64("seed")?;
+            let max_faults = o.u64("max_faults")?;
+            let work_ms = o.u64("work_ms")?;
+            // One counter per *resolved kind*: the factory clones it into
+            // every rank's logic, including ranks respawned by a stage
+            // restart, so injected faults are bounded per flow, not per
+            // incarnation.
+            let faults = Arc::new(AtomicU64::new(0));
+            Ok(Box::new(move |rank: usize| -> crate::worker::LogicFactory {
+                let faults = faults.clone();
+                Box::new(move |_ctx: &WorkerCtx| {
+                    Ok(Box::new(ChaosLogic {
+                        panic_after,
+                        hang_after,
+                        fail_prob,
+                        work_ms,
+                        max_faults,
+                        faults: faults.clone(),
+                        rng: seed
+                            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                            .wrapping_add(rank as u64)
+                            | 1,
+                        seen: 0,
+                    }) as Box<dyn WorkerLogic>)
+                })
+            }))
+        },
+    )?;
     reg.register_pump(
         "forward",
         "pass-through pump: items move from the consumed to the produced channel unchanged",
@@ -476,7 +609,7 @@ mod tests {
     #[test]
     fn builtin_kinds_present() {
         let reg = StageRegistry::builtin();
-        for k in ["rollout", "infer", "train", "sim", "policy", "relay", "sink"] {
+        for k in ["rollout", "infer", "train", "sim", "policy", "relay", "sink", "chaos"] {
             assert!(reg.stage_kinds().contains(&k), "missing stage kind {k}");
         }
         for k in ["forward", "group_adv"] {

@@ -41,7 +41,7 @@ use super::graph::WorkflowGraph;
 use super::spec::FlowSpec;
 use crate::channel::LockCounters;
 use crate::cluster::DeviceSet;
-use crate::config::SupervisorConfig;
+use crate::config::{FaultConfig, SupervisorConfig};
 use crate::sched::{Plan, ProfileDb, ProfileStore, SchedProblem, Scheduler};
 use crate::worker::group::Services;
 
@@ -165,6 +165,9 @@ pub struct FlowSupervisor {
     services: Services,
     cfg: SupervisorConfig,
     state: Mutex<SupState>,
+    /// Fault policy for the cross-flow watchdog in [`FlowSupervisor::tick`]
+    /// (`None` = no hang detection at the supervisor level).
+    fault: Mutex<Option<FaultConfig>>,
 }
 
 /// Status snapshot of one admitted flow.
@@ -178,7 +181,19 @@ pub struct FlowStatus {
 
 impl FlowSupervisor {
     pub fn new(services: &Services, cfg: SupervisorConfig) -> FlowSupervisor {
-        FlowSupervisor { services: services.clone(), cfg, state: Mutex::new(SupState::default()) }
+        FlowSupervisor {
+            services: services.clone(),
+            cfg,
+            state: Mutex::new(SupState::default()),
+            fault: Mutex::new(None),
+        }
+    }
+
+    /// Arm the watchdog: [`FlowSupervisor::tick`] will scan every admitted
+    /// flow's ranks for calls outliving `fault.deadline_ms` and report them
+    /// to the shared failure monitor (scope-poisoning only the hung flow).
+    pub fn set_fault(&self, fault: FaultConfig) {
+        *self.fault.lock().unwrap() = Some(fault);
     }
 
     /// The shared services flows launch against.
@@ -597,9 +612,47 @@ impl FlowSupervisor {
             .unwrap_or(false)
     }
 
-    /// Time-slice fairness tick: boost waiters starved past the configured
-    /// slice (no-op when `time_slice_ms` is 0). Returns boosted waiters.
+    /// Supervisor heartbeat: (1) watchdog — when a [`FaultConfig`] with a
+    /// deadline is armed, hung calls of every admitted flow are reported to
+    /// the failure monitor, poisoning **only** that flow's scope so its
+    /// controller restarts the stage (or escalates) while co-tenants run
+    /// on; (2) time-slice fairness — boost waiters starved past the
+    /// configured slice (no-op when `time_slice_ms` is 0). Returns the
+    /// number of boosted waiters.
     pub fn tick(&self) -> usize {
+        let fault = self.fault.lock().unwrap().clone();
+        if let Some(fault) = fault {
+            if fault.deadline_ms > 0 {
+                let deadline = Duration::from_millis(fault.deadline_ms);
+                let scopes: Vec<String> = self
+                    .state
+                    .lock()
+                    .unwrap()
+                    .flows
+                    .iter()
+                    .map(|f| format!("{}:", f.name))
+                    .collect();
+                for scope in scopes {
+                    for s in self.services.health.stalled(&scope, deadline) {
+                        let (worker, rank) = match s.endpoint.rsplit_once('/') {
+                            Some((w, r)) => (w.to_string(), r.parse().unwrap_or(0)),
+                            None => (s.endpoint.clone(), 0),
+                        };
+                        self.services.monitor.report(
+                            &worker,
+                            rank,
+                            &s.method,
+                            format!(
+                                "hang: {} busy {:.0}ms (deadline {}ms)",
+                                s.method,
+                                s.busy_for.as_secs_f64() * 1e3,
+                                fault.deadline_ms
+                            ),
+                        );
+                    }
+                }
+            }
+        }
         if self.cfg.time_slice_ms == 0 {
             return 0;
         }

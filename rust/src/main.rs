@@ -74,7 +74,11 @@ fn build_config(args: &Args) -> Result<RunConfig> {
 
 fn cmd_train(args: &Args) -> Result<()> {
     let cfg = build_config(args)?;
-    let opts = RunnerOpts { verl_like: args.has_flag("verl-baseline"), verbose: true };
+    let opts = RunnerOpts {
+        verl_like: args.has_flag("verl-baseline"),
+        verbose: true,
+        ..Default::default()
+    };
     let report = run_grpo(&cfg, &opts).context("GRPO run failed")?;
     if let Some(plan) = &report.plan_rendered {
         println!("--- scheduler plan ---\n{plan}");

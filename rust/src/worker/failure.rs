@@ -1,12 +1,19 @@
-//! Failure monitoring (§4): catch worker faults, report, fail fast.
+//! Failure monitoring (§4), scope-aware: catch worker faults, report,
+//! poison only the failing flow's scope.
 //!
 //! Worker threads wrap every dispatched call in `catch_unwind`; a panic is
-//! converted into a [`FailureReport`], the rank "commits suicide" (its
+//! converted into a [`FailureReport`] and the rank "commits suicide" (its
 //! thread exits, matching the paper's fail-fast policy to avoid cascading
-//! timeout noise), and the monitor flags the whole run as poisoned so the
-//! controller can tear everything down.
+//! timeout noise). The monitor flags the failing **scope** as poisoned —
+//! the `"{flow}:"` prefix a `FlowSupervisor` admission stamps on every
+//! group name, or `""` for unscoped launches — so one flow's death no
+//! longer wedges its co-tenants on a shared cluster. Controllers either
+//! tear the scope down (fail-fast) or recover it: a successful
+//! `FlowRun::restart_stage` clears the scope via
+//! [`FailureMonitor::clear_scope`] and the run continues.
 
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::collections::BTreeSet;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::SystemTime;
 
@@ -19,6 +26,22 @@ pub struct FailureReport {
     pub at: SystemTime,
 }
 
+impl FailureReport {
+    /// The launch scope this failure belongs to (see [`scope_of`]).
+    pub fn scope(&self) -> &str {
+        scope_of(&self.worker)
+    }
+}
+
+/// The launch scope of a worker-group name: the `"{flow}:"` prefix a
+/// supervisor admission applied, or `""` for unscoped launches.
+pub fn scope_of(worker: &str) -> &str {
+    match worker.find(':') {
+        Some(i) => &worker[..=i],
+        None => "",
+    }
+}
+
 #[derive(Clone, Default)]
 pub struct FailureMonitor {
     inner: Arc<FailureInner>,
@@ -26,7 +49,12 @@ pub struct FailureMonitor {
 
 #[derive(Default)]
 struct FailureInner {
+    /// Any scope currently poisoned (fast-path probe).
     poisoned: AtomicBool,
+    /// Bumped on every report so pollers can cheaply detect *new*
+    /// failures since their last look.
+    epoch: AtomicU64,
+    scopes: Mutex<BTreeSet<String>>,
     reports: Mutex<Vec<FailureReport>>,
 }
 
@@ -37,6 +65,11 @@ impl FailureMonitor {
 
     pub fn report(&self, worker: &str, rank: usize, method: &str, message: String) {
         eprintln!("[failure] {worker}/{rank}.{method}: {message}");
+        self.inner
+            .scopes
+            .lock()
+            .unwrap()
+            .insert(scope_of(worker).to_string());
         self.inner.poisoned.store(true, Ordering::SeqCst);
         self.inner.reports.lock().unwrap().push(FailureReport {
             worker: worker.to_string(),
@@ -45,16 +78,57 @@ impl FailureMonitor {
             message,
             at: SystemTime::now(),
         });
+        self.inner.epoch.fetch_add(1, Ordering::SeqCst);
     }
 
-    /// Has any worker failed? Controllers poll this and kill the run
-    /// quickly rather than letting peers hit misleading timeouts.
+    /// Has **any** worker failed, in any scope? Controllers owning the
+    /// whole process poll this; per-flow controllers use
+    /// [`FailureMonitor::scope_poisoned`] so a neighbor's death does not
+    /// read as their own.
     pub fn poisoned(&self) -> bool {
         self.inner.poisoned.load(Ordering::SeqCst)
     }
 
+    /// Is this specific launch scope poisoned? (`""` = unscoped groups.)
+    pub fn scope_poisoned(&self, scope: &str) -> bool {
+        if !self.poisoned() {
+            return false;
+        }
+        self.inner.scopes.lock().unwrap().contains(scope)
+    }
+
+    /// Un-poison one scope after a successful recovery (stage restart or
+    /// relaunch). Reports are kept as history; only the live poison flag
+    /// clears. The global [`FailureMonitor::poisoned`] probe clears when
+    /// no scope remains poisoned.
+    pub fn clear_scope(&self, scope: &str) {
+        let mut scopes = self.inner.scopes.lock().unwrap();
+        scopes.remove(scope);
+        if scopes.is_empty() {
+            self.inner.poisoned.store(false, Ordering::SeqCst);
+        }
+    }
+
+    /// Monotonic failure counter: bumped on every report. Pollers remember
+    /// the last value they acted on and only re-scan reports when it moves.
+    pub fn epoch(&self) -> u64 {
+        self.inner.epoch.load(Ordering::SeqCst)
+    }
+
     pub fn reports(&self) -> Vec<FailureReport> {
         self.inner.reports.lock().unwrap().clone()
+    }
+
+    /// Reports belonging to one launch scope.
+    pub fn scope_reports(&self, scope: &str) -> Vec<FailureReport> {
+        self.inner
+            .reports
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|r| r.scope() == scope)
+            .cloned()
+            .collect()
     }
 }
 
@@ -80,5 +154,39 @@ mod tests {
         let m2 = m.clone();
         m2.report("a", 0, "g", "x".into());
         assert!(m.poisoned());
+    }
+
+    #[test]
+    fn poison_is_scoped() {
+        let m = FailureMonitor::new();
+        m.report("grpo:train", 0, "f", "boom".into());
+        assert!(m.poisoned(), "global probe sees any failure");
+        assert!(m.scope_poisoned("grpo:"));
+        assert!(!m.scope_poisoned("embodied:"), "neighbor scope unaffected");
+        assert!(!m.scope_poisoned(""), "unscoped groups unaffected");
+        assert_eq!(m.scope_reports("grpo:").len(), 1);
+        assert!(m.scope_reports("").is_empty());
+    }
+
+    #[test]
+    fn clear_scope_unpoisons() {
+        let m = FailureMonitor::new();
+        m.report("a:w", 0, "f", "x".into());
+        m.report("b:w", 0, "f", "y".into());
+        let e = m.epoch();
+        m.clear_scope("a:");
+        assert!(!m.scope_poisoned("a:"));
+        assert!(m.scope_poisoned("b:") && m.poisoned());
+        m.clear_scope("b:");
+        assert!(!m.poisoned(), "global probe clears with the last scope");
+        assert_eq!(m.reports().len(), 2, "history survives recovery");
+        assert_eq!(m.epoch(), e, "clearing is not a new failure");
+    }
+
+    #[test]
+    fn scope_derivation() {
+        assert_eq!(scope_of("grpo:train"), "grpo:");
+        assert_eq!(scope_of("train"), "");
+        assert_eq!(scope_of(""), "");
     }
 }

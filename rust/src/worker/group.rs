@@ -7,10 +7,12 @@
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
-use super::failure::FailureMonitor;
+use super::failure::{scope_of, FailureMonitor};
+use super::health::HealthRegistry;
 use super::runner::{run_rank, Ctl, LockMode};
 use super::{LogicFactory, WorkerCtx};
 use crate::channel::{ChannelRegistry, DeviceLockMgr, PortBindings};
@@ -33,6 +35,9 @@ pub struct Services {
     /// `FlowDriver` (Auto placement) and `FlowSupervisor` (joint admission,
     /// live re-chunk hints). Shared by every clone of these services.
     pub profiles: ProfileStore,
+    /// Per-rank heartbeat/busy book: rank threads publish liveness here;
+    /// watchdogs scan it for hung calls. Shared by every clone.
+    pub health: HealthRegistry,
 }
 
 impl Services {
@@ -44,6 +49,7 @@ impl Services {
             locks: DeviceLockMgr::new(),
             monitor: FailureMonitor::new(),
             profiles: ProfileStore::new(),
+            health: HealthRegistry::new(),
             metrics,
             cluster,
         }
@@ -59,7 +65,10 @@ struct Rank {
 /// A launched SPMD worker group.
 pub struct WorkerGroup {
     pub name: String,
-    ranks: Vec<Rank>,
+    /// Behind a lock so [`WorkerGroup::respawn`] (the stage-restart
+    /// primitive) can replace ranks in place through a shared reference —
+    /// the flow driver hands out `&WorkerGroup` everywhere.
+    ranks: std::sync::Mutex<Vec<Rank>>,
     services: Services,
     /// Shared port table all ranks read; the flow driver rebinds it at the
     /// start of every run.
@@ -78,39 +87,92 @@ impl WorkerGroup {
         let ports = PortBindings::new();
         let mut ranks = Vec::with_capacity(placements.len());
         for (rank, devices) in placements.into_iter().enumerate() {
-            let endpoint = format!("{name}/{rank}");
-            let mailbox = services.comm.register(&endpoint, devices.clone())?;
-            let ctx = WorkerCtx {
-                group: name.to_string(),
-                endpoint: endpoint.clone(),
-                rank,
-                n_ranks: 0, // patched below
-                devices: devices.clone(),
-                cluster: services.cluster.clone(),
-                comm: services.comm.clone(),
-                channels: services.channels.clone(),
-                locks: services.locks.clone(),
-                metrics: services.metrics.clone(),
-                mailbox,
-                ports: ports.clone(),
-            };
-            let factory = make_factory(rank);
-            let (tx, rx) = channel::<Ctl>();
-            let monitor = services.monitor.clone();
-            let join = std::thread::Builder::new()
-                .name(endpoint.clone())
-                .spawn(move || run_rank(ctx, factory, rx, monitor))
-                .map_err(|e| anyhow!("spawning {endpoint}: {e}"))?;
-            ranks.push(Rank { tx, join: Some(join), devices });
+            ranks.push(Self::spawn_rank(name, services, &ports, rank, devices, make_factory(rank))?);
         }
         // n_ranks patch: ranks were created with 0; groups are small and the
         // value is only informational, so re-broadcasting is skipped — the
         // count is served by the group itself.
-        Ok(WorkerGroup { name: name.to_string(), ranks, services: services.clone(), ports })
+        Ok(WorkerGroup {
+            name: name.to_string(),
+            ranks: std::sync::Mutex::new(ranks),
+            services: services.clone(),
+            ports,
+        })
+    }
+
+    /// Register one rank's endpoint and start its thread.
+    fn spawn_rank(
+        name: &str,
+        services: &Services,
+        ports: &PortBindings,
+        rank: usize,
+        devices: DeviceSet,
+        factory: LogicFactory,
+    ) -> Result<Rank> {
+        let endpoint = format!("{name}/{rank}");
+        let mailbox = services.comm.register(&endpoint, devices.clone())?;
+        let ctx = WorkerCtx {
+            group: name.to_string(),
+            endpoint: endpoint.clone(),
+            rank,
+            n_ranks: 0, // see the launch-site note
+            devices: devices.clone(),
+            cluster: services.cluster.clone(),
+            comm: services.comm.clone(),
+            channels: services.channels.clone(),
+            locks: services.locks.clone(),
+            metrics: services.metrics.clone(),
+            mailbox,
+            ports: ports.clone(),
+        };
+        let (tx, rx) = channel::<Ctl>();
+        let monitor = services.monitor.clone();
+        let health = services.health.clone();
+        let join = std::thread::Builder::new()
+            .name(endpoint.clone())
+            .spawn(move || run_rank(ctx, factory, rx, monitor, health))
+            .map_err(|e| anyhow!("spawning {endpoint}: {e}"))?;
+        Ok(Rank { tx, join: Some(join), devices })
+    }
+
+    /// Tear down and relaunch every rank of this group in place — the
+    /// stage-restart primitive. Dead threads are reaped; hung threads are
+    /// **abandoned** (a hung thread cannot be joined) after their health
+    /// generation is invalidated, so a late wakeup cannot clobber the
+    /// replacement rank's comm endpoint. Device placements and the shared
+    /// port table are preserved: respawned ranks come up on the same
+    /// device window with the same bound channels.
+    pub fn respawn(&self, mut make_factory: impl FnMut(usize) -> LogicFactory) -> Result<()> {
+        let mut book = self.ranks.lock().unwrap();
+        for rank in 0..book.len() {
+            let endpoint = format!("{}/{rank}", self.name);
+            // Best effort: an idle (non-hung, non-dead) rank exits cleanly.
+            let _ = book[rank].tx.send(Ctl::Shutdown);
+            if let Some(j) = book[rank].join.take() {
+                // Give an idle rank a moment to process the shutdown, then
+                // reap it; a hung rank is left behind, detached.
+                let deadline = Instant::now() + Duration::from_millis(100);
+                while !j.is_finished() && Instant::now() < deadline {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                if j.is_finished() {
+                    let _ = j.join();
+                }
+            }
+            // Invalidate the abandoned thread's generation token *before*
+            // re-registering the endpoint, closing the race where its
+            // teardown would unregister the replacement's comm.
+            self.services.health.register(&endpoint);
+            self.services.comm.unregister(&endpoint);
+            let devices = book[rank].devices.clone();
+            book[rank] =
+                Self::spawn_rank(&self.name, &self.services, &self.ports, rank, devices, make_factory(rank))?;
+        }
+        Ok(())
     }
 
     pub fn n_ranks(&self) -> usize {
-        self.ranks.len()
+        self.ranks.lock().unwrap().len()
     }
 
     /// The group's shared port table (bound by the flow driver each run).
@@ -118,14 +180,14 @@ impl WorkerGroup {
         &self.ports
     }
 
-    pub fn devices_of(&self, rank: usize) -> &DeviceSet {
-        &self.ranks[rank].devices
+    pub fn devices_of(&self, rank: usize) -> DeviceSet {
+        self.ranks.lock().unwrap()[rank].devices.clone()
     }
 
     /// Union of all ranks' devices.
     pub fn all_devices(&self) -> DeviceSet {
         let mut ids = Vec::new();
-        for r in &self.ranks {
+        for r in self.ranks.lock().unwrap().iter() {
             ids.extend_from_slice(r.devices.ids());
         }
         DeviceSet::new(ids)
@@ -133,7 +195,7 @@ impl WorkerGroup {
 
     /// Asynchronously invoke `method(arg)` on every rank.
     pub fn invoke(&self, method: &str, arg: Payload, lock: LockMode) -> GroupHandle {
-        let sel: Vec<usize> = (0..self.ranks.len()).collect();
+        let sel: Vec<usize> = (0..self.n_ranks()).collect();
         self.invoke_ranks(&sel, method, |_| arg.clone(), lock)
     }
 
@@ -145,18 +207,19 @@ impl WorkerGroup {
         mut arg_for: impl FnMut(usize) -> Payload,
         lock: LockMode,
     ) -> GroupHandle {
+        let book = self.ranks.lock().unwrap();
         // Pre-register lock intents in program order (deadlock avoidance:
         // see DeviceLockMgr::register_intent).
         if let LockMode::Device { priority } = lock {
             for &r in ranks {
                 let endpoint = format!("{}/{r}", self.name);
-                self.services.locks.register_intent(&endpoint, &self.ranks[r].devices, priority);
+                self.services.locks.register_intent(&endpoint, &book[r].devices, priority);
             }
         }
         let mut replies = Vec::with_capacity(ranks.len());
         for &r in ranks {
             let (rtx, rrx) = channel();
-            let ok = self.ranks[r]
+            let ok = book[r]
                 .tx
                 .send(Ctl::Invoke { method: method.to_string(), arg: arg_for(r), lock, reply: rtx })
                 .is_ok();
@@ -187,7 +250,7 @@ impl WorkerGroup {
 
     fn lifecycle(&self, mk: impl Fn(Sender<Result<(), String>>) -> Ctl) -> Result<()> {
         let mut rxs = Vec::new();
-        for r in &self.ranks {
+        for r in self.ranks.lock().unwrap().iter() {
             let (tx, rx) = channel();
             r.tx.send(mk(tx)).map_err(|_| anyhow!("{}: rank hung up", self.name))?;
             rxs.push(rx);
@@ -204,20 +267,42 @@ impl WorkerGroup {
     }
 
     fn shutdown_inner(&mut self) {
-        for r in &self.ranks {
+        let mut book = self.ranks.lock().unwrap();
+        for r in book.iter() {
             let _ = r.tx.send(Ctl::Shutdown);
         }
-        for r in &mut self.ranks {
+        // A poisoned scope may contain a genuinely hung rank (that is what
+        // poisoned it); joining it would wedge teardown forever, so bound
+        // the wait and abandon stragglers. Healthy groups keep the
+        // unconditional join (deterministic resource release).
+        let poisoned = self.services.monitor.scope_poisoned(scope_of(&self.name));
+        let deadline = Instant::now() + Duration::from_millis(250);
+        for r in book.iter_mut() {
             if let Some(j) = r.join.take() {
-                let _ = j.join();
+                if poisoned {
+                    while !j.is_finished() && Instant::now() < deadline {
+                        std::thread::sleep(Duration::from_millis(1));
+                    }
+                    if j.is_finished() {
+                        let _ = j.join();
+                    }
+                } else {
+                    let _ = j.join();
+                }
             }
         }
     }
 
-    /// Liveness probe (controller failure-monitor thread analog).
+    /// Liveness probe (controller failure-monitor thread analog). Scope
+    /// aware: a co-tenant flow's failure does not read as this group's.
     pub fn alive(&self) -> bool {
-        !self.services.monitor.poisoned()
-            && self.ranks.iter().all(|r| r.join.as_ref().map(|j| !j.is_finished()).unwrap_or(false))
+        !self.services.monitor.scope_poisoned(scope_of(&self.name))
+            && self
+                .ranks
+                .lock()
+                .unwrap()
+                .iter()
+                .all(|r| r.join.as_ref().map(|j| !j.is_finished()).unwrap_or(false))
     }
 }
 
@@ -358,6 +443,26 @@ mod tests {
         let err = g.invoke("panic", Payload::new(), LockMode::None).wait().unwrap_err();
         assert!(format!("{err}").contains("panic"), "{err}");
         assert!(svc.monitor.poisoned());
+        g.shutdown();
+    }
+
+    #[test]
+    fn respawn_replaces_dead_ranks() {
+        let svc = services(1);
+        let g = echo_group(&svc, 1);
+        let _ = g.invoke("panic", Payload::new(), LockMode::None).wait();
+        std::thread::sleep(Duration::from_millis(30));
+        assert!(!g.alive(), "rank suicided after the panic");
+        g.respawn(|_rank| {
+            Box::new(|_ctx: &WorkerCtx| Ok(Box::new(Echo { onloads: 0 }) as Box<dyn WorkerLogic>))
+        })
+        .unwrap();
+        // Recovery clears the (unscoped) poison; the group is live again.
+        svc.monitor.clear_scope("");
+        assert!(g.alive());
+        let outs =
+            g.invoke("echo", Payload::new().set_meta("x", 1i64), LockMode::None).wait().unwrap();
+        assert_eq!(outs[0].meta_i64("x"), Some(1), "replacement rank serves calls");
         g.shutdown();
     }
 

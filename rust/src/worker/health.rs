@@ -1,0 +1,242 @@
+//! Per-rank health registry: heartbeats and busy-deadline hang detection.
+//!
+//! Every rank thread publishes liveness here from `worker::runner`: a
+//! heartbeat each control-loop turn, plus a `busy_since` marker around
+//! each dispatched `logic.call` (the runner cannot beat *inside* an opaque
+//! worker method, so "how long has this call been running" is the hang
+//! signal). Watchdogs — `FlowSupervisor::tick` for supervised clusters,
+//! `FlowRun::heal` for unsupervised runs — scan [`HealthRegistry::stalled`]
+//! against a configured `[fault] deadline_ms` and report overdue ranks to
+//! the `FailureMonitor`, which routes them into the same stage-restart
+//! path as panics.
+//!
+//! Entries are generation-stamped: restarting a stage *abandons* the old
+//! rank entries (a hung thread cannot be joined) and registers fresh ones.
+//! The abandoned thread, should it ever wake, checks
+//! [`HealthRegistry::is_current`] before tearing down shared state so it
+//! cannot clobber its replacement's comm endpoint.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+#[derive(Debug)]
+struct RankHealth {
+    generation: u64,
+    last_beat: Instant,
+    /// Set while the rank executes a dispatched call.
+    busy_since: Option<Instant>,
+    method: String,
+    /// Marked when a watchdog already reported this call as stalled, so
+    /// one hang produces one failure report, not one per poll.
+    flagged: bool,
+}
+
+/// Shared, thread-safe rank-health book. Cloning shares state — every
+/// `Services` clone sees the same registry.
+#[derive(Clone, Default)]
+pub struct HealthRegistry {
+    inner: Arc<Mutex<HashMap<String, RankHealth>>>,
+}
+
+/// One overdue rank from a [`HealthRegistry::stalled`] scan.
+#[derive(Debug, Clone)]
+pub struct StalledRank {
+    /// Endpoint name (`"group/rank"`, scope prefix included).
+    pub endpoint: String,
+    /// Method the rank has been stuck in.
+    pub method: String,
+    /// How long the call has been running.
+    pub busy_for: Duration,
+}
+
+impl HealthRegistry {
+    pub fn new() -> HealthRegistry {
+        HealthRegistry::default()
+    }
+
+    /// Register a rank (thread start). Returns the generation token the
+    /// rank must present to [`HealthRegistry::is_current`] at teardown.
+    /// Re-registering an endpoint (stage restart) bumps the generation,
+    /// invalidating the abandoned thread's token.
+    pub fn register(&self, endpoint: &str) -> u64 {
+        let mut map = self.inner.lock().unwrap();
+        let generation = map.get(endpoint).map(|h| h.generation + 1).unwrap_or(0);
+        map.insert(
+            endpoint.to_string(),
+            RankHealth {
+                generation,
+                last_beat: Instant::now(),
+                busy_since: None,
+                method: String::new(),
+                flagged: false,
+            },
+        );
+        generation
+    }
+
+    /// Heartbeat: the rank's control loop is alive (between calls).
+    pub fn beat(&self, endpoint: &str, generation: u64) {
+        if let Some(h) = self.inner.lock().unwrap().get_mut(endpoint) {
+            if h.generation == generation {
+                h.last_beat = Instant::now();
+            }
+        }
+    }
+
+    /// The rank is entering a dispatched call.
+    pub fn begin_call(&self, endpoint: &str, generation: u64, method: &str) {
+        if let Some(h) = self.inner.lock().unwrap().get_mut(endpoint) {
+            if h.generation == generation {
+                h.busy_since = Some(Instant::now());
+                h.method = method.to_string();
+                h.flagged = false;
+            }
+        }
+    }
+
+    /// The rank finished a dispatched call.
+    pub fn end_call(&self, endpoint: &str, generation: u64) {
+        if let Some(h) = self.inner.lock().unwrap().get_mut(endpoint) {
+            if h.generation == generation {
+                h.busy_since = None;
+                h.last_beat = Instant::now();
+                h.flagged = false;
+            }
+        }
+    }
+
+    /// Does the registry still consider this (endpoint, generation) the
+    /// live rank? An abandoned thread must not tear down shared state.
+    pub fn is_current(&self, endpoint: &str, generation: u64) -> bool {
+        self.inner
+            .lock()
+            .unwrap()
+            .get(endpoint)
+            .map(|h| h.generation == generation)
+            .unwrap_or(false)
+    }
+
+    /// Deregister a rank at clean thread exit (only if still current).
+    pub fn deregister(&self, endpoint: &str, generation: u64) {
+        let mut map = self.inner.lock().unwrap();
+        if map.get(endpoint).map(|h| h.generation == generation).unwrap_or(false) {
+            map.remove(endpoint);
+        }
+    }
+
+    /// Ranks under `prefix` whose current call has run longer than
+    /// `deadline`. Each stalled call is returned **once**: the entry is
+    /// flagged and only re-reported after the call ends (or the rank is
+    /// restarted).
+    pub fn stalled(&self, prefix: &str, deadline: Duration) -> Vec<StalledRank> {
+        let mut out = Vec::new();
+        let now = Instant::now();
+        for (ep, h) in self.inner.lock().unwrap().iter_mut() {
+            if !ep.starts_with(prefix) || h.flagged {
+                continue;
+            }
+            if let Some(t0) = h.busy_since {
+                let busy_for = now.duration_since(t0);
+                if busy_for > deadline {
+                    h.flagged = true;
+                    out.push(StalledRank {
+                        endpoint: ep.clone(),
+                        method: h.method.clone(),
+                        busy_for,
+                    });
+                }
+            }
+        }
+        out.sort_by(|a, b| a.endpoint.cmp(&b.endpoint));
+        out
+    }
+
+    /// Seconds since the rank's last heartbeat (`None` when unknown).
+    pub fn last_beat_age(&self, endpoint: &str) -> Option<Duration> {
+        self.inner
+            .lock()
+            .unwrap()
+            .get(endpoint)
+            .map(|h| h.last_beat.elapsed())
+    }
+
+    /// Registered endpoints under a prefix (diagnostics).
+    pub fn endpoints(&self, prefix: &str) -> Vec<String> {
+        let mut v: Vec<String> = self
+            .inner
+            .lock()
+            .unwrap()
+            .keys()
+            .filter(|e| e.starts_with(prefix))
+            .cloned()
+            .collect();
+        v.sort();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn register_beat_deregister() {
+        let h = HealthRegistry::new();
+        let g = h.register("w/0");
+        assert!(h.is_current("w/0", g));
+        h.beat("w/0", g);
+        assert!(h.last_beat_age("w/0").unwrap() < Duration::from_secs(1));
+        h.deregister("w/0", g);
+        assert!(!h.is_current("w/0", g));
+        assert!(h.last_beat_age("w/0").is_none());
+    }
+
+    #[test]
+    fn stalled_fires_once_per_call() {
+        let h = HealthRegistry::new();
+        let g = h.register("flow:work/0");
+        h.begin_call("flow:work/0", g, "run");
+        std::thread::sleep(Duration::from_millis(15));
+        let s = h.stalled("flow:", Duration::from_millis(5));
+        assert_eq!(s.len(), 1);
+        assert_eq!(s[0].endpoint, "flow:work/0");
+        assert_eq!(s[0].method, "run");
+        assert!(s[0].busy_for >= Duration::from_millis(5));
+        // Same stuck call is not re-reported.
+        assert!(h.stalled("flow:", Duration::from_millis(5)).is_empty());
+        // A new call re-arms detection.
+        h.end_call("flow:work/0", g);
+        h.begin_call("flow:work/0", g, "run");
+        std::thread::sleep(Duration::from_millis(15));
+        assert_eq!(h.stalled("flow:", Duration::from_millis(5)).len(), 1);
+    }
+
+    #[test]
+    fn idle_and_fast_ranks_not_stalled() {
+        let h = HealthRegistry::new();
+        let g = h.register("w/0");
+        // Idle (between calls): never stalled, however old the beat.
+        assert!(h.stalled("", Duration::from_millis(0)).is_empty());
+        h.begin_call("w/0", g, "run");
+        // Busy but within deadline.
+        assert!(h.stalled("", Duration::from_secs(60)).is_empty());
+    }
+
+    #[test]
+    fn restart_bumps_generation_and_invalidates_old_token() {
+        let h = HealthRegistry::new();
+        let g0 = h.register("w/0");
+        h.begin_call("w/0", g0, "run");
+        let g1 = h.register("w/0"); // restart replaces the entry
+        assert!(g1 > g0);
+        assert!(!h.is_current("w/0", g0));
+        assert!(h.is_current("w/0", g1));
+        // Stale-token writes are ignored.
+        h.begin_call("w/0", g0, "zombie");
+        assert!(h.stalled("", Duration::from_millis(0)).is_empty());
+        // Stale deregister cannot remove the replacement.
+        h.deregister("w/0", g0);
+        assert!(h.is_current("w/0", g1));
+    }
+}

@@ -16,6 +16,7 @@
 
 pub mod failure;
 pub mod group;
+pub mod health;
 pub mod runner;
 
 use crate::channel::{BoundPort, ChannelRegistry, DeviceLockMgr, PortBindings};
@@ -24,8 +25,9 @@ use crate::comm::{CommManager, Mailbox};
 use crate::data::Payload;
 use crate::metrics::Metrics;
 
-pub use failure::{FailureMonitor, FailureReport};
+pub use failure::{scope_of, FailureMonitor, FailureReport};
 pub use group::{GroupHandle, WorkerGroup};
+pub use health::{HealthRegistry, StalledRank};
 pub use runner::LockMode;
 
 use anyhow::{anyhow, Result};

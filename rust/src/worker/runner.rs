@@ -1,4 +1,5 @@
-//! Per-rank worker thread: control loop, auto-timing, lock integration.
+//! Per-rank worker thread: control loop, auto-timing, lock integration,
+//! health heartbeats, and consumption acks.
 
 use std::collections::HashMap;
 use std::panic::AssertUnwindSafe;
@@ -9,6 +10,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use super::failure::FailureMonitor;
+use super::health::HealthRegistry;
 use super::{LogicFactory, WorkerCtx};
 use crate::data::Payload;
 
@@ -32,17 +34,29 @@ pub enum Ctl {
 }
 
 /// Thread body for one rank. Consumes control messages until `Shutdown`
-/// (or a failure, after which the rank exits fail-fast).
-pub fn run_rank(ctx: WorkerCtx, factory: LogicFactory, rx: Receiver<Ctl>, monitor: FailureMonitor) {
+/// (or a failure, after which the rank exits fail-fast). Liveness is
+/// published to `health` under a generation token: a restarted stage's
+/// replacement rank bumps the generation, and this (now abandoned) thread
+/// must not tear down the shared endpoint its replacement re-registered.
+pub fn run_rank(
+    ctx: WorkerCtx,
+    factory: LogicFactory,
+    rx: Receiver<Ctl>,
+    monitor: FailureMonitor,
+    health: HealthRegistry,
+) {
+    let generation = health.register(&ctx.endpoint);
     let mut logic = match factory(&ctx) {
         Ok(l) => l,
         Err(e) => {
             monitor.report(&ctx.group, ctx.rank, "factory", format!("{e:#}"));
+            health.deregister(&ctx.endpoint, generation);
             return;
         }
     };
     if let Err(e) = logic.setup(&ctx) {
         monitor.report(&ctx.group, ctx.rank, "setup", format!("{e:#}"));
+        health.deregister(&ctx.endpoint, generation);
         return;
     }
     let mut loaded = false;
@@ -53,6 +67,7 @@ pub fn run_rank(ctx: WorkerCtx, factory: LogicFactory, rx: Receiver<Ctl>, monito
     let mut method_keys: HashMap<String, String> = HashMap::new();
 
     while let Ok(msg) = rx.recv() {
+        health.beat(&ctx.endpoint, generation);
         match msg {
             Ctl::Shutdown => break,
             Ctl::Onload { reply } => {
@@ -86,9 +101,13 @@ pub fn run_rank(ctx: WorkerCtx, factory: LogicFactory, rx: Receiver<Ctl>, monito
                 if trace_enabled() {
                     trace(&format!("{holder} calling {method}"));
                 }
+                // The busy window is the hang signal: a watchdog flags this
+                // rank if the call outlives the configured deadline.
+                health.begin_call(&ctx.endpoint, generation, &method);
                 let outcome = std::panic::catch_unwind(AssertUnwindSafe(|| {
                     logic.call(&ctx, &method, arg)
                 }));
+                health.end_call(&ctx.endpoint, generation);
                 if trace_enabled() {
                     trace(&format!("{holder} finished {method}"));
                 }
@@ -114,6 +133,12 @@ pub fn run_rank(ctx: WorkerCtx, factory: LogicFactory, rx: Receiver<Ctl>, monito
 
                 match outcome {
                     Ok(Ok(out)) => {
+                        // Completed call: acknowledge everything this rank
+                        // consumed from its bound ports, releasing the
+                        // channels' at-least-once replay buffers. Failed
+                        // calls skip this, so their in-flight items replay
+                        // to the restarted stage.
+                        ctx.ports.ack_all(&ctx.endpoint);
                         let _ = reply.send(Ok(out));
                     }
                     Ok(Err(e)) => {
@@ -133,9 +158,16 @@ pub fn run_rank(ctx: WorkerCtx, factory: LogicFactory, rx: Receiver<Ctl>, monito
             }
         }
     }
-    // Teardown: release resources and connections.
+    // Teardown: release resources and connections — but only while this
+    // thread is still the live generation for its endpoint. A restarted
+    // stage re-registers the endpoint for its replacement rank; if this
+    // (abandoned) thread wakes later, unregistering would sever the
+    // replacement's comm instead of its own.
     let _ = ensure_offloaded(&mut *logic, &ctx, &mut loaded);
-    ctx.comm.unregister(&ctx.endpoint());
+    if health.is_current(&ctx.endpoint, generation) {
+        ctx.comm.unregister(&ctx.endpoint());
+        health.deregister(&ctx.endpoint, generation);
+    }
 }
 
 fn ensure_loaded(logic: &mut dyn super::WorkerLogic, ctx: &WorkerCtx, loaded: &mut bool) -> Result<()> {

@@ -345,8 +345,10 @@ pub fn run_embodied_elastic(
             );
         }
         iters.push(s);
-        if services.monitor.poisoned() {
-            bail!("run poisoned: {:?}", services.monitor.reports());
+        // Scope-aware: only THIS flow's failures end the run; a co-tenant
+        // flow poisoning the shared monitor must not kill us.
+        if services.monitor.scope_poisoned(driver.scope()) {
+            bail!("run poisoned: {:?}", services.monitor.scope_reports(driver.scope()));
         }
     }
 

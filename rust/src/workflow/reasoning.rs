@@ -32,7 +32,7 @@ use crate::channel::LockCounters;
 use crate::cluster::Cluster;
 use crate::config::{PlacementMode, RunConfig};
 use crate::data::{Payload, Tensor};
-use crate::flow::{Edge, FlowDriver, FlowSpec, LaunchOpts, Relaunch, Stage};
+use crate::flow::{Edge, FlowCheckpoint, FlowDriver, FlowSpec, LaunchOpts, Relaunch, Stage};
 use crate::infer::{InferCfg, InferWorker};
 use crate::metrics::Reduce;
 use crate::model::{TaskGen, Tokenizer};
@@ -53,6 +53,13 @@ pub struct RunnerOpts {
     pub verl_like: bool,
     /// Print per-iteration progress.
     pub verbose: bool,
+    /// Write a [`FlowCheckpoint`] to this directory after every finished
+    /// iteration (weights, step counters, profile book).
+    pub checkpoint_dir: Option<String>,
+    /// Resume from a checkpoint directory written by a previous run:
+    /// restore trainer weights, skip completed iterations, and seed the
+    /// profile store from the saved book.
+    pub resume_from: Option<String>,
 }
 
 /// Per-iteration statistics.
@@ -313,6 +320,22 @@ pub fn run_grpo_elastic(
 ) -> Result<GrpoReport> {
     let n_devices = launch.window.map(|(_, l)| l).unwrap_or(services.cluster.num_devices());
     let spec = make_spec(n_devices)?;
+    let flow_name = spec.name.clone();
+
+    // Resume: load the checkpoint before planning, so the saved profile
+    // book seeds Auto placement and a missing/corrupt checkpoint fails
+    // before any workers launch.
+    let resume = match &opts.resume_from {
+        Some(dir) => {
+            let ck = FlowCheckpoint::load(dir, Some(&services.profiles))
+                .with_context(|| format!("resuming from checkpoint {dir}"))?;
+            if ck.flow != flow_name {
+                bail!("checkpoint {dir} is for flow {:?}, not {flow_name:?}", ck.flow);
+            }
+            Some(ck)
+        }
+        None => None,
+    };
 
     // Cold start: under Auto with no live profile for this topology yet,
     // run the §3.4 profiler once (tiny collocated run) and seed the store
@@ -327,8 +350,34 @@ pub fn run_grpo_elastic(
 
     let mut launch = launch;
     let mut driver = FlowDriver::launch_with(spec, services, cfg.sched.mode, launch.clone())?;
+    // With a restart budget, blocked producers wait out transient scope
+    // poison (a stage being healed) instead of failing fast.
+    driver.set_recovering(cfg.fault.max_restarts > 0);
     let mut plan_rendered = driver.plan_note().map(str::to_string);
-    init_flow(cfg, opts, &driver)?;
+    let mut last_weights = match &resume {
+        Some(ck) => {
+            driver.onload_pipelined()?;
+            match ck.weights_of("train") {
+                Some(w) => driver
+                    .group("train")?
+                    .invoke_rank(0, "set_weights", w.clone(), driver.lock_of("train"))
+                    .wait()
+                    .context("restore trainer weights from checkpoint")?,
+                None => driver
+                    .group("train")?
+                    .invoke_rank(
+                        0,
+                        "init_weights",
+                        Payload::new().set_meta("seed", cfg.seed),
+                        driver.lock_of("train"),
+                    )
+                    .wait()
+                    .context("init_weights")?,
+            };
+            sync_weights(&driver)?
+        }
+        None => init_flow(cfg, opts, &driver)?,
+    };
 
     let tok = Tokenizer::new();
     let manifest = Manifest::load(&cfg.artifacts_dir)?;
@@ -340,9 +389,21 @@ pub fn run_grpo_elastic(
         TaskGen::new(cfg.seed ^ 0x7357)
     };
 
+    // Resume skips completed iterations; replaying the task stream keeps
+    // iteration `i` drawing the same prompts whether or not the process
+    // restarted in between.
+    let start_iter = resume.as_ref().map(|ck| ck.iter as usize).unwrap_or(0).min(cfg.iters);
+    for _ in 0..start_iter {
+        let _ = taskgen.batch(cfg.rollout.batch);
+    }
+    let mut total_train_steps: u64 =
+        resume.as_ref().and_then(|ck| ck.steps_of("train")).unwrap_or(0);
+
     let mut relaunches: Vec<Relaunch> = Vec::new();
     let mut iters = Vec::new();
-    for iter in 0..cfg.iters {
+    let mut fault_relaunches: u64 = 0;
+    let mut iter = start_iter;
+    while iter < cfg.iters {
         // Relaunch-on-resize: an accepted offer delivered between
         // iterations. The previous iteration's run is fully drained
         // (finish() barriers on every stage), so nothing is in flight;
@@ -383,6 +444,7 @@ pub fn run_grpo_elastic(
                         &mut make_spec,
                     )?;
                     driver = d;
+                    driver.set_recovering(cfg.fault.max_restarts > 0);
                     driver.onload_pipelined()?;
                     if let Some(w) = weights {
                         driver
@@ -402,7 +464,7 @@ pub fn run_grpo_elastic(
                             .wait()
                             .context("trainer re-init after relaunch")?;
                     }
-                    sync_weights(&driver)?;
+                    last_weights = sync_weights(&driver)?;
                     if applied {
                         relaunches.push(Relaunch {
                             at_iter: iter,
@@ -432,9 +494,54 @@ pub fn run_grpo_elastic(
 
         services.metrics.record_value("iter.begin", iter as f64);
         let t0 = Instant::now();
-        let stats = run_iteration(cfg, services, &driver, &tok, &mut taskgen, p_len)?;
+        let stats = match run_iteration(cfg, services, &driver, &tok, &mut taskgen, p_len, &last_weights)
+        {
+            Ok(s) => s,
+            Err(e) => {
+                // Stage-scoped recovery already ran inside the iteration;
+                // reaching here means the per-stage restart budget is
+                // exhausted or the failure wasn't attributable to one
+                // stage. Escalate: tear the whole flow down and relaunch
+                // it over the same window with exponential backoff,
+                // restoring the last synced weights.
+                if cfg.fault.max_restarts == 0 || fault_relaunches >= cfg.fault.max_restarts {
+                    return Err(e);
+                }
+                fault_relaunches += 1;
+                let backoff = cfg
+                    .fault
+                    .backoff_ms
+                    .saturating_mul(1u64 << (fault_relaunches - 1).min(16));
+                eprintln!(
+                    "[fault] iter {iter} failed ({e:#}); full relaunch {fault_relaunches}/{} \
+                     after {backoff}ms",
+                    cfg.fault.max_restarts
+                );
+                if backoff > 0 {
+                    std::thread::sleep(Duration::from_millis(backoff));
+                }
+                let scope = driver.scope().to_string();
+                let n = launch.window.map(|(_, l)| l).unwrap_or(services.cluster.num_devices());
+                let spec = make_spec(n).context("rebuilding the spec for a fault relaunch")?;
+                drop(driver);
+                services.monitor.clear_scope(&scope);
+                driver = FlowDriver::launch_with(spec, services, cfg.sched.mode, launch.clone())
+                    .context("fault relaunch")?;
+                driver.set_recovering(cfg.fault.max_restarts > 0);
+                plan_rendered = driver.plan_note().map(str::to_string);
+                driver.onload_pipelined()?;
+                driver
+                    .group("train")?
+                    .invoke_rank(0, "set_weights", last_weights.clone(), driver.lock_of("train"))
+                    .wait()
+                    .context("restore trainer weights after fault relaunch")?;
+                last_weights = sync_weights(&driver)?;
+                // Retry this iteration (with a fresh prompt batch).
+                continue;
+            }
+        };
         let secs = t0.elapsed().as_secs_f64();
-        sync_weights(&driver)?;
+        last_weights = sync_weights(&driver)?;
         let s = IterStats {
             iter,
             secs,
@@ -457,10 +564,22 @@ pub fn run_grpo_elastic(
                 s.loss
             );
         }
-        iters.push(s);
-        if services.monitor.poisoned() {
-            bail!("run poisoned: {:?}", services.monitor.reports());
+        total_train_steps += s.train_steps as u64;
+        if let Some(dir) = &opts.checkpoint_dir {
+            let mut ck = FlowCheckpoint::new(&flow_name, (iter + 1) as u64);
+            ck.set_steps("train", total_train_steps);
+            ck.set_extra("tokens", s.tokens);
+            ck.set_weights("train", last_weights.clone());
+            ck.save(dir, Some(&services.profiles))
+                .with_context(|| format!("writing checkpoint {dir}"))?;
         }
+        iters.push(s);
+        // Scope-aware: only THIS flow's failures end the run; a co-tenant
+        // flow poisoning the shared monitor must not kill us.
+        if services.monitor.scope_poisoned(driver.scope()) {
+            bail!("run poisoned: {:?}", services.monitor.scope_reports(driver.scope()));
+        }
+        iter += 1;
     }
 
     // Per-flow view: on shared services the driver filters out other
@@ -481,7 +600,7 @@ pub fn run_grpo_elastic(
 /// optional SFT warm-start, and the weight-sync barrier. (Relaunches
 /// restore the previous trainer's weights instead — see the resize path
 /// in [`run_grpo_elastic`].)
-fn init_flow(cfg: &RunConfig, opts: &RunnerOpts, driver: &FlowDriver) -> Result<()> {
+fn init_flow(cfg: &RunConfig, opts: &RunnerOpts, driver: &FlowDriver) -> Result<Payload> {
     driver.onload_pipelined()?;
     driver
         .group("train")?
@@ -502,8 +621,10 @@ fn run_iteration(
     tok: &Tokenizer,
     taskgen: &mut TaskGen,
     p_len: usize,
+    last_weights: &Payload,
 ) -> Result<(usize, f64, f64, f64, usize, usize)> {
     let mut run = driver.begin()?;
+    let mut tracker = run.tracker();
 
     // Kick off the streams first (async; locks order execution if
     // collocated). Starting before the feed matters on bounded edges: a
@@ -553,9 +674,35 @@ fn run_iteration(
                 if run.drained("scored")? {
                     break;
                 }
-                if run.poisoned() {
+                if cfg.fault.max_restarts > 0 {
+                    // Stage-scoped recovery: attribute fresh failure
+                    // reports (and overdue heartbeats) to stages, restart
+                    // just those stages in place, and replay their
+                    // in-flight items. All three GRPO stages hold weights,
+                    // so each restarted stage is re-seeded from the last
+                    // synced snapshot. Err = restart budget exhausted or
+                    // the failure isn't stage-scoped — escalate to the
+                    // caller's full relaunch.
+                    let healed = run
+                        .heal(&cfg.fault, &mut tracker, |stage| match stage {
+                            "train" | "rollout" | "infer" => {
+                                Some(("set_weights".to_string(), last_weights.clone()))
+                            }
+                            _ => None,
+                        })
+                        .map_err(|e| {
+                            let _ = run.feed_done("train");
+                            e.context("stage recovery failed")
+                        })?;
+                    if healed > 0 {
+                        services.metrics.record_value("fault.stage_restarts", healed as f64);
+                    }
+                } else if run.poisoned() {
                     run.feed_done("train")?;
-                    bail!("aggregation aborted: {:?}", services.monitor.reports());
+                    bail!(
+                        "aggregation aborted: {:?}",
+                        services.monitor.scope_reports(driver.scope())
+                    );
                 }
                 continue;
             }
@@ -675,7 +822,9 @@ fn sft_warmup(cfg: &RunConfig, driver: &FlowDriver, verbose: bool) -> Result<()>
 
 /// Weight sync barrier: trainer → rollout + infer (the paper's per-
 /// iteration weight update that synchronizes generation and training).
-fn sync_weights(driver: &FlowDriver) -> Result<()> {
+/// Returns the synced snapshot — the fault-recovery paths re-seed
+/// restarted stages and write checkpoints from it.
+fn sync_weights(driver: &FlowDriver) -> Result<Payload> {
     let w = driver
         .group("train")?
         .invoke_rank(0, "get_weights", Payload::new(), driver.lock_of("train"))
@@ -683,10 +832,10 @@ fn sync_weights(driver: &FlowDriver) -> Result<()> {
         .context("get_weights")?
         .remove(0);
     let hr = driver.group("rollout")?.invoke("set_weights", w.clone(), LockMode::None);
-    let hi = driver.group("infer")?.invoke("set_weights", w, LockMode::None);
+    let hi = driver.group("infer")?.invoke("set_weights", w.clone(), LockMode::None);
     hr.wait().context("rollout set_weights")?;
     hi.wait().context("infer set_weights")?;
-    Ok(())
+    Ok(w)
 }
 
 /// Cold-start profiler (§3.4): run one tiny collocated iteration batch on
@@ -701,7 +850,12 @@ fn seed_profile(cfg: &RunConfig, opts: &RunnerOpts, services: &Services, key: &s
     pcfg.iters = cfg.sched.profile_iters.max(1);
     pcfg.rollout.batch = (cfg.rollout.batch / 4).max(2);
     pcfg.sched.mode = PlacementMode::Collocated;
-    let report = run_grpo(&pcfg, &RunnerOpts { verbose: false, ..opts.clone() })?;
+    // The profiling run must not write or consume the real run's
+    // checkpoints.
+    let report = run_grpo(
+        &pcfg,
+        &RunnerOpts { verbose: false, checkpoint_dir: None, resume_from: None, ..opts.clone() },
+    )?;
 
     // Build the profile DB from the measured phase times.
     let responses = pcfg.responses_per_iter();

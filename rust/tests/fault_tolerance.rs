@@ -1,0 +1,333 @@
+//! Integration tests for the fault-tolerance machinery: heartbeat/deadline
+//! hang detection, scoped stage restart with at-least-once replay,
+//! max_restarts escalation, fail-fast wakeups for blocked driver ports,
+//! and checkpoint/resume. Faults are injected with the `chaos` stage kind
+//! (a relay that panics/hangs on schedule), so every scenario is seeded
+//! and deterministic in *what* fails — only timing varies.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+use rlinf::cluster::Cluster;
+use rlinf::config::{ClusterConfig, FaultConfig, PlacementMode};
+use rlinf::data::Payload;
+use rlinf::flow::{
+    Edge, FlowCheckpoint, FlowDriver, FlowRun, FlowSpec, RestartTracker, Stage, StageRegistry,
+};
+use rlinf::util::json::Value;
+use rlinf::worker::group::Services;
+
+fn services(devices: usize) -> Services {
+    Services::new(Cluster::new(ClusterConfig {
+        nodes: 1,
+        devices_per_node: devices,
+        device_mem: 1 << 30,
+        ..Default::default()
+    }))
+}
+
+/// Resolve a registered stage kind into a [`Stage`] (manifest-style).
+fn kind_stage(kind: &str, name: &str, opts: Vec<(&str, Value)>) -> Stage {
+    let reg = StageRegistry::builtin();
+    let given: BTreeMap<String, Value> =
+        opts.into_iter().map(|(k, v)| (k.to_string(), v)).collect();
+    Stage::new(name, reg.resolve_stage(kind, &given).unwrap())
+}
+
+fn fault(deadline_ms: u64, max_restarts: u64, backoff_ms: u64) -> FaultConfig {
+    FaultConfig { heartbeat_ms: 10, deadline_ms, max_restarts, backoff_ms }
+}
+
+/// Driver→chaos→driver pipeline: `src` feeds the injected stage, `mid`
+/// returns whatever it forwarded.
+fn chaos_spec(flow: &str, opts: Vec<(&str, Value)>) -> FlowSpec {
+    FlowSpec::new(flow)
+        .stage(kind_stage("chaos", "inject", opts))
+        .edge(Edge::new("src").produced_by_driver().consumed_by("inject", "run"))
+        .edge(Edge::new("mid").produced_by("inject", "run").consumed_by_driver())
+}
+
+/// Drain `mid` to completion, healing on every stall; returns the item
+/// count. Panics (with context) if the flow wedges past `budget`.
+fn drain_healing(
+    run: &mut FlowRun<'_>,
+    fc: &FaultConfig,
+    tracker: &mut RestartTracker,
+    budget: Duration,
+) -> usize {
+    let deadline = Instant::now() + budget;
+    let mut got = 0usize;
+    loop {
+        assert!(Instant::now() < deadline, "flow wedged after {got} items");
+        match run.recv_timeout("mid", Duration::from_millis(100)).unwrap() {
+            Some(_) => got += 1,
+            None => {
+                if run.drained("mid").unwrap() {
+                    return got;
+                }
+                run.heal(fc, tracker, |_| None).unwrap();
+            }
+        }
+    }
+}
+
+#[test]
+fn panic_is_restarted_and_replayed_exactly_once() {
+    let svc = services(1);
+    let spec = chaos_spec(
+        "ft-panic",
+        vec![("panic_after", Value::Int(3)), ("max_faults", Value::Int(1))],
+    );
+    let driver = FlowDriver::launch(spec, &svc, PlacementMode::Disaggregated).unwrap();
+    driver.set_recovering(true);
+    let fc = fault(0, 2, 1);
+
+    let mut run = driver.begin().unwrap();
+    run.start().unwrap();
+    let mut tracker = run.tracker();
+    for i in 0..8i64 {
+        run.send("src", Payload::new().set_meta("i", i)).unwrap();
+    }
+    run.feed_done("src").unwrap();
+
+    let got = drain_healing(&mut run, &fc, &mut tracker, Duration::from_secs(60));
+    assert_eq!(got, 8, "every item arrives exactly once despite the panic");
+    assert_eq!(tracker.restarts_of("inject"), 1, "one panic, one restart");
+    assert_eq!(tracker.total_restarts(), 1);
+
+    let report = run.finish().unwrap();
+    let mid = report.edge("mid").unwrap();
+    assert_eq!(mid.got, 8);
+    assert_eq!(mid.backlog, 0);
+
+    let reports = svc.monitor.scope_reports(driver.scope());
+    assert!(!reports.is_empty(), "the panic produced a failure report");
+    assert!(
+        reports.iter().any(|r| r.message.contains("injected panic")),
+        "{reports:?}"
+    );
+    assert!(
+        !svc.monitor.scope_poisoned(driver.scope()),
+        "a committed heal clears the scope's poison"
+    );
+}
+
+#[test]
+fn hang_is_detected_within_deadline_and_restarted() {
+    let svc = services(1);
+    let spec = chaos_spec(
+        "ft-hang",
+        vec![("hang_after", Value::Int(2)), ("max_faults", Value::Int(1))],
+    );
+    let driver = FlowDriver::launch(spec, &svc, PlacementMode::Disaggregated).unwrap();
+    driver.set_recovering(true);
+    // deadline_ms > 0 arms the watchdog: a call busy past 250ms is
+    // reported like a panic and takes the same restart path.
+    let fc = fault(250, 2, 1);
+
+    let mut run = driver.begin().unwrap();
+    run.start().unwrap();
+    let mut tracker = run.tracker();
+    for i in 0..6i64 {
+        run.send("src", Payload::new().set_meta("i", i)).unwrap();
+    }
+    run.feed_done("src").unwrap();
+
+    let got = drain_healing(&mut run, &fc, &mut tracker, Duration::from_secs(60));
+    assert_eq!(got, 6, "the stalled item replays after the hung rank is replaced");
+    assert_eq!(tracker.restarts_of("inject"), 1);
+
+    let report = run.finish().unwrap();
+    assert_eq!(report.edge("mid").unwrap().got, 6);
+    let reports = svc.monitor.scope_reports(driver.scope());
+    assert!(
+        reports.iter().any(|r| r.message.contains("hang")),
+        "the watchdog attributed the stall as a hang: {reports:?}"
+    );
+}
+
+#[test]
+fn max_restarts_exhaustion_escalates() {
+    let svc = services(1);
+    // Panics on the first item of *every* incarnation (fault budget far
+    // above the restart budget), so recovery can never succeed.
+    let spec = chaos_spec(
+        "ft-escalate",
+        vec![("panic_after", Value::Int(1)), ("max_faults", Value::Int(100))],
+    );
+    let driver = FlowDriver::launch(spec, &svc, PlacementMode::Disaggregated).unwrap();
+    driver.set_recovering(true);
+    let fc = fault(0, 1, 1);
+
+    let mut run = driver.begin().unwrap();
+    run.start().unwrap();
+    let mut tracker = run.tracker();
+    for i in 0..4i64 {
+        run.send("src", Payload::new().set_meta("i", i)).unwrap();
+    }
+    run.feed_done("src").unwrap();
+
+    let deadline = Instant::now() + Duration::from_secs(60);
+    let err = loop {
+        assert!(Instant::now() < deadline, "escalation never surfaced");
+        match run.recv_timeout("mid", Duration::from_millis(50)).unwrap() {
+            Some(_) => panic!("no item can make it past panic_after=1"),
+            None => {
+                assert!(!run.drained("mid").unwrap(), "flow must not complete");
+                match run.heal(&fc, &mut tracker, |_| None) {
+                    Ok(_) => {}
+                    Err(e) => break e,
+                }
+            }
+        }
+    };
+    let msg = format!("{err:#}");
+    assert!(msg.contains("escalate"), "{msg}");
+    assert_eq!(
+        tracker.restarts_of("inject"),
+        1,
+        "exactly max_restarts in-place restarts before escalating"
+    );
+    // The caller escalates: abort the run so teardown cannot wedge behind
+    // the dead stage.
+    driver.abort();
+}
+
+#[test]
+fn poisoned_flow_wakes_blocked_producers_and_receivers() {
+    let svc = services(1);
+    // Bounded src edge + a consumer that dies on its first item: the
+    // driver's puts fill the bound and block, and must then fail fast on
+    // the poison probe rather than wait forever (no healer is running).
+    let spec = FlowSpec::new("ft-poison")
+        .stage(kind_stage("chaos", "inject", vec![("panic_after", Value::Int(1))]))
+        .edge(
+            Edge::new("src")
+                .produced_by_driver()
+                .consumed_by("inject", "run")
+                .capacity(2),
+        )
+        .edge(Edge::new("mid").produced_by("inject", "run").consumed_by_driver());
+    let driver = FlowDriver::launch(spec, &svc, PlacementMode::Disaggregated).unwrap();
+    // Deliberately NOT set_recovering: fail-fast semantics under test.
+
+    let mut run = driver.begin().unwrap();
+    run.start().unwrap();
+
+    let t0 = Instant::now();
+    let mut send_err = None;
+    for i in 0..64i64 {
+        if let Err(e) = run.send("src", Payload::new().set_meta("i", i)) {
+            send_err = Some(e);
+            break;
+        }
+    }
+    assert!(
+        send_err.is_some(),
+        "a blocked put must error once the consumer dies, not block forever"
+    );
+    assert!(
+        t0.elapsed() < Duration::from_secs(30),
+        "poison wakeup took {:?}",
+        t0.elapsed()
+    );
+    assert!(run.poisoned());
+
+    // The sliced recv_timeout wakes on poison long before its deadline.
+    let t1 = Instant::now();
+    let got = run.recv_timeout("mid", Duration::from_secs(30)).unwrap();
+    assert!(got.is_none());
+    assert!(
+        t1.elapsed() < Duration::from_secs(5),
+        "recv_timeout must wake on poison, not sleep out its deadline ({:?})",
+        t1.elapsed()
+    );
+    driver.abort();
+}
+
+#[test]
+fn checkpoint_resume_completes_remaining_work() {
+    let dir = std::env::temp_dir()
+        .join(format!("rlinf-ft-resume-{}", std::process::id()))
+        .to_string_lossy()
+        .into_owned();
+    let _ = std::fs::remove_dir_all(&dir);
+    let total = 8i64;
+
+    // "Process 1": run the first half through a relay flow, checkpoint
+    // progress (cursor + profile book), and stop as if killed.
+    {
+        let svc = services(1);
+        let spec = FlowSpec::new("ft-resume")
+            .stage(kind_stage("relay", "echo", Vec::new()))
+            .edge(Edge::new("src").produced_by_driver().consumed_by("echo", "run"))
+            .edge(Edge::new("mid").produced_by("echo", "run").consumed_by_driver());
+        let driver = FlowDriver::launch(spec, &svc, PlacementMode::Disaggregated).unwrap();
+        let mut run = driver.begin().unwrap();
+        run.start().unwrap();
+        for i in 0..total / 2 {
+            run.send("src", Payload::new().set_meta("i", i)).unwrap();
+        }
+        run.feed_done("src").unwrap();
+        let mut got = 0u64;
+        let deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            assert!(Instant::now() < deadline, "first half wedged");
+            match run.recv_timeout("mid", Duration::from_millis(100)).unwrap() {
+                Some(_) => got += 1,
+                None => {
+                    if run.drained("mid").unwrap() {
+                        break;
+                    }
+                }
+            }
+        }
+        assert_eq!(got, (total / 2) as u64);
+        run.finish().unwrap();
+
+        let mut ck = FlowCheckpoint::new("ft-resume", 1);
+        ck.set_steps("echo", got);
+        ck.set_extra("cursor", total / 2);
+        ck.save(&dir, Some(&svc.profiles)).unwrap();
+    }
+
+    // "Process 2": fresh services (nothing shared), resume from disk and
+    // finish exactly the remaining items.
+    {
+        let svc = services(1);
+        let ck = FlowCheckpoint::load(&dir, Some(&svc.profiles)).unwrap();
+        assert_eq!(ck.flow, "ft-resume");
+        assert_eq!(ck.iter, 1);
+        assert_eq!(ck.steps_of("echo"), Some((total / 2) as u64));
+        let cursor = ck.extra("cursor").and_then(Value::as_i64).unwrap();
+        assert_eq!(cursor, total / 2);
+
+        let spec = FlowSpec::new("ft-resume")
+            .stage(kind_stage("relay", "echo", Vec::new()))
+            .edge(Edge::new("src").produced_by_driver().consumed_by("echo", "run"))
+            .edge(Edge::new("mid").produced_by("echo", "run").consumed_by_driver());
+        let driver = FlowDriver::launch(spec, &svc, PlacementMode::Disaggregated).unwrap();
+        let mut run = driver.begin().unwrap();
+        run.start().unwrap();
+        for i in cursor..total {
+            run.send("src", Payload::new().set_meta("i", i)).unwrap();
+        }
+        run.feed_done("src").unwrap();
+        let mut got = 0i64;
+        let deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            assert!(Instant::now() < deadline, "second half wedged");
+            match run.recv_timeout("mid", Duration::from_millis(100)).unwrap() {
+                Some(_) => got += 1,
+                None => {
+                    if run.drained("mid").unwrap() {
+                        break;
+                    }
+                }
+            }
+        }
+        assert_eq!(got, total - cursor, "resume runs exactly the remaining work");
+        run.finish().unwrap();
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
