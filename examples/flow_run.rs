@@ -5,6 +5,10 @@
 //! # Lint every shipped manifest (parse + schema + FlowSpec validation):
 //! cargo run --release --example flow_run -- --check configs/*.flow.toml
 //!
+//! # Static analysis: run every flow::analyze rule (FAnnn diagnostics),
+//! # aggregated across all manifests; add --json for machine output:
+//! cargo run --release --example flow_run -- --analyze --json configs/*.flow.toml
+//!
 //! # Run one workload end-to-end (needs `make artifacts` for grpo/embodied):
 //! cargo run --release --example flow_run -- configs/grpo.flow.toml
 //!
@@ -41,7 +45,10 @@ use rlinf::flow::manifest::{
     load_tree, EndpointDecl, FlowManifest, LoadedManifest, MultiFlowManifest, ProfileDecl,
 };
 use rlinf::flow::registry::PumpLogic;
-use rlinf::flow::{FlowDriver, FlowSpec, FlowSupervisor, LaunchOpts, StageRegistry};
+use rlinf::flow::{
+    analyze_manifest, analyze_union, AnalyzeReport, FlowDriver, FlowSpec, FlowSupervisor,
+    LaunchOpts, StageRegistry, UnionShape,
+};
 use rlinf::util::cli::Args;
 use rlinf::util::json::Value;
 use rlinf::worker::group::Services;
@@ -49,10 +56,15 @@ use rlinf::workflow::embodied::{run_embodied_elastic, EmbodiedOpts};
 use rlinf::workflow::reasoning::{run_grpo_elastic, RunnerOpts};
 
 fn usage() -> &'static str {
-    "usage: flow_run [--check] [--set path=value] [--checkpoint dir] [--resume dir] <manifest.toml>...\n\
+    "usage: flow_run [--check|--analyze [--json]] [--set path=value] [--checkpoint dir] [--resume dir] <manifest.toml>...\n\
      \n\
      --check       lint only: parse, resolve stage kinds against the registry,\n\
      \u{20}             validate the FlowSpec; report every failing manifest\n\
+     --analyze     static analysis: run every flow::analyze rule (FAnnn coded\n\
+     \u{20}             diagnostics — bounded-cycle deadlocks, device over-commit,\n\
+     \u{20}             priority-band overlap, replay safety, fault-policy sanity);\n\
+     \u{20}             exits non-zero only on error-severity findings\n\
+     --json        with --analyze: emit the aggregated diagnostics as JSON\n\
      --set         apply a `a.b.c=value` override before interpretation\n\
      --checkpoint  write a flow checkpoint to this directory after every\n\
      \u{20}             iteration (grpo workload)\n\
@@ -84,11 +96,14 @@ fn load_with_overrides(path: &str, sets: Option<&str>) -> Result<LoadedManifest>
 }
 
 fn main() -> Result<()> {
-    let args = Args::from_env(&["check"])?;
+    let args = Args::from_env(&["check", "analyze", "json"])?;
     if args.positional.is_empty() {
         bail!("{}", usage());
     }
     let reg = StageRegistry::builtin();
+    if args.has_flag("analyze") {
+        return analyze_all(&args.positional, args.get("set"), &reg, args.has_flag("json"));
+    }
     if args.has_flag("check") {
         return check_all(&args.positional, args.get("set"), &reg);
     }
@@ -174,6 +189,109 @@ fn check_one(path: &str, sets: Option<&str>, reg: &StageRegistry) -> Result<Stri
     }
 }
 
+/// Static analysis of one manifest. A single-flow file yields one report;
+/// a multi-flow file yields one report per referenced flow plus — when
+/// every child builds a spec — the cross-flow `analyze_union` report
+/// (band overlap, over-commit) against a fresh cluster of the declared
+/// size, filtered through the top manifest's own `[analyze]` lists.
+fn analyze_one(path: &str, sets: Option<&str>, reg: &StageRegistry) -> Result<Vec<AnalyzeReport>> {
+    match load_with_overrides(path, sets)? {
+        LoadedManifest::Flow(m) => Ok(vec![analyze_manifest(&m, reg)]),
+        LoadedManifest::Multi(mm) => {
+            let cfg = mm.run_config()?;
+            let resolved = mm.resolve()?;
+            let mut out = Vec::new();
+            let mut specs = Vec::new();
+            for (m, _) in &resolved {
+                let r = analyze_manifest(m, reg);
+                let ok = r.errors() == 0;
+                out.push(r);
+                if ok {
+                    specs.push(m.to_spec(reg)?);
+                }
+            }
+            if specs.len() == resolved.len() {
+                let pairs: Vec<_> = resolved
+                    .iter()
+                    .zip(specs.iter())
+                    .map(|((_, req), spec)| (req.clone(), spec))
+                    .collect();
+                let shape = UnionShape::fresh(cfg.cluster.total_devices());
+                let mut union = analyze_union(&pairs, &cfg.supervisor, &shape);
+                union.apply(&cfg.analyze);
+                out.push(union);
+            }
+            Ok(out)
+        }
+    }
+}
+
+/// `--analyze`: run the full diagnostics engine over every manifest,
+/// aggregate (never bail on the first finding), and exit non-zero only
+/// when error-severity findings remain. `--json` emits the machine form.
+fn analyze_all(paths: &[String], sets: Option<&str>, reg: &StageRegistry, json: bool) -> Result<()> {
+    let mut total_errors = 0usize;
+    let mut total_warnings = 0usize;
+    let mut entries: Vec<Value> = Vec::new();
+    for path in paths {
+        match analyze_one(path, sets, reg) {
+            Ok(reports) => {
+                let errs: usize = reports.iter().map(AnalyzeReport::errors).sum();
+                let warns: usize = reports.iter().map(AnalyzeReport::warnings).sum();
+                total_errors += errs;
+                total_warnings += warns;
+                if json {
+                    let mut entry = Value::obj();
+                    entry
+                        .set("path", path.as_str())
+                        .set("errors", errs)
+                        .set("warnings", warns)
+                        .set(
+                            "reports",
+                            Value::Arr(reports.iter().map(AnalyzeReport::to_json).collect()),
+                        );
+                    entries.push(entry);
+                } else if errs == 0 && warns == 0 {
+                    println!("OK   {path}: clean");
+                } else {
+                    let tag = if errs > 0 { "FAIL" } else { "WARN" };
+                    println!("{tag} {path}: {errs} error(s), {warns} warning(s)");
+                    for r in reports.iter().filter(|r| !r.is_clean()) {
+                        println!("{}", r.render());
+                    }
+                }
+            }
+            // Unreadable / unparseable manifests count as one error; the
+            // parser's message is the diagnostic.
+            Err(e) => {
+                total_errors += 1;
+                if json {
+                    let mut entry = Value::obj();
+                    entry.set("path", path.as_str()).set("errors", 1usize).set("warnings", 0usize);
+                    entry.set("error", format!("{e:#}"));
+                    entries.push(entry);
+                } else {
+                    eprintln!("FAIL {path}: {e:#}");
+                }
+            }
+        }
+    }
+    if json {
+        let mut top = Value::obj();
+        top.set("manifests", Value::Arr(entries))
+            .set("total_errors", total_errors)
+            .set("total_warnings", total_warnings);
+        println!("{}", top.to_json_pretty());
+    }
+    if total_errors > 0 {
+        bail!("flow analyze: {total_errors} error(s) across {} manifest(s)", paths.len());
+    }
+    if !json {
+        println!("all {} manifest(s) analyze clean ({total_warnings} warning(s))", paths.len());
+    }
+    Ok(())
+}
+
 /// Resolve a `[profile]` path relative to the manifest file.
 fn manifest_rel(origin: &str, rel: &str) -> String {
     std::path::Path::new(origin)
@@ -218,7 +336,9 @@ fn run_single(m: FlowManifest, reg: &StageRegistry, ckpt: &CheckpointCli) -> Res
     let cfg = m.run_config()?;
     let services = Services::new(Cluster::new(cfg.cluster.clone()));
     seed_profile_store(&m.profile, &m.origin, &services)?;
-    let summary = run_workload(&m, &cfg, &services, LaunchOpts::default(), reg, ckpt)?;
+    // The manifest's `[analyze]` policy rides into the launch gate.
+    let launch = LaunchOpts { analyze: cfg.analyze.clone(), ..Default::default() };
+    let summary = run_workload(&m, &cfg, &services, launch, reg, ckpt)?;
     persist_profile_store(&m.profile, &m.origin, &services)?;
     println!("{summary}");
     Ok(())
@@ -428,6 +548,8 @@ fn run_multi(mm: MultiFlowManifest, reg: &StageRegistry) -> Result<()> {
     let services = Services::new(Cluster::new(cfg.cluster.clone()));
     seed_profile_store(&mm.profile, &mm.origin, &services)?;
     let sup = FlowSupervisor::new(&services, cfg.supervisor.clone());
+    // The top manifest's `[analyze]` policy gates joint admission.
+    sup.set_analyze(cfg.analyze.clone());
 
     // Joint admission: hand the supervisor every (request, spec) pair at
     // once. With live profiles for all flows it sizes windows from one

@@ -89,6 +89,49 @@ struct LockState {
     grants: u64,
     /// Per-holder fairness counters.
     counters: HashMap<String, LockCounters>,
+    /// Debug lock-order monitor: holder -> the device set it is currently
+    /// parked on inside `acquire` (populated only under
+    /// `cfg!(debug_assertions)`).
+    blocked: HashMap<String, DeviceSet>,
+    /// Hold-and-wait cycles observed by the monitor. The static analyzer
+    /// (`flow::analyze` FA001/FA002/FA003) is supposed to make such cycles
+    /// unreachable, so test suites assert this stays 0. The monitor only
+    /// observes — it never panics (a panic here would poison the manager
+    /// mutex) and never resolves the cycle.
+    order_cycles: u64,
+}
+
+/// Is `start` — just recorded as blocked — part of a wait-for cycle?
+/// Edges run from a blocked holder to the (also blocked) holders of the
+/// devices it wants. Each holder is inserted into `blocked` exactly once
+/// per park, so the last participant to block is the one that sees the
+/// completed cycle.
+fn wait_for_cycle(st: &LockState, start: &str) -> bool {
+    let mut stack: Vec<&str> = vec![start];
+    let mut seen: Vec<&str> = Vec::new();
+    while let Some(h) = stack.pop() {
+        let want = match st.blocked.get(h) {
+            Some(w) => w,
+            None => continue,
+        };
+        for d in want.ids().iter() {
+            let g = match st.holders.get(&d.0) {
+                Some(g) => g.as_str(),
+                None => continue,
+            };
+            if g == h {
+                continue;
+            }
+            if g == start {
+                return true;
+            }
+            if st.blocked.contains_key(g) && !seen.contains(&g) {
+                seen.push(g);
+                stack.push(g);
+            }
+        }
+    }
+    false
 }
 
 /// Flow identity of a holder name: the `"name:"` scope prefix the flow
@@ -205,9 +248,18 @@ impl DeviceLockMgr {
                 break;
             }
             waited = true;
+            // Debug lock-order monitor: record what this holder is parked
+            // on and check whether that closes a hold-and-wait cycle.
+            if cfg!(debug_assertions) && !st.blocked.contains_key(holder) {
+                st.blocked.insert(holder.to_string(), set.clone());
+                if wait_for_cycle(&st, holder) {
+                    st.order_cycles += 1;
+                }
+            }
             st = cv.wait(st).unwrap();
         }
         st.waiters.retain(|w| w.ticket != ticket);
+        st.blocked.remove(holder);
         for d in set.ids() {
             st.holders.insert(d.0, holder.to_string());
         }
@@ -356,6 +408,14 @@ impl DeviceLockMgr {
 
     pub fn grants(&self) -> u64 {
         self.inner.0.lock().unwrap().grants
+    }
+
+    /// Hold-and-wait cycles the debug lock-order monitor has observed in
+    /// the runtime acquisition graph. Debug builds only (always 0 in
+    /// release builds); test suites assert this stays 0 — the dynamic
+    /// companion to the static `flow::analyze` rules.
+    pub fn order_cycles(&self) -> u64 {
+        self.inner.0.lock().unwrap().order_cycles
     }
 
     /// Pending intents/acquires whose holder starts with `prefix`.
@@ -604,6 +664,30 @@ mod tests {
         h.join().unwrap();
         assert_eq!(m.pending_intents("slow"), 0, "adopted intent claimed on grant");
         assert_eq!(m.drop_intents("peer"), 1);
+    }
+
+    #[test]
+    fn lock_order_monitor_flags_wait_for_cycle() {
+        // a holds d0 and wants d1; b holds d1 and wants d0. The second
+        // thread to park completes the cycle and the monitor counts it
+        // (exactly once — each holder registers as blocked once per park).
+        let m = DeviceLockMgr::new();
+        let d0 = DeviceSet::range(0, 1);
+        let d1 = DeviceSet::range(1, 1);
+        m.acquire("a", &d0, 0);
+        m.acquire("b", &d1, 1);
+        assert_eq!(m.order_cycles(), 0, "no cycle while both only hold");
+        let (ma, wa) = (m.clone(), d1.clone());
+        thread::spawn(move || ma.acquire("a", &wa, 0));
+        let (mb, wb) = (m.clone(), d0.clone());
+        thread::spawn(move || mb.acquire("b", &wb, 1));
+        let t0 = Instant::now();
+        while m.order_cycles() == 0 && t0.elapsed() < Duration::from_secs(5) {
+            thread::sleep(Duration::from_millis(2));
+        }
+        assert_eq!(m.order_cycles(), 1, "hold-and-wait cycle a -> b -> a observed");
+        // The two deadlocked threads are leaked deliberately: the monitor
+        // observes cycles, it does not resolve them.
     }
 
     #[test]

@@ -200,6 +200,28 @@ impl Default for FaultConfig {
     }
 }
 
+/// Static-analysis policy (`[analyze]`): whether the `flow::analyze`
+/// diagnostics engine gates launch/admission, and per-code overrides.
+/// A code may appear in at most one of the three lists.
+#[derive(Debug, Clone)]
+pub struct AnalyzeConfig {
+    /// Run the analyzer before `FlowDriver::launch_with` and
+    /// `FlowSupervisor::admit_all`, denying on error-severity findings.
+    pub enabled: bool,
+    /// Diagnostic codes to suppress entirely (e.g. `["FA004"]`).
+    pub allow: Vec<String>,
+    /// Codes demoted to warn severity (reported, never denied).
+    pub warn: Vec<String>,
+    /// Codes promoted to error severity (denied at launch/admission).
+    pub deny: Vec<String>,
+}
+
+impl Default for AnalyzeConfig {
+    fn default() -> Self {
+        AnalyzeConfig { enabled: true, allow: Vec::new(), warn: Vec::new(), deny: Vec::new() }
+    }
+}
+
 /// Embodied-workload configuration (ManiSkill-like / LIBERO-like).
 #[derive(Debug, Clone)]
 pub struct EmbodiedConfig {
@@ -239,6 +261,7 @@ pub struct RunConfig {
     pub sched: SchedConfig,
     pub supervisor: SupervisorConfig,
     pub fault: FaultConfig,
+    pub analyze: AnalyzeConfig,
     pub embodied: EmbodiedConfig,
 }
 
@@ -255,6 +278,7 @@ impl Default for RunConfig {
             sched: SchedConfig::default(),
             supervisor: SupervisorConfig::default(),
             fault: FaultConfig::default(),
+            analyze: AnalyzeConfig::default(),
             embodied: EmbodiedConfig::default(),
         }
     }
@@ -352,6 +376,27 @@ impl RunConfig {
             }
         }
 
+        if let Some(b) = v.get_path("analyze.enabled").and_then(Value::as_bool) {
+            c.analyze.enabled = b;
+        } else if let Some(x) = v.get_path("analyze.enabled").and_then(Value::as_i64) {
+            c.analyze.enabled = x != 0;
+        }
+        for (path, field) in [
+            ("analyze.allow", &mut c.analyze.allow),
+            ("analyze.warn", &mut c.analyze.warn),
+            ("analyze.deny", &mut c.analyze.deny),
+        ] {
+            if let Some(arr) = v.get_path(path).and_then(Value::as_arr) {
+                field.clear();
+                for item in arr {
+                    match item.as_str() {
+                        Some(s) => field.push(s.to_string()),
+                        None => bail!("{path} must be an array of diagnostic codes"),
+                    }
+                }
+            }
+        }
+
         get_num!(v, "embodied.num_envs", c.embodied.num_envs, as_usize);
         get_num!(v, "embodied.horizon", c.embodied.horizon, as_usize);
         if let Some(s) = v.get_path("embodied.env_kind").and_then(Value::as_str) {
@@ -402,6 +447,24 @@ impl RunConfig {
         }
         if self.fault.heartbeat_ms == 0 {
             bail!("fault.heartbeat_ms must be positive");
+        }
+        let mut seen = std::collections::BTreeSet::new();
+        for (list, name) in [
+            (&self.analyze.allow, "allow"),
+            (&self.analyze.warn, "warn"),
+            (&self.analyze.deny, "deny"),
+        ] {
+            for code in list {
+                if code.len() != 5
+                    || !code.starts_with("FA")
+                    || !code[2..].bytes().all(|b| b.is_ascii_digit())
+                {
+                    bail!("analyze.{name}: {code:?} is not a diagnostic code (expected FAnnn)");
+                }
+                if !seen.insert(code.clone()) {
+                    bail!("analyze: code {code:?} appears in more than one of allow/warn/deny");
+                }
+            }
         }
         Ok(())
     }
@@ -470,6 +533,26 @@ mod tests {
         assert!(RunConfig::from_value(&v).is_err(), "negative deadline must error, not wrap");
         let v = parse_toml("[fault]\nheartbeat_ms = 0").unwrap();
         assert!(RunConfig::from_value(&v).is_err());
+    }
+
+    #[test]
+    fn analyze_knobs_parsed_and_validated() {
+        let c = RunConfig::default();
+        assert!(c.analyze.enabled, "analyzer gates launches by default");
+        assert!(c.analyze.allow.is_empty() && c.analyze.warn.is_empty() && c.analyze.deny.is_empty());
+        let v = parse_toml("[analyze]\nenabled = false\nallow = [FA004]\nwarn = [FA001]\ndeny = [FA005, FA006]\n")
+            .unwrap();
+        let c = RunConfig::from_value(&v).unwrap();
+        assert!(!c.analyze.enabled);
+        assert_eq!(c.analyze.allow, vec!["FA004".to_string()]);
+        assert_eq!(c.analyze.warn, vec!["FA001".to_string()]);
+        assert_eq!(c.analyze.deny, vec!["FA005".to_string(), "FA006".to_string()]);
+        let v = parse_toml("[analyze]\nallow = [bogus]").unwrap();
+        assert!(RunConfig::from_value(&v).is_err(), "non-FAnnn code must be rejected");
+        let v = parse_toml("[analyze]\nallow = [FA001]\ndeny = [FA001]").unwrap();
+        assert!(RunConfig::from_value(&v).is_err(), "a code may appear in one list only");
+        let v = parse_toml("[analyze]\nallow = [1]").unwrap();
+        assert!(RunConfig::from_value(&v).is_err(), "codes must be strings");
     }
 
     #[test]

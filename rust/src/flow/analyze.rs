@@ -1,0 +1,950 @@
+//! Flow static analysis: coded diagnostics over resolved specs.
+//!
+//! The safety arguments this repo used to carry in comments — disjoint
+//! cross-flow priority bands, bounded-capacity deadlock freedom,
+//! replay-safe edges — are checked here as named rules instead of being
+//! re-derived by hand. Each rule emits a [`Diagnostic`] with a stable
+//! `FAnnn` code, a severity, and a span pointing at the offending
+//! manifest section (or builder site when no manifest is involved):
+//!
+//! | code  | severity | rule |
+//! |-------|----------|------|
+//! | FA000 | error    | structural/resolution violation (aggregated `validate`/`to_spec` checks) |
+//! | FA001 | error    | bounded cycle whose aggregate capacity cannot cover its in-flight demand |
+//! | FA002 | error    | device over-commit across jointly admitted flows |
+//! | FA003 | error    | priority-band overlap (shared slot, stride overflow, band bleed) |
+//! | FA004 | warn     | replay-unsafe edge: capacity too tight for a restarted consumer's window |
+//! | FA005 | warn     | granularity/options inconsistency (hints can never snap back) |
+//! | FA006 | warn     | fault-policy sanity (deadline vs heartbeat, zero-backoff restart storm) |
+//! | FA007 | warn     | dead stage: no edge ever touches it |
+//! | FA008 | warn     | pump coverage: several pumps contend for one channel |
+//!
+//! Three call sites wire the analyzer in:
+//! [`FlowDriver::launch_with`](super::FlowDriver) denies launches on
+//! error-severity findings (policy via the `[analyze]` config section),
+//! `flow_run --analyze` reports every finding per manifest in one pass,
+//! and [`FlowSupervisor::admit_all`](super::FlowSupervisor) analyzes the
+//! *union* of co-admitted flows so cross-flow violations surface at
+//! admission instead of as runtime wedges.
+
+use std::collections::BTreeSet;
+
+use anyhow::{bail, Result};
+
+use super::manifest::FlowManifest;
+use super::registry::StageRegistry;
+use super::spec::{EndpointSpec, FlowSpec};
+use super::supervisor::AdmitReq;
+use crate::config::{AnalyzeConfig, FaultConfig, SupervisorConfig};
+use crate::util::json::Value;
+
+/// Diagnostic severity. Only `Error` findings deny a launch/admission;
+/// `Warn`/`Info` are reported and carry on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Info,
+    Warn,
+    Error,
+}
+
+impl Severity {
+    pub fn name(self) -> &'static str {
+        match self {
+            Severity::Info => "info",
+            Severity::Warn => "warn",
+            Severity::Error => "error",
+        }
+    }
+}
+
+/// One finding: a coded rule violation anchored to a span.
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    /// Stable rule code (`"FA001"`, …).
+    pub code: &'static str,
+    pub severity: Severity,
+    /// Where: `file: [[section]] key` for manifests, `flow "name": …`
+    /// for builder-made specs.
+    pub span: String,
+    pub message: String,
+}
+
+impl Diagnostic {
+    pub fn error(code: &'static str, span: String, message: String) -> Diagnostic {
+        Diagnostic { code, severity: Severity::Error, span, message }
+    }
+
+    pub fn warn(code: &'static str, span: String, message: String) -> Diagnostic {
+        Diagnostic { code, severity: Severity::Warn, span, message }
+    }
+
+    /// `severity[CODE] span: message` — one line per finding.
+    pub fn render(&self) -> String {
+        format!("{}[{}] {}: {}", self.severity.name(), self.code, self.span, self.message)
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut v = Value::obj();
+        v.set("code", self.code)
+            .set("severity", self.severity.name())
+            .set("span", self.span.as_str())
+            .set("message", self.message.as_str());
+        v
+    }
+}
+
+/// Everything the analyzer found for one flow (or one admission union).
+#[derive(Debug, Clone)]
+pub struct AnalyzeReport {
+    pub flow: String,
+    pub diags: Vec<Diagnostic>,
+}
+
+impl AnalyzeReport {
+    pub fn new(flow: &str) -> AnalyzeReport {
+        AnalyzeReport { flow: flow.to_string(), diags: Vec::new() }
+    }
+
+    pub fn push(&mut self, d: Diagnostic) {
+        self.diags.push(d);
+    }
+
+    pub fn extend(&mut self, other: AnalyzeReport) {
+        self.diags.extend(other.diags);
+    }
+
+    pub fn errors(&self) -> usize {
+        self.diags.iter().filter(|d| d.severity == Severity::Error).count()
+    }
+
+    pub fn warnings(&self) -> usize {
+        self.diags.iter().filter(|d| d.severity == Severity::Warn).count()
+    }
+
+    pub fn is_clean(&self) -> bool {
+        self.diags.is_empty()
+    }
+
+    /// Apply an `[analyze]` policy: `allow` drops findings, `warn`
+    /// demotes them to warnings, `deny` promotes them to errors.
+    pub fn apply(&mut self, cfg: &AnalyzeConfig) {
+        self.diags.retain(|d| !cfg.allow.iter().any(|c| c == d.code));
+        for d in &mut self.diags {
+            if cfg.warn.iter().any(|c| c == d.code) {
+                d.severity = Severity::Warn;
+            }
+            if cfg.deny.iter().any(|c| c == d.code) {
+                d.severity = Severity::Error;
+            }
+        }
+    }
+
+    /// Error when any error-severity finding remains: the launch/admission
+    /// gate. The message carries every denial, not just the first.
+    pub fn deny(&self) -> Result<()> {
+        let errs: Vec<String> = self
+            .diags
+            .iter()
+            .filter(|d| d.severity == Severity::Error)
+            .map(Diagnostic::render)
+            .collect();
+        if errs.is_empty() {
+            return Ok(());
+        }
+        bail!("{} diagnostic error(s):\n  {}", errs.len(), errs.join("\n  "));
+    }
+
+    /// Human-readable listing, one line per finding.
+    pub fn render(&self) -> String {
+        self.diags.iter().map(Diagnostic::render).collect::<Vec<_>>().join("\n")
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut v = Value::obj();
+        v.set("flow", self.flow.as_str())
+            .set("errors", self.errors())
+            .set("warnings", self.warnings())
+            .set(
+                "diagnostics",
+                Value::Arr(self.diags.iter().map(Diagnostic::to_json).collect()),
+            );
+        v
+    }
+}
+
+/// Context the spec-level rules run under.
+#[derive(Debug, Clone, Default)]
+pub struct AnalyzeCtx {
+    /// Manifest path: spans become `file: [[section]] key` when present.
+    pub origin: Option<String>,
+    /// Effective `[fault]` policy; enables the replay-safety and
+    /// fault-sanity rules (unknowable from a bare spec).
+    pub fault: Option<FaultConfig>,
+}
+
+impl AnalyzeCtx {
+    fn span(&self, flow: &str, what: &str) -> String {
+        match &self.origin {
+            Some(o) => format!("{o}: {what}"),
+            None => format!("flow {flow:?}: {what}"),
+        }
+    }
+}
+
+/// Run every spec-level rule. Structural violations (the aggregated
+/// `validate` checks) are reported as `FA000`; the graph rules only run
+/// on a structurally sound spec.
+pub fn analyze_spec(spec: &FlowSpec, ctx: &AnalyzeCtx) -> AnalyzeReport {
+    let mut r = AnalyzeReport::new(&spec.name);
+    structural(spec, ctx, &mut r);
+    if !r.diags.is_empty() {
+        return r;
+    }
+    let Ok(info) = spec.validate() else {
+        // Unreachable when `structural` mirrors `validate`; degrade
+        // gracefully rather than panic if the two ever drift.
+        return r;
+    };
+    bounded_cycles(spec, &info.members, ctx, &mut r);
+    replay_safety(spec, ctx, &mut r);
+    granularity_consistency(spec, ctx, &mut r);
+    fault_sanity(spec, ctx, &mut r);
+    dead_stages(spec, ctx, &mut r);
+    pump_coverage(spec, ctx, &mut r);
+    r
+}
+
+/// `FA000` — every check [`FlowSpec::validate`] performs, in collecting
+/// form: the whole point is reporting *all* of a manifest's structural
+/// problems in one pass instead of one bail at a time.
+fn structural(spec: &FlowSpec, ctx: &AnalyzeCtx, r: &mut AnalyzeReport) {
+    let flow = spec.name.as_str();
+    let mut err = |span: String, msg: String| r.push(Diagnostic::error("FA000", span, msg));
+
+    if spec.stages.is_empty() {
+        err(ctx.span(flow, "[flow]"), "no stages declared".to_string());
+    }
+    let mut names = BTreeSet::new();
+    for s in &spec.stages {
+        if s.name.is_empty() {
+            err(ctx.span(flow, "[[stage]]"), "stage with empty name".to_string());
+        }
+        if !names.insert(s.name.as_str()) {
+            err(ctx.span(flow, "[[stage]]"), format!("duplicate stage {:?}", s.name));
+        }
+    }
+
+    let mut channels = BTreeSet::new();
+    let mut bound_ports: BTreeSet<(&str, &str)> = BTreeSet::new();
+    for e in &spec.edges {
+        let at = |k: &str| ctx.span(flow, &format!("[[edge]] {:?}{k}", e.channel));
+        if !channels.insert(e.channel.as_str()) {
+            err(at(""), format!("duplicate channel name {:?}", e.channel));
+        }
+        for ep in [&e.producer, &e.consumer] {
+            if let Some(EndpointSpec::Stage { stage, port, .. }) = ep {
+                if !bound_ports.insert((stage.as_str(), port.as_str())) {
+                    err(
+                        at(""),
+                        format!(
+                            "rebinds port {port:?} of stage {stage:?} (already bound by \
+                             another edge — give it a distinct port name)"
+                        ),
+                    );
+                }
+            }
+        }
+        match &e.producer {
+            None => err(at(".from"), "consumer-only (no producer declared)".to_string()),
+            Some(EndpointSpec::Stage { stage, .. }) if spec.stage_index(stage).is_none() => {
+                err(at(".from"), format!("produced by unknown stage {stage:?}"))
+            }
+            _ => {}
+        }
+        match &e.consumer {
+            None => err(at(".to"), "dangling (no consumer declared)".to_string()),
+            Some(EndpointSpec::Stage { stage, .. }) if spec.stage_index(stage).is_none() => {
+                err(at(".to"), format!("consumed by unknown stage {stage:?}"))
+            }
+            _ => {}
+        }
+        if e.producer == Some(EndpointSpec::Driver) && e.consumer == Some(EndpointSpec::Driver) {
+            err(at(""), "never touches a stage".to_string());
+        }
+        if let Some(cap) = e.capacity {
+            let need =
+                e.granularity.max(e.granularity_options.iter().copied().max().unwrap_or(0));
+            if cap < need {
+                err(
+                    at(".capacity"),
+                    format!(
+                        "capacity {cap} is below its granularity (options) of {need} — \
+                         batch dequeues could never fill"
+                    ),
+                );
+            }
+        }
+    }
+
+    for (from, to) in &spec.pumps {
+        let at = ctx.span(flow, &format!("[[pump]] {from} -> {to}"));
+        match spec.edges.iter().find(|e| &e.channel == from) {
+            None => err(at.clone(), format!("pump reads unknown channel {from:?}")),
+            Some(fe) if fe.consumer != Some(EndpointSpec::Driver) => {
+                err(at.clone(), format!("pump source {from:?} is not consumed by the driver"))
+            }
+            _ => {}
+        }
+        match spec.edges.iter().find(|e| &e.channel == to) {
+            None => err(at.clone(), format!("pump feeds unknown channel {to:?}")),
+            Some(te) if te.producer != Some(EndpointSpec::Driver) => {
+                err(at, format!("pump target {to:?} is not produced by the driver"))
+            }
+            _ => {}
+        }
+    }
+
+    for (stage, method, _) in &spec.call_args {
+        if spec.stage_index(stage).is_none() {
+            err(
+                ctx.span(flow, "[[call]]"),
+                format!("call_args for unknown stage {stage:?} (method {method:?})"),
+            );
+        }
+    }
+}
+
+/// `FA001` — bounded-capacity deadlock. Within an SCC every stage is both
+/// a producer and (transitively) a consumer; when **all** of the cycle's
+/// channels are bounded, each edge must absorb one full granularity batch
+/// in the channel *plus* the `g − 1` items its consumer has accumulated
+/// toward the next batch (`2g − 1` per edge). Less aggregate capacity
+/// than that and the runtime can reach a state where every producer
+/// blocks on a full channel while every consumer still waits to complete
+/// a batch — a silent hang today, a rejected spec here.
+fn bounded_cycles(spec: &FlowSpec, members: &[Vec<String>], ctx: &AnalyzeCtx, r: &mut AnalyzeReport) {
+    for scc in members {
+        if scc.len() < 2 {
+            continue;
+        }
+        let mset: BTreeSet<&str> = scc.iter().map(String::as_str).collect();
+        let stage_of = |ep: &Option<EndpointSpec>| match ep {
+            Some(EndpointSpec::Stage { stage, .. }) => Some(stage.clone()),
+            _ => None,
+        };
+        // Channel indices participating in the cycle: direct stage→stage
+        // edges inside the SCC, plus both channels of any pump bridging
+        // two SCC members across the driver.
+        let mut idxs: BTreeSet<usize> = BTreeSet::new();
+        for (i, e) in spec.edges.iter().enumerate() {
+            if let (Some(p), Some(c)) = (stage_of(&e.producer), stage_of(&e.consumer)) {
+                if p != c && mset.contains(p.as_str()) && mset.contains(c.as_str()) {
+                    idxs.insert(i);
+                }
+            }
+        }
+        for (from, to) in &spec.pumps {
+            let fi = spec.edges.iter().position(|e| &e.channel == from);
+            let ti = spec.edges.iter().position(|e| &e.channel == to);
+            if let (Some(fi), Some(ti)) = (fi, ti) {
+                let p = stage_of(&spec.edges[fi].producer);
+                let c = stage_of(&spec.edges[ti].consumer);
+                if let (Some(p), Some(c)) = (p, c) {
+                    if p != c && mset.contains(p.as_str()) && mset.contains(c.as_str()) {
+                        idxs.insert(fi);
+                        idxs.insert(ti);
+                    }
+                }
+            }
+        }
+        if idxs.is_empty() || idxs.iter().any(|&i| spec.edges[i].capacity.is_none()) {
+            // An unbounded channel in the cycle absorbs any in-flight
+            // surplus; the deadlock precondition needs every edge bounded.
+            continue;
+        }
+        let cap: usize = idxs.iter().map(|&i| spec.edges[i].capacity.unwrap_or(0)).sum();
+        let demand: usize = idxs.iter().map(|&i| 2 * spec.edges[i].granularity - 1).sum();
+        if cap < demand {
+            let chans: Vec<&str> =
+                idxs.iter().map(|&i| spec.edges[i].channel.as_str()).collect();
+            // Sorted names: SCC member order is traversal-dependent and the
+            // message is pinned by golden tests.
+            let names: Vec<&str> = mset.iter().copied().collect();
+            r.push(Diagnostic::error(
+                "FA001",
+                ctx.span(&spec.name, "[flow]"),
+                format!(
+                    "bounded cycle through stages [{}]: aggregate capacity {cap} of its \
+                     channels [{}] is below the in-flight demand {demand} (Σ 2·granularity − 1 \
+                     per edge) — every producer can block on a full channel while every \
+                     consumer still waits to fill a batch; raise capacities to ≥ {demand} in \
+                     total or leave one cycle edge unbounded",
+                    names.join(", "),
+                    chans.join(", "),
+                ),
+            ));
+        }
+    }
+}
+
+/// `FA004` — replay-unsafe edge. A restarted stage replays the un-acked
+/// window of every channel it consumes; with fewer than two
+/// granularity-sized batches of headroom, the replayed batch plus what
+/// producers kept queueing during the restart can fill the bound and
+/// wedge the recovery the `[fault]` policy promised.
+fn replay_safety(spec: &FlowSpec, ctx: &AnalyzeCtx, r: &mut AnalyzeReport) {
+    let Some(fault) = &ctx.fault else { return };
+    if fault.max_restarts == 0 {
+        return;
+    }
+    for e in &spec.edges {
+        let (Some(cap), Some(EndpointSpec::Stage { stage, .. })) = (e.capacity, &e.consumer)
+        else {
+            continue;
+        };
+        let need = 2 * e.granularity;
+        if cap < need {
+            r.push(Diagnostic::warn(
+                "FA004",
+                ctx.span(&spec.name, &format!("[[edge]] {:?}.capacity", e.channel)),
+                format!(
+                    "capacity {cap} holds fewer than two granularity-{} batches; under \
+                     fault.max_restarts = {} a restarted {stage:?} replays its un-acked \
+                     window into a channel its producers may have refilled — raise capacity \
+                     to ≥ {need} or disable restarts",
+                    e.granularity, fault.max_restarts,
+                ),
+            ));
+        }
+    }
+}
+
+/// `FA005` — granularity/options consistency: re-chunk hints snap to the
+/// declared options, so a declared granularity outside its own options
+/// can never be restored once a hint moves the edge off it; a singleton
+/// options list equal to the granularity is dead weight.
+fn granularity_consistency(spec: &FlowSpec, ctx: &AnalyzeCtx, r: &mut AnalyzeReport) {
+    for e in &spec.edges {
+        if e.granularity_options.is_empty() {
+            continue;
+        }
+        let at = ctx.span(&spec.name, &format!("[[edge]] {:?}.granularity_options", e.channel));
+        if !e.granularity_options.contains(&e.granularity) {
+            r.push(Diagnostic::warn(
+                "FA005",
+                at,
+                format!(
+                    "declared granularity {} is not among granularity_options {:?}: re-chunk \
+                     hints snap to the options, so no hint can ever restore the declared \
+                     granularity — add {} to the options or change the granularity",
+                    e.granularity, e.granularity_options, e.granularity,
+                ),
+            ));
+        } else if e.granularity_options.len() == 1 {
+            r.push(Diagnostic::warn(
+                "FA005",
+                at,
+                format!(
+                    "granularity_options declares only the granularity already in effect \
+                     ({}) — re-chunk hints can never change anything; drop the list or add \
+                     variants",
+                    e.granularity,
+                ),
+            ));
+        }
+    }
+}
+
+/// `FA006` — fault-policy sanity: a hang deadline at or below the
+/// watchdog's own scan interval, and restart budgets with zero backoff.
+fn fault_sanity(spec: &FlowSpec, ctx: &AnalyzeCtx, r: &mut AnalyzeReport) {
+    let Some(f) = &ctx.fault else { return };
+    let at = || ctx.span(&spec.name, "[fault]");
+    if f.deadline_ms > 0 && f.deadline_ms <= f.heartbeat_ms {
+        r.push(Diagnostic::warn(
+            "FA006",
+            at(),
+            format!(
+                "deadline_ms ({}) is at or below heartbeat_ms ({}): the watchdog samples \
+                 once per heartbeat, so a hang is flagged up to a full interval past the \
+                 deadline — raise deadline_ms or lower heartbeat_ms",
+                f.deadline_ms, f.heartbeat_ms,
+            ),
+        ));
+    }
+    if f.max_restarts > 0 && f.backoff_ms == 0 {
+        r.push(Diagnostic::warn(
+            "FA006",
+            at(),
+            format!(
+                "backoff_ms = 0 with max_restarts = {}: a deterministically crashing stage \
+                 burns its whole restart budget in a hot loop (restart storm) — set a \
+                 nonzero backoff",
+                f.max_restarts,
+            ),
+        ));
+    }
+}
+
+/// `FA007` — dead stage: declared, resourced, launched… and never touched
+/// by any edge, so nothing ever invokes it.
+fn dead_stages(spec: &FlowSpec, ctx: &AnalyzeCtx, r: &mut AnalyzeReport) {
+    for s in &spec.stages {
+        let touched = spec.edges.iter().any(|e| {
+            [&e.producer, &e.consumer].into_iter().any(|ep| {
+                matches!(ep, Some(EndpointSpec::Stage { stage, .. }) if stage == &s.name)
+            })
+        });
+        if !touched {
+            r.push(Diagnostic::warn(
+                "FA007",
+                ctx.span(&spec.name, &format!("[[stage]] {:?}", s.name)),
+                "no edge touches this stage: nothing ever invokes it, its ranks just \
+                 occupy devices"
+                    .to_string(),
+            ));
+        }
+    }
+}
+
+/// `FA008` — pump contention: each dequeued item reaches exactly one
+/// pump, so several pumps on one source split the stream
+/// nondeterministically; several pumps into one target interleave.
+fn pump_coverage(spec: &FlowSpec, ctx: &AnalyzeCtx, r: &mut AnalyzeReport) {
+    let mut flagged_from: BTreeSet<&str> = BTreeSet::new();
+    let mut flagged_to: BTreeSet<&str> = BTreeSet::new();
+    for (from, to) in &spec.pumps {
+        let readers = spec.pumps.iter().filter(|(f, _)| f == from).count();
+        if readers > 1 && flagged_from.insert(from.as_str()) {
+            r.push(Diagnostic::warn(
+                "FA008",
+                ctx.span(&spec.name, &format!("[[pump]] {from} -> {to}")),
+                format!(
+                    "channel {from:?} feeds {readers} pumps: each item reaches exactly one \
+                     of them, so the split is nondeterministic — give each pump its own \
+                     source channel"
+                ),
+            ));
+        }
+        let writers = spec.pumps.iter().filter(|(_, t)| t == to).count();
+        if writers > 1 && flagged_to.insert(to.as_str()) {
+            r.push(Diagnostic::warn(
+                "FA008",
+                ctx.span(&spec.name, &format!("[[pump]] {from} -> {to}")),
+                format!(
+                    "{writers} pumps feed channel {to:?}: their outputs interleave \
+                     nondeterministically — merge them or fan into distinct channels"
+                ),
+            ));
+        }
+    }
+}
+
+/// Analyze a manifest end-to-end, collecting **all** diagnostics in one
+/// pass: method-schema violations, stage/pump kind resolution failures,
+/// and launcher-config errors become `FA000` findings (instead of
+/// `to_spec`'s first-error bail), then the spec-level rules run with the
+/// manifest's origin and `[fault]` policy. The manifest's own `[analyze]`
+/// allow/warn/deny lists are applied to the result (`enabled` only gates
+/// launch/admission, never reporting).
+pub fn analyze_manifest(m: &FlowManifest, reg: &StageRegistry) -> AnalyzeReport {
+    let mut r = AnalyzeReport::new(&m.name);
+    for (at, msg) in m.schema_diags(reg) {
+        r.push(Diagnostic::error("FA000", format!("{}: {at}", m.origin), msg));
+    }
+    for s in &m.stages {
+        if let Err(e) = reg.resolve_stage(&s.kind, &s.options) {
+            r.push(Diagnostic::error(
+                "FA000",
+                format!("{}: [[stage]] {:?} (kind {:?})", m.origin, s.name, s.kind),
+                format!("{e:#}"),
+            ));
+        }
+    }
+    for p in &m.pumps {
+        if let Err(e) = reg.resolve_pump(&p.logic, &p.options) {
+            r.push(Diagnostic::error(
+                "FA000",
+                format!("{}: [[pump]] {} -> {} (logic {:?})", m.origin, p.from, p.to, p.logic),
+                format!("{e:#}"),
+            ));
+        }
+    }
+    let cfg = match m.run_config() {
+        Ok(c) => Some(c),
+        Err(e) => {
+            r.push(Diagnostic::error("FA000", m.origin.clone(), format!("{e:#}")));
+            None
+        }
+    };
+    if r.errors() == 0 {
+        match m.to_spec(reg) {
+            Ok(spec) => {
+                let ctx = AnalyzeCtx {
+                    origin: Some(m.origin.clone()),
+                    fault: cfg.as_ref().map(|c| c.fault.clone()),
+                };
+                r.extend(analyze_spec(&spec, &ctx));
+            }
+            Err(e) => r.push(Diagnostic::error("FA000", m.origin.clone(), format!("{e:#}"))),
+        }
+    }
+    if let Some(c) = &cfg {
+        r.apply(&c.analyze);
+    }
+    r
+}
+
+/// Cluster-side context for [`analyze_union`]: what the supervisor
+/// already holds when a batch of admissions arrives.
+#[derive(Debug, Clone)]
+pub struct UnionShape {
+    pub total_devices: usize,
+    pub free_devices: usize,
+    /// Already-admitted flows: `(name, window width, shareable)`.
+    pub admitted: Vec<(String, usize, bool)>,
+    /// Priority slots already claimed by admitted flows.
+    pub used_slots: Vec<u64>,
+    /// First slot the supervisor auto-assigns to a slot-less request.
+    pub next_slot: u64,
+    /// A live union plan will normalize widths before admission, so the
+    /// declared device counts are peaks, not commitments: skip the
+    /// over-commit simulation (`FA002`).
+    pub planned: bool,
+}
+
+impl UnionShape {
+    /// An empty cluster of `total_devices` — the CLI-lint view.
+    pub fn fresh(total_devices: usize) -> UnionShape {
+        UnionShape {
+            total_devices,
+            free_devices: total_devices,
+            admitted: Vec::new(),
+            used_slots: Vec::new(),
+            next_slot: 0,
+            planned: false,
+        }
+    }
+}
+
+/// Cross-flow rules over the union of co-admitted flows: `FA003`
+/// priority-band overlap (the lock-order totality argument, checked
+/// instead of asserted) and `FA002` device over-commit (a faithful
+/// simulation of the supervisor's sequential admission accounting).
+pub fn analyze_union(
+    reqs: &[(AdmitReq, &FlowSpec)],
+    cfg: &SupervisorConfig,
+    shape: &UnionShape,
+) -> AnalyzeReport {
+    let mut r = AnalyzeReport::new("union");
+
+    // FA003 — disjoint priority bands are what makes the cross-flow lock
+    // order total: simulate slot defaulting, catch shared slots, stride
+    // overflow, and intra-flow priorities bleeding into the next band.
+    let mut used: Vec<(u64, String)> =
+        shape.used_slots.iter().map(|&s| (s, "<already admitted>".to_string())).collect();
+    let mut next = shape.next_slot;
+    for (req, spec) in reqs {
+        let span = format!("flow {:?}", req.name);
+        let slot = req.slot.unwrap_or(next);
+        if let Some((_, prev)) = used.iter().find(|(s, _)| *s == slot) {
+            r.push(Diagnostic::error(
+                "FA003",
+                span.clone(),
+                format!(
+                    "priority slot {slot} is already claimed by flow {prev}: overlapping \
+                     bands interleave two flows' lock seniorities, so the cross-flow \
+                     acquisition order is no longer total"
+                ),
+            ));
+        } else {
+            used.push((slot, format!("{:?}", req.name)));
+        }
+        if slot.checked_mul(cfg.priority_stride).is_none() {
+            r.push(Diagnostic::error(
+                "FA003",
+                span.clone(),
+                format!(
+                    "slot {slot} × supervisor.priority_stride {} overflows the priority space",
+                    cfg.priority_stride
+                ),
+            ));
+        }
+        next = next.max(slot.saturating_add(1));
+        let band = (0..spec.stages.len()).map(|i| spec.stage_priority(i)).max().unwrap_or(0);
+        if band >= cfg.priority_stride {
+            r.push(Diagnostic::error(
+                "FA003",
+                span,
+                format!(
+                    "stage priority {band} reaches supervisor.priority_stride {}: the \
+                     flow's lock band bleeds into the next slot's band — raise the stride \
+                     or lower the stage priorities",
+                    cfg.priority_stride
+                ),
+            ));
+        }
+    }
+
+    // FA002 — device over-commit: replay the supervisor's admission
+    // bookkeeping (exclusive carve-outs, then the shareable time-share
+    // path) and flag every request the batch cannot host.
+    if !shape.planned {
+        let mut free = shape.free_devices;
+        let mut hosts: Vec<(String, usize, bool)> = shape.admitted.clone();
+        for (req, _) in reqs {
+            let span = format!("flow {:?}", req.name);
+            let want = req.devices.max(1);
+            if want > shape.total_devices {
+                r.push(Diagnostic::error(
+                    "FA002",
+                    span,
+                    format!(
+                        "wants {want} devices, the cluster has {}",
+                        shape.total_devices
+                    ),
+                ));
+                continue;
+            }
+            if want <= free {
+                free -= want;
+                hosts.push((req.name.clone(), want, req.shareable));
+                continue;
+            }
+            let share_width = hosts
+                .iter()
+                .filter(|(_, w, s)| *s && *w >= want)
+                .map(|(_, w, _)| *w)
+                .max();
+            if !cfg.oversubscribe {
+                r.push(Diagnostic::error(
+                    "FA002",
+                    span,
+                    format!(
+                        "wants {want} devices with only {free} free and \
+                         supervisor.oversubscribe off"
+                    ),
+                ));
+            } else if !req.shareable {
+                r.push(Diagnostic::error(
+                    "FA002",
+                    span,
+                    format!("wants {want} devices with only {free} free, and is not shareable"),
+                ));
+            } else if let Some(w) = share_width {
+                hosts.push((req.name.clone(), w, req.shareable));
+            } else {
+                r.push(Diagnostic::error(
+                    "FA002",
+                    span,
+                    format!(
+                        "wants {want} devices with only {free} free, and no shareable flow \
+                         hosts a window of ≥ {want} devices to time-share with"
+                    ),
+                ));
+            }
+        }
+    }
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Payload;
+    use crate::flow::{Edge, Stage};
+    use crate::worker::{WorkerCtx, WorkerLogic};
+
+    struct Nop;
+    impl WorkerLogic for Nop {
+        fn call(&mut self, _ctx: &WorkerCtx, _m: &str, arg: Payload) -> Result<Payload> {
+            Ok(arg)
+        }
+    }
+
+    fn nop(name: &str) -> Stage {
+        Stage::new(name, |_| Box::new(|_: &WorkerCtx| Ok(Box::new(Nop) as Box<dyn WorkerLogic>)))
+    }
+
+    fn codes(r: &AnalyzeReport) -> Vec<&'static str> {
+        r.diags.iter().map(|d| d.code).collect()
+    }
+
+    #[test]
+    fn clean_spec_reports_nothing() {
+        let spec = FlowSpec::new("ok")
+            .stage(nop("a"))
+            .stage(nop("b"))
+            .edge(Edge::new("x").produced_by_driver().consumed_by("a", "m"))
+            .edge(Edge::new("y").produced_by("a", "m").consumed_by("b", "n"));
+        let r = analyze_spec(&spec, &AnalyzeCtx::default());
+        assert!(r.is_clean(), "{}", r.render());
+    }
+
+    #[test]
+    fn structural_errors_are_aggregated_not_bail_fast() {
+        // Three independent violations; validate() would stop at one.
+        let spec = FlowSpec::new("bad")
+            .stage(nop("a"))
+            .edge(Edge::new("x").produced_by_driver().consumed_by("ghost", "m"))
+            .edge(Edge::new("x").produced_by_driver().consumed_at("a", "m", "p2"))
+            .edge(
+                Edge::new("z")
+                    .produced_by_driver()
+                    .consumed_at("a", "m", "p3")
+                    .granularity(4)
+                    .capacity(2),
+            );
+        let r = analyze_spec(&spec, &AnalyzeCtx::default());
+        assert_eq!(codes(&r), vec!["FA000", "FA000", "FA000"], "{}", r.render());
+        assert!(spec.validate().is_err());
+    }
+
+    #[test]
+    fn bounded_cycle_under_demand_is_fa001() {
+        let cyc = |cap_a: usize, cap_b: usize| {
+            FlowSpec::new("cyc")
+                .stage(nop("ping"))
+                .stage(nop("pong"))
+                .edge(
+                    Edge::new("a")
+                        .produced_by("ping", "m")
+                        .consumed_by("pong", "m")
+                        .granularity(4)
+                        .capacity(cap_a),
+                )
+                .edge(
+                    Edge::new("b")
+                        .produced_by("pong", "m")
+                        .consumed_by("ping", "m")
+                        .granularity(4)
+                        .capacity(cap_b),
+                )
+        };
+        // 4 + 4 = 8 < 2·(2·4 − 1) = 14 in-flight demand: deadlockable.
+        let r = analyze_spec(&cyc(4, 4), &AnalyzeCtx::default());
+        assert_eq!(codes(&r), vec!["FA001"], "{}", r.render());
+        // 8 + 8 = 16 ≥ 14: enough headroom.
+        let r = analyze_spec(&cyc(8, 8), &AnalyzeCtx::default());
+        assert!(r.is_clean(), "{}", r.render());
+        // One unbounded edge absorbs the surplus: no deadlock precondition.
+        let r = analyze_spec(&cyc(4, 0), &AnalyzeCtx::default());
+        assert!(r.is_clean(), "{}", r.render());
+    }
+
+    #[test]
+    fn replay_and_fault_rules_need_fault_ctx() {
+        let spec = FlowSpec::new("t").stage(nop("a")).edge(
+            Edge::new("x").produced_by_driver().consumed_by("a", "m").granularity(4).capacity(4),
+        );
+        let r = analyze_spec(&spec, &AnalyzeCtx::default());
+        assert!(r.is_clean(), "no [fault] context, no FA004: {}", r.render());
+        let ctx = AnalyzeCtx { origin: None, fault: Some(FaultConfig::default()) };
+        let r = analyze_spec(&spec, &ctx);
+        assert_eq!(codes(&r), vec!["FA004"], "{}", r.render());
+
+        let storm = FaultConfig {
+            heartbeat_ms: 50,
+            deadline_ms: 20,
+            backoff_ms: 0,
+            ..FaultConfig::default()
+        };
+        let spec = FlowSpec::new("t")
+            .stage(nop("a"))
+            .edge(Edge::new("x").produced_by_driver().consumed_by("a", "m"));
+        let r = analyze_spec(&spec, &AnalyzeCtx { origin: None, fault: Some(storm) });
+        assert_eq!(codes(&r), vec!["FA006", "FA006"], "{}", r.render());
+    }
+
+    #[test]
+    fn granularity_dead_stage_and_pump_rules() {
+        let spec = FlowSpec::new("t")
+            .stage(nop("a"))
+            .stage(nop("idle"))
+            .edge(
+                Edge::new("x")
+                    .produced_by_driver()
+                    .consumed_by("a", "m")
+                    .granularity(5)
+                    .granularity_options(vec![2, 8]),
+            );
+        let r = analyze_spec(&spec, &AnalyzeCtx::default());
+        assert_eq!(codes(&r), vec!["FA005", "FA007"], "{}", r.render());
+
+        let spec = FlowSpec::new("t")
+            .stage(nop("a"))
+            .stage(nop("b"))
+            .stage(nop("c"))
+            .edge(Edge::new("res").produced_by("a", "m").consumed_by_driver())
+            .edge(Edge::new("o1").produced_by_driver().consumed_by("b", "m"))
+            .edge(Edge::new("o2").produced_by_driver().consumed_by("c", "m"))
+            .edge(Edge::new("src").produced_by_driver().consumed_at("a", "m", "seed"))
+            .pump("res", "o1")
+            .pump("res", "o2");
+        let r = analyze_spec(&spec, &AnalyzeCtx::default());
+        assert_eq!(codes(&r), vec!["FA008"], "{}", r.render());
+    }
+
+    #[test]
+    fn union_rules_catch_overlap_and_overcommit() {
+        let mk = |n: &str| {
+            FlowSpec::new(n)
+                .stage(nop("w"))
+                .edge(Edge::new("x").produced_by_driver().consumed_by("w", "m"))
+        };
+        let (fa, fb) = (mk("fa"), mk("fb"));
+        let cfg = SupervisorConfig::default();
+
+        // Distinct defaulted slots, devices fit: clean.
+        let reqs = vec![(AdmitReq::new("fa", 2), &fa), (AdmitReq::new("fb", 2), &fb)];
+        let r = analyze_union(&reqs, &cfg, &UnionShape::fresh(4));
+        assert!(r.is_clean(), "{}", r.render());
+
+        // Same explicit slot: FA003.
+        let reqs =
+            vec![(AdmitReq::new("fa", 1).slot(0), &fa), (AdmitReq::new("fb", 1).slot(0), &fb)];
+        let r = analyze_union(&reqs, &cfg, &UnionShape::fresh(4));
+        assert_eq!(codes(&r), vec!["FA003"], "{}", r.render());
+
+        // Over-commit without a time-share path: FA002.
+        let strict = SupervisorConfig { oversubscribe: false, ..SupervisorConfig::default() };
+        let reqs = vec![(AdmitReq::new("fa", 3), &fa), (AdmitReq::new("fb", 2), &fb)];
+        let r = analyze_union(&reqs, &strict, &UnionShape::fresh(4));
+        assert_eq!(codes(&r), vec!["FA002"], "{}", r.render());
+
+        // Same batch, but a shareable host makes the overflow admissible.
+        let reqs = vec![
+            (AdmitReq::new("fa", 3).shareable(), &fa),
+            (AdmitReq::new("fb", 2).shareable(), &fb),
+        ];
+        let r = analyze_union(&reqs, &cfg, &UnionShape::fresh(4));
+        assert!(r.is_clean(), "{}", r.render());
+
+        // Width normalization planned: FA002 is the planner's problem.
+        let reqs = vec![(AdmitReq::new("fa", 3), &fa), (AdmitReq::new("fb", 2), &fb)];
+        let shape = UnionShape { planned: true, ..UnionShape::fresh(4) };
+        let r = analyze_union(&reqs, &strict, &shape);
+        assert!(r.is_clean(), "{}", r.render());
+    }
+
+    #[test]
+    fn apply_policy_demotes_promotes_and_drops() {
+        let mut r = AnalyzeReport::new("t");
+        r.push(Diagnostic::error("FA001", "s".into(), "m".into()));
+        r.push(Diagnostic::warn("FA005", "s".into(), "m".into()));
+        r.push(Diagnostic::warn("FA004", "s".into(), "m".into()));
+        let cfg = AnalyzeConfig {
+            enabled: true,
+            allow: vec!["FA004".into()],
+            warn: vec!["FA001".into()],
+            deny: vec!["FA005".into()],
+        };
+        r.apply(&cfg);
+        assert_eq!(r.diags.len(), 2, "allowed code dropped");
+        assert_eq!(r.errors(), 1, "FA005 promoted");
+        assert_eq!(r.warnings(), 1, "FA001 demoted");
+        assert!(r.deny().is_err());
+        r.diags.retain(|d| d.severity != Severity::Error);
+        assert!(r.deny().is_ok());
+    }
+}

@@ -28,7 +28,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use super::spec::{EndpointSpec, FlowGraphInfo, FlowSpec, RankShape, StageFactory};
 use crate::channel::{BoundPort, Dequeue, Item, LockCounters};
 use crate::cluster::DeviceSet;
-use crate::config::{FaultConfig, PlacementMode};
+use crate::config::{AnalyzeConfig, FaultConfig, PlacementMode};
 use crate::data::Payload;
 use crate::sched::{EdgeSample, FlowProfile, ProfileDb, ProfileStore, SchedProblem, Scheduler, StageSample};
 use crate::worker::group::Services;
@@ -118,6 +118,11 @@ pub struct LaunchOpts {
     /// Default is an (unshared) empty slot — single-flow launches never
     /// see an offer.
     pub resize: ResizeSlot,
+    /// Static-analysis gate policy ([`crate::flow::analyze`]): when
+    /// `enabled` (the default), [`FlowDriver::launch_with`] runs the
+    /// analyzer over the spec and denies the launch on error-severity
+    /// findings; `allow`/`warn`/`deny` tune individual codes.
+    pub analyze: AnalyzeConfig,
 }
 
 /// Resolved placement directive for one stage.
@@ -235,6 +240,17 @@ impl FlowDriver {
         mut opts: LaunchOpts,
     ) -> Result<FlowDriver> {
         let info = spec.validate()?;
+        // Static-analysis gate: the rules `validate` cannot express
+        // (bounded-cycle deadlocks, …) deny the launch here unless the
+        // `[analyze]` policy says otherwise. Spec-level only — the union
+        // rules run at supervisor admission.
+        if opts.analyze.enabled {
+            let mut report = super::analyze::analyze_spec(&spec, &Default::default());
+            report.apply(&opts.analyze);
+            report
+                .deny()
+                .with_context(|| format!("flow {:?}: denied by flow::analyze", spec.name))?;
+        }
         // Keyed on the *profile* signature (explicit device demands
         // stripped), so a resized relaunch — which rebuilds the spec with
         // a different demand — keeps reading and feeding the same profile.

@@ -430,24 +430,47 @@ impl FlowManifest {
         })
     }
 
-    /// Check one `stage.method` endpoint against the stage kind's declared
-    /// method schema ([`StageRegistry::stage_methods`]); an empty schema is
-    /// a wildcard (generic kinds), an unknown stage is left to spec-level
-    /// validation.
-    fn check_method(&self, reg: &StageRegistry, stage: &str, method: &str, at: &str) -> Result<()> {
-        let Some(decl) = self.stages.iter().find(|s| s.name == stage) else {
-            return Ok(());
-        };
-        match reg.stage_methods(&decl.kind) {
-            Some(known) if !known.is_empty() && !known.iter().any(|m| m == method) => bail!(
-                "{}: {at}: stage {stage:?} (kind {:?}) has no method {method:?} \
-                 (declared: {})",
-                self.origin,
-                decl.kind,
-                known.join(", ")
-            ),
-            _ => Ok(()),
+    /// Every `stage.method` endpoint of the `[[edge]]`/`[[call]]` tables
+    /// that violates its stage kind's declared method schema
+    /// ([`StageRegistry::stage_methods`]), as `(section, message)` pairs —
+    /// **collected**, not bail-fast, so `flow::analyze` can report them
+    /// all in one pass ([`FlowManifest::to_spec`] bails on the first). An
+    /// empty schema is a wildcard (generic kinds); an unknown stage is
+    /// left to spec-level validation.
+    pub fn schema_diags(&self, reg: &StageRegistry) -> Vec<(String, String)> {
+        let mut out: Vec<(String, String)> = Vec::new();
+        {
+            let mut check = |stage: &str, method: &str, at: String| {
+                let Some(decl) = self.stages.iter().find(|s| s.name == stage) else {
+                    return;
+                };
+                if let Some(known) = reg.stage_methods(&decl.kind) {
+                    if !known.is_empty() && !known.iter().any(|m| m == method) {
+                        out.push((
+                            at,
+                            format!(
+                                "stage {stage:?} (kind {:?}) has no method {method:?} \
+                                 (declared: {})",
+                                decl.kind,
+                                known.join(", ")
+                            ),
+                        ));
+                    }
+                }
+            };
+            for e in &self.edges {
+                if let EndpointDecl::Stage { stage, method, .. } = &e.from {
+                    check(stage, method, format!("[[edge]] {:?}.from", e.channel));
+                }
+                if let EndpointDecl::Stage { stage, method, .. } = &e.to {
+                    check(stage, method, format!("[[edge]] {:?}.to", e.channel));
+                }
+            }
+            for c in &self.calls {
+                check(&c.stage, &c.method, "[[call]]".to_string());
+            }
         }
+        out
     }
 
     /// Resolve the manifest into a [`FlowSpec`]: every stage kind is
@@ -457,16 +480,8 @@ impl FlowManifest {
     /// schema**, so `flow_run --check` rejects endpoints naming
     /// nonexistent worker methods.
     pub fn to_spec(&self, reg: &StageRegistry) -> Result<FlowSpec> {
-        for e in &self.edges {
-            if let EndpointDecl::Stage { stage, method, .. } = &e.from {
-                self.check_method(reg, stage, method, &format!("[[edge]] {:?}.from", e.channel))?;
-            }
-            if let EndpointDecl::Stage { stage, method, .. } = &e.to {
-                self.check_method(reg, stage, method, &format!("[[edge]] {:?}.to", e.channel))?;
-            }
-        }
-        for c in &self.calls {
-            self.check_method(reg, &c.stage, &c.method, "[[call]]")?;
+        if let Some((at, msg)) = self.schema_diags(reg).into_iter().next() {
+            bail!("{}: {at}: {msg}", self.origin);
         }
         let mut spec = FlowSpec::new(&self.name);
         for s in &self.stages {

@@ -23,7 +23,14 @@
 //! with a typed option schema, and `examples/flow_run.rs` lints
 //! (`--check`) and runs manifests end-to-end — new workloads need no
 //! Rust at all (docs/flow-api.md § "Flow manifests").
+//!
+//! [`analyze`] turns the remaining comment-borne safety arguments into
+//! coded diagnostics (`FAnnn`): bounded-cycle deadlocks, cross-flow
+//! band overlap and over-commit, replay-unsafe edges, fault-policy
+//! sanity — reported in aggregate by `flow_run --analyze` and enforced
+//! at [`FlowDriver::launch_with`] / [`FlowSupervisor::admit_all`].
 
+pub mod analyze;
 pub mod checkpoint;
 pub mod driver;
 pub mod graph;
@@ -33,6 +40,10 @@ pub mod registry;
 pub mod spec;
 pub mod supervisor;
 
+pub use analyze::{
+    analyze_manifest, analyze_spec, analyze_union, AnalyzeCtx, AnalyzeReport, Diagnostic,
+    Severity, UnionShape,
+};
 pub use checkpoint::FlowCheckpoint;
 pub use driver::{
     EdgeStats, FlowDriver, FlowReport, FlowRun, LaunchOpts, Rechunk, Relaunch, ResizeSlot,

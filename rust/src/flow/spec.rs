@@ -26,6 +26,7 @@ use anyhow::{bail, Result};
 use super::graph::WorkflowGraph;
 use crate::channel::Dequeue;
 use crate::data::Payload;
+use crate::util::json::Value;
 use crate::worker::LogicFactory;
 
 /// Per-rank logic-factory maker: called once per rank at group launch.

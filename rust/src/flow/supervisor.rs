@@ -36,12 +36,13 @@ use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
+use super::analyze::{analyze_union, UnionShape};
 use super::driver::{LaunchOpts, ResizeSlot};
 use super::graph::WorkflowGraph;
 use super::spec::FlowSpec;
 use crate::channel::LockCounters;
 use crate::cluster::DeviceSet;
-use crate::config::{FaultConfig, SupervisorConfig};
+use crate::config::{AnalyzeConfig, FaultConfig, SupervisorConfig};
 use crate::sched::{Plan, ProfileDb, ProfileStore, SchedProblem, Scheduler};
 use crate::worker::group::Services;
 
@@ -168,6 +169,9 @@ pub struct FlowSupervisor {
     /// Fault policy for the cross-flow watchdog in [`FlowSupervisor::tick`]
     /// (`None` = no hang detection at the supervisor level).
     fault: Mutex<Option<FaultConfig>>,
+    /// Static-analysis gate policy for [`FlowSupervisor::admit_all`]
+    /// (per-code allow/warn/deny from the `[analyze]` config section).
+    analyze: Mutex<AnalyzeConfig>,
 }
 
 /// Status snapshot of one admitted flow.
@@ -186,6 +190,7 @@ impl FlowSupervisor {
             cfg,
             state: Mutex::new(SupState::default()),
             fault: Mutex::new(None),
+            analyze: Mutex::new(AnalyzeConfig::default()),
         }
     }
 
@@ -194,6 +199,12 @@ impl FlowSupervisor {
     /// to the shared failure monitor (scope-poisoning only the hung flow).
     pub fn set_fault(&self, fault: FaultConfig) {
         *self.fault.lock().unwrap() = Some(fault);
+    }
+
+    /// Install the `[analyze]` policy [`FlowSupervisor::admit_all`] gates
+    /// joint admissions with (defaults to enabled with no overrides).
+    pub fn set_analyze(&self, analyze: AnalyzeConfig) {
+        *self.analyze.lock().unwrap() = analyze;
     }
 
     /// The shared services flows launch against.
@@ -361,7 +372,36 @@ impl FlowSupervisor {
     /// when any flow is cyclic or unprofiled. Every admission runs
     /// through the normal capacity accounting either way.
     pub fn admit_all(&self, reqs: Vec<(AdmitReq, &FlowSpec)>) -> Result<Vec<Admission>> {
-        if let Some(widths) = self.live_union_widths(&reqs) {
+        let widths = self.live_union_widths(&reqs);
+        // Static gate over the union: the cross-flow invariants this used
+        // to assert in comments (disjoint priority bands, admissible
+        // device demand) are checked up front, so a doomed batch is
+        // rejected with coded diagnostics instead of failing mid-batch.
+        let policy = self.analyze.lock().unwrap().clone();
+        if policy.enabled {
+            let shape = {
+                let st = self.state.lock().unwrap();
+                let stride = self.cfg.priority_stride.max(1);
+                UnionShape {
+                    total_devices: self.services.cluster.num_devices(),
+                    free_devices: self.services.cluster.free_devices(),
+                    admitted: st
+                        .flows
+                        .iter()
+                        .map(|f| (f.name.clone(), f.window.1, f.shareable))
+                        .collect(),
+                    used_slots: st.flows.iter().map(|f| f.priority_base / stride).collect(),
+                    next_slot: st.next_slot,
+                    // A live union plan normalizes widths before admission,
+                    // so declared device counts are peaks, not commitments.
+                    planned: widths.is_some(),
+                }
+            };
+            let mut report = analyze_union(&reqs, &self.cfg, &shape);
+            report.apply(&policy);
+            report.deny().context("joint admission denied by flow::analyze")?;
+        }
+        if let Some(widths) = widths {
             let mut planned: Vec<(AdmitReq, &FlowSpec)> = reqs
                 .iter()
                 .map(|(r, s)| {

@@ -110,6 +110,9 @@ fn panic_is_restarted_and_replayed_exactly_once() {
         !svc.monitor.scope_poisoned(driver.scope()),
         "a committed heal clears the scope's poison"
     );
+    // Debug lock-order monitor: stage restarts re-acquire device locks;
+    // none of that churn may form a hold-and-wait cycle.
+    assert_eq!(svc.locks.order_cycles(), 0, "no acquisition cycles across restarts");
 }
 
 #[test]

@@ -1,0 +1,300 @@
+//! Integration tests for the flow static analyzer (`flow::analyze`):
+//! every diagnostic code has a seeded-bad fixture under
+//! `tests/data/analyze/` triggering exactly it, rendered reports are
+//! pinned by golden snapshots (bless with `RLINF_BLESS=1`), the
+//! `[analyze]` allow/warn/deny policy is honored, and both enforcement
+//! gates — `FlowDriver::launch_with` and `FlowSupervisor::admit_all` —
+//! deny on error-severity findings.
+
+use rlinf::cluster::Cluster;
+use rlinf::config::{AnalyzeConfig, ClusterConfig, PlacementMode, SupervisorConfig};
+use rlinf::data::Payload;
+use rlinf::flow::manifest::{load_tree, FlowManifest, MultiFlowManifest};
+use rlinf::flow::{
+    analyze_manifest, analyze_union, AdmitReq, AnalyzeReport, Edge, FlowDriver, FlowSpec,
+    FlowSupervisor, LaunchOpts, Stage, StageRegistry, UnionShape,
+};
+use rlinf::worker::group::Services;
+use rlinf::worker::{WorkerCtx, WorkerLogic};
+
+fn data_path(name: &str) -> String {
+    format!("{}/tests/data/analyze/{name}", env!("CARGO_MANIFEST_DIR"))
+}
+
+/// Parse a fixture with a repo-relative origin so diagnostic spans (and
+/// the goldens pinning them) do not depend on the checkout location.
+fn fixture(name: &str) -> FlowManifest {
+    let text = std::fs::read_to_string(data_path(name))
+        .unwrap_or_else(|e| panic!("fixture {name} missing: {e}"));
+    FlowManifest::parse(&text, &format!("tests/data/analyze/{name}"))
+        .unwrap_or_else(|e| panic!("fixture {name} must parse: {e:#}"))
+}
+
+fn codes(r: &AnalyzeReport) -> Vec<&'static str> {
+    r.diags.iter().map(|d| d.code).collect()
+}
+
+/// Analyze a multi-flow fixture the way `flow_run --analyze` does:
+/// per-child reports (must be clean for these fixtures) plus the
+/// cross-flow union report, which is returned.
+fn analyze_multi(name: &str) -> AnalyzeReport {
+    let path = data_path(name);
+    let tree = load_tree(&path).unwrap_or_else(|e| panic!("fixture {name}: {e:#}"));
+    let mm = MultiFlowManifest::from_value(tree, &path)
+        .unwrap_or_else(|e| panic!("fixture {name}: {e:#}"));
+    let cfg = mm.run_config().unwrap();
+    let reg = StageRegistry::builtin();
+    let resolved = mm.resolve().unwrap();
+    let mut specs = Vec::new();
+    for (m, _) in &resolved {
+        let r = analyze_manifest(m, &reg);
+        assert!(r.is_clean(), "child {:?} of {name} must be clean:\n{}", m.name, r.render());
+        specs.push(m.to_spec(&reg).unwrap());
+    }
+    let pairs: Vec<_> = resolved
+        .iter()
+        .zip(specs.iter())
+        .map(|((_, req), spec)| (req.clone(), spec))
+        .collect();
+    analyze_union(&pairs, &cfg.supervisor, &UnionShape::fresh(cfg.cluster.total_devices()))
+}
+
+// ---------------------------------------------------------------------------
+// One fixture per diagnostic code, each triggering exactly that code.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn every_code_has_a_fixture_triggering_exactly_it() {
+    let reg = StageRegistry::builtin();
+    let expect = [
+        ("fa000_aggregate.flow.toml", vec!["FA000", "FA000", "FA000"]),
+        ("fa001_bounded_cycle.flow.toml", vec!["FA001"]),
+        ("fa004_replay.flow.toml", vec!["FA004"]),
+        ("fa005_snap.flow.toml", vec!["FA005"]),
+        ("fa006_fault.flow.toml", vec!["FA006", "FA006"]),
+        ("fa007_dead_stage.flow.toml", vec!["FA007"]),
+        ("fa008_pump.flow.toml", vec!["FA008"]),
+    ];
+    for (name, want) in expect {
+        let r = analyze_manifest(&fixture(name), &reg);
+        assert_eq!(codes(&r), want, "{name}:\n{}", r.render());
+    }
+
+    // Cross-flow codes come from the union analyzer over multi fixtures.
+    let r = analyze_multi("fa002_overcommit.flow.toml");
+    assert_eq!(codes(&r), vec!["FA002"], "{}", r.render());
+    let r = analyze_multi("fa003_band_overlap.flow.toml");
+    assert_eq!(codes(&r), vec!["FA003"], "{}", r.render());
+}
+
+#[test]
+fn shipped_manifests_analyze_clean() {
+    let reg = StageRegistry::builtin();
+    let dir = format!("{}/../configs", env!("CARGO_MANIFEST_DIR"));
+    let mut checked = 0usize;
+    for entry in std::fs::read_dir(&dir).expect("configs dir") {
+        let path = entry.unwrap().path();
+        let name = path.file_name().unwrap().to_string_lossy().to_string();
+        if !name.ends_with(".flow.toml") {
+            continue;
+        }
+        let tree = load_tree(path.to_str().unwrap()).unwrap();
+        let is_multi = matches!(tree.get("flow"), Some(rlinf::util::json::Value::Arr(_)));
+        if is_multi {
+            let r = analyze_multi_at(path.to_str().unwrap());
+            assert!(r.is_clean(), "{name} union:\n{}", r.render());
+        } else {
+            let m = FlowManifest::from_value(tree, path.to_str().unwrap()).unwrap();
+            let r = analyze_manifest(&m, &reg);
+            assert!(r.is_clean(), "{name}:\n{}", r.render());
+        }
+        checked += 1;
+    }
+    assert!(checked >= 5, "expected the shipped manifests, found {checked}");
+}
+
+/// `analyze_multi` against an absolute path (shipped multi manifests).
+fn analyze_multi_at(path: &str) -> AnalyzeReport {
+    let tree = load_tree(path).unwrap();
+    let mm = MultiFlowManifest::from_value(tree, path).unwrap();
+    let cfg = mm.run_config().unwrap();
+    let reg = StageRegistry::builtin();
+    let resolved = mm.resolve().unwrap();
+    let mut specs = Vec::new();
+    for (m, _) in &resolved {
+        let r = analyze_manifest(m, &reg);
+        assert!(r.is_clean(), "child {:?} of {path}:\n{}", m.name, r.render());
+        specs.push(m.to_spec(&reg).unwrap());
+    }
+    let pairs: Vec<_> = resolved
+        .iter()
+        .zip(specs.iter())
+        .map(|((_, req), spec)| (req.clone(), spec))
+        .collect();
+    analyze_union(&pairs, &cfg.supervisor, &UnionShape::fresh(cfg.cluster.total_devices()))
+}
+
+// ---------------------------------------------------------------------------
+// Golden snapshots: rendered reports are pinned; bless with RLINF_BLESS=1.
+// ---------------------------------------------------------------------------
+
+fn check_golden(golden_name: &str, rendered: &str) {
+    let path = data_path(golden_name);
+    let bless = std::env::var_os("RLINF_BLESS").is_some();
+    match std::fs::read_to_string(&path) {
+        Ok(expected) if !bless => {
+            assert_eq!(
+                expected.trim(),
+                rendered.trim(),
+                "rendered diagnostics changed vs golden {golden_name}; if intentional, \
+                 re-bless with RLINF_BLESS=1 and commit the new golden"
+            );
+        }
+        _ => {
+            std::fs::write(&path, format!("{}\n", rendered.trim())).expect("write golden");
+            eprintln!("blessed golden {golden_name} — commit it to arm the regression");
+        }
+    }
+}
+
+#[test]
+fn golden_snapshots_pin_rendered_reports() {
+    let reg = StageRegistry::builtin();
+    let r = analyze_manifest(&fixture("fa001_bounded_cycle.flow.toml"), &reg);
+    check_golden("golden_fa001.txt", &r.render());
+    let r = analyze_manifest(&fixture("fa005_snap.flow.toml"), &reg);
+    check_golden("golden_fa005.txt", &r.render());
+}
+
+// ---------------------------------------------------------------------------
+// [analyze] policy: allow drops, warn demotes, deny promotes.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn analyze_policy_is_applied_from_the_manifest() {
+    let reg = StageRegistry::builtin();
+    let base = std::fs::read_to_string(data_path("fa005_snap.flow.toml")).unwrap();
+
+    let allowed = format!("{base}\n[analyze]\nallow = [\"FA005\"]\n");
+    let m = FlowManifest::parse(&allowed, "policy-allow").unwrap();
+    let r = analyze_manifest(&m, &reg);
+    assert!(r.is_clean(), "allow must drop the finding:\n{}", r.render());
+
+    let denied = format!("{base}\n[analyze]\ndeny = [\"FA005\"]\n");
+    let m = FlowManifest::parse(&denied, "policy-deny").unwrap();
+    let r = analyze_manifest(&m, &reg);
+    assert_eq!((r.errors(), r.warnings()), (1, 0), "deny promotes:\n{}", r.render());
+
+    let cycle = std::fs::read_to_string(data_path("fa001_bounded_cycle.flow.toml")).unwrap();
+    let demoted = format!("{cycle}\n[analyze]\nwarn = [\"FA001\"]\n");
+    let m = FlowManifest::parse(&demoted, "policy-warn").unwrap();
+    let r = analyze_manifest(&m, &reg);
+    assert_eq!((r.errors(), r.warnings()), (0, 1), "warn demotes:\n{}", r.render());
+}
+
+// ---------------------------------------------------------------------------
+// Enforcement gates: launch and joint admission deny on errors.
+// ---------------------------------------------------------------------------
+
+struct Nop;
+impl WorkerLogic for Nop {
+    fn call(&mut self, _ctx: &WorkerCtx, _m: &str, arg: Payload) -> anyhow::Result<Payload> {
+        Ok(arg)
+    }
+}
+
+fn nop(name: &str) -> Stage {
+    Stage::new(name, |_| Box::new(|_: &WorkerCtx| Ok(Box::new(Nop) as Box<dyn WorkerLogic>)))
+}
+
+fn services(devices: usize) -> Services {
+    Services::new(Cluster::new(ClusterConfig {
+        nodes: 1,
+        devices_per_node: devices,
+        ..Default::default()
+    }))
+}
+
+fn bounded_cycle_spec() -> FlowSpec {
+    FlowSpec::new("cyc")
+        .stage(nop("ping"))
+        .stage(nop("pong"))
+        .edge(
+            Edge::new("ab")
+                .produced_by("ping", "m")
+                .consumed_by("pong", "m")
+                .granularity(4)
+                .capacity(4),
+        )
+        .edge(
+            Edge::new("ba")
+                .produced_by("pong", "m")
+                .consumed_by("ping", "m")
+                .granularity(4)
+                .capacity(4),
+        )
+}
+
+#[test]
+fn launch_gate_denies_bounded_cycle() {
+    let services = services(2);
+    let err = match FlowDriver::launch_with(
+        bounded_cycle_spec(),
+        &services,
+        PlacementMode::Collocated,
+        LaunchOpts::default(),
+    ) {
+        Err(e) => e,
+        Ok(_) => panic!("bounded cycle must be denied at launch"),
+    };
+    let msg = format!("{err:#}");
+    assert!(msg.contains("FA001"), "denial names the code: {msg}");
+    assert!(msg.contains("denied by flow::analyze"), "{msg}");
+}
+
+#[test]
+fn launch_gate_honors_allow_policy() {
+    // Allowing FA001 must clear the gate itself (the launch then proceeds
+    // past analysis — deny() sees no findings).
+    let spec = bounded_cycle_spec();
+    let mut report = rlinf::flow::analyze_spec(&spec, &Default::default());
+    assert_eq!(report.errors(), 1);
+    report.apply(&AnalyzeConfig {
+        allow: vec!["FA001".to_string()],
+        ..AnalyzeConfig::default()
+    });
+    assert!(report.deny().is_ok(), "allowed code no longer denies");
+}
+
+#[test]
+fn admission_gate_denies_overlapping_slots() {
+    let services = services(4);
+    let sup = FlowSupervisor::new(&services, SupervisorConfig::default());
+    let mk = |n: &str| {
+        FlowSpec::new(n)
+            .stage(nop("w"))
+            .edge(Edge::new("x").produced_by_driver().consumed_by("w", "m"))
+    };
+    let (fa, fb) = (mk("fa"), mk("fb"));
+    let reqs = vec![
+        (AdmitReq::new("fa", 2).slot(3), &fa),
+        (AdmitReq::new("fb", 2).slot(3), &fb),
+    ];
+    let err = match sup.admit_all(reqs) {
+        Err(e) => e,
+        Ok(_) => panic!("shared slot must be denied"),
+    };
+    let msg = format!("{err:#}");
+    assert!(msg.contains("FA003"), "denial names the code: {msg}");
+    assert!(msg.contains("denied by flow::analyze"), "{msg}");
+
+    // Disjoint slots admit fine afterwards: the gate rolled nothing in.
+    let reqs = vec![
+        (AdmitReq::new("fa", 2).slot(3), &fa),
+        (AdmitReq::new("fb", 2).slot(4), &fb),
+    ];
+    let admissions = sup.admit_all(reqs).expect("disjoint slots admit");
+    assert_eq!(admissions.len(), 2);
+    // No runtime lock-order cycles across admission bookkeeping.
+    assert_eq!(services.locks.order_cycles(), 0);
+}

@@ -212,6 +212,11 @@ fn two_flows_time_share_two_devices_with_fair_accounting() {
     // Intent lifecycle: nothing left pending after the runs.
     assert_eq!(services.locks.pending_intents(""), 0, "no stale intents survive finish()");
 
+    // Debug lock-order monitor: two flows time-sharing one window must
+    // never form a hold-and-wait cycle — the dynamic confirmation of the
+    // disjoint-band argument flow::analyze checks statically (FA003).
+    assert_eq!(services.locks.order_cycles(), 0, "no acquisition cycles across flows");
+
     // Retirement: the time-sharing junior frees nothing; the owner frees
     // the window back to the pool.
     let r = sup.retire("lo").unwrap();
