@@ -26,8 +26,8 @@ use std::time::Instant;
 
 use rlinf::channel::{Channel, TryPut};
 use rlinf::cluster::{Cluster, DeviceSet};
-use rlinf::comm::CommManager;
-use rlinf::config::ClusterConfig;
+use rlinf::comm::{transport_from_config, CommManager};
+use rlinf::config::{ClusterConfig, TransportConfig};
 use rlinf::data::{Payload, Tensor};
 use rlinf::metrics::Metrics;
 use rlinf::util::fmt;
@@ -511,6 +511,95 @@ fn main() -> anyhow::Result<()> {
     );
     println!("p2p send: shm {}/s, sock {}/s", fmt::count(send_small), fmt::count(send_sock));
 
+    // --- Part 3: wire transport (uds loopback, two simulated nodes) ---
+    // Cross-node routes now leave the process: frames are length-prefixed
+    // and the broadcast tail is serialized once per fan-out. This section
+    // measures the real wire, not the in-proc Sock simulation above.
+    println!("\nrunning wire-transport loopback (uds, 2 nodes)...");
+    let wcluster = Cluster::new(ClusterConfig {
+        nodes: 2,
+        devices_per_node: 8,
+        ..Default::default()
+    });
+    let wmetrics = Metrics::new();
+    let tcfg = TransportConfig { backend: "uds".into(), ..Default::default() };
+    let wcomm = CommManager::with_transport(
+        wcluster.clone(),
+        wmetrics.clone(),
+        transport_from_config(&tcfg, &wcluster, &wmetrics)?,
+    );
+    let _wa = wcomm.register("a", DeviceSet::range(0, 1))?;
+    let wd = wcomm.register("d", DeviceSet::range(8, 1))?;
+    let mut wire_rows = Vec::new();
+    let mut wire_send = Value::obj();
+    for kib in [4usize, 64, 1024] {
+        let n = kib * 1024 / 4;
+        let t = Tensor::from_f32(vec![n], &vec![1.0f32; n])?;
+        let reps = if small() { 5 } else { 30 };
+        // Warm the route cache and the connection.
+        wcomm.send("a", "d", Payload::from_named(vec![("x", t.clone())]))?;
+        wd.recv()?;
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            let p = Payload::from_named(vec![("x", t.clone())]);
+            wcomm.send("a", "d", p)?;
+            wd.recv()?;
+        }
+        let per = t0.elapsed().as_secs_f64() / reps as f64;
+        let bw = (kib * 1024) as f64 / per;
+        wire_rows.push(vec![
+            format!("{kib} KiB"),
+            "uds".into(),
+            fmt::secs(per),
+            format!("{}/s", fmt::bytes(bw as u64)),
+        ]);
+        let mut e = Value::obj();
+        e.set("latency_secs", per).set("bytes_per_sec", bw);
+        wire_send.set(&format!("{kib}kib"), e);
+    }
+    common::report("wire_loopback", &["payload", "backend", "latency", "bandwidth"], wire_rows);
+
+    // Serialize-once broadcast to 4 far-node destinations sharing one
+    // connection: the tail is encoded once (comm.wire.serialize counts
+    // passes, not destinations).
+    let wfan: Vec<String> = (0..4).map(|i| format!("wr{i}")).collect();
+    let wfan_refs: Vec<&str> = wfan.iter().map(String::as_str).collect();
+    let wfan_boxes: Vec<_> = wfan
+        .iter()
+        .enumerate()
+        .map(|(i, name)| wcomm.register(name, DeviceSet::range(9 + i, 1)).unwrap())
+        .collect();
+    let serialize_before = wmetrics.count("comm.wire.serialize");
+    let wire_bcast = bench_broadcast(&wcomm, &wfan_boxes, &wfan_refs, &big, bcast_reps, false);
+    let serialize_passes = wmetrics.count("comm.wire.serialize") - serialize_before;
+
+    // Ingress hop: driver-side sends framed into a far-node channel, the
+    // path a cross-node flow edge takes (BoundPort wire hop -> ingress).
+    let ing_ch = Channel::new("bench-wire-ingress");
+    ing_ch.register_producer("a");
+    wcomm.register_ingress("ing", DeviceSet::range(13, 1), ing_ch.clone())?;
+    let ing_items = scaled(5_000);
+    let drain = {
+        let ch = ing_ch.clone();
+        thread::spawn(move || {
+            while ch.get("c").is_some() {}
+        })
+    };
+    let t0 = Instant::now();
+    for _ in 0..ing_items {
+        wcomm.send("a", "ing", Payload::new())?;
+    }
+    wcomm.send_done("a", "ing")?;
+    drain.join().unwrap();
+    let wire_ingress = ing_items as f64 / t0.elapsed().as_secs_f64();
+    println!(
+        "wire: broadcast {}/s ({} serialize pass(es)/{} reps), ingress {}/s",
+        fmt::count(wire_bcast),
+        serialize_passes,
+        bcast_reps,
+        fmt::count(wire_ingress)
+    );
+
     // Raw numbers for trend tracking across PRs.
     let mut out = Value::obj();
     out.set("bench", "dataplane");
@@ -541,6 +630,13 @@ fn main() -> anyhow::Result<()> {
     let mut send = Value::obj();
     send.set("shm_msgs_per_sec", send_small).set("sock_msgs_per_sec", send_sock);
     out.set("send", send);
+    let mut wire = Value::obj();
+    wire.set("backend", "uds")
+        .set("send", wire_send)
+        .set("broadcast_payloads_per_sec", wire_bcast)
+        .set("broadcast_serialize_passes", serialize_passes)
+        .set("ingress_msgs_per_sec", wire_ingress);
+    out.set("wire", wire);
     out.set("config", {
         let mut cfg = Value::obj();
         cfg.set("preset", if small() { "small" } else { "full" })

@@ -18,5 +18,5 @@ pub mod port;
 pub mod queue;
 
 pub use device_lock::{DeviceLockMgr, LockCounters};
-pub use port::{BoundPort, Dequeue, PortBindings};
+pub use port::{BoundPort, Dequeue, PortBindings, WireHop};
 pub use queue::{Channel, ChannelRegistry, Item, ItemsView, TryPut};

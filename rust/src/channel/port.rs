@@ -18,6 +18,7 @@ use std::time::Duration;
 use anyhow::Result;
 
 use super::queue::{Channel, Item, TryPut};
+use crate::comm::CommManager;
 use crate::data::Payload;
 
 /// Edge dequeue discipline (§3.5): how consumers pull from the channel.
@@ -44,6 +45,32 @@ impl Dequeue {
     }
 }
 
+/// Remote leg of a bound port: when the producing and consuming stages of
+/// an edge live on disjoint node sets, producer-side sends are routed
+/// through the [`CommManager`] (and its wire transport) to an *ingress*
+/// endpoint that feeds the channel on the consumer's node, instead of
+/// touching the local queue directly. Consumers never see the hop — they
+/// keep reading the channel the ingress fills.
+#[derive(Clone)]
+pub struct WireHop {
+    /// Comm manager whose route cache + transport carries the bytes.
+    pub comm: CommManager,
+    /// Ingress endpoint name registered for the consumer's channel.
+    pub dst: String,
+    /// Optional producer rename: sends from `.0` go on the wire as `.1`
+    /// (used for the driver, whose logical name is not a comm endpoint).
+    pub src_alias: Option<(String, String)>,
+}
+
+impl WireHop {
+    fn resolve<'a>(&'a self, who: &'a str) -> &'a str {
+        match &self.src_alias {
+            Some((from, to)) if from == who => to,
+            _ => who,
+        }
+    }
+}
+
 /// A channel bound to one named port of a stage (or of the driver), with
 /// the edge's dequeue discipline and granularity attached.
 #[derive(Clone)]
@@ -51,11 +78,34 @@ pub struct BoundPort {
     channel: Channel,
     discipline: Dequeue,
     granularity: usize,
+    hop: Option<Arc<WireHop>>,
 }
 
 impl BoundPort {
     pub fn new(channel: Channel, discipline: Dequeue, granularity: usize) -> BoundPort {
-        BoundPort { channel, discipline, granularity: granularity.max(1) }
+        BoundPort { channel, discipline, granularity: granularity.max(1), hop: None }
+    }
+
+    /// A port whose producer side ships over a [`WireHop`] instead of the
+    /// local queue; the `channel` handle stays attached for name/size
+    /// probes and for the consumer side of the edge.
+    pub fn with_hop(
+        channel: Channel,
+        discipline: Dequeue,
+        granularity: usize,
+        hop: WireHop,
+    ) -> BoundPort {
+        BoundPort {
+            channel,
+            discipline,
+            granularity: granularity.max(1),
+            hop: Some(Arc::new(hop)),
+        }
+    }
+
+    /// Whether producer-side calls route over a remote transport.
+    pub fn is_remote(&self) -> bool {
+        self.hop.is_some()
     }
 
     /// The underlying channel (size probes, drain barriers).
@@ -113,43 +163,82 @@ impl BoundPort {
 
     /// Enqueue with unit weight.
     pub fn send(&self, who: &str, payload: Payload) -> Result<()> {
-        self.channel.put(who, payload)
+        self.send_weighted(who, payload, 1.0)
     }
 
     /// Enqueue with an explicit load weight (weighted/balanced edges).
+    /// Remote ports ship the payload through the wire hop's ingress
+    /// endpoint; backpressure is then bounded by the ingress channel on
+    /// the consumer's node, not this producer's call.
     pub fn send_weighted(&self, who: &str, payload: Payload, weight: f64) -> Result<()> {
-        self.channel.put_weighted(who, payload, weight)
+        match &self.hop {
+            Some(h) => h.comm.send_weighted(h.resolve(who), &h.dst, payload, weight).map(|_| ()),
+            None => self.channel.put_weighted(who, payload, weight),
+        }
     }
 
     /// Batched enqueue: one queue-lock acquisition and one wakeup for the
-    /// whole micro-batch ([`Channel::put_batch`]).
+    /// whole micro-batch ([`Channel::put_batch`]); remote ports frame each
+    /// item individually (the wire preserves per-item weights).
     pub fn send_batch(&self, who: &str, items: Vec<(Payload, f64)>) -> Result<()> {
-        self.channel.put_batch(who, items)
+        match &self.hop {
+            Some(_) => {
+                for (p, w) in items {
+                    self.send_weighted(who, p, w)?;
+                }
+                Ok(())
+            }
+            None => self.channel.put_batch(who, items),
+        }
     }
 
     /// Non-blocking enqueue: [`TryPut::Full`] (nothing sent) when the
     /// edge's bounded channel is at capacity, instead of blocking the
     /// producer — the async-send primitive for stages that can overlap
-    /// useful work with a congested downstream edge.
+    /// useful work with a congested downstream edge. Remote ports never
+    /// report [`TryPut::Full`]: the wire decouples the producer from the
+    /// consumer-side queue, whose bound is enforced by the ingress.
     pub fn try_send(&self, who: &str, payload: Payload) -> Result<TryPut> {
-        self.channel.try_put(who, payload)
+        self.try_send_weighted(who, payload, 1.0)
     }
 
     /// Non-blocking weighted enqueue; see [`BoundPort::try_send`].
     pub fn try_send_weighted(&self, who: &str, payload: Payload, weight: f64) -> Result<TryPut> {
-        self.channel.try_put_weighted(who, payload, weight)
+        match &self.hop {
+            Some(_) => {
+                self.send_weighted(who, payload, weight)?;
+                Ok(TryPut::Done)
+            }
+            None => self.channel.try_put_weighted(who, payload, weight),
+        }
     }
 
     /// Non-blocking all-or-nothing batched enqueue: on [`TryPut::Full`]
     /// `items` is left untouched for a later retry.
     pub fn try_send_batch(&self, who: &str, items: &mut Vec<(Payload, f64)>) -> Result<TryPut> {
-        self.channel.try_put_batch(who, items)
+        match &self.hop {
+            Some(_) => {
+                for (p, w) in items.drain(..) {
+                    self.send_weighted(who, p, w)?;
+                }
+                Ok(TryPut::Done)
+            }
+            None => self.channel.try_put_batch(who, items),
+        }
     }
 
     /// Close this endpoint's producer slot; the channel auto-closes once
-    /// every registered producer is done.
+    /// every registered producer is done. Remote ports forward the Done as
+    /// a wire frame so the ingress retires the producer on the consumer's
+    /// node (data frames already queued ahead of it are preserved — the
+    /// per-connection stream keeps Done behind data).
     pub fn done(&self, who: &str) {
-        self.channel.producer_done(who);
+        match &self.hop {
+            Some(h) => {
+                let _ = h.comm.send_done(h.resolve(who), &h.dst);
+            }
+            None => self.channel.producer_done(who),
+        }
     }
 
     /// Acknowledge everything `who` consumed from this port, releasing the

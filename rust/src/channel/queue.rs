@@ -353,6 +353,19 @@ impl Channel {
     /// its replacement in arrival order. Put/got counters and `who`'s
     /// balanced-dequeue load are rolled back so stats still reconcile.
     /// Returns the number of items replayed.
+    ///
+    /// Re-insertion is deliberately unconditional w.r.t. a capacity bound:
+    /// the replayed items already occupied their slots once (their puts
+    /// were admitted), so re-admitting them cannot grow the channel past
+    /// anything producers were ever promised — the queue may briefly sit
+    /// *over* the bound, `Core::space()` saturates at 0 for the duration,
+    /// and producers stay parked until consumers drain back under the cap.
+    /// Rejecting or blocking here instead would deadlock recovery: the only
+    /// thread that could free space is the restarted consumer waiting on
+    /// this very call. Both waiter classes are woken — consumers
+    /// (`cv_items`: there is new data) and producers (`cv_space`: a
+    /// previously `None` probe may now be installed, and the timed re-check
+    /// must observe the post-restart state promptly).
     pub fn requeue_inflight(&self, who: &str) -> usize {
         let mut c = self.inner.core.lock().unwrap();
         let buf = match c.inflight.remove(who) {
@@ -367,9 +380,8 @@ impl Channel {
             c.items.insert(seq, item);
         }
         c.total_got = c.total_got.saturating_sub(n as u64);
-        // Replayed items may briefly overflow a capacity bound (space()
-        // saturates at 0); consumers drain the excess first.
         self.inner.cv_items.notify_all();
+        self.inner.cv_space.notify_all();
         drop(c);
         self.stat_mut(who, |s| s.load = (s.load - w).max(0.0));
         n
@@ -384,27 +396,29 @@ impl Channel {
     /// Slow-path wait for `need` free slots, polling the abort probe (when
     /// installed) so a poisoned run's producers fail out promptly instead
     /// of hanging until an external timeout. Close also wakes us to fail.
+    ///
+    /// The probe is re-read on every iteration: the flow driver installs
+    /// the scope probe *after* channel creation, so a producer that parks
+    /// before installation must still pick it up. For the same reason the
+    /// wait is always timed — an untimed park taken while the probe slot is
+    /// empty would never poll a probe installed later.
     fn wait_for_space<'a>(
         &'a self,
         mut c: std::sync::MutexGuard<'a, Core>,
         need: usize,
     ) -> Result<std::sync::MutexGuard<'a, Core>> {
-        let probe = self.inner.probe.lock().unwrap().clone();
         while c.space() < need && !c.closed {
-            match &probe {
-                Some(p) => {
-                    if p() {
-                        bail!("channel {}: put aborted, run poisoned", self.inner.name);
-                    }
-                    let (guard, _) = self
-                        .inner
-                        .cv_space
-                        .wait_timeout(c, Duration::from_millis(20))
-                        .unwrap();
-                    c = guard;
+            // Lock order: core → probe. Nothing takes probe before core, so
+            // grabbing the probe slot while holding the core lock is safe.
+            let probe = self.inner.probe.lock().unwrap().clone();
+            if let Some(p) = probe {
+                if p() {
+                    bail!("channel {}: put aborted, run poisoned", self.inner.name);
                 }
-                None => c = self.inner.cv_space.wait(c).unwrap(),
             }
+            let (guard, _) =
+                self.inner.cv_space.wait_timeout(c, Duration::from_millis(20)).unwrap();
+            c = guard;
         }
         Ok(c)
     }
@@ -1263,6 +1277,31 @@ mod tests {
         thread::sleep(Duration::from_millis(30));
         ch.get("c").unwrap();
         h.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn poison_probe_installed_after_park_still_fires() {
+        // Regression: the producer parks while the probe slot is still
+        // empty; the probe is installed (and fires) only afterwards. The
+        // old code cloned the probe once before parking and fell into an
+        // untimed wait, so the producer hung forever. Now the probe is
+        // re-read each timed iteration, restoring the ~25ms fail-out bound.
+        let ch = Channel::new("t");
+        ch.set_capacity(1);
+        ch.register_producer("p");
+        ch.put("p", Payload::new()).unwrap();
+        let ch2 = ch.clone();
+        let h = thread::spawn(move || {
+            let t0 = Instant::now();
+            let r = ch2.put("p", Payload::new());
+            (r, t0.elapsed())
+        });
+        // Let the producer park with no probe installed.
+        thread::sleep(Duration::from_millis(30));
+        ch.set_poison_probe(Arc::new(|| true));
+        let (r, waited) = h.join().unwrap();
+        assert!(r.is_err(), "producer parked pre-install fails out on poison");
+        assert!(waited < Duration::from_secs(2), "prompt wakeup: {waited:?}");
     }
 
     #[test]

@@ -102,6 +102,31 @@ impl Cluster {
         self.node_of(a) == self.node_of(b)
     }
 
+    pub fn num_nodes(&self) -> usize {
+        self.inner.cfg.nodes
+    }
+
+    /// Every node a device window touches, sorted and deduplicated. A
+    /// window placed across node boundaries reports all of them — backend
+    /// selection and wire addressing both key off this set.
+    pub fn nodes_of(&self, set: &DeviceSet) -> Vec<usize> {
+        let mut nodes: Vec<usize> = set.ids().iter().map(|d| self.node_of(*d)).collect();
+        nodes.sort_unstable();
+        nodes.dedup();
+        nodes
+    }
+
+    /// Whether a device window straddles a node boundary.
+    pub fn straddles_nodes(&self, set: &DeviceSet) -> bool {
+        self.nodes_of(set).len() > 1
+    }
+
+    /// The device window of one node (for placing stages node-locally).
+    pub fn devices_on_node(&self, node: usize) -> DeviceSet {
+        let dpn = self.inner.cfg.devices_per_node;
+        DeviceSet::range(node * dpn, dpn)
+    }
+
     /// Claim `n` packed (consecutive) free devices.
     pub fn allocate_packed(&self, n: usize) -> Result<DeviceSet> {
         let mut alloc = self.inner.allocated.lock().unwrap();
@@ -234,6 +259,18 @@ mod tests {
         assert!(c.same_node(DeviceId(0), DeviceId(3)));
         assert!(!c.same_node(DeviceId(3), DeviceId(4)));
         assert_eq!(c.node_of(DeviceId(7)), 1);
+    }
+
+    #[test]
+    fn node_sets_and_straddling() {
+        let c = cluster(2, 4);
+        assert_eq!(c.num_nodes(), 2);
+        assert_eq!(c.nodes_of(&DeviceSet::range(0, 3)), vec![0]);
+        assert_eq!(c.nodes_of(&DeviceSet::range(3, 2)), vec![0, 1]);
+        assert_eq!(c.nodes_of(&DeviceSet::default()), Vec::<usize>::new());
+        assert!(c.straddles_nodes(&DeviceSet::range(2, 4)));
+        assert!(!c.straddles_nodes(&DeviceSet::range(4, 4)));
+        assert_eq!(c.devices_on_node(1), DeviceSet::range(4, 4));
     }
 
     #[test]

@@ -22,5 +22,10 @@
 //! across all memcpy-backed destinations. See `docs/data-plane.md`.
 
 pub mod p2p;
+pub mod wire;
 
-pub use p2p::{BackendKind, CommManager, Mailbox, Message};
+pub use p2p::{
+    BackendKind, CommManager, EpSink, InProcTransport, IngressEvent, Mailbox, Message, Route,
+    Transport, TransportEnv,
+};
+pub use wire::{transport_from_config, WireTransport};

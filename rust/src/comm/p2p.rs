@@ -11,6 +11,18 @@
 //! no endpoint-map mutex. The slow path (first send over a pair) resolves
 //! the backend, establishes the logical connection, and populates the
 //! cache; `unregister` purges every route touching the endpoint.
+//!
+//! ## Transport abstraction
+//!
+//! Where a resolved route's bytes actually go is behind the [`Transport`]
+//! trait. The default implementation ([`InProcTransport`], every trait
+//! method defaulted) is the in-proc memcpy path: Arc move / one copy /
+//! copy + simulated inter-node latency, pushed straight into the
+//! destination's mailbox sender. A remote transport (see
+//! [`crate::comm::wire`]) overrides `deliver`/`broadcast` to put
+//! `Sock`-backend traffic on a real socket while leaving `IntraProc`/`Shm`
+//! routes on the zero-cost local path. The route cache, backend selection
+//! and metrics plumbing are transport-independent.
 
 use std::collections::{BTreeSet, HashMap};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -19,6 +31,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::channel::Channel;
 use crate::cluster::{Cluster, DeviceSet};
 use crate::data::Payload;
 use crate::metrics::Metrics;
@@ -28,7 +41,7 @@ use crate::metrics::Metrics;
 pub enum BackendKind {
     /// Overlapping device sets: zero-copy Arc move (≙ cudaIPC).
     IntraProc,
-    /// Same simulated node: one buffer copy (≙ NVLink NCCL).
+    /// Device sets on a common node: one buffer copy (≙ NVLink NCCL).
     Shm,
     /// Cross-node: buffer copy plus per-message latency (≙ RoCE/Gloo).
     Sock,
@@ -60,26 +73,241 @@ pub struct Message {
     pub src: Arc<str>,
     pub payload: Payload,
     pub backend: BackendKind,
+    /// Load weight carried end-to-end (channel-ingress endpoints feed it
+    /// into `Channel::put_weighted`; plain sends default to 1.0).
+    pub weight: f64,
+}
+
+/// Event consumed by a channel-ingress endpoint (see
+/// [`CommManager::register_ingress`]): either a data message to enqueue or
+/// a producer-done signal, in arrival order — Done travels the same pipe
+/// as Data so it can never overtake in-flight items.
+#[derive(Debug)]
+pub enum IngressEvent {
+    Data(Message),
+    Done(String),
+}
+
+/// Where an endpoint's traffic lands: a worker mailbox or a channel
+/// ingress. Cloning is sender-refcount only.
+#[derive(Clone)]
+pub enum EpSink {
+    Mail(Sender<Message>),
+    Ingress(Sender<IngressEvent>),
+}
+
+impl EpSink {
+    /// Push one data message; `Err(())` if the receiving side hung up.
+    pub(crate) fn send_msg(&self, msg: Message) -> std::result::Result<(), ()> {
+        match self {
+            EpSink::Mail(tx) => tx.send(msg).map_err(|_| ()),
+            EpSink::Ingress(tx) => tx.send(IngressEvent::Data(msg)).map_err(|_| ()),
+        }
+    }
+
+    /// Push a producer-done signal. A no-op for mailboxes (done signalling
+    /// only exists for channel-ingress endpoints).
+    pub(crate) fn send_done(&self, who: String) -> std::result::Result<(), ()> {
+        match self {
+            EpSink::Mail(_) => Ok(()),
+            EpSink::Ingress(tx) => tx.send(IngressEvent::Done(who)).map_err(|_| ()),
+        }
+    }
 }
 
 struct Endpoint {
-    tx: Sender<Message>,
+    sink: EpSink,
     devices: DeviceSet,
-    node: usize,
+    /// Every node this endpoint's device window touches (sorted, deduped).
+    /// Backend selection is per-pair node-set overlap — a window that
+    /// straddles nodes is *partially* local to each of them, so stamping
+    /// only the first device's node (the old behavior) mis-selected the
+    /// backend for every send involving such a window.
+    nodes: Vec<usize>,
+    /// Home node for wire addressing (first node of the window).
+    home: usize,
 }
 
-/// Resolved (src, dst) transport: everything `send` needs, precomputed.
-struct Route {
-    backend: BackendKind,
-    tx: Sender<Message>,
-    src: Arc<str>,
-    dst: Arc<str>,
-    metric: &'static str,
+/// Resolved (src, dst) transport route: everything `send` needs,
+/// precomputed. Fields are crate-visible so [`Transport`] implementations
+/// can consume them without accessors on the hot path.
+pub struct Route {
+    pub(crate) backend: BackendKind,
+    pub(crate) sink: EpSink,
+    pub(crate) src: Arc<str>,
+    pub(crate) dst: Arc<str>,
+    pub(crate) metric: &'static str,
+    /// Destination endpoint's home node (wire addressing only; backend
+    /// selection already happened from full node sets).
+    pub(crate) home: usize,
+}
+
+impl Route {
+    pub fn backend(&self) -> BackendKind {
+        self.backend
+    }
+
+    pub fn dst(&self) -> &str {
+        &self.dst
+    }
+}
+
+/// Read-only context handed to [`Transport`] methods: the pieces of the
+/// comm manager a backend may consult, without exposing the route cache.
+pub struct TransportEnv<'a> {
+    pub cluster: &'a Cluster,
+    pub metrics: &'a Metrics,
+}
+
+/// Pluggable byte mover behind the route cache.
+///
+/// Contract:
+/// * `deliver`/`broadcast` own metric recording (`route.metric`,
+///   `comm.bytes`, and for broadcast `comm.broadcast`) so per-backend
+///   accounting stays with the code that knows the real cost.
+/// * `IntraProc` routes must stay zero-copy and `Shm` routes single-copy
+///   regardless of backend — only `Sock` routes may leave the process.
+/// * `attach`/`detach` mirror endpoint registration so a remote backend
+///   can maintain its own name → sink dispatch table; in-proc backends
+///   need neither (the route carries the sink).
+/// * `send_done` must not overtake previously delivered data for the same
+///   (src, dst) pair — a wire backend orders it through the same stream.
+///
+/// Every method has a default implementation equal to the in-proc
+/// behavior, so `InProcTransport` is the zero-cost empty impl.
+pub trait Transport: Send + Sync {
+    fn name(&self) -> &'static str {
+        "inproc"
+    }
+
+    /// Whether `Sock` routes leave the process (drives driver-side ingress
+    /// wiring for cross-node edges).
+    fn is_remote(&self) -> bool {
+        false
+    }
+
+    fn attach(&self, _name: &str, _home: usize, _sink: &EpSink) -> Result<()> {
+        Ok(())
+    }
+
+    fn detach(&self, _name: &str) {}
+
+    fn deliver(
+        &self,
+        route: &Route,
+        payload: Payload,
+        weight: f64,
+        env: &TransportEnv<'_>,
+    ) -> Result<()> {
+        inproc_deliver(route, payload, weight, env)
+    }
+
+    fn broadcast(
+        &self,
+        routes: &[Arc<Route>],
+        payload: &Payload,
+        env: &TransportEnv<'_>,
+    ) -> Result<()> {
+        inproc_broadcast(routes, payload, env)
+    }
+
+    fn send_done(&self, route: &Route, who: &str) -> Result<()> {
+        route
+            .sink
+            .send_done(who.to_string())
+            .map_err(|_| anyhow!("endpoint {:?} hung up", &*route.dst))
+    }
+}
+
+/// The default in-process transport: all trait defaults, no state.
+pub struct InProcTransport;
+
+impl Transport for InProcTransport {}
+
+/// Transport the payload over an established route with in-proc backend
+/// semantics: Arc move / one copy / copy + simulated inter-node latency.
+pub(crate) fn inproc_deliver(
+    route: &Route,
+    payload: Payload,
+    weight: f64,
+    env: &TransportEnv<'_>,
+) -> Result<()> {
+    let t0 = Instant::now();
+    let bytes = payload.wire_bytes();
+    let delivered = match route.backend {
+        BackendKind::IntraProc => payload, // Arc move, zero copy
+        BackendKind::Shm => payload.deep_copy(),
+        BackendKind::Sock => {
+            let p = payload.deep_copy();
+            spin_for(env.cluster.config().internode_latency);
+            p
+        }
+    };
+    route
+        .sink
+        .send_msg(Message {
+            src: route.src.clone(),
+            payload: delivered,
+            backend: route.backend,
+            weight,
+        })
+        .map_err(|_| anyhow!("endpoint {:?} hung up", &*route.dst))?;
+    env.metrics.record_static(route.metric, t0.elapsed().as_secs_f64());
+    env.metrics.record_static("comm.bytes", bytes as f64);
+    Ok(())
+}
+
+/// Copy-once in-proc fan-out: memcpy-backed destinations (`Shm`/`Sock`)
+/// share a **single** deep copy (their payloads Arc-share the copied
+/// buffers — detached from the sender's, like one staging buffer fanned
+/// out), and the simulated inter-node latency is paid once for the whole
+/// collective (parallel NIC streams), not once per destination.
+pub(crate) fn inproc_broadcast(
+    routes: &[Arc<Route>],
+    payload: &Payload,
+    env: &TransportEnv<'_>,
+) -> Result<()> {
+    let bytes = payload.wire_bytes();
+    let collective_t0 = Instant::now();
+    let mut staged: Option<Payload> = None;
+    // Inter-node latency is paid once per collective; it is attributed
+    // to the *first* sock destination's timed sample so the
+    // `comm.send.sock` stream's sum stays comparable with `send()`
+    // (which pays it per message).
+    let mut latency_paid = false;
+    let m = env.metrics;
+    for route in routes {
+        let t0 = Instant::now();
+        let delivered = match route.backend {
+            BackendKind::IntraProc => payload.clone(),
+            BackendKind::Shm | BackendKind::Sock => {
+                if route.backend == BackendKind::Sock && !latency_paid {
+                    spin_for(env.cluster.config().internode_latency);
+                    latency_paid = true;
+                }
+                staged.get_or_insert_with(|| payload.deep_copy()).clone()
+            }
+        };
+        route
+            .sink
+            .send_msg(Message {
+                src: route.src.clone(),
+                payload: delivered,
+                backend: route.backend,
+                weight: 1.0,
+            })
+            .map_err(|_| anyhow!("endpoint {:?} hung up", &*route.dst))?;
+        m.record_static(route.metric, t0.elapsed().as_secs_f64());
+        m.record_static("comm.bytes", bytes as f64);
+    }
+    m.record_static("comm.broadcast", collective_t0.elapsed().as_secs_f64());
+    Ok(())
 }
 
 struct Inner {
     cluster: Cluster,
     metrics: Metrics,
+    transport: Arc<dyn Transport>,
     endpoints: Mutex<HashMap<String, Endpoint>>,
     /// Hot-path route cache: src -> dst -> route. Reads are lock-shared;
     /// writes only on first send over a pair or on unregister.
@@ -119,10 +347,21 @@ impl Mailbox {
 
 impl CommManager {
     pub fn new(cluster: Cluster, metrics: Metrics) -> CommManager {
+        CommManager::with_transport(cluster, metrics, Arc::new(InProcTransport))
+    }
+
+    /// Construct with an explicit byte mover (see [`Transport`]); `new`
+    /// uses the in-proc default.
+    pub fn with_transport(
+        cluster: Cluster,
+        metrics: Metrics,
+        transport: Arc<dyn Transport>,
+    ) -> CommManager {
         CommManager {
             inner: Arc::new(Inner {
                 cluster,
                 metrics,
+                transport,
                 endpoints: Mutex::new(HashMap::new()),
                 routes: RwLock::new(HashMap::new()),
                 connections: Mutex::new(BTreeSet::new()),
@@ -130,22 +369,94 @@ impl CommManager {
         }
     }
 
-    /// Register a worker endpoint; placement drives backend selection.
-    pub fn register(&self, name: &str, devices: DeviceSet) -> Result<Mailbox> {
-        let (tx, rx) = channel();
-        let node = devices.ids().first().map(|d| self.inner.cluster.node_of(*d)).unwrap_or(0);
+    pub fn transport_name(&self) -> &'static str {
+        self.inner.transport.name()
+    }
+
+    /// Whether `Sock` routes leave the process (see [`Transport::is_remote`]).
+    pub fn transport_is_remote(&self) -> bool {
+        self.inner.transport.is_remote()
+    }
+
+    /// Node set a device window touches (empty window pins to node 0, the
+    /// controller's home).
+    fn nodes_of(&self, devices: &DeviceSet) -> Vec<usize> {
+        let nodes = self.inner.cluster.nodes_of(devices);
+        if nodes.is_empty() {
+            vec![0]
+        } else {
+            nodes
+        }
+    }
+
+    fn insert_endpoint(&self, name: &str, devices: DeviceSet, sink: EpSink) -> Result<usize> {
+        let nodes = self.nodes_of(&devices);
+        let home = nodes[0];
         let mut eps = self.inner.endpoints.lock().unwrap();
         if eps.contains_key(name) {
             bail!("endpoint {name:?} already registered");
         }
-        eps.insert(name.to_string(), Endpoint { tx, devices, node });
+        self.inner.transport.attach(name, home, &sink)?;
+        eps.insert(name.to_string(), Endpoint { sink, devices, nodes, home });
+        Ok(home)
+    }
+
+    /// Register a worker endpoint; placement drives backend selection.
+    pub fn register(&self, name: &str, devices: DeviceSet) -> Result<Mailbox> {
+        let (tx, rx) = channel();
+        self.insert_endpoint(name, devices, EpSink::Mail(tx))?;
         Ok(Mailbox { name: name.to_string(), rx })
+    }
+
+    /// Register a **channel-ingress** endpoint: traffic addressed to
+    /// `name` is enqueued into `sink_channel` (weighted, in arrival
+    /// order), and producer-done signals forward to
+    /// [`Channel::producer_done`]. This is how a [`crate::channel::port::BoundPort`]
+    /// spans a remote route: the producer side ships frames to the
+    /// consumer node's ingress, and the consumer keeps reading its local
+    /// channel unchanged.
+    ///
+    /// `devices` should be the consuming stage's device window so backend
+    /// selection for producer → ingress matches producer → consumer. A
+    /// dedicated forwarder thread drains the ingress pipe; a bounded
+    /// channel exerts backpressure on that thread (the pipe in front of it
+    /// is an elastic network buffer), never on the transport's reader.
+    pub fn register_ingress(
+        &self,
+        name: &str,
+        devices: DeviceSet,
+        sink_channel: Channel,
+    ) -> Result<()> {
+        let (tx, rx) = channel::<IngressEvent>();
+        self.insert_endpoint(name, devices, EpSink::Ingress(tx))?;
+        let metrics = self.inner.metrics.clone();
+        std::thread::Builder::new()
+            .name(format!("ingress:{name}"))
+            .spawn(move || {
+                for ev in rx {
+                    match ev {
+                        IngressEvent::Data(msg) => {
+                            // A failed put means the channel closed or the
+                            // run was poisoned mid-flight — the item is
+                            // dropped with the run, not retried.
+                            if sink_channel.put_weighted(&msg.src, msg.payload, msg.weight).is_err()
+                            {
+                                metrics.record_static("comm.ingress.drop", 1.0);
+                            }
+                        }
+                        IngressEvent::Done(who) => sink_channel.producer_done(&who),
+                    }
+                }
+            })
+            .expect("spawn ingress forwarder");
+        Ok(())
     }
 
     /// Unregister and tear down all of this endpoint's connections and
     /// cached routes.
     pub fn unregister(&self, name: &str) {
         self.inner.endpoints.lock().unwrap().remove(name);
+        self.inner.transport.detach(name);
         {
             let mut routes = self.inner.routes.write().unwrap();
             routes.remove(name);
@@ -162,14 +473,17 @@ impl CommManager {
         }
     }
 
-    /// Decide the transport for a pair of registered endpoints.
+    /// Decide the transport backend for a pair of registered endpoints:
+    /// shared devices ⇒ `IntraProc`, any shared node ⇒ `Shm`, disjoint
+    /// node sets ⇒ `Sock`. Node-straddling windows are compared by their
+    /// **full** node sets, not a single stamped node.
     pub fn backend_between(&self, src: &str, dst: &str) -> Result<BackendKind> {
         let eps = self.inner.endpoints.lock().unwrap();
         let s = eps.get(src).ok_or_else(|| anyhow!("unknown src {src:?}"))?;
         let d = eps.get(dst).ok_or_else(|| anyhow!("unknown dst {dst:?}"))?;
         Ok(if s.devices.intersects(&d.devices) {
             BackendKind::IntraProc
-        } else if s.node == d.node {
+        } else if nodes_overlap(&s.nodes, &d.nodes) {
             BackendKind::Shm
         } else {
             BackendKind::Sock
@@ -204,16 +518,18 @@ impl CommManager {
             return Ok(r.clone());
         }
         let backend = self.backend_between(src, dst)?;
-        let tx = {
+        let (sink, home) = {
             let eps = self.inner.endpoints.lock().unwrap();
-            eps.get(dst).ok_or_else(|| anyhow!("unknown dst {dst:?}"))?.tx.clone()
+            let d = eps.get(dst).ok_or_else(|| anyhow!("unknown dst {dst:?}"))?;
+            (d.sink.clone(), d.home)
         };
         let route = Arc::new(Route {
             backend,
-            tx,
+            sink,
             src: Arc::from(src),
             dst: Arc::from(dst),
             metric: backend.send_metric(),
+            home,
         });
         cache.entry(src.to_string()).or_default().insert(dst.to_string(), route.clone());
         // Lazy connection establishment (the §3.5 connection manager),
@@ -227,28 +543,8 @@ impl CommManager {
         Ok(route)
     }
 
-    /// Transport the payload over an established route (backend semantics:
-    /// Arc move / one copy / copy + simulated inter-node latency).
-    fn deliver(&self, route: &Route, payload: Payload) -> Result<()> {
-        let t0 = Instant::now();
-        let bytes = payload.wire_bytes();
-        let delivered = match route.backend {
-            BackendKind::IntraProc => payload, // Arc move, zero copy
-            BackendKind::Shm => payload.deep_copy(),
-            BackendKind::Sock => {
-                let p = payload.deep_copy();
-                spin_for(self.inner.cluster.config().internode_latency);
-                p
-            }
-        };
-        route
-            .tx
-            .send(Message { src: route.src.clone(), payload: delivered, backend: route.backend })
-            .map_err(|_| anyhow!("endpoint {:?} hung up", &*route.dst))?;
-        let m = &self.inner.metrics;
-        m.record_static(route.metric, t0.elapsed().as_secs_f64());
-        m.record_static("comm.bytes", bytes as f64);
-        Ok(())
+    fn env(&self) -> TransportEnv<'_> {
+        TransportEnv { cluster: &self.inner.cluster, metrics: &self.inner.metrics }
     }
 
     /// Point-to-point send. Synchronous variant: the payload is handed to
@@ -256,53 +552,40 @@ impl CommManager {
     /// the caller not waiting on a reply channel — sends never block on the
     /// receiver here, mirroring eager RDMA writes).
     pub fn send(&self, src: &str, dst: &str, payload: Payload) -> Result<BackendKind> {
+        self.send_weighted(src, dst, payload, 1.0)
+    }
+
+    /// [`CommManager::send`] with an explicit load weight, carried through
+    /// to the destination (channel-ingress endpoints enqueue with it).
+    pub fn send_weighted(
+        &self,
+        src: &str,
+        dst: &str,
+        payload: Payload,
+        weight: f64,
+    ) -> Result<BackendKind> {
         let route = self.route(src, dst)?;
-        self.deliver(&route, payload)?;
+        self.inner.transport.deliver(&route, payload, weight, &self.env())?;
         Ok(route.backend)
     }
 
-    /// Collective broadcast from `src` to every destination.
-    ///
-    /// Copy-once fan-out: memcpy-backed destinations (`Shm`/`Sock`) share a
-    /// **single** deep copy (their payloads Arc-share the copied buffers —
-    /// detached from the sender's, like one staging buffer fanned out), and
-    /// the simulated inter-node latency is paid once for the whole
-    /// collective (parallel NIC streams), not once per destination.
+    /// Signal producer-done to a channel-ingress destination, ordered
+    /// after every prior send on the same (src, dst) pair. A no-op for
+    /// mailbox destinations.
+    pub fn send_done(&self, src: &str, dst: &str) -> Result<()> {
+        let route = self.route(src, dst)?;
+        self.inner.transport.send_done(&route, src)
+    }
+
+    /// Collective broadcast from `src` to every destination (copy-once
+    /// fan-out; see [`inproc_broadcast`] and the wire backend's
+    /// serialize-once remote extension).
     pub fn broadcast(&self, src: &str, dsts: &[&str], payload: &Payload) -> Result<()> {
         let mut routes = Vec::with_capacity(dsts.len());
         for d in dsts {
             routes.push(self.route(src, d)?);
         }
-        let bytes = payload.wire_bytes();
-        let collective_t0 = Instant::now();
-        let mut staged: Option<Payload> = None;
-        // Inter-node latency is paid once per collective; it is attributed
-        // to the *first* sock destination's timed sample so the
-        // `comm.send.sock` stream's sum stays comparable with `send()`
-        // (which pays it per message).
-        let mut latency_paid = false;
-        let m = &self.inner.metrics;
-        for route in &routes {
-            let t0 = Instant::now();
-            let delivered = match route.backend {
-                BackendKind::IntraProc => payload.clone(),
-                BackendKind::Shm | BackendKind::Sock => {
-                    if route.backend == BackendKind::Sock && !latency_paid {
-                        spin_for(self.inner.cluster.config().internode_latency);
-                        latency_paid = true;
-                    }
-                    staged.get_or_insert_with(|| payload.deep_copy()).clone()
-                }
-            };
-            route
-                .tx
-                .send(Message { src: route.src.clone(), payload: delivered, backend: route.backend })
-                .map_err(|_| anyhow!("endpoint {:?} hung up", &*route.dst))?;
-            m.record_static(route.metric, t0.elapsed().as_secs_f64());
-            m.record_static("comm.bytes", bytes as f64);
-        }
-        m.record_static("comm.broadcast", collective_t0.elapsed().as_secs_f64());
-        Ok(())
+        self.inner.transport.broadcast(&routes, payload, &self.env())
     }
 
     pub fn connection_count(&self) -> usize {
@@ -314,9 +597,22 @@ impl CommManager {
     }
 }
 
+/// Sorted node-set overlap test (both sides come sorted from `nodes_of`).
+fn nodes_overlap(a: &[usize], b: &[usize]) -> bool {
+    let (mut i, mut j) = (0, 0);
+    while i < a.len() && j < b.len() {
+        match a[i].cmp(&b[j]) {
+            std::cmp::Ordering::Equal => return true,
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+        }
+    }
+    false
+}
+
 /// Busy-wait for a short simulated latency (sleep has ~50µs granularity,
 /// too coarse for 25µs NIC latencies).
-fn spin_for(secs: f64) {
+pub(crate) fn spin_for(secs: f64) {
     let t0 = Instant::now();
     while t0.elapsed().as_secs_f64() < secs {
         std::hint::spin_loop();
@@ -352,6 +648,21 @@ mod tests {
     }
 
     #[test]
+    fn straddling_window_selects_backend_from_all_nodes() {
+        // Regression: an endpoint whose window spans nodes {0,1} used to be
+        // stamped with node 0 only, so pairing it with a node-1 endpoint
+        // mis-selected Sock. The node *sets* overlap ⇒ Shm.
+        let c = mgr(2, 2);
+        let _w = c.register("wide", DeviceSet::range(1, 2)).unwrap(); // devices 1,2 → nodes {0,1}
+        let _n1 = c.register("n1", DeviceSet::range(3, 1)).unwrap(); // node 1
+        let _n0 = c.register("n0", DeviceSet::range(0, 1)).unwrap(); // node 0
+        assert_eq!(c.backend_between("wide", "n1").unwrap(), BackendKind::Shm);
+        assert_eq!(c.backend_between("n1", "wide").unwrap(), BackendKind::Shm);
+        assert_eq!(c.backend_between("wide", "n0").unwrap(), BackendKind::Shm);
+        assert_eq!(c.backend_between("n0", "n1").unwrap(), BackendKind::Sock);
+    }
+
+    #[test]
     fn send_receive_roundtrip() {
         let c = mgr(1, 2);
         let _a = c.register("a", DeviceSet::range(0, 1)).unwrap();
@@ -361,6 +672,7 @@ mod tests {
         let msg = b.recv().unwrap();
         assert_eq!(&*msg.src, "a");
         assert_eq!(msg.backend, BackendKind::Shm);
+        assert_eq!(msg.weight, 1.0);
         assert_eq!(msg.payload.tensor("x").unwrap().to_f32().unwrap(), vec![1.0, 2.0]);
     }
 
@@ -430,5 +742,25 @@ mod tests {
         assert_eq!(c.connection_count(), 1);
         c.unregister("a");
         assert!(c.send("a", "d", Payload::new()).is_err(), "stale route purged with src");
+    }
+
+    #[test]
+    fn ingress_endpoint_feeds_channel_and_forwards_done() {
+        let c = mgr(1, 2);
+        let _a = c.register("a", DeviceSet::range(0, 1)).unwrap();
+        let ch = Channel::new("in");
+        ch.register_producer("a");
+        c.register_ingress("sink", DeviceSet::range(1, 1), ch.clone()).unwrap();
+        c.send_weighted("a", "sink", Payload::new().set_meta("i", 7i64), 3.0).unwrap();
+        let it = ch.get("consumer").expect("forwarded into the channel");
+        assert_eq!(it.payload.meta_i64("i"), Some(7));
+        assert_eq!(it.weight, 3.0, "weight carried through the ingress");
+        c.send_done("a", "sink").unwrap();
+        // Done travels the same pipe: the channel auto-closes shortly after.
+        let t0 = Instant::now();
+        while !ch.is_closed() && t0.elapsed() < Duration::from_secs(2) {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert!(ch.is_closed(), "ingress forwarded producer_done");
     }
 }

@@ -1,0 +1,687 @@
+//! Wire transport: TCP / Unix-domain-socket backend for `Sock` routes.
+//!
+//! Every simulated node gets one loopback listener; `Sock`-backend traffic
+//! (disjoint node sets) is framed and written to the destination node's
+//! socket, while `IntraProc`/`Shm` routes stay on the zero-cost in-proc
+//! path. This is the first *remote* [`Transport`]: the route cache, the
+//! backend selection and the send API are untouched — only where the bytes
+//! go changes.
+//!
+//! ## Frame format (all integers little-endian)
+//!
+//! ```text
+//! header  u32 magic "RLFW" | u8 version | u8 kind | u8 backend
+//!         u16 dst_len, dst | u16 src_len, src
+//! tail    f64 weight | u16 n_tensors
+//!         per tensor: u8 dtype | u8 ndim | u64 × ndim dims
+//!         u32 meta_len | u64 body_len
+//! body    meta JSON bytes ++ tensor bytes (in order)
+//! ```
+//!
+//! `body_len == meta_len + Σ tensor bytes == Payload::wire_bytes()` —
+//! the counting serializer sizes the frame exactly, so encoding is a
+//! single pass into one pre-sized buffer (no intermediate `String`s, no
+//! reallocation). `kind = Done` frames stop after the header: they carry a
+//! producer-done signal through the same stream as data, so done can never
+//! overtake in-flight items.
+//!
+//! ## Fan-out
+//!
+//! `broadcast` extends the copy-once discipline across the wire: local
+//! destinations share the one Arc-staged deep copy exactly as in-proc, and
+//! remote destinations share a **single serialized tail** (descriptor +
+//! body) — only the tiny per-destination header is re-encoded. The
+//! `comm.wire.serialize` metric counts serialization passes (one per
+//! broadcast, however many remote destinations).
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use super::p2p::{
+    inproc_deliver, BackendKind, EpSink, InProcTransport, Message, Route, Transport, TransportEnv,
+};
+use crate::cluster::Cluster;
+use crate::config::TransportConfig;
+use crate::data::{DType, Payload, Tensor};
+use crate::metrics::Metrics;
+use crate::util::json;
+
+const MAGIC: u32 = 0x524C_4657; // "RLFW"
+const VERSION: u8 = 1;
+const KIND_DATA: u8 = 0;
+const KIND_DONE: u8 = 1;
+
+/// Distinguishes per-process UDS socket paths across managers and runs.
+static SOCK_SALT: AtomicU64 = AtomicU64::new(0);
+
+fn backend_code(b: BackendKind) -> u8 {
+    match b {
+        BackendKind::IntraProc => 0,
+        BackendKind::Shm => 1,
+        BackendKind::Sock => 2,
+    }
+}
+
+fn backend_from_code(c: u8) -> Result<BackendKind> {
+    Ok(match c {
+        0 => BackendKind::IntraProc,
+        1 => BackendKind::Shm,
+        2 => BackendKind::Sock,
+        other => bail!("bad backend code {other}"),
+    })
+}
+
+/// Construct the transport a `[transport]` config section asks for.
+pub fn transport_from_config(
+    cfg: &TransportConfig,
+    cluster: &Cluster,
+    metrics: &Metrics,
+) -> Result<Arc<dyn Transport>> {
+    Ok(match cfg.backend.as_str() {
+        "inproc" => Arc::new(InProcTransport),
+        "tcp" => Arc::new(WireTransport::new(WireMode::Tcp, cluster, metrics.clone(), cfg)?),
+        "uds" => Arc::new(WireTransport::new(WireMode::Uds, cluster, metrics.clone(), cfg)?),
+        other => bail!("unknown transport backend {other:?} (expected inproc, tcp or uds)"),
+    })
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WireMode {
+    Tcp,
+    Uds,
+}
+
+/// One node's dialable address.
+#[derive(Debug, Clone)]
+enum NodeAddr {
+    Tcp(SocketAddr),
+    Uds(PathBuf),
+}
+
+/// A connected stream of either family.
+enum WireStream {
+    Tcp(TcpStream),
+    Uds(UnixStream),
+}
+
+impl Read for WireStream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            WireStream::Tcp(s) => s.read(buf),
+            WireStream::Uds(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for WireStream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            WireStream::Tcp(s) => s.write(buf),
+            WireStream::Uds(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            WireStream::Tcp(s) => s.flush(),
+            WireStream::Uds(s) => s.flush(),
+        }
+    }
+}
+
+enum WireListener {
+    Tcp(TcpListener),
+    Uds(UnixListener),
+}
+
+impl WireListener {
+    fn accept(&self) -> std::io::Result<WireStream> {
+        match self {
+            WireListener::Tcp(l) => l.accept().map(|(s, _)| WireStream::Tcp(s)),
+            WireListener::Uds(l) => l.accept().map(|(s, _)| WireStream::Uds(s)),
+        }
+    }
+}
+
+struct WireInner {
+    mode: WireMode,
+    connect_timeout: Duration,
+    /// Dial address per simulated node (index = node id).
+    addrs: Vec<NodeAddr>,
+    /// Endpoint dispatch for frames arriving on any of this process's
+    /// listeners (all nodes share one address space in the simulation).
+    sinks: Mutex<HashMap<String, EpSink>>,
+    /// Cached outbound connection per destination node. The per-conn mutex
+    /// serializes frame writes, which preserves per-(src,dst) ordering and
+    /// keeps Done frames behind the data they follow.
+    conns: Mutex<HashMap<usize, Arc<Mutex<WireStream>>>>,
+    metrics: Metrics,
+    shutdown: AtomicBool,
+}
+
+/// TCP/UDS loopback transport; see the module docs.
+pub struct WireTransport {
+    inner: Arc<WireInner>,
+}
+
+impl WireTransport {
+    pub fn new(
+        mode: WireMode,
+        cluster: &Cluster,
+        metrics: Metrics,
+        cfg: &TransportConfig,
+    ) -> Result<WireTransport> {
+        let nodes = cluster.num_nodes().max(1);
+        let salt = SOCK_SALT.fetch_add(1, Ordering::Relaxed);
+        let mut addrs = Vec::with_capacity(nodes);
+        let mut listeners = Vec::with_capacity(nodes);
+        for node in 0..nodes {
+            let (addr, listener) = match mode {
+                WireMode::Tcp => {
+                    let base: SocketAddr = cfg
+                        .listen
+                        .parse()
+                        .map_err(|e| anyhow!("transport.listen {:?}: {e}", cfg.listen))?;
+                    let mut bind = base;
+                    if base.port() != 0 {
+                        bind.set_port(base.port() + node as u16);
+                    }
+                    let l = TcpListener::bind(bind)?;
+                    (NodeAddr::Tcp(l.local_addr()?), WireListener::Tcp(l))
+                }
+                WireMode::Uds => {
+                    let path = std::env::temp_dir().join(format!(
+                        "rlinf-wire-{}-{salt}-{node}.sock",
+                        std::process::id()
+                    ));
+                    let _ = std::fs::remove_file(&path);
+                    let l = UnixListener::bind(&path)?;
+                    (NodeAddr::Uds(path), WireListener::Uds(l))
+                }
+            };
+            addrs.push(addr);
+            listeners.push(listener);
+        }
+        let inner = Arc::new(WireInner {
+            mode,
+            connect_timeout: Duration::from_millis(cfg.connect_timeout_ms.max(1)),
+            addrs,
+            sinks: Mutex::new(HashMap::new()),
+            conns: Mutex::new(HashMap::new()),
+            metrics,
+            shutdown: AtomicBool::new(false),
+        });
+        for (node, listener) in listeners.into_iter().enumerate() {
+            let inner = inner.clone();
+            std::thread::Builder::new()
+                .name(format!("wire-accept:{node}"))
+                .spawn(move || accept_loop(listener, inner))
+                .expect("spawn wire acceptor");
+        }
+        Ok(WireTransport { inner })
+    }
+
+    fn conn_to(&self, node: usize) -> Result<Arc<Mutex<WireStream>>> {
+        let mut conns = self.inner.conns.lock().unwrap();
+        if let Some(c) = conns.get(&node) {
+            return Ok(c.clone());
+        }
+        let addr = self
+            .inner
+            .addrs
+            .get(node)
+            .ok_or_else(|| anyhow!("no wire address for node {node}"))?;
+        let stream = match addr {
+            NodeAddr::Tcp(a) => {
+                let s = TcpStream::connect_timeout(a, self.inner.connect_timeout)?;
+                s.set_nodelay(true)?;
+                WireStream::Tcp(s)
+            }
+            NodeAddr::Uds(p) => WireStream::Uds(UnixStream::connect(p)?),
+        };
+        let conn = Arc::new(Mutex::new(stream));
+        conns.insert(node, conn.clone());
+        self.inner.metrics.record_static("comm.wire.connect", 1.0);
+        Ok(conn)
+    }
+
+    fn write_frame(&self, node: usize, parts: &[&[u8]]) -> Result<()> {
+        let conn = self.conn_to(node)?;
+        let mut s = conn.lock().unwrap();
+        for part in parts {
+            s.write_all(part).map_err(|e| anyhow!("wire write to node {node}: {e}"))?;
+        }
+        s.flush().ok();
+        Ok(())
+    }
+}
+
+impl Transport for WireTransport {
+    fn name(&self) -> &'static str {
+        match self.inner.mode {
+            WireMode::Tcp => "tcp",
+            WireMode::Uds => "uds",
+        }
+    }
+
+    fn is_remote(&self) -> bool {
+        true
+    }
+
+    fn attach(&self, name: &str, _home: usize, sink: &EpSink) -> Result<()> {
+        self.inner.sinks.lock().unwrap().insert(name.to_string(), sink.clone());
+        Ok(())
+    }
+
+    fn detach(&self, name: &str) {
+        self.inner.sinks.lock().unwrap().remove(name);
+    }
+
+    fn deliver(
+        &self,
+        route: &Route,
+        payload: Payload,
+        weight: f64,
+        env: &TransportEnv<'_>,
+    ) -> Result<()> {
+        if route.backend != BackendKind::Sock {
+            // Node-local routes keep the zero-cost in-proc path.
+            return inproc_deliver(route, payload, weight, env);
+        }
+        let t0 = Instant::now();
+        let bytes = payload.wire_bytes();
+        let header = encode_header(KIND_DATA, route.backend, &route.dst, &route.src);
+        let tail = encode_tail(&payload, weight);
+        env.metrics.record_static("comm.wire.serialize", 1.0);
+        self.write_frame(route.home, &[header.as_slice(), tail.as_slice()])?;
+        // No simulated latency spin: the socket round-trip is the real
+        // cost, timed into the same comm.send.sock stream.
+        env.metrics.record_static(route.metric, t0.elapsed().as_secs_f64());
+        env.metrics.record_static("comm.bytes", bytes as f64);
+        Ok(())
+    }
+
+    fn broadcast(
+        &self,
+        routes: &[Arc<Route>],
+        payload: &Payload,
+        env: &TransportEnv<'_>,
+    ) -> Result<()> {
+        let bytes = payload.wire_bytes();
+        let collective_t0 = Instant::now();
+        let mut staged: Option<Payload> = None;
+        let mut tail: Option<Vec<u8>> = None;
+        let m = env.metrics;
+        for route in routes {
+            let t0 = Instant::now();
+            match route.backend {
+                BackendKind::IntraProc | BackendKind::Shm => {
+                    let delivered = if route.backend == BackendKind::IntraProc {
+                        payload.clone()
+                    } else {
+                        staged.get_or_insert_with(|| payload.deep_copy()).clone()
+                    };
+                    route
+                        .sink
+                        .send_msg(Message {
+                            src: route.src.clone(),
+                            payload: delivered,
+                            backend: route.backend,
+                            weight: 1.0,
+                        })
+                        .map_err(|_| anyhow!("endpoint {:?} hung up", &*route.dst))?;
+                }
+                BackendKind::Sock => {
+                    // Serialize once; every remote destination shares the
+                    // tail and only the small header is re-encoded.
+                    let shared = tail.get_or_insert_with(|| {
+                        m.record_static("comm.wire.serialize", 1.0);
+                        encode_tail(payload, 1.0)
+                    });
+                    let header = encode_header(KIND_DATA, route.backend, &route.dst, &route.src);
+                    self.write_frame(route.home, &[header.as_slice(), shared.as_slice()])?;
+                }
+            }
+            m.record_static(route.metric, t0.elapsed().as_secs_f64());
+            m.record_static("comm.bytes", bytes as f64);
+        }
+        m.record_static("comm.broadcast", collective_t0.elapsed().as_secs_f64());
+        Ok(())
+    }
+
+    fn send_done(&self, route: &Route, who: &str) -> Result<()> {
+        if route.backend != BackendKind::Sock {
+            return route
+                .sink
+                .send_done(who.to_string())
+                .map_err(|_| anyhow!("endpoint {:?} hung up", &*route.dst));
+        }
+        // Through the same connection as data frames, so it lands after
+        // every previously written frame for this (src, dst).
+        let header = encode_header(KIND_DONE, route.backend, &route.dst, &route.src);
+        self.write_frame(route.home, &[header.as_slice()])
+    }
+}
+
+impl Drop for WireTransport {
+    fn drop(&mut self) {
+        self.inner.shutdown.store(true, Ordering::SeqCst);
+        // Wake every acceptor with a throwaway connection, then drop the
+        // outbound conns so peer readers see EOF and exit.
+        for addr in &self.inner.addrs {
+            match addr {
+                NodeAddr::Tcp(a) => {
+                    let _ = TcpStream::connect_timeout(a, Duration::from_millis(100));
+                }
+                NodeAddr::Uds(p) => {
+                    let _ = UnixStream::connect(p);
+                }
+            }
+        }
+        self.inner.conns.lock().unwrap().clear();
+        for addr in &self.inner.addrs {
+            if let NodeAddr::Uds(p) = addr {
+                let _ = std::fs::remove_file(p);
+            }
+        }
+    }
+}
+
+fn accept_loop(listener: WireListener, inner: Arc<WireInner>) {
+    loop {
+        match listener.accept() {
+            Ok(stream) => {
+                if inner.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                let inner = inner.clone();
+                let _ = std::thread::Builder::new()
+                    .name("wire-read".to_string())
+                    .spawn(move || read_loop(stream, inner));
+            }
+            Err(_) => return,
+        }
+    }
+}
+
+fn read_loop(mut stream: WireStream, inner: Arc<WireInner>) {
+    loop {
+        if inner.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        match read_frame(&mut stream) {
+            Ok(Some(frame)) => dispatch(frame, &inner),
+            Ok(None) => return, // clean EOF between frames
+            Err(_) => {
+                inner.metrics.record_static("comm.wire.bad_frame", 1.0);
+                return;
+            }
+        }
+    }
+}
+
+struct Frame {
+    kind: u8,
+    backend: BackendKind,
+    dst: String,
+    src: String,
+    weight: f64,
+    payload: Option<Payload>,
+}
+
+fn dispatch(frame: Frame, inner: &WireInner) {
+    let sink = inner.sinks.lock().unwrap().get(&frame.dst).cloned();
+    let Some(sink) = sink else {
+        inner.metrics.record_static("comm.wire.unknown_dst", 1.0);
+        return;
+    };
+    let ok = match frame.kind {
+        KIND_DONE => sink.send_done(frame.src).is_ok(),
+        _ => sink
+            .send_msg(Message {
+                src: Arc::from(frame.src.as_str()),
+                payload: frame.payload.unwrap_or_default(),
+                backend: frame.backend,
+                weight: frame.weight,
+            })
+            .is_ok(),
+    };
+    if !ok {
+        inner.metrics.record_static("comm.wire.drop", 1.0);
+    }
+}
+
+// ---- frame encode ----------------------------------------------------
+
+/// Per-destination frame prefix: magic, version, kind, backend, dst, src.
+fn encode_header(kind: u8, backend: BackendKind, dst: &str, src: &str) -> Vec<u8> {
+    let mut out = Vec::with_capacity(4 + 3 + 2 + dst.len() + 2 + src.len());
+    out.extend_from_slice(&MAGIC.to_le_bytes());
+    out.push(VERSION);
+    out.push(kind);
+    out.push(backend_code(backend));
+    out.extend_from_slice(&(dst.len() as u16).to_le_bytes());
+    out.extend_from_slice(dst.as_bytes());
+    out.extend_from_slice(&(src.len() as u16).to_le_bytes());
+    out.extend_from_slice(src.as_bytes());
+    out
+}
+
+/// Destination-independent frame remainder: weight, tensor descriptors,
+/// meta/body lengths and the body itself. Sized exactly up front (the
+/// counting serializer gives `meta_len` without rendering), then filled in
+/// one pass — encoding is alloc-exact and copy-once.
+fn encode_tail(payload: &Payload, weight: f64) -> Vec<u8> {
+    let meta_len = payload.meta.encoded_len();
+    let tensor_bytes: usize = payload.tensors.iter().map(Tensor::byte_len).sum();
+    let body_len = meta_len + tensor_bytes;
+    let descr: usize = payload.tensors.iter().map(|t| 2 + 8 * t.shape.len()).sum();
+    let mut out = Vec::with_capacity(8 + 2 + descr + 4 + 8 + body_len);
+    out.extend_from_slice(&weight.to_bits().to_le_bytes());
+    out.extend_from_slice(&(payload.tensors.len() as u16).to_le_bytes());
+    for t in &payload.tensors {
+        out.push(t.dtype.code());
+        out.push(t.shape.len() as u8);
+        for d in &t.shape {
+            out.extend_from_slice(&(*d as u64).to_le_bytes());
+        }
+    }
+    out.extend_from_slice(&(meta_len as u32).to_le_bytes());
+    out.extend_from_slice(&(body_len as u64).to_le_bytes());
+    payload.meta.append_json(&mut out);
+    for t in &payload.tensors {
+        out.extend_from_slice(t.bytes());
+    }
+    out
+}
+
+/// Encode a complete data frame (tests + single sends).
+pub fn encode_data_frame(dst: &str, src: &str, payload: &Payload, weight: f64) -> Vec<u8> {
+    let mut f = encode_header(KIND_DATA, BackendKind::Sock, dst, src);
+    f.extend_from_slice(&encode_tail(payload, weight));
+    f
+}
+
+// ---- frame decode ----------------------------------------------------
+
+fn read_exact_or_eof(r: &mut impl Read, buf: &mut [u8]) -> Result<bool> {
+    let mut got = 0;
+    while got < buf.len() {
+        match r.read(&mut buf[got..]) {
+            Ok(0) => {
+                if got == 0 {
+                    return Ok(false); // clean EOF on a frame boundary
+                }
+                bail!("unexpected EOF mid-frame");
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(true)
+}
+
+fn read_u16(r: &mut impl Read) -> Result<u16> {
+    let mut b = [0u8; 2];
+    r.read_exact(&mut b)?;
+    Ok(u16::from_le_bytes(b))
+}
+
+fn read_str(r: &mut impl Read) -> Result<String> {
+    let len = read_u16(r)? as usize;
+    let mut b = vec![0u8; len];
+    r.read_exact(&mut b)?;
+    String::from_utf8(b).map_err(|e| anyhow!("non-utf8 name on the wire: {e}"))
+}
+
+/// Decode one frame; `None` on clean EOF at a frame boundary.
+fn read_frame(r: &mut impl Read) -> Result<Option<Frame>> {
+    let mut magic = [0u8; 4];
+    if !read_exact_or_eof(r, &mut magic)? {
+        return Ok(None);
+    }
+    if u32::from_le_bytes(magic) != MAGIC {
+        bail!("bad frame magic");
+    }
+    let mut hdr = [0u8; 3];
+    r.read_exact(&mut hdr)?;
+    let (version, kind) = (hdr[0], hdr[1]);
+    if version != VERSION {
+        bail!("unsupported frame version {version}");
+    }
+    let backend = backend_from_code(hdr[2])?;
+    let dst = read_str(r)?;
+    let src = read_str(r)?;
+    if kind == KIND_DONE {
+        return Ok(Some(Frame { kind, backend, dst, src, weight: 0.0, payload: None }));
+    }
+    let mut w = [0u8; 8];
+    r.read_exact(&mut w)?;
+    let weight = f64::from_bits(u64::from_le_bytes(w));
+    let n_tensors = read_u16(r)? as usize;
+    let mut descrs = Vec::with_capacity(n_tensors);
+    for _ in 0..n_tensors {
+        let mut dh = [0u8; 2];
+        r.read_exact(&mut dh)?;
+        let dtype = DType::from_code(dh[0])?;
+        let mut shape = Vec::with_capacity(dh[1] as usize);
+        for _ in 0..dh[1] {
+            let mut d = [0u8; 8];
+            r.read_exact(&mut d)?;
+            shape.push(u64::from_le_bytes(d) as usize);
+        }
+        descrs.push((dtype, shape));
+    }
+    let mut m = [0u8; 4];
+    r.read_exact(&mut m)?;
+    let meta_len = u32::from_le_bytes(m) as usize;
+    let mut bl = [0u8; 8];
+    r.read_exact(&mut bl)?;
+    let body_len = u64::from_le_bytes(bl) as usize;
+    let tensor_bytes: usize =
+        descrs.iter().map(|(dt, sh)| sh.iter().product::<usize>() * dt.size()).sum();
+    if body_len != meta_len + tensor_bytes {
+        bail!("frame body_len {body_len} != meta {meta_len} + tensors {tensor_bytes}");
+    }
+    let mut body = vec![0u8; body_len];
+    r.read_exact(&mut body)?;
+    let meta_str = std::str::from_utf8(&body[..meta_len])?;
+    let meta = json::parse(meta_str)?;
+    let mut tensors = Vec::with_capacity(n_tensors);
+    let mut off = meta_len;
+    for (dtype, shape) in descrs {
+        let n = shape.iter().product::<usize>() * dtype.size();
+        let t = Tensor::from_bytes(dtype, shape, body[off..off + n].to_vec())?;
+        off += n;
+        tensors.push(t);
+    }
+    Ok(Some(Frame {
+        kind,
+        backend,
+        dst,
+        src,
+        weight,
+        payload: Some(Payload { meta, tensors }),
+    }))
+}
+
+/// Decode a complete frame from a byte slice (tests).
+pub fn decode_frame_bytes(bytes: &[u8]) -> Result<(String, String, Payload, f64)> {
+    let mut cur = bytes;
+    let frame = read_frame(&mut cur)?.ok_or_else(|| anyhow!("empty frame"))?;
+    if !cur.is_empty() {
+        bail!("{} trailing bytes after frame", cur.len());
+    }
+    Ok((frame.dst, frame.src, frame.payload.unwrap_or_default(), frame.weight))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_roundtrips_and_body_len_is_wire_bytes() {
+        let p = Payload::from_named(vec![
+            ("obs", Tensor::from_f32(vec![2, 3], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap()),
+            ("act", Tensor::from_i32(vec![2], &[7, -8]).unwrap()),
+        ])
+        .set_meta("iter", 5i64)
+        .set_meta("tag", "a\"b\n");
+        let frame = encode_data_frame("flow:train/0", "flow:gen/1", &p, 2.5);
+        let (dst, src, got, weight) = decode_frame_bytes(&frame).unwrap();
+        assert_eq!(dst, "flow:train/0");
+        assert_eq!(src, "flow:gen/1");
+        assert_eq!(weight, 2.5);
+        assert_eq!(got.meta, p.meta);
+        assert_eq!(got.tensors.len(), 2);
+        let obs = got.tensor("obs").unwrap().to_f32().unwrap();
+        assert_eq!(obs, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(got.tensor("act").unwrap().to_i32().unwrap(), vec![7, -8]);
+        // The framing-equality contract: the body is exactly wire_bytes.
+        let tail = &frame[frame.len() - p.wire_bytes() - 8..][..8];
+        let body_len = u64::from_le_bytes(tail.try_into().unwrap());
+        assert_eq!(body_len as usize, p.wire_bytes());
+    }
+
+    #[test]
+    fn done_frame_roundtrips() {
+        let header = encode_header(KIND_DONE, BackendKind::Sock, "ingress", "gen/0");
+        let mut cur = header.as_slice();
+        let f = read_frame(&mut cur).unwrap().unwrap();
+        assert_eq!(f.kind, KIND_DONE);
+        assert_eq!(f.dst, "ingress");
+        assert_eq!(f.src, "gen/0");
+        assert!(f.payload.is_none());
+    }
+
+    #[test]
+    fn corrupt_frames_rejected() {
+        let p = Payload::new().set_meta("x", 1i64);
+        let mut frame = encode_data_frame("d", "s", &p, 1.0);
+        frame[0] ^= 0xFF; // magic
+        assert!(decode_frame_bytes(&frame).is_err());
+        let mut frame = encode_data_frame("d", "s", &p, 1.0);
+        frame[4] = 99; // version
+        assert!(decode_frame_bytes(&frame).is_err());
+        let frame = encode_data_frame("d", "s", &p, 1.0);
+        assert!(decode_frame_bytes(&frame[..frame.len() - 1]).is_err(), "truncated body");
+    }
+
+    #[test]
+    fn empty_payload_frames() {
+        let p = Payload::new();
+        let frame = encode_data_frame("d", "s", &p, 1.0);
+        let (_, _, got, _) = decode_frame_bytes(&frame).unwrap();
+        assert_eq!(got.meta, p.meta);
+        assert!(got.tensors.is_empty());
+    }
+}

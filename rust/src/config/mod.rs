@@ -200,6 +200,33 @@ impl Default for FaultConfig {
     }
 }
 
+/// Data-plane transport selection (`[transport]`): which byte mover backs
+/// `Sock` routes in the comm manager. `"inproc"` (default) keeps the
+/// simulated memcpy + latency path; `"tcp"`/`"uds"` move cross-node
+/// traffic over a real loopback socket per simulated node (see
+/// `crate::comm::wire`).
+#[derive(Debug, Clone)]
+pub struct TransportConfig {
+    /// `"inproc"` | `"tcp"` | `"uds"`.
+    pub backend: String,
+    /// TCP listen address template. Port 0 picks an ephemeral port per
+    /// node; a fixed port `p` binds node `i` to `p + i`. Ignored by the
+    /// `uds` backend (it binds per-node sockets under the temp dir).
+    pub listen: String,
+    /// Dial timeout (ms) for establishing a wire connection.
+    pub connect_timeout_ms: u64,
+}
+
+impl Default for TransportConfig {
+    fn default() -> Self {
+        TransportConfig {
+            backend: "inproc".to_string(),
+            listen: "127.0.0.1:0".to_string(),
+            connect_timeout_ms: 1000,
+        }
+    }
+}
+
 /// Static-analysis policy (`[analyze]`): whether the `flow::analyze`
 /// diagnostics engine gates launch/admission, and per-code overrides.
 /// A code may appear in at most one of the three lists.
@@ -262,6 +289,7 @@ pub struct RunConfig {
     pub supervisor: SupervisorConfig,
     pub fault: FaultConfig,
     pub analyze: AnalyzeConfig,
+    pub transport: TransportConfig,
     pub embodied: EmbodiedConfig,
 }
 
@@ -279,6 +307,7 @@ impl Default for RunConfig {
             supervisor: SupervisorConfig::default(),
             fault: FaultConfig::default(),
             analyze: AnalyzeConfig::default(),
+            transport: TransportConfig::default(),
             embodied: EmbodiedConfig::default(),
         }
     }
@@ -397,6 +426,21 @@ impl RunConfig {
             }
         }
 
+        if let Some(s) = v.get_path("transport.backend").and_then(Value::as_str) {
+            c.transport.backend = s.to_string();
+        }
+        if let Some(s) = v.get_path("transport.listen").and_then(Value::as_str) {
+            c.transport.listen = s.to_string();
+        }
+        // Explicit (not get_num!): a negative timeout must error, not wrap
+        // (same convention as sched.poll_ms above).
+        if let Some(x) = v.get_path("transport.connect_timeout_ms").and_then(Value::as_i64) {
+            if x < 0 {
+                bail!("transport.connect_timeout_ms must not be negative");
+            }
+            c.transport.connect_timeout_ms = x as u64;
+        }
+
         get_num!(v, "embodied.num_envs", c.embodied.num_envs, as_usize);
         get_num!(v, "embodied.horizon", c.embodied.horizon, as_usize);
         if let Some(s) = v.get_path("embodied.env_kind").and_then(Value::as_str) {
@@ -447,6 +491,18 @@ impl RunConfig {
         }
         if self.fault.heartbeat_ms == 0 {
             bail!("fault.heartbeat_ms must be positive");
+        }
+        match self.transport.backend.as_str() {
+            "inproc" | "tcp" | "uds" => {}
+            other => bail!("transport.backend {other:?} (expected inproc, tcp or uds)"),
+        }
+        if self.transport.backend == "tcp"
+            && self.transport.listen.parse::<std::net::SocketAddr>().is_err()
+        {
+            bail!("transport.listen {:?} is not a socket address", self.transport.listen);
+        }
+        if self.transport.connect_timeout_ms == 0 {
+            bail!("transport.connect_timeout_ms must be positive");
         }
         let mut seen = std::collections::BTreeSet::new();
         for (list, name) in [
@@ -553,6 +609,30 @@ mod tests {
         assert!(RunConfig::from_value(&v).is_err(), "a code may appear in one list only");
         let v = parse_toml("[analyze]\nallow = [1]").unwrap();
         assert!(RunConfig::from_value(&v).is_err(), "codes must be strings");
+    }
+
+    #[test]
+    fn transport_knobs_parsed_and_validated() {
+        let c = RunConfig::default();
+        assert_eq!(c.transport.backend, "inproc");
+        assert_eq!(c.transport.listen, "127.0.0.1:0");
+        assert_eq!(c.transport.connect_timeout_ms, 1000);
+        let v = parse_toml(
+            "[transport]\nbackend = tcp\nlisten = \"127.0.0.1:9400\"\nconnect_timeout_ms = 250\n",
+        )
+        .unwrap();
+        let c = RunConfig::from_value(&v).unwrap();
+        assert_eq!(c.transport.backend, "tcp");
+        assert_eq!(c.transport.listen, "127.0.0.1:9400");
+        assert_eq!(c.transport.connect_timeout_ms, 250);
+        let v = parse_toml("[transport]\nbackend = carrier-pigeon").unwrap();
+        assert!(RunConfig::from_value(&v).is_err(), "unknown backend rejected");
+        let v = parse_toml("[transport]\nbackend = tcp\nlisten = nowhere").unwrap();
+        assert!(RunConfig::from_value(&v).is_err(), "unparsable listen addr rejected");
+        let v = parse_toml("[transport]\nconnect_timeout_ms = -1").unwrap();
+        assert!(RunConfig::from_value(&v).is_err(), "negative timeout must error, not wrap");
+        let v = parse_toml("[transport]\nbackend = uds\nlisten = nowhere").unwrap();
+        assert!(RunConfig::from_value(&v).is_ok(), "uds ignores the listen addr");
     }
 
     #[test]

@@ -37,6 +37,24 @@ impl DType {
             other => bail!("unsupported dtype {other:?}"),
         })
     }
+
+    /// One-byte wire code (frame headers of the wire transport).
+    pub fn code(self) -> u8 {
+        match self {
+            DType::F32 => 0,
+            DType::I32 => 1,
+            DType::U32 => 2,
+        }
+    }
+
+    pub fn from_code(c: u8) -> Result<DType> {
+        Ok(match c {
+            0 => DType::F32,
+            1 => DType::I32,
+            2 => DType::U32,
+            other => bail!("unsupported dtype code {other}"),
+        })
+    }
 }
 
 /// An n-dimensional host tensor with shared storage.

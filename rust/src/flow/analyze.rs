@@ -18,6 +18,7 @@
 //! | FA006 | warn     | fault-policy sanity (deadline vs heartbeat, zero-backoff restart storm) |
 //! | FA007 | warn     | dead stage: no edge ever touches it |
 //! | FA008 | warn     | pump coverage: several pumps contend for one channel |
+//! | FA009 | warn     | single-rank stage whose device demand must straddle a node boundary |
 //!
 //! Three call sites wire the analyzer in:
 //! [`FlowDriver::launch_with`](super::FlowDriver) denies launches on
@@ -33,9 +34,9 @@ use anyhow::{bail, Result};
 
 use super::manifest::FlowManifest;
 use super::registry::StageRegistry;
-use super::spec::{EndpointSpec, FlowSpec};
+use super::spec::{EndpointSpec, FlowSpec, RankShape};
 use super::supervisor::AdmitReq;
-use crate::config::{AnalyzeConfig, FaultConfig, SupervisorConfig};
+use crate::config::{AnalyzeConfig, ClusterConfig, FaultConfig, SupervisorConfig};
 use crate::util::json::Value;
 
 /// Diagnostic severity. Only `Error` findings deny a launch/admission;
@@ -180,6 +181,9 @@ pub struct AnalyzeCtx {
     /// Effective `[fault]` policy; enables the replay-safety and
     /// fault-sanity rules (unknowable from a bare spec).
     pub fault: Option<FaultConfig>,
+    /// Cluster topology; enables the node-straddle rule (`FA009`), which
+    /// needs to know where node boundaries fall.
+    pub cluster: Option<ClusterConfig>,
 }
 
 impl AnalyzeCtx {
@@ -211,6 +215,7 @@ pub fn analyze_spec(spec: &FlowSpec, ctx: &AnalyzeCtx) -> AnalyzeReport {
     fault_sanity(spec, ctx, &mut r);
     dead_stages(spec, ctx, &mut r);
     pump_coverage(spec, ctx, &mut r);
+    node_straddle(spec, ctx, &mut r);
     r
 }
 
@@ -540,6 +545,35 @@ fn pump_coverage(spec: &FlowSpec, ctx: &AnalyzeCtx, r: &mut AnalyzeReport) {
     }
 }
 
+/// `FA009` — node-straddling single rank. A `single`-shape stage runs one
+/// rank over one contiguous device window; an explicit demand wider than a
+/// node means that window *must* cross a node boundary, so the rank's
+/// intra-stage traffic rides the slowest backend and — under a wire
+/// transport — every placement-derived endpoint spans nodes. Usually the
+/// intent was `per_device` ranks or a per-node demand; warn, since the
+/// comm layer can carry it (backend selection is node-set-aware).
+fn node_straddle(spec: &FlowSpec, ctx: &AnalyzeCtx, r: &mut AnalyzeReport) {
+    let Some(cl) = &ctx.cluster else { return };
+    if cl.nodes < 2 {
+        return;
+    }
+    for s in &spec.stages {
+        let Some(d) = s.demand.explicit else { continue };
+        if s.shape == RankShape::Single && d > cl.devices_per_node {
+            r.push(Diagnostic::warn(
+                "FA009",
+                ctx.span(&spec.name, &format!("[[stage]] {:?}.devices", s.name)),
+                format!(
+                    "single rank wants {d} devices but nodes hold {} each: its window must \
+                     straddle a node boundary, putting intra-rank traffic on the cross-node \
+                     backend — shard the stage (shape = \"per_device\") or cap devices at {}",
+                    cl.devices_per_node, cl.devices_per_node,
+                ),
+            ));
+        }
+    }
+}
+
 /// Analyze a manifest end-to-end, collecting **all** diagnostics in one
 /// pass: method-schema violations, stage/pump kind resolution failures,
 /// and launcher-config errors become `FA000` findings (instead of
@@ -583,6 +617,7 @@ pub fn analyze_manifest(m: &FlowManifest, reg: &StageRegistry) -> AnalyzeReport 
                 let ctx = AnalyzeCtx {
                     origin: Some(m.origin.clone()),
                     fault: cfg.as_ref().map(|c| c.fault.clone()),
+                    cluster: cfg.as_ref().map(|c| c.cluster.clone()),
                 };
                 r.extend(analyze_spec(&spec, &ctx));
             }
@@ -839,7 +874,7 @@ mod tests {
         );
         let r = analyze_spec(&spec, &AnalyzeCtx::default());
         assert!(r.is_clean(), "no [fault] context, no FA004: {}", r.render());
-        let ctx = AnalyzeCtx { origin: None, fault: Some(FaultConfig::default()) };
+        let ctx = AnalyzeCtx { fault: Some(FaultConfig::default()), ..AnalyzeCtx::default() };
         let r = analyze_spec(&spec, &ctx);
         assert_eq!(codes(&r), vec!["FA004"], "{}", r.render());
 
@@ -852,7 +887,8 @@ mod tests {
         let spec = FlowSpec::new("t")
             .stage(nop("a"))
             .edge(Edge::new("x").produced_by_driver().consumed_by("a", "m"));
-        let r = analyze_spec(&spec, &AnalyzeCtx { origin: None, fault: Some(storm) });
+        let r =
+            analyze_spec(&spec, &AnalyzeCtx { fault: Some(storm), ..AnalyzeCtx::default() });
         assert_eq!(codes(&r), vec!["FA006", "FA006"], "{}", r.render());
     }
 
@@ -883,6 +919,33 @@ mod tests {
             .pump("res", "o2");
         let r = analyze_spec(&spec, &AnalyzeCtx::default());
         assert_eq!(codes(&r), vec!["FA008"], "{}", r.render());
+    }
+
+    #[test]
+    fn node_straddling_single_rank_is_fa009() {
+        use crate::config::ClusterConfig;
+        let mk = |wide: bool| {
+            let trainer =
+                if wide { nop("train").single_rank() } else { nop("train").ranks_per_device() };
+            FlowSpec::new("t")
+                .stage(trainer.devices(4))
+                .edge(Edge::new("x").produced_by_driver().consumed_by("train", "m"))
+        };
+        let two_nodes = ClusterConfig { nodes: 2, devices_per_node: 2, ..Default::default() };
+        let ctx = AnalyzeCtx { cluster: Some(two_nodes.clone()), ..AnalyzeCtx::default() };
+        let r = analyze_spec(&mk(true), &ctx);
+        assert_eq!(codes(&r), vec!["FA009"], "{}", r.render());
+        assert_eq!(r.errors(), 0, "FA009 is a warning");
+        // Sharded ranks fit one per device: clean.
+        let r = analyze_spec(&mk(false), &ctx);
+        assert!(r.is_clean(), "{}", r.render());
+        // No cluster context, or a single node: the rule cannot fire.
+        let r = analyze_spec(&mk(true), &AnalyzeCtx::default());
+        assert!(r.is_clean(), "{}", r.render());
+        let one = ClusterConfig { nodes: 1, devices_per_node: 8, ..Default::default() };
+        let r =
+            analyze_spec(&mk(true), &AnalyzeCtx { cluster: Some(one), ..AnalyzeCtx::default() });
+        assert!(r.is_clean(), "{}", r.render());
     }
 
     #[test]

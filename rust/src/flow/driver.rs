@@ -26,8 +26,9 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Context, Result};
 
 use super::spec::{EndpointSpec, FlowGraphInfo, FlowSpec, RankShape, StageFactory};
-use crate::channel::{BoundPort, Dequeue, Item, LockCounters};
+use crate::channel::{BoundPort, Dequeue, Item, LockCounters, WireHop};
 use crate::cluster::DeviceSet;
+use crate::comm::CommManager;
 use crate::config::{AnalyzeConfig, FaultConfig, PlacementMode};
 use crate::data::Payload;
 use crate::sched::{EdgeSample, FlowProfile, ProfileDb, ProfileStore, SchedProblem, Scheduler, StageSample};
@@ -245,7 +246,13 @@ impl FlowDriver {
         // `[analyze]` policy says otherwise. Spec-level only — the union
         // rules run at supervisor admission.
         if opts.analyze.enabled {
-            let mut report = super::analyze::analyze_spec(&spec, &Default::default());
+            // Topology-aware rules (FA009 node straddling) see the real
+            // cluster shape the flow is about to launch on.
+            let ctx = super::analyze::AnalyzeCtx {
+                cluster: Some(services.cluster.config().clone()),
+                ..Default::default()
+            };
+            let mut report = super::analyze::analyze_spec(&spec, &ctx);
             report.apply(&opts.analyze);
             report
                 .deny()
@@ -520,11 +527,50 @@ impl FlowDriver {
 
     /// Open a new run: create run-scoped channels for every edge, register
     /// producers, and bind ports into the stage tables.
+    ///
+    /// Under a **remote transport** (`[transport] backend = "tcp"|"uds"`),
+    /// edges whose producer and consumer stages occupy disjoint node sets
+    /// get a wire hop: a comm *ingress* endpoint is registered on the
+    /// consumer's device window to feed the channel, and the producer side
+    /// is bound to a [`BoundPort::with_hop`] port that ships frames
+    /// through the [`CommManager`]'s `Sock` route instead of touching the
+    /// local queue. Node-local edges keep the plain in-proc port — the
+    /// fast path is unchanged.
     pub fn begin(&self) -> Result<FlowRun<'_>> {
         let seq = self.run_seq.fetch_add(1, Ordering::Relaxed) + 1;
         for g in &self.groups {
             g.ports().clear();
         }
+        let remote = self.services.comm.transport_is_remote();
+        // Union node set of every stage's rank placements (empty windows
+        // pin to node 0, the controller's home — same rule as comm).
+        let stage_nodes: Vec<Vec<usize>> = if remote {
+            self.plans
+                .iter()
+                .map(|p| {
+                    let mut ns: Vec<usize> = p
+                        .placements
+                        .iter()
+                        .flat_map(|d| self.services.cluster.nodes_of(d))
+                        .collect();
+                    ns.sort_unstable();
+                    ns.dedup();
+                    if ns.is_empty() {
+                        ns.push(0);
+                    }
+                    ns
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
+        let ep_nodes = |ep: &Endpoint| -> Vec<usize> {
+            match ep {
+                Endpoint::Driver => vec![0],
+                Endpoint::Stage { idx, .. } => stage_nodes[*idx].clone(),
+            }
+        };
+        let mut wire_eps = Vec::new();
         let mut ports = HashMap::new();
         for e in &self.edges {
             // Physical names carry the flow scope so concurrent flows with
@@ -555,22 +601,87 @@ impl FlowDriver {
                             && monitor.scope_poisoned(&scope))
                 }));
             }
-            let port = BoundPort::new(ch.clone(), e.discipline, e.granularity);
+            let local = BoundPort::new(ch.clone(), e.discipline, e.granularity);
+            // Wire hop: producer and consumer node sets disjoint under a
+            // remote transport. The ingress carries the consumer's device
+            // window so producer→ingress backend selection matches
+            // producer→consumer (always `Sock` here, by construction).
+            let mut driver_alias = None;
+            let hop_port = if remote {
+                let pn = ep_nodes(&e.producer);
+                let cn = ep_nodes(&e.consumer);
+                if pn.iter().any(|n| cn.contains(n)) {
+                    None
+                } else {
+                    let ingress = format!("{physical}!ingress");
+                    let cons_devices = match &e.consumer {
+                        // Empty window pins the ingress to node 0.
+                        Endpoint::Driver => DeviceSet::default(),
+                        Endpoint::Stage { idx, .. } => DeviceSet::new(
+                            self.plans[*idx]
+                                .placements
+                                .iter()
+                                .flat_map(|p| p.ids().iter().copied())
+                                .collect(),
+                        ),
+                    };
+                    self.services.comm.register_ingress(&ingress, cons_devices, ch.clone())?;
+                    wire_eps.push(ingress.clone());
+                    let src_alias = if matches!(e.producer, Endpoint::Driver) {
+                        // The driver has no comm endpoint: register one on
+                        // node 0 per produced remote edge, and rename its
+                        // sends so the wire src matches a routable name.
+                        let alias = format!("{}driver@{seq}:{}", self.scope, e.channel);
+                        drop(self.services.comm.register(&alias, DeviceSet::default())?);
+                        wire_eps.push(alias.clone());
+                        driver_alias = Some(alias.clone());
+                        Some((DRIVER_ENDPOINT.to_string(), alias))
+                    } else {
+                        None
+                    };
+                    let hop = WireHop {
+                        comm: self.services.comm.clone(),
+                        dst: ingress,
+                        src_alias,
+                    };
+                    Some(BoundPort::with_hop(ch.clone(), e.discipline, e.granularity, hop))
+                }
+            } else {
+                None
+            };
             match &e.producer {
-                Endpoint::Driver => ch.register_producer(DRIVER_ENDPOINT),
+                Endpoint::Driver => {
+                    // Over a hop, data and Done frames arrive at the
+                    // ingress under the alias — register that name so the
+                    // channel's auto-close bookkeeping matches the wire.
+                    match &driver_alias {
+                        Some(alias) => ch.register_producer(alias),
+                        None => ch.register_producer(DRIVER_ENDPOINT),
+                    }
+                }
                 Endpoint::Stage { idx, port: pname, .. } => {
                     let g = &self.groups[*idx];
                     for r in 0..g.n_ranks() {
-                        // Must match the ranks' (scoped) endpoint names.
+                        // Must match the ranks' (scoped) endpoint names —
+                        // which are also the wire-frame src over a hop.
                         ch.register_producer(&format!("{}/{r}", g.name));
                     }
-                    g.ports().bind(pname, port.clone());
+                    g.ports().bind(pname, hop_port.clone().unwrap_or_else(|| local.clone()));
                 }
             }
             if let Endpoint::Stage { idx, port: pname, .. } = &e.consumer {
-                self.groups[*idx].ports().bind(pname, port.clone());
+                // Consumers always read the local channel (the ingress
+                // feeds it when the producer is remote).
+                self.groups[*idx].ports().bind(pname, local.clone());
             }
-            ports.insert(e.channel.clone(), port);
+            // Driver-side port: hop when the *driver* is the remote
+            // producer; otherwise local (driver-consumed edges drain the
+            // ingress-fed channel in-proc on node 0).
+            let driver_port = match (&e.producer, hop_port) {
+                (Endpoint::Driver, Some(hp)) => hp,
+                _ => local,
+            };
+            ports.insert(e.channel.clone(), driver_port);
         }
         Ok(FlowRun {
             driver: self,
@@ -580,6 +691,7 @@ impl FlowDriver {
             t0: Instant::now(),
             locks0: self.lock_counters(),
             secs0: self.stage_secs(),
+            _wire_eps: WireEpGuard { comm: self.services.comm.clone(), names: wire_eps },
         })
     }
 
@@ -953,6 +1065,23 @@ impl RestartTracker {
     }
 }
 
+/// Unregisters a run's per-edge wire endpoints (channel ingresses and
+/// driver aliases) on every exit path — their names are `@seq`-scoped, so
+/// leaking them would only grow the endpoint map, but unregistering also
+/// tears down cached routes and stops the ingress forwarder thread.
+struct WireEpGuard {
+    comm: CommManager,
+    names: Vec<String>,
+}
+
+impl Drop for WireEpGuard {
+    fn drop(&mut self) {
+        for n in &self.names {
+            self.comm.unregister(n);
+        }
+    }
+}
+
 /// One execution of the flow (one training iteration, typically).
 pub struct FlowRun<'a> {
     driver: &'a FlowDriver,
@@ -966,6 +1095,8 @@ pub struct FlowRun<'a> {
     locks0: LockCounters,
     /// Per-stage phase-seconds snapshot at `begin` (per-run profile diff).
     secs0: HashMap<String, f64>,
+    /// Per-run wire endpoints, unregistered when the run is dropped.
+    _wire_eps: WireEpGuard,
 }
 
 impl FlowRun<'_> {

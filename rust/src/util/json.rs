@@ -116,6 +116,13 @@ impl Value {
         c.0
     }
 
+    /// Serialize compactly into an existing byte buffer (single-pass wire
+    /// framing: the caller pre-sizes the frame via [`Value::encoded_len`]
+    /// and appends meta + tensor bytes without intermediate `String`s).
+    pub fn append_json(&self, out: &mut Vec<u8>) {
+        let _ = self.write_json(&mut ByteSink(out));
+    }
+
     /// Serialize with 1-space indentation (diff-friendly dumps).
     pub fn to_json_pretty(&self) -> String {
         let mut s = String::new();
@@ -197,6 +204,23 @@ impl Value {
                 let _ = self.write_json(out);
             }
         }
+    }
+}
+
+/// `fmt::Write` sink appending to a byte buffer (JSON output is UTF-8 by
+/// construction, so bytes and `str` agree).
+struct ByteSink<'a>(&'a mut Vec<u8>);
+
+impl fmt::Write for ByteSink<'_> {
+    fn write_str(&mut self, s: &str) -> fmt::Result {
+        self.0.extend_from_slice(s.as_bytes());
+        Ok(())
+    }
+
+    fn write_char(&mut self, c: char) -> fmt::Result {
+        let mut buf = [0u8; 4];
+        self.0.extend_from_slice(c.encode_utf8(&mut buf).as_bytes());
+        Ok(())
     }
 }
 
@@ -529,6 +553,15 @@ mod tests {
             let v = parse(src).unwrap();
             assert_eq!(v.encoded_len(), v.to_json().len(), "{src}");
         }
+    }
+
+    #[test]
+    fn append_json_matches_to_json() {
+        let v = parse(r#"{"a": [1, 2.5, {"b": "x\n"}], "c": null, "u": "Aé"}"#).unwrap();
+        let mut buf = Vec::with_capacity(v.encoded_len());
+        v.append_json(&mut buf);
+        assert_eq!(buf, v.to_json().into_bytes());
+        assert_eq!(buf.len(), v.encoded_len());
     }
 
     #[test]

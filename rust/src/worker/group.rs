@@ -42,9 +42,21 @@ pub struct Services {
 
 impl Services {
     pub fn new(cluster: Cluster) -> Services {
+        Services::with_transport(cluster, &crate::config::TransportConfig::default())
+            .expect("the default in-proc transport is infallible")
+    }
+
+    /// Construct services over an explicit `[transport]` section: the comm
+    /// manager's byte mover is chosen from the config (`inproc` is the
+    /// default; `tcp`/`uds` put `Sock` routes on a real loopback wire).
+    pub fn with_transport(
+        cluster: Cluster,
+        tcfg: &crate::config::TransportConfig,
+    ) -> Result<Services> {
         let metrics = Metrics::new();
-        Services {
-            comm: CommManager::new(cluster.clone(), metrics.clone()),
+        let transport = crate::comm::transport_from_config(tcfg, &cluster, &metrics)?;
+        Ok(Services {
+            comm: CommManager::with_transport(cluster.clone(), metrics.clone(), transport),
             channels: ChannelRegistry::new(),
             locks: DeviceLockMgr::new(),
             monitor: FailureMonitor::new(),
@@ -52,7 +64,7 @@ impl Services {
             health: HealthRegistry::new(),
             metrics,
             cluster,
-        }
+        })
     }
 }
 

@@ -154,7 +154,7 @@ pub fn embodied_spec(cfg: &RunConfig, opts: &EmbodiedOpts, kind: EnvKind) -> Flo
 
 /// Run embodied PPO training on a private cluster; returns the report.
 pub fn run_embodied(cfg: &RunConfig, opts: &EmbodiedOpts) -> Result<EmbodiedReport> {
-    let services = Services::new(Cluster::new(cfg.cluster.clone()));
+    let services = Services::with_transport(Cluster::new(cfg.cluster.clone()), &cfg.transport)?;
     run_embodied_shared(cfg, opts, &services, LaunchOpts::default())
 }
 

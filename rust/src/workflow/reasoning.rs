@@ -261,7 +261,7 @@ pub fn grpo_spec(
 /// Run GRPO for `cfg.iters` iterations under the configured mode, on a
 /// private cluster built from `cfg.cluster`.
 pub fn run_grpo(cfg: &RunConfig, opts: &RunnerOpts) -> Result<GrpoReport> {
-    let services = Services::new(Cluster::new(cfg.cluster.clone()));
+    let services = Services::with_transport(Cluster::new(cfg.cluster.clone()), &cfg.transport)?;
     run_grpo_shared(cfg, opts, &services, LaunchOpts::default())
 }
 

@@ -334,3 +334,57 @@ fn checkpoint_resume_completes_remaining_work() {
     }
     let _ = std::fs::remove_dir_all(&dir);
 }
+
+/// Replay into a full bounded channel: `requeue_inflight` re-inserts
+/// unconditionally (the items' puts were already admitted once), so the
+/// queue briefly sits over the bound, parked producers stay parked while
+/// it is overfull, and they complete once consumers drain back under the
+/// cap — the restart path can never deadlock behind its own replay.
+#[test]
+fn requeue_overfill_parks_then_releases_producers() {
+    use rlinf::channel::Channel;
+
+    let ch = Channel::new("requeue-overfill");
+    ch.set_capacity(2);
+    ch.set_replay(true);
+    ch.register_producer("p");
+    ch.put("p", Payload::new().set_meta("v", 1i64)).unwrap();
+    ch.put("p", Payload::new().set_meta("v", 2i64)).unwrap();
+
+    // A consumer takes one item and dies without acking: the take sits in
+    // the replay buffer and frees a queue slot.
+    let taken = ch.get("c").unwrap();
+    assert_eq!(taken.payload.meta_i64("v"), Some(1));
+    ch.put("p", Payload::new().set_meta("v", 3i64)).unwrap();
+
+    // The next put finds the bound full and parks.
+    let (tx, rx) = std::sync::mpsc::channel();
+    let chp = ch.clone();
+    let producer = std::thread::spawn(move || {
+        tx.send(()).unwrap();
+        chp.put("p", Payload::new().set_meta("v", 4i64)).unwrap();
+    });
+    rx.recv().unwrap();
+    std::thread::sleep(Duration::from_millis(50)); // let the put park
+
+    // Restart replay: the channel overfills (3 queued > cap 2) instead of
+    // deadlocking recovery behind the dead consumer's slot.
+    assert_eq!(ch.requeue_inflight("c"), 1);
+    assert_eq!(ch.len(), 3, "replayed item re-inserted over the bound");
+
+    // Draining below the cap releases the parked producer; everything
+    // arrives exactly once, replayed item first (original sequence slot).
+    let mut got = Vec::new();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while got.len() < 4 {
+        assert!(Instant::now() < deadline, "drain wedged; got {got:?}");
+        if let Some(item) = ch.get_timeout("r", Duration::from_millis(100)) {
+            got.push(item.payload.meta_i64("v").unwrap());
+            ch.ack("r");
+        }
+    }
+    producer.join().unwrap();
+    assert_eq!(got, vec![1, 2, 3, 4], "replay lands at its original position");
+    ch.producer_done("p");
+    assert!(ch.get_timeout("r", Duration::from_millis(100)).is_none());
+}

@@ -74,6 +74,7 @@ fn every_code_has_a_fixture_triggering_exactly_it() {
         ("fa006_fault.flow.toml", vec!["FA006", "FA006"]),
         ("fa007_dead_stage.flow.toml", vec!["FA007"]),
         ("fa008_pump.flow.toml", vec!["FA008"]),
+        ("fa009_straddle.flow.toml", vec!["FA009"]),
     ];
     for (name, want) in expect {
         let r = analyze_manifest(&fixture(name), &reg);
