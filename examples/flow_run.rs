@@ -21,7 +21,7 @@
 //!
 //! Dispatch: a file with a `[flow]` section is a single-flow manifest,
 //! run by the workload its `[flow].workload` names (`grpo`, `embodied`,
-//! or `generic` — the generic runner feeds `feed = N` items into every
+//! `agentic`, or `generic` — the generic runner feeds `feed = N` items into every
 //! driver-produced edge, executes declared `[[pump]]` logic, and drains
 //! the sinks). A file with `[[flow]]` tables references other manifests
 //! and runs them concurrently under a `FlowSupervisor`.
@@ -52,6 +52,7 @@ use rlinf::flow::{
 use rlinf::util::cli::Args;
 use rlinf::util::json::Value;
 use rlinf::worker::group::Services;
+use rlinf::workflow::agentic::{run_agentic_elastic, AgenticOpts};
 use rlinf::workflow::embodied::{run_embodied_elastic, EmbodiedOpts};
 use rlinf::workflow::reasoning::{run_grpo_elastic, RunnerOpts};
 
@@ -67,9 +68,9 @@ fn usage() -> &'static str {
      --json        with --analyze: emit the aggregated diagnostics as JSON\n\
      --set         apply a `a.b.c=value` override before interpretation\n\
      --checkpoint  write a flow checkpoint to this directory after every\n\
-     \u{20}             iteration (grpo workload)\n\
+     \u{20}             iteration (grpo/agentic workloads)\n\
      --resume      continue a killed run from a checkpoint directory\n\
-     \u{20}             (grpo workload)"
+     \u{20}             (grpo/agentic workloads)"
 }
 
 fn load_with_overrides(path: &str, sets: Option<&str>) -> Result<LoadedManifest> {
@@ -398,6 +399,46 @@ fn run_workload(
                 report.mean_batches_per_sec(),
                 report.final_success_rate(),
                 report.relaunches.len(),
+            ))
+        }
+        "agentic" => {
+            let report = run_agentic_elastic(
+                cfg,
+                &AgenticOpts {
+                    verbose: true,
+                    checkpoint_dir: ckpt.save_dir.clone(),
+                    resume_from: ckpt.resume_from.clone(),
+                    ..Default::default()
+                },
+                services,
+                launch,
+                |_n| m.to_spec(reg),
+            )?;
+            let per_task: Vec<String> = report
+                .tasks
+                .iter()
+                .map(|t| {
+                    format!(
+                        "{}: {} eps, {} steps, {} dropped, staleness {:.2}",
+                        t.task,
+                        t.episodes,
+                        t.steps,
+                        t.dropped,
+                        t.mean_staleness()
+                    )
+                })
+                .collect();
+            Ok(format!(
+                "flow {:?} [{}]: {} episodes ({:.1}/s mean), {} steps, {} carried, \
+                 {} relaunches | {}",
+                m.name,
+                report.mode,
+                report.total_episodes(),
+                report.mean_episodes_per_sec(),
+                report.total_steps(),
+                report.leftover_partials,
+                report.relaunches.len(),
+                per_task.join(" | "),
             ))
         }
         _ => run_generic(m, cfg, services, launch, reg),

@@ -1,0 +1,155 @@
+//! Agentic workload bench: several multi-turn tool-calling tasks sharing
+//! one inference fleet, measured **with and without** the per-task
+//! off-policy staleness bound on the trainer fan-in.
+//!
+//! One task runs with a deliberate per-turn slowdown. Unbounded, its
+//! stale batches are admitted at full weight and the trainer spends more
+//! wall-clock idling between healthy batches; bounded, the stale batches
+//! are dropped/down-weighted, so the straggler degrades only itself.
+//! Emits `BENCH_agentic.json` (per-task episodes/sec, trainer stall
+//! seconds per regime) for trend tracking across PRs — artifact-free:
+//! synthetic agents and tools, no compiled models.
+//!
+//! Set `RLINF_BENCH_SMALL=1` for the CI preset (fewer episodes; same JSON
+//! shape).
+
+mod common;
+
+use anyhow::Result;
+use rlinf::config::RunConfig;
+use rlinf::util::json::Value;
+use rlinf::workflow::agentic::{run_agentic, AgenticOpts, AgenticReport, AgenticTask};
+
+fn small() -> bool {
+    std::env::var_os("RLINF_BENCH_SMALL").is_some()
+}
+
+fn base_cfg() -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.iters = if small() { 2 } else { 4 };
+    cfg.cluster.devices_per_node = 2;
+    cfg.rollout.batch = if small() { 6 } else { 16 };
+    cfg.seed = 23;
+    cfg
+}
+
+/// The task mix: two healthy tasks plus one 8× slower straggler. With
+/// `bounded`, the straggler's trainer edge declares a tight staleness
+/// bound; without, its stale batches are admitted at full weight.
+fn opts(bounded: bool) -> AgenticOpts {
+    let math = AgenticTask::new("math").share(1.0).slow(8.0).turns(3, 6);
+    let math = if bounded { math.staleness_bound(2) } else { math.unbounded_staleness() };
+    AgenticOpts {
+        tasks: vec![
+            AgenticTask::new("search").share(3.0).staleness_bound(8).turns(2, 5),
+            AgenticTask::new("code").share(2.0).staleness_bound(8).turns(4, 8),
+            math,
+        ],
+        turn_slice: 3,
+        ..Default::default()
+    }
+}
+
+fn total_stall(r: &AgenticReport) -> f64 {
+    r.iters.iter().map(|i| i.stall_secs).sum()
+}
+
+fn total_secs(r: &AgenticReport) -> f64 {
+    r.iters.iter().map(|i| i.secs).sum()
+}
+
+fn rows_for(regime: &str, r: &AgenticReport) -> Vec<Vec<String>> {
+    let secs = total_secs(r).max(1e-9);
+    let mut rows: Vec<Vec<String>> = r
+        .tasks
+        .iter()
+        .map(|t| {
+            vec![
+                regime.to_string(),
+                t.task.clone(),
+                t.episodes.to_string(),
+                common::f(t.episodes as f64 / secs),
+                t.steps.to_string(),
+                t.dropped.to_string(),
+                t.downweighted.to_string(),
+                common::f(t.mean_staleness()),
+                common::f3(total_stall(r)),
+            ]
+        })
+        .collect();
+    rows.push(vec![
+        regime.to_string(),
+        "TOTAL".to_string(),
+        r.total_episodes().to_string(),
+        common::f(r.total_episodes() as f64 / secs),
+        r.total_steps().to_string(),
+        r.tasks.iter().map(|t| t.dropped).sum::<u64>().to_string(),
+        r.tasks.iter().map(|t| t.downweighted).sum::<u64>().to_string(),
+        String::from("-"),
+        common::f3(total_stall(r)),
+    ]);
+    rows
+}
+
+fn main() -> Result<()> {
+    let cfg = base_cfg();
+    println!(
+        "agentic bench: {} iters x {} episodes/task, one shared inference fleet",
+        cfg.iters, cfg.rollout.batch
+    );
+
+    let bounded = run_agentic(&cfg, &opts(true))?;
+    let unbounded = run_agentic(&cfg, &opts(false))?;
+
+    let mut rows = rows_for("bounded", &bounded);
+    rows.extend(rows_for("unbounded", &unbounded));
+    common::report(
+        "agentic",
+        &[
+            "regime",
+            "task",
+            "episodes",
+            "eps/s",
+            "steps",
+            "dropped",
+            "downwt",
+            "staleness",
+            "stall_s",
+        ],
+        rows,
+    );
+
+    let regime_json = |r: &AgenticReport| {
+        let mut v = Value::obj();
+        v.set("secs", total_secs(r))
+            .set("stall_secs", total_stall(r))
+            .set("episodes", r.total_episodes() as i64)
+            .set("steps", r.total_steps() as i64)
+            .set("report", r.to_json());
+        v
+    };
+    let mut out = Value::obj();
+    out.set("bench", "agentic");
+    out.set("bounded", regime_json(&bounded));
+    out.set("unbounded", regime_json(&unbounded));
+    out.set("config", {
+        let mut c = Value::obj();
+        c.set("preset", if small() { "small" } else { "full" })
+            .set("iters", cfg.iters as i64)
+            .set("episodes_per_task", cfg.rollout.batch as i64)
+            .set("tasks", 3i64)
+            .set("straggler", "math (8x slow; bound 2 vs unbounded)");
+        c
+    });
+    std::fs::write("BENCH_agentic.json", out.to_json_pretty())?;
+    println!("(saved BENCH_agentic.json)");
+
+    println!(
+        "trainer stall: bounded {:.3}s vs unbounded {:.3}s; straggler drops: {} vs {}",
+        total_stall(&bounded),
+        total_stall(&unbounded),
+        bounded.task("math").map(|t| t.dropped).unwrap_or(0),
+        unbounded.task("math").map(|t| t.dropped).unwrap_or(0),
+    );
+    Ok(())
+}

@@ -1,0 +1,31 @@
+//! Agentic RL workload family: multi-turn tool-calling rollouts from
+//! several tasks sharing **one** inference fleet.
+//!
+//! Each task runs its own rollout agent, reward stage, and weighted
+//! trainer edge; the inference fleet and tool environment are shared.
+//! Three mechanisms keep a heterogeneous task mix healthy:
+//!
+//! - **Partial-rollout handoff** — an episode that exhausts its
+//!   `turn_slice` budget (or is interrupted by an elastic resize) is
+//!   parked as a `"partials"` record, serialized through the flow
+//!   checkpoint, and re-seeded later; stateless hash-derived draws
+//!   ([`tools::mix`]) make the replay exact, so no episode is lost.
+//! - **Per-task staleness bound** — each task's trainer edge declares
+//!   `staleness_bound` / `share` ([`crate::flow::Edge`]); the trainer
+//!   down-weights or drops batches whose weight version lags, so a slow
+//!   task degrades its own contribution, not the trainer's step rate.
+//! - **Per-task accounting** — stages emit `task.<name>.<metric>` meta
+//!   that [`crate::flow::FlowReport`] folds into
+//!   [`crate::flow::TaskStats`] and the profile store persists.
+//!
+//! See `workflow::agentic` for the runner, `configs/agentic.flow.toml`
+//! for the shipped manifest, and docs/flow-api.md § "Agentic workloads".
+
+pub mod tools;
+pub mod worker;
+
+pub use tools::{ToolBook, ToolSpec};
+pub use worker::{
+    register, AgentCfg, AgentWorker, CollectCfg, CollectWorker, InferCfg, InferWorker, RewardCfg,
+    RewardWorker, ToolEnvCfg, ToolEnvWorker, TrainCfg, TrainWorker,
+};

@@ -1,0 +1,187 @@
+//! Synthetic tool registry for agentic rollouts: named tools with seeded
+//! latency and failure behavior.
+//!
+//! A [`ToolBook`] is parsed from a compact spec string
+//! (`"search:150:0.05,calc:40:0.0"` — `name:latency_us:fail_rate`
+//! triples), so manifests can describe a whole tool environment in one
+//! option. Execution is **deterministic**: success/failure and latency
+//! jitter are hash-derived from `(seed, episode, turn)`, never from live
+//! RNG state, so a partially-rolled-out episode that is parked, serialized
+//! into a checkpoint, and replayed after a resize observes exactly the
+//! same tool outcomes.
+
+use anyhow::{bail, Result};
+
+/// One registered tool: a name, a nominal latency, and a failure rate.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ToolSpec {
+    pub name: String,
+    /// Nominal execution latency in microseconds (jittered ±50%).
+    pub latency_us: u64,
+    /// Probability in `[0, 1)` that a call fails (zero reward signal).
+    pub fail_rate: f64,
+}
+
+/// The pluggable tool registry a tool-environment stage executes against.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ToolBook {
+    tools: Vec<ToolSpec>,
+}
+
+impl ToolBook {
+    /// Parse a `name:latency_us:fail_rate` comma list. Latency and fail
+    /// rate are optional per entry (`"calc"` ⇒ 100µs, 0.0).
+    pub fn parse(spec: &str) -> Result<ToolBook> {
+        let mut tools = Vec::new();
+        for entry in spec.split(',').map(str::trim).filter(|e| !e.is_empty()) {
+            let mut parts = entry.split(':').map(str::trim);
+            let name = match parts.next() {
+                Some(n) if !n.is_empty() => n.to_string(),
+                _ => bail!("tool entry {entry:?} has no name"),
+            };
+            let latency_us = match parts.next() {
+                Some(v) => v
+                    .parse::<u64>()
+                    .map_err(|_| anyhow::anyhow!("tool {name:?}: bad latency_us {v:?}"))?,
+                None => 100,
+            };
+            let fail_rate = match parts.next() {
+                Some(v) => {
+                    let f = v
+                        .parse::<f64>()
+                        .map_err(|_| anyhow::anyhow!("tool {name:?}: bad fail_rate {v:?}"))?;
+                    if !(0.0..1.0).contains(&f) {
+                        bail!("tool {name:?}: fail_rate {f} outside [0, 1)");
+                    }
+                    f
+                }
+                None => 0.0,
+            };
+            if tools.iter().any(|t: &ToolSpec| t.name == name) {
+                bail!("duplicate tool {name:?}");
+            }
+            tools.push(ToolSpec { name, latency_us, fail_rate });
+        }
+        if tools.is_empty() {
+            bail!("tool spec {spec:?} declares no tools");
+        }
+        Ok(ToolBook { tools })
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.tools.iter().map(|t| t.name.as_str()).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.tools.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tools.is_empty()
+    }
+
+    /// Resolve a requested tool name; unknown names hash onto a registered
+    /// tool instead of failing, so a rollout agent with a divergent toolset
+    /// option still drives a deterministic environment.
+    pub fn resolve(&self, name: &str) -> &ToolSpec {
+        self.tools
+            .iter()
+            .find(|t| t.name == name)
+            .unwrap_or_else(|| &self.tools[(fnv(name) % self.tools.len() as u64) as usize])
+    }
+
+    /// Execute one call: `(ok, latency_us)`, both pure functions of
+    /// `(seed, ep, turn)` and the resolved tool.
+    pub fn execute(&self, name: &str, seed: u64, ep: u64, turn: u64) -> (bool, u64) {
+        let t = self.resolve(name);
+        let ok = unit_hash(seed ^ fnv(&t.name), ep, turn) >= t.fail_rate;
+        // ±50% deterministic jitter around the nominal latency.
+        let jitter = 0.5 + unit_hash(seed.rotate_left(17), ep, turn.wrapping_add(0x9e37));
+        let latency = (t.latency_us as f64 * jitter) as u64;
+        (ok, latency)
+    }
+}
+
+/// FNV-1a over a name — a stable per-tool stream selector.
+pub fn fnv(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// SplitMix64-style mixer over three words — the deterministic draw
+/// primitive every agentic stage shares (tool outcomes, episode lengths,
+/// tool selection). Stateless by design: replaying a parked episode after
+/// a checkpoint/resize reproduces the identical draw.
+pub fn mix(a: u64, b: u64, c: u64) -> u64 {
+    let mut z = a
+        .wrapping_mul(0x9e37_79b9_7f4a_7c15)
+        .wrapping_add(b.rotate_left(23))
+        .wrapping_add(c.wrapping_mul(0xbf58_476d_1ce4_e5b9));
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// [`mix`] mapped into `[0, 1)`.
+pub fn unit_hash(a: u64, b: u64, c: u64) -> f64 {
+    (mix(a, b, c) >> 11) as f64 / (1u64 << 53) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_and_defaulted_entries() {
+        let book = ToolBook::parse("search:150:0.05, calc:40, fetch").unwrap();
+        assert_eq!(book.len(), 3);
+        assert_eq!(
+            book.resolve("search"),
+            &ToolSpec { name: "search".into(), latency_us: 150, fail_rate: 0.05 }
+        );
+        assert_eq!(book.resolve("calc").fail_rate, 0.0);
+        assert_eq!(book.resolve("fetch").latency_us, 100);
+    }
+
+    #[test]
+    fn parse_rejects_bad_specs() {
+        assert!(ToolBook::parse("").is_err(), "empty spec");
+        assert!(ToolBook::parse("a:nope").is_err(), "bad latency");
+        assert!(ToolBook::parse("a:10:1.5").is_err(), "fail_rate out of range");
+        assert!(ToolBook::parse("a:10:0.1,a:20:0.2").is_err(), "duplicate name");
+    }
+
+    #[test]
+    fn unknown_tools_resolve_deterministically() {
+        let book = ToolBook::parse("a:10:0.0,b:10:0.0").unwrap();
+        let first = book.resolve("ghost").name.clone();
+        for _ in 0..8 {
+            assert_eq!(book.resolve("ghost").name, first);
+        }
+    }
+
+    #[test]
+    fn execution_is_deterministic_and_respects_fail_rate() {
+        let book = ToolBook::parse("flaky:10:0.5,solid:10:0.0").unwrap();
+        let (ok1, lat1) = book.execute("flaky", 7, 3, 4);
+        let (ok2, lat2) = book.execute("flaky", 7, 3, 4);
+        assert_eq!((ok1, lat1), (ok2, lat2), "same (seed, ep, turn) ⇒ same outcome");
+
+        let mut fails = 0;
+        for ep in 0..400u64 {
+            let (ok, lat) = book.execute("flaky", 7, ep, 0);
+            assert!((5..=15).contains(&lat), "±50% jitter band, got {lat}");
+            if !ok {
+                fails += 1;
+            }
+        }
+        assert!((100..300).contains(&fails), "≈50% failures, got {fails}/400");
+        for ep in 0..100u64 {
+            assert!(book.execute("solid", 7, ep, 0).0, "zero fail rate never fails");
+        }
+    }
+}

@@ -1,0 +1,918 @@
+//! Worker logic for the agentic workload family (§ agentic workloads,
+//! docs/flow-api.md): multi-turn tool-calling rollouts from several tasks
+//! sharing **one** inference fleet, with per-task reward shaping, fan-in
+//! collection, and a trainer that enforces an off-policy staleness bound
+//! per task edge.
+//!
+//! The flow is one big cycle per task, all condensed into a single SCC:
+//!
+//! ```text
+//! driver ─seeds_k→ agent_k ─req_k→ infer ─act_k→ tools ─obs_k→ agent_k
+//!                  agent_k ─done_k→ reward_k ─scored_k→ collect
+//!                  collect ─batch_k (weighted, staleness_bound, share)→ train
+//!                  train ─wsync→ infer        train ─report→ driver
+//! ```
+//!
+//! Every stochastic draw (episode length, tool choice, tool outcome) is a
+//! stateless hash of `(seed, episode, turn)`, so an episode parked
+//! mid-turn by `turn_slice`, serialized through a checkpoint, and resumed
+//! on a resized fleet replays identically — partial rollouts are handed
+//! off, never dropped.
+
+use std::collections::HashMap;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use super::tools::{fnv, mix, ToolBook};
+use crate::channel::BoundPort;
+use crate::data::Payload;
+use crate::util::json::Value;
+use crate::worker::{WorkerCtx, WorkerLogic};
+
+/// Idle-poll granularity for multi-port sweeps.
+const POLL: Duration = Duration::from_micros(500);
+
+fn drained(p: &BoundPort) -> bool {
+    p.channel().is_closed() && p.channel().is_empty()
+}
+
+fn spin_us(us: u64) {
+    if us > 0 {
+        thread::sleep(Duration::from_micros(us));
+    }
+}
+
+/// Parse a comma-separated task list.
+pub fn parse_csv(s: &str) -> Vec<String> {
+    s.split(',').map(str::trim).filter(|t| !t.is_empty()).map(str::to_string).collect()
+}
+
+/// Bind the `in_<task>` / `out_<task>` port pair for every task.
+fn task_ports(ctx: &WorkerCtx, tasks: &[String]) -> Result<Vec<(String, BoundPort, BoundPort)>> {
+    tasks
+        .iter()
+        .map(|t| Ok((t.clone(), ctx.port(&format!("in_{t}"))?, ctx.port(&format!("out_{t}"))?)))
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Multi-turn rollout agent (one per task)
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct AgentCfg {
+    pub task: String,
+    pub seed: u64,
+    pub min_turns: i64,
+    pub max_turns: i64,
+    /// Per-episode turn budget for one `run_episodes` call; episodes that
+    /// exceed it are *parked* into the returned `"partials"` array for the
+    /// runner to re-seed next iteration (or after a resize). 0 = no limit.
+    pub turn_slice: i64,
+    /// Per-turn reasoning latency in microseconds.
+    pub think_us: u64,
+    /// Latency multiplier — raise to model a deliberately slow task.
+    pub slow_factor: f64,
+    /// Tool names this task requests (round-robin by hash).
+    pub tools: Vec<String>,
+}
+
+/// In-flight episode state. Serializes losslessly into a partial-rollout
+/// object: the stateless draws mean `(ep, turn, turns_total, reward_acc)`
+/// is the *entire* episode state.
+struct Ep {
+    turn: i64,
+    turns_total: i64,
+    reward_acc: f64,
+    version: i64,
+    sliced: i64,
+}
+
+pub struct AgentWorker {
+    cfg: AgentCfg,
+}
+
+impl AgentWorker {
+    pub fn new(cfg: AgentCfg) -> AgentWorker {
+        AgentWorker { cfg }
+    }
+
+    /// Episode length in `[min_turns, max_turns]`, a pure hash of
+    /// `(seed, task, ep)` so a resumed episode re-derives the same total.
+    fn turns_total(&self, ep: i64) -> i64 {
+        let lo = self.cfg.min_turns.max(1);
+        let hi = self.cfg.max_turns.max(lo);
+        let span = (hi - lo + 1) as u64;
+        lo + (mix(self.cfg.seed, fnv(&self.cfg.task), ep as u64) % span) as i64
+    }
+
+    fn pick_tool(&self, ep: i64, turn: i64) -> &str {
+        let i = mix(self.cfg.seed ^ 0xa6e7, ep as u64, turn as u64) as usize % self.cfg.tools.len();
+        &self.cfg.tools[i]
+    }
+
+    /// Inference request for the episode's next turn.
+    fn request(&self, ep: i64, e: &Ep) -> Payload {
+        Payload::new()
+            .set_meta("task", self.cfg.task.as_str())
+            .set_meta("ep", ep)
+            .set_meta("turn", e.turn)
+            .set_meta("tool", self.pick_tool(ep, e.turn))
+    }
+
+    /// Finished-episode record for the reward stage.
+    fn finished(&self, ep: i64, e: &Ep) -> Payload {
+        Payload::new()
+            .set_meta("task", self.cfg.task.as_str())
+            .set_meta("ep", ep)
+            .set_meta("turns_total", e.turns_total)
+            .set_meta("reward_acc", e.reward_acc)
+            .set_meta("version", e.version)
+    }
+
+    fn partial(&self, ep: i64, e: &Ep) -> Value {
+        let mut o = Value::obj();
+        o.set("task", self.cfg.task.as_str())
+            .set("ep", ep)
+            .set("turn", e.turn)
+            .set("turns_total", e.turns_total)
+            .set("reward_acc", e.reward_acc)
+            .set("version", e.version);
+        o
+    }
+}
+
+impl WorkerLogic for AgentWorker {
+    fn call(&mut self, ctx: &WorkerCtx, method: &str, _arg: Payload) -> Result<Payload> {
+        if method != "run_episodes" {
+            bail!("agentic_rollout has no method {method:?}");
+        }
+        let seeds = ctx.port("in")?;
+        let rsp = ctx.port("rsp")?;
+        let out = ctx.port("out")?;
+        let fin = ctx.port("done")?;
+        let me = ctx.endpoint();
+
+        let mut inflight: HashMap<i64, Ep> = HashMap::new();
+        let mut partials: Vec<Value> = Vec::new();
+        let mut episodes = 0u64;
+        let mut turns = 0u64;
+        let mut seeds_open = true;
+        let think = (self.cfg.think_us as f64 * self.cfg.slow_factor.max(0.0)) as u64;
+
+        loop {
+            if seeds_open {
+                // Admit fresh seeds and resumed partials: both carry `ep`
+                // plus optional turn/turns_total/reward_acc carried state.
+                while let Some(item) = seeds.recv_timeout(me, POLL) {
+                    let p = item.payload;
+                    let ep = p.meta_i64("ep").unwrap_or(0);
+                    let e = Ep {
+                        turn: p.meta_i64("turn").unwrap_or(0),
+                        turns_total: p
+                            .meta_i64("turns_total")
+                            .unwrap_or_else(|| self.turns_total(ep)),
+                        reward_acc: p.meta_f64("reward_acc").unwrap_or(0.0),
+                        version: p.meta_i64("version").unwrap_or(0),
+                        sliced: 0,
+                    };
+                    if e.turn >= e.turns_total {
+                        fin.send_weighted(me, self.finished(ep, &e), e.turns_total as f64)?;
+                        episodes += 1;
+                    } else {
+                        out.send(me, self.request(ep, &e))?;
+                        inflight.insert(ep, e);
+                    }
+                }
+                if drained(&seeds) {
+                    seeds_open = false;
+                }
+            }
+            if !seeds_open && inflight.is_empty() {
+                break;
+            }
+            while let Some(item) = rsp.recv_timeout(me, POLL) {
+                let p = item.payload;
+                let ep = p.meta_i64("ep").ok_or_else(|| anyhow!("tool response without ep"))?;
+                let Some(mut e) = inflight.remove(&ep) else { continue };
+                spin_us(think);
+                e.reward_acc += p.meta_f64("signal").unwrap_or(0.0);
+                e.version = p.meta_i64("version").unwrap_or(e.version);
+                e.turn += 1;
+                e.sliced += 1;
+                turns += 1;
+                if e.turn >= e.turns_total {
+                    fin.send_weighted(me, self.finished(ep, &e), e.turns_total as f64)?;
+                    episodes += 1;
+                } else if self.cfg.turn_slice > 0 && e.sliced >= self.cfg.turn_slice {
+                    // Slice exhausted: park the episode for handoff instead
+                    // of dropping it.
+                    partials.push(self.partial(ep, &e));
+                } else {
+                    out.send(me, self.request(ep, &e))?;
+                    inflight.insert(ep, e);
+                }
+            }
+            if !inflight.is_empty() && drained(&rsp) {
+                bail!(
+                    "tool-response channel closed with {} episodes in flight (task {:?})",
+                    inflight.len(),
+                    self.cfg.task
+                );
+            }
+        }
+        out.done(me);
+        fin.done(me);
+
+        ctx.metrics.record("agentic.episodes", episodes as f64);
+        let mut reply = Payload::new()
+            .set_meta(&format!("task.{}.episodes", self.cfg.task), episodes)
+            .set_meta(&format!("task.{}.turns", self.cfg.task), turns)
+            .set_meta("task", self.cfg.task.as_str());
+        if !partials.is_empty() {
+            reply.meta.set("partials", Value::Arr(partials));
+        }
+        Ok(reply)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared inference fleet
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct InferCfg {
+    /// Every task sharing this fleet; binds `in_<t>` / `out_<t>` pairs.
+    pub tasks: Vec<String>,
+    /// Per-request decode latency in microseconds.
+    pub token_us: u64,
+}
+
+pub struct InferWorker {
+    cfg: InferCfg,
+}
+
+impl InferWorker {
+    pub fn new(cfg: InferCfg) -> InferWorker {
+        InferWorker { cfg }
+    }
+}
+
+impl WorkerLogic for InferWorker {
+    fn call(&mut self, ctx: &WorkerCtx, method: &str, _arg: Payload) -> Result<Payload> {
+        if method != "serve" {
+            bail!("agentic_infer has no method {method:?}");
+        }
+        let me = ctx.endpoint();
+        let sync = ctx.port("sync")?;
+        let ports = task_ports(ctx, &self.cfg.tasks)?;
+        let mut version = 0i64;
+        let mut served = 0u64;
+        loop {
+            // Absorb trainer weight syncs without blocking the serve loop;
+            // every response is stamped with the version that produced it.
+            while let Some(item) = sync.recv_timeout(me, Duration::ZERO) {
+                version = version.max(item.payload.meta_i64("version").unwrap_or(0));
+            }
+            let mut all_done = true;
+            for (_, inp, outp) in &ports {
+                let mut budget = 16usize;
+                while budget > 0 {
+                    let Some(item) = inp.recv_timeout(me, POLL) else { break };
+                    spin_us(self.cfg.token_us);
+                    let mut p = item.payload;
+                    p.meta.set("version", version);
+                    outp.send_weighted(me, p, item.weight)?;
+                    served += 1;
+                    budget -= 1;
+                }
+                if !drained(inp) {
+                    all_done = false;
+                }
+            }
+            if all_done {
+                break;
+            }
+        }
+        for (_, _, outp) in &ports {
+            outp.done(me);
+        }
+        // The trainer outlives us only on the sync edge; drain it so its
+        // sends never back up, then report.
+        while sync.recv(me).is_some() {}
+        Ok(Payload::new().set_meta("served", served).set_meta("version", version))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tool environment
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct ToolEnvCfg {
+    pub tasks: Vec<String>,
+    pub seed: u64,
+    pub book: ToolBook,
+}
+
+pub struct ToolEnvWorker {
+    cfg: ToolEnvCfg,
+}
+
+impl ToolEnvWorker {
+    pub fn new(cfg: ToolEnvCfg) -> ToolEnvWorker {
+        ToolEnvWorker { cfg }
+    }
+}
+
+impl WorkerLogic for ToolEnvWorker {
+    fn call(&mut self, ctx: &WorkerCtx, method: &str, _arg: Payload) -> Result<Payload> {
+        if method != "exec" {
+            bail!("agentic_tools has no method {method:?}");
+        }
+        let me = ctx.endpoint();
+        let ports = task_ports(ctx, &self.cfg.tasks)?;
+        let mut calls = 0u64;
+        let mut failures = 0u64;
+        loop {
+            let mut all_done = true;
+            for (_, inp, outp) in &ports {
+                while let Some(item) = inp.recv_timeout(me, POLL) {
+                    let mut p = item.payload;
+                    let tool = p.meta_str("tool").unwrap_or("").to_string();
+                    let ep = p.meta_i64("ep").unwrap_or(0) as u64;
+                    let turn = p.meta_i64("turn").unwrap_or(0) as u64;
+                    let (ok, latency_us) = self.cfg.book.execute(&tool, self.cfg.seed, ep, turn);
+                    spin_us(latency_us);
+                    p.meta.set("ok", ok);
+                    p.meta.set("signal", if ok { 1.0 } else { 0.0 });
+                    outp.send_weighted(me, p, item.weight)?;
+                    calls += 1;
+                    if !ok {
+                        failures += 1;
+                    }
+                }
+                if !drained(inp) {
+                    all_done = false;
+                }
+            }
+            if all_done {
+                break;
+            }
+        }
+        for (_, _, outp) in &ports {
+            outp.done(me);
+        }
+        Ok(Payload::new().set_meta("calls", calls).set_meta("failures", failures))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-task reward stage
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct RewardCfg {
+    pub task: String,
+}
+
+pub struct RewardWorker {
+    cfg: RewardCfg,
+}
+
+impl RewardWorker {
+    pub fn new(cfg: RewardCfg) -> RewardWorker {
+        RewardWorker { cfg }
+    }
+}
+
+impl WorkerLogic for RewardWorker {
+    fn call(&mut self, ctx: &WorkerCtx, method: &str, _arg: Payload) -> Result<Payload> {
+        if method != "score" {
+            bail!("agentic_reward has no method {method:?}");
+        }
+        let inp = ctx.port("in")?;
+        let outp = ctx.port("out")?;
+        let me = ctx.endpoint();
+        let mut scored = 0u64;
+        let mut reward_sum = 0.0f64;
+        while let Some(item) = inp.recv(me) {
+            let p = item.payload;
+            let turns_total = p.meta_i64("turns_total").unwrap_or(1).max(1);
+            // Fraction of turns whose tool call succeeded, clamped; tasks
+            // may specialize by registering their own reward kind.
+            let reward =
+                (p.meta_f64("reward_acc").unwrap_or(0.0) / turns_total as f64).clamp(0.0, 1.0);
+            outp.send_weighted(me, p.set_meta("reward", reward), turns_total as f64)?;
+            scored += 1;
+            reward_sum += reward;
+        }
+        outp.done(me);
+        let mean = if scored > 0 { reward_sum / scored as f64 } else { 0.0 };
+        Ok(Payload::new()
+            .set_meta("scored", scored)
+            .set_meta("mean_reward", mean)
+            .set_meta("task", self.cfg.task.as_str()))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Trajectory collector fan-in
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct CollectCfg {
+    pub tasks: Vec<String>,
+    /// Episodes per training batch; remainders flush at end of stream.
+    pub batch: usize,
+}
+
+pub struct CollectWorker {
+    cfg: CollectCfg,
+}
+
+impl CollectWorker {
+    pub fn new(cfg: CollectCfg) -> CollectWorker {
+        CollectWorker { cfg }
+    }
+}
+
+/// Emit one training batch: the batch version is the *minimum* member
+/// version (a batch is as stale as its stalest episode).
+fn flush_batch(
+    me: &str,
+    task: &str,
+    outp: &BoundPort,
+    buf: &mut Vec<Payload>,
+    batches: &mut u64,
+) -> Result<()> {
+    if buf.is_empty() {
+        return Ok(());
+    }
+    let n = buf.len();
+    let version = buf.iter().map(|p| p.meta_i64("version").unwrap_or(0)).min().unwrap_or(0);
+    let reward = buf.iter().map(|p| p.meta_f64("reward").unwrap_or(0.0)).sum::<f64>() / n as f64;
+    let turns: i64 = buf.iter().map(|p| p.meta_i64("turns_total").unwrap_or(0)).sum();
+    buf.clear();
+    outp.send_weighted(
+        me,
+        Payload::new()
+            .set_meta("task", task)
+            .set_meta("n", n)
+            .set_meta("version", version)
+            .set_meta("reward", reward)
+            .set_meta("turns", turns),
+        n as f64,
+    )?;
+    *batches += 1;
+    Ok(())
+}
+
+impl WorkerLogic for CollectWorker {
+    fn call(&mut self, ctx: &WorkerCtx, method: &str, _arg: Payload) -> Result<Payload> {
+        if method != "gather" {
+            bail!("agentic_collect has no method {method:?}");
+        }
+        let me = ctx.endpoint();
+        let ports = task_ports(ctx, &self.cfg.tasks)?;
+        let batch = self.cfg.batch.max(1);
+        let mut bufs: Vec<Vec<Payload>> = (0..ports.len()).map(|_| Vec::new()).collect();
+        let mut closed = vec![false; ports.len()];
+        let mut batches = 0u64;
+        loop {
+            let mut all_closed = true;
+            for (i, (task, inp, outp)) in ports.iter().enumerate() {
+                if closed[i] {
+                    continue;
+                }
+                while let Some(item) = inp.recv_timeout(me, POLL) {
+                    bufs[i].push(item.payload);
+                    if bufs[i].len() >= batch {
+                        flush_batch(me, task, outp, &mut bufs[i], &mut batches)?;
+                    }
+                }
+                if drained(inp) {
+                    flush_batch(me, task, outp, &mut bufs[i], &mut batches)?;
+                    outp.done(me);
+                    closed[i] = true;
+                }
+                if !closed[i] {
+                    all_closed = false;
+                }
+            }
+            if all_closed {
+                break;
+            }
+        }
+        Ok(Payload::new().set_meta("batches", batches))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Trainer with per-task weighted dequeue + staleness bound
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct TrainCfg {
+    pub tasks: Vec<String>,
+    /// Per-step optimization latency in microseconds.
+    pub step_us: u64,
+    /// Multiplicative down-weight per version of lag for admitted-but-
+    /// stale batches.
+    pub staleness_decay: f64,
+}
+
+pub struct TrainWorker {
+    cfg: TrainCfg,
+}
+
+impl TrainWorker {
+    pub fn new(cfg: TrainCfg) -> TrainWorker {
+        TrainWorker { cfg }
+    }
+}
+
+impl WorkerLogic for TrainWorker {
+    fn call(&mut self, ctx: &WorkerCtx, method: &str, _arg: Payload) -> Result<Payload> {
+        if method != "step" {
+            bail!("agentic_train has no method {method:?}");
+        }
+        let me = ctx.endpoint();
+        let outp = ctx.port("out")?;
+        let sync = ctx.port("sync")?;
+        let ports: Vec<(String, BoundPort)> = self
+            .cfg
+            .tasks
+            .iter()
+            .map(|t| Ok((t.clone(), ctx.port(&format!("in_{t}"))?)))
+            .collect::<Result<_>>()?;
+
+        // Per-sweep dequeue quota from the declared edge shares: each
+        // round serves R = Σ granularities items, task t gets
+        // round(share_t / Σ shares · R). Rounding a quota to zero is the
+        // starvation the FA010 analyzer rule rejects at admission.
+        let share_sum: f64 = ports.iter().map(|(_, p)| p.share()).sum();
+        let round: usize = ports.iter().map(|(_, p)| p.granularity()).sum();
+        let quotas: Vec<usize> = ports
+            .iter()
+            .map(|(_, p)| {
+                let frac = p.share() / share_sum.max(f64::MIN_POSITIVE);
+                (frac * round as f64 + 0.5).floor() as usize
+            })
+            .collect();
+
+        let n = ports.len();
+        let mut version = 0i64;
+        let mut steps = vec![0u64; n];
+        let mut dropped = vec![0u64; n];
+        let mut downweighted = vec![0u64; n];
+        let mut staleness_sum = vec![0.0f64; n];
+        let mut staleness_n = vec![0u64; n];
+        let mut steps_total = 0u64;
+        let mut weighted_examples = 0.0f64;
+        let mut stall = Duration::ZERO;
+        let decay = self.cfg.staleness_decay.clamp(0.0, 1.0);
+
+        loop {
+            let sweep0 = Instant::now();
+            let mut any_open = false;
+            let mut got = false;
+            for (i, (task, port)) in ports.iter().enumerate() {
+                for _ in 0..quotas[i] {
+                    let Some(item) = port.recv_timeout(me, POLL) else { break };
+                    got = true;
+                    let v = item.payload.meta_i64("version").unwrap_or(0);
+                    let lag = (version - v).max(0) as u64;
+                    if let Some(bound) = port.staleness_bound() {
+                        if lag > bound {
+                            // The slow task pays for its own staleness; the
+                            // trainer keeps stepping on fresh batches.
+                            dropped[i] += 1;
+                            continue;
+                        }
+                    }
+                    let weight = if lag > 0 {
+                        downweighted[i] += 1;
+                        decay.powi(lag.min(64) as i32)
+                    } else {
+                        1.0
+                    };
+                    staleness_sum[i] += lag as f64;
+                    staleness_n[i] += 1;
+                    spin_us(self.cfg.step_us);
+                    version += 1;
+                    steps[i] += 1;
+                    steps_total += 1;
+                    weighted_examples += weight * item.weight;
+                    sync.send(me, Payload::new().set_meta("version", version))?;
+                    outp.send(
+                        me,
+                        Payload::new()
+                            .set_meta("step", version)
+                            .set_meta("task", task.as_str())
+                            .set_meta("staleness", lag)
+                            .set_meta("weight", weight),
+                    )?;
+                }
+                // A zero-quota task would never drain; shed its backlog as
+                // dropped once its producer closes so the flow terminates.
+                if quotas[i] == 0 && port.channel().is_closed() {
+                    while let Some(_item) = port.recv_timeout(me, Duration::ZERO) {
+                        dropped[i] += 1;
+                        got = true;
+                    }
+                }
+                if !drained(port) {
+                    any_open = true;
+                }
+            }
+            if !any_open {
+                break;
+            }
+            if !got {
+                stall += sweep0.elapsed();
+            }
+        }
+        sync.done(me);
+        outp.done(me);
+
+        let mut reply = Payload::new()
+            .set_meta("steps", steps_total)
+            .set_meta("stall_secs", stall.as_secs_f64())
+            .set_meta("weighted_examples", weighted_examples)
+            .set_meta("version", version);
+        for (i, (task, _)) in ports.iter().enumerate() {
+            reply
+                .meta
+                .set(&format!("task.{task}.steps"), steps[i])
+                .set(&format!("task.{task}.dropped"), dropped[i])
+                .set(&format!("task.{task}.downweighted"), downweighted[i])
+                .set(&format!("task.{task}.staleness_sum"), staleness_sum[i])
+                .set(&format!("task.{task}.staleness_n"), staleness_n[i]);
+        }
+        Ok(reply)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------------
+
+/// Register the agentic stage-kind group with a flow [`StageRegistry`]:
+/// `agentic_rollout`, `agentic_infer`, `agentic_tools`, `agentic_reward`,
+/// `agentic_collect`, `agentic_train`.
+pub fn register(reg: &mut crate::flow::StageRegistry) -> Result<()> {
+    use crate::flow::registry::OptSpec;
+    use crate::worker::LogicFactory;
+
+    reg.register_stage(
+        "agentic_rollout",
+        "multi-turn tool-calling rollout agent for one task: seeds on \"in\", tool \
+         responses on \"rsp\", inference requests on \"out\", finished episodes on \
+         \"done\"; parks over-budget episodes into \"partials\" for handoff",
+        vec![
+            OptSpec::required("task", crate::flow::registry::OptKind::Str, "task name"),
+            OptSpec::int("seed", 0, "episode-shape seed"),
+            OptSpec::int("min_turns", 2, "shortest episode"),
+            OptSpec::int("max_turns", 6, "longest episode"),
+            OptSpec::int("turn_slice", 0, "per-episode turn budget per run (0 = unlimited)"),
+            OptSpec::int("think_us", 50, "per-turn reasoning latency (µs)"),
+            OptSpec::float("slow_factor", 1.0, "latency multiplier (model a slow task)"),
+            OptSpec::str("tools", "search,calc,fetch", "comma list of tool names to request"),
+        ],
+        |o| {
+            let cfg = AgentCfg {
+                task: o.str("task")?,
+                seed: o.u64("seed")?,
+                min_turns: o.i64("min_turns")?,
+                max_turns: o.i64("max_turns")?,
+                turn_slice: o.i64("turn_slice")?,
+                think_us: o.u64("think_us")?,
+                slow_factor: o.f64("slow_factor")?,
+                tools: parse_csv(&o.str("tools")?),
+            };
+            if cfg.tools.is_empty() {
+                bail!("agentic_rollout: empty tool list");
+            }
+            Ok(Box::new(move |_rank: usize| -> LogicFactory {
+                let c = cfg.clone();
+                Box::new(move |_ctx: &WorkerCtx| {
+                    Ok(Box::new(AgentWorker::new(c.clone())) as Box<dyn WorkerLogic>)
+                })
+            }))
+        },
+    )?;
+    reg.register_stage(
+        "agentic_infer",
+        "shared inference fleet: serves every task's \"in_<task>\"/\"out_<task>\" port \
+         pair, stamping responses with the trainer weight version from \"sync\"",
+        vec![
+            OptSpec::required("tasks", crate::flow::registry::OptKind::Str, "comma task list"),
+            OptSpec::int("token_us", 50, "per-request decode latency (µs)"),
+        ],
+        |o| {
+            let cfg =
+                InferCfg { tasks: parse_csv(&o.str("tasks")?), token_us: o.u64("token_us")? };
+            if cfg.tasks.is_empty() {
+                bail!("agentic_infer: empty task list");
+            }
+            Ok(Box::new(move |_rank: usize| -> LogicFactory {
+                let c = cfg.clone();
+                Box::new(move |_ctx: &WorkerCtx| {
+                    Ok(Box::new(InferWorker::new(c.clone())) as Box<dyn WorkerLogic>)
+                })
+            }))
+        },
+    )?;
+    reg.register_stage(
+        "agentic_tools",
+        "tool-environment worker: executes each task's tool calls against a seeded \
+         registry of synthetic tools with deterministic latency and failures",
+        vec![
+            OptSpec::required("tasks", crate::flow::registry::OptKind::Str, "comma task list"),
+            OptSpec::int("seed", 0, "tool outcome seed"),
+            OptSpec::str(
+                "tools",
+                "search:150:0.05,calc:40,fetch:120:0.1",
+                "registry spec: name:latency_us:fail_rate, comma-separated",
+            ),
+        ],
+        |o| {
+            let cfg = ToolEnvCfg {
+                tasks: parse_csv(&o.str("tasks")?),
+                seed: o.u64("seed")?,
+                book: ToolBook::parse(&o.str("tools")?)?,
+            };
+            if cfg.tasks.is_empty() {
+                bail!("agentic_tools: empty task list");
+            }
+            Ok(Box::new(move |_rank: usize| -> LogicFactory {
+                let c = cfg.clone();
+                Box::new(move |_ctx: &WorkerCtx| {
+                    Ok(Box::new(ToolEnvWorker::new(c.clone())) as Box<dyn WorkerLogic>)
+                })
+            }))
+        },
+    )?;
+    reg.register_stage(
+        "agentic_reward",
+        "per-task reward stage: scores finished episodes by tool-success fraction",
+        vec![OptSpec::required("task", crate::flow::registry::OptKind::Str, "task name")],
+        |o| {
+            let cfg = RewardCfg { task: o.str("task")? };
+            Ok(Box::new(move |_rank: usize| -> LogicFactory {
+                let c = cfg.clone();
+                Box::new(move |_ctx: &WorkerCtx| {
+                    Ok(Box::new(RewardWorker::new(c.clone())) as Box<dyn WorkerLogic>)
+                })
+            }))
+        },
+    )?;
+    reg.register_stage(
+        "agentic_collect",
+        "trajectory-collector fan-in: batches each task's scored episodes; a batch \
+         carries the minimum member weight version",
+        vec![
+            OptSpec::required("tasks", crate::flow::registry::OptKind::Str, "comma task list"),
+            OptSpec::int("batch", 4, "episodes per training batch"),
+        ],
+        |o| {
+            let cfg =
+                CollectCfg { tasks: parse_csv(&o.str("tasks")?), batch: o.usize("batch")? };
+            if cfg.tasks.is_empty() {
+                bail!("agentic_collect: empty task list");
+            }
+            Ok(Box::new(move |_rank: usize| -> LogicFactory {
+                let c = cfg.clone();
+                Box::new(move |_ctx: &WorkerCtx| {
+                    Ok(Box::new(CollectWorker::new(c.clone())) as Box<dyn WorkerLogic>)
+                })
+            }))
+        },
+    )?;
+    reg.register_stage(
+        "agentic_train",
+        "trainer consuming one weighted edge per task with per-edge staleness bound: \
+         stale batches are down-weighted or dropped so a slow task degrades itself, \
+         not the trainer; emits per-step records on \"out\" and versions on \"sync\"",
+        vec![
+            OptSpec::required("tasks", crate::flow::registry::OptKind::Str, "comma task list"),
+            OptSpec::int("step_us", 100, "per-step optimization latency (µs)"),
+            OptSpec::float("staleness_decay", 0.5, "weight multiplier per version of lag"),
+        ],
+        |o| {
+            let cfg = TrainCfg {
+                tasks: parse_csv(&o.str("tasks")?),
+                step_us: o.u64("step_us")?,
+                staleness_decay: o.f64("staleness_decay")?,
+            };
+            if cfg.tasks.is_empty() {
+                bail!("agentic_train: empty task list");
+            }
+            Ok(Box::new(move |_rank: usize| -> LogicFactory {
+                let c = cfg.clone();
+                Box::new(move |_ctx: &WorkerCtx| {
+                    Ok(Box::new(TrainWorker::new(c.clone())) as Box<dyn WorkerLogic>)
+                })
+            }))
+        },
+    )?;
+    reg.declare_methods("agentic_rollout", &["run_episodes"])?;
+    reg.declare_methods("agentic_infer", &["serve"])?;
+    reg.declare_methods("agentic_tools", &["exec"])?;
+    reg.declare_methods("agentic_reward", &["score"])?;
+    reg.declare_methods("agentic_collect", &["gather"])?;
+    reg.declare_methods("agentic_train", &["step"])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_parsing() {
+        assert_eq!(parse_csv("a, b ,c,"), vec!["a", "b", "c"]);
+        assert!(parse_csv(" , ").is_empty());
+    }
+
+    #[test]
+    fn episode_lengths_are_stable_and_bounded() {
+        let w = AgentWorker::new(AgentCfg {
+            task: "search".into(),
+            seed: 11,
+            min_turns: 2,
+            max_turns: 6,
+            turn_slice: 0,
+            think_us: 0,
+            slow_factor: 1.0,
+            tools: vec!["a".into(), "b".into()],
+        });
+        for ep in 0..200 {
+            let t = w.turns_total(ep);
+            assert_eq!(t, w.turns_total(ep), "re-derivable after resume");
+            assert!((2..=6).contains(&t), "bounded, got {t}");
+        }
+        // Different tasks with the same seed draw different lengths.
+        let w2 = AgentWorker::new(AgentCfg { task: "math".into(), ..w.cfg.clone() });
+        assert!((0..200).any(|ep| w.turns_total(ep) != w2.turns_total(ep)));
+    }
+
+    #[test]
+    fn tool_choice_is_deterministic() {
+        let w = AgentWorker::new(AgentCfg {
+            task: "t".into(),
+            seed: 3,
+            min_turns: 1,
+            max_turns: 4,
+            turn_slice: 0,
+            think_us: 0,
+            slow_factor: 1.0,
+            tools: vec!["a".into(), "b".into(), "c".into()],
+        });
+        for ep in 0..32 {
+            for turn in 0..8 {
+                assert_eq!(w.pick_tool(ep, turn), w.pick_tool(ep, turn));
+            }
+        }
+    }
+
+    #[test]
+    fn partials_round_trip_episode_state() {
+        let w = AgentWorker::new(AgentCfg {
+            task: "search".into(),
+            seed: 5,
+            min_turns: 3,
+            max_turns: 3,
+            turn_slice: 2,
+            think_us: 0,
+            slow_factor: 1.0,
+            tools: vec!["a".into()],
+        });
+        let e = Ep { turn: 2, turns_total: 3, reward_acc: 1.5, version: 4, sliced: 2 };
+        let p = w.partial(9, &e);
+        assert_eq!(p.get("ep").and_then(Value::as_i64), Some(9));
+        assert_eq!(p.get("turn").and_then(Value::as_i64), Some(2));
+        assert_eq!(p.get("turns_total").and_then(Value::as_i64), Some(3));
+        assert_eq!(p.get("reward_acc").and_then(Value::as_f64), Some(1.5));
+        assert_eq!(p.get("version").and_then(Value::as_i64), Some(4));
+        assert_eq!(p.get("task").and_then(Value::as_str), Some("search"));
+    }
+
+    #[test]
+    fn register_kinds_are_distinct() {
+        let mut reg = crate::flow::StageRegistry::new();
+        register(&mut reg).unwrap();
+        for kind in [
+            "agentic_rollout",
+            "agentic_infer",
+            "agentic_tools",
+            "agentic_reward",
+            "agentic_collect",
+            "agentic_train",
+        ] {
+            assert!(reg.stage_kinds().contains(&kind), "{kind} registered");
+        }
+    }
+}

@@ -79,11 +79,20 @@ pub struct BoundPort {
     discipline: Dequeue,
     granularity: usize,
     hop: Option<Arc<WireHop>>,
+    staleness_bound: Option<u64>,
+    share: f64,
 }
 
 impl BoundPort {
     pub fn new(channel: Channel, discipline: Dequeue, granularity: usize) -> BoundPort {
-        BoundPort { channel, discipline, granularity: granularity.max(1), hop: None }
+        BoundPort {
+            channel,
+            discipline,
+            granularity: granularity.max(1),
+            hop: None,
+            staleness_bound: None,
+            share: 1.0,
+        }
     }
 
     /// A port whose producer side ships over a [`WireHop`] instead of the
@@ -100,7 +109,29 @@ impl BoundPort {
             discipline,
             granularity: granularity.max(1),
             hop: Some(Arc::new(hop)),
+            staleness_bound: None,
+            share: 1.0,
         }
+    }
+
+    /// Attach the edge's consumer-side policy attributes (staleness bound
+    /// and fan-in share) declared on the [`crate::flow`] edge.
+    pub fn with_policy(mut self, staleness_bound: Option<u64>, share: f64) -> BoundPort {
+        self.staleness_bound = staleness_bound;
+        self.share = if share > 0.0 && share.is_finite() { share } else { 1.0 };
+        self
+    }
+
+    /// Declared off-policy staleness bound of the edge, if any: the
+    /// maximum version lag the consumer admits before dropping an item.
+    pub fn staleness_bound(&self) -> Option<u64> {
+        self.staleness_bound
+    }
+
+    /// Declared relative fan-in share of this edge among sibling edges
+    /// feeding the same consumer method.
+    pub fn share(&self) -> f64 {
+        self.share
     }
 
     /// Whether producer-side calls route over a remote transport.

@@ -137,16 +137,33 @@ impl Write for WireStream {
     }
 }
 
+/// A bound Unix listener that unlinks its socket file when dropped.
+/// `std::os::unix::net::UnixListener` does **not** remove the filesystem
+/// entry on drop, so without this guard a partially failed
+/// `WireTransport::new` (node k binds, node k+1 errors) or an acceptor
+/// exiting on its own strands a stale `rlinf-wire-*.sock` in the temp
+/// dir forever.
+struct UdsListener {
+    listener: UnixListener,
+    path: PathBuf,
+}
+
+impl Drop for UdsListener {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
 enum WireListener {
     Tcp(TcpListener),
-    Uds(UnixListener),
+    Uds(UdsListener),
 }
 
 impl WireListener {
     fn accept(&self) -> std::io::Result<WireStream> {
         match self {
             WireListener::Tcp(l) => l.accept().map(|(s, _)| WireStream::Tcp(s)),
-            WireListener::Uds(l) => l.accept().map(|(s, _)| WireStream::Uds(s)),
+            WireListener::Uds(l) => l.listener.accept().map(|(s, _)| WireStream::Uds(s)),
         }
     }
 }
@@ -204,7 +221,8 @@ impl WireTransport {
                     ));
                     let _ = std::fs::remove_file(&path);
                     let l = UnixListener::bind(&path)?;
-                    (NodeAddr::Uds(path), WireListener::Uds(l))
+                    let guard = UdsListener { listener: l, path: path.clone() };
+                    (NodeAddr::Uds(path), WireListener::Uds(guard))
                 }
             };
             addrs.push(addr);
@@ -251,6 +269,20 @@ impl WireTransport {
         conns.insert(node, conn.clone());
         self.inner.metrics.record_static("comm.wire.connect", 1.0);
         Ok(conn)
+    }
+
+    /// Filesystem paths of this transport's UDS listener sockets (empty
+    /// for TCP). The files must exist while the transport is alive and be
+    /// unlinked once it (or a partially constructed listener) drops.
+    pub fn socket_paths(&self) -> Vec<PathBuf> {
+        self.inner
+            .addrs
+            .iter()
+            .filter_map(|a| match a {
+                NodeAddr::Uds(p) => Some(p.clone()),
+                NodeAddr::Tcp(_) => None,
+            })
+            .collect()
     }
 
     fn write_frame(&self, node: usize, parts: &[&[u8]]) -> Result<()> {

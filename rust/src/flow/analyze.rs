@@ -19,6 +19,7 @@
 //! | FA007 | warn     | dead stage: no edge ever touches it |
 //! | FA008 | warn     | pump coverage: several pumps contend for one channel |
 //! | FA009 | warn     | single-rank stage whose device demand must straddle a node boundary |
+//! | FA010 | error    | weighted fan-in whose declared shares round a task's per-round quota to zero |
 //!
 //! Three call sites wire the analyzer in:
 //! [`FlowDriver::launch_with`](super::FlowDriver) denies launches on
@@ -216,6 +217,7 @@ pub fn analyze_spec(spec: &FlowSpec, ctx: &AnalyzeCtx) -> AnalyzeReport {
     dead_stages(spec, ctx, &mut r);
     pump_coverage(spec, ctx, &mut r);
     node_straddle(spec, ctx, &mut r);
+    weighted_starvation(spec, ctx, &mut r);
     r
 }
 
@@ -570,6 +572,56 @@ fn node_straddle(spec: &FlowSpec, ctx: &AnalyzeCtx, r: &mut AnalyzeReport) {
                     cl.devices_per_node, cl.devices_per_node,
                 ),
             ));
+        }
+    }
+}
+
+/// `FA010` — weighted fan-in starvation. When several `weighted` edges
+/// feed one consumer (the per-task trainer fan-in), each dequeue round
+/// serves `R = Σ granularities` items and edge `e` gets
+/// `round(share_e / Σ shares · R)` of them. Declared shares lopsided
+/// enough to round an edge's quota to zero starve that task forever: its
+/// batches queue, its staleness climbs unboundedly, and once its producer
+/// closes the consumer can only shed the backlog as drops. That is never
+/// a sensible configuration — reject it statically instead of letting
+/// one task silently contribute nothing to training.
+fn weighted_starvation(spec: &FlowSpec, ctx: &AnalyzeCtx, r: &mut AnalyzeReport) {
+    use crate::channel::Dequeue;
+    let mut groups: std::collections::BTreeMap<(&str, &str), Vec<usize>> =
+        std::collections::BTreeMap::new();
+    for (i, e) in spec.edges.iter().enumerate() {
+        if e.discipline != Dequeue::Weighted {
+            continue;
+        }
+        if let Some(EndpointSpec::Stage { stage, method, .. }) = &e.consumer {
+            groups.entry((stage.as_str(), method.as_str())).or_default().push(i);
+        }
+    }
+    for ((stage, method), idxs) in groups {
+        if idxs.len() < 2 {
+            // A lone weighted edge always gets the whole round.
+            continue;
+        }
+        let share_sum: f64 = idxs.iter().map(|&i| spec.edges[i].share).sum();
+        let round: usize = idxs.iter().map(|&i| spec.edges[i].granularity).sum();
+        for &i in &idxs {
+            let e = &spec.edges[i];
+            let frac = e.share / share_sum.max(f64::MIN_POSITIVE);
+            let quota = (frac * round as f64 + 0.5).floor() as usize;
+            if quota == 0 {
+                r.push(Diagnostic::error(
+                    "FA010",
+                    ctx.span(&spec.name, &format!("[[edge]] {:?}.share", e.channel)),
+                    format!(
+                        "share {} of {} on the weighted fan-in into {stage:?}.{method} rounds \
+                         this edge's per-round quota to zero (round = Σ granularities = \
+                         {round}): the task it carries is starved — its batches only age until \
+                         they are shed as stale drops; raise its share or lower the siblings' \
+                         so round(share/Σshares · {round}) ≥ 1",
+                        e.share, share_sum,
+                    ),
+                ));
+            }
         }
     }
 }
@@ -945,6 +997,46 @@ mod tests {
         let one = ClusterConfig { nodes: 1, devices_per_node: 8, ..Default::default() };
         let r =
             analyze_spec(&mk(true), &AnalyzeCtx { cluster: Some(one), ..AnalyzeCtx::default() });
+        assert!(r.is_clean(), "{}", r.render());
+    }
+
+    #[test]
+    fn starved_weighted_fanin_is_fa010() {
+        let mk = |share_a: f64, share_b: f64| {
+            FlowSpec::new("t")
+                .stage(nop("col"))
+                .stage(nop("tr"))
+                .edge(
+                    Edge::new("a")
+                        .produced_at("col", "m", "out_a")
+                        .consumed_at("tr", "step", "in_a")
+                        .weighted()
+                        .share(share_a),
+                )
+                .edge(
+                    Edge::new("b")
+                        .produced_at("col", "m", "out_b")
+                        .consumed_at("tr", "step", "in_b")
+                        .weighted()
+                        .share(share_b),
+                )
+        };
+        // round = 1 + 1 = 2; round(1/9 · 2) = 0: task b is starved.
+        let r = analyze_spec(&mk(8.0, 1.0), &AnalyzeCtx::default());
+        assert_eq!(codes(&r), vec!["FA010"], "{}", r.render());
+        assert_eq!(r.errors(), 1, "FA010 denies");
+        // round(1/4 · 2) = 1: the lopsided-but-served split is fine.
+        let r = analyze_spec(&mk(3.0, 1.0), &AnalyzeCtx::default());
+        assert!(r.is_clean(), "{}", r.render());
+        // A lone weighted edge always gets the whole round: no group.
+        let spec = FlowSpec::new("t").stage(nop("col")).stage(nop("tr")).edge(
+            Edge::new("a")
+                .produced_at("col", "m", "out_a")
+                .consumed_at("tr", "step", "in_a")
+                .weighted()
+                .share(0.001),
+        );
+        let r = analyze_spec(&spec, &AnalyzeCtx::default());
         assert!(r.is_clean(), "{}", r.render());
     }
 

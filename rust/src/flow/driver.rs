@@ -31,7 +31,11 @@ use crate::cluster::DeviceSet;
 use crate::comm::CommManager;
 use crate::config::{AnalyzeConfig, FaultConfig, PlacementMode};
 use crate::data::Payload;
-use crate::sched::{EdgeSample, FlowProfile, ProfileDb, ProfileStore, SchedProblem, Scheduler, StageSample};
+use crate::sched::{
+    EdgeSample, FlowProfile, ProfileDb, ProfileStore, SchedProblem, Scheduler, StageSample,
+    TaskSample,
+};
+use crate::util::json::Value;
 use crate::worker::group::Services;
 use crate::worker::{GroupHandle, LockMode, WorkerGroup};
 
@@ -148,6 +152,8 @@ struct ResolvedEdge {
     /// snapped [`LaunchOpts::rechunk`] hint).
     granularity: usize,
     capacity: Option<usize>,
+    staleness_bound: Option<u64>,
+    share: f64,
     producer: Endpoint,
     consumer: Endpoint,
 }
@@ -368,6 +374,8 @@ impl FlowDriver {
                 discipline: e.discipline,
                 granularity,
                 capacity: e.capacity,
+                staleness_bound: e.staleness_bound,
+                share: e.share,
                 producer: resolve_ep(&e.producer),
                 consumer: resolve_ep(&e.consumer),
             });
@@ -601,7 +609,8 @@ impl FlowDriver {
                             && monitor.scope_poisoned(&scope))
                 }));
             }
-            let local = BoundPort::new(ch.clone(), e.discipline, e.granularity);
+            let local = BoundPort::new(ch.clone(), e.discipline, e.granularity)
+                .with_policy(e.staleness_bound, e.share);
             // Wire hop: producer and consumer node sets disjoint under a
             // remote transport. The ingress carries the consumer's device
             // window so producer→ingress backend selection matches
@@ -1454,6 +1463,21 @@ impl FlowRun<'_> {
             &edge_samples,
         );
 
+        let tasks = aggregate_tasks(&outcomes);
+        if !tasks.is_empty() {
+            let task_samples: Vec<TaskSample> = tasks
+                .iter()
+                .map(|t| TaskSample {
+                    task: t.task.clone(),
+                    episodes: t.episodes,
+                    turns: t.turns,
+                    mean_staleness: t.mean_staleness(),
+                    dropped: t.dropped,
+                })
+                .collect();
+            self.driver.services.profiles.record_tasks(&self.driver.profile_key, &task_samples);
+        }
+
         Ok(FlowReport {
             flow: self.driver.name.clone(),
             mode: self.driver.mode,
@@ -1461,10 +1485,78 @@ impl FlowRun<'_> {
             secs: self.t0.elapsed().as_secs_f64(),
             outcomes,
             edges,
+            tasks,
             rechunks: self.driver.rechunks.clone(),
             locks: self.driver.lock_counters().since(&self.locks0),
         })
     }
+}
+
+/// Per-task accounting for one run, aggregated from stage outputs: any
+/// output meta key of the form `task.<name>.<metric>` is summed across
+/// stages and ranks. The `agentic` stage kinds emit these; any worker
+/// logic may participate by following the same convention.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TaskStats {
+    pub task: String,
+    /// Episodes finished for this task.
+    pub episodes: u64,
+    /// Total turns driven across those episodes.
+    pub turns: u64,
+    /// Trainer steps that consumed this task's batches.
+    pub steps: u64,
+    /// Batches dropped for exceeding the edge's staleness bound.
+    pub dropped: u64,
+    /// Batches admitted but down-weighted for off-policy staleness.
+    pub downweighted: u64,
+    /// Sum of version lags over admitted batches (`staleness_n` counts).
+    pub staleness_sum: f64,
+    pub staleness_n: u64,
+}
+
+impl TaskStats {
+    /// Mean version lag of this task's admitted batches (0 when none).
+    pub fn mean_staleness(&self) -> f64 {
+        if self.staleness_n == 0 {
+            0.0
+        } else {
+            self.staleness_sum / self.staleness_n as f64
+        }
+    }
+}
+
+/// Fold `task.<name>.<metric>` output meta keys into per-task totals.
+fn aggregate_tasks(outcomes: &[StageOutcome]) -> Vec<TaskStats> {
+    let mut map: std::collections::BTreeMap<String, TaskStats> = std::collections::BTreeMap::new();
+    for o in outcomes {
+        for p in &o.outputs {
+            let Some(meta) = p.meta.as_obj() else { continue };
+            for (k, v) in meta {
+                let Some(rest) = k.strip_prefix("task.") else { continue };
+                let Some((task, metric)) = rest.rsplit_once('.') else { continue };
+                let n = match v {
+                    Value::Int(i) => *i as f64,
+                    Value::Float(f) => *f,
+                    _ => continue,
+                };
+                let t = map.entry(task.to_string()).or_insert_with(|| TaskStats {
+                    task: task.to_string(),
+                    ..TaskStats::default()
+                });
+                match metric {
+                    "episodes" => t.episodes += n.max(0.0) as u64,
+                    "turns" => t.turns += n.max(0.0) as u64,
+                    "steps" => t.steps += n.max(0.0) as u64,
+                    "dropped" => t.dropped += n.max(0.0) as u64,
+                    "downweighted" => t.downweighted += n.max(0.0) as u64,
+                    "staleness_sum" => t.staleness_sum += n,
+                    "staleness_n" => t.staleness_n += n.max(0.0) as u64,
+                    _ => {}
+                }
+            }
+        }
+    }
+    map.into_values().collect()
 }
 
 /// Results of one stage method across its ranks.
@@ -1498,6 +1590,9 @@ pub struct FlowReport {
     pub secs: f64,
     pub outcomes: Vec<StageOutcome>,
     pub edges: Vec<EdgeStats>,
+    /// Per-task accounting aggregated from stage outputs (empty for
+    /// workloads that emit no `task.*` counters).
+    pub tasks: Vec<TaskStats>,
     /// Spec-level re-chunking adjustments in force for this run: scheduler
     /// hints snapped to each edge's declared granularity options.
     pub rechunks: Vec<Rechunk>,
@@ -1520,6 +1615,11 @@ impl FlowReport {
         self.edges.iter().find(|e| e.channel == channel)
     }
 
+    /// Aggregated counters for one task (agentic workloads).
+    pub fn task(&self, name: &str) -> Option<&TaskStats> {
+        self.tasks.iter().find(|t| t.task == name)
+    }
+
     /// Human-readable rendering for logs.
     pub fn render(&self) -> String {
         let mut s = format!(
@@ -1533,6 +1633,19 @@ impl FlowReport {
             s.push_str(&format!(
                 "  edge {} [{}]: {} put, {} got, {} queued\n",
                 e.channel, e.discipline, e.put, e.got, e.backlog
+            ));
+        }
+        for t in &self.tasks {
+            s.push_str(&format!(
+                "  task {}: {} episodes, {} turns, {} steps, staleness {:.2} mean, \
+                 {} dropped, {} downweighted\n",
+                t.task,
+                t.episodes,
+                t.turns,
+                t.steps,
+                t.mean_staleness(),
+                t.dropped,
+                t.downweighted
             ));
         }
         for r in &self.rechunks {

@@ -11,7 +11,7 @@
 //! ```toml
 //! [flow]
 //! name = "demo"                  # becomes FlowSpec::new("demo")
-//! workload = "generic"           # generic | grpo | embodied (runner choice)
+//! workload = "generic"           # generic | grpo | embodied | agentic (runner choice)
 //! mode = "disaggregated"         # placement; falls back to [sched].mode
 //!
 //! [[stage]]
@@ -107,6 +107,10 @@ pub struct EdgeDecl {
     pub granularity: usize,
     pub granularity_options: Vec<usize>,
     pub capacity: Option<usize>,
+    /// Off-policy staleness bound (see [`crate::flow::Edge::staleness_bound`]).
+    pub staleness_bound: Option<u64>,
+    /// Relative fan-in share (see [`crate::flow::Edge::share`]).
+    pub share: f64,
     /// Synthetic items the generic runner feeds into a driver-produced
     /// edge (ignored by workload-specific runners).
     pub feed: usize,
@@ -222,7 +226,8 @@ pub struct FlowManifest {
     /// in-memory text).
     pub origin: String,
     pub name: String,
-    /// Runner dispatch: `"generic"`, `"grpo"`, or `"embodied"`.
+    /// Runner dispatch: `"generic"`, `"grpo"`, `"embodied"`, or
+    /// `"agentic"`.
     pub workload: String,
     /// `[flow].mode` override (`None` defers to `[sched].mode`).
     pub mode: Option<PlacementMode>,
@@ -304,9 +309,10 @@ impl FlowManifest {
             bail!("{origin}: [flow].name must be non-empty and ':'-free, got {name:?}");
         }
         let workload = flow.str_or("workload", "generic")?;
-        if !["generic", "grpo", "embodied"].contains(&workload.as_str()) {
+        if !["generic", "grpo", "embodied", "agentic"].contains(&workload.as_str()) {
             bail!(
-                "{origin}: [flow].workload must be generic, grpo, or embodied; got {workload:?}"
+                "{origin}: [flow].workload must be generic, grpo, embodied, or agentic; \
+                 got {workload:?}"
             );
         }
         let mode = match flow.opt_raw("mode") {
@@ -370,6 +376,8 @@ impl FlowManifest {
                 "granularity",
                 "granularity_options",
                 "capacity",
+                "staleness_bound",
+                "share",
                 "feed",
             ])?;
             let discipline = match sect.str_or("discipline", "fifo")?.as_str() {
@@ -388,6 +396,8 @@ impl FlowManifest {
                 granularity: sect.usize_or("granularity", 1)?.max(1),
                 granularity_options: sect.arr_usize("granularity_options")?,
                 capacity: sect.usize_opt("capacity")?,
+                staleness_bound: sect.u64_opt("staleness_bound")?,
+                share: sect.f64_or("share", 1.0)?,
                 feed: sect.usize_or("feed", 0)?,
                 channel,
             });
@@ -527,6 +537,12 @@ impl FlowManifest {
             }
             if let Some(cap) = e.capacity {
                 edge = edge.capacity(cap);
+            }
+            if let Some(sb) = e.staleness_bound {
+                edge = edge.staleness_bound(sb);
+            }
+            if e.share != 1.0 {
+                edge = edge.share(e.share);
             }
             spec = spec.edge(edge);
         }

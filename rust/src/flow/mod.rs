@@ -47,7 +47,7 @@ pub use analyze::{
 pub use checkpoint::FlowCheckpoint;
 pub use driver::{
     EdgeStats, FlowDriver, FlowReport, FlowRun, LaunchOpts, Rechunk, Relaunch, ResizeSlot,
-    RestartTracker, StageOutcome, StagePlan,
+    RestartTracker, StageOutcome, StagePlan, TaskStats,
 };
 pub use graph::WorkflowGraph;
 pub use manifest::FlowManifest;

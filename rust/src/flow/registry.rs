@@ -234,6 +234,7 @@ impl StageRegistry {
         crate::train::worker::register(&mut reg).expect("train kind is distinct");
         crate::train::advantage::register_pump(&mut reg).expect("group_adv pump is distinct");
         crate::embodied::worker::register(&mut reg).expect("embodied kinds are distinct");
+        crate::agentic::register(&mut reg).expect("agentic kinds are distinct");
         reg
     }
 
@@ -610,6 +611,16 @@ mod tests {
     fn builtin_kinds_present() {
         let reg = StageRegistry::builtin();
         for k in ["rollout", "infer", "train", "sim", "policy", "relay", "sink", "chaos"] {
+            assert!(reg.stage_kinds().contains(&k), "missing stage kind {k}");
+        }
+        for k in [
+            "agentic_rollout",
+            "agentic_infer",
+            "agentic_tools",
+            "agentic_reward",
+            "agentic_collect",
+            "agentic_train",
+        ] {
             assert!(reg.stage_kinds().contains(&k), "missing stage kind {k}");
         }
         for k in ["forward", "group_adv"] {

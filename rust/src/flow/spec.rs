@@ -151,6 +151,16 @@ pub struct EdgeSpec {
     /// `TryPut::Full` from the non-blocking senders) once this many items
     /// are queued. `None` = unbounded.
     pub capacity: Option<usize>,
+    /// Off-policy staleness bound for fan-in edges into a trainer: the
+    /// maximum consumer-version lag (trainer version − item version) a
+    /// batch may carry before the consumer drops it instead of training
+    /// on it. `None` = unbounded (no staleness policy).
+    pub staleness_bound: Option<u64>,
+    /// Relative fan-in share of this edge when several edges feed the same
+    /// consumer stage+method (per-task trainer fan-in). The consumer's
+    /// per-round quota for this edge is proportional to
+    /// `share / Σ shares`. Default 1.0.
+    pub share: f64,
 }
 
 /// Builder for one typed edge.
@@ -167,6 +177,8 @@ impl Edge {
             granularity: 1,
             granularity_options: Vec::new(),
             capacity: None,
+            staleness_bound: None,
+            share: 1.0,
         })
     }
 
@@ -248,6 +260,22 @@ impl Edge {
     /// with the non-blocking `try_send*` port methods).
     pub fn capacity(mut self, cap: usize) -> Edge {
         self.0.capacity = if cap == 0 { None } else { Some(cap) };
+        self
+    }
+
+    /// Bound the off-policy staleness the consumer tolerates on this edge:
+    /// items whose version lags the consumer's by more than `bound` are
+    /// dropped rather than consumed. `0` still admits on-policy items.
+    pub fn staleness_bound(mut self, bound: u64) -> Edge {
+        self.0.staleness_bound = Some(bound);
+        self
+    }
+
+    /// Relative fan-in share of this edge among sibling edges feeding the
+    /// same consumer stage+method (non-positive values are snapped to the
+    /// default 1.0).
+    pub fn share(mut self, s: f64) -> Edge {
+        self.0.share = if s > 0.0 && s.is_finite() { s } else { 1.0 };
         self
     }
 }
@@ -375,6 +403,12 @@ impl FlowSpec {
                     );
                 if let Some(cap) = e.capacity {
                     o.set("capacity", cap);
+                }
+                if let Some(sb) = e.staleness_bound {
+                    o.set("staleness_bound", sb);
+                }
+                if e.share != 1.0 {
+                    o.set("share", e.share);
                 }
                 o
             })
@@ -742,6 +776,34 @@ mod tests {
         let sig = mk("a").signature();
         assert_eq!(sig.get_path("flow").unwrap().as_str(), Some("sig"));
         assert_eq!(sig.get_path("stages").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn staleness_and_share_builders() {
+        let spec = FlowSpec::new("t")
+            .stage(nop("a"))
+            .stage(nop("b"))
+            .edge(
+                Edge::new("x")
+                    .produced_by("a", "m")
+                    .consumed_by("b", "n")
+                    .weighted()
+                    .staleness_bound(2)
+                    .share(3.0),
+            )
+            .edge(Edge::new("y").produced_by_driver().consumed_at("b", "n", "aux").share(-1.0));
+        assert_eq!(spec.edges[0].staleness_bound, Some(2));
+        assert_eq!(spec.edges[0].share, 3.0);
+        assert_eq!(spec.edges[1].share, 1.0, "non-positive share snaps to default");
+        spec.validate().unwrap();
+
+        // Defaulted edges omit the keys so pre-existing signatures are stable.
+        let sig = spec.signature();
+        let edges = sig.get_path("edges").unwrap().as_arr().unwrap().clone();
+        assert!(edges[0].get("staleness_bound").is_some());
+        assert!(edges[0].get("share").is_some());
+        assert!(edges[1].get("staleness_bound").is_none());
+        assert!(edges[1].get("share").is_none());
     }
 
     #[test]

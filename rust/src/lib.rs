@@ -29,6 +29,7 @@ pub mod rollout;
 pub mod infer;
 pub mod train;
 pub mod embodied;
+pub mod agentic;
 pub mod baseline;
 pub mod workflow;
 pub mod simulator;

@@ -7,4 +7,6 @@ pub mod profile;
 
 pub use algorithm1::{SchedProblem, Scheduler};
 pub use plan::Plan;
-pub use profile::{EdgeObs, EdgeSample, FlowProfile, ProfileDb, ProfileStore, StageSample};
+pub use profile::{
+    EdgeObs, EdgeSample, FlowProfile, ProfileDb, ProfileStore, StageSample, TaskObs, TaskSample,
+};

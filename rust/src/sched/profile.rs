@@ -192,6 +192,27 @@ pub struct EdgeObs {
     pub backlog: f64,
 }
 
+/// One task's accounting from a finished `FlowRun` (agentic workloads:
+/// per-task episodes, turns, off-policy staleness, and drop counts — see
+/// `flow::TaskStats`).
+#[derive(Debug, Clone)]
+pub struct TaskSample {
+    pub task: String,
+    pub episodes: u64,
+    pub turns: u64,
+    pub mean_staleness: f64,
+    pub dropped: u64,
+}
+
+/// EWMA-merged per-task accounting (per run).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct TaskObs {
+    pub episodes: f64,
+    pub turns: f64,
+    pub mean_staleness: f64,
+    pub dropped: f64,
+}
+
 /// Everything the store knows about one flow topology.
 #[derive(Debug, Clone, Default)]
 pub struct FlowProfile {
@@ -202,6 +223,9 @@ pub struct FlowProfile {
     pub workload: BTreeMap<String, f64>,
     /// Per-edge occupancy (channel -> EWMA of put/got/backlog).
     pub edges: BTreeMap<String, EdgeObs>,
+    /// Per-task accounting (agentic workloads; task -> EWMA of
+    /// episodes/turns/staleness/drops per run).
+    pub tasks: BTreeMap<String, TaskObs>,
     /// Measured runs folded in (seeding does not count as a run).
     pub runs: u64,
 }
@@ -315,6 +339,37 @@ impl ProfileStore {
         }
     }
 
+    /// Fold one finished run's per-task accounting in (agentic workloads),
+    /// EWMA-merged like [`ProfileStore::record_run`]. Kept separate so
+    /// task-free workloads pay nothing.
+    pub fn record_tasks(&self, key: &str, tasks: &[TaskSample]) {
+        if tasks.is_empty() {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        let alpha = inner.alpha;
+        let prof = inner.flows.entry(key.to_string()).or_default();
+        for t in tasks {
+            let fresh = TaskObs {
+                episodes: t.episodes as f64,
+                turns: t.turns as f64,
+                mean_staleness: t.mean_staleness,
+                dropped: t.dropped as f64,
+            };
+            let obs = match prof.tasks.get(&t.task) {
+                Some(old) => TaskObs {
+                    episodes: alpha * fresh.episodes + (1.0 - alpha) * old.episodes,
+                    turns: alpha * fresh.turns + (1.0 - alpha) * old.turns,
+                    mean_staleness: alpha * fresh.mean_staleness
+                        + (1.0 - alpha) * old.mean_staleness,
+                    dropped: alpha * fresh.dropped + (1.0 - alpha) * old.dropped,
+                },
+                None => fresh,
+            };
+            prof.tasks.insert(t.task.clone(), obs);
+        }
+    }
+
     /// Seed one flow's cost table from an offline profile (overwrites any
     /// colliding samples; does not count as a measured run).
     pub fn seed_flow(&self, key: &str, db: &ProfileDb, workload: &HashMap<String, usize>) {
@@ -379,6 +434,18 @@ impl ProfileStore {
                 ev.set(c, ov);
             }
             fv.set("edges", ev);
+            if !p.tasks.is_empty() {
+                let mut tv = Value::obj();
+                for (t, o) in &p.tasks {
+                    let mut ov = Value::obj();
+                    ov.set("episodes", o.episodes)
+                        .set("turns", o.turns)
+                        .set("mean_staleness", o.mean_staleness)
+                        .set("dropped", o.dropped);
+                    tv.set(t, ov);
+                }
+                fv.set("tasks", tv);
+            }
             flows.set(key, fv);
         }
         root.set("flows", flows);
@@ -417,6 +484,22 @@ impl ProfileStore {
                             put: o.get("put").and_then(Value::as_f64).unwrap_or(0.0),
                             got: o.get("got").and_then(Value::as_f64).unwrap_or(0.0),
                             backlog: o.get("backlog").and_then(Value::as_f64).unwrap_or(0.0),
+                        },
+                    );
+                }
+            }
+            if let Some(tasks) = fv.get("tasks").and_then(Value::as_obj) {
+                for (t, o) in tasks {
+                    prof.tasks.insert(
+                        t.clone(),
+                        TaskObs {
+                            episodes: o.get("episodes").and_then(Value::as_f64).unwrap_or(0.0),
+                            turns: o.get("turns").and_then(Value::as_f64).unwrap_or(0.0),
+                            mean_staleness: o
+                                .get("mean_staleness")
+                                .and_then(Value::as_f64)
+                                .unwrap_or(0.0),
+                            dropped: o.get("dropped").and_then(Value::as_f64).unwrap_or(0.0),
                         },
                     );
                 }
@@ -532,6 +615,29 @@ mod tests {
         assert_eq!(o.put, 15.0);
         assert_eq!(o.got, 14.0);
         assert_eq!(o.backlog, 1.0);
+    }
+
+    #[test]
+    fn task_accounting_merges_and_roundtrips() {
+        let store = ProfileStore::with_alpha(0.5);
+        let t = |e: u64, s: f64| TaskSample {
+            task: "search".into(),
+            episodes: e,
+            turns: e * 3,
+            mean_staleness: s,
+            dropped: 1,
+        };
+        store.record_tasks("k", &[t(10, 0.0)]);
+        store.record_tasks("k", &[t(20, 2.0)]);
+        let p = store.snapshot("k").unwrap();
+        let o = p.tasks["search"];
+        assert_eq!(o.episodes, 15.0);
+        assert_eq!(o.turns, 45.0);
+        assert_eq!(o.mean_staleness, 1.0);
+        assert_eq!(o.dropped, 1.0);
+
+        let back = ProfileStore::from_json(&store.to_json());
+        assert_eq!(back.snapshot("k").unwrap().tasks, p.tasks);
     }
 
     #[test]

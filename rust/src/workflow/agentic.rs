@@ -1,0 +1,857 @@
+//! The agentic RL workflow runner: several multi-turn tool-calling tasks
+//! sharing **one** inference fleet, declared as a cyclic [`FlowSpec`].
+//!
+//! Per task `k` the spec declares a rollout agent and a reward stage; the
+//! inference fleet, tool environment, collector, and trainer are shared:
+//!
+//! ```text
+//! driver ─seeds_k→ agent_k ─req_k→ infer ─act_k→ tools ─obs_k→ agent_k
+//!                  agent_k ─done_k→ reward_k ─scored_k→ collect
+//!                  collect ─batch_k (weighted, staleness_bound, share)→ train
+//!                  train ─wsync→ infer        train ─report→ driver
+//! ```
+//!
+//! Every task's cycle shares the `infer` node, so the whole graph
+//! condenses into one SCC: all stages co-run, exempt from device locking
+//! (Algorithm-1 auto planning skips cyclic flows — `Auto` coerces to
+//! `Collocated`). The trainer consumes one *weighted* edge per task with a
+//! declared `staleness_bound` and `share`, so a slow task's stale batches
+//! are down-weighted or dropped without stalling the other tasks.
+//!
+//! **Partial-rollout handoff:** episodes that exhaust their `turn_slice`
+//! budget return from the rollout stage as `"partials"` records. The
+//! runner carries them across iterations, elastic resizes, and full fault
+//! relaunches, re-seeding them with their accumulated state; stateless
+//! hash-derived draws (`agentic::tools`) make the replay exact, so
+//! resizing mid-episode loses nothing.
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::agentic::{
+    AgentCfg, AgentWorker, CollectCfg, CollectWorker, InferCfg, InferWorker, RewardCfg,
+    RewardWorker, ToolBook, ToolEnvCfg, ToolEnvWorker, TrainCfg, TrainWorker,
+};
+use crate::channel::LockCounters;
+use crate::cluster::Cluster;
+use crate::config::{PlacementMode, RunConfig};
+use crate::data::Payload;
+use crate::flow::{
+    Edge, FlowCheckpoint, FlowDriver, FlowReport, FlowSpec, LaunchOpts, Relaunch, Stage, TaskStats,
+};
+use crate::util::json::Value;
+use crate::worker::group::Services;
+use crate::worker::WorkerLogic;
+
+/// One task in the agentic mix.
+#[derive(Debug, Clone)]
+pub struct AgenticTask {
+    pub name: String,
+    /// Relative trainer fan-in share (the `batch_<task>` edge's `share`).
+    pub share: f64,
+    /// Off-policy staleness bound on the trainer edge; `None` = unbounded.
+    pub staleness_bound: Option<u64>,
+    /// Per-turn latency multiplier — raise to model a deliberately slow
+    /// task (its batches then arrive stale and degrade only themselves).
+    pub slow_factor: f64,
+    pub min_turns: i64,
+    pub max_turns: i64,
+}
+
+impl AgenticTask {
+    pub fn new(name: &str) -> AgenticTask {
+        AgenticTask {
+            name: name.to_string(),
+            share: 1.0,
+            staleness_bound: Some(8),
+            slow_factor: 1.0,
+            min_turns: 2,
+            max_turns: 5,
+        }
+    }
+
+    pub fn share(mut self, s: f64) -> AgenticTask {
+        self.share = s;
+        self
+    }
+
+    pub fn staleness_bound(mut self, b: u64) -> AgenticTask {
+        self.staleness_bound = Some(b);
+        self
+    }
+
+    pub fn unbounded_staleness(mut self) -> AgenticTask {
+        self.staleness_bound = None;
+        self
+    }
+
+    pub fn slow(mut self, factor: f64) -> AgenticTask {
+        self.slow_factor = factor;
+        self
+    }
+
+    pub fn turns(mut self, lo: i64, hi: i64) -> AgenticTask {
+        self.min_turns = lo;
+        self.max_turns = hi.max(lo);
+        self
+    }
+}
+
+/// Runner options layered on a [`RunConfig`].
+#[derive(Debug, Clone)]
+pub struct AgenticOpts {
+    pub tasks: Vec<AgenticTask>,
+    /// Fresh episodes seeded per task per iteration (0 = `cfg.rollout.batch`).
+    pub episodes_per_iter: usize,
+    /// Per-episode turn budget per iteration; longer episodes park as
+    /// partial rollouts and resume next iteration. 0 = unlimited.
+    pub turn_slice: usize,
+    /// Episodes per training batch (collector fan-in).
+    pub batch: usize,
+    pub think_us: u64,
+    pub token_us: u64,
+    pub step_us: u64,
+    /// Trainer weight multiplier per version of lag on admitted batches.
+    pub staleness_decay: f64,
+    /// Tool registry spec: `name:latency_us:fail_rate`, comma-separated.
+    pub tools: String,
+    /// After the final iteration, keep running seed-free rounds until all
+    /// parked episodes finish (exact episode conservation).
+    pub drain_partials: bool,
+    pub verbose: bool,
+    /// Write a [`FlowCheckpoint`] (including parked partial rollouts)
+    /// after every finished iteration.
+    pub checkpoint_dir: Option<String>,
+    /// Resume from a checkpoint directory: restore parked partials and the
+    /// episode counter, skip completed iterations.
+    pub resume_from: Option<String>,
+}
+
+impl Default for AgenticOpts {
+    fn default() -> AgenticOpts {
+        AgenticOpts {
+            tasks: vec![AgenticTask::new("search"), AgenticTask::new("math")],
+            episodes_per_iter: 0,
+            turn_slice: 0,
+            batch: 4,
+            think_us: 20,
+            token_us: 50,
+            step_us: 100,
+            staleness_decay: 0.5,
+            tools: "search:150:0.05,calc:40,fetch:120:0.1".to_string(),
+            drain_partials: true,
+            verbose: false,
+            checkpoint_dir: None,
+            resume_from: None,
+        }
+    }
+}
+
+/// Per-iteration statistics.
+#[derive(Debug, Clone)]
+pub struct AgenticIterStats {
+    pub iter: usize,
+    pub secs: f64,
+    /// Episodes finished this iteration (across all tasks).
+    pub episodes: u64,
+    pub episodes_per_sec: f64,
+    pub turns: u64,
+    pub train_steps: u64,
+    /// Seconds the trainer spent with every task queue empty.
+    pub stall_secs: f64,
+    /// Batches dropped for exceeding a staleness bound.
+    pub dropped: u64,
+    /// Episodes parked for handoff at the end of this iteration.
+    pub carried_partials: usize,
+}
+
+/// Whole-run report.
+#[derive(Debug, Clone)]
+pub struct AgenticReport {
+    pub iters: Vec<AgenticIterStats>,
+    /// Per-task totals accumulated over every iteration (episodes, turns,
+    /// trainer steps, staleness drops/down-weights).
+    pub tasks: Vec<TaskStats>,
+    pub mode: &'static str,
+    pub plan_source: &'static str,
+    pub relaunches: Vec<Relaunch>,
+    pub locks: LockCounters,
+    /// Episodes still parked when the run ended (0 when `drain_partials`).
+    pub leftover_partials: usize,
+}
+
+impl AgenticReport {
+    pub fn total_episodes(&self) -> u64 {
+        self.tasks.iter().map(|t| t.episodes).sum()
+    }
+
+    pub fn total_steps(&self) -> u64 {
+        self.tasks.iter().map(|t| t.steps).sum()
+    }
+
+    pub fn task(&self, name: &str) -> Option<&TaskStats> {
+        self.tasks.iter().find(|t| t.task == name)
+    }
+
+    pub fn mean_episodes_per_sec(&self) -> f64 {
+        if self.iters.is_empty() {
+            return 0.0;
+        }
+        self.iters.iter().map(|i| i.episodes_per_sec).sum::<f64>() / self.iters.len() as f64
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut v = Value::obj();
+        v.set("mode", self.mode)
+            .set("plan_source", self.plan_source)
+            .set("episodes", self.total_episodes())
+            .set("steps", self.total_steps())
+            .set("mean_episodes_per_sec", self.mean_episodes_per_sec())
+            .set("relaunches", self.relaunches.len())
+            .set("leftover_partials", self.leftover_partials);
+        let tasks: Vec<Value> = self
+            .tasks
+            .iter()
+            .map(|t| {
+                let mut e = Value::obj();
+                e.set("task", t.task.as_str())
+                    .set("episodes", t.episodes)
+                    .set("turns", t.turns)
+                    .set("steps", t.steps)
+                    .set("dropped", t.dropped)
+                    .set("downweighted", t.downweighted)
+                    .set("mean_staleness", t.mean_staleness());
+                e
+            })
+            .collect();
+        v.set("tasks", Value::Arr(tasks));
+        let iters: Vec<Value> = self
+            .iters
+            .iter()
+            .map(|i| {
+                let mut e = Value::obj();
+                e.set("iter", i.iter)
+                    .set("secs", i.secs)
+                    .set("episodes", i.episodes)
+                    .set("episodes_per_sec", i.episodes_per_sec)
+                    .set("train_steps", i.train_steps)
+                    .set("stall_secs", i.stall_secs)
+                    .set("dropped", i.dropped)
+                    .set("carried_partials", i.carried_partials);
+                e
+            })
+            .collect();
+        v.set("iters", Value::Arr(iters));
+        v
+    }
+}
+
+/// Declare the agentic macro flow for `opts.tasks`. Public so flow
+/// manifests can be round-tripped against the canonical topology —
+/// `configs/agentic.flow.toml` must produce this spec's shape. The runner
+/// addresses stages and channels by the canonical names: trainer stage
+/// `train` (method `step`), driver sink `report`, and one
+/// `seeds_<task>` source per task.
+pub fn agentic_spec(cfg: &RunConfig, opts: &AgenticOpts, _n_devices: usize) -> Result<FlowSpec> {
+    if opts.tasks.is_empty() {
+        bail!("agentic workload needs at least one task");
+    }
+    let book = ToolBook::parse(&opts.tools)?;
+    let tool_names: Vec<String> = book.names().iter().map(|s| s.to_string()).collect();
+    let task_names: Vec<String> = opts.tasks.iter().map(|t| t.name.clone()).collect();
+
+    let infer_cfg = InferCfg { tasks: task_names.clone(), token_us: opts.token_us };
+    let tools_cfg = ToolEnvCfg { tasks: task_names.clone(), seed: cfg.seed ^ 0x700, book };
+    let collect_cfg = CollectCfg { tasks: task_names.clone(), batch: opts.batch.max(1) };
+    let train_cfg = TrainCfg {
+        tasks: task_names.clone(),
+        step_us: opts.step_us,
+        staleness_decay: opts.staleness_decay,
+    };
+
+    let mut spec = FlowSpec::new("agentic")
+        .stage(
+            Stage::new("infer", move |_rank| {
+                let c = infer_cfg.clone();
+                Box::new(move |_ctx| Ok(Box::new(InferWorker::new(c.clone())) as Box<dyn WorkerLogic>))
+            })
+            .single_rank(),
+        )
+        .stage(
+            Stage::new("tools", move |_rank| {
+                let c = tools_cfg.clone();
+                Box::new(move |_ctx| {
+                    Ok(Box::new(ToolEnvWorker::new(c.clone())) as Box<dyn WorkerLogic>)
+                })
+            })
+            .single_rank(),
+        )
+        .stage(
+            Stage::new("collect", move |_rank| {
+                let c = collect_cfg.clone();
+                Box::new(move |_ctx| {
+                    Ok(Box::new(CollectWorker::new(c.clone())) as Box<dyn WorkerLogic>)
+                })
+            })
+            .single_rank(),
+        )
+        .stage(
+            Stage::new("train", move |_rank| {
+                let c = train_cfg.clone();
+                Box::new(move |_ctx| Ok(Box::new(TrainWorker::new(c.clone())) as Box<dyn WorkerLogic>))
+            })
+            .single_rank(),
+        );
+
+    for t in &opts.tasks {
+        let name = t.name.clone();
+        let agent = format!("agent_{name}");
+        let reward = format!("reward_{name}");
+        let agent_cfg = AgentCfg {
+            task: name.clone(),
+            seed: cfg.seed,
+            min_turns: t.min_turns,
+            max_turns: t.max_turns,
+            turn_slice: opts.turn_slice as i64,
+            think_us: opts.think_us,
+            slow_factor: t.slow_factor,
+            tools: tool_names.clone(),
+        };
+        let reward_cfg = RewardCfg { task: name.clone() };
+        spec = spec
+            .stage(
+                Stage::new(&agent, move |_rank| {
+                    let c = agent_cfg.clone();
+                    Box::new(move |_ctx| {
+                        Ok(Box::new(AgentWorker::new(c.clone())) as Box<dyn WorkerLogic>)
+                    })
+                })
+                .single_rank(),
+            )
+            .stage(
+                Stage::new(&reward, move |_rank| {
+                    let c = reward_cfg.clone();
+                    Box::new(move |_ctx| {
+                        Ok(Box::new(RewardWorker::new(c.clone())) as Box<dyn WorkerLogic>)
+                    })
+                })
+                .single_rank(),
+            )
+            .edge(
+                Edge::new(&format!("seeds_{name}"))
+                    .produced_by_driver()
+                    .consumed_by(&agent, "run_episodes"),
+            )
+            .edge(
+                Edge::new(&format!("req_{name}"))
+                    .produced_by(&agent, "run_episodes")
+                    .consumed_at("infer", "serve", &format!("in_{name}")),
+            )
+            .edge(
+                Edge::new(&format!("act_{name}"))
+                    .produced_at("infer", "serve", &format!("out_{name}"))
+                    .consumed_at("tools", "exec", &format!("in_{name}")),
+            )
+            .edge(
+                Edge::new(&format!("obs_{name}"))
+                    .produced_at("tools", "exec", &format!("out_{name}"))
+                    .consumed_at(&agent, "run_episodes", "rsp"),
+            )
+            .edge(
+                Edge::new(&format!("done_{name}"))
+                    .produced_at(&agent, "run_episodes", "done")
+                    .consumed_by(&reward, "score"),
+            )
+            .edge(
+                Edge::new(&format!("scored_{name}"))
+                    .produced_by(&reward, "score")
+                    .consumed_at("collect", "gather", &format!("in_{name}")),
+            )
+            .edge({
+                let mut e = Edge::new(&format!("batch_{name}"))
+                    .produced_at("collect", "gather", &format!("out_{name}"))
+                    .consumed_at("train", "step", &format!("in_{name}"))
+                    .weighted()
+                    .share(t.share);
+                if let Some(b) = t.staleness_bound {
+                    e = e.staleness_bound(b);
+                }
+                e
+            });
+    }
+
+    Ok(spec
+        .edge(Edge::new("report").produced_by("train", "step").consumed_by_driver())
+        .edge(
+            Edge::new("wsync")
+                .produced_at("train", "step", "sync")
+                .consumed_at("infer", "serve", "sync"),
+        ))
+}
+
+/// Driver-fed seed channels of a spec (`seeds_<task>`), in declaration
+/// order — how the runner discovers the task set of a manifest-built spec.
+pub fn seed_channels(spec: &FlowSpec) -> Vec<String> {
+    spec.edges
+        .iter()
+        .filter(|e| e.channel.starts_with("seeds_"))
+        .map(|e| e.channel.clone())
+        .collect()
+}
+
+/// Run the agentic workload on a private cluster built from `cfg.cluster`.
+pub fn run_agentic(cfg: &RunConfig, opts: &AgenticOpts) -> Result<AgenticReport> {
+    let services = Services::with_transport(Cluster::new(cfg.cluster.clone()), &cfg.transport)?;
+    run_agentic_shared(cfg, opts, &services, LaunchOpts::default())
+}
+
+/// Run against **shared** services under multi-flow [`LaunchOpts`] — the
+/// `FlowSupervisor` entry point. Rebuilds the canonical spec on demand, so
+/// relaunch-on-resize is fully supported.
+pub fn run_agentic_shared(
+    cfg: &RunConfig,
+    opts: &AgenticOpts,
+    services: &Services,
+    launch: LaunchOpts,
+) -> Result<AgenticReport> {
+    let c = cfg.clone();
+    let o = opts.clone();
+    run_agentic_elastic(cfg, opts, services, launch, move |n| agentic_spec(&c, &o, n))
+}
+
+/// Run over a **caller-supplied spec** — the entry point flow manifests
+/// use (`configs/agentic.flow.toml` → `FlowManifest::to_spec` → here).
+/// The spec must keep the canonical names (see [`agentic_spec`]).
+/// One-shot: pending resize offers are ignored — use
+/// [`run_agentic_elastic`] with a spec factory for relaunch-on-resize.
+pub fn run_agentic_with_spec(
+    cfg: &RunConfig,
+    opts: &AgenticOpts,
+    services: &Services,
+    launch: LaunchOpts,
+    spec: FlowSpec,
+) -> Result<AgenticReport> {
+    let mut once = Some(spec);
+    run_agentic_elastic(cfg, opts, services, launch, move |_n| {
+        once.take()
+            .ok_or_else(|| anyhow!("one-shot spec already consumed; relaunch needs a spec factory"))
+    })
+}
+
+/// The adaptive agentic runner: between iterations, a pending resize offer
+/// triggers a drain-and-relaunch over the wider window. In-flight episodes
+/// survive as partial rollouts — the previous iteration fully drained, the
+/// parked episodes live in runner state, and the relaunched flow re-seeds
+/// them — so a resize mid-episode loses nothing.
+pub fn run_agentic_elastic(
+    cfg: &RunConfig,
+    opts: &AgenticOpts,
+    services: &Services,
+    launch: LaunchOpts,
+    mut make_spec: impl FnMut(usize) -> Result<FlowSpec>,
+) -> Result<AgenticReport> {
+    // Algorithm-1 auto planning skips cyclic flows; the fully-cyclic
+    // agentic graph co-runs every stage regardless of placement.
+    let mode = match cfg.sched.mode {
+        PlacementMode::Auto => PlacementMode::Collocated,
+        m => m,
+    };
+
+    let n_devices = launch.window.map(|(_, l)| l).unwrap_or(services.cluster.num_devices());
+    let spec = make_spec(n_devices)?;
+    let flow_name = spec.name.clone();
+    let mut seed_chans = seed_channels(&spec);
+    if seed_chans.is_empty() {
+        bail!("agentic spec {flow_name:?} declares no driver-fed seeds_<task> channels");
+    }
+
+    // Resume before launch: restore parked partial rollouts and the
+    // episode counter; a missing/corrupt checkpoint fails fast.
+    let mut pending: Vec<Value> = Vec::new();
+    let mut ep_next: i64 = 0;
+    let (start_iter, mut total_steps) = match &opts.resume_from {
+        Some(dir) => {
+            let ck = FlowCheckpoint::load(dir, Some(&services.profiles))
+                .with_context(|| format!("resuming from checkpoint {dir}"))?;
+            if ck.flow != flow_name {
+                bail!("checkpoint {dir} is for flow {:?}, not {flow_name:?}", ck.flow);
+            }
+            if let Some(arr) = ck.extra("partials").and_then(Value::as_arr) {
+                pending = arr.to_vec();
+            }
+            if let Some(n) = ck.extra("ep_next").and_then(Value::as_i64) {
+                ep_next = n;
+            }
+            (ck.iter as usize, ck.steps_of("train").unwrap_or(0))
+        }
+        None => (0, 0),
+    };
+
+    let mut launch = launch;
+    let mut driver = FlowDriver::launch_with(spec, services, mode, launch.clone())?;
+    driver.set_recovering(cfg.fault.max_restarts > 0);
+    // Cyclic stages are never locked, so everything pre-loads and stays
+    // resident.
+    driver.onload_pipelined()?;
+
+    let mut relaunches: Vec<Relaunch> = Vec::new();
+    let mut iters: Vec<AgenticIterStats> = Vec::new();
+    let mut task_totals: Vec<TaskStats> = Vec::new();
+    let mut fault_relaunches: u64 = 0;
+    let fresh = if opts.episodes_per_iter > 0 { opts.episodes_per_iter } else { cfg.rollout.batch };
+    let mut iter = start_iter;
+    while iter < cfg.iters {
+        // Relaunch-on-resize at the iteration boundary: the previous run
+        // fully drained (finish() barriers) and every unfinished episode is
+        // parked in `pending` — the partial-rollout handoff.
+        if let Some(new_opts) = launch.resize.take() {
+            let n = new_opts.window.map(|(_, l)| l).unwrap_or(services.cluster.num_devices());
+            match make_spec(n) {
+                Ok(spec) => {
+                    let chans = seed_channels(&spec);
+                    let (d, applied) = super::swap_driver(
+                        services,
+                        mode,
+                        driver,
+                        spec,
+                        &launch,
+                        &new_opts,
+                        &mut make_spec,
+                    )?;
+                    driver = d;
+                    driver.set_recovering(cfg.fault.max_restarts > 0);
+                    driver.onload_pipelined()?;
+                    seed_chans = chans;
+                    if applied {
+                        relaunches.push(Relaunch {
+                            at_iter: iter,
+                            window: new_opts.window,
+                            mode: driver.mode(),
+                        });
+                        if opts.verbose {
+                            println!(
+                                "[resize] relaunched over window {:?} [{}] before iter {iter} \
+                                 ({} partial rollouts carried)",
+                                new_opts.window,
+                                driver.mode(),
+                                pending.len()
+                            );
+                        }
+                        launch = new_opts;
+                    }
+                }
+                Err(e) => {
+                    if opts.verbose {
+                        println!("[resize] offer ignored: {e:#}");
+                    }
+                }
+            }
+        }
+
+        // Snapshot carried state so a failed iteration replays the same
+        // episodes after a full relaunch (the draws are deterministic).
+        let pending0 = pending.clone();
+        let ep0 = ep_next;
+        let t0 = Instant::now();
+        let report = match run_iteration(
+            cfg,
+            services,
+            &driver,
+            &seed_chans,
+            fresh,
+            &mut pending,
+            &mut ep_next,
+        ) {
+            Ok(r) => r,
+            Err(e) => {
+                if cfg.fault.max_restarts == 0 || fault_relaunches >= cfg.fault.max_restarts {
+                    return Err(e);
+                }
+                fault_relaunches += 1;
+                let backoff =
+                    cfg.fault.backoff_ms.saturating_mul(1u64 << (fault_relaunches - 1).min(16));
+                eprintln!(
+                    "[fault] iter {iter} failed ({e:#}); full relaunch {fault_relaunches}/{} \
+                     after {backoff}ms",
+                    cfg.fault.max_restarts
+                );
+                if backoff > 0 {
+                    std::thread::sleep(Duration::from_millis(backoff));
+                }
+                pending = pending0;
+                ep_next = ep0;
+                let scope = driver.scope().to_string();
+                let n = launch.window.map(|(_, l)| l).unwrap_or(services.cluster.num_devices());
+                let spec = make_spec(n).context("rebuilding the spec for a fault relaunch")?;
+                let chans = seed_channels(&spec);
+                drop(driver);
+                services.monitor.clear_scope(&scope);
+                driver = FlowDriver::launch_with(spec, services, mode, launch.clone())
+                    .context("fault relaunch")?;
+                driver.set_recovering(true);
+                driver.onload_pipelined()?;
+                seed_chans = chans;
+                continue;
+            }
+        };
+        let secs = t0.elapsed().as_secs_f64();
+        collect_partials(&report, &mut pending);
+        let episodes: u64 = report.tasks.iter().map(|t| t.episodes).sum();
+        let turns: u64 = report.tasks.iter().map(|t| t.turns).sum();
+        let steps: u64 = report.tasks.iter().map(|t| t.steps).sum();
+        let dropped: u64 = report.tasks.iter().map(|t| t.dropped).sum();
+        let stall = report
+            .outputs("train", "step")
+            .and_then(|o| o.first())
+            .and_then(|p| p.meta_f64("stall_secs"))
+            .unwrap_or(0.0);
+        merge_tasks(&mut task_totals, &report.tasks);
+        total_steps += steps;
+        let s = AgenticIterStats {
+            iter,
+            secs,
+            episodes,
+            episodes_per_sec: episodes as f64 / secs.max(1e-9),
+            turns,
+            train_steps: steps,
+            stall_secs: stall,
+            dropped,
+            carried_partials: pending.len(),
+        };
+        if opts.verbose {
+            println!(
+                "[{}] iter {iter}: {:.2}s, {episodes} episodes ({:.1}/s), {turns} turns, \
+                 {steps} steps, {dropped} stale-dropped, {} carried",
+                driver.mode(),
+                s.secs,
+                s.episodes_per_sec,
+                pending.len()
+            );
+        }
+        if let Some(dir) = &opts.checkpoint_dir {
+            let mut ck = FlowCheckpoint::new(&flow_name, (iter + 1) as u64);
+            ck.set_steps("train", total_steps);
+            ck.set_extra("partials", Value::Arr(pending.clone()));
+            ck.set_extra("ep_next", ep_next);
+            ck.save(dir, Some(&services.profiles))
+                .with_context(|| format!("writing checkpoint {dir}"))?;
+        }
+        iters.push(s);
+        // Scope-aware: only THIS flow's failures end the run.
+        if services.monitor.scope_poisoned(driver.scope()) {
+            bail!("run poisoned: {:?}", services.monitor.scope_reports(driver.scope()));
+        }
+        iter += 1;
+    }
+
+    // Tail drain: seed-free rounds until every parked episode finishes.
+    // Each round grants a fresh turn slice, so progress is guaranteed and
+    // the bound is just a runaway backstop.
+    let mut rounds = 0usize;
+    while opts.drain_partials && !pending.is_empty() && rounds < 64 {
+        let report =
+            run_iteration(cfg, services, &driver, &seed_chans, 0, &mut pending, &mut ep_next)?;
+        collect_partials(&report, &mut pending);
+        merge_tasks(&mut task_totals, &report.tasks);
+        total_steps += report.tasks.iter().map(|t| t.steps).sum::<u64>();
+        rounds += 1;
+    }
+
+    Ok(AgenticReport {
+        iters,
+        tasks: task_totals,
+        mode: driver.mode(),
+        plan_source: driver.plan_source(),
+        relaunches,
+        locks: driver.lock_counters(),
+        leftover_partials: pending.len(),
+    })
+}
+
+/// One iteration: seed fresh + resumed episodes, drain the trainer's
+/// per-step report records, and barrier on the full drain.
+fn run_iteration(
+    cfg: &RunConfig,
+    services: &Services,
+    driver: &FlowDriver,
+    seed_chans: &[String],
+    fresh_per_task: usize,
+    pending: &mut Vec<Value>,
+    ep_next: &mut i64,
+) -> Result<FlowReport> {
+    let mut run = driver.begin()?;
+    let mut tracker = run.tracker();
+    run.start()?;
+
+    // Partition carried partials by task; unknown tasks (a manifest edit
+    // between resume and run) are kept parked rather than dropped.
+    let mut resumed: HashMap<String, Vec<Value>> = HashMap::new();
+    for v in pending.drain(..) {
+        let task = v
+            .as_obj()
+            .and_then(|o| o.get("task"))
+            .and_then(Value::as_str)
+            .unwrap_or("")
+            .to_string();
+        resumed.entry(task).or_default().push(v);
+    }
+    let feed = cfg.sched.feed_batch.max(1);
+    for ch in seed_chans {
+        let task = ch.strip_prefix("seeds_").unwrap_or(ch);
+        let mut items: Vec<(Payload, f64)> = Vec::new();
+        for v in resumed.remove(task).unwrap_or_default() {
+            items.push((partial_payload(task, &v), 1.0));
+        }
+        for _ in 0..fresh_per_task {
+            let ep = *ep_next;
+            *ep_next += 1;
+            items.push((Payload::new().set_meta("task", task).set_meta("ep", ep), 1.0));
+        }
+        let mut chunk: Vec<(Payload, f64)> = Vec::with_capacity(feed);
+        for it in items {
+            chunk.push(it);
+            if chunk.len() >= feed {
+                run.send_batch(ch, std::mem::take(&mut chunk))?;
+            }
+        }
+        run.send_batch(ch, chunk)?;
+        run.feed_done(ch)?;
+    }
+    for (_, vs) in resumed {
+        pending.extend(vs);
+    }
+
+    // Drain the trainer's per-step records; a timed get keeps the
+    // controller responsive to stage failures (§4 failure monitoring).
+    let poll = Duration::from_millis(cfg.sched.poll_ms.max(1));
+    loop {
+        match run.recv_timeout("report", poll)? {
+            Some(_step) => {}
+            None => {
+                if run.drained("report")? {
+                    break;
+                }
+                if cfg.fault.max_restarts > 0 {
+                    // Stage-scoped recovery; agentic stages hold no weights,
+                    // so restarts need no re-seed invocation.
+                    let healed = run.heal(&cfg.fault, &mut tracker, |_stage| None)?;
+                    if healed > 0 {
+                        services.metrics.record_value("fault.stage_restarts", healed as f64);
+                    }
+                } else if run.poisoned() {
+                    bail!(
+                        "agentic run aborted: {:?}",
+                        services.monitor.scope_reports(driver.scope())
+                    );
+                }
+            }
+        }
+    }
+    run.finish()
+}
+
+/// Pull `"partials"` arrays out of every stage output into the carry list.
+fn collect_partials(report: &FlowReport, pending: &mut Vec<Value>) {
+    for o in &report.outcomes {
+        for p in &o.outputs {
+            if let Some(arr) = p.meta.get("partials").and_then(Value::as_arr) {
+                pending.extend(arr.iter().cloned());
+            }
+        }
+    }
+}
+
+/// Rebuild a seed payload from a parked partial-rollout record.
+fn partial_payload(task: &str, v: &Value) -> Payload {
+    let mut p = Payload::new();
+    p.meta.set("task", task);
+    if let Some(o) = v.as_obj() {
+        for key in ["ep", "turn", "turns_total", "version"] {
+            if let Some(i) = o.get(key).and_then(Value::as_i64) {
+                p.meta.set(key, i);
+            }
+        }
+        if let Some(f) = o.get("reward_acc").and_then(Value::as_f64) {
+            p.meta.set("reward_acc", f);
+        }
+    }
+    p
+}
+
+/// Accumulate per-iteration [`TaskStats`] into run totals.
+fn merge_tasks(total: &mut Vec<TaskStats>, add: &[TaskStats]) {
+    for t in add {
+        match total.iter_mut().find(|e| e.task == t.task) {
+            Some(e) => {
+                e.episodes += t.episodes;
+                e.turns += t.turns;
+                e.steps += t.steps;
+                e.dropped += t.dropped;
+                e.downweighted += t.downweighted;
+                e.staleness_sum += t.staleness_sum;
+                e.staleness_n += t.staleness_n;
+            }
+            None => total.push(t.clone()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_declares_one_cycle_per_task_through_shared_infer() {
+        let cfg = RunConfig::default();
+        let opts = AgenticOpts::default();
+        let spec = agentic_spec(&cfg, &opts, 4).unwrap();
+        assert_eq!(seed_channels(&spec), vec!["seeds_search", "seeds_math"]);
+        // 4 shared stages + (agent + reward) per task.
+        assert_eq!(spec.stages.len(), 4 + 2 * opts.tasks.len());
+        // 7 edges per task + report + wsync.
+        assert_eq!(spec.edges.len(), 7 * opts.tasks.len() + 2);
+        // Trainer fan-in edges carry the staleness policy.
+        for t in &opts.tasks {
+            let e = spec
+                .edges
+                .iter()
+                .find(|e| e.channel == format!("batch_{}", t.name))
+                .expect("trainer edge");
+            assert_eq!(e.staleness_bound, t.staleness_bound);
+            assert_eq!(e.share, t.share);
+        }
+        // No capacities anywhere: the cycle must stay unbounded (FA001).
+        assert!(spec.edges.iter().all(|e| e.capacity.is_none()));
+    }
+
+    #[test]
+    fn partial_payload_round_trip() {
+        let mut v = Value::obj();
+        v.set("task", "search")
+            .set("ep", 7i64)
+            .set("turn", 2i64)
+            .set("turns_total", 5i64)
+            .set("reward_acc", 1.25)
+            .set("version", 3i64);
+        let p = partial_payload("search", &v);
+        assert_eq!(p.meta_str("task"), Some("search"));
+        assert_eq!(p.meta_i64("ep"), Some(7));
+        assert_eq!(p.meta_i64("turn"), Some(2));
+        assert_eq!(p.meta_i64("turns_total"), Some(5));
+        assert_eq!(p.meta_f64("reward_acc"), Some(1.25));
+        assert_eq!(p.meta_i64("version"), Some(3));
+    }
+
+    #[test]
+    fn merge_tasks_accumulates() {
+        let mut total = Vec::new();
+        let a = TaskStats { task: "a".into(), episodes: 2, steps: 1, ..TaskStats::default() };
+        merge_tasks(&mut total, &[a.clone()]);
+        merge_tasks(&mut total, &[a]);
+        assert_eq!(total.len(), 1);
+        assert_eq!(total[0].episodes, 4);
+        assert_eq!(total[0].steps, 2);
+    }
+}

@@ -4,15 +4,19 @@
 //! [`reasoning`] implements the GRPO reasoning-RL workflow (Figure 5b/6):
 //! prompts → rollout → inference → advantage aggregation → training, with
 //! weight sync closing the loop. [`embodied`] implements the cyclic
-//! generator ⇄ simulator PPO workflow. Both run unchanged under
-//! collocated, disaggregated, and hybrid execution — only the placement
-//! and lock directives differ, which is the paper's core claim.
+//! generator ⇄ simulator PPO workflow. [`agentic`] runs several
+//! multi-turn tool-calling tasks through **one** shared inference fleet,
+//! with partial-rollout handoff across elastic resizes and a per-task
+//! off-policy staleness bound on the trainer fan-in. All run unchanged
+//! under collocated, disaggregated, and hybrid execution — only the
+//! placement and lock directives differ, which is the paper's core claim.
 //!
-//! Both runners also ship a `*_shared` variant taking shared
+//! The runners also ship a `*_shared` variant taking shared
 //! [`crate::worker::group::Services`] plus multi-flow
 //! [`crate::flow::LaunchOpts`], so a [`crate::flow::FlowSupervisor`] can
 //! run them **concurrently on one cluster** (see `examples/multi_flow.rs`).
 
+pub mod agentic;
 pub mod embodied;
 pub mod reasoning;
 
@@ -58,6 +62,10 @@ pub(crate) fn swap_driver(
     }
 }
 
+pub use agentic::{
+    agentic_spec, run_agentic, run_agentic_elastic, run_agentic_shared, run_agentic_with_spec,
+    AgenticIterStats, AgenticOpts, AgenticReport, AgenticTask,
+};
 pub use embodied::{
     embodied_spec, run_embodied, run_embodied_elastic, run_embodied_shared,
     run_embodied_with_spec, EmbodiedOpts, EmbodiedReport,

@@ -75,6 +75,7 @@ fn every_code_has_a_fixture_triggering_exactly_it() {
         ("fa007_dead_stage.flow.toml", vec!["FA007"]),
         ("fa008_pump.flow.toml", vec!["FA008"]),
         ("fa009_straddle.flow.toml", vec!["FA009"]),
+        ("fa010_starved_share.flow.toml", vec!["FA010"]),
     ];
     for (name, want) in expect {
         let r = analyze_manifest(&fixture(name), &reg);
@@ -165,6 +166,8 @@ fn golden_snapshots_pin_rendered_reports() {
     check_golden("golden_fa001.txt", &r.render());
     let r = analyze_manifest(&fixture("fa005_snap.flow.toml"), &reg);
     check_golden("golden_fa005.txt", &r.render());
+    let r = analyze_manifest(&fixture("fa010_starved_share.flow.toml"), &reg);
+    check_golden("golden_fa010.txt", &r.render());
 }
 
 // ---------------------------------------------------------------------------

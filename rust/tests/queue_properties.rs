@@ -150,6 +150,108 @@ fn balanced_dequeue_never_starves_an_endpoint() {
     });
 }
 
+/// Weighted fan-in proportions: K task channels, each fed by several
+/// rollout producers pushing whole episodes as batches with long-tailed
+/// lengths, drained by one consumer that sweeps
+/// `quota_i = round(share_i / Σ shares · R)` items per round (`R = Σ
+/// granularities`) — the trainer's per-task dequeue. While every task
+/// still holds backlog, per-round service is exactly its quota
+/// (share-proportional); once the long tail drains the tasks out of
+/// phase, conservation and per-channel FIFO order still hold exactly.
+#[test]
+fn weighted_fanin_proportions_hold_under_longtail_interleavings() {
+    check("weighted fan-in: share-proportional service", 100, |g| {
+        let k = g.usize_in(2..5); // tasks
+        let chans: Vec<Channel> = (0..k).map(|i| Channel::new(&format!("task{i}"))).collect();
+        // Unequal declared shares and granularities, as on trainer edges.
+        let shares: Vec<f64> = (0..k).map(|_| g.usize_in(1..4) as f64).collect();
+        let grans: Vec<usize> = (0..k).map(|_| g.usize_in(1..4)).collect();
+        let share_sum: f64 = shares.iter().sum();
+        let round: usize = grans.iter().sum();
+        let quotas: Vec<usize> = shares
+            .iter()
+            .map(|s| (s / share_sum * round as f64 + 0.5).floor() as usize)
+            .collect();
+        if quotas.iter().any(|&q| q == 0) {
+            // The starved configuration FA010 rejects statically.
+            return Ok(());
+        }
+
+        // Multi-producer feed: interleave episodes across tasks and
+        // producers at random; most episodes are short, a few are 10-25
+        // turns (the long tail).
+        let mut models: Vec<std::collections::VecDeque<i64>> = vec![Default::default(); k];
+        let mut next = 0i64;
+        let producers: Vec<usize> = (0..k).map(|_| g.usize_in(2..4)).collect();
+        for (i, ch) in chans.iter().enumerate() {
+            for p in 0..producers[i] {
+                ch.register_producer(&format!("p{p}"));
+            }
+        }
+        let episodes = g.usize_in(4..14);
+        for _ in 0..episodes {
+            let i = g.usize_in(0..k);
+            let p = g.usize_in(0..producers[i]);
+            let len =
+                if g.usize_in(0..8) == 0 { g.usize_in(10..25) } else { g.usize_in(1..5) };
+            let batch: Vec<(Payload, f64)> =
+                (0..len).map(|j| (tagged(next + j as i64), 1.0)).collect();
+            chans[i].put_batch(&format!("p{p}"), batch).unwrap();
+            for j in 0..len {
+                models[i].push_back(next + j as i64);
+            }
+            next += len as i64;
+        }
+        for (i, ch) in chans.iter().enumerate() {
+            for p in 0..producers[i] {
+                ch.producer_done(&format!("p{p}"));
+            }
+        }
+
+        // Sweep rounds exactly as the trainer does. For the first
+        // `full_rounds` sweeps every task's backlog covers its quota, so
+        // service must be exactly share-proportional.
+        let mut served = vec![0usize; k];
+        let full_rounds: usize =
+            (0..k).map(|i| models[i].len() / quotas[i]).min().unwrap_or(0);
+        let mut rounds = 0usize;
+        loop {
+            let mut got = 0usize;
+            let mut round_taken = vec![0usize; k];
+            for i in 0..k {
+                for _ in 0..quotas[i] {
+                    let Some(item) = chans[i].get("train") else { break };
+                    let want = models[i].pop_front().expect("model says non-empty");
+                    prop_assert_eq(&want, &item.payload.meta_i64("i").unwrap())?;
+                    served[i] += 1;
+                    round_taken[i] += 1;
+                    got += 1;
+                }
+            }
+            if got == 0 {
+                break;
+            }
+            rounds += 1;
+            if rounds <= full_rounds {
+                for i in 0..k {
+                    prop_assert(
+                        round_taken[i] == quotas[i],
+                        &format!(
+                            "round {rounds}: task {i} served {} of quota {} with backlog left",
+                            round_taken[i], quotas[i]
+                        ),
+                    )?;
+                }
+            }
+        }
+        // Conservation: every item fed by any producer is served, per task.
+        for i in 0..k {
+            prop_assert(models[i].is_empty(), &format!("task {i} left items unserved"))?;
+        }
+        prop_assert_eq(&(served.iter().sum::<usize>() as i64), &next)
+    });
+}
+
 /// Weighted discipline (FIFO order + weight bookkeeping): arrival order is
 /// independent of weights, while the consumer-side load accounting tracks
 /// the exact dequeued weight per endpoint.

@@ -80,6 +80,34 @@ fn uds_round_trip_preserves_payload() {
 }
 
 #[test]
+fn uds_socket_files_are_unlinked_on_drop() {
+    use rlinf::comm::wire::{WireMode, WireTransport};
+    use rlinf::metrics::Metrics;
+
+    // Construct the transport directly so we can read its own socket
+    // paths: scanning the temp dir would race with the other wire tests
+    // in this process, which bind sockets under the same pid prefix.
+    let cluster = Cluster::new(ClusterConfig {
+        nodes: 2,
+        devices_per_node: 1,
+        ..Default::default()
+    });
+    let tcfg = TransportConfig { backend: "uds".to_string(), ..Default::default() };
+    let t = WireTransport::new(WireMode::Uds, &cluster, Metrics::new(), &tcfg).unwrap();
+    let paths = t.socket_paths();
+    assert_eq!(paths.len(), 2, "one socket per simulated node");
+    for p in &paths {
+        assert!(p.exists(), "socket file missing while transport alive: {}", p.display());
+    }
+    drop(t);
+    // `UnixListener` does not remove the filesystem entry itself; the
+    // listener guard (and the transport's own drop) must unlink it.
+    for p in &paths {
+        assert!(!p.exists(), "socket file leaked after drop: {}", p.display());
+    }
+}
+
+#[test]
 fn node_local_routes_bypass_the_wire() {
     let svc = wire_services("uds", 2, 2);
     let _a = svc.comm.register("a", DeviceSet::range(0, 1)).unwrap();

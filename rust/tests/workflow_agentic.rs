@@ -1,0 +1,180 @@
+//! End-to-end integration: the agentic workload — multi-turn tool-calling
+//! tasks sharing one inference fleet, with per-task staleness bounds on
+//! the trainer fan-in and partial-rollout handoff across checkpoint,
+//! resume, and relaunch-on-resize. Artifact-free: synthetic agents/tools.
+
+use rlinf::cluster::Cluster;
+use rlinf::config::{PlacementMode, RunConfig};
+use rlinf::flow::manifest::FlowManifest;
+use rlinf::flow::{LaunchOpts, StageRegistry};
+use rlinf::worker::group::Services;
+use rlinf::workflow::agentic::{
+    run_agentic, run_agentic_shared, run_agentic_with_spec, seed_channels, AgenticOpts,
+    AgenticTask,
+};
+
+fn base_cfg() -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.iters = 2;
+    cfg.cluster.devices_per_node = 2;
+    cfg.rollout.batch = 3;
+    cfg.seed = 7;
+    cfg.sched.mode = PlacementMode::Auto; // coerced to collocated (cyclic)
+    cfg
+}
+
+#[test]
+fn two_tasks_share_one_fleet_end_to_end() {
+    let cfg = base_cfg();
+    let opts = AgenticOpts {
+        tasks: vec![
+            AgenticTask::new("search").share(3.0).turns(2, 5),
+            AgenticTask::new("math").share(1.0).turns(3, 6),
+        ],
+        turn_slice: 2,
+        ..Default::default()
+    };
+    let report = run_agentic(&cfg, &opts).unwrap();
+    assert_eq!(report.mode, "collocated");
+    assert_eq!(report.iters.len(), 2);
+    // Exact episode conservation: every seeded episode finishes (the tail
+    // drain resumes parked partials until none remain).
+    assert_eq!(report.leftover_partials, 0);
+    assert_eq!(report.total_episodes(), 2 * 3 * 2);
+    for name in ["search", "math"] {
+        let t = report.task(name).unwrap_or_else(|| panic!("missing task {name}"));
+        assert_eq!(t.episodes, 6, "{name}");
+        assert!(t.turns >= 2 * t.episodes, "{name}: {} turns", t.turns);
+        assert!(t.steps > 0, "{name} contributed no trainer steps");
+    }
+    assert!(report.mean_episodes_per_sec() > 0.0);
+}
+
+#[test]
+fn slow_task_stale_batches_are_dropped_not_the_trainer() {
+    // One deliberately slow task under a tight staleness bound, and a
+    // deliberately slow trainer step so batches queue while the version
+    // advances: every batch is stamped with the weight version of its
+    // last inference pass (v0 — all rollouts finish well inside the first
+    // 20ms step), so by the time the trainer reaches the math batches its
+    // version has moved and the lag exceeds math's bound of 1. The
+    // healthy task's generous bound admits everything: the straggler
+    // degrades only itself.
+    let mut cfg = base_cfg();
+    cfg.iters = 1;
+    cfg.rollout.batch = 4;
+    let opts = AgenticOpts {
+        tasks: vec![
+            AgenticTask::new("search").share(3.0).staleness_bound(8).turns(2, 4),
+            AgenticTask::new("math").share(1.0).staleness_bound(1).slow(8.0).turns(3, 6),
+        ],
+        batch: 1, // every episode is its own trainer batch
+        step_us: 20_000,
+        ..Default::default()
+    };
+    let report = run_agentic(&cfg, &opts).unwrap();
+    let search = report.task("search").unwrap();
+    let math = report.task("math").unwrap();
+    // The trainer's step rate is set by the healthy task: all of its
+    // batches are admitted (max possible lag here is below its bound).
+    assert_eq!(search.steps, 4, "healthy task starved: {search:?}");
+    assert_eq!(search.dropped, 0, "healthy task dropped: {search:?}");
+    // The slow task's stale batches are dropped under its tight bound,
+    // and the accounting is exact: every batch either stepped or dropped.
+    assert!(math.dropped >= 1, "no stale drops recorded: {math:?}");
+    assert_eq!(math.steps + math.dropped, 4, "{math:?}");
+    // Admitted-but-lagged batches are recorded as down-weighted.
+    assert!(
+        search.downweighted >= 1,
+        "queued healthy batches should carry lag: {search:?}"
+    );
+    assert!(search.mean_staleness() > 0.0);
+}
+
+#[test]
+fn resize_mid_episode_hands_off_partial_rollouts_without_loss() {
+    let dir = std::env::temp_dir()
+        .join(format!("rlinf_agentic_resize_{}", std::process::id()))
+        .to_string_lossy()
+        .to_string();
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // Phase 1: a 1-turn slice parks EVERY episode mid-flight (all tasks
+    // need >= 2 turns), and drain_partials off leaves them parked in the
+    // checkpoint — a run interrupted mid-episode.
+    let mut cfg = base_cfg();
+    cfg.iters = 1;
+    let opts1 = AgenticOpts {
+        tasks: vec![AgenticTask::new("search").turns(2, 5), AgenticTask::new("math").turns(3, 6)],
+        turn_slice: 1,
+        drain_partials: false,
+        checkpoint_dir: Some(dir.clone()),
+        ..Default::default()
+    };
+    let r1 = run_agentic(&cfg, &opts1).unwrap();
+    assert_eq!(r1.total_episodes(), 0, "1-turn slices must park everything");
+    assert_eq!(r1.leftover_partials, 2 * 3, "every seeded episode parked");
+
+    // Phase 2: resume those partials AND deliver a resize offer before the
+    // first iteration boundary — the runner relaunches over the new window
+    // with the parked episodes carried in runner state, then finishes them
+    // alongside one more iteration of fresh seeds.
+    let mut cfg2 = base_cfg();
+    cfg2.iters = 2; // checkpoint says iter 1 is next
+    let opts2 = AgenticOpts {
+        resume_from: Some(dir.clone()),
+        drain_partials: true,
+        ..opts1.clone()
+    };
+    let services = Services::new(Cluster::new(cfg2.cluster.clone()));
+    let launch = LaunchOpts::default();
+    launch.resize.offer(LaunchOpts { window: Some((0, 2)), ..Default::default() });
+    let r2 = run_agentic_shared(&cfg2, &opts2, &services, launch).unwrap();
+
+    // The resize applied, and conservation is exact: the carried partials
+    // plus the second iteration's fresh seeds all complete.
+    assert_eq!(r2.relaunches.len(), 1, "resize offer not applied");
+    assert_eq!(r2.relaunches[0].window, Some((0, 2)));
+    assert_eq!(r2.leftover_partials, 0);
+    assert_eq!(
+        r1.total_episodes() + r2.total_episodes(),
+        2 * 3 * 2,
+        "episodes lost across the resize handoff"
+    );
+    // Deterministic episode shapes: the resumed episodes kept their task
+    // identity, so both tasks account for exactly their seeded episodes.
+    for name in ["search", "math"] {
+        assert_eq!(r2.task(name).unwrap().episodes, 6, "{name}");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn shipped_manifest_runs_end_to_end() {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../configs/agentic.flow.toml");
+    let m = FlowManifest::load(path).unwrap();
+    assert_eq!(m.workload, "agentic");
+    let reg = StageRegistry::builtin();
+    m.lint(&reg).unwrap();
+    let spec = m.to_spec(&reg).unwrap();
+    // Two tasks, ONE shared inference stage.
+    assert_eq!(seed_channels(&spec), vec!["seeds_search", "seeds_math"]);
+    assert_eq!(m.stages.iter().filter(|s| s.kind == "agentic_infer").count(), 1);
+
+    let cfg = m.run_config().unwrap();
+    let services = Services::new(Cluster::new(cfg.cluster.clone()));
+    let report = run_agentic_with_spec(
+        &cfg,
+        &AgenticOpts::default(),
+        &services,
+        LaunchOpts::default(),
+        spec,
+    )
+    .unwrap();
+    assert_eq!(report.mode, "collocated");
+    // iters(2) x rollout.batch(6) x 2 tasks, all completed.
+    assert_eq!(report.total_episodes(), 2 * 6 * 2);
+    assert_eq!(report.leftover_partials, 0);
+    assert_eq!(report.tasks.len(), 2);
+    assert!(report.total_steps() > 0);
+}
