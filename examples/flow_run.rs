@@ -441,8 +441,57 @@ fn run_workload(
                 per_task.join(" | "),
             ))
         }
+        "serve" => run_serve(m, cfg, services, launch, reg),
         _ => run_generic(m, cfg, services, launch, reg),
     }
+}
+
+/// The serving workload: run the manifest generically (feed request
+/// classes, drain responses), then summarize the resident fleet's
+/// continuous-batching counters — requests served per class, micro-batch
+/// occupancy, and how many batches actually coalesced more than one
+/// flow (the per-flow spin-up the shared fleet amortized away).
+fn run_serve(
+    m: &FlowManifest,
+    cfg: &RunConfig,
+    services: &Services,
+    launch: LaunchOpts,
+    reg: &StageRegistry,
+) -> Result<String> {
+    let report = run_generic_report(m, cfg, services, launch, reg)?;
+    let mut parts: Vec<String> = Vec::new();
+    for s in m.stages.iter().filter(|s| s.kind == "serve_infer") {
+        let flows: Vec<String> = s
+            .options
+            .get("flows")
+            .and_then(|v| v.as_str().map(str::to_string))
+            .map(|csv| csv.split(',').map(|t| t.trim().to_string()).collect())
+            .unwrap_or_default();
+        for out in report.outputs(&s.name, "serve").unwrap_or(&[]) {
+            let served = out.meta_i64("served").unwrap_or(0);
+            let batches = out.meta_i64("micro_batches").unwrap_or(0);
+            let coalesced = out.meta_i64("coalesced_batches").unwrap_or(0);
+            let occupancy = out.meta_f64("mean_occupancy").unwrap_or(0.0);
+            let per_flow: Vec<String> = flows
+                .iter()
+                .map(|f| format!("{f}: {}", out.meta_i64(&format!("served_{f}")).unwrap_or(0)))
+                .collect();
+            parts.push(format!(
+                "fleet {}: {served} served in {batches} micro-batches \
+                 ({coalesced} cross-flow, occupancy {occupancy:.1}) | {}",
+                s.name,
+                per_flow.join(", "),
+            ));
+        }
+    }
+    Ok(format!(
+        "flow {:?} [{} via {}] completed in {:.3}s | {}",
+        m.name,
+        report.mode,
+        report.plan_source,
+        report.secs,
+        parts.join(" | "),
+    ))
 }
 
 /// The generic runner: feed declared sources, execute `[[pump]]` logic,
@@ -454,6 +503,22 @@ fn run_generic(
     launch: LaunchOpts,
     reg: &StageRegistry,
 ) -> Result<String> {
+    let report = run_generic_report(m, cfg, services, launch, reg)?;
+    Ok(format!(
+        "flow {:?} [{} via {}] completed in {:.3}s",
+        m.name, report.mode, report.plan_source, report.secs
+    ))
+}
+
+/// Shared body of the generic and serving runners: returns the finished
+/// [`FlowReport`] so workload arms can read stage outcome metas.
+fn run_generic_report(
+    m: &FlowManifest,
+    cfg: &RunConfig,
+    services: &Services,
+    launch: LaunchOpts,
+    reg: &StageRegistry,
+) -> Result<rlinf::flow::FlowReport> {
     let is_pump_target = |ch: &str| m.pumps.iter().any(|p| p.to == ch);
     let is_pump_source = |ch: &str| m.pumps.iter().any(|p| p.from == ch);
 
@@ -572,10 +637,7 @@ fn run_generic(
 
     let report = run.finish()?;
     print!("{}", report.render());
-    Ok(format!(
-        "flow {:?} [{} via {}] completed in {:.3}s",
-        m.name, report.mode, report.plan_source, report.secs
-    ))
+    Ok(report)
 }
 
 /// Run a multi-flow manifest: admit every referenced flow under one

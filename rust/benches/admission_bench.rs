@@ -1,0 +1,486 @@
+//! Admission front-door bench: the sharded [`ServeGate`] fast path vs.
+//! routing every submission through the supervisor's full `admit_all`
+//! machinery, under the same seeded arrival stream.
+//!
+//! Two regimes per door, both with mixed sizes (mostly 1–2-device
+//! fast-eligible, some 4-device exclusive, some shareable), mixed
+//! priorities (a slice of slot-pinned submissions), and mixed lifetimes
+//! (retire-after-k churn):
+//!
+//! * **saturation** — closed loop, no pacing: submit as fast as the door
+//!   admits across several threads. Yields admissions/sec, the
+//!   throughput comparison the gate's sharding exists for.
+//! * **poisson** — open loop: each thread paces submissions on seeded
+//!   exponential inter-arrival gaps. Yields p50/p99 time-to-launch
+//!   (scheduled arrival → grant, queueing included; capacity-blocked
+//!   submissions retry through the door's own parking mechanism) and
+//!   steady-state fleet utilization.
+//!
+//! Emits `BENCH_admission.json`. Set `RLINF_BENCH_SMALL=1` for the CI
+//! preset (fewer arrivals, same JSON shape).
+
+mod common;
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+use rlinf::cluster::Cluster;
+use rlinf::config::{ClusterConfig, ServeConfig, SupervisorConfig};
+use rlinf::data::Payload;
+use rlinf::flow::{AdmitReq, Edge, FlowSpec, FlowSupervisor, Stage};
+use rlinf::serve::ServeGate;
+use rlinf::util::json::Value;
+use rlinf::worker::group::Services;
+use rlinf::worker::{WorkerCtx, WorkerLogic};
+
+const DEVICES: usize = 32;
+const PENDING_CAP: usize = 256;
+
+fn small() -> bool {
+    std::env::var_os("RLINF_BENCH_SMALL").is_some()
+}
+
+// --- seeded workload ------------------------------------------------------
+
+struct Rng(u64);
+
+impl Rng {
+    fn next(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.0 = x;
+        x
+    }
+
+    /// Uniform in (0, 1].
+    fn unit(&mut self) -> f64 {
+        ((self.next() >> 11) as f64 + 1.0) / (1u64 << 53) as f64
+    }
+
+    /// Exponential with the given mean (Poisson inter-arrival gap).
+    fn exp(&mut self, mean: f64) -> f64 {
+        -self.unit().ln() * mean
+    }
+}
+
+struct Arrival {
+    req: AdmitReq,
+    /// Retire this many arrivals after admission.
+    life: usize,
+}
+
+/// Mixed sizes/priorities/lifetimes: 70% 1-device and 15% 2-device
+/// (fast-eligible at `fast_max = 2`), 10% 4-device exclusive, 5%
+/// 4-device shareable; every ~20th submission pins a (unique) priority
+/// slot, which forces the slow path. Lifetimes of 1–4 arrival ticks keep
+/// the steady-state demand near half the cluster, so the doors see churn
+/// with queue spikes rather than permanent overload.
+fn arrival(rng: &mut Rng, name: String, slot_seq: &AtomicU64) -> Arrival {
+    let roll = rng.next() % 100;
+    let mut req = match roll {
+        0..=69 => AdmitReq::new(&name, 1),
+        70..=84 => AdmitReq::new(&name, 2),
+        85..=94 => AdmitReq::new(&name, 4),
+        _ => AdmitReq::new(&name, 4).shareable(),
+    };
+    if rng.next() % 20 == 0 {
+        req = req.slot(10_000 + slot_seq.fetch_add(1, Ordering::Relaxed));
+    }
+    Arrival { req, life: 1 + (rng.next() % 4) as usize }
+}
+
+// --- the two doors --------------------------------------------------------
+
+struct Nop;
+impl WorkerLogic for Nop {
+    fn call(&mut self, _ctx: &WorkerCtx, _m: &str, arg: Payload) -> Result<Payload> {
+        Ok(arg)
+    }
+}
+
+/// The minimal spec every submission would carry in a real serving tier.
+fn tiny_spec(name: &str) -> FlowSpec {
+    FlowSpec::new(name)
+        .stage(Stage::new("w", |_| {
+            Box::new(|_: &WorkerCtx| Ok(Box::new(Nop) as Box<dyn WorkerLogic>))
+        }))
+        .edge(Edge::new("x").produced_by_driver().consumed_by("w", "m"))
+}
+
+trait Door: Send + Sync {
+    fn label(&self) -> &'static str;
+    /// Try to admit now; `true` on grant.
+    fn submit(&self, req: &AdmitReq) -> bool;
+    /// Does this door park blocked submissions itself? If so, `park`
+    /// enqueues and `pump` drains; otherwise the driver re-submits.
+    fn parks(&self) -> bool {
+        false
+    }
+    fn park(&self, req: &AdmitReq) -> bool {
+        let _ = req;
+        false
+    }
+    /// Drain the parking mechanism; returns newly granted flow names.
+    fn pump(&self) -> Vec<String> {
+        Vec::new()
+    }
+    fn retire(&self, name: &str);
+    fn fast_hit_rate(&self) -> f64 {
+        0.0
+    }
+    fn services(&self) -> &Services;
+    /// End-of-phase cleanup (lease drains).
+    fn teardown(&self) {}
+}
+
+struct GateDoor(ServeGate);
+
+impl Door for GateDoor {
+    fn label(&self) -> &'static str {
+        "gate"
+    }
+    fn submit(&self, req: &AdmitReq) -> bool {
+        self.0.submit(req.clone()).is_ok()
+    }
+    fn parks(&self) -> bool {
+        true
+    }
+    fn park(&self, req: &AdmitReq) -> bool {
+        self.0.enqueue(req.clone(), None).is_ok()
+    }
+    fn pump(&self) -> Vec<String> {
+        self.0.pump().into_iter().map(|g| g.admission.flow).collect()
+    }
+    fn retire(&self, name: &str) {
+        let _ = self.0.retire(name);
+    }
+    fn fast_hit_rate(&self) -> f64 {
+        self.0.stats().fast_hit_rate()
+    }
+    fn services(&self) -> &Services {
+        self.0.supervisor().services()
+    }
+    fn teardown(&self) {
+        self.0.drain_leases();
+    }
+}
+
+/// The baseline the gate replaces: every submission runs the full
+/// `admit_all` machinery (analyzer gate, union planning, supervisor
+/// state lock) even for a 1-device flow.
+struct SupervisorDoor(Arc<FlowSupervisor>);
+
+impl Door for SupervisorDoor {
+    fn label(&self) -> &'static str {
+        "admit_all"
+    }
+    fn submit(&self, req: &AdmitReq) -> bool {
+        let spec = tiny_spec(&req.name);
+        self.0.admit_all(vec![(req.clone(), &spec)]).is_ok()
+    }
+    fn retire(&self, name: &str) {
+        let _ = self.0.retire(name);
+    }
+    fn services(&self) -> &Services {
+        self.0.services()
+    }
+}
+
+fn fresh_supervisor() -> Arc<FlowSupervisor> {
+    let services = Services::new(Cluster::new(ClusterConfig {
+        nodes: 1,
+        devices_per_node: DEVICES,
+        ..Default::default()
+    }));
+    Arc::new(FlowSupervisor::new(
+        &services,
+        SupervisorConfig { max_flows: 1024, ..Default::default() },
+    ))
+}
+
+fn gate_door() -> GateDoor {
+    GateDoor(ServeGate::new(
+        fresh_supervisor(),
+        ServeConfig { shards: 4, lease: 8, fast_max: 2, queue_depth: PENDING_CAP },
+    ))
+}
+
+fn supervisor_door() -> SupervisorDoor {
+    SupervisorDoor(fresh_supervisor())
+}
+
+// --- the driver loop ------------------------------------------------------
+
+struct PhaseResult {
+    grants: u64,
+    dropped: u64,
+    secs: f64,
+    /// Scheduled-arrival → grant, microseconds.
+    latencies_us: Vec<f64>,
+    /// allocated/total samples (poisson phase only).
+    utilization: Vec<f64>,
+}
+
+/// Submissions blocked on capacity, shared across submitter threads:
+/// any thread's pump may grant any parked flow, so the map of who is
+/// waiting (and since when) must be global.
+type PendingMap = Mutex<HashMap<String, (AdmitReq, Instant)>>;
+
+/// Drive `per_thread` arrivals per thread through the door. With
+/// `gap_us > 0` each thread paces on exponential gaps (open loop); with
+/// 0 it free-runs (closed loop).
+fn drive(door: &dyn Door, threads: usize, per_thread: usize, gap_us: f64, seed: u64) -> PhaseResult {
+    let slot_seq = AtomicU64::new(0);
+    let dropped = AtomicU64::new(0);
+    let pending: PendingMap = Mutex::new(HashMap::new());
+    let t0 = Instant::now();
+    let results: Vec<(u64, Vec<f64>, Vec<f64>)> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                let (slot_seq, dropped, pending) = (&slot_seq, &dropped, &pending);
+                s.spawn(move || {
+                    let mut rng = Rng(seed ^ (0x9e37_79b9_7f4a_7c15u64.wrapping_mul(t as u64 + 1)));
+                    let mut grants = 0u64;
+                    let mut latencies = Vec::new();
+                    let mut utilization = Vec::new();
+                    // Flows this thread admitted: (expiry tick, name).
+                    let mut live: Vec<(usize, String)> = Vec::new();
+                    let mut clock = Instant::now();
+                    for i in 0..per_thread {
+                        let a = arrival(&mut rng, format!("t{t}f{i}"), slot_seq);
+                        if gap_us > 0.0 {
+                            clock += Duration::from_nanos((1_000.0 * rng.exp(gap_us)) as u64);
+                            while Instant::now() < clock {
+                                std::hint::spin_loop();
+                            }
+                        }
+                        let sched = Instant::now();
+                        if door.submit(&a.req) {
+                            grants += 1;
+                            latencies.push(sched.elapsed().as_secs_f64() * 1e6);
+                            live.push((i + a.life, a.req.name.clone()));
+                        } else {
+                            let mut p = pending.lock().unwrap();
+                            if p.len() >= PENDING_CAP {
+                                dropped.fetch_add(1, Ordering::Relaxed);
+                            } else if !door.parks() || door.park(&a.req) {
+                                p.insert(a.req.name.clone(), (a.req.clone(), sched));
+                            } else {
+                                dropped.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                        // Retire everything whose lifetime expired.
+                        let (done, keep): (Vec<_>, Vec<_>) =
+                            live.drain(..).partition(|(exp, _)| *exp <= i);
+                        live = keep;
+                        for (_, name) in done {
+                            door.retire(&name);
+                        }
+                        // Retry blocked submissions: a parking door pumps
+                        // (grants may belong to any thread — the granting
+                        // thread adopts them), a plain door re-submits.
+                        if !pending.lock().unwrap().is_empty() {
+                            if door.parks() {
+                                for name in door.pump() {
+                                    match pending.lock().unwrap().remove(&name) {
+                                        Some((_, at)) => {
+                                            grants += 1;
+                                            latencies.push(at.elapsed().as_secs_f64() * 1e6);
+                                            live.push((i + 3, name));
+                                        }
+                                        // Granted but no longer tracked:
+                                        // retire rather than leak devices.
+                                        None => door.retire(&name),
+                                    }
+                                }
+                            } else {
+                                let retry: Vec<(String, AdmitReq, Instant)> = {
+                                    let p = pending.lock().unwrap();
+                                    p.iter().map(|(n, (r, at))| (n.clone(), r.clone(), *at)).collect()
+                                };
+                                for (name, req, at) in retry {
+                                    // Claim before submitting so two threads
+                                    // never double-admit one parked flow.
+                                    if pending.lock().unwrap().remove(&name).is_none() {
+                                        continue;
+                                    }
+                                    if door.submit(&req) {
+                                        grants += 1;
+                                        latencies.push(at.elapsed().as_secs_f64() * 1e6);
+                                        live.push((i + 3, name));
+                                    } else {
+                                        pending.lock().unwrap().insert(name, (req, at));
+                                    }
+                                }
+                            }
+                        }
+                        if gap_us > 0.0 {
+                            let services = door.services();
+                            utilization.push(
+                                services.cluster.allocated_devices() as f64
+                                    / services.cluster.num_devices() as f64,
+                            );
+                        }
+                    }
+                    for (_, name) in live {
+                        door.retire(&name);
+                    }
+                    (grants, latencies, utilization)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let secs = t0.elapsed().as_secs_f64();
+    // Final sweep: anything still parked inside the door when the threads
+    // stopped is granted-and-retired (or stays parked; the door is
+    // discarded after the phase), then idle leases drain.
+    for _ in 0..4 {
+        let granted = door.pump();
+        if granted.is_empty() {
+            break;
+        }
+        for name in granted {
+            door.retire(&name);
+        }
+    }
+    door.teardown();
+    let mut out = PhaseResult {
+        grants: 0,
+        dropped: dropped.load(Ordering::Relaxed)
+            + pending.lock().unwrap().len() as u64,
+        secs,
+        latencies_us: Vec::new(),
+        utilization: Vec::new(),
+    };
+    for (g, lat, util) in results {
+        out.grants += g;
+        out.latencies_us.extend(lat);
+        out.utilization.extend(util);
+    }
+    out
+}
+
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * p).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+struct DoorResult {
+    label: &'static str,
+    admissions_per_sec: f64,
+    p50_us: f64,
+    p99_us: f64,
+    fast_hit_rate: f64,
+    utilization: f64,
+    grants: u64,
+    dropped: u64,
+}
+
+fn run_door(mk: &dyn Fn() -> Box<dyn Door>, threads: usize, n: usize, gap_us: f64) -> DoorResult {
+    // Saturation: closed loop on a fresh door.
+    let door = mk();
+    let sat = drive(door.as_ref(), threads, n, 0.0, 0x5eed);
+    let label = door.label();
+    // Poisson: open loop on another fresh door.
+    let door = mk();
+    let poi = drive(door.as_ref(), threads, n / 2, gap_us, 0xfeed);
+    let mut lat = poi.latencies_us;
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    DoorResult {
+        label,
+        admissions_per_sec: sat.grants as f64 / sat.secs.max(1e-9),
+        p50_us: percentile(&lat, 0.50),
+        p99_us: percentile(&lat, 0.99),
+        fast_hit_rate: door.fast_hit_rate(),
+        utilization: mean(&poi.utilization),
+        grants: sat.grants + poi.grants,
+        dropped: sat.dropped + poi.dropped,
+    }
+}
+
+fn main() -> Result<()> {
+    let (threads, n, gap_us) = if small() { (2, 300, 40.0) } else { (4, 2000, 60.0) };
+    println!(
+        "admission bench: {DEVICES} devices, {threads} submitter threads x {n} arrivals \
+         (saturation) + {} (poisson, mean gap {gap_us}us)",
+        n / 2
+    );
+
+    let gate = run_door(&|| Box::new(gate_door()) as Box<dyn Door>, threads, n, gap_us);
+    let sup = run_door(&|| Box::new(supervisor_door()) as Box<dyn Door>, threads, n, gap_us);
+
+    let row = |r: &DoorResult| {
+        vec![
+            r.label.to_string(),
+            common::f(r.admissions_per_sec),
+            common::f(r.p50_us),
+            common::f(r.p99_us),
+            common::f(r.fast_hit_rate),
+            common::f(r.utilization),
+            r.grants.to_string(),
+            r.dropped.to_string(),
+        ]
+    };
+    common::report(
+        "admission",
+        &["door", "admits/s", "p50_us", "p99_us", "fast_hit", "util", "grants", "dropped"],
+        vec![row(&gate), row(&sup)],
+    );
+
+    let door_json = |r: &DoorResult| {
+        let mut v = Value::obj();
+        v.set("admissions_per_sec", r.admissions_per_sec)
+            .set("p50_time_to_launch_us", r.p50_us)
+            .set("p99_time_to_launch_us", r.p99_us)
+            .set("fast_path_hit_rate", r.fast_hit_rate)
+            .set("steady_state_utilization", r.utilization)
+            .set("grants", r.grants as i64)
+            .set("dropped", r.dropped as i64);
+        v
+    };
+    let mut out = Value::obj();
+    out.set("bench", "admission");
+    out.set("gate", door_json(&gate));
+    out.set("supervisor_admit_all", door_json(&sup));
+    out.set("speedup", gate.admissions_per_sec / sup.admissions_per_sec.max(1e-9));
+    out.set("config", {
+        let mut c = Value::obj();
+        c.set("preset", if small() { "small" } else { "full" })
+            .set("devices", DEVICES as i64)
+            .set("threads", threads as i64)
+            .set("saturation_arrivals_per_thread", n as i64)
+            .set("poisson_arrivals_per_thread", (n / 2) as i64)
+            .set("poisson_mean_gap_us", gap_us);
+        c
+    });
+    std::fs::write("BENCH_admission.json", out.to_json_pretty())?;
+    println!("(saved BENCH_admission.json)");
+
+    println!(
+        "gate {:.0} admits/s (fast-hit {:.2}) vs admit_all {:.0} admits/s -> {:.2}x; \
+         p99 time-to-launch {:.0}us vs {:.0}us",
+        gate.admissions_per_sec,
+        gate.fast_hit_rate,
+        sup.admissions_per_sec,
+        gate.admissions_per_sec / sup.admissions_per_sec.max(1e-9),
+        gate.p99_us,
+        sup.p99_us,
+    );
+    Ok(())
+}

@@ -249,6 +249,33 @@ impl Default for AnalyzeConfig {
     }
 }
 
+/// Serving front-door configuration (`[serve]`): the `ServeGate` sharded
+/// admission knobs (see `crate::serve`). Short exclusive flows admit on a
+/// lock-free fast path against per-shard device leases; everything else
+/// falls back to the `FlowSupervisor` slow path.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Intake shards striping the submission queue (mirrors the channel
+    /// core's sharding). More shards ⇒ less cross-submitter contention.
+    pub shards: usize,
+    /// Devices drawn from the global `Cluster` book per shard-lease
+    /// refill. Larger leases amortize book contention; smaller leases
+    /// keep more devices globally poolable.
+    pub lease: usize,
+    /// Largest device demand eligible for the fast path. Requests above
+    /// this (or shareable / pinned-slot requests) take the supervisor
+    /// slow path.
+    pub fast_max: usize,
+    /// Parked submissions held per shard before `enqueue` rejects.
+    pub queue_depth: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { shards: 4, lease: 8, fast_max: 2, queue_depth: 256 }
+    }
+}
+
 /// Embodied-workload configuration (ManiSkill-like / LIBERO-like).
 #[derive(Debug, Clone)]
 pub struct EmbodiedConfig {
@@ -290,6 +317,7 @@ pub struct RunConfig {
     pub fault: FaultConfig,
     pub analyze: AnalyzeConfig,
     pub transport: TransportConfig,
+    pub serve: ServeConfig,
     pub embodied: EmbodiedConfig,
 }
 
@@ -308,6 +336,7 @@ impl Default for RunConfig {
             fault: FaultConfig::default(),
             analyze: AnalyzeConfig::default(),
             transport: TransportConfig::default(),
+            serve: ServeConfig::default(),
             embodied: EmbodiedConfig::default(),
         }
     }
@@ -441,6 +470,11 @@ impl RunConfig {
             c.transport.connect_timeout_ms = x as u64;
         }
 
+        get_num!(v, "serve.shards", c.serve.shards, as_usize);
+        get_num!(v, "serve.lease", c.serve.lease, as_usize);
+        get_num!(v, "serve.fast_max", c.serve.fast_max, as_usize);
+        get_num!(v, "serve.queue_depth", c.serve.queue_depth, as_usize);
+
         get_num!(v, "embodied.num_envs", c.embodied.num_envs, as_usize);
         get_num!(v, "embodied.horizon", c.embodied.horizon, as_usize);
         if let Some(s) = v.get_path("embodied.env_kind").and_then(Value::as_str) {
@@ -491,6 +525,15 @@ impl RunConfig {
         }
         if self.fault.heartbeat_ms == 0 {
             bail!("fault.heartbeat_ms must be positive");
+        }
+        if self.serve.shards == 0 {
+            bail!("serve.shards must be positive");
+        }
+        if self.serve.lease == 0 {
+            bail!("serve.lease must be positive");
+        }
+        if self.serve.queue_depth == 0 {
+            bail!("serve.queue_depth must be positive");
         }
         match self.transport.backend.as_str() {
             "inproc" | "tcp" | "uds" => {}
@@ -589,6 +632,29 @@ mod tests {
         assert!(RunConfig::from_value(&v).is_err(), "negative deadline must error, not wrap");
         let v = parse_toml("[fault]\nheartbeat_ms = 0").unwrap();
         assert!(RunConfig::from_value(&v).is_err());
+    }
+
+    #[test]
+    fn serve_knobs_parsed_and_validated() {
+        let c = RunConfig::default();
+        assert_eq!(c.serve.shards, 4);
+        assert_eq!(c.serve.lease, 8);
+        assert_eq!(c.serve.fast_max, 2);
+        assert_eq!(c.serve.queue_depth, 256);
+        let v = parse_toml("[serve]\nshards = 8\nlease = 16\nfast_max = 4\nqueue_depth = 64\n")
+            .unwrap();
+        let c = RunConfig::from_value(&v).unwrap();
+        assert_eq!(c.serve.shards, 8);
+        assert_eq!(c.serve.lease, 16);
+        assert_eq!(c.serve.fast_max, 4);
+        assert_eq!(c.serve.queue_depth, 64);
+        // fast_max = 0 is legal: it routes everything through the slow path.
+        let v = parse_toml("[serve]\nfast_max = 0").unwrap();
+        assert_eq!(RunConfig::from_value(&v).unwrap().serve.fast_max, 0);
+        for bad in ["[serve]\nshards = 0", "[serve]\nlease = 0", "[serve]\nqueue_depth = 0"] {
+            let v = parse_toml(bad).unwrap();
+            assert!(RunConfig::from_value(&v).is_err(), "{bad} must be rejected");
+        }
     }
 
     #[test]

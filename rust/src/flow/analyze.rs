@@ -20,6 +20,7 @@
 //! | FA008 | warn     | pump coverage: several pumps contend for one channel |
 //! | FA009 | warn     | single-rank stage whose device demand must straddle a node boundary |
 //! | FA010 | error    | weighted fan-in whose declared shares round a task's per-round quota to zero |
+//! | FA011 | error    | admission request whose device demand exceeds total cluster capacity (can never launch) |
 //!
 //! Three call sites wire the analyzer in:
 //! [`FlowDriver::launch_with`](super::FlowDriver) denies launches on
@@ -716,8 +717,10 @@ impl UnionShape {
 
 /// Cross-flow rules over the union of co-admitted flows: `FA003`
 /// priority-band overlap (the lock-order totality argument, checked
-/// instead of asserted) and `FA002` device over-commit (a faithful
-/// simulation of the supervisor's sequential admission accounting).
+/// instead of asserted), `FA002` device over-commit (a faithful
+/// simulation of the supervisor's sequential admission accounting), and
+/// `FA011` unsatisfiable demand (more devices than the cluster has at
+/// all — a request that no amount of retirement can ever launch).
 pub fn analyze_union(
     reqs: &[(AdmitReq, &FlowSpec)],
     cfg: &SupervisorConfig,
@@ -782,12 +785,18 @@ pub fn analyze_union(
         for (req, _) in reqs {
             let span = format!("flow {:?}", req.name);
             let want = req.devices.max(1);
+            // FA011 — unsatisfiable, not merely over-committed: a demand
+            // beyond the cluster's *total* capacity can never launch, no
+            // matter how many co-tenants retire; in a serving submission
+            // queue it would park forever. Rejected statically so the
+            // gate never enqueues it.
             if want > shape.total_devices {
                 r.push(Diagnostic::error(
-                    "FA002",
+                    "FA011",
                     span,
                     format!(
-                        "wants {want} devices, the cluster has {}",
+                        "wants {want} devices but the whole cluster has {}: the request \
+                         can never launch and would park in a submission queue forever",
                         shape.total_devices
                     ),
                 ));
@@ -1079,6 +1088,29 @@ mod tests {
         let reqs = vec![(AdmitReq::new("fa", 3), &fa), (AdmitReq::new("fb", 2), &fb)];
         let shape = UnionShape { planned: true, ..UnionShape::fresh(4) };
         let r = analyze_union(&reqs, &strict, &shape);
+        assert!(r.is_clean(), "{}", r.render());
+    }
+
+    #[test]
+    fn union_rule_fa011_rejects_unsatisfiable_demand() {
+        let mk = |n: &str| {
+            FlowSpec::new(n)
+                .stage(nop("w"))
+                .edge(Edge::new("x").produced_by_driver().consumed_by("w", "m"))
+        };
+        let (fa, fb) = (mk("fa"), mk("fb"));
+        let cfg = SupervisorConfig::default();
+        // Demand beyond the whole cluster is FA011, not FA002: shareable
+        // or not, no amount of retirement can ever host it.
+        let reqs =
+            vec![(AdmitReq::new("fa", 9).shareable(), &fa), (AdmitReq::new("fb", 1), &fb)];
+        let r = analyze_union(&reqs, &cfg, &UnionShape::fresh(4));
+        assert_eq!(codes(&r), vec!["FA011"], "{}", r.render());
+        assert!(r.render().contains("park"), "{}", r.render());
+        // A planned union normalizes widths first: declared counts are
+        // peaks, not commitments, so the rule does not fire.
+        let shape = UnionShape { planned: true, ..UnionShape::fresh(4) };
+        let r = analyze_union(&reqs, &cfg, &shape);
         assert!(r.is_clean(), "{}", r.render());
     }
 

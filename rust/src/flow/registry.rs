@@ -235,6 +235,7 @@ impl StageRegistry {
         crate::train::advantage::register_pump(&mut reg).expect("group_adv pump is distinct");
         crate::embodied::worker::register(&mut reg).expect("embodied kinds are distinct");
         crate::agentic::register(&mut reg).expect("agentic kinds are distinct");
+        crate::serve::register(&mut reg).expect("serve kind is distinct");
         reg
     }
 
@@ -620,6 +621,7 @@ mod tests {
             "agentic_reward",
             "agentic_collect",
             "agentic_train",
+            "serve_infer",
         ] {
             assert!(reg.stage_kinds().contains(&k), "missing stage kind {k}");
         }

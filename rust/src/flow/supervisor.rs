@@ -31,6 +31,7 @@
 //! [`super::FlowReport`] carries the per-run diff.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
@@ -172,6 +173,11 @@ pub struct FlowSupervisor {
     /// Static-analysis gate policy for [`FlowSupervisor::admit_all`]
     /// (per-code allow/warn/deny from the `[analyze]` config section).
     analyze: Mutex<AnalyzeConfig>,
+    /// Descending priority-slot counter for the serve-gate fast path
+    /// (`crate::serve::ServeGate`): fast admissions claim junior-most
+    /// bands lock-free via `fetch_sub`, disjoint from the slow path's
+    /// ascending [`SupState::next_slot`] slots.
+    fast_slots: AtomicU64,
 }
 
 /// Status snapshot of one admitted flow.
@@ -185,13 +191,80 @@ pub struct FlowStatus {
 
 impl FlowSupervisor {
     pub fn new(services: &Services, cfg: SupervisorConfig) -> FlowSupervisor {
+        let top_slot = u64::MAX / cfg.priority_stride.max(1);
         FlowSupervisor {
             services: services.clone(),
             cfg,
             state: Mutex::new(SupState::default()),
             fault: Mutex::new(None),
             analyze: Mutex::new(AnalyzeConfig::default()),
+            fast_slots: AtomicU64::new(top_slot),
         }
+    }
+
+    /// Claim a junior-most priority band **without the state lock** — the
+    /// serve gate's fast path ([`crate::serve::ServeGate`]). Bands are
+    /// handed out from the top of the priority space downwards, so they
+    /// stay disjoint from [`FlowSupervisor::admit`]'s ascending slots;
+    /// the floor bail fires long before the two ranges could meet (2^43
+    /// fast admissions at the default stride).
+    pub fn claim_fast_band(&self) -> Result<u64> {
+        let stride = self.cfg.priority_stride.max(1);
+        let slot = self.fast_slots.fetch_sub(1, Ordering::Relaxed);
+        if slot <= u64::MAX / stride / 2 {
+            bail!("supervisor: fast-path priority bands exhausted");
+        }
+        // No overflow: slot ≤ u64::MAX / stride by construction.
+        Ok(slot * stride)
+    }
+
+    /// Cost/utility score of a profiled flow topology at window width
+    /// `width`: **throughput per device-second**. Items delivered per run
+    /// come from the live edge occupancy (EWMA of `FlowReport` edge
+    /// stats) when recorded, else the declared per-stage workload peak;
+    /// device-seconds per run come from the profiled per-call phase times
+    /// at the largest measured batch. `None` when the topology has no
+    /// usable profile — unprofiled flows score neutrally, they are not
+    /// penalized. The serve gate uses this as the admission tiebreaker
+    /// when its parked queue is contended.
+    pub fn utility_score(&self, profile_key: &str, width: usize) -> Option<f64> {
+        let prof = self.services.profiles.snapshot(profile_key)?;
+        if !prof.ready() {
+            return None;
+        }
+        let width = width.max(1) as f64;
+        let from_edges = prof.edges.values().map(|e| e.got).fold(0.0, f64::max);
+        let from_workload = prof
+            .db
+            .workers()
+            .iter()
+            .filter_map(|s| prof.workload_of(s))
+            .max()
+            .unwrap_or(1) as f64;
+        let items = if from_edges > 0.0 { from_edges } else { from_workload };
+        let mut secs = 0.0;
+        for stage in prof.db.workers() {
+            let m = prof.workload_of(&stage).unwrap_or(1).max(1);
+            let g = prof.db.batches(&stage).into_iter().max().unwrap_or(1).max(1);
+            let Some(t_call) = prof.db.time(&stage, g) else { continue };
+            // Calls spread across the window; at least one serial call.
+            secs += t_call * (m.div_ceil(g) as f64 / width).max(1.0);
+        }
+        if secs <= 0.0 {
+            return None;
+        }
+        Some(items / (secs * width))
+    }
+
+    /// [`FlowSupervisor::utility_score`] for an **admitted** flow, at its
+    /// current window width. `None` for unknown or unprofiled flows.
+    pub fn utility(&self, flow: &str) -> Option<f64> {
+        let (key, width) = {
+            let st = self.state.lock().unwrap();
+            let f = st.flows.iter().find(|f| f.name == flow)?;
+            (f.profile_key.clone()?, f.window.1)
+        };
+        self.utility_score(&key, width)
     }
 
     /// Arm the watchdog: [`FlowSupervisor::tick`] will scan every admitted
@@ -672,24 +745,30 @@ impl FlowSupervisor {
                     .iter()
                     .map(|f| format!("{}:", f.name))
                     .collect();
-                for scope in scopes {
-                    for s in self.services.health.stalled(&scope, deadline) {
-                        let (worker, rank) = match s.endpoint.rsplit_once('/') {
-                            Some((w, r)) => (w.to_string(), r.parse().unwrap_or(0)),
-                            None => (s.endpoint.clone(), 0),
-                        };
-                        self.services.monitor.report(
-                            &worker,
-                            rank,
-                            &s.method,
-                            format!(
-                                "hang: {} busy {:.0}ms (deadline {}ms)",
-                                s.method,
-                                s.busy_for.as_secs_f64() * 1e3,
-                                fault.deadline_ms
-                            ),
-                        );
-                    }
+                // One registry pass covering every admitted flow, not one
+                // per flow: at serving scale (hundreds of short flows) a
+                // per-flow scan loop turns each tick into O(flows × ranks).
+                let stalled = if scopes.is_empty() {
+                    Vec::new()
+                } else {
+                    self.services.health.stalled_any(&scopes, deadline)
+                };
+                for s in stalled {
+                    let (worker, rank) = match s.endpoint.rsplit_once('/') {
+                        Some((w, r)) => (w.to_string(), r.parse().unwrap_or(0)),
+                        None => (s.endpoint.clone(), 0),
+                    };
+                    self.services.monitor.report(
+                        &worker,
+                        rank,
+                        &s.method,
+                        format!(
+                            "hang: {} busy {:.0}ms (deadline {}ms)",
+                            s.method,
+                            s.busy_for.as_secs_f64() * 1e3,
+                            fault.deadline_ms
+                        ),
+                    );
                 }
             }
         }
@@ -1051,6 +1130,62 @@ mod tests {
         let r = s.retire("guest").unwrap();
         assert_eq!(r.freed, Some((0, 2)));
         assert_eq!(s.services().cluster.free_devices(), 2);
+    }
+
+    #[test]
+    fn fast_bands_are_disjoint_from_slow_slots() {
+        let s = sup(4, SupervisorConfig::default());
+        let a = s.admit(AdmitReq::new("slow", 1)).unwrap();
+        let b1 = s.claim_fast_band().unwrap();
+        let b2 = s.claim_fast_band().unwrap();
+        assert_ne!(b1, b2);
+        assert!(b1 > b2, "fast bands descend (junior-most claimed first)");
+        assert!(b2 > a.priority_base, "fast bands stay junior to every slow slot");
+        assert_eq!(b1 % SupervisorConfig::default().priority_stride, 0, "band-aligned");
+    }
+
+    #[test]
+    fn tick_scans_health_once_regardless_of_flow_count() {
+        let s = sup(8, SupervisorConfig::default());
+        for i in 0..4 {
+            s.admit(AdmitReq::new(&format!("f{i}"), 1)).unwrap();
+        }
+        let h = s.services().health.clone();
+        let before = h.scan_count();
+        s.tick();
+        assert_eq!(h.scan_count() - before, 0, "unarmed tick must not scan at all");
+        s.set_fault(FaultConfig { deadline_ms: 0, ..Default::default() });
+        s.tick();
+        assert_eq!(h.scan_count() - before, 0, "no deadline configured ⇒ no scan");
+        s.set_fault(FaultConfig { deadline_ms: 50, ..Default::default() });
+        s.tick();
+        assert_eq!(h.scan_count() - before, 1, "armed tick is one scan, not one per flow");
+    }
+
+    #[test]
+    fn utility_scores_profiled_flows_per_device_second() {
+        let s = sup(8, SupervisorConfig::default());
+        let spec = crate::flow::FlowSpec::new("u")
+            .stage(nop("work"))
+            .edge(Edge::new("src").produced_by_driver().consumed_by("work", "m"));
+        let key = ProfileStore::flow_key(&spec.profile_signature());
+        assert!(s.utility_score(&key, 2).is_none(), "unprofiled flows score None");
+
+        let mut db = ProfileDb::new();
+        db.add("work", 8, 0.1, 1 << 20);
+        let mut wl = HashMap::new();
+        wl.insert("work".to_string(), 8usize);
+        s.services().profiles.seed_flow(&key, &db, &wl);
+        let u2 = s.utility_score(&key, 2).unwrap();
+        assert!(u2 > 0.0);
+        // Same throughput on a wider window ⇒ lower per-device utility.
+        let u4 = s.utility_score(&key, 4).unwrap();
+        assert!(u4 < u2, "width 4 ({u4}) must score below width 2 ({u2})");
+
+        // The admitted-flow lookup path resolves key + window itself.
+        s.admit_spec(AdmitReq::new("u", 2), &spec).unwrap();
+        assert_eq!(s.utility("u"), Some(u2));
+        assert!(s.utility("ghost").is_none());
     }
 
     struct Nop;

@@ -30,6 +30,7 @@ pub mod infer;
 pub mod train;
 pub mod embodied;
 pub mod agentic;
+pub mod serve;
 pub mod baseline;
 pub mod workflow;
 pub mod simulator;

@@ -1,0 +1,602 @@
+//! The [`ServeGate`]: a sharded admission front door over the
+//! [`FlowSupervisor`].
+//!
+//! Submissions stripe across N intake shards by flow-name hash. Each
+//! shard owns a **device lease pool** — contiguous blocks batch-drawn
+//! from the global [`Cluster`](crate::cluster::Cluster) book — so a
+//! small exclusive flow admits entirely inside one shard mutex: carve a
+//! contiguous run from the pool, claim a junior priority band from the
+//! supervisor's lock-free descending counter, done. Concurrent
+//! submitters on different shards never contend, and none of them
+//! contend with `FlowSupervisor::tick`/`retire`, which only touch the
+//! supervisor's own state. Large, shareable, or slot-pinned requests
+//! fall back to the supervisor slow path (`admit` / `admit_all`).
+//!
+//! Device accounting invariant: every device is either free in the
+//! cluster book, idle in exactly one shard's lease pool, owned by
+//! exactly one live fast flow, or owned by the supervisor's books —
+//! the churn stress test (`tests/serve_admission.rs`) asserts the sum.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+use crate::cluster::{DeviceId, DeviceSet};
+use crate::config::ServeConfig;
+use crate::flow::driver::{LaunchOpts, ResizeSlot};
+use crate::flow::{AdmitReq, Admission, FlowSpec, FlowSupervisor, RetireReport};
+
+/// One admitted submission: the usual [`Admission`] (window, band,
+/// ready-made `LaunchOpts`) plus which path granted it.
+#[derive(Debug, Clone)]
+pub struct ServeGrant {
+    pub admission: Admission,
+    /// Granted by the lock-free shard fast path (vs. the supervisor).
+    pub fast: bool,
+}
+
+/// A flow admitted by the fast path: gate-resident, never entered into
+/// the supervisor's books.
+struct FastFlow {
+    /// Exact device ids of the window (contiguous, sorted).
+    ids: Vec<usize>,
+}
+
+/// A submission parked until capacity frees up.
+struct Parked {
+    req: AdmitReq,
+    /// ProfileStore topology key for the cost/utility tiebreak.
+    profile_key: Option<String>,
+}
+
+#[derive(Default)]
+struct Shard {
+    /// Idle leased device ids, sorted ascending.
+    pool: Vec<usize>,
+    /// Live fast-path flows that hashed to this shard.
+    flows: HashMap<String, FastFlow>,
+    /// Parked submissions awaiting a [`ServeGate::pump`].
+    queue: VecDeque<Parked>,
+}
+
+/// Monotonic gate counters plus current occupancy gauges.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct GateStats {
+    /// `submit`/`submit_spec`/`enqueue` calls accepted for processing.
+    pub submitted: u64,
+    pub fast_admits: u64,
+    pub slow_admits: u64,
+    pub rejected: u64,
+    /// Batched lease draws from the global cluster book.
+    pub refills: u64,
+    /// Submissions currently parked across all shards.
+    pub parked: usize,
+    /// Devices sitting idle in shard lease pools (leased, not serving).
+    pub leased_idle: usize,
+    /// Live fast-path flows across all shards.
+    pub fast_flows: usize,
+}
+
+impl GateStats {
+    /// Share of admissions that took the fast path.
+    pub fn fast_hit_rate(&self) -> f64 {
+        let total = self.fast_admits + self.slow_admits;
+        if total == 0 {
+            return 0.0;
+        }
+        self.fast_admits as f64 / total as f64
+    }
+}
+
+/// The serving front door. See the module docs for the architecture.
+pub struct ServeGate {
+    sup: Arc<FlowSupervisor>,
+    cfg: ServeConfig,
+    shards: Vec<Mutex<Shard>>,
+    submitted: AtomicU64,
+    fast_admits: AtomicU64,
+    slow_admits: AtomicU64,
+    rejected: AtomicU64,
+    refills: AtomicU64,
+}
+
+impl ServeGate {
+    pub fn new(sup: Arc<FlowSupervisor>, cfg: ServeConfig) -> ServeGate {
+        let n = cfg.shards.max(1);
+        ServeGate {
+            sup,
+            cfg,
+            shards: (0..n).map(|_| Mutex::new(Shard::default())).collect(),
+            submitted: AtomicU64::new(0),
+            fast_admits: AtomicU64::new(0),
+            slow_admits: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            refills: AtomicU64::new(0),
+        }
+    }
+
+    /// The supervisor behind the gate (slow path, utility scores, tick).
+    pub fn supervisor(&self) -> &Arc<FlowSupervisor> {
+        &self.sup
+    }
+
+    /// Submit one flow for admission. Small exclusive requests
+    /// (`devices ≤ serve.fast_max`, not shareable, no pinned slot) take
+    /// the shard fast path; everything else — and fast-eligible requests
+    /// whose shard cannot lease capacity — falls back to
+    /// [`FlowSupervisor::admit`]. Errors when neither path can host the
+    /// flow *now*; see [`ServeGate::enqueue`] for park-and-retry.
+    pub fn submit(&self, req: AdmitReq) -> Result<ServeGrant> {
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+        self.reject_unsatisfiable(&req)?;
+        if self.fast_eligible(&req) {
+            if let Some(g) = self.try_fast(&req)? {
+                return Ok(g);
+            }
+        }
+        match self.sup.admit(req) {
+            Ok(a) => {
+                self.slow_admits.fetch_add(1, Ordering::Relaxed);
+                Ok(ServeGrant { admission: a, fast: false })
+            }
+            Err(e) => {
+                self.rejected.fetch_add(1, Ordering::Relaxed);
+                Err(e)
+            }
+        }
+    }
+
+    /// [`ServeGate::submit`] with the flow's spec: the slow path runs the
+    /// full [`FlowSupervisor::admit_all`] machinery (analyzer gate, live
+    /// union planning, profile-key attachment) instead of plain `admit`.
+    pub fn submit_spec(&self, req: AdmitReq, spec: &FlowSpec) -> Result<ServeGrant> {
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+        self.reject_unsatisfiable(&req)?;
+        if self.fast_eligible(&req) {
+            if let Some(g) = self.try_fast(&req)? {
+                return Ok(g);
+            }
+        }
+        match self.sup.admit_all(vec![(req, spec)]) {
+            Ok(mut adms) => {
+                let a = adms.pop().context("serve: admit_all returned no admission")?;
+                self.slow_admits.fetch_add(1, Ordering::Relaxed);
+                Ok(ServeGrant { admission: a, fast: false })
+            }
+            Err(e) => {
+                self.rejected.fetch_add(1, Ordering::Relaxed);
+                Err(e)
+            }
+        }
+    }
+
+    /// Park a submission until capacity frees up: it stays queued on its
+    /// shard until a [`ServeGate::pump`] admits it. Errors only on
+    /// requests that could never launch (FA011, bad names) or when the
+    /// shard queue is full — a parked request is otherwise guaranteed a
+    /// retry at every pump.
+    pub fn enqueue(&self, req: AdmitReq, profile_key: Option<String>) -> Result<()> {
+        self.reject_unsatisfiable(&req)?;
+        if req.name.is_empty() || req.name.contains(':') {
+            self.rejected.fetch_add(1, Ordering::Relaxed);
+            bail!("serve: flow name {:?} must be non-empty and ':'-free", req.name);
+        }
+        let si = self.shard_of(&req.name);
+        let mut sh = self.shards[si].lock().unwrap();
+        if sh.queue.len() >= self.cfg.queue_depth {
+            self.rejected.fetch_add(1, Ordering::Relaxed);
+            bail!(
+                "serve: shard {si} submission queue full ({} parked, serve.queue_depth = {})",
+                sh.queue.len(),
+                self.cfg.queue_depth
+            );
+        }
+        if sh.flows.contains_key(&req.name) || sh.queue.iter().any(|p| p.req.name == req.name) {
+            self.rejected.fetch_add(1, Ordering::Relaxed);
+            bail!("serve: flow {:?} already admitted or parked", req.name);
+        }
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+        sh.queue.push_back(Parked { req, profile_key });
+        Ok(())
+    }
+
+    /// Drain parked submissions: each shard's queue is retried in
+    /// **cost/utility order** — [`FlowSupervisor::utility_score`]
+    /// (throughput per device-second) descending, unprofiled flows last
+    /// in FIFO order — so when the queue is contended, the devices go to
+    /// the flows that earn the most with them. Returns the grants;
+    /// submissions that still don't fit stay parked for the next pump.
+    pub fn pump(&self) -> Vec<ServeGrant> {
+        let mut out = Vec::new();
+        for si in 0..self.shards.len() {
+            let mut parked: Vec<Parked> = {
+                let mut sh = self.shards[si].lock().unwrap();
+                sh.queue.drain(..).collect()
+            };
+            if parked.is_empty() {
+                continue;
+            }
+            // Unprofiled flows score below any real (positive) utility;
+            // the sort is stable, so equal scores keep arrival order.
+            let score = |p: &Parked| {
+                p.profile_key
+                    .as_deref()
+                    .and_then(|k| self.sup.utility_score(k, p.req.devices.max(1)))
+                    .unwrap_or(-1.0)
+            };
+            parked.sort_by(|a, b| {
+                score(b).partial_cmp(&score(a)).unwrap_or(std::cmp::Ordering::Equal)
+            });
+            let mut still_parked = Vec::new();
+            for p in parked {
+                let granted = if self.fast_eligible(&p.req) {
+                    self.try_fast(&p.req).ok().flatten()
+                } else {
+                    self.sup.admit(p.req.clone()).ok().map(|a| {
+                        self.slow_admits.fetch_add(1, Ordering::Relaxed);
+                        ServeGrant { admission: a, fast: false }
+                    })
+                };
+                match granted {
+                    Some(g) => out.push(g),
+                    None => still_parked.push(p),
+                }
+            }
+            if !still_parked.is_empty() {
+                let mut sh = self.shards[si].lock().unwrap();
+                // Preserve priority order ahead of anything enqueued
+                // while the shard was unlocked.
+                for p in still_parked.into_iter().rev() {
+                    sh.queue.push_front(p);
+                }
+            }
+        }
+        out
+    }
+
+    /// Retire a flow admitted through the gate. Fast-path flows return
+    /// their devices to the shard lease pool (excess beyond one lease
+    /// goes back to the global book) and report `None`; supervisor
+    /// tenants retire through [`FlowSupervisor::retire`] and report its
+    /// freed-capacity offers.
+    pub fn retire(&self, name: &str) -> Result<Option<RetireReport>> {
+        let si = self.shard_of(name);
+        {
+            let mut sh = self.shards[si].lock().unwrap();
+            if let Some(f) = sh.flows.remove(name) {
+                // Same scope hygiene as the supervisor: no stale waiters,
+                // no stale fairness counters under a reusable name.
+                let scope = format!("{name}:");
+                let services = self.sup.services();
+                services.locks.drop_intents(&scope);
+                services.locks.reset_counters(&scope);
+                sh.pool.extend(f.ids);
+                sh.pool.sort_unstable();
+                if sh.pool.len() > self.cfg.lease {
+                    let excess = sh.pool.split_off(self.cfg.lease);
+                    services
+                        .cluster
+                        .release(&DeviceSet::new(excess.into_iter().map(DeviceId).collect()));
+                }
+                return Ok(None);
+            }
+        }
+        self.sup.retire(name).map(Some)
+    }
+
+    /// Return every idle leased device to the global book (teardown /
+    /// rebalance). Live fast flows keep their windows. Returns the
+    /// number of devices released.
+    pub fn drain_leases(&self) -> usize {
+        let mut released = 0;
+        for sh in &self.shards {
+            let ids: Vec<usize> = std::mem::take(&mut sh.lock().unwrap().pool);
+            released += ids.len();
+            if !ids.is_empty() {
+                self.sup
+                    .services()
+                    .cluster
+                    .release(&DeviceSet::new(ids.into_iter().map(DeviceId).collect()));
+            }
+        }
+        released
+    }
+
+    /// Counters + occupancy snapshot (benchmarks, tests, dashboards).
+    pub fn stats(&self) -> GateStats {
+        let mut parked = 0;
+        let mut leased_idle = 0;
+        let mut fast_flows = 0;
+        for sh in &self.shards {
+            let sh = sh.lock().unwrap();
+            parked += sh.queue.len();
+            leased_idle += sh.pool.len();
+            fast_flows += sh.flows.len();
+        }
+        GateStats {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            fast_admits: self.fast_admits.load(Ordering::Relaxed),
+            slow_admits: self.slow_admits.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            refills: self.refills.load(Ordering::Relaxed),
+            parked,
+            leased_idle,
+            fast_flows,
+        }
+    }
+
+    /// Every device id the gate currently holds: idle in lease pools or
+    /// owned by a live fast flow. The churn test sums this with the
+    /// supervisor's books to assert cluster-wide conservation.
+    pub fn held_devices(&self) -> Vec<usize> {
+        let mut out = Vec::new();
+        for sh in &self.shards {
+            let sh = sh.lock().unwrap();
+            out.extend(sh.pool.iter().copied());
+            for f in sh.flows.values() {
+                out.extend(f.ids.iter().copied());
+            }
+        }
+        out.sort_unstable();
+        out
+    }
+
+    fn fast_eligible(&self, req: &AdmitReq) -> bool {
+        !req.shareable && req.slot.is_none() && req.devices.max(1) <= self.cfg.fast_max
+    }
+
+    /// The dynamic mirror of analyzer rule FA011: a demand beyond total
+    /// cluster capacity can never launch, so it must never park.
+    fn reject_unsatisfiable(&self, req: &AdmitReq) -> Result<()> {
+        let total = self.sup.services().cluster.num_devices();
+        let want = req.devices.max(1);
+        if want > total {
+            self.rejected.fetch_add(1, Ordering::Relaxed);
+            bail!(
+                "serve: flow {:?} wants {want} devices but the whole cluster has {total} \
+                 [FA011: can never launch]",
+                req.name
+            );
+        }
+        Ok(())
+    }
+
+    /// The fast path: one shard mutex, no supervisor state. `Ok(None)`
+    /// means "no lease capacity" (caller falls back / re-parks); `Err`
+    /// means the request itself is bad (duplicate, bad name).
+    fn try_fast(&self, req: &AdmitReq) -> Result<Option<ServeGrant>> {
+        if req.name.is_empty() || req.name.contains(':') {
+            self.rejected.fetch_add(1, Ordering::Relaxed);
+            bail!("serve: flow name {:?} must be non-empty and ':'-free", req.name);
+        }
+        let want = req.devices.max(1);
+        let si = self.shard_of(&req.name);
+        let mut sh = self.shards[si].lock().unwrap();
+        if sh.flows.contains_key(&req.name) {
+            self.rejected.fetch_add(1, Ordering::Relaxed);
+            bail!("serve: flow {:?} already admitted on shard {si}", req.name);
+        }
+        let run = match take_run(&mut sh.pool, want) {
+            Some(run) => run,
+            None => {
+                // Refill: one batched draw against the global book buys
+                // `lease` future fast admissions on this shard.
+                let cluster = &self.sup.services().cluster;
+                let set = match cluster
+                    .allocate_packed(self.cfg.lease.max(want))
+                    .or_else(|_| cluster.allocate_packed(want))
+                {
+                    Ok(set) => set,
+                    Err(_) => return Ok(None),
+                };
+                self.refills.fetch_add(1, Ordering::Relaxed);
+                sh.pool.extend(set.ids().iter().map(|d| d.0));
+                sh.pool.sort_unstable();
+                match take_run(&mut sh.pool, want) {
+                    Some(run) => run,
+                    None => return Ok(None),
+                }
+            }
+        };
+        let priority_base = match self.sup.claim_fast_band() {
+            Ok(b) => b,
+            Err(e) => {
+                sh.pool.extend(run);
+                sh.pool.sort_unstable();
+                return Err(e);
+            }
+        };
+        let window = (run[0], want);
+        let resize = ResizeSlot::default();
+        sh.flows.insert(req.name.clone(), FastFlow { ids: run });
+        self.fast_admits.fetch_add(1, Ordering::Relaxed);
+        Ok(Some(ServeGrant {
+            admission: Admission {
+                flow: req.name.clone(),
+                window,
+                exclusive: true,
+                priority_base,
+                opts: LaunchOpts {
+                    scope: Some(format!("{}:", req.name)),
+                    window: Some(window),
+                    priority_base,
+                    shared_window: false,
+                    resize,
+                    ..Default::default()
+                },
+            },
+            fast: true,
+        }))
+    }
+
+    /// FNV-1a over the flow name: deterministic, so retire always finds
+    /// the shard that admitted the flow.
+    fn shard_of(&self, name: &str) -> usize {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in name.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        (h % self.shards.len() as u64) as usize
+    }
+}
+
+/// Remove and return a run of `want` **consecutive** device ids from the
+/// sorted pool (windows are contiguous ranges), or `None`.
+fn take_run(pool: &mut Vec<usize>, want: usize) -> Option<Vec<usize>> {
+    if want == 0 || pool.len() < want {
+        return None;
+    }
+    let mut start = 0;
+    for i in 0..pool.len() {
+        if i > start && pool[i] != pool[i - 1] + 1 {
+            start = i;
+        }
+        if i + 1 - start == want {
+            return Some(pool.drain(start..=i).collect());
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+    use crate::config::{ClusterConfig, SupervisorConfig};
+    use crate::worker::group::Services;
+
+    fn gate(devices: usize, cfg: ServeConfig) -> ServeGate {
+        let services = Services::new(Cluster::new(ClusterConfig {
+            nodes: 1,
+            devices_per_node: devices,
+            ..Default::default()
+        }));
+        let sup = Arc::new(FlowSupervisor::new(&services, SupervisorConfig::default()));
+        ServeGate::new(sup, cfg)
+    }
+
+    #[test]
+    fn take_run_finds_contiguous_blocks_only() {
+        let mut pool = vec![0, 1, 3, 4, 5, 9];
+        assert_eq!(take_run(&mut pool, 3), Some(vec![3, 4, 5]));
+        assert_eq!(pool, vec![0, 1, 9]);
+        assert_eq!(take_run(&mut pool, 2), Some(vec![0, 1]));
+        assert_eq!(take_run(&mut pool, 2), None, "9 alone is not a 2-run");
+        assert_eq!(pool, vec![9]);
+        assert_eq!(take_run(&mut pool, 1), Some(vec![9]));
+        assert!(pool.is_empty());
+    }
+
+    #[test]
+    fn fast_path_admits_small_exclusive_flows() {
+        let g = gate(8, ServeConfig { lease: 4, fast_max: 2, ..Default::default() });
+        let a = g.submit(AdmitReq::new("tiny", 1)).unwrap();
+        assert!(a.fast);
+        assert!(a.admission.exclusive);
+        assert_eq!(a.admission.window.1, 1);
+        assert_eq!(a.admission.opts.scope.as_deref(), Some("tiny:"));
+        // The refill leased a whole block; the rest sits in the pool.
+        let st = g.stats();
+        assert_eq!(st.refills, 1);
+        assert_eq!(st.leased_idle, 3);
+        assert_eq!(st.fast_admits, 1);
+        // A second small flow on the same shard reuses the lease: no
+        // second draw unless it lands on a different (empty) shard.
+        let b = g.submit(AdmitReq::new("tiny2", 1)).unwrap();
+        assert!(b.fast);
+        assert!(
+            b.admission.window != a.admission.window,
+            "windows must be disjoint: {:?} vs {:?}",
+            b.admission.window,
+            a.admission.window
+        );
+        assert!(b.admission.priority_base != a.admission.priority_base);
+    }
+
+    #[test]
+    fn large_shareable_and_pinned_requests_take_the_slow_path() {
+        let g = gate(8, ServeConfig { fast_max: 2, ..Default::default() });
+        let big = g.submit(AdmitReq::new("big", 4)).unwrap();
+        assert!(!big.fast, "above fast_max");
+        let sh = g.submit(AdmitReq::new("share", 2).shareable()).unwrap();
+        assert!(!sh.fast, "shareable");
+        let pinned = g.submit(AdmitReq::new("pin", 1).slot(9)).unwrap();
+        assert!(!pinned.fast, "pinned slot");
+        assert_eq!(g.stats().slow_admits, 3);
+        // Slow tenants are supervisor tenants: retire reports through it.
+        assert!(g.retire("big").unwrap().is_some());
+    }
+
+    #[test]
+    fn unsatisfiable_demand_is_rejected_not_parked() {
+        let g = gate(4, ServeConfig::default());
+        let err = g.submit(AdmitReq::new("huge", 5)).unwrap_err().to_string();
+        assert!(err.contains("FA011"), "{err}");
+        let err = g.enqueue(AdmitReq::new("huge", 5), None).unwrap_err().to_string();
+        assert!(err.contains("FA011"), "{err}");
+        assert_eq!(g.stats().parked, 0);
+        assert_eq!(g.stats().rejected, 2);
+    }
+
+    #[test]
+    fn retire_recycles_devices_through_the_lease_pool() {
+        let g = gate(4, ServeConfig { shards: 1, lease: 2, fast_max: 2, ..Default::default() });
+        let a = g.submit(AdmitReq::new("one", 2)).unwrap();
+        assert!(a.fast);
+        assert_eq!(g.sup.services().cluster.allocated_devices(), 2);
+        assert!(g.retire("one").unwrap().is_none(), "fast flows retire gate-side");
+        // Devices went back to the pool (≤ lease), not the global book.
+        assert_eq!(g.stats().leased_idle, 2);
+        assert_eq!(g.sup.services().cluster.allocated_devices(), 2, "still leased");
+        // Next admission is served from the pool without a refill.
+        let refills = g.stats().refills;
+        let b = g.submit(AdmitReq::new("two", 2)).unwrap();
+        assert!(b.fast);
+        assert_eq!(g.stats().refills, refills);
+        g.retire("two").unwrap();
+        assert_eq!(g.drain_leases(), 2);
+        assert_eq!(g.sup.services().cluster.free_devices(), 4, "all returned");
+    }
+
+    #[test]
+    fn parked_queue_drains_in_utility_order_when_contended() {
+        let g = gate(2, ServeConfig { shards: 1, lease: 2, fast_max: 2, ..Default::default() });
+        // Occupy the whole cluster so both enqueues must park.
+        let held = g.submit(AdmitReq::new("held", 2)).unwrap();
+        assert!(held.fast);
+        // Seed a profile so "rich" out-scores the unprofiled "poor".
+        let mut db = crate::sched::ProfileDb::new();
+        db.add("w", 4, 0.05, 1 << 20);
+        let mut wl = std::collections::HashMap::new();
+        wl.insert("w".to_string(), 8usize);
+        g.sup.services().profiles.seed_flow("rich-key", &db, &wl);
+
+        g.enqueue(AdmitReq::new("poor", 2), None).unwrap();
+        g.enqueue(AdmitReq::new("rich", 2), Some("rich-key".to_string())).unwrap();
+        assert!(g.pump().is_empty(), "no capacity yet");
+        assert_eq!(g.stats().parked, 2);
+
+        g.retire("held").unwrap();
+        let grants = g.pump();
+        assert_eq!(grants.len(), 1, "capacity for one: {grants:?}");
+        assert_eq!(grants[0].admission.flow, "rich", "utility breaks the tie");
+        assert_eq!(g.stats().parked, 1, "poor stays parked");
+        g.retire("rich").unwrap();
+        let grants = g.pump();
+        assert_eq!(grants.len(), 1);
+        assert_eq!(grants[0].admission.flow, "poor");
+    }
+
+    #[test]
+    fn duplicate_names_rejected_on_both_paths() {
+        let g = gate(8, ServeConfig::default());
+        g.submit(AdmitReq::new("dup", 1)).unwrap();
+        assert!(g.submit(AdmitReq::new("dup", 1)).is_err(), "fast duplicate");
+        assert!(g.enqueue(AdmitReq::new("x", 1), None).is_ok());
+        assert!(g.enqueue(AdmitReq::new("x", 1), None).is_err(), "parked duplicate");
+        assert!(g.submit(AdmitReq::new("bad:name", 1)).is_err());
+    }
+}

@@ -1,0 +1,46 @@
+//! Serving front door: high-throughput flow admission with continuous
+//! cross-flow batching.
+//!
+//! At serving scale the [`FlowSupervisor`](crate::flow::FlowSupervisor)
+//! stops being an arbiter of three long-lived flows and becomes a front
+//! door absorbing hundreds of short flow submissions per second — the
+//! supervisor's single state mutex and its `admit`'s global book walk
+//! then serialize every submitter behind every `tick`/`retire`. This
+//! module keeps the supervisor as the slow path and puts a sharded,
+//! mostly-lock-free fast path in front of it:
+//!
+//! * [`ServeGate`] — N striped intake shards (mirroring the channel
+//!   core's sharding), each holding a **device lease pool** batch-drawn
+//!   from the global [`Cluster`](crate::cluster::Cluster) book. Small
+//!   exclusive flows admit entirely inside one shard: carve a contiguous
+//!   run from the pool, claim a junior priority band from the
+//!   supervisor's lock-free descending counter
+//!   ([`claim_fast_band`](crate::flow::FlowSupervisor::claim_fast_band)),
+//!   and go. Large, shareable, or slot-pinned requests fall back to the
+//!   supervisor (`admit` / `admit_all`), whose books the fast path never
+//!   touches except through batched lease refills.
+//! * A **parked submission queue** per shard for requests the cluster
+//!   cannot host *yet*: [`ServeGate::pump`] drains it in cost/utility
+//!   order ([`utility_score`](crate::flow::FlowSupervisor::utility_score)
+//!   — throughput per device-second — breaks ties under contention).
+//!   Requests that can *never* launch (demand beyond total capacity,
+//!   analyzer rule `FA011`) are rejected at submit instead of parking
+//!   forever.
+//! * [`ServeInferWorker`] (`kind = "serve_infer"`) — one resident
+//!   inference fleet coalescing requests from **all** admitted flows
+//!   into rolling micro-batches: per-flow `in_<flow>`/`out_<flow>` port
+//!   pairs, weighted-share fairness quotas, per-flow version stamping
+//!   (as in `agentic_infer`), and a fixed per-batch setup cost amortized
+//!   across every flow in the batch — short flows stop paying per-flow
+//!   engine spin-up.
+//!
+//! Configured by the `[serve]` section
+//! ([`ServeConfig`](crate::config::ServeConfig)); benchmarked by
+//! `benches/admission_bench.rs` (gate vs. supervisor-only under Poisson
+//! arrivals, emitting `BENCH_admission.json`).
+
+mod gate;
+mod worker;
+
+pub use gate::{GateStats, ServeGate, ServeGrant};
+pub use worker::{register, ServeInferWorker};

@@ -1,0 +1,206 @@
+//! The `serve_infer` stage kind: one resident inference fleet serving
+//! **every** admitted flow through continuous cross-flow batching.
+//!
+//! Each flow binds an `in_<flow>` / `out_<flow>` port pair on the fleet.
+//! A serve sweep fills one rolling micro-batch with requests from *all*
+//! flows — per-flow quotas derived from the edges' weighted shares keep
+//! the fill fair — then runs the whole batch in one engine pass: a fixed
+//! `setup_us` cost plus `token_us` per request. Coalescing is the point:
+//! a short flow's handful of requests rides a batch that other flows
+//! filled, so it pays `setup_us / occupancy` instead of the whole
+//! spin-up a per-flow engine would charge (HybridFlow's shared-actor
+//! observation). Responses are stamped with the trainer weight version
+//! absorbed from the optional `sync` port — per-flow version stamping
+//! exactly as in `agentic_infer`.
+
+use std::thread;
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::channel::{BoundPort, Item};
+use crate::data::Payload;
+use crate::worker::{WorkerCtx, WorkerLogic};
+
+/// Idle-poll granularity for multi-port sweeps.
+const POLL: Duration = Duration::from_micros(500);
+
+fn drained(p: &BoundPort) -> bool {
+    p.channel().is_closed() && p.channel().is_empty()
+}
+
+fn spin_us(us: u64) {
+    if us > 0 {
+        thread::sleep(Duration::from_micros(us));
+    }
+}
+
+/// Parse a comma-separated flow list.
+fn parse_csv(s: &str) -> Vec<String> {
+    s.split(',').map(str::trim).filter(|t| !t.is_empty()).map(str::to_string).collect()
+}
+
+#[derive(Debug, Clone)]
+pub struct ServeInferCfg {
+    /// Flows (request classes) sharing this fleet; binds
+    /// `in_<flow>` / `out_<flow>` pairs.
+    pub flows: Vec<String>,
+    /// Per-request decode latency in microseconds.
+    pub token_us: u64,
+    /// Fixed per-micro-batch engine cost (µs) — the spin-up the
+    /// cross-flow batch amortizes.
+    pub setup_us: u64,
+    /// Most requests coalesced into one micro-batch.
+    pub batch: usize,
+}
+
+pub struct ServeInferWorker {
+    cfg: ServeInferCfg,
+}
+
+impl ServeInferWorker {
+    pub fn new(cfg: ServeInferCfg) -> ServeInferWorker {
+        ServeInferWorker { cfg }
+    }
+}
+
+impl WorkerLogic for ServeInferWorker {
+    fn call(&mut self, ctx: &WorkerCtx, method: &str, _arg: Payload) -> Result<Payload> {
+        if method != "serve" {
+            bail!("serve_infer has no method {method:?}");
+        }
+        let me = ctx.endpoint();
+        // The weight-sync edge is optional: a pure serving fleet has no
+        // trainer, an RL-attached one stamps versions like agentic_infer.
+        let sync = ctx.port("sync").ok();
+        let ports: Vec<(String, BoundPort, BoundPort)> = self
+            .cfg
+            .flows
+            .iter()
+            .map(|f| Ok((f.clone(), ctx.port(&format!("in_{f}"))?, ctx.port(&format!("out_{f}"))?)))
+            .collect::<Result<_>>()?;
+
+        // Per-sweep fill quotas from the edges' weighted shares: flow f
+        // may place round(share_f / Σ shares · batch) requests into each
+        // micro-batch, clamped to ≥ 1 — serving fairness bounds latency,
+        // it never starves a flow outright (cf. analyzer rule FA010 for
+        // the training-side quota discipline).
+        let share_sum: f64 = ports.iter().map(|(_, p, _)| p.share()).sum();
+        let quotas: Vec<usize> = ports
+            .iter()
+            .map(|(_, p, _)| {
+                let frac = p.share() / share_sum.max(f64::MIN_POSITIVE);
+                ((frac * self.cfg.batch as f64 + 0.5).floor() as usize).max(1)
+            })
+            .collect();
+
+        let n = ports.len();
+        let mut version = 0i64;
+        let mut served = vec![0u64; n];
+        let mut micro_batches = 0u64;
+        let mut occupancy_sum = 0u64;
+        let mut coalesced = 0u64;
+        loop {
+            if let Some(sync) = &sync {
+                while let Some(item) = sync.recv_timeout(me, Duration::ZERO) {
+                    version = version.max(item.payload.meta_i64("version").unwrap_or(0));
+                }
+            }
+            // Fill one rolling micro-batch across every flow's intake.
+            let mut batch: Vec<(usize, Item)> = Vec::new();
+            for (i, (_, inp, _)) in ports.iter().enumerate() {
+                let mut quota = quotas[i];
+                while quota > 0 && batch.len() < self.cfg.batch {
+                    let Some(item) = inp.recv_timeout(me, POLL) else { break };
+                    batch.push((i, item));
+                    quota -= 1;
+                }
+            }
+            if batch.is_empty() {
+                if ports.iter().all(|(_, inp, _)| drained(inp)) {
+                    break;
+                }
+                continue;
+            }
+            // One engine pass for the whole cross-flow batch: the fixed
+            // setup cost is paid once, however many flows filled it.
+            spin_us(self.cfg.setup_us + self.cfg.token_us * batch.len() as u64);
+            micro_batches += 1;
+            occupancy_sum += batch.len() as u64;
+            let first = batch[0].0;
+            if batch.iter().any(|(i, _)| *i != first) {
+                coalesced += 1;
+            }
+            for (i, item) in batch {
+                let mut p = item.payload;
+                p.meta.set("version", version);
+                p.meta.set("micro_batch", micro_batches as i64);
+                ports[i].2.send_weighted(me, p, item.weight)?;
+                served[i] += 1;
+            }
+        }
+        for (_, _, outp) in &ports {
+            outp.done(me);
+        }
+        if let Some(sync) = &sync {
+            while sync.recv(me).is_some() {}
+        }
+
+        let total: u64 = served.iter().sum();
+        let mut out = Payload::new()
+            .set_meta("served", total as i64)
+            .set_meta("micro_batches", micro_batches as i64)
+            .set_meta("coalesced_batches", coalesced as i64)
+            .set_meta(
+                "mean_occupancy",
+                occupancy_sum as f64 / micro_batches.max(1) as f64,
+            )
+            .set_meta("version", version);
+        for (i, (flow, _, _)) in ports.iter().enumerate() {
+            out = out.set_meta(&format!("served_{flow}"), served[i] as i64);
+        }
+        Ok(out)
+    }
+}
+
+/// Register the `serve_infer` stage kind with a flow
+/// [`StageRegistry`](crate::flow::StageRegistry).
+pub fn register(reg: &mut crate::flow::StageRegistry) -> Result<()> {
+    use crate::flow::registry::{OptKind, OptSpec};
+    use crate::worker::LogicFactory;
+
+    reg.register_stage(
+        "serve_infer",
+        "resident serving fleet: coalesces every flow's \"in_<flow>\" requests into \
+         rolling cross-flow micro-batches (weighted-share fill quotas, one setup cost \
+         per batch) and stamps responses with the weight version from the optional \
+         \"sync\" port",
+        vec![
+            OptSpec::required("flows", OptKind::Str, "comma list of flows sharing the fleet"),
+            OptSpec::int("token_us", 50, "per-request decode latency (µs)"),
+            OptSpec::int("setup_us", 200, "fixed per-micro-batch engine setup cost (µs)"),
+            OptSpec::int("batch", 16, "max requests coalesced per micro-batch"),
+        ],
+        |o| {
+            let cfg = ServeInferCfg {
+                flows: parse_csv(&o.str("flows")?),
+                token_us: o.u64("token_us")?,
+                setup_us: o.u64("setup_us")?,
+                batch: o.usize("batch")?,
+            };
+            if cfg.flows.is_empty() {
+                bail!("serve_infer: empty flow list");
+            }
+            if cfg.batch == 0 {
+                bail!("serve_infer: batch must be positive");
+            }
+            Ok(Box::new(move |_rank: usize| -> LogicFactory {
+                let c = cfg.clone();
+                Box::new(move |_ctx: &WorkerCtx| {
+                    Ok(Box::new(ServeInferWorker::new(c.clone())) as Box<dyn WorkerLogic>)
+                })
+            }))
+        },
+    )?;
+    reg.declare_methods("serve_infer", &["serve"])
+}

@@ -17,6 +17,7 @@
 //! cannot clobber its replacement's comm endpoint.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -37,6 +38,10 @@ struct RankHealth {
 #[derive(Clone, Default)]
 pub struct HealthRegistry {
     inner: Arc<Mutex<HashMap<String, RankHealth>>>,
+    /// Full-map [`HealthRegistry::stalled`] scans performed, cumulative.
+    /// Watchdog regression tests pin this so a serving-scale `tick`
+    /// cannot silently regress to O(flows) scans per call.
+    scans: Arc<AtomicU64>,
 }
 
 /// One overdue rank from a [`HealthRegistry::stalled`] scan.
@@ -130,10 +135,25 @@ impl HealthRegistry {
     /// flagged and only re-reported after the call ends (or the rank is
     /// restarted).
     pub fn stalled(&self, prefix: &str, deadline: Duration) -> Vec<StalledRank> {
+        self.scan(|ep| ep.starts_with(prefix), deadline)
+    }
+
+    /// One-pass variant of [`HealthRegistry::stalled`] over **multiple**
+    /// scope prefixes: one map walk (one scan) regardless of how many
+    /// flows are admitted — the serving-scale watchdog path, where a
+    /// per-flow scan loop would make `FlowSupervisor::tick` O(flows ×
+    /// ranks). Ranks under none of the prefixes are left unflagged for
+    /// their own watchdog.
+    pub fn stalled_any(&self, prefixes: &[String], deadline: Duration) -> Vec<StalledRank> {
+        self.scan(|ep| prefixes.iter().any(|p| ep.starts_with(p.as_str())), deadline)
+    }
+
+    fn scan(&self, matches: impl Fn(&str) -> bool, deadline: Duration) -> Vec<StalledRank> {
+        self.scans.fetch_add(1, Ordering::Relaxed);
         let mut out = Vec::new();
         let now = Instant::now();
         for (ep, h) in self.inner.lock().unwrap().iter_mut() {
-            if !ep.starts_with(prefix) || h.flagged {
+            if !matches(ep) || h.flagged {
                 continue;
             }
             if let Some(t0) = h.busy_since {
@@ -150,6 +170,13 @@ impl HealthRegistry {
         }
         out.sort_by(|a, b| a.endpoint.cmp(&b.endpoint));
         out
+    }
+
+    /// Cumulative count of [`HealthRegistry::stalled`] scans. Each scan
+    /// walks the whole rank map, so watchdogs must keep it O(1) per tick;
+    /// regression tests assert on the delta across a tick.
+    pub fn scan_count(&self) -> u64 {
+        self.scans.load(Ordering::Relaxed)
     }
 
     /// Seconds since the rank's last heartbeat (`None` when unknown).
@@ -221,6 +248,19 @@ mod tests {
         h.begin_call("w/0", g, "run");
         // Busy but within deadline.
         assert!(h.stalled("", Duration::from_secs(60)).is_empty());
+    }
+
+    #[test]
+    fn scan_count_tracks_stalled_calls() {
+        let h = HealthRegistry::new();
+        assert_eq!(h.scan_count(), 0);
+        h.stalled("", Duration::from_millis(1));
+        h.stalled("flow:", Duration::from_millis(1));
+        assert_eq!(h.scan_count(), 2);
+        // Clones share the counter, like the rest of the registry.
+        let clone = h.clone();
+        clone.stalled("", Duration::from_millis(1));
+        assert_eq!(h.scan_count(), 3);
     }
 
     #[test]

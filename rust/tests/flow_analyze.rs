@@ -87,6 +87,8 @@ fn every_code_has_a_fixture_triggering_exactly_it() {
     assert_eq!(codes(&r), vec!["FA002"], "{}", r.render());
     let r = analyze_multi("fa003_band_overlap.flow.toml");
     assert_eq!(codes(&r), vec!["FA003"], "{}", r.render());
+    let r = analyze_multi("fa011_unsatisfiable.flow.toml");
+    assert_eq!(codes(&r), vec!["FA011"], "{}", r.render());
 }
 
 #[test]
@@ -168,6 +170,8 @@ fn golden_snapshots_pin_rendered_reports() {
     check_golden("golden_fa005.txt", &r.render());
     let r = analyze_manifest(&fixture("fa010_starved_share.flow.toml"), &reg);
     check_golden("golden_fa010.txt", &r.render());
+    let r = analyze_multi("fa011_unsatisfiable.flow.toml");
+    check_golden("golden_fa011.txt", &r.render());
 }
 
 // ---------------------------------------------------------------------------
